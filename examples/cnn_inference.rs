@@ -1,0 +1,65 @@
+//! CNN inference: a VGG-style stack run through every algorithm × layout,
+//! cross-verified, with per-configuration throughput — the "which layout
+//! should my model use?" answer a framework integrator needs.
+//!
+//! ```bash
+//! cargo run --release --example cnn_inference [edge] [batch]
+//! ```
+
+use im2win::bench_harness::{fmt_time, measure};
+use im2win::conv::AlgoKind;
+use im2win::model::zoo;
+use im2win::prelude::*;
+use im2win::tensor::Dims;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let edge: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let x = Tensor4::random(Dims::new(batch, 3, edge, edge), Layout::Nchw, 7);
+    println!("vgg_stack inference, input {}x3x{edge}x{edge}\n", batch);
+
+    // Reference logits from the naive oracle.
+    let oracle = zoo::vgg_stack(Layout::Nchw, AlgoKind::Naive, edge, 42)?;
+    let flops = oracle.flops(batch)?;
+    println!("model: {} conv FLOPs per batch: {:.2} GFLOP", oracle.name, flops as f64 / 1e9);
+    let expect = oracle.forward(&x)?;
+
+    println!(
+        "\n{:<8} {:<7} {:>12} {:>10} {:>12}",
+        "algo", "layout", "latency", "GFLOPS", "max|diff|"
+    );
+    let mut best: Option<(f64, String)> = None;
+    for algo in AlgoKind::BENCHED {
+        for layout in Layout::ALL {
+            // The paper benches im2col only on the PyTorch layouts.
+            if algo == AlgoKind::Im2col && matches!(layout, Layout::Chwn | Layout::Chwn8) {
+                continue;
+            }
+            let m = zoo::vgg_stack(layout, algo, edge, 42)?;
+            let y = m.forward(&x)?;
+            let diff = expect.max_abs_diff(&y);
+            assert!(diff < 2e-2, "{algo} {layout} disagrees: {diff}");
+            let r = measure(3, || {
+                std::hint::black_box(m.forward(&x).unwrap());
+            });
+            println!(
+                "{:<8} {:<7} {:>12} {:>10.2} {:>12.2e}",
+                algo.name(),
+                layout.to_string(),
+                fmt_time(r.best_s),
+                flops as f64 / r.best_s / 1e9,
+                diff
+            );
+            let key = format!("{} {}", algo.name(), layout);
+            if best.as_ref().map(|(b, _)| r.best_s < *b).unwrap_or(true) {
+                best = Some((r.best_s, key));
+            }
+        }
+    }
+    let (t, key) = best.unwrap();
+    println!("\nfastest configuration: {key} ({})", fmt_time(t));
+    println!("(paper Fig. 4: all twelve per-layer winners use the NHWC layout)");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Layout explorer: how the four tensor layouts behave on one problem.
+//!
+//! Shows the paper's §III story numerically: unit-stride dimensions,
+//! transformation costs, im2win window-tensor growth, CHWN8 padding, and
+//! per-layout conv performance on a Table I layer.
+//!
+//! ```bash
+//! cargo run --release --example layout_explorer [layer] [batch]
+//! ```
+
+use im2win::bench_harness::{fmt_time, measure};
+use im2win::conv::im2win::{im2win_dims, im2win_transform};
+use im2win::coordinator::layers;
+use im2win::metrics::MemoryScope;
+use im2win::prelude::*;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let layer_name = args.first().map(String::as_str).unwrap_or("conv9");
+    let batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let layer = layers::by_name(layer_name)
+        .unwrap_or_else(|| panic!("unknown layer {layer_name} (conv1..conv12)"));
+    let p = layer.scaled_params(batch, 4);
+    println!("=== {layer_name} at CI scale: {p} ===\n");
+
+    println!("layout properties:");
+    for layout in Layout::ALL {
+        let dims = p.input_dims();
+        println!(
+            "  {layout:<6} unit-stride dim: {:<2} storage: {:>9} floats{}",
+            layout.unit_stride_dim(),
+            layout.storage_len(dims),
+            if layout.storage_len(dims) != dims.count() {
+                format!("  (padded from {} — batch rounded to 8)", dims.count())
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    println!("\nim2win window tensor (paper Algorithm 1):");
+    let wd = im2win_dims(&p);
+    println!(
+        "  input {} -> window {}  ({:.2}x growth; im2col would be {:.2}x)",
+        p.input_dims(),
+        wd,
+        wd.count() as f64 / p.input_dims().count() as f64,
+        (p.h_f * p.w_f * p.h_out() * p.w_out()) as f64 / (p.h_in * p.w_in) as f64,
+    );
+
+    println!("\nlayout transformation costs (NCHW source):");
+    let src = Tensor4::random(p.input_dims(), Layout::Nchw, 1);
+    for layout in [Layout::Nhwc, Layout::Chwn, Layout::Chwn8] {
+        let r = measure(5, || {
+            std::hint::black_box(src.to_layout(layout));
+        });
+        println!("  NCHW -> {layout:<6} {:>10}", fmt_time(r.best_s));
+    }
+
+    println!("\nim2win transform cost + memory per layout:");
+    for layout in Layout::ALL {
+        let x = src.to_layout(layout);
+        let scope = MemoryScope::start();
+        let win = im2win_transform(&x, &p);
+        let bytes = scope.peak_extra_bytes();
+        drop(win);
+        let r = measure(5, || {
+            std::hint::black_box(im2win_transform(&x, &p));
+        });
+        println!(
+            "  {layout:<6} {:>10}   window tensor {:>8.2} MiB",
+            fmt_time(r.best_s),
+            bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+
+    println!("\nim2win convolution, per layout (best of 5):");
+    let algo = Im2winConv::new();
+    for layout in Layout::ALL {
+        let x = src.to_layout(layout);
+        let f = Tensor4::random(p.filter_dims(), layout, 2);
+        let mut out = Tensor4::zeros(p.output_dims(), layout);
+        let r = measure(5, || algo.run_into(&x, &f, &p, &mut out).unwrap());
+        println!(
+            "  {layout:<6} {:>10}   {:>7.2} GFLOPS",
+            fmt_time(r.best_s),
+            r.gflops(p.flops())
+        );
+    }
+    Ok(())
+}

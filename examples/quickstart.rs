@@ -1,0 +1,52 @@
+//! Quickstart: one convolution through the public API, three ways.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use im2win::bench_harness::{fmt_time, measure};
+use im2win::prelude::*;
+
+fn main() -> Result<()> {
+    // conv9 of the paper's Table I at a laptop-friendly batch.
+    let p = ConvParams::new(8, 64, 56, 56, 64, 3, 3, 1)?;
+    println!("problem: {p}  ({:.2} GFLOP)", p.flops() as f64 / 1e9);
+
+    // Tensors carry an explicit physical layout; NHWC is the paper's best.
+    let layout = Layout::Nhwc;
+    let input = Tensor4::random(p.input_dims(), layout, 1);
+    let filter = Tensor4::random(p.filter_dims(), layout, 2);
+
+    // The paper's method ...
+    let im2win = Im2winConv::new();
+    let y = im2win.run(&input, &filter, &p)?;
+
+    // ... the no-extra-memory baseline ...
+    let direct = DirectConv::new();
+    let y_direct = direct.run(&input, &filter, &p)?;
+
+    // ... and the GEMM lowering (PyTorch-style).
+    let im2col = Im2colConv::new();
+    let y_col = im2col.run(&input, &filter, &p)?;
+
+    // All three agree.
+    assert!(y.allclose(&y_direct, 1e-4, 1e-4));
+    assert!(y.allclose(&y_col, 1e-4, 1e-4));
+    println!("all three algorithms agree: max|diff| = {:.2e}", y.max_abs_diff(&y_col));
+
+    // Quick timing comparison (warmup + best of 5, as the paper measures).
+    for (name, algo) in [
+        ("im2win", &im2win as &dyn ConvAlgorithm),
+        ("direct", &direct),
+        ("im2col", &im2col),
+    ] {
+        let mut out = Tensor4::zeros(p.output_dims(), layout);
+        let r = measure(5, || algo.run_into(&input, &filter, &p, &mut out).unwrap());
+        println!(
+            "  {name:<8} best {:>10}   {:>7.2} GFLOPS",
+            fmt_time(r.best_s),
+            r.gflops(p.flops())
+        );
+    }
+    Ok(())
+}

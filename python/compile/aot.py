@@ -1,0 +1,151 @@
+"""AOT pipeline: lower the L2/L1 stack to HLO-text artifacts.
+
+Artifacts (all consumed by the Rust runtime; tensors in the documented
+logical orders — see model.py and rust/src/runtime):
+
+  conv_conv{1..12}.hlo.txt  — Pallas im2win convolution at each Table I
+                              geometry, batch 2, spatial dims /8 (matching
+                              ``BenchLayer::scaled_params(2, 8)``); inputs
+                              (x [n,ci,h,w], f [co,ci,hf,wf]), output
+                              (y [n,co,ho,wo]).
+  tinynet_fwd.hlo.txt       — TinyNet forward, batch 4.
+  tinynet_train.hlo.txt     — TinyNet SGD step, batch 16.
+
+HLO **text** is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md and aot_recipe.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (idempotent; the
+Makefile skips it when artifacts are newer than their sources).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.im2win import conv_im2win
+
+# Table I geometry (c_in, h, w, c_out, k, s) — keep in sync with
+# rust/src/coordinator/layers.rs.
+TABLE1 = {
+    "conv1": (3, 227, 227, 96, 11, 4),
+    "conv2": (3, 231, 231, 96, 11, 4),
+    "conv3": (3, 227, 227, 64, 7, 2),
+    "conv4": (64, 224, 224, 64, 7, 2),
+    "conv5": (96, 24, 24, 256, 5, 1),
+    "conv6": (256, 12, 12, 512, 3, 1),
+    "conv7": (3, 224, 224, 64, 3, 1),
+    "conv8": (64, 112, 112, 128, 3, 1),
+    "conv9": (64, 56, 56, 64, 3, 1),
+    "conv10": (128, 28, 28, 128, 3, 1),
+    "conv11": (256, 14, 14, 256, 3, 1),
+    "conv12": (512, 7, 7, 512, 3, 1),
+}
+
+ORACLE_BATCH = 2
+ORACLE_DIV = 8
+FWD_BATCH = 4
+TRAIN_BATCH = 16
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def scaled_geometry(name):
+    """Mirror of BenchLayer::scaled_params(ORACLE_BATCH, ORACLE_DIV).
+
+    Spatial dims divided by ORACLE_DIV with a floor of k + 11*s (clamped
+    to the original size) so scaled outputs keep >= ~12 positions per axis
+    — keep in sync with rust/src/coordinator/layers.rs.
+    """
+    ci, h, w, co, k, s = TABLE1[name]
+    floor = min(k + 11 * s, h)
+    h = max(h // ORACLE_DIV, floor)
+    floor = min(k + 11 * s, w)
+    w = max(w // ORACLE_DIV, floor)
+    return ci, h, w, co, k, s
+
+
+def conv_oracle_fn(name):
+    """The per-layer oracle: NCHW-logical in/out, Pallas im2win inside."""
+    _, _, _, _, _, s = scaled_geometry(name)
+
+    def fn(x_nchw, f_oihw):
+        x = jnp.transpose(x_nchw, (0, 2, 3, 1))  # NHWC
+        f = jnp.transpose(f_oihw, (0, 2, 3, 1))  # OHWI
+        y = conv_im2win(x, f, s)
+        return (jnp.transpose(y, (0, 3, 1, 2)),)  # back to NCHW logical
+
+    return fn
+
+
+def lower_conv_oracle(name):
+    ci, h, w, co, k, s = scaled_geometry(name)
+    x = jax.ShapeDtypeStruct((ORACLE_BATCH, ci, h, w), jnp.float32)
+    f = jax.ShapeDtypeStruct((co, ci, k, k), jnp.float32)
+    return jax.jit(conv_oracle_fn(name)).lower(x, f)
+
+
+def lower_tinynet_fwd():
+    x = jax.ShapeDtypeStruct((FWD_BATCH, 3, model.IMG, model.IMG), jnp.float32)
+    shapes = model.param_shapes()
+    ws = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes.values()]
+
+    def fn(x, w1, w2, w3, wl):
+        return (model.forward(x, w1, w2, w3, wl),)
+
+    return jax.jit(fn).lower(x, *ws)
+
+
+def lower_tinynet_train():
+    x = jax.ShapeDtypeStruct((TRAIN_BATCH, 3, model.IMG, model.IMG), jnp.float32)
+    y = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    shapes = model.param_shapes()
+    ws = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes.values()]
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(model.train_step).lower(x, y, *ws, lr)
+
+
+def write(path, lowered):
+    text = to_hlo_text(lowered)
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {path} ({len(text) // 1024} KiB)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-separated artifact stems (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+
+    jobs = {}
+    for name in TABLE1:
+        jobs[f"conv_{name}"] = lambda n=name: lower_conv_oracle(n)
+    jobs["tinynet_fwd"] = lower_tinynet_fwd
+    jobs["tinynet_train"] = lower_tinynet_train
+
+    for stem, build in jobs.items():
+        if only and stem not in only:
+            continue
+        write(os.path.join(args.out_dir, f"{stem}.hlo.txt"), build())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Pallas direct convolution kernel (TPU-shaped, interpret=True).
+
+The direct convolution reads the original NHWC tensor — no transform, no
+extra memory (the paper's Fig. 5 lower bound). TPU mapping: the grid runs
+over the batch; each program holds one input image in VMEM and computes the
+whole output image as ``hf*wf`` accumulated MXU matmuls — the strided
+``(u, v)`` input slices are the analogue of the paper's register-blocked
+window walk, with channels in the lane axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, f_ref, o_ref, *, ho, wo, hf, wf, sh, sw, co):
+    """One grid step: one batch image.
+
+    x_ref: [1, h, w, ci]  — one input image (VMEM)
+    f_ref: [co, hf, wf, ci]
+    o_ref: [1, ho, wo, co]
+    """
+    ci = x_ref.shape[3]
+    acc = jnp.zeros((ho * wo, co), dtype=x_ref.dtype)
+    for u in range(hf):
+        for v in range(wf):
+            # Strided window plane for this filter tap: [ho, wo, ci].
+            plane = x_ref[0, :, :, :][
+                u : u + (ho - 1) * sh + 1 : sh,
+                v : v + (wo - 1) * sw + 1 : sw,
+                :,
+            ]
+            ftap = f_ref[:, u, v, :]  # [co, ci]
+            # One MXU matmul per tap, accumulated in f32.
+            acc = acc + jnp.dot(plane.reshape(ho * wo, ci), ftap.T)
+    o_ref[0, :, :, :] = acc.reshape(ho, wo, co)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv_direct(x, f, stride=1):
+    """Direct convolution on NHWC input / OHWI filter.
+
+    Args:
+      x: ``[n, h, w, c]``.
+      f: ``[co, hf, wf, ci]``.
+      stride: int or (sh, sw).
+
+    Returns:
+      ``[n, ho, wo, co]``.
+    """
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    n, h, w, ci = x.shape
+    co, hf, wf, _ = f.shape
+    ho = (h - hf) // sh + 1
+    wo = (w - wf) // sw + 1
+
+    kernel = functools.partial(
+        _kernel, ho=ho, wo=wo, hf=hf, wf=wf, sh=sh, sw=sw, co=co
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, ci), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((co, hf, wf, ci), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, co), x.dtype),
+        interpret=True,
+    )(x, f)

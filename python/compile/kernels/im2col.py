@@ -1,0 +1,84 @@
+"""Pallas im2col + GEMM convolution (the baseline, interpret=True).
+
+The im2col lowering fully materializes the unrolled patch matrix
+(``hf*wf`` copies of the input — the paper's Fig. 5 memory blow-up) and
+multiplies it by the reshaped filter with a tiled Pallas matmul whose
+``[bm, k] x [k, bn]`` blocks are sized for the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile: full-K dot."""
+    o_ref[:, :] = jnp.dot(a_ref[:, :], b_ref[:, :])
+
+
+def matmul(a, b, bm=128, bn=128):
+    """Tiled Pallas matmul ``[m, k] x [k, n] -> [m, n]`` (f32).
+
+    m and n are padded up to the tile sizes; k is kept whole per tile
+    (the unrolled-K panels of conv GEMMs are small enough for VMEM at the
+    scales we compile).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    a_pad = jnp.pad(a, ((0, mp - m), (0, 0)))
+    b_pad = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_pad, b_pad)
+    return out[:m, :n]
+
+
+def im2col_matrix(x, hf, wf, stride):
+    """Unroll NHWC input to ``[n*ho*wo, hf*wf*ci]`` (full materialization)."""
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    n, h, w, ci = x.shape
+    ho = (h - hf) // sh + 1
+    wo = (w - wf) // sw + 1
+    rows = []
+    for u in range(hf):
+        for v in range(wf):
+            rows.append(
+                x[
+                    :,
+                    u : u + (ho - 1) * sh + 1 : sh,
+                    v : v + (wo - 1) * sw + 1 : sw,
+                    :,
+                ]
+            )
+    # [n, ho, wo, hf*wf, ci] -> [n*ho*wo, hf*wf*ci]
+    patches = jnp.stack(rows, axis=3)
+    return patches.reshape(n * ho * wo, hf * wf * ci)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv_im2col(x, f, stride=1):
+    """im2col convolution on NHWC input / OHWI filter."""
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    n, h, w, ci = x.shape
+    co, hf, wf, _ = f.shape
+    ho = (h - hf) // sh + 1
+    wo = (w - wf) // sw + 1
+    mat = im2col_matrix(x, hf, wf, (sh, sw))  # [n*ho*wo, hf*wf*ci]
+    fmat = f.reshape(co, hf * wf * ci).T  # [hf*wf*ci, co]
+    out = matmul(mat, fmat)
+    return out.reshape(n, ho, wo, co)

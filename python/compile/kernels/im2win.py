@@ -1,0 +1,142 @@
+"""Pallas im2win convolution kernel (TPU-shaped, run under interpret=True).
+
+Hardware adaptation of the paper's AVX2 kernel (DESIGN.md
+§Hardware-Adaptation): on TPU the analogue of "flatten the window so the
+dot product is unit-stride" is "flatten the window so the reduction is a
+single MXU matmul with the channel dimension in the lane axis":
+
+* the im2win transform produces ``[n, ho, w*hf, c]`` — channels (the NHWC
+  minor dim) sit in the 128-lane axis, the flattened window in the sublane
+  axis;
+* the grid runs over ``(n, m)`` — one output row per program, matching the
+  paper's coalesced ``N x H_o`` parallel loop;
+* each program's BlockSpec block is one window-tensor row
+  (``w*hf x c`` floats in VMEM) plus the whole packed filter — the HBM->VMEM
+  schedule that the paper's cache blocking performed for L1/L2;
+* the per-program compute gathers the ``W_o`` overlapping windows
+  (``wf*hf*c`` each, contiguous in the flattened dim — the same contiguity
+  the CPU kernel exploits) and issues ONE ``[wo, wf*hf*c] x [wf*hf*c, co]``
+  matmul: MXU-friendly, no scalar loops.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated structurally in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(win_ref, f_ref, o_ref, *, wo, wf, hf, sw, ci):
+    """One grid step: one (n, m) output row.
+
+    win_ref: [1, 1, w*hf, ci]   — this row's window tensor slice (VMEM)
+    f_ref:   [co, wf*hf*ci]     — packed filter (VMEM, reused every step)
+    o_ref:   [1, 1, wo, co]     — output row
+    """
+    row = win_ref[0, 0, :, :]  # [w*hf, ci]
+    span = wf * hf
+    # Gather the wo overlapping windows; each is a contiguous slice of the
+    # flattened dim (exactly the property the im2win transform creates).
+    windows = jnp.stack(
+        [
+            row[l * sw * hf : l * sw * hf + span, :].reshape(span * ci)
+            for l in range(wo)
+        ],
+        axis=0,
+    )  # [wo, wf*hf*ci]
+    # One MXU matmul per output row.
+    o_ref[0, 0, :, :] = jnp.dot(windows, f_ref[:, :].T)
+
+
+def pack_filter(f):
+    """Pack ``[co, hf, wf, ci]`` to the window order ``[co, wf*hf*ci]``.
+
+    Flattened index ``(v*hf + u)*ci + c`` — the "NWHC" order of paper
+    Algorithm 2 line 2, matching :func:`ref.im2win_ref`'s flattened dim.
+    """
+    co, hf, wf, ci = f.shape
+    return jnp.transpose(f, (0, 2, 1, 3)).reshape(co, wf * hf * ci)
+
+
+def _conv_im2win_impl(x, f, stride):
+    """im2win convolution: transform + Pallas window-dot kernel."""
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    n, h, w, ci = x.shape
+    co, hf, wf, _ = f.shape
+    ho = (h - hf) // sh + 1
+    wo = (w - wf) // sw + 1
+
+    win = ref.im2win_ref(x, hf, sh)  # [n, ho, w*hf, ci]
+    fpack = pack_filter(f)  # [co, wf*hf*ci]
+
+    kernel = functools.partial(_kernel, wo=wo, wf=wf, hf=hf, sw=sw, ci=ci)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, ho),
+        in_specs=[
+            # One window row per program: the VMEM working set is
+            # w*hf*ci + |filter| floats, independent of image height.
+            pl.BlockSpec((1, 1, w * hf, ci), lambda i, m: (i, m, 0, 0)),
+            pl.BlockSpec((co, wf * hf * ci), lambda i, m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, wo, co), lambda i, m: (i, m, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, co), x.dtype),
+        interpret=True,
+    )(win, fpack)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _conv_im2win_vjp(x, f, stride):
+    return _conv_im2win_impl(x, f, stride)
+
+
+def _vjp_fwd(x, f, stride):
+    return _conv_im2win_impl(x, f, stride), (x, f)
+
+
+def _vjp_bwd(stride, res, g):
+    # Pallas calls have no built-in reverse rule; differentiate through the
+    # independent pure-jnp reference instead (same math, slicing + einsum,
+    # fully differentiable). The forward value still comes from the Pallas
+    # kernel, so AOT-trained models exercise L1 on the primal path.
+    x, f = res
+    _, vjp = jax.vjp(lambda xx, ff: ref.conv_manual(xx, ff, stride), x, f)
+    return vjp(g)
+
+
+_conv_im2win_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv_im2win(x, f, stride=1):
+    """Differentiable im2win convolution (Pallas forward, see `_vjp_bwd`).
+
+    Args:
+      x: ``[n, h, w, c]`` (NHWC).
+      f: ``[co, hf, wf, ci]`` (OHWI).
+      stride: int or (sh, sw) — static.
+
+    Returns:
+      ``[n, ho, wo, co]``.
+    """
+    stride = tuple(stride) if not isinstance(stride, int) else stride
+    return _conv_im2win_vjp(x, f, stride)
+
+
+def vmem_bytes(x_shape, f_shape, dtype_bytes=4):
+    """Structural VMEM footprint of one grid step (DESIGN.md L1 profile).
+
+    window row + packed filter + output row, in bytes.
+    """
+    n, h, w, ci = x_shape
+    co, hf, wf, _ = f_shape
+    wo = w - wf + 1  # stride-1 upper bound
+    row = w * hf * ci
+    filt = co * wf * hf * ci
+    out = wo * co
+    return (row + filt + out) * dtype_bytes

@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Two independent references:
+
+* :func:`conv_ref` — XLA's own convolution (``lax.conv_general_dilated``),
+  the production-grade oracle;
+* :func:`conv_manual` — a from-scratch patches+einsum implementation that
+  shares no code path with either XLA's convolution or the Pallas kernels
+  (guards against "both wrong the same way").
+
+All reference functions take NHWC inputs and an OIHW-flattened filter
+``(co, hf, wf, ci)`` ("OHWI"), matching the kernels in this package.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_ref(x, f, stride):
+    """XLA reference convolution.
+
+    Args:
+      x: input, ``[n, h, w, c]`` (NHWC).
+      f: filter, ``[co, hf, wf, ci]`` (OHWI).
+      stride: int or (sh, sw); valid padding.
+
+    Returns:
+      ``[n, ho, wo, co]``.
+    """
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    return lax.conv_general_dilated(
+        x,
+        f,
+        window_strides=(sh, sw),
+        padding="VALID",
+        dimension_numbers=("NHWC", "OHWI", "NHWC"),
+    )
+
+
+def im2win_ref(x, hf, stride_h):
+    """Reference im2win transform (paper Algorithm 1), NHWC.
+
+    ``win[n, m, k*hf + u, c] == x[n, m*sh + u, k, c]``.
+
+    Args:
+      x: ``[n, h, w, c]``.
+      hf: filter height.
+      stride_h: vertical stride.
+
+    Returns:
+      ``[n, ho, w*hf, c]`` window tensor.
+    """
+    n, h, w, c = x.shape
+    ho = (h - hf) // stride_h + 1
+    # rows[u][n, m, k, c] = x[n, m*sh + u, k, c]
+    rows = [x[:, u : u + (ho - 1) * stride_h + 1 : stride_h, :, :] for u in range(hf)]
+    win5 = jnp.stack(rows, axis=3)  # [n, ho, w, hf, c]
+    return win5.reshape(n, ho, w * hf, c)
+
+
+def conv_manual(x, f, stride):
+    """Patch-gather + einsum convolution (independent of XLA's conv op)."""
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    n, h, w, c = x.shape
+    co, hf, wf, ci = f.shape
+    assert ci == c, f"channel mismatch {ci} vs {c}"
+    ho = (h - hf) // sh + 1
+    wo = (w - wf) // sw + 1
+    # patches[n, m, l, u, v, c]
+    rows = []
+    for u in range(hf):
+        cols = []
+        for v in range(wf):
+            cols.append(
+                x[
+                    :,
+                    u : u + (ho - 1) * sh + 1 : sh,
+                    v : v + (wo - 1) * sw + 1 : sw,
+                    :,
+                ]
+            )
+        rows.append(jnp.stack(cols, axis=3))  # [n, ho, wo, wf, c]
+    patches = jnp.stack(rows, axis=3)  # [n, ho, wo, hf, wf, c]
+    return jnp.einsum("nmluvc,ouvc->nmlo", patches, f)
+
+
+def out_shape(x_shape, f_shape, stride):
+    """Output shape helper: NHWC in, NHWC out."""
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    n, h, w, _ = x_shape
+    co, hf, wf, _ = f_shape
+    return (n, (h - hf) // sh + 1, (w - wf) // sw + 1, co)

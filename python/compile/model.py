@@ -1,0 +1,100 @@
+"""L2: the JAX CNN whose conv layers call the L1 Pallas kernels.
+
+``TinyNet`` mirrors ``rust/src/model/zoo.rs::tinynet`` layer-for-layer:
+
+    3x32x32 -> conv3x3(16) -> ReLU -> maxpool2
+            -> conv3x3(32) -> ReLU -> maxpool2
+            -> conv3x3(32) -> ReLU -> GAP -> linear(10)
+
+All parameters are explicit function arguments (no pytree closure), so the
+AOT artifacts have a flat, documented signature the Rust runtime can feed:
+
+    tinynet_fwd(x, w1, w2, w3, wl)            -> (logits,)
+    tinynet_train(x, y, w1, w2, w3, wl, lr)   -> (loss, w1', w2', w3', wl')
+
+Conventions (shared with rust/src/runtime):
+  * activations NHWC; ``x`` enters as logical NCHW ``[n, 3, 32, 32]``
+    (the Rust side's canonical literal order) and is transposed once here;
+  * conv weights OHWI ``[co, hf, wf, ci]``; the Rust side's logical
+    ``(n=co, c=ci, h, w)`` maps via transpose (0, 2, 3, 1);
+  * ``wl`` is ``[10, 32]``, ``y`` is int32 class ids ``[n]``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.im2win import conv_im2win
+
+NUM_CLASSES = 10
+IMG = 32
+
+
+def max_pool2(x):
+    """2x2/stride-2 valid max pool on NHWC."""
+    n, h, w, c = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def forward(x_nchw, w1, w2, w3, wl):
+    """TinyNet forward pass; returns logits ``[n, 10]``.
+
+    Every convolution goes through the Pallas im2win kernel, so the lowered
+    HLO exercises L1 end to end.
+    """
+    x = jnp.transpose(x_nchw, (0, 2, 3, 1))  # -> NHWC
+    x = conv_im2win(x, w1, 1)
+    x = jax.nn.relu(x)
+    x = max_pool2(x)
+    x = conv_im2win(x, w2, 1)
+    x = jax.nn.relu(x)
+    x = max_pool2(x)
+    x = conv_im2win(x, w3, 1)
+    x = jax.nn.relu(x)
+    feat = x.mean(axis=(1, 2))  # GAP -> [n, 32]
+    return feat @ wl.T  # [n, 10]
+
+
+def loss_fn(x, y, w1, w2, w3, wl):
+    """Mean softmax cross-entropy."""
+    logits = forward(x, w1, w2, w3, wl)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+
+def train_step(x, y, w1, w2, w3, wl, lr):
+    """One SGD step. Returns ``(loss, w1', w2', w3', wl')``."""
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(2, 3, 4, 5))(x, y, w1, w2, w3, wl)
+    g1, g2, g3, gl = grads
+    return (
+        loss,
+        w1 - lr * g1,
+        w2 - lr * g2,
+        w3 - lr * g3,
+        wl - lr * gl,
+    )
+
+
+def param_shapes():
+    """Flat parameter signature (OHWI conv weights + linear head)."""
+    return {
+        "w1": (16, 3, 3, 3),
+        "w2": (32, 3, 3, 16),
+        "w3": (32, 3, 3, 32),
+        "wl": (NUM_CLASSES, 32),
+    }
+
+
+def init_params(seed=0):
+    """He-initialized parameters as a tuple ``(w1, w2, w3, wl)``."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    shapes = param_shapes()
+    ws = []
+    for key, (name, shape) in zip(keys, shapes.items()):
+        fan_in = int(jnp.prod(jnp.array(shape[1:])))
+        # He for convs; small-scale head so initial logits stay near zero
+        # (loss starts near ln(10), the usual classifier sanity check).
+        scale = 0.01 if name == "wl" else (2.0 / fan_in) ** 0.5
+        ws.append(jax.random.normal(key, shape, jnp.float32) * scale)
+    return tuple(ws)

@@ -1,0 +1,60 @@
+"""AOT pipeline: lowering produces parseable HLO text with stable signatures."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_conv_oracle_lowers_to_hlo_text():
+    lowered = aot.lower_conv_oracle("conv9")
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # The oracle signature: two f32 parameters, conv9/8-scale shapes.
+    ci, h, w, co, k, s = aot.scaled_geometry("conv9")
+    assert f"f32[{aot.ORACLE_BATCH},{ci},{h},{w}]" in text
+    assert f"f32[{co},{ci},{k},{k}]" in text
+
+
+def test_scaled_geometry_matches_rust_scaled_params():
+    # BenchLayer::scaled_params(2, 8): h = max(h/8, min(k + 11*s, h_orig)).
+    ci, h, w, co, k, s = aot.scaled_geometry("conv1")
+    assert (ci, co, k, s) == (3, 96, 11, 4)
+    assert h == max(227 // 8, 11 + 44) == 55 and w == 55
+    # conv12's floor clamps at the original (tiny) spatial size.
+    ci, h, w, co, k, s = aot.scaled_geometry("conv12")
+    assert h == 7 and w == 7
+    # conv9: divided size dominates the floor.
+    ci, h, w, co, k, s = aot.scaled_geometry("conv9")
+    assert h == max(56 // 8, 14) == 14
+
+
+def test_oracle_artifact_numerics_match_model_kernels():
+    """Executing the lowered conv oracle equals calling the kernel directly."""
+    name = "conv12"
+    ci, h, w, co, k, s = aot.scaled_geometry(name)
+    kx, kf = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (aot.ORACLE_BATCH, ci, h, w), jnp.float32)
+    f = jax.random.normal(kf, (co, ci, k, k), jnp.float32)
+    (direct_call,) = aot.conv_oracle_fn(name)(x, f)
+    compiled = aot.lower_conv_oracle(name).compile()
+    (via_artifact,) = compiled(x, f)
+    import numpy as np
+
+    np.testing.assert_allclose(direct_call, via_artifact, rtol=1e-5, atol=1e-5)
+
+
+def test_tinynet_artifacts_lower():
+    fwd = aot.to_hlo_text(aot.lower_tinynet_fwd())
+    assert f"f32[{aot.FWD_BATCH},3,{model.IMG},{model.IMG}]" in fwd
+    train = aot.to_hlo_text(aot.lower_tinynet_train())
+    assert f"s32[{aot.TRAIN_BATCH}]" in train
+    # Train step returns loss + 4 updated weights.
+    assert "f32[16,3,3,3]" in train  # w1 present in signature
+
+
+def test_table1_matches_rust_table():
+    # Spot-check a few rows against the paper's Table I.
+    assert aot.TABLE1["conv5"] == (96, 24, 24, 256, 5, 1)
+    assert aot.TABLE1["conv4"] == (64, 224, 224, 64, 7, 2)
+    assert len(aot.TABLE1) == 12

@@ -1,0 +1,70 @@
+"""TinyNet model: shapes, gradients, and a short learning sanity run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _data(batch, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (batch, 3, model.IMG, model.IMG), jnp.float32)
+    y = jax.random.randint(ky, (batch,), 0, model.NUM_CLASSES)
+    return x, y
+
+
+def test_forward_shape_and_finiteness():
+    params = model.init_params(0)
+    x, _ = _data(4)
+    logits = model.forward(x, *params)
+    assert logits.shape == (4, model.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_loss_is_scalar_near_log_k_at_init():
+    params = model.init_params(1)
+    x, y = _data(8, seed=1)
+    loss = model.loss_fn(x, y, *params)
+    assert loss.shape == ()
+    # Untrained softmax over 10 classes ~ ln(10) ≈ 2.303.
+    assert 1.0 < float(loss) < 4.5
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    params = model.init_params(2)
+    x, y = _data(16, seed=2)
+    step = jax.jit(model.train_step)
+    lr = jnp.float32(0.05)
+    first = None
+    loss = None
+    for _ in range(15):
+        loss, *params = step(x, y, *params, lr)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first, f"{float(loss)} !< {first}"
+
+
+def test_gradients_flow_to_all_parameters():
+    params = model.init_params(3)
+    x, y = _data(4, seed=3)
+    grads = jax.grad(model.loss_fn, argnums=(2, 3, 4, 5))(x, y, *params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert float(jnp.abs(g).max()) > 0.0
+
+
+def test_param_shapes_match_init():
+    params = model.init_params(4)
+    for p, (name, shape) in zip(params, model.param_shapes().items()):
+        assert p.shape == shape, name
+
+
+def test_max_pool2():
+    x = jnp.arange(1 * 4 * 4 * 1, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    y = model.max_pool2(x)
+    np.testing.assert_array_equal(
+        np.asarray(y)[0, :, :, 0], np.array([[5.0, 7.0], [13.0, 15.0]])
+    )
+    # Odd edges are truncated (valid pooling).
+    x5 = jnp.zeros((1, 5, 5, 2))
+    assert model.max_pool2(x5).shape == (1, 2, 2, 2)

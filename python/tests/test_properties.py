@@ -1,0 +1,83 @@
+"""Hypothesis property sweeps over the Pallas kernels' geometry space."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.direct import conv_direct
+from compile.kernels.im2col import conv_im2col
+from compile.kernels.im2win import conv_im2win
+
+
+@st.composite
+def conv_geometry(draw):
+    """Random valid (n, h, w, ci, co, kh, kw, sh, sw)."""
+    n = draw(st.integers(1, 3))
+    kh = draw(st.integers(1, 4))
+    kw = draw(st.integers(1, 4))
+    h = kh + draw(st.integers(0, 6))
+    w = kw + draw(st.integers(0, 6))
+    ci = draw(st.integers(1, 5))
+    co = draw(st.integers(1, 5))
+    sh = draw(st.integers(1, 3))
+    sw = draw(st.integers(1, 3))
+    return n, h, w, ci, co, kh, kw, sh, sw
+
+
+def _run(kernel, geom, seed):
+    n, h, w, ci, co, kh, kw, sh, sw = geom
+    kx, kf = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, h, w, ci), jnp.float32)
+    f = jax.random.normal(kf, (co, kh, kw, ci), jnp.float32)
+    got = kernel(x, f, (sh, sw))
+    want = ref.conv_ref(x, f, (sh, sw))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# interpret-mode pallas is slow; keep example counts modest but meaningful.
+SWEEP = settings(max_examples=25, deadline=None)
+
+
+@SWEEP
+@given(geom=conv_geometry(), seed=st.integers(0, 2**31 - 1))
+def test_im2win_matches_reference_everywhere(geom, seed):
+    _run(conv_im2win, geom, seed)
+
+
+@SWEEP
+@given(geom=conv_geometry(), seed=st.integers(0, 2**31 - 1))
+def test_direct_matches_reference_everywhere(geom, seed):
+    _run(conv_direct, geom, seed)
+
+
+@SWEEP
+@given(geom=conv_geometry(), seed=st.integers(0, 2**31 - 1))
+def test_im2col_matches_reference_everywhere(geom, seed):
+    _run(conv_im2col, geom, seed)
+
+
+@SWEEP
+@given(
+    n=st.integers(1, 3),
+    hf=st.integers(1, 4),
+    extra_h=st.integers(0, 6),
+    w=st.integers(1, 8),
+    c=st.integers(1, 5),
+    sh=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2win_transform_is_a_window_bijection(n, hf, extra_h, w, c, sh, seed):
+    """Every (m, k, u) window cell maps to the right input element."""
+    h = hf + extra_h
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, h, w, c), jnp.float32)
+    win = ref.im2win_ref(x, hf, sh)
+    ho = (h - hf) // sh + 1
+    assert win.shape == (n, ho, w * hf, c)
+    xw, ww = np.asarray(x), np.asarray(win)
+    for m in range(ho):
+        for u in range(hf):
+            np.testing.assert_array_equal(
+                ww[:, m, u::hf, :], xw[:, m * sh + u, :, :]
+            )

@@ -1,0 +1,73 @@
+//! A1/A2 ablations (DESIGN.md §4): the §III-D optimization ladder and the
+//! `W_{o,b}` blocking-size sensitivity on representative layers.
+//!
+//! ```bash
+//! cargo bench --bench ablation_opts -- --scale ci --layers conv5,conv9
+//! ```
+
+mod common;
+
+use im2win::autotune::tune_w_block;
+use im2win::bench_harness::fmt_time;
+use im2win::conv::AlgoKind;
+use im2win::coordinator::{experiments, layers, write_csv};
+use im2win::tensor::Layout;
+
+fn main() {
+    let cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("ablation_opts: test mode, skipping measurement");
+        return;
+    }
+    let selected = if cfg.layers.is_empty() {
+        vec!["conv5".to_string(), "conv9".to_string()]
+    } else {
+        cfg.layers.clone()
+    };
+
+    // A1 — optimization ladder per layout.
+    let mut all = Vec::new();
+    for name in &selected {
+        let layer = layers::by_name(name).expect("unknown layer");
+        for layout in [Layout::Nhwc, Layout::Nchw] {
+            println!("\nA1 optimization ladder — {name} ({layout}):");
+            let records = experiments::ablation(layer, layout, cfg.scale).expect("ablation failed");
+            let naive = records[0].best_s;
+            for r in &records {
+                println!(
+                    "  {:<24} {:>12}  {:>8.2} GFLOPS  ({:>5.1}x vs naive)",
+                    r.algo,
+                    fmt_time(r.best_s),
+                    r.gflops(),
+                    naive / r.best_s
+                );
+            }
+            all.extend(records);
+        }
+    }
+    write_csv(format!("reports/ablation_{}.csv", cfg.scale.name()), &all).unwrap();
+
+    // A2 — W_o,b sensitivity sweep.
+    for name in &selected {
+        let layer = layers::by_name(name).expect("unknown layer");
+        let p = experiments::layer_params(layer, cfg.scale);
+        for algo in [AlgoKind::Im2win, AlgoKind::Direct] {
+            let report = tune_w_block(algo, Layout::Nhwc, &p, cfg.scale.repeats())
+                .expect("tune failed");
+            let best = report.best();
+            println!(
+                "\nA2 W_o,b sweep — {algo} NHWC {name}: best W_o,b = {} ({:.2}x spread)",
+                best.w_block,
+                report.sensitivity()
+            );
+            for pt in &report.points {
+                println!(
+                    "  W_o,b = {:<2} {:>12}  {:>8.2} GFLOPS",
+                    pt.w_block,
+                    fmt_time(pt.result.best_s),
+                    p.flops() as f64 / pt.result.best_s / 1e9
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Shared argument handling for the bench binaries.
+//!
+//! `cargo bench -- --scale ci --layers conv5,conv9` forwards everything
+//! after `--` to each bench; `--bench` (injected by cargo) is ignored.
+
+use im2win::config::{ExperimentConfig, Scale};
+
+/// Parse the common bench flags into an experiment config.
+pub fn config_from_args() -> ExperimentConfig {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = Scale::Ci;
+    let mut layers: Vec<String> = vec![];
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                if let Some(v) = args.get(i + 1) {
+                    scale = Scale::parse(v).unwrap_or_else(|| {
+                        eprintln!("unknown scale '{v}', using ci");
+                        Scale::Ci
+                    });
+                    i += 1;
+                }
+            }
+            "--layers" => {
+                if let Some(v) = args.get(i + 1) {
+                    layers = v.split(',').map(str::to_string).collect();
+                    i += 1;
+                }
+            }
+            "--threads" => {
+                if let Some(t) = args.get(i + 1).and_then(|v| v.parse().ok()) {
+                    im2win::parallel::set_global_threads(t);
+                    i += 1;
+                }
+            }
+            _ => {} // --bench and friends
+        }
+        i += 1;
+    }
+    let mut cfg = ExperimentConfig::paper_matrix(scale);
+    cfg.layers = layers;
+    cfg
+}
+
+/// Skip heavy work under `cargo test --benches` smoke runs.
+pub fn is_test_mode() -> bool {
+    std::env::args().any(|a| a == "--test")
+}

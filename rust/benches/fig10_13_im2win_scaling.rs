@@ -1,0 +1,47 @@
+//! Figs. 10–13 reproduction: im2win batch-size scaling on CHWN (Fig. 10),
+//! CHWN8 (Fig. 11), NCHW (Fig. 12) and NHWC (Fig. 13).
+//!
+//! ```bash
+//! cargo bench --bench fig10_13_im2win_scaling -- --scale ci --layers conv5,conv9
+//! ```
+
+mod common;
+
+use im2win::conv::AlgoKind;
+use im2win::coordinator::{experiments, write_csv};
+
+fn main() {
+    let mut cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("fig10_13_im2win_scaling: test mode, skipping measurement");
+        return;
+    }
+    if cfg.layers.is_empty() {
+        // Representative subset by default (small-C_i, large-C_i, mid, deep);
+        // pass --layers conv1,...,conv12 for the full sweep.
+        cfg.layers = ["conv1", "conv5", "conv9"]
+            .map(String::from)
+            .to_vec();
+    }
+    println!(
+        "Figs. 10–13 — im2win batch scaling, sweep {:?}, scale={}",
+        cfg.scale.batch_sweep(),
+        cfg.scale.name()
+    );
+    let records = experiments::batch_scaling(&cfg, AlgoKind::Im2win).expect("scaling run failed");
+    for (fig, layout) in
+        [("fig10", "CHWN"), ("fig11", "CHWN8"), ("fig12", "NCHW"), ("fig13", "NHWC")]
+    {
+        let sub: Vec<_> =
+            records.iter().filter(|r| r.experiment == fig).cloned().collect();
+        println!(
+            "\n{}",
+            im2win::coordinator::plot::scaling_chart(
+                &sub,
+                &format!("[{fig} — im2win {layout}] batch scaling"),
+                40
+            )
+        );
+    }
+    write_csv(format!("reports/fig10_13_{}.csv", cfg.scale.name()), &records).unwrap();
+}

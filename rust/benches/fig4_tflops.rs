@@ -1,0 +1,57 @@
+//! Fig. 4 reproduction: TFLOPS of direct / im2win / im2col across layouts
+//! on the twelve Table I layers (paper §IV-B, the headline figure).
+//!
+//! ```bash
+//! cargo bench --bench fig4_tflops -- --scale ci          # minutes
+//! cargo bench --bench fig4_tflops -- --scale full        # paper scale
+//! cargo bench --bench fig4_tflops -- --layers conv5,conv9
+//! ```
+//!
+//! Prints the per-layer grid, the winners count, the paper's headline
+//! speedup comparisons, and writes `reports/fig4_<scale>.{csv,json}`.
+
+mod common;
+
+use im2win::coordinator::{experiments, format_table, plot, summary, write_csv, write_json};
+use im2win::roofline::MachineSpec;
+
+fn main() {
+    let cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("fig4_tflops: test mode, skipping measurement");
+        return;
+    }
+    println!(
+        "Fig. 4 — scale={} (batch {}, spatial/{}), {} repeats, {} threads",
+        cfg.scale.name(),
+        cfg.scale.batch(),
+        cfg.scale.spatial_div(),
+        cfg.scale.repeats(),
+        im2win::parallel::global().threads()
+    );
+    let records = experiments::fig4(&cfg).expect("fig4 run failed");
+    println!("\nGFLOPS (best of {} runs):", cfg.scale.repeats());
+    println!("{}", format_table(&records, |r| format!("{:.1}", r.gflops())));
+
+    let peak1 = MachineSpec::detect().peak_flops_single_core();
+    println!("fraction of single-core Eq.4 peak ({:.0} GFLOPS):", peak1 / 1e9);
+    println!(
+        "{}",
+        format_table(&records, |r| format!("{:.0}%", 100.0 * r.flops as f64 / r.best_s / peak1))
+    );
+
+    println!("winners per layer (paper: im2win 8/12, direct 3/12, im2col 1/12, all NHWC):");
+    for (series, n) in summary::winners(&records) {
+        println!("  {series:<16} {n}");
+    }
+    println!("\nheadline speedups (paper ranges in DESIGN.md §1):");
+    for s in summary::paper_headlines(&records) {
+        println!("  {s}");
+    }
+    write_csv(format!("reports/fig4_{}.csv", cfg.scale.name()), &records).unwrap();
+    write_json(format!("reports/fig4_{}.json", cfg.scale.name()), &records).unwrap();
+    // The figure itself, rendered offline.
+    let chart = plot::bar_chart(&records, "\nFig. 4 (rendered)", "GFLOPS", 40, |r| r.gflops());
+    println!("{chart}");
+    std::fs::write(format!("reports/fig4_{}.txt", cfg.scale.name()), chart).unwrap();
+}

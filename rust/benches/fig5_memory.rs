@@ -1,0 +1,39 @@
+//! Fig. 5 reproduction: memory usage of the three convolutions per layout.
+//!
+//! The paper's invariants this bench checks and prints:
+//!   * direct uses the least memory (no transform buffers);
+//!   * im2col uses the most (full patch matrix, ~Hf·Wf× the input);
+//!   * im2win sits between (~Hf× the input): on average 1.5× direct and
+//!     ~39% of im2col.
+//!
+//! ```bash
+//! cargo bench --bench fig5_memory -- --scale ci
+//! ```
+
+mod common;
+
+use im2win::coordinator::{experiments, format_table, summary, write_csv};
+
+fn main() {
+    let cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("fig5_memory: test mode, skipping measurement");
+        return;
+    }
+    println!("Fig. 5 — memory usage, scale={} (batch {})", cfg.scale.name(), cfg.scale.batch());
+    let records = experiments::fig5(&cfg).expect("fig5 run failed");
+    println!("\npeak tensor MiB per convolution:");
+    println!(
+        "{}",
+        format_table(&records, |r| format!("{:.2}", r.mem_bytes as f64 / (1024.0 * 1024.0)))
+    );
+    for layout in ["NCHW", "NHWC"] {
+        if let Some((cd, wd, wc)) = summary::memory_ratios(&records, layout) {
+            println!(
+                "{layout}: im2col = {cd:.1}x direct (paper 3.9x) | im2win = {wd:.1}x direct (paper 1.5x) | im2win/im2col = {:.0}% (paper 39%)",
+                wc * 100.0
+            );
+        }
+    }
+    write_csv(format!("reports/fig5_{}.csv", cfg.scale.name()), &records).unwrap();
+}

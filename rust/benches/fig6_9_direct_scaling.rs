@@ -1,0 +1,52 @@
+//! Figs. 6–9 reproduction: direct-convolution batch-size scaling on the
+//! CHWN (Fig. 6), CHWN8 (Fig. 7), NCHW (Fig. 8) and NHWC (Fig. 9) layouts.
+//!
+//! Paper findings to observe in the output: CHWN is the most
+//! batch-sensitive layout (best at the smallest batch); CHWN8 prefers
+//! small batches when C_i is small (conv1–3) and large batches otherwise;
+//! NCHW/NHWC are batch-insensitive.
+//!
+//! ```bash
+//! cargo bench --bench fig6_9_direct_scaling -- --scale ci --layers conv5,conv9
+//! ```
+
+mod common;
+
+use im2win::conv::AlgoKind;
+use im2win::coordinator::{experiments, write_csv};
+
+fn main() {
+    let mut cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("fig6_9_direct_scaling: test mode, skipping measurement");
+        return;
+    }
+    if cfg.layers.is_empty() {
+        // Representative subset by default (small-C_i, large-C_i, mid, deep);
+        // pass --layers conv1,...,conv12 for the full sweep.
+        cfg.layers = ["conv1", "conv5", "conv9"]
+            .map(String::from)
+            .to_vec();
+    }
+    println!(
+        "Figs. 6–9 — direct conv batch scaling, sweep {:?}, scale={}",
+        cfg.scale.batch_sweep(),
+        cfg.scale.name()
+    );
+    let records = experiments::batch_scaling(&cfg, AlgoKind::Direct).expect("scaling run failed");
+    for (fig, layout) in
+        [("fig6", "CHWN"), ("fig7", "CHWN8"), ("fig8", "NCHW"), ("fig9", "NHWC")]
+    {
+        let sub: Vec<_> =
+            records.iter().filter(|r| r.experiment == fig).cloned().collect();
+        println!(
+            "\n{}",
+            im2win::coordinator::plot::scaling_chart(
+                &sub,
+                &format!("[{fig} — direct {layout}] batch scaling"),
+                40
+            )
+        );
+    }
+    write_csv(format!("reports/fig6_9_{}.csv", cfg.scale.name()), &records).unwrap();
+}

@@ -1,0 +1,54 @@
+//! GEMM substrate microbenchmark: the im2col baseline is only as honest as
+//! its SGEMM, so this bench reports the blocked kernel's GFLOPS against
+//! the single-core Eq. 4 peak on square and conv-shaped problems.
+//!
+//! ```bash
+//! cargo bench --bench gemm_micro
+//! ```
+
+mod common;
+
+use im2win::bench_harness::{fmt_time, measure};
+use im2win::gemm::sgemm;
+use im2win::roofline::MachineSpec;
+
+fn bench_case(m: usize, n: usize, k: usize, repeats: usize, peak1: f64) {
+    let a = vec![1.0f32; m * k];
+    let b = vec![0.5f32; k * n];
+    let mut c = vec![0.0f32; m * n];
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let r = measure(repeats, || {
+        sgemm(m, n, k, &a, k, &b, n, &mut c, n);
+    });
+    println!(
+        "  {m:>5} x {n:>5} x {k:>5}  {:>12}  {:>7.2} GFLOPS  ({:>4.0}% of 1-core peak)",
+        fmt_time(r.best_s),
+        flops / r.best_s / 1e9,
+        100.0 * flops / r.best_s / peak1
+    );
+}
+
+fn main() {
+    if common::is_test_mode() {
+        println!("gemm_micro: test mode, skipping measurement");
+        return;
+    }
+    let cfg = common::config_from_args();
+    let peak1 = MachineSpec::detect().peak_flops_single_core();
+    println!(
+        "blocked SGEMM vs single-core Eq.4 peak ({:.0} GFLOPS), scale={}\n",
+        peak1 / 1e9,
+        cfg.scale.name()
+    );
+    println!("square:");
+    for s in [64, 128, 256, 512] {
+        bench_case(s, s, s, cfg.scale.repeats(), peak1);
+    }
+    println!("conv-shaped (im2col panels of Table I at batch 1):");
+    // conv9: M = Ho*Wo = 2916, N = Co = 64, K = Ci*Hf*Wf = 576
+    bench_case(2916, 64, 576, cfg.scale.repeats(), peak1);
+    // conv5: M = 400, N = 256, K = 2400
+    bench_case(400, 256, 2400, cfg.scale.repeats(), peak1);
+    // conv12: M = 25, N = 512, K = 4608
+    bench_case(25, 512, 4608, cfg.scale.repeats(), peak1);
+}

@@ -1,0 +1,120 @@
+//! Autotuner for the register-blocking factor `W_{o,b}`.
+//!
+//! The paper fixes `W_{o,b}` per machine by hand; this module searches it
+//! empirically per (algorithm, layout, geometry) — the A2 ablation of
+//! DESIGN.md — and doubles as the sensitivity study for the blocking
+//! optimization of §III-D.
+
+use crate::bench_harness::{measure, BenchResult};
+use crate::conv::direct::DirectConv;
+use crate::conv::im2win::Im2winConv;
+use crate::conv::{AlgoKind, ConvAlgorithm, ConvParams};
+use crate::error::{Error, Result};
+use crate::tensor::{Layout, Tensor4};
+
+/// Candidate `W_{o,b}` values (bounded by the 16 ymm registers of x86-64:
+/// beyond ~8 accumulators the compiler starts spilling).
+pub const W_BLOCK_CANDIDATES: [usize; 6] = [1, 2, 3, 4, 6, 8];
+
+/// One sampled point of the tuning sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct TunePoint {
+    /// The blocking factor measured.
+    pub w_block: usize,
+    /// Its measurement.
+    pub result: BenchResult,
+}
+
+/// Outcome of a tuning sweep.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Algorithm tuned.
+    pub algo: AlgoKind,
+    /// Layout tuned.
+    pub layout: Layout,
+    /// Geometry tuned.
+    pub params: ConvParams,
+    /// All sampled points, in candidate order.
+    pub points: Vec<TunePoint>,
+}
+
+impl TuneReport {
+    /// The fastest sampled blocking factor.
+    pub fn best(&self) -> TunePoint {
+        *self
+            .points
+            .iter()
+            .min_by(|a, b| a.result.best_s.partial_cmp(&b.result.best_s).unwrap())
+            .expect("tune sweep sampled no points")
+    }
+
+    /// Speedup of the best point over the worst (sensitivity measure).
+    pub fn sensitivity(&self) -> f64 {
+        let worst = self
+            .points
+            .iter()
+            .map(|p| p.result.best_s)
+            .fold(f64::MIN, f64::max);
+        worst / self.best().result.best_s
+    }
+}
+
+/// Sweep `W_{o,b}` for `algo` on `layout` × `params`, `repeats` timed runs
+/// per candidate. Only `Direct` and `Im2win` expose the knob.
+pub fn tune_w_block(
+    algo: AlgoKind,
+    layout: Layout,
+    params: &ConvParams,
+    repeats: usize,
+) -> Result<TuneReport> {
+    let input = Tensor4::random(params.input_dims(), layout, 1);
+    let filter = Tensor4::random(params.filter_dims(), layout, 2);
+    let mut out = Tensor4::zeros(params.output_dims(), layout);
+
+    let mut points = Vec::new();
+    for &wb in &W_BLOCK_CANDIDATES {
+        let boxed: Box<dyn ConvAlgorithm> = match algo {
+            AlgoKind::Direct => Box::new(DirectConv::with_w_block(wb)),
+            AlgoKind::Im2win => Box::new(Im2winConv::with_w_block(wb)),
+            other => {
+                return Err(Error::Config(format!("{other} has no W_o,b parameter to tune")))
+            }
+        };
+        // Correctness guard before timing.
+        boxed.run_into(&input, &filter, params, &mut out)?;
+        let result = measure(repeats, || {
+            boxed.run_into(&input, &filter, params, &mut out).expect("tuned kernel failed");
+        });
+        points.push(TunePoint { w_block: wb, result });
+    }
+    Ok(TuneReport { algo, layout, params: *params, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tunes_im2win_and_picks_a_candidate() {
+        let p = ConvParams::new(2, 4, 12, 12, 4, 3, 3, 1).unwrap();
+        let report = tune_w_block(AlgoKind::Im2win, Layout::Nhwc, &p, 2).unwrap();
+        assert_eq!(report.points.len(), W_BLOCK_CANDIDATES.len());
+        assert!(W_BLOCK_CANDIDATES.contains(&report.best().w_block));
+        assert!(report.sensitivity() >= 1.0);
+    }
+
+    #[test]
+    fn tunes_direct() {
+        let p = ConvParams::new(2, 3, 10, 10, 4, 3, 3, 1).unwrap();
+        let report = tune_w_block(AlgoKind::Direct, Layout::Chwn8, &p, 2).unwrap();
+        assert_eq!(report.algo, AlgoKind::Direct);
+        assert!(report.best().result.best_s > 0.0);
+    }
+
+    #[test]
+    fn rejects_untunable_algorithms() {
+        let p = ConvParams::new(1, 2, 6, 6, 2, 3, 3, 1).unwrap();
+        assert!(tune_w_block(AlgoKind::Im2col, Layout::Nchw, &p, 1).is_err());
+        assert!(tune_w_block(AlgoKind::Naive, Layout::Nchw, &p, 1).is_err());
+    }
+}

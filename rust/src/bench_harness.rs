@@ -1,0 +1,131 @@
+//! Benchmark measurement harness.
+//!
+//! `criterion` is unavailable in the offline dependency set, so the
+//! harness implements the paper's measurement protocol directly: warmup,
+//! `k` timed repetitions, and *best* time reported (paper §IV-B: "We run
+//! each algorithm 50 times on each benchmark ... and report the best
+//! runtime"), plus median/mean for stability diagnostics.
+
+use std::time::Instant;
+
+/// Statistics from repeated timed runs of one measurement target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BenchResult {
+    /// Minimum observed wall time, seconds (the paper's reported metric).
+    pub best_s: f64,
+    /// Median wall time, seconds.
+    pub median_s: f64,
+    /// Mean wall time, seconds.
+    pub mean_s: f64,
+    /// Number of timed repetitions.
+    pub runs: usize,
+}
+
+impl BenchResult {
+    /// Performance in TFLOPS at the *best* time for `flops` useful FLOPs.
+    pub fn tflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.best_s / 1e12
+    }
+
+    /// Performance in GFLOPS at the best time.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.best_s / 1e9
+    }
+}
+
+/// Run `f` once for warmup, then `repeats` timed repetitions.
+///
+/// `f` should perform one complete measurement unit (e.g. one full
+/// convolution including its transforms, as the paper times it).
+pub fn measure<F: FnMut()>(repeats: usize, mut f: F) -> BenchResult {
+    let repeats = repeats.max(1);
+    f(); // warmup (page faults, lazy allocs, branch training)
+    let mut times = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&times)
+}
+
+/// Like [`measure`], but stops early once `budget_s` of measurement time is
+/// spent (used by the full-scale suite where conv4 at N=512 is minutes).
+pub fn measure_budgeted<F: FnMut()>(repeats: usize, budget_s: f64, mut f: F) -> BenchResult {
+    let repeats = repeats.max(1);
+    f();
+    let start = Instant::now();
+    let mut times = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > budget_s && !times.is_empty() {
+            break;
+        }
+    }
+    summarize(&times)
+}
+
+fn summarize(times: &[f64]) -> BenchResult {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let best = sorted[0];
+    let median = sorted[sorted.len() / 2];
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    BenchResult { best_s: best, median_s: median, mean_s: mean, runs: sorted.len() }
+}
+
+/// Pretty-print seconds with an adaptive unit.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{:.1} us", seconds * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_runs_and_orders_stats() {
+        let mut calls = 0;
+        let r = measure(5, || {
+            calls += 1;
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert_eq!(calls, 6); // warmup + 5
+        assert_eq!(r.runs, 5);
+        assert!(r.best_s <= r.median_s);
+        assert!(r.best_s > 0.0);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let mut calls = 0;
+        let r = measure_budgeted(1000, 0.01, || {
+            calls += 1;
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(r.runs < 1000, "runs={}", r.runs);
+        assert!(r.runs >= 1);
+    }
+
+    #[test]
+    fn tflops_math() {
+        let r = BenchResult { best_s: 0.5, median_s: 0.5, mean_s: 0.5, runs: 1 };
+        assert!((r.tflops(1_000_000_000_000) - 2.0).abs() < 1e-9);
+        assert!((r.gflops(1_000_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(0.0000025), "2.5 us");
+    }
+}

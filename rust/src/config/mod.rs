@@ -1,0 +1,298 @@
+//! Configuration substrate: a zero-dependency JSON parser/serializer and
+//! the experiment configuration types built on it.
+//!
+//! `serde` is unavailable in the offline build, so [`json`] implements the
+//! JSON data model from scratch (full RFC 8259 value grammar: objects,
+//! arrays, strings with escapes, numbers, booleans, null). The coordinator
+//! reads experiment configs and writes machine-readable reports with it.
+
+pub mod json;
+
+use crate::conv::AlgoKind;
+use crate::error::{Error, Result};
+use crate::tensor::Layout;
+use json::Json;
+
+/// Benchmark scale presets.
+///
+/// `Full` is the paper's setup (batch 128, 50 repetitions). `Ci` shrinks
+/// the batch and repetitions so the whole matrix runs in CI-class time on
+/// one core while keeping every H/W/C/filter geometry identical — the
+/// relative orderings the paper reports are preserved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper scale: N=128, 50 runs, best-of.
+    Full,
+    /// Reduced scale for a single-core box: N=8, 5 runs.
+    Ci,
+    /// Tiny smoke scale: N=2, 2 runs, for tests.
+    Smoke,
+}
+
+impl Scale {
+    /// Parse from CLI/config text.
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "paper" => Some(Scale::Full),
+            "ci" => Some(Scale::Ci),
+            "smoke" => Some(Scale::Smoke),
+            _ => None,
+        }
+    }
+
+    /// Batch size for Fig. 4/5 benchmarks.
+    pub fn batch(&self) -> usize {
+        match self {
+            Scale::Full => 128,
+            Scale::Ci => 8,
+            Scale::Smoke => 2,
+        }
+    }
+
+    /// Repetitions per measurement (paper: best of 50).
+    pub fn repeats(&self) -> usize {
+        match self {
+            Scale::Full => 50,
+            Scale::Ci => 5,
+            Scale::Smoke => 2,
+        }
+    }
+
+    /// Divisor applied to the spatial dims of Table I layers.
+    ///
+    /// `Full` keeps the paper's geometry. `Ci`/`Smoke` shrink H/W so the
+    /// twelve-layer × ten-series matrix completes on one core in minutes;
+    /// channels, filters and strides are untouched, so the layout effects
+    /// the paper measures (unit-stride dimension, vector efficiency,
+    /// cache-block reuse) are preserved.
+    pub fn spatial_div(&self) -> usize {
+        match self {
+            Scale::Full => 1,
+            Scale::Ci => 4,
+            Scale::Smoke => 8,
+        }
+    }
+
+    /// Batch sweep for the appendix scaling figures (paper: 32…512).
+    pub fn batch_sweep(&self) -> Vec<usize> {
+        match self {
+            Scale::Full => vec![32, 64, 128, 256, 512],
+            Scale::Ci => vec![4, 8, 16, 32],
+            Scale::Smoke => vec![2, 8],
+        }
+    }
+
+    /// Name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Full => "full",
+            Scale::Ci => "ci",
+            Scale::Smoke => "smoke",
+        }
+    }
+}
+
+/// A single experiment cell: algorithm × layout (geometry comes from the
+/// benchmark suite definition).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cell {
+    /// Which convolution algorithm.
+    pub algo: AlgoKind,
+    /// Which tensor layout.
+    pub layout: Layout,
+}
+
+/// Experiment configuration consumed by the coordinator.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Benchmark scale preset.
+    pub scale: Scale,
+    /// Algorithm × layout cells to run (defaults to the paper's Fig. 4
+    /// matrix: direct/im2win on all four layouts, im2col on NHWC/NCHW).
+    pub cells: Vec<Cell>,
+    /// Layer names to include (`conv1`…`conv12`; empty = all).
+    pub layers: Vec<String>,
+    /// Thread count (0 = library default).
+    pub threads: usize,
+    /// Output directory for CSV/JSON reports.
+    pub report_dir: String,
+}
+
+impl ExperimentConfig {
+    /// The paper's Fig. 4/5 matrix at the given scale.
+    pub fn paper_matrix(scale: Scale) -> Self {
+        let mut cells = Vec::new();
+        for layout in Layout::ALL {
+            cells.push(Cell { algo: AlgoKind::Direct, layout });
+            cells.push(Cell { algo: AlgoKind::Im2win, layout });
+        }
+        // PyTorch supports only NHWC/NCHW (paper §IV-A).
+        cells.push(Cell { algo: AlgoKind::Im2col, layout: Layout::Nhwc });
+        cells.push(Cell { algo: AlgoKind::Im2col, layout: Layout::Nchw });
+        ExperimentConfig {
+            scale,
+            cells,
+            layers: vec![],
+            threads: 0,
+            report_dir: "reports".into(),
+        }
+    }
+
+    /// Parse a config from JSON text. Unknown keys are rejected (typo
+    /// safety); all keys optional with `paper_matrix(Ci)` defaults.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let obj = v.as_object().ok_or_else(|| Error::Config("config must be an object".into()))?;
+        let mut cfg = ExperimentConfig::paper_matrix(Scale::Ci);
+        for (key, val) in obj {
+            match key.as_str() {
+                "scale" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| Error::Config("scale must be a string".into()))?;
+                    cfg.scale = Scale::parse(s)
+                        .ok_or_else(|| Error::Config(format!("unknown scale '{s}'")))?;
+                }
+                "threads" => {
+                    cfg.threads = val
+                        .as_f64()
+                        .ok_or_else(|| Error::Config("threads must be a number".into()))?
+                        as usize;
+                }
+                "report_dir" => {
+                    cfg.report_dir = val
+                        .as_str()
+                        .ok_or_else(|| Error::Config("report_dir must be a string".into()))?
+                        .to_string();
+                }
+                "layers" => {
+                    let arr = val
+                        .as_array()
+                        .ok_or_else(|| Error::Config("layers must be an array".into()))?;
+                    cfg.layers = arr
+                        .iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| Error::Config("layer names must be strings".into()))
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                "cells" => {
+                    let arr = val
+                        .as_array()
+                        .ok_or_else(|| Error::Config("cells must be an array".into()))?;
+                    cfg.cells = arr.iter().map(parse_cell).collect::<Result<_>>()?;
+                }
+                other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize back to JSON (round-trip for report provenance).
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::object(vec![
+                    ("algo", Json::from(c.algo.name())),
+                    ("layout", Json::from(c.layout.name())),
+                ])
+            })
+            .collect();
+        Json::object(vec![
+            ("scale", Json::from(self.scale.name())),
+            ("threads", Json::from(self.threads as f64)),
+            ("report_dir", Json::from(self.report_dir.as_str())),
+            ("layers", Json::Array(self.layers.iter().map(|s| Json::from(s.as_str())).collect())),
+            ("cells", Json::Array(cells)),
+        ])
+    }
+}
+
+fn parse_cell(v: &Json) -> Result<Cell> {
+    let obj = v.as_object().ok_or_else(|| Error::Config("cell must be an object".into()))?;
+    let mut algo = None;
+    let mut layout = None;
+    for (k, val) in obj {
+        let s = val.as_str().ok_or_else(|| Error::Config(format!("cell.{k} must be a string")))?;
+        match k.as_str() {
+            "algo" => {
+                algo = Some(
+                    AlgoKind::parse(s).ok_or_else(|| Error::Config(format!("unknown algo '{s}'")))?,
+                )
+            }
+            "layout" => {
+                layout = Some(
+                    Layout::parse(s)
+                        .ok_or_else(|| Error::Config(format!("unknown layout '{s}'")))?,
+                )
+            }
+            other => return Err(Error::Config(format!("unknown cell key '{other}'"))),
+        }
+    }
+    Ok(Cell {
+        algo: algo.ok_or_else(|| Error::Config("cell missing 'algo'".into()))?,
+        layout: layout.ok_or_else(|| Error::Config("cell missing 'layout'".into()))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_matrix_matches_fig4() {
+        let cfg = ExperimentConfig::paper_matrix(Scale::Full);
+        // 4 direct + 4 im2win + 2 im2col = 10 series in Fig. 4.
+        assert_eq!(cfg.cells.len(), 10);
+        let im2col: Vec<_> =
+            cfg.cells.iter().filter(|c| c.algo == AlgoKind::Im2col).collect();
+        assert_eq!(im2col.len(), 2);
+        assert!(im2col.iter().all(|c| matches!(c.layout, Layout::Nhwc | Layout::Nchw)));
+    }
+
+    #[test]
+    fn config_round_trips_through_json() {
+        let cfg = ExperimentConfig::paper_matrix(Scale::Ci);
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert_eq!(back.scale, cfg.scale);
+        assert_eq!(back.cells, cfg.cells);
+        assert_eq!(back.report_dir, cfg.report_dir);
+    }
+
+    #[test]
+    fn parses_explicit_config() {
+        let text = r#"{
+            "scale": "smoke",
+            "threads": 4,
+            "layers": ["conv5", "conv9"],
+            "cells": [{"algo": "im2win", "layout": "nhwc"}]
+        }"#;
+        let cfg = ExperimentConfig::from_json(text).unwrap();
+        assert_eq!(cfg.scale, Scale::Smoke);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.layers, vec!["conv5", "conv9"]);
+        assert_eq!(cfg.cells, vec![Cell { algo: AlgoKind::Im2win, layout: Layout::Nhwc }]);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        assert!(ExperimentConfig::from_json(r#"{"scael": "ci"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"scale": "huge"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"cells": [{"algo": "winograd", "layout": "nchw"}]}"#).is_err());
+        assert!(ExperimentConfig::from_json("[1,2]").is_err());
+    }
+
+    #[test]
+    fn scale_presets() {
+        assert_eq!(Scale::Full.batch(), 128);
+        assert_eq!(Scale::Full.repeats(), 50);
+        assert_eq!(Scale::Full.batch_sweep(), vec![32, 64, 128, 256, 512]);
+        assert_eq!(Scale::parse("paper"), Some(Scale::Full));
+        assert_eq!(Scale::parse("x"), None);
+    }
+}

@@ -1,0 +1,122 @@
+//! Direct convolution, CHWN layout.
+//!
+//! The batch is the unit-stride dimension (paper Fig. 3): eight outputs for
+//! eight different images are produced per vector op, with the filter value
+//! broadcast to all lanes. The parallel loop runs over `C_o×H_o` (the batch
+//! is the vector dimension, so it cannot also be the parallel dimension
+//! without false sharing).
+//!
+//! The paper's observed weakness emerges naturally: for `N > 8` each
+//! 8-lane slice drags a full `N`-wide cache footprint per (c,h,w) access,
+//! so cache utilization collapses as `N` grows — fixed by CHWN8.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::Tensor4;
+
+/// Output-width rows of the register tile.
+const MAX_BLOCK: usize = 3;
+/// Output-channel columns (MAX_BLOCK×CB ≤ 12 ymm): same FMA-saturating
+/// tile as the CHWN8 kernel — CHWN's remaining deficit is pure cache
+/// behaviour, the effect the paper isolates.
+const CB: usize = 4;
+
+pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf) = (p.h_f, p.w_f);
+    let (sh, sw) = (p.stride_h, p.stride_w);
+    let (n, wi) = (p.n, p.w_in);
+    let w_block = w_block.clamp(1, MAX_BLOCK);
+
+    // Input [C][H][W][N], filter [Ci][Hf][Wf][Co], output [Co][Ho][Wo][N].
+    let i_w = n;
+    let i_h = wi * n;
+    let i_c = p.h_in * i_h;
+    let f_v = co;
+    let f_u = wf * co;
+    let f_c = hf * f_u;
+    let o_w = n;
+    let o_h = w_o * n;
+    let o_c = h_o * o_h;
+
+    let x = input.data();
+    let f = filter.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    let n_vec = n - n % LANES;
+
+    let co_main = co - co % CB;
+
+    parallel::global().parallel_for_coalesced(co.div_ceil(CB), h_o, |cb, ho| {
+        let c0 = cb * CB;
+        let cols = if c0 < co_main { CB } else { co - co_main };
+        let mut wo = 0;
+        while wo < w_o {
+            let bl = w_block.min(w_o - wo);
+            // Vector lanes over the batch; register tile over W_o × C_o.
+            let mut n0 = 0;
+            while n0 < n_vec {
+                let mut acc = [[F32x8::zero(); CB]; MAX_BLOCK];
+                for r in 0..ci {
+                    let in_c = r * i_c;
+                    let f_cbase = r * f_c + c0;
+                    for u in 0..hf {
+                        let in_row = in_c + (ho * sh + u) * i_h;
+                        for v in 0..wf {
+                            // SAFETY: all offsets bounded by loop ranges.
+                            unsafe {
+                                let mut iv = [F32x8::zero(); MAX_BLOCK];
+                                for (b, vv) in iv.iter_mut().enumerate().take(bl) {
+                                    let ip = in_row + ((wo + b) * sw + v) * i_w + n0;
+                                    *vv = F32x8::load(x.as_ptr().add(ip));
+                                }
+                                let ftap = f_cbase + u * f_u + v * f_v;
+                                for cc in 0..cols {
+                                    let fv = F32x8::splat(*f.get_unchecked(ftap + cc));
+                                    for b in 0..bl {
+                                        acc[b][cc] = iv[b].fma(fv, acc[b][cc]);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    for cc in 0..cols {
+                        // SAFETY: disjoint (cb, ho) output rows per thread.
+                        unsafe {
+                            acc[b][cc]
+                                .store(optr.at((c0 + cc) * o_c + ho * o_h + (wo + b) * o_w + n0))
+                        };
+                    }
+                }
+                n0 += LANES;
+            }
+            // Batch tail (N not a multiple of 8): scalar lanes.
+            for nn in n_vec..n {
+                for cc in 0..cols {
+                    let mut acc = [0.0f32; MAX_BLOCK];
+                    for r in 0..ci {
+                        for u in 0..hf {
+                            let in_row = r * i_c + (ho * sh + u) * i_h;
+                            for v in 0..wf {
+                                let fval = f[r * f_c + u * f_u + v * f_v + c0 + cc];
+                                for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                    *a += x[in_row + ((wo + b) * sw + v) * i_w + nn] * fval;
+                                }
+                            }
+                        }
+                    }
+                    for (b, a) in acc.iter().enumerate().take(bl) {
+                        unsafe {
+                            *optr.at((c0 + cc) * o_c + ho * o_h + (wo + b) * o_w + nn) = *a
+                        };
+                    }
+                }
+            }
+            wo += bl;
+        }
+    });
+}

@@ -1,0 +1,140 @@
+//! Direct convolution, CHWN8 layout — the paper's novel blocked layout.
+//!
+//! Physical shape `[N/8][C][H][W][8]`: one AVX2 register of batch lanes is
+//! innermost, and the remaining batch blocks are *outermost*, so the
+//! per-block working set is that of an `N = 8` problem — full vector width
+//! without the CHWN cache blow-up (paper §III-B). The parallel loop runs
+//! over `(N/8)×H_o` blocks (batch blocks are independent, NUMA-friendly).
+//!
+//! Lanes padded beyond the logical batch hold zeros on input and produce
+//! zeros on output.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd::F32x8;
+use crate::tensor::{CHWN8_BLOCK, Tensor4};
+
+/// Output-width rows of the register tile.
+const MAX_BLOCK: usize = 3;
+/// Output-channel columns of the register tile (MAX_BLOCK×CB ≤ 12 ymm):
+/// per window tap the tile issues MAX_BLOCK loads + CB broadcasts for
+/// MAX_BLOCK·CB FMAs, keeping the FMA ports saturated.
+const CB: usize = 4;
+
+pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf) = (p.h_f, p.w_f);
+    let (sh, sw) = (p.stride_h, p.stride_w);
+    let wi = p.w_in;
+    let w_block = w_block.clamp(1, MAX_BLOCK);
+    let nblocks = p.n.div_ceil(CHWN8_BLOCK);
+    const B: usize = CHWN8_BLOCK;
+
+    // Input [N/8][Ci][Hi][Wi][8]; output [N/8][Co][Ho][Wo][8].
+    let i_w = B;
+    let i_h = wi * B;
+    let i_c = p.h_in * i_h;
+    let i_nb = ci * i_c;
+    let o_w = B;
+    let o_h = w_o * B;
+    let o_c = h_o * o_h;
+    let o_nb = co * o_c;
+
+    // Filter dims (Co, Ci, Hf, Wf) in CHWN8 layout: [Co/8][Ci][Hf][Wf][8]
+    // with the *output channel* blocked. Scalar reads only.
+    let f_v = B;
+    let f_u = wf * B;
+    let f_c = hf * f_u;
+    let f_cob = ci * f_c;
+
+    let x = input.data();
+    let f = filter.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    let f_at = |c: usize, r: usize, u: usize, v: usize| -> usize {
+        (c / B) * f_cob + r * f_c + u * f_u + v * f_v + c % B
+    };
+    let co_main = co - co % CB;
+
+    parallel::global().parallel_for_coalesced(nblocks, h_o, |nb, ho| {
+        let in_nb = nb * i_nb;
+        let out_nb = nb * o_nb + ho * o_h;
+
+        // Main tiles: CB output channels × w_block output columns.
+        let mut c = 0;
+        while c < co_main {
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = w_block.min(w_o - wo);
+                let mut acc = [[F32x8::zero(); CB]; MAX_BLOCK];
+                for r in 0..ci {
+                    let in_c = in_nb + r * i_c;
+                    for u in 0..hf {
+                        let in_row = in_c + (ho * sh + u) * i_h;
+                        for v in 0..wf {
+                            // SAFETY: offsets bounded by loop ranges; the
+                            // final batch block is fully allocated (padded).
+                            unsafe {
+                                let mut iv = [F32x8::zero(); MAX_BLOCK];
+                                for (b, vv) in iv.iter_mut().enumerate().take(bl) {
+                                    let ip = in_row + ((wo + b) * sw + v) * i_w;
+                                    *vv = F32x8::load(x.as_ptr().add(ip));
+                                }
+                                for cc in 0..CB {
+                                    let fv = F32x8::splat(
+                                        *f.get_unchecked(f_at(c + cc, r, u, v)),
+                                    );
+                                    for b in 0..bl {
+                                        acc[b][cc] = iv[b].fma(fv, acc[b][cc]);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    for cc in 0..CB {
+                        // SAFETY: disjoint (nb, ho) regions per thread.
+                        unsafe {
+                            acc[b][cc].store(optr.at(out_nb + (c + cc) * o_c + (wo + b) * o_w))
+                        };
+                    }
+                }
+                wo += bl;
+            }
+            c += CB;
+        }
+
+        // Channel tail.
+        for c in co_main..co {
+            let out_row = out_nb + c * o_c;
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = w_block.min(w_o - wo);
+                let mut acc = [F32x8::zero(); MAX_BLOCK];
+                for r in 0..ci {
+                    let in_c = in_nb + r * i_c;
+                    for u in 0..hf {
+                        let in_row = in_c + (ho * sh + u) * i_h;
+                        for v in 0..wf {
+                            // SAFETY: as above.
+                            unsafe {
+                                let fv = F32x8::splat(*f.get_unchecked(f_at(c, r, u, v)));
+                                for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                    let ip = in_row + ((wo + b) * sw + v) * i_w;
+                                    *a = F32x8::load(x.as_ptr().add(ip)).fma(fv, *a);
+                                }
+                            }
+                        }
+                    }
+                }
+                for (b, a) in acc.iter().enumerate().take(bl) {
+                    // SAFETY: disjoint (nb, ho) regions per thread.
+                    unsafe { a.store(optr.at(out_row + (wo + b) * o_w)) };
+                }
+                wo += bl;
+            }
+        }
+    });
+}

@@ -1,0 +1,174 @@
+//! Optimized direct convolution (paper §III, "high performance direct").
+//!
+//! Direct convolution runs on the original tensors — no transformation, no
+//! extra memory (the paper's Fig. 5 lower bound). Each layout gets its own
+//! kernel following the loop-reordering rules of §III-C:
+//!
+//! | layout | inner loops (outer→inner) | vector dimension |
+//! |--------|---------------------------|------------------|
+//! | NCHW   | `C_i, H_f, W_f`           | window width `W_f` |
+//! | NHWC   | `W_f, H_f, C_i`           | channels `C_i` |
+//! | CHWN   | `C_i, H_f, W_f` (scalar filter) | batch `N` |
+//! | CHWN8  | same, per 8-batch block   | batch lane block |
+//!
+//! The outer four loops are `N, H_o, C_o, W_o` for every layout, with
+//! `N×H_o` coalesced into one guided-scheduled parallel loop (CHWN uses
+//! `C_o×H_o`: its batch is the vector dimension) and `W_o` blocked by the
+//! register-blocking factor `w_block` (the paper's `W_{o,b}`).
+
+mod chwn;
+mod chwn8;
+mod nchw;
+mod nhwc;
+
+use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::error::{Error, Result};
+use crate::tensor::{Layout, Tensor4};
+
+/// Default output-width register-blocking factor (`W_{o,b}`); the autotuner
+/// ([`crate::autotune`]) can pick per-shape values.
+pub const DEFAULT_W_BLOCK: usize = 4;
+
+/// High-performance direct convolution over all four layouts.
+#[derive(Debug, Clone)]
+pub struct DirectConv {
+    /// Register-blocking factor over the output width (`W_{o,b}` in
+    /// Algorithm 3). Clamped to ≥ 1.
+    pub w_block: usize,
+}
+
+impl DirectConv {
+    /// Construct with the default blocking factor.
+    pub fn new() -> Self {
+        DirectConv { w_block: DEFAULT_W_BLOCK }
+    }
+
+    /// Construct with an explicit `W_{o,b}`.
+    pub fn with_w_block(w_block: usize) -> Self {
+        DirectConv { w_block: w_block.max(1) }
+    }
+}
+
+impl Default for DirectConv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConvAlgorithm for DirectConv {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn supports(&self, _layout: Layout) -> bool {
+        true
+    }
+
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        if filter.layout() != input.layout() {
+            return Err(Error::UnsupportedLayout(format!(
+                "direct conv expects filter layout {} to match input {}",
+                filter.layout(),
+                input.layout()
+            )));
+        }
+        out.data_mut().fill(0.0);
+        match input.layout() {
+            Layout::Nchw => nchw::run(input, filter, p, out, self.w_block),
+            Layout::Nhwc => nhwc::run(input, filter, p, out, self.w_block),
+            Layout::Chwn => chwn::run(input, filter, p, out, self.w_block),
+            Layout::Chwn8 => chwn8::run(input, filter, p, out, self.w_block),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference_conv;
+    use crate::testutil::random_problems;
+
+    fn check_layout(layout: Layout, p: &ConvParams, seed: u64) {
+        let input = Tensor4::random(p.input_dims(), layout, seed);
+        let filter = Tensor4::random(p.filter_dims(), layout, seed + 1);
+        let expect = reference_conv(&input, &filter, p, layout);
+        for w_block in [1, 2, DEFAULT_W_BLOCK, 7] {
+            let algo = DirectConv::with_w_block(w_block);
+            let got = algo.run(&input, &filter, p).unwrap();
+            assert!(
+                expect.allclose(&got, 1e-4, 1e-4),
+                "{layout} w_block={w_block} {p}: max diff {}",
+                expect.max_abs_diff(&got)
+            );
+        }
+    }
+
+    #[test]
+    fn matches_reference_nchw() {
+        for (i, p) in random_problems(8, 100).iter().enumerate() {
+            check_layout(Layout::Nchw, p, 200 + i as u64);
+        }
+    }
+
+    #[test]
+    fn matches_reference_nhwc() {
+        for (i, p) in random_problems(8, 101).iter().enumerate() {
+            check_layout(Layout::Nhwc, p, 300 + i as u64);
+        }
+    }
+
+    #[test]
+    fn matches_reference_chwn() {
+        for (i, p) in random_problems(8, 102).iter().enumerate() {
+            check_layout(Layout::Chwn, p, 400 + i as u64);
+        }
+    }
+
+    #[test]
+    fn matches_reference_chwn8() {
+        for (i, p) in random_problems(8, 103).iter().enumerate() {
+            check_layout(Layout::Chwn8, p, 500 + i as u64);
+        }
+    }
+
+    #[test]
+    fn table1_shape_conv9_small_batch() {
+        // conv9 geometry at batch 2 (full H/W to exercise real strides).
+        let p = ConvParams::new(2, 8, 56, 56, 8, 3, 3, 1).unwrap();
+        for layout in Layout::ALL {
+            check_layout(layout, &p, 42);
+        }
+    }
+
+    #[test]
+    fn stride_4_large_filter() {
+        // conv1-like: 11x11 stride 4.
+        let p = ConvParams::new(3, 3, 39, 39, 4, 11, 11, 4).unwrap();
+        for layout in Layout::ALL {
+            check_layout(layout, &p, 7);
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_filter_layout() {
+        let p = ConvParams::new(1, 2, 4, 4, 2, 3, 3, 1).unwrap();
+        let input = Tensor4::zeros(p.input_dims(), Layout::Nhwc);
+        let filter = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
+        assert!(DirectConv::new().run(&input, &filter, &p).is_err());
+    }
+
+    #[test]
+    fn chwn8_non_multiple_batch() {
+        // N=5 forces a partial final block in CHWN8.
+        let p = ConvParams::new(5, 3, 7, 7, 4, 3, 3, 2).unwrap();
+        check_layout(Layout::Chwn8, &p, 77);
+    }
+}

@@ -1,0 +1,67 @@
+//! Direct convolution, NCHW layout.
+//!
+//! Loop order (paper §III-C): outer `N, H_o, C_o, W_o` with `N×H_o`
+//! coalesced-parallel; inner `C_i, H_f, W_f` — the window *width* is the
+//! unit-stride dimension, so the innermost reduction is a dot product over
+//! `W_f` contiguous elements of both input row and filter row. `W_f` is
+//! small in real layers (3–11), which is precisely why the paper finds the
+//! direct convolution performs poorly on NCHW: vector efficiency is capped
+//! by the filter width.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd;
+use crate::tensor::Tensor4;
+
+pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf) = (p.h_f, p.w_f);
+    let (sh, sw) = (p.stride_h, p.stride_w);
+    let (hi, wi) = (p.h_in, p.w_in);
+
+    // Hoisted strides (paper: hoist the 1-D index computations).
+    let i_n = ci * hi * wi;
+    let i_c = hi * wi;
+    let f_co = ci * hf * wf;
+    let f_c = hf * wf;
+    let o_n = co * h_o * w_o;
+    let o_c = h_o * w_o;
+
+    let x = input.data();
+    let f = filter.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    parallel::global().parallel_for_coalesced(p.n, h_o, |ni, ho| {
+        let in_base_n = ni * i_n;
+        let out_base = ni * o_n + ho * w_o;
+        for c in 0..co {
+            let f_base_co = c * f_co;
+            let orow = out_base + c * o_c;
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = w_block.min(w_o - wo);
+                let mut acc = [0.0f32; 16]; // w_block is clamped ≤ 16 below
+                let bl = bl.min(16);
+                for r in 0..ci {
+                    let in_base_c = in_base_n + r * i_c;
+                    let f_base_c = f_base_co + r * f_c;
+                    for u in 0..hf {
+                        let irow = in_base_c + (ho * sh + u) * wi;
+                        let frow = &f[f_base_c + u * wf..f_base_c + u * wf + wf];
+                        for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                            let istart = irow + (wo + b) * sw;
+                            *a += simd::dot(&x[istart..istart + wf], frow);
+                        }
+                    }
+                }
+                for (b, a) in acc.iter().enumerate().take(bl) {
+                    // SAFETY: (ni, ho) regions are disjoint across threads;
+                    // offset is in bounds by loop ranges.
+                    unsafe { *optr.at(orow + wo + b) = *a };
+                }
+                wo += bl;
+            }
+        }
+    });
+}

@@ -1,0 +1,155 @@
+//! Direct convolution, NHWC layout — the paper's overall winner.
+//!
+//! Loop order (§III-C): outer `N, H_o, C_o, W_o` with `N×H_o` coalesced
+//! parallel; inner `H_f, W_f, C_i` with the *channel* innermost. Channels
+//! are unit-stride in both input and filter, so the reduction vectorizes
+//! over `C_i` in 8-lane FMA chunks regardless of filter size — large `C_i`
+//! layers reach near-peak efficiency (paper Fig. 4, conv5/conv6).
+//!
+//! Register blocking: a `W_{o,b} × C_{o,b}` tile of outputs accumulates in
+//! registers (the paper's `ymm` blocking extended over output channels);
+//! per 8-channel chunk the tile issues `W_{o,b}+C_{o,b}` loads for
+//! `W_{o,b}·C_{o,b}` FMAs, keeping the FMA ports — not the load ports —
+//! saturated.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::Tensor4;
+
+/// Max output-width block (accumulator rows).
+const MAX_WB: usize = 3;
+/// Output-channel block (accumulator columns): WB×CB ≤ 12 ymm registers.
+const CB: usize = 4;
+
+pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf) = (p.h_f, p.w_f);
+    let (sh, sw) = (p.stride_h, p.stride_w);
+    let wi = p.w_in;
+    let wb = w_block.clamp(1, MAX_WB);
+
+    // Strides.
+    let i_h = wi * ci;
+    let i_n = p.h_in * i_h;
+    let f_v = ci;
+    let f_u = wf * ci;
+    let f_co = hf * f_u;
+    let o_w = co;
+    let o_h = w_o * co;
+    let o_n = h_o * o_h;
+
+    let x = input.data();
+    let f = filter.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    let ci_vec = ci - ci % LANES;
+    let co_main = co - co % CB;
+
+    parallel::global().parallel_for_coalesced(p.n, h_o, |ni, ho| {
+        let in_n = ni * i_n;
+        let out_nh = ni * o_n + ho * o_h;
+
+        // Main tiles: CB output channels × wb output columns.
+        let mut j = 0;
+        while j < co_main {
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = wb.min(w_o - wo);
+                let mut acc = [[F32x8::zero(); CB]; MAX_WB];
+                let mut accs = [[0.0f32; CB]; MAX_WB];
+                for u in 0..hf {
+                    let in_row = in_n + (ho * sh + u) * i_h;
+                    for v in 0..wf {
+                        let i0 = in_row + v * ci;
+                        let fro = u * f_u + v * f_v;
+                        let mut r = 0;
+                        while r < ci_vec {
+                            // SAFETY: r + 8 <= ci; offsets in bounds.
+                            unsafe {
+                                let mut iv = [F32x8::zero(); MAX_WB];
+                                for (b, vv) in iv.iter_mut().enumerate().take(bl) {
+                                    *vv = F32x8::load(
+                                        x.as_ptr().add(i0 + (wo + b) * sw * ci + r),
+                                    );
+                                }
+                                for c in 0..CB {
+                                    let fv = F32x8::load(
+                                        f.as_ptr().add((j + c) * f_co + fro + r),
+                                    );
+                                    for b in 0..bl {
+                                        acc[b][c] = iv[b].fma(fv, acc[b][c]);
+                                    }
+                                }
+                            }
+                            r += LANES;
+                        }
+                        for r in ci_vec..ci {
+                            for (b, arow) in accs.iter_mut().enumerate().take(bl) {
+                                let xv = x[i0 + (wo + b) * sw * ci + r];
+                                for (c, a) in arow.iter_mut().enumerate() {
+                                    *a += xv * f[(j + c) * f_co + fro + r];
+                                }
+                            }
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    for c in 0..CB {
+                        // SAFETY: disjoint (ni, ho) regions per thread.
+                        unsafe {
+                            *optr.at(out_nh + (wo + b) * o_w + j + c) =
+                                acc[b][c].hsum() + accs[b][c];
+                        }
+                    }
+                }
+                wo += bl;
+            }
+            j += CB;
+        }
+
+        // Channel tail: single output channel per tile.
+        for j in co_main..co {
+            let f_base = j * f_co;
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = wb.min(w_o - wo);
+                let mut acc = [F32x8::zero(); MAX_WB];
+                let mut accs = [0.0f32; MAX_WB];
+                for u in 0..hf {
+                    let in_row = in_n + (ho * sh + u) * i_h;
+                    for v in 0..wf {
+                        let i0 = in_row + v * ci;
+                        let fro = f_base + u * f_u + v * f_v;
+                        let mut r = 0;
+                        while r < ci_vec {
+                            // SAFETY: r + 8 <= ci.
+                            unsafe {
+                                let fv = F32x8::load(f.as_ptr().add(fro + r));
+                                for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                    *a = F32x8::load(
+                                        x.as_ptr().add(i0 + (wo + b) * sw * ci + r),
+                                    )
+                                    .fma(fv, *a);
+                                }
+                            }
+                            r += LANES;
+                        }
+                        for r in ci_vec..ci {
+                            let fval = f[fro + r];
+                            for (b, a) in accs.iter_mut().enumerate().take(bl) {
+                                *a += x[i0 + (wo + b) * sw * ci + r] * fval;
+                            }
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    // SAFETY: disjoint (ni, ho) regions per thread.
+                    unsafe { *optr.at(out_nh + (wo + b) * o_w + j) = acc[b].hsum() + accs[b] };
+                }
+                wo += bl;
+            }
+        }
+    });
+}

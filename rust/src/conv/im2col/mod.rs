@@ -1,0 +1,338 @@
+//! im2col + GEMM convolution — the PyTorch/MKL-style baseline.
+//!
+//! The input is *fully materialized* as the unrolled matrix (every window
+//! copied out, duplicates included) and multiplied by the reshaped filter
+//! with the blocked SGEMM of [`crate::gemm`]. Full-batch materialization
+//! matches what `torch.nn.functional.unfold` does and is what gives
+//! im2col its characteristic memory blow-up (`H_f·W_f×` the input — 21 GB
+//! on conv4 in the paper's Fig. 5).
+//!
+//! Per layout the unrolled matrix is arranged so the GEMM *output* lands
+//! directly in that layout (no post-transpose):
+//!
+//! | layout | matrix (per image/block) | GEMM | output |
+//! |--------|--------------------------|------|--------|
+//! | NCHW  | `K×(H_o·W_o)`, `K = C_i·H_f·W_f` | `F[C_o×K] · M` | `[C_o][H_o·W_o]` |
+//! | NHWC  | `(H_o·W_o)×K`, `K = H_f·W_f·C_i` | `M · Fᵀ[K×C_o]` | `[H_o·W_o][C_o]` |
+//! | CHWN  | `K×(H_o·W_o·N)` (whole batch)    | `F[C_o×K] · M` | `[C_o][H_o·W_o·N]` |
+//! | CHWN8 | `K×(H_o·W_o·8)` per batch block  | `F[C_o×K] · M` | block of CHWN8 |
+//!
+//! (The paper benches im2col only on NCHW/NHWC because PyTorch supports
+//! only those; the CHWN/CHWN8 paths here are a capability extension and
+//! are excluded from the Fig. 4/5 reproduction by the bench configs.)
+
+use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::error::{Error, Result};
+use crate::gemm::sgemm;
+use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Layout, Tensor4};
+
+/// im2col-based convolution backed by the blocked SGEMM.
+#[derive(Debug, Clone, Default)]
+pub struct Im2colConv;
+
+impl Im2colConv {
+    /// Construct the baseline algorithm.
+    pub fn new() -> Self {
+        Im2colConv
+    }
+}
+
+impl ConvAlgorithm for Im2colConv {
+    fn name(&self) -> &'static str {
+        "im2col"
+    }
+
+    fn supports(&self, _layout: Layout) -> bool {
+        true
+    }
+
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        if filter.layout() != input.layout() {
+            return Err(Error::UnsupportedLayout(format!(
+                "im2col conv expects filter layout {} to match input {}",
+                filter.layout(),
+                input.layout()
+            )));
+        }
+        out.data_mut().fill(0.0);
+        match input.layout() {
+            Layout::Nchw => nchw(input, filter, p, out),
+            Layout::Nhwc => nhwc(input, filter, p, out),
+            Layout::Chwn => chwn(input, filter, p, out),
+            Layout::Chwn8 => chwn8(input, filter, p, out),
+        }
+        Ok(())
+    }
+}
+
+/// Unroll one NCHW image into `K×(H_o·W_o)`, `K` ordered `(c, u, v)`.
+fn unroll_nchw_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let cols = h_o * w_o;
+    let mut k = 0;
+    for c in 0..p.c_in {
+        for u in 0..p.h_f {
+            for v in 0..p.w_f {
+                let row = &mut mat[k * cols..(k + 1) * cols];
+                for ho in 0..h_o {
+                    let src = c * p.h_in * p.w_in + (ho * p.stride_h + u) * p.w_in + v;
+                    for wo in 0..w_o {
+                        row[ho * w_o + wo] = x[src + wo * p.stride_w];
+                    }
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+fn nchw(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = p.h_out() * p.w_out();
+    let img = p.c_in * p.h_in * p.w_in;
+    // Full-batch unrolled matrix (the memory cost the paper measures).
+    let mut mat = AlignedBuf::zeroed(p.n * k * cols);
+    for n in 0..p.n {
+        unroll_nchw_image(&input.data()[n * img..], p, &mut mat[n * k * cols..]);
+    }
+    // Filter [Co][Ci][Hf][Wf] is already [Co][K] row-major.
+    let f = filter.data();
+    for n in 0..p.n {
+        sgemm(
+            p.c_out,
+            cols,
+            k,
+            f,
+            k,
+            &mat[n * k * cols..],
+            cols,
+            &mut out.data_mut()[n * p.c_out * cols..],
+            cols,
+        );
+    }
+}
+
+/// Unroll one NHWC image into `(H_o·W_o)×K`, `K` ordered `(u, v, c)` —
+/// each `u` contributes one contiguous `W_f·C_i` span (single memcpy).
+fn unroll_nhwc_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
+    let (h_o, w_o, ci) = (p.h_out(), p.w_out(), p.c_in);
+    let k = p.h_f * p.w_f * ci;
+    let i_h = p.w_in * ci;
+    let chunk = p.w_f * ci;
+    for ho in 0..h_o {
+        for wo in 0..w_o {
+            let dst = &mut mat[(ho * w_o + wo) * k..(ho * w_o + wo + 1) * k];
+            let src0 = (ho * p.stride_h) * i_h + (wo * p.stride_w) * ci;
+            for u in 0..p.h_f {
+                dst[u * chunk..(u + 1) * chunk]
+                    .copy_from_slice(&x[src0 + u * i_h..src0 + u * i_h + chunk]);
+            }
+        }
+    }
+}
+
+fn nhwc(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let k = p.h_f * p.w_f * p.c_in;
+    let rows = p.h_out() * p.w_out();
+    let img = p.h_in * p.w_in * p.c_in;
+    let mut mat = AlignedBuf::zeroed(p.n * rows * k);
+    for n in 0..p.n {
+        unroll_nhwc_image(&input.data()[n * img..], p, &mut mat[n * rows * k..]);
+    }
+    // Filter NHWC [Co][u][v][ci] = [Co][K]; GEMM needs Fᵀ = [K][Co].
+    let f = filter.data();
+    let mut ft = AlignedBuf::zeroed(k * p.c_out);
+    for j in 0..p.c_out {
+        for t in 0..k {
+            ft[t * p.c_out + j] = f[j * k + t];
+        }
+    }
+    for n in 0..p.n {
+        sgemm(
+            rows,
+            p.c_out,
+            k,
+            &mat[n * rows * k..],
+            k,
+            &ft,
+            p.c_out,
+            &mut out.data_mut()[n * rows * p.c_out..],
+            p.c_out,
+        );
+    }
+}
+
+/// Pack a CHWN-family filter `[Ci][Hf][Wf][Co]` into `[Co][K=(c,u,v)]`.
+fn pack_filter_chwn(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
+    let k = p.c_in * p.h_f * p.w_f;
+    let mut fmat = AlignedBuf::zeroed(p.c_out * k);
+    for j in 0..p.c_out {
+        let mut t = 0;
+        for c in 0..p.c_in {
+            for u in 0..p.h_f {
+                for v in 0..p.w_f {
+                    fmat[j * k + t] = filter.get(j, c, u, v);
+                    t += 1;
+                }
+            }
+        }
+    }
+    fmat
+}
+
+/// Unroll the whole CHWN batch into `K×(H_o·W_o·N)`: each matrix element
+/// row is an `N`-contiguous lane copy.
+fn chwn(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (h_o, w_o, n) = (p.h_out(), p.w_out(), p.n);
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = h_o * w_o * n;
+    let i_w = n;
+    let i_h = p.w_in * n;
+    let i_c = p.h_in * i_h;
+    let x = input.data();
+    let mut mat = AlignedBuf::zeroed(k * cols);
+    let mut row = 0;
+    for c in 0..p.c_in {
+        for u in 0..p.h_f {
+            for v in 0..p.w_f {
+                let dst = &mut mat[row * cols..(row + 1) * cols];
+                for ho in 0..h_o {
+                    for wo in 0..w_o {
+                        let src = c * i_c + (ho * p.stride_h + u) * i_h + (wo * p.stride_w + v) * i_w;
+                        dst[(ho * w_o + wo) * n..(ho * w_o + wo + 1) * n]
+                            .copy_from_slice(&x[src..src + n]);
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    let fmat = pack_filter_chwn(filter, p);
+    sgemm(p.c_out, cols, k, &fmat, k, &mat, cols, out.data_mut(), cols);
+}
+
+/// CHWN8: unroll per 8-batch block into `K×(H_o·W_o·8)` and GEMM each
+/// block into its slice of the blocked output.
+fn chwn8(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    const B: usize = CHWN8_BLOCK;
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = h_o * w_o * B;
+    let nblocks = p.n.div_ceil(B);
+    let i_h = p.w_in * B;
+    let i_c = p.h_in * i_h;
+    let i_nb = p.c_in * i_c;
+    let o_nb = p.c_out * h_o * w_o * B;
+    let x = input.data();
+    let fmat = pack_filter_chwn(filter, p);
+    // Full-batch materialization (memory fidelity with the other paths).
+    let mut mat = AlignedBuf::zeroed(nblocks * k * cols);
+    for nb in 0..nblocks {
+        let m = &mut mat[nb * k * cols..(nb + 1) * k * cols];
+        let xb = &x[nb * i_nb..];
+        let mut row = 0;
+        for c in 0..p.c_in {
+            for u in 0..p.h_f {
+                for v in 0..p.w_f {
+                    let dst = &mut m[row * cols..(row + 1) * cols];
+                    for ho in 0..h_o {
+                        for wo in 0..w_o {
+                            let src =
+                                c * i_c + (ho * p.stride_h + u) * i_h + (wo * p.stride_w + v) * B;
+                            dst[(ho * w_o + wo) * B..(ho * w_o + wo + 1) * B]
+                                .copy_from_slice(&xb[src..src + B]);
+                        }
+                    }
+                    row += 1;
+                }
+            }
+        }
+    }
+    for nb in 0..nblocks {
+        sgemm(
+            p.c_out,
+            cols,
+            k,
+            &fmat,
+            k,
+            &mat[nb * k * cols..],
+            cols,
+            &mut out.data_mut()[nb * o_nb..],
+            cols,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference_conv;
+    use crate::testutil::random_problems;
+
+    fn check_layout(layout: Layout, p: &ConvParams, seed: u64) {
+        let input = Tensor4::random(p.input_dims(), layout, seed);
+        let filter = Tensor4::random(p.filter_dims(), layout, seed + 1);
+        let expect = reference_conv(&input, &filter, p, layout);
+        let got = Im2colConv::new().run(&input, &filter, p).unwrap();
+        assert!(
+            expect.allclose(&got, 1e-4, 1e-4),
+            "{layout} {p}: max diff {}",
+            expect.max_abs_diff(&got)
+        );
+    }
+
+    #[test]
+    fn matches_reference_all_layouts() {
+        for (i, p) in random_problems(6, 120).iter().enumerate() {
+            for layout in Layout::ALL {
+                check_layout(layout, p, 1000 + i as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn large_k_exercises_gemm_blocking() {
+        // K = 16*3*3 = 144; cols ~ 36: hits multiple GEMM tiles.
+        let p = ConvParams::new(2, 16, 8, 8, 8, 3, 3, 1).unwrap();
+        for layout in [Layout::Nchw, Layout::Nhwc] {
+            check_layout(layout, &p, 9);
+        }
+    }
+
+    #[test]
+    fn memory_footprint_exceeds_im2win() {
+        use crate::conv::im2win::im2win_dims;
+        use crate::metrics::MemoryScope;
+        // 3x3 stride-1: im2col should materialize ~Hf*Wf/Hf = Wf times more
+        // than im2win's window tensor.
+        let p = ConvParams::new(4, 8, 16, 16, 8, 3, 3, 1).unwrap();
+        let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
+
+        let scope = MemoryScope::start();
+        let _ = Im2colConv::new().run(&input, &filter, &p).unwrap();
+        let col_peak = scope.peak_extra_bytes();
+
+        let win_elems = im2win_dims(&p).count();
+        assert!(
+            col_peak > win_elems * 4,
+            "im2col peak {col_peak} should exceed im2win tensor {} bytes",
+            win_elems * 4
+        );
+    }
+
+    #[test]
+    fn stride_and_rect_filters() {
+        let p = ConvParams::with_strides(3, 2, 10, 9, 4, 2, 3, 2, 2).unwrap();
+        for layout in Layout::ALL {
+            check_layout(layout, &p, 31);
+        }
+    }
+}

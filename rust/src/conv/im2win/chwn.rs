@@ -1,0 +1,111 @@
+//! im2win convolution kernel, CHWN layout.
+//!
+//! The batch is the vector dimension: each flattened window position holds
+//! an `N`-wide lane row, and eight outputs (one per image) are produced per
+//! FMA with the packed filter value broadcast. Parallelism runs over
+//! `C_o×H_o`. As in the direct CHWN kernel, cache efficiency degrades for
+//! large `N` — the effect CHWN8 removes.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::{AlignedBuf, Tensor4};
+
+/// Output-width rows of the register tile.
+const MAX_BLOCK: usize = 3;
+/// Output-channel columns (MAX_BLOCK×CB ≤ 12 ymm accumulators).
+const CB: usize = 4;
+
+pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let n = p.n;
+    let w_block = w_block.clamp(1, MAX_BLOCK);
+
+    // Window tensor [Ci][Ho][Wi*Hf][N].
+    let t_w = n;
+    let t_h = p.w_in * hf * n;
+    let t_c = h_o * t_h;
+    // Output [Co][Ho][Wo][N].
+    let o_w = n;
+    let o_h = w_o * n;
+    let o_c = h_o * o_h;
+
+    let span = wf * hf;
+    let col = sw * hf; // window-position distance between output columns
+    let n_vec = n - n % LANES;
+
+    let x = win.data();
+    let f = fpack;
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    let co_main = co - co % CB;
+
+    parallel::global().parallel_for_coalesced(co.div_ceil(CB), h_o, |jb, m| {
+        let j0 = jb * CB;
+        let cols = if j0 < co_main { CB } else { co - co_main };
+        let mut wo = 0;
+        while wo < w_o {
+            let bl = w_block.min(w_o - wo);
+            let mut n0 = 0;
+            while n0 < n_vec {
+                let mut acc = [[F32x8::zero(); CB]; MAX_BLOCK];
+                for r in 0..ci {
+                    let base = r * t_c + m * t_h + wo * col * t_w + n0;
+                    let frow = r * span;
+                    for t in 0..span {
+                        // SAFETY: offsets bounded by loop ranges.
+                        unsafe {
+                            let mut iv = [F32x8::zero(); MAX_BLOCK];
+                            for (b, vv) in iv.iter_mut().enumerate().take(bl) {
+                                *vv = F32x8::load(x.as_ptr().add(base + (b * col + t) * t_w));
+                            }
+                            for cc in 0..cols {
+                                let fv = F32x8::splat(
+                                    *f.get_unchecked((j0 + cc) * ci * span + frow + t),
+                                );
+                                for b in 0..bl {
+                                    acc[b][cc] = iv[b].fma(fv, acc[b][cc]);
+                                }
+                            }
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    for cc in 0..cols {
+                        // SAFETY: disjoint (jb, m) regions per thread.
+                        unsafe {
+                            acc[b][cc]
+                                .store(optr.at((j0 + cc) * o_c + m * o_h + (wo + b) * o_w + n0))
+                        };
+                    }
+                }
+                n0 += LANES;
+            }
+            // Batch tail.
+            for nn in n_vec..n {
+                for cc in 0..cols {
+                    let fco = (j0 + cc) * ci * span;
+                    let mut acc = [0.0f32; MAX_BLOCK];
+                    for r in 0..ci {
+                        let fbase = fco + r * span;
+                        let base = r * t_c + m * t_h + wo * col * t_w + nn;
+                        for t in 0..span {
+                            let fv = f[fbase + t];
+                            for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                *a += x[base + (b * col + t) * t_w] * fv;
+                            }
+                        }
+                    }
+                    for (b, a) in acc.iter().enumerate().take(bl) {
+                        unsafe {
+                            *optr.at((j0 + cc) * o_c + m * o_h + (wo + b) * o_w + nn) = *a
+                        };
+                    }
+                }
+            }
+            wo += bl;
+        }
+    });
+}

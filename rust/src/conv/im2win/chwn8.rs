@@ -1,0 +1,125 @@
+//! im2win convolution kernel, CHWN8 layout.
+//!
+//! Combines the im2win window tensor with the paper's blocked batch layout:
+//! within one batch block the working set matches an `N = 8` problem (all
+//! of it streamed unit-stride), while the vector unit still runs full
+//! width. The paper measures 3.7–16× over plain CHWN from exactly this
+//! change. Parallelism runs over `(N/8)×H_o` blocks.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd::F32x8;
+use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Tensor4};
+
+/// Output-width rows of the register tile.
+const MAX_BLOCK: usize = 3;
+/// Output-channel columns (MAX_BLOCK×CB ≤ 12 ymm accumulators): per
+/// window position the tile issues MAX_BLOCK loads + CB broadcasts for
+/// MAX_BLOCK·CB FMAs — FMA-port bound instead of load-port bound.
+const CB: usize = 4;
+
+pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    const B: usize = CHWN8_BLOCK;
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let w_block = w_block.clamp(1, MAX_BLOCK);
+    let nblocks = p.n.div_ceil(B);
+
+    // Window tensor [N/8][Ci][Ho][Wi*Hf][8].
+    let t_w = B;
+    let t_h = p.w_in * hf * B;
+    let t_c = h_o * t_h;
+    let t_nb = ci * t_c;
+    // Output [N/8][Co][Ho][Wo][8].
+    let o_w = B;
+    let o_h = w_o * B;
+    let o_c = h_o * o_h;
+    let o_nb = co * o_c;
+
+    let span = wf * hf;
+    let col = sw * hf;
+
+    let x = win.data();
+    let f = fpack;
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    let co_main = co - co % CB;
+
+    parallel::global().parallel_for_coalesced(nblocks, h_o, |nb, m| {
+        let win_b = nb * t_nb + m * t_h;
+        let out_b = nb * o_nb + m * o_h;
+
+        // Main tiles: CB output channels × w_block output columns.
+        let mut j = 0;
+        while j < co_main {
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = w_block.min(w_o - wo);
+                let mut acc = [[F32x8::zero(); CB]; MAX_BLOCK];
+                for r in 0..ci {
+                    let base = win_b + r * t_c + wo * col * t_w;
+                    let frow = r * span;
+                    for t in 0..span {
+                        // SAFETY: offsets bounded by loop ranges; the final
+                        // batch block is fully allocated (zero padding).
+                        unsafe {
+                            let mut iv = [F32x8::zero(); MAX_BLOCK];
+                            for (b, vv) in iv.iter_mut().enumerate().take(bl) {
+                                *vv = F32x8::load(x.as_ptr().add(base + (b * col + t) * t_w));
+                            }
+                            for c in 0..CB {
+                                let fv = F32x8::splat(
+                                    *f.get_unchecked((j + c) * ci * span + frow + t),
+                                );
+                                for b in 0..bl {
+                                    acc[b][c] = iv[b].fma(fv, acc[b][c]);
+                                }
+                            }
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    for c in 0..CB {
+                        // SAFETY: disjoint (nb, m) regions per thread.
+                        unsafe {
+                            acc[b][c].store(optr.at(out_b + (j + c) * o_c + (wo + b) * o_w))
+                        };
+                    }
+                }
+                wo += bl;
+            }
+            j += CB;
+        }
+
+        // Channel tail.
+        for j in co_main..co {
+            let fco = j * ci * span;
+            let out_row = out_b + j * o_c;
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = w_block.min(w_o - wo);
+                let mut acc = [F32x8::zero(); MAX_BLOCK];
+                for r in 0..ci {
+                    let base = win_b + r * t_c + wo * col * t_w;
+                    let fbase = fco + r * span;
+                    for t in 0..span {
+                        // SAFETY: as above.
+                        unsafe {
+                            let fv = F32x8::splat(*f.get_unchecked(fbase + t));
+                            for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                let ip = base + (b * col + t) * t_w;
+                                *a = F32x8::load(x.as_ptr().add(ip)).fma(fv, *a);
+                            }
+                        }
+                    }
+                }
+                for (b, a) in acc.iter().enumerate().take(bl) {
+                    // SAFETY: disjoint (nb, m) regions per thread.
+                    unsafe { a.store(optr.at(out_row + (wo + b) * o_w)) };
+                }
+                wo += bl;
+            }
+        }
+    });
+}

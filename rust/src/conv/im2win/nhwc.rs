@@ -1,0 +1,143 @@
+//! im2win convolution kernel, NHWC layout — the paper's best performer.
+//!
+//! After the transform, the receptive field of output `(n, m, w_o, c_o)` is
+//! ONE contiguous span of `L = W_f·H_f·C_i` floats in the window tensor,
+//! and the packed filter for `c_o` is one contiguous span of the same
+//! length. The kernel computes a `W_{o,b} × C_{o,b}` register tile of
+//! outputs at once (Algorithm 3's `ymm` blocking, extended over the output
+//! channel):
+//!
+//! * per 8-lane chunk of the span: `W_{o,b}` input loads + `C_{o,b}`
+//!   filter loads feed `W_{o,b}·C_{o,b}` FMAs — at the default 3×4 tile
+//!   that is 12 FMAs per 7 loads, which saturates the two FMA ports
+//!   instead of the two load ports (the paper's "increase arithmetic
+//!   intensity" optimization, §III-D);
+//! * adjacent `w_o` windows overlap by `(W_f − s_w)·H_f·C_i` floats, so
+//!   the input loads hit L1;
+//! * one filter span (`L` floats per output channel) is streamed per tile
+//!   row and reused across the whole output row.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::{AlignedBuf, Tensor4};
+
+/// Max output-width block (accumulator rows).
+const MAX_WB: usize = 3;
+/// Output-channel block (accumulator columns): WB×CB ≤ 12 ymm registers.
+const CB: usize = 4;
+
+pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let wb = w_block.clamp(1, MAX_WB);
+
+    // Window tensor [N][Ho][Wi*Hf][Ci].
+    let t_h = p.w_in * hf * ci;
+    let t_n = h_o * t_h;
+    // Output [N][Ho][Wo][Co].
+    let o_w = co;
+    let o_h = w_o * co;
+    let o_n = h_o * o_h;
+
+    let span = wf * hf * ci; // L: contiguous window/filter length
+    let span_vec = span - span % LANES;
+    let col = sw * hf * ci; // distance between adjacent output columns
+
+    let x = win.data();
+    let f = fpack;
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    let co_main = co - co % CB;
+
+    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+        let row = n * t_n + m * t_h;
+        let out_nh = n * o_n + m * o_h;
+
+        // Main grid: CB output channels × wb output columns per tile.
+        let mut j = 0;
+        while j < co_main {
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = wb.min(w_o - wo);
+                let base = row + wo * col;
+                // acc[b][c] — bl×CB vector accumulators.
+                let mut acc = [[F32x8::zero(); CB]; MAX_WB];
+                let mut t = 0;
+                while t < span_vec {
+                    // SAFETY: t + 8 <= span; window spans and filter rows
+                    // are in bounds by construction.
+                    unsafe {
+                        let mut iv = [F32x8::zero(); MAX_WB];
+                        for (b, v) in iv.iter_mut().enumerate().take(bl) {
+                            *v = F32x8::load(x.as_ptr().add(base + b * col + t));
+                        }
+                        for c in 0..CB {
+                            let fv = F32x8::load(f.as_ptr().add((j + c) * span + t));
+                            for b in 0..bl {
+                                acc[b][c] = iv[b].fma(fv, acc[b][c]);
+                            }
+                        }
+                    }
+                    t += LANES;
+                }
+                // Span tail (scalar lanes).
+                let mut accs = [[0.0f32; CB]; MAX_WB];
+                for t in span_vec..span {
+                    for (b, arow) in accs.iter_mut().enumerate().take(bl) {
+                        let xv = x[base + b * col + t];
+                        for (c, a) in arow.iter_mut().enumerate() {
+                            *a += xv * f[(j + c) * span + t];
+                        }
+                    }
+                }
+                for b in 0..bl {
+                    for c in 0..CB {
+                        // SAFETY: disjoint (n, m) rows per thread.
+                        unsafe {
+                            *optr.at(out_nh + (wo + b) * o_w + j + c) =
+                                acc[b][c].hsum() + accs[b][c];
+                        }
+                    }
+                }
+                wo += bl;
+            }
+            j += CB;
+        }
+
+        // Channel tail: one output channel at a time, wb-wide blocks.
+        for j in co_main..co {
+            let fbase = j * span;
+            let mut wo = 0;
+            while wo < w_o {
+                let bl = wb.min(w_o - wo);
+                let base = row + wo * col;
+                let mut acc = [F32x8::zero(); MAX_WB];
+                let mut t = 0;
+                while t < span_vec {
+                    // SAFETY: as above.
+                    unsafe {
+                        let fv = F32x8::load(f.as_ptr().add(fbase + t));
+                        for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                            *a = F32x8::load(x.as_ptr().add(base + b * col + t)).fma(fv, *a);
+                        }
+                    }
+                    t += LANES;
+                }
+                let mut accs = [0.0f32; MAX_WB];
+                for t in span_vec..span {
+                    let fv = f[fbase + t];
+                    for (b, a) in accs.iter_mut().enumerate().take(bl) {
+                        *a += x[base + b * col + t] * fv;
+                    }
+                }
+                for b in 0..bl {
+                    // SAFETY: disjoint (n, m) rows per thread.
+                    unsafe { *optr.at(out_nh + (wo + b) * o_w + j) = acc[b].hsum() + accs[b] };
+                }
+                wo += bl;
+            }
+        }
+    });
+}

@@ -1,0 +1,227 @@
+//! The im2win tensor transformation (paper Algorithm 1, all four layouts).
+//!
+//! The input `(N, C_i, H_i, W_i)` is re-organized into a *window tensor*
+//! `(N, C_i, H_o, W_i·H_f)`: for each output row `m`, the `H_f` input rows
+//! it reads are re-stacked column-major — flattened position `k·H_f + u`
+//! holds input element `(m·s_h + u, k)`. Elements shared by vertically
+//! adjacent windows are stored once (unlike im2col), so the tensor is
+//! `≈ H_f/s_h ×` the input instead of `H_f·W_f ×` (paper Fig. 1/2 and the
+//! Fig. 5 memory results).
+//!
+//! After the transform, the dot-product window of output column `w_o` is
+//! the *contiguous* flattened range `[w_o·s_w·H_f, (w_o·s_w + W_f)·H_f)` —
+//! unit-stride access for the whole convolution window, which is what the
+//! conv kernels in this module exploit.
+
+use crate::conv::{ConvParams, SharedMut};
+use crate::parallel;
+use crate::tensor::{Dims, Layout, Tensor4, CHWN8_BLOCK};
+
+/// Logical dims of the im2win tensor for problem `p`.
+#[inline]
+pub fn im2win_dims(p: &ConvParams) -> Dims {
+    Dims::new(p.n, p.c_in, p.h_out(), p.w_in * p.h_f)
+}
+
+/// Transform `input` into its im2win window tensor (same layout).
+///
+/// Panics if `input.dims() != p.input_dims()`.
+pub fn im2win_transform(input: &Tensor4, p: &ConvParams) -> Tensor4 {
+    assert_eq!(input.dims(), p.input_dims(), "im2win_transform input dims");
+    let dims = im2win_dims(p);
+    let mut out = Tensor4::zeros(dims, input.layout());
+    match input.layout() {
+        Layout::Nhwc => nhwc(input, p, &mut out),
+        Layout::Nchw => nchw(input, p, &mut out),
+        Layout::Chwn => chwn(input, p, &mut out),
+        Layout::Chwn8 => chwn8(input, p, &mut out),
+    }
+    out
+}
+
+/// NHWC: windows carry whole `C_i` vectors; copy rows of `C_i` floats.
+fn nhwc(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
+    let (wi, h_o) = (p.w_in, p.h_out());
+    let i_w = ci;
+    let i_h = wi * ci;
+    let i_n = p.h_in * i_h;
+    let o_w = ci;
+    let o_h = wi * hf * ci;
+    let o_n = h_o * o_h;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+        let src_n = n * i_n;
+        let dst_m = n * o_n + m * o_h;
+        for k in 0..wi {
+            for u in 0..hf {
+                let src = src_n + (m * sh + u) * i_h + k * i_w;
+                let dst = dst_m + (k * hf + u) * o_w;
+                // SAFETY: disjoint (n, m) rows per thread; ranges in bounds.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(x.as_ptr().add(src), optr.at(dst), ci);
+                }
+            }
+        }
+    });
+}
+
+/// NCHW: per (n, c, m) the flattened row gathers strided elements.
+fn nchw(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
+    let (wi, h_o) = (p.w_in, p.h_out());
+    let i_h = wi;
+    let i_c = p.h_in * wi;
+    let i_n = ci * i_c;
+    let o_h = wi * hf;
+    let o_c = h_o * o_h;
+    let o_n = ci * o_c;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+        for c in 0..ci {
+            let src_c = n * i_n + c * i_c;
+            let dst = n * o_n + c * o_c + m * o_h;
+            for k in 0..wi {
+                for u in 0..hf {
+                    // SAFETY: disjoint (n, m) rows; in bounds.
+                    unsafe {
+                        *optr.at(dst + k * hf + u) = *x.get_unchecked(src_c + (m * sh + u) * i_h + k);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// CHWN: windows carry whole `N` vectors; copy rows of `N` floats.
+fn chwn(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
+    let (wi, h_o, n) = (p.w_in, p.h_out(), p.n);
+    let i_w = n;
+    let i_h = wi * n;
+    let i_c = p.h_in * i_h;
+    let o_w = n;
+    let o_h = wi * hf * n;
+    let o_c = h_o * o_h;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::global().parallel_for_coalesced(ci, h_o, |c, m| {
+        let src_c = c * i_c;
+        let dst_m = c * o_c + m * o_h;
+        for k in 0..wi {
+            for u in 0..hf {
+                let src = src_c + (m * sh + u) * i_h + k * i_w;
+                let dst = dst_m + (k * hf + u) * o_w;
+                // SAFETY: disjoint (c, m) rows per thread; in bounds.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(x.as_ptr().add(src), optr.at(dst), n);
+                }
+            }
+        }
+    });
+}
+
+/// CHWN8: per batch block, copy rows of 8 lanes.
+fn chwn8(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    const B: usize = CHWN8_BLOCK;
+    let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
+    let (wi, h_o) = (p.w_in, p.h_out());
+    let nb = p.n.div_ceil(B);
+    let i_h = wi * B;
+    let i_c = p.h_in * i_h;
+    let i_nb = ci * i_c;
+    let o_h = wi * hf * B;
+    let o_c = h_o * o_h;
+    let o_nb = ci * o_c;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::global().parallel_for_coalesced(nb, h_o, |b, m| {
+        for c in 0..ci {
+            let src_c = b * i_nb + c * i_c;
+            let dst_m = b * o_nb + c * o_c + m * o_h;
+            for k in 0..wi {
+                for u in 0..hf {
+                    let src = src_c + (m * sh + u) * i_h + k * B;
+                    let dst = dst_m + (k * hf + u) * B;
+                    // SAFETY: disjoint (b, m) rows per thread; in bounds.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(x.as_ptr().add(src), optr.at(dst), B);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The defining equation of Algorithm 1, checked on every layout:
+    /// `Î(n, c, m, k·H_f + u) == I(n, c, m·s_h + u, k)`.
+    #[test]
+    fn transform_equation_holds_all_layouts() {
+        let p = ConvParams::with_strides(9, 3, 8, 6, 4, 3, 2, 2, 1).unwrap();
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 11);
+            let t = im2win_transform(&input, &p);
+            assert_eq!(t.dims(), im2win_dims(&p), "{layout}");
+            assert_eq!(t.layout(), layout);
+            for n in 0..p.n {
+                for c in 0..p.c_in {
+                    for m in 0..p.h_out() {
+                        for k in 0..p.w_in {
+                            for u in 0..p.h_f {
+                                assert_eq!(
+                                    t.get(n, c, m, k * p.h_f + u),
+                                    input.get(n, c, m * p.stride_h + u, k),
+                                    "{layout} n={n} c={c} m={m} k={k} u={u}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The window of output column `w_o` is contiguous in the flattened
+    /// dimension and equals the direct window elements.
+    #[test]
+    fn window_slices_are_contiguous() {
+        let p = ConvParams::new(1, 1, 6, 6, 1, 3, 3, 1).unwrap();
+        let input = Tensor4::random(p.input_dims(), Layout::Nchw, 3);
+        let t = im2win_transform(&input, &p);
+        let hf = p.h_f;
+        for m in 0..p.h_out() {
+            for wo in 0..p.w_out() {
+                for v in 0..p.w_f {
+                    for u in 0..hf {
+                        let flat = (wo * p.stride_w + v) * hf + u;
+                        assert_eq!(t.get(0, 0, m, flat), input.get(0, 0, m + u, wo + v));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Memory ratio vs input ≈ H_f for stride 1 (paper's memory argument).
+    #[test]
+    fn size_grows_by_filter_height() {
+        let p = ConvParams::new(1, 16, 32, 32, 16, 3, 3, 1).unwrap();
+        let d = im2win_dims(&p);
+        let ratio = d.count() as f64 / p.input_dims().count() as f64;
+        assert!(ratio < p.h_f as f64, "ratio={ratio}");
+        assert!(ratio > 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "input dims")]
+    fn wrong_dims_panics() {
+        let p = ConvParams::new(1, 1, 5, 5, 1, 3, 3, 1).unwrap();
+        let bad = Tensor4::zeros(Dims::new(1, 1, 4, 5), Layout::Nchw);
+        im2win_transform(&bad, &p);
+    }
+}

@@ -1,0 +1,184 @@
+//! MEC — Memory-Efficient Convolution (Cho & Brand, ICML 2017).
+//!
+//! The paper's related-work §II-C singles out MEC as the im2col variant
+//! that "compresses the matrix layout while still enabling BLAS"; it is
+//! the natural third point between im2col and im2win on the memory axis,
+//! so we implement it as an additional baseline:
+//!
+//! * the input is lowered **along the width only**: the MEC matrix holds
+//!   one `H_i×(W_f·C_i)` slab per output column,
+//!   `L[n][w_o][h_i][v·C_i + c] = I[n][h_i][w_o·s_w + v][c]` — horizontally
+//!   overlapping rows are duplicated, vertically overlapping ones are not;
+//! * each output row is then one GEMM: rows `h_o·s_h … h_o·s_h+H_f` of
+//!   every slab are contiguous, so
+//!   `O[n][h_o] = L[n][:, h_o·s_h·W_f·C_i ..] · F̂` with
+//!   `F̂ = [H_f·W_f·C_i][C_o]`;
+//! * memory: `N·W_o·H_i·W_f·C_i` floats — `≈ W_f/s_w×` the input, vs
+//!   `H_f·W_f×` for im2col and `≈ H_f/s_h×` for im2win.
+//!
+//! NHWC only (MEC needs the channel innermost for its slabs to be
+//! contiguous; this is also the layout the MEC paper effectively uses).
+
+use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::error::{Error, Result};
+use crate::gemm::sgemm;
+use crate::tensor::{AlignedBuf, Layout, Tensor4};
+
+/// Memory-efficient convolution (im2col compressed along the width).
+#[derive(Debug, Clone, Default)]
+pub struct MecConv;
+
+impl MecConv {
+    /// Construct the MEC baseline.
+    pub fn new() -> Self {
+        MecConv
+    }
+}
+
+/// Number of f32 elements in the MEC lowered matrix for problem `p`.
+pub fn mec_matrix_len(p: &ConvParams) -> usize {
+    p.n * p.w_out() * p.h_in * p.w_f * p.c_in
+}
+
+/// Build the MEC lowering `L[n][w_o][h_i][v·C_i + c]`.
+fn lower(input: &Tensor4, p: &ConvParams) -> AlignedBuf {
+    let (ci, hi, wo) = (p.c_in, p.h_in, p.w_out());
+    let chunk = p.w_f * ci;
+    let i_h = p.w_in * ci;
+    let img = hi * i_h;
+    let x = input.data();
+    let mut mat = AlignedBuf::zeroed(mec_matrix_len(p));
+    let slab = hi * chunk;
+    for n in 0..p.n {
+        let xn = &x[n * img..(n + 1) * img];
+        let mn = &mut mat[n * wo * slab..(n + 1) * wo * slab];
+        for w in 0..wo {
+            let dst = &mut mn[w * slab..(w + 1) * slab];
+            for h in 0..hi {
+                // One contiguous copy of W_f·C_i floats per input row.
+                let src = h * i_h + w * p.stride_w * ci;
+                dst[h * chunk..(h + 1) * chunk].copy_from_slice(&xn[src..src + chunk]);
+            }
+        }
+    }
+    mat
+}
+
+impl ConvAlgorithm for MecConv {
+    fn name(&self) -> &'static str {
+        "mec"
+    }
+
+    fn supports(&self, layout: Layout) -> bool {
+        layout == Layout::Nhwc
+    }
+
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        if input.layout() != Layout::Nhwc || filter.layout() != Layout::Nhwc {
+            return Err(Error::UnsupportedLayout(
+                "MEC convolution requires the NHWC layout".into(),
+            ));
+        }
+        let (h_o, w_o, co) = (p.h_out(), p.w_out(), p.c_out);
+        let k = p.h_f * p.w_f * p.c_in;
+        let chunk = p.w_f * p.c_in;
+        let slab = p.h_in * chunk;
+
+        let mat = lower(input, p);
+        // F̂[K][C_o] from the NHWC filter [C_o][K].
+        let f = filter.data();
+        let mut ft = AlignedBuf::zeroed(k * co);
+        for j in 0..co {
+            for t in 0..k {
+                ft[t * co + j] = f[j * k + t];
+            }
+        }
+
+        out.data_mut().fill(0.0);
+        let o_h = w_o * co;
+        let o_n = h_o * o_h;
+        for n in 0..p.n {
+            let mslab = &mat[n * w_o * slab..(n + 1) * w_o * slab];
+            for ho in 0..h_o {
+                // A = rows [Wo][K] at vertical offset ho·s_h, lda = slab.
+                let a = &mslab[ho * p.stride_h * chunk..];
+                sgemm(
+                    w_o,
+                    co,
+                    k,
+                    a,
+                    slab,
+                    &ft,
+                    co,
+                    &mut out.data_mut()[n * o_n + ho * o_h..],
+                    co,
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference_conv;
+    use crate::testutil::random_problems;
+
+    #[test]
+    fn matches_reference_on_random_geometries() {
+        for (i, p) in random_problems(12, 131).iter().enumerate() {
+            let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 3000 + i as u64);
+            let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 3001 + i as u64);
+            let expect = reference_conv(&input, &filter, p, Layout::Nhwc);
+            let got = MecConv::new().run(&input, &filter, p).unwrap();
+            assert!(
+                expect.allclose(&got, 1e-4, 1e-4),
+                "{p}: max diff {}",
+                expect.max_abs_diff(&got)
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_non_nhwc() {
+        let p = ConvParams::new(1, 2, 5, 5, 2, 3, 3, 1).unwrap();
+        let x = Tensor4::zeros(p.input_dims(), Layout::Nchw);
+        let f = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
+        assert!(MecConv::new().run(&x, &f, &p).is_err());
+        assert!(!MecConv::new().supports(Layout::Chwn8));
+        assert!(MecConv::new().supports(Layout::Nhwc));
+    }
+
+    /// Memory sits between im2win's window tensor and im2col's matrix
+    /// (the MEC paper's selling point, quoted in the paper's §II-C).
+    #[test]
+    fn memory_between_im2win_and_im2col() {
+        use crate::conv::im2win::im2win_dims;
+        // Rectangular filter: im2win stacks along H (×H_f=3), MEC lowers
+        // along W (×W_f=7). A square case makes them equal by symmetry.
+        let p = ConvParams::with_strides(2, 8, 40, 24, 8, 3, 7, 1, 1).unwrap();
+        let mec = mec_matrix_len(&p);
+        let win = im2win_dims(&p).count();
+        let col = p.n * p.h_out() * p.w_out() * p.h_f * p.w_f * p.c_in;
+        assert!(win < mec, "im2win {win} !< mec {mec}");
+        assert!(mec < col, "mec {mec} !< im2col {col}");
+    }
+
+    #[test]
+    fn strided_geometry() {
+        let p = ConvParams::with_strides(3, 4, 13, 11, 5, 3, 2, 2, 3).unwrap();
+        let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 9);
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 10);
+        let expect = reference_conv(&input, &filter, &p, Layout::Nhwc);
+        let got = MecConv::new().run(&input, &filter, &p).unwrap();
+        assert!(expect.allclose(&got, 1e-4, 1e-4));
+    }
+}

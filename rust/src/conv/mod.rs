@@ -1,0 +1,284 @@
+//! Convolution algorithms.
+//!
+//! Three families, matching the paper's comparison:
+//!
+//! * [`direct`] — seven nested loops + AXPY, no tensor transformation,
+//!   with the paper's optimization set applied per layout;
+//! * [`im2win`] — the paper's contribution: the input is re-organized once
+//!   into a *window tensor* ([`im2win::im2win_transform`]) giving the dot
+//!   product windows unit-stride, cache-friendly access;
+//! * [`im2col`] — the classic lowering to GEMM (the PyTorch/MKL baseline).
+//!
+//! All algorithms implement [`ConvAlgorithm`] and accept any tensor
+//! [`Layout`]; each dispatches to a layout-specialized kernel following the
+//! loop-reordering rules of paper §III-C.
+
+pub mod direct;
+pub mod im2col;
+pub mod im2win;
+pub mod mec;
+mod naive;
+mod params;
+
+pub use naive::reference_conv;
+pub use params::ConvParams;
+
+use crate::error::{Error, Result};
+use crate::tensor::{Layout, Tensor4};
+
+/// A convolution algorithm operating on a specific tensor layout family.
+pub trait ConvAlgorithm: Send + Sync {
+    /// Short identifier used in reports (`"direct"`, `"im2win"`, `"im2col"`).
+    fn name(&self) -> &'static str;
+
+    /// Whether the algorithm has a kernel for `layout`.
+    fn supports(&self, layout: Layout) -> bool;
+
+    /// Run the convolution, writing into a caller-provided output tensor
+    /// (its dims/layout must equal `p.output_dims()` / `input.layout()`).
+    ///
+    /// The output is *overwritten* (not accumulated into).
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+    ) -> Result<()>;
+
+    /// Convenience wrapper allocating the output tensor.
+    fn run(&self, input: &Tensor4, filter: &Tensor4, p: &ConvParams) -> Result<Tensor4> {
+        let mut out = Tensor4::zeros(p.output_dims(), input.layout());
+        self.run_into(input, filter, p, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Validate that `input`/`filter`/`out` agree with `p` and share a layout.
+pub(crate) fn check_geometry(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &Tensor4,
+) -> Result<()> {
+    if input.dims() != p.input_dims() {
+        return Err(Error::ShapeMismatch(format!(
+            "input dims {} != expected {}",
+            input.dims(),
+            p.input_dims()
+        )));
+    }
+    if filter.dims() != p.filter_dims() {
+        return Err(Error::ShapeMismatch(format!(
+            "filter dims {} != expected {}",
+            filter.dims(),
+            p.filter_dims()
+        )));
+    }
+    if out.dims() != p.output_dims() {
+        return Err(Error::ShapeMismatch(format!(
+            "output dims {} != expected {}",
+            out.dims(),
+            p.output_dims()
+        )));
+    }
+    if out.layout() != input.layout() {
+        return Err(Error::UnsupportedLayout(format!(
+            "output layout {} != input layout {}",
+            out.layout(),
+            input.layout()
+        )));
+    }
+    Ok(())
+}
+
+/// A `Send + Sync` raw mutable pointer for the parallel kernels.
+///
+/// The convolution kernels partition the output tensor into disjoint
+/// regions per parallel iteration (by `(n, h_o)` or `(c_o, h_o)`), so
+/// concurrent writes never alias; this wrapper lets those kernels share the
+/// base pointer across the pool.
+#[derive(Clone, Copy)]
+pub(crate) struct SharedMut(*mut f32);
+
+// SAFETY: callers guarantee disjoint write regions per thread.
+unsafe impl Send for SharedMut {}
+unsafe impl Sync for SharedMut {}
+
+impl SharedMut {
+    pub(crate) fn new(p: *mut f32) -> Self {
+        SharedMut(p)
+    }
+
+    /// Pointer at `offset` elements from the base.
+    ///
+    /// # Safety
+    /// `offset` must be in bounds of the original allocation and the caller
+    /// must uphold the disjoint-writes contract.
+    #[inline(always)]
+    pub(crate) unsafe fn at(self, offset: usize) -> *mut f32 {
+        self.0.add(offset)
+    }
+}
+
+/// Algorithm selector for configs / CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Optimized direct convolution.
+    Direct,
+    /// Optimized im2win convolution (the paper's method).
+    Im2win,
+    /// im2col + blocked GEMM baseline.
+    Im2col,
+    /// MEC (Cho & Brand 2017): width-only lowering + per-row GEMMs
+    /// (NHWC only) — the memory-efficient baseline of the paper's §II-C.
+    Mec,
+    /// Unoptimized seven-loop reference (tests, ablations).
+    Naive,
+}
+
+impl AlgoKind {
+    /// All benchmarked algorithms (naive excluded).
+    pub const BENCHED: [AlgoKind; 3] = [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col];
+
+    /// Parse from a CLI/config name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "direct" => Some(AlgoKind::Direct),
+            "im2win" => Some(AlgoKind::Im2win),
+            "im2col" => Some(AlgoKind::Im2col),
+            "mec" => Some(AlgoKind::Mec),
+            "naive" => Some(AlgoKind::Naive),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the algorithm.
+    pub fn build(&self) -> Box<dyn ConvAlgorithm> {
+        match self {
+            AlgoKind::Direct => Box::new(direct::DirectConv::new()),
+            AlgoKind::Im2win => Box::new(im2win::Im2winConv::new()),
+            AlgoKind::Im2col => Box::new(im2col::Im2colConv::new()),
+            AlgoKind::Mec => Box::new(mec::MecConv::new()),
+            AlgoKind::Naive => Box::new(naive::NaiveConv),
+        }
+    }
+
+    /// Report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Direct => "direct",
+            AlgoKind::Im2win => "im2win",
+            AlgoKind::Im2col => "im2col",
+            AlgoKind::Mec => "mec",
+            AlgoKind::Naive => "naive",
+        }
+    }
+}
+
+impl std::fmt::Display for AlgoKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A configured convolution layer: algorithm + layout + geometry.
+///
+/// This is the object the [`crate::model`] runner and examples hold; it owns
+/// the filter (in the layer's layout) and exposes a `forward`.
+pub struct Conv2d {
+    /// Problem geometry (batch-size agnostic; `forward` rebatches).
+    pub params: ConvParams,
+    algo: Box<dyn ConvAlgorithm>,
+    layout: Layout,
+    filter: Tensor4,
+}
+
+impl Conv2d {
+    /// Build a layer from geometry, an algorithm choice, a layout and a
+    /// filter tensor (any layout; converted to `layout` internally).
+    pub fn new(params: ConvParams, kind: AlgoKind, layout: Layout, filter: &Tensor4) -> Result<Self> {
+        if filter.dims() != params.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                params.filter_dims()
+            )));
+        }
+        let algo = kind.build();
+        if !algo.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!("{kind} does not support {layout}")));
+        }
+        Ok(Conv2d { params, algo, layout, filter: filter.to_layout(layout) })
+    }
+
+    /// The layer's layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Run the layer on `input` (converted to the layer layout if needed);
+    /// the batch size is taken from `input`.
+    pub fn forward(&self, input: &Tensor4) -> Result<Tensor4> {
+        let p = self.params.with_batch(input.dims().n);
+        if input.dims() != p.input_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "input dims {} != expected {}",
+                input.dims(),
+                p.input_dims()
+            )));
+        }
+        let owned;
+        let x = if input.layout() == self.layout {
+            input
+        } else {
+            owned = input.to_layout(self.layout);
+            &owned
+        };
+        self.algo.run(x, &self.filter, &p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dims;
+
+    #[test]
+    fn algo_kind_parse_round_trip() {
+        for k in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Naive] {
+            assert_eq!(AlgoKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AlgoKind::parse("winograd"), None);
+    }
+
+    #[test]
+    fn check_geometry_catches_mismatches() {
+        let p = ConvParams::new(1, 2, 4, 4, 3, 3, 3, 1).unwrap();
+        let input = Tensor4::zeros(p.input_dims(), Layout::Nchw);
+        let filter = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
+        let out = Tensor4::zeros(p.output_dims(), Layout::Nchw);
+        assert!(check_geometry(&input, &filter, &p, &out).is_ok());
+
+        let bad_in = Tensor4::zeros(Dims::new(1, 2, 5, 4), Layout::Nchw);
+        assert!(check_geometry(&bad_in, &filter, &p, &out).is_err());
+
+        let bad_out = Tensor4::zeros(p.output_dims(), Layout::Nhwc);
+        assert!(check_geometry(&input, &filter, &p, &bad_out).is_err());
+    }
+
+    #[test]
+    fn conv2d_forward_any_input_layout() {
+        let p = ConvParams::new(2, 3, 6, 6, 4, 3, 3, 1).unwrap();
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 1);
+        let layer = Conv2d::new(p, AlgoKind::Naive, Layout::Nhwc, &filter).unwrap();
+        let x_nchw = Tensor4::random(p.input_dims(), Layout::Nchw, 2);
+        let y = layer.forward(&x_nchw).unwrap();
+        assert_eq!(y.dims(), p.output_dims());
+        assert_eq!(y.layout(), Layout::Nhwc);
+        // Same logical input via a different layout gives same logical output.
+        let x_chwn = x_nchw.to_layout(Layout::Chwn);
+        let y2 = layer.forward(&x_chwn).unwrap();
+        assert!(y.allclose(&y2, 1e-5, 1e-5));
+    }
+}

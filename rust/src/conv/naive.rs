@@ -1,0 +1,128 @@
+//! Unoptimized reference convolution — the correctness oracle.
+//!
+//! Seven nested loops over logical coordinates with layout-agnostic
+//! accessors (paper Algorithm 2's structure, minus every optimization).
+//! Every optimized kernel in [`super::direct`], [`super::im2win`] and
+//! [`super::im2col`] is tested against this, and this in turn is validated
+//! against the JAX/XLA oracle through [`crate::runtime`].
+
+use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::error::Result;
+use crate::tensor::{Layout, Tensor4};
+
+/// Compute the reference convolution into a fresh tensor in `layout`.
+pub fn reference_conv(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    layout: Layout,
+) -> Tensor4 {
+    let mut out = Tensor4::zeros(p.output_dims(), layout);
+    let x = if input.layout() == layout { input.clone() } else { input.to_layout(layout) };
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    for n in 0..p.n {
+        for co in 0..p.c_out {
+            for ho in 0..h_o {
+                for wo in 0..w_o {
+                    let mut acc = 0.0f32;
+                    for ci in 0..p.c_in {
+                        for u in 0..p.h_f {
+                            for v in 0..p.w_f {
+                                acc += x.get(n, ci, ho * p.stride_h + u, wo * p.stride_w + v)
+                                    * filter.get(co, ci, u, v);
+                            }
+                        }
+                    }
+                    out.set(n, co, ho, wo, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The oracle wrapped as a [`ConvAlgorithm`] (used for ablations: this is
+/// the "no optimizations" data point).
+pub struct NaiveConv;
+
+impl ConvAlgorithm for NaiveConv {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn supports(&self, _layout: Layout) -> bool {
+        true
+    }
+
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        let r = reference_conv(input, filter, p, input.layout());
+        out.data_mut()[..r.data().len()].copy_from_slice(r.data());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dims;
+
+    /// Hand-computed 1x1x3x3 ⊛ 1x1x2x2 case.
+    #[test]
+    fn tiny_known_answer() {
+        let p = ConvParams::new(1, 1, 3, 3, 1, 2, 2, 1).unwrap();
+        let input = Tensor4::from_logical(
+            p.input_dims(),
+            Layout::Nchw,
+            &[1., 2., 3., 4., 5., 6., 7., 8., 9.],
+        );
+        let filter = Tensor4::from_logical(p.filter_dims(), Layout::Nchw, &[1., 0., 0., 1.]);
+        let out = reference_conv(&input, &filter, &p, Layout::Nchw);
+        // windows: [1,2;4,5]->6, [2,3;5,6]->8, [4,5;7,8]->12, [5,6;8,9]->14
+        assert_eq!(out.logical_vec(), vec![6., 8., 12., 14.]);
+    }
+
+    /// Multi-channel accumulation: all-ones tensors count window elements.
+    #[test]
+    fn ones_count_macs() {
+        let p = ConvParams::new(2, 3, 5, 4, 2, 2, 3, 1).unwrap();
+        let input = Tensor4::from_fn(p.input_dims(), Layout::Nhwc, |_, _, _, _| 1.0);
+        let filter = Tensor4::from_fn(p.filter_dims(), Layout::Nhwc, |_, _, _, _| 1.0);
+        let out = reference_conv(&input, &filter, &p, Layout::Nhwc);
+        let expect = (p.c_in * p.h_f * p.w_f) as f32;
+        assert!(out.logical_vec().iter().all(|&x| x == expect));
+        assert_eq!(out.dims(), Dims::new(2, 2, 4, 2));
+    }
+
+    /// Result is independent of the computation layout.
+    #[test]
+    fn layout_invariance() {
+        let p = ConvParams::new(3, 2, 6, 5, 4, 3, 2, 2).unwrap();
+        let input = Tensor4::random(p.input_dims(), Layout::Nchw, 9);
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 10);
+        let base = reference_conv(&input, &filter, &p, Layout::Nchw);
+        for layout in Layout::ALL {
+            let x = input.to_layout(layout);
+            let f = filter.to_layout(layout);
+            let out = reference_conv(&x, &f, &p, layout);
+            assert!(base.allclose(&out, 1e-5, 1e-6), "{layout}");
+        }
+    }
+
+    /// Stride-2 geometry picks the right window origins.
+    #[test]
+    fn stride_two() {
+        let p = ConvParams::new(1, 1, 5, 5, 1, 1, 1, 2).unwrap();
+        let input =
+            Tensor4::from_fn(p.input_dims(), Layout::Nchw, |_, _, h, w| (h * 5 + w) as f32);
+        let filter = Tensor4::from_logical(p.filter_dims(), Layout::Nchw, &[1.0]);
+        let out = reference_conv(&input, &filter, &p, Layout::Nchw);
+        assert_eq!(out.logical_vec(), vec![0., 2., 4., 10., 12., 14., 20., 22., 24.]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Convolution problem geometry.
+
+use crate::error::{Error, Result};
+use crate::tensor::Dims;
+
+/// Geometry of a 2-D convolution (paper §II-A).
+///
+/// The paper's benchmark suite uses *valid* (unpadded) convolutions with
+/// square filters and equal strides; this type supports rectangular filters
+/// and per-axis strides, with no padding — matching the paper's Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvParams {
+    /// Batch size `N_i`.
+    pub n: usize,
+    /// Input channels `C_i`.
+    pub c_in: usize,
+    /// Input height `H_i`.
+    pub h_in: usize,
+    /// Input width `W_i`.
+    pub w_in: usize,
+    /// Output channels `C_o`.
+    pub c_out: usize,
+    /// Filter height `H_f`.
+    pub h_f: usize,
+    /// Filter width `W_f`.
+    pub w_f: usize,
+    /// Vertical stride `s_h`.
+    pub stride_h: usize,
+    /// Horizontal stride `s_w`.
+    pub stride_w: usize,
+}
+
+impl ConvParams {
+    /// Square-filter, equal-stride constructor (all of Table I).
+    pub fn new(
+        n: usize,
+        c_in: usize,
+        h_in: usize,
+        w_in: usize,
+        c_out: usize,
+        h_f: usize,
+        w_f: usize,
+        stride: usize,
+    ) -> Result<Self> {
+        Self::with_strides(n, c_in, h_in, w_in, c_out, h_f, w_f, stride, stride)
+    }
+
+    /// Full constructor with independent strides.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_strides(
+        n: usize,
+        c_in: usize,
+        h_in: usize,
+        w_in: usize,
+        c_out: usize,
+        h_f: usize,
+        w_f: usize,
+        stride_h: usize,
+        stride_w: usize,
+    ) -> Result<Self> {
+        let p = ConvParams { n, c_in, h_in, w_in, c_out, h_f, w_f, stride_h, stride_w };
+        p.validate()?;
+        Ok(p)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.c_in == 0 || self.c_out == 0 {
+            return Err(Error::InvalidConv("zero-sized batch or channel".into()));
+        }
+        if self.stride_h == 0 || self.stride_w == 0 {
+            return Err(Error::InvalidConv("stride must be >= 1".into()));
+        }
+        if self.h_f == 0 || self.w_f == 0 {
+            return Err(Error::InvalidConv("zero-sized filter".into()));
+        }
+        if self.h_f > self.h_in || self.w_f > self.w_in {
+            return Err(Error::InvalidConv(format!(
+                "filter {}x{} larger than input {}x{}",
+                self.h_f, self.w_f, self.h_in, self.w_in
+            )));
+        }
+        Ok(())
+    }
+
+    /// Output height `H_o = (H_i − H_f)/s_h + 1`.
+    #[inline]
+    pub fn h_out(&self) -> usize {
+        (self.h_in - self.h_f) / self.stride_h + 1
+    }
+
+    /// Output width `W_o = (W_i − W_f)/s_w + 1`.
+    #[inline]
+    pub fn w_out(&self) -> usize {
+        (self.w_in - self.w_f) / self.stride_w + 1
+    }
+
+    /// Logical dims of the input tensor `(N, C_i, H_i, W_i)`.
+    #[inline]
+    pub fn input_dims(&self) -> Dims {
+        Dims::new(self.n, self.c_in, self.h_in, self.w_in)
+    }
+
+    /// Logical dims of the filter tensor `(C_o, C_i, H_f, W_f)` — the
+    /// filter's "batch" axis is the output channel.
+    #[inline]
+    pub fn filter_dims(&self) -> Dims {
+        Dims::new(self.c_out, self.c_in, self.h_f, self.w_f)
+    }
+
+    /// Logical dims of the output tensor `(N, C_o, H_o, W_o)`.
+    #[inline]
+    pub fn output_dims(&self) -> Dims {
+        Dims::new(self.n, self.c_out, self.h_out(), self.w_out())
+    }
+
+    /// Multiply–add FLOP count (2 ops per MAC), the numerator of the
+    /// paper's TFLOPS metric.
+    #[inline]
+    pub fn flops(&self) -> u64 {
+        2 * self.n as u64
+            * self.c_out as u64
+            * self.h_out() as u64
+            * self.w_out() as u64
+            * self.c_in as u64
+            * self.h_f as u64
+            * self.w_f as u64
+    }
+
+    /// Arithmetic intensity in FLOPs per byte touched (roofline x-axis):
+    /// FLOPs / (input + filter + output bytes).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = (4 * (self.input_dims().count()
+            + self.filter_dims().count()
+            + self.output_dims().count())) as f64;
+        self.flops() as f64 / bytes
+    }
+
+    /// Re-batched copy of these params (batch-scaling sweeps, Figs. 6–13).
+    pub fn with_batch(&self, n: usize) -> Self {
+        ConvParams { n, ..*self }
+    }
+}
+
+impl std::fmt::Display for ConvParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "N{} {}x{}x{} -> {} f{}x{} s{}/{}",
+            self.n, self.c_in, self.h_in, self.w_in, self.c_out, self.h_f, self.w_f,
+            self.stride_h, self.stride_w
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1_geometry_matches_table1() {
+        // conv1: 3x227x227, 96 filters 11x11 stride 4 -> 96x55x55
+        let p = ConvParams::new(128, 3, 227, 227, 96, 11, 11, 4).unwrap();
+        assert_eq!(p.h_out(), 55);
+        assert_eq!(p.w_out(), 55);
+        assert_eq!(p.output_dims(), Dims::new(128, 96, 55, 55));
+    }
+
+    #[test]
+    fn conv12_geometry_matches_table1() {
+        // conv12: 512x7x7, 512 filters 3x3 stride 1 -> 512x5x5
+        let p = ConvParams::new(1, 512, 7, 7, 512, 3, 3, 1).unwrap();
+        assert_eq!((p.h_out(), p.w_out()), (5, 5));
+    }
+
+    #[test]
+    fn flops_formula() {
+        let p = ConvParams::new(2, 3, 5, 5, 4, 3, 3, 1).unwrap();
+        // 2*N*Co*Ho*Wo*Ci*Hf*Wf = 2*2*4*3*3*3*3*3
+        assert_eq!(p.flops(), 2 * 2 * 4 * 3 * 3 * 3 * 3 * 3);
+    }
+
+    #[test]
+    fn invalid_geometries_rejected() {
+        assert!(ConvParams::new(0, 3, 5, 5, 4, 3, 3, 1).is_err());
+        assert!(ConvParams::new(1, 3, 5, 5, 4, 6, 3, 1).is_err()); // filter taller than input
+        assert!(ConvParams::new(1, 3, 5, 5, 4, 3, 3, 0).is_err()); // zero stride
+        assert!(ConvParams::new(1, 3, 5, 5, 4, 0, 3, 1).is_err()); // empty filter
+    }
+
+    #[test]
+    fn with_batch_rescales() {
+        let p = ConvParams::new(32, 3, 8, 8, 4, 3, 3, 1).unwrap();
+        let q = p.with_batch(512);
+        assert_eq!(q.n, 512);
+        assert_eq!(q.c_in, p.c_in);
+    }
+
+    #[test]
+    fn arithmetic_intensity_positive() {
+        let p = ConvParams::new(8, 64, 28, 28, 128, 3, 3, 1).unwrap();
+        assert!(p.arithmetic_intensity() > 1.0);
+    }
+}

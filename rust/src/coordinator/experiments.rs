@@ -1,0 +1,288 @@
+//! Experiment runners — one per paper artifact (see DESIGN.md §4).
+//!
+//! Every runner produces [`Record`]s; the CLI and the bench binaries print
+//! them and write CSV/JSON under the configured report directory.
+
+use super::layers::{select, BenchLayer};
+use super::report::Record;
+use crate::bench_harness::measure;
+use crate::config::{Cell, ExperimentConfig, Scale};
+use crate::conv::{reference_conv, AlgoKind, ConvParams};
+use crate::error::{Error, Result};
+use crate::metrics::MemoryScope;
+use crate::tensor::{Layout, Tensor4};
+
+/// Measure one (layer × algo × layout) cell: paper methodology — warmup,
+/// `repeats` timed full runs (including any transform), best time kept.
+pub fn run_cell(
+    experiment: &str,
+    layer: &BenchLayer,
+    cell: Cell,
+    batch: usize,
+    spatial_div: usize,
+    repeats: usize,
+) -> Result<Record> {
+    let p = layer.scaled_params(batch, spatial_div);
+    let algo = cell.algo.build();
+    let input = Tensor4::random(p.input_dims(), cell.layout, 1);
+    let filter = Tensor4::random(p.filter_dims(), cell.layout, 2);
+    let mut out = Tensor4::zeros(p.output_dims(), cell.layout);
+
+    let bench = measure(repeats, || {
+        algo.run_into(&input, &filter, &p, &mut out).expect("benchmark kernel failed");
+    });
+    let mem = measure_memory(layer, cell, batch, spatial_div)?;
+
+    Ok(Record {
+        experiment: experiment.into(),
+        layer: layer.name.into(),
+        algo: cell.algo.name().into(),
+        layout: cell.layout.to_string(),
+        batch,
+        best_s: bench.best_s,
+        median_s: bench.median_s,
+        flops: p.flops(),
+        mem_bytes: mem,
+    })
+}
+
+/// Peak tensor bytes for one full convolution including its inputs —
+/// the quantity Fig. 5 plots (inputs + output + any transform buffers).
+pub fn measure_memory(
+    layer: &BenchLayer,
+    cell: Cell,
+    batch: usize,
+    spatial_div: usize,
+) -> Result<usize> {
+    let p = layer.scaled_params(batch, spatial_div);
+    let algo = cell.algo.build();
+    let scope = MemoryScope::start();
+    let input = Tensor4::random(p.input_dims(), cell.layout, 1);
+    let filter = Tensor4::random(p.filter_dims(), cell.layout, 2);
+    let out = algo.run(&input, &filter, &p)?;
+    let peak = scope.peak_extra_bytes();
+    drop(out);
+    Ok(peak)
+}
+
+/// Fig. 4: TFLOPS of every configured cell on every configured layer.
+pub fn fig4(cfg: &ExperimentConfig) -> Result<Vec<Record>> {
+    let mut records = Vec::new();
+    for layer in select(&cfg.layers) {
+        for &cell in &cfg.cells {
+            records.push(run_cell(
+                "fig4",
+                layer,
+                cell,
+                cfg.scale.batch(),
+                cfg.scale.spatial_div(),
+                cfg.scale.repeats(),
+            )?);
+        }
+    }
+    Ok(records)
+}
+
+/// Fig. 5: memory usage of every configured cell (single run each).
+pub fn fig5(cfg: &ExperimentConfig) -> Result<Vec<Record>> {
+    let mut records = Vec::new();
+    for layer in select(&cfg.layers) {
+        for &cell in &cfg.cells {
+            let p = layer.scaled_params(cfg.scale.batch(), cfg.scale.spatial_div());
+            let mem = measure_memory(layer, cell, cfg.scale.batch(), cfg.scale.spatial_div())?;
+            records.push(Record {
+                experiment: "fig5".into(),
+                layer: layer.name.into(),
+                algo: cell.algo.name().into(),
+                layout: cell.layout.to_string(),
+                batch: cfg.scale.batch(),
+                best_s: f64::NAN,
+                median_s: f64::NAN,
+                flops: p.flops(),
+                mem_bytes: mem,
+            });
+        }
+    }
+    Ok(records)
+}
+
+/// Figs. 6–13: batch-size scaling of one algorithm over all four layouts.
+/// `experiment` is stamped `fig{6..9}` (direct) / `fig{10..13}` (im2win)
+/// by layout, matching the paper's figure numbering.
+pub fn batch_scaling(cfg: &ExperimentConfig, algo: AlgoKind) -> Result<Vec<Record>> {
+    let fig_base = match algo {
+        AlgoKind::Direct => 6,
+        AlgoKind::Im2win => 10,
+        other => return Err(Error::Config(format!("no scaling figure for {other}"))),
+    };
+    let mut records = Vec::new();
+    for (li, layout) in [Layout::Chwn, Layout::Chwn8, Layout::Nchw, Layout::Nhwc]
+        .into_iter()
+        .enumerate()
+    {
+        for layer in select(&cfg.layers) {
+            for &batch in &cfg.scale.batch_sweep() {
+                records.push(run_cell(
+                    &format!("fig{}", fig_base + li),
+                    layer,
+                    Cell { algo, layout },
+                    batch,
+                    cfg.scale.spatial_div(),
+                    cfg.scale.repeats(),
+                )?);
+            }
+        }
+    }
+    Ok(records)
+}
+
+/// A1 ablation (DESIGN.md): the optimization ladder on one layer —
+/// naive seven-loop → loop-reordered SIMD kernel without register blocking
+/// (`W_{o,b}`=1) → full kernel (`W_{o,b}` default) — for direct and im2win.
+pub fn ablation(layer: &BenchLayer, layout: Layout, scale: Scale) -> Result<Vec<Record>> {
+    use crate::conv::direct::DirectConv;
+    use crate::conv::im2win::Im2winConv;
+    use crate::conv::ConvAlgorithm;
+
+    let batch = scale.batch();
+    let div = scale.spatial_div();
+    let repeats = scale.repeats();
+    let p = layer.scaled_params(batch, div);
+    let input = Tensor4::random(p.input_dims(), layout, 1);
+    let filter = Tensor4::random(p.filter_dims(), layout, 2);
+    let mut out = Tensor4::zeros(p.output_dims(), layout);
+
+    let variants: Vec<(String, Box<dyn ConvAlgorithm>)> = vec![
+        ("naive".into(), crate::conv::AlgoKind::Naive.build()),
+        ("direct+reorder+simd".into(), Box::new(DirectConv::with_w_block(1))),
+        ("direct+regblock".into(), Box::new(DirectConv::new())),
+        ("im2win+reorder+simd".into(), Box::new(Im2winConv::with_w_block(1))),
+        ("im2win+regblock".into(), Box::new(Im2winConv::new())),
+    ];
+
+    let mut records = Vec::new();
+    for (name, algo) in variants {
+        let bench = measure(repeats, || {
+            algo.run_into(&input, &filter, &p, &mut out).expect("ablation kernel failed");
+        });
+        records.push(Record {
+            experiment: "ablation".into(),
+            layer: layer.name.into(),
+            algo: name,
+            layout: layout.to_string(),
+            batch,
+            best_s: bench.best_s,
+            median_s: bench.median_s,
+            flops: p.flops(),
+            mem_bytes: 0,
+        });
+    }
+    Ok(records)
+}
+
+/// Cross-check every configured cell against the naive oracle on a small
+/// geometry (the coordinator's self-verification gate, run before long
+/// benchmark sessions and by `im2win verify`).
+pub fn verify(cfg: &ExperimentConfig) -> Result<Vec<(Cell, f32)>> {
+    let mut results = Vec::new();
+    for layer in select(&cfg.layers) {
+        // Shrink hard: correctness does not need big tensors.
+        let p = layer.scaled_params(3, 8.max(cfg.scale.spatial_div()));
+        for &cell in &cfg.cells {
+            let input = Tensor4::random(p.input_dims(), cell.layout, 3);
+            let filter = Tensor4::random(p.filter_dims(), cell.layout, 4);
+            let expect = reference_conv(&input, &filter, &p, cell.layout);
+            let got = cell.algo.build().run(&input, &filter, &p)?;
+            let diff = expect.max_abs_diff(&got);
+            let scale_tol = 1e-4 * (p.c_in * p.h_f * p.w_f) as f32;
+            if diff > scale_tol {
+                return Err(Error::Runtime(format!(
+                    "verification failed: {} {} on {}: max diff {diff}",
+                    cell.algo,
+                    cell.layout,
+                    layer.name
+                )));
+            }
+            results.push((cell, diff));
+        }
+    }
+    Ok(results)
+}
+
+/// Helper shared by CLI and benches: params of a layer at a scale.
+pub fn layer_params(layer: &BenchLayer, scale: Scale) -> ConvParams {
+    layer.scaled_params(scale.batch(), scale.spatial_div())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::layers::by_name;
+
+    fn smoke_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_matrix(Scale::Smoke);
+        cfg.layers = vec!["conv9".into()];
+        cfg
+    }
+
+    #[test]
+    fn fig4_produces_full_grid() {
+        let cfg = smoke_cfg();
+        let records = fig4(&cfg).unwrap();
+        assert_eq!(records.len(), 10); // 1 layer × 10 cells
+        assert!(records.iter().all(|r| r.best_s > 0.0 && r.flops > 0));
+        assert!(records.iter().all(|r| r.tflops() > 0.0));
+    }
+
+    #[test]
+    fn fig5_memory_ordering_holds() {
+        // The paper's Fig. 5 invariant: direct ≤ im2win ≤ im2col.
+        let cfg = smoke_cfg();
+        let records = fig5(&cfg).unwrap();
+        let get = |algo: &str, layout: &str| {
+            records
+                .iter()
+                .find(|r| r.algo == algo && r.layout == layout)
+                .map(|r| r.mem_bytes)
+                .unwrap()
+        };
+        for layout in ["NCHW", "NHWC"] {
+            let (d, w, c) = (get("direct", layout), get("im2win", layout), get("im2col", layout));
+            assert!(d <= w, "{layout}: direct {d} > im2win {w}");
+            assert!(w <= c, "{layout}: im2win {w} > im2col {c}");
+        }
+    }
+
+    #[test]
+    fn batch_scaling_covers_sweep() {
+        let mut cfg = smoke_cfg();
+        cfg.layers = vec!["conv12".into()];
+        let records = batch_scaling(&cfg, AlgoKind::Im2win).unwrap();
+        // 4 layouts × 1 layer × sweep(2).
+        assert_eq!(records.len(), 8);
+        assert!(records.iter().any(|r| r.experiment == "fig10")); // CHWN
+        assert!(records.iter().any(|r| r.experiment == "fig13")); // NHWC
+        assert!(batch_scaling(&cfg, AlgoKind::Im2col).is_err());
+    }
+
+    #[test]
+    fn ablation_ladder_runs() {
+        let records = ablation(by_name("conv9").unwrap(), Layout::Nhwc, Scale::Smoke).unwrap();
+        assert_eq!(records.len(), 5);
+        let naive = records.iter().find(|r| r.algo == "naive").unwrap();
+        let best = records
+            .iter()
+            .filter(|r| r.algo != "naive")
+            .map(|r| r.best_s)
+            .fold(f64::MAX, f64::min);
+        // Optimized kernels should beat naive even at smoke scale.
+        assert!(best < naive.best_s, "best {best} vs naive {}", naive.best_s);
+    }
+
+    #[test]
+    fn verify_passes_on_paper_matrix() {
+        let cfg = smoke_cfg();
+        let results = verify(&cfg).unwrap();
+        assert_eq!(results.len(), 10);
+    }
+}

@@ -1,0 +1,125 @@
+//! The paper's benchmark suite: the twelve convolution layers of Table I
+//! (the MEC / Cho-Brand DNN benchmark covering AlexNet, ZFNet, Overfeat,
+//! and VGG layer shapes).
+
+use crate::conv::ConvParams;
+
+/// One named benchmark layer (geometry without a batch size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BenchLayer {
+    /// `conv1` … `conv12`.
+    pub name: &'static str,
+    /// Input channels.
+    pub c_in: usize,
+    /// Input height (= width; the suite is square).
+    pub h_in: usize,
+    /// Input width.
+    pub w_in: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Filter edge (square).
+    pub k: usize,
+    /// Stride (equal in both axes).
+    pub s: usize,
+}
+
+impl BenchLayer {
+    /// Concrete params at batch size `n`.
+    pub fn params(&self, n: usize) -> ConvParams {
+        ConvParams::new(n, self.c_in, self.h_in, self.w_in, self.c_out, self.k, self.k, self.s)
+            .expect("Table I layer geometry is valid")
+    }
+
+    /// Proportionally reduced geometry for CI/smoke-scale runs: spatial
+    /// dims divided by `div`, floored so the output plane keeps ≥ ~12
+    /// positions per axis (a degenerate 1×1 output would erase the
+    /// window-reuse effects the paper measures), and never enlarged beyond
+    /// the original. Channels, filter and stride are untouched.
+    pub fn scaled_params(&self, n: usize, div: usize) -> ConvParams {
+        let floor_h = (self.k + 11 * self.s).min(self.h_in);
+        let floor_w = (self.k + 11 * self.s).min(self.w_in);
+        let h = (self.h_in / div).max(floor_h);
+        let w = (self.w_in / div).max(floor_w);
+        ConvParams::new(n, self.c_in, h, w, self.c_out, self.k, self.k, self.s)
+            .expect("scaled layer geometry is valid")
+    }
+}
+
+/// Table I of the paper, verbatim.
+pub const TABLE1: [BenchLayer; 12] = [
+    BenchLayer { name: "conv1", c_in: 3, h_in: 227, w_in: 227, c_out: 96, k: 11, s: 4 },
+    BenchLayer { name: "conv2", c_in: 3, h_in: 231, w_in: 231, c_out: 96, k: 11, s: 4 },
+    BenchLayer { name: "conv3", c_in: 3, h_in: 227, w_in: 227, c_out: 64, k: 7, s: 2 },
+    BenchLayer { name: "conv4", c_in: 64, h_in: 224, w_in: 224, c_out: 64, k: 7, s: 2 },
+    BenchLayer { name: "conv5", c_in: 96, h_in: 24, w_in: 24, c_out: 256, k: 5, s: 1 },
+    BenchLayer { name: "conv6", c_in: 256, h_in: 12, w_in: 12, c_out: 512, k: 3, s: 1 },
+    BenchLayer { name: "conv7", c_in: 3, h_in: 224, w_in: 224, c_out: 64, k: 3, s: 1 },
+    BenchLayer { name: "conv8", c_in: 64, h_in: 112, w_in: 112, c_out: 128, k: 3, s: 1 },
+    BenchLayer { name: "conv9", c_in: 64, h_in: 56, w_in: 56, c_out: 64, k: 3, s: 1 },
+    BenchLayer { name: "conv10", c_in: 128, h_in: 28, w_in: 28, c_out: 128, k: 3, s: 1 },
+    BenchLayer { name: "conv11", c_in: 256, h_in: 14, w_in: 14, c_out: 256, k: 3, s: 1 },
+    BenchLayer { name: "conv12", c_in: 512, h_in: 7, w_in: 7, c_out: 512, k: 3, s: 1 },
+];
+
+/// Find a layer by name (`"conv5"`).
+pub fn by_name(name: &str) -> Option<&'static BenchLayer> {
+    TABLE1.iter().find(|l| l.name == name)
+}
+
+/// Select a subset by names, or all twelve when `names` is empty.
+pub fn select(names: &[String]) -> Vec<&'static BenchLayer> {
+    if names.is_empty() {
+        TABLE1.iter().collect()
+    } else {
+        names.iter().filter_map(|n| by_name(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Output shapes must match Table I's OUTPUT column exactly.
+    #[test]
+    fn output_shapes_match_table1() {
+        let expected: [(usize, usize); 12] = [
+            (96, 55),
+            (96, 56),
+            (64, 111),
+            (64, 109),
+            (256, 20),
+            (512, 10),
+            (64, 222),
+            (128, 110),
+            (64, 54),
+            (128, 26),
+            (256, 12),
+            (512, 5),
+        ];
+        for (layer, (co, edge)) in TABLE1.iter().zip(expected) {
+            let p = layer.params(128);
+            assert_eq!(p.c_out, co, "{}", layer.name);
+            assert_eq!(p.h_out(), edge, "{}", layer.name);
+            assert_eq!(p.w_out(), edge, "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn lookup_and_select() {
+        assert_eq!(by_name("conv5").unwrap().c_out, 256);
+        assert!(by_name("conv13").is_none());
+        assert_eq!(select(&[]).len(), 12);
+        let subset = select(&["conv9".into(), "conv5".into()]);
+        assert_eq!(subset.len(), 2);
+        assert_eq!(subset[0].name, "conv9");
+    }
+
+    #[test]
+    fn scaled_params_keep_filter_valid() {
+        for layer in &TABLE1 {
+            let p = layer.scaled_params(2, 8);
+            assert!(p.h_in >= p.h_f && p.w_in >= p.w_f, "{}", layer.name);
+            assert_eq!(p.c_in, layer.c_in);
+        }
+    }
+}

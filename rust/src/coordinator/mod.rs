@@ -1,0 +1,20 @@
+//! The experiment coordinator — the L3 service layer.
+//!
+//! The paper's contribution lives in the kernels ([`crate::conv`]); the
+//! coordinator is the surrounding system a downstream user drives:
+//!
+//! * [`layers`] — the Table I benchmark suite;
+//! * [`experiments`] — one runner per paper artifact (Fig. 4, Fig. 5,
+//!   Figs. 6–13, the ablations) plus the correctness gate;
+//! * [`report`] — records, CSV/JSON writers and console tables;
+//! * [`summary`] — the paper's headline comparisons (speedup tables)
+//!   computed from recorded results.
+
+pub mod experiments;
+pub mod layers;
+pub mod plot;
+pub mod report;
+pub mod summary;
+
+pub use layers::{by_name, select, BenchLayer, TABLE1};
+pub use report::{format_table, write_csv, write_json, Record};

@@ -1,0 +1,138 @@
+//! ASCII figure renderer — turns experiment [`Record`]s into the paper's
+//! grouped-bar figures directly in the terminal (and into the report
+//! files), so "regenerate Fig. 4" produces an actual figure offline.
+
+use super::report::Record;
+
+/// Render a grouped horizontal bar chart: one group per layer, one bar per
+/// series, bar length proportional to `value(record)` (which must be
+/// ≥ 0; NaNs are skipped). `width` is the max bar width in characters.
+pub fn bar_chart<F: Fn(&Record) -> f64>(
+    records: &[Record],
+    title: &str,
+    unit: &str,
+    width: usize,
+    value: F,
+) -> String {
+    let mut layers: Vec<&str> = vec![];
+    let mut series: Vec<String> = vec![];
+    for r in records {
+        if !layers.contains(&r.layer.as_str()) {
+            layers.push(&r.layer);
+        }
+        let s = r.series();
+        if !series.contains(&s) {
+            series.push(s);
+        }
+    }
+    let max = records
+        .iter()
+        .map(&value)
+        .filter(|v| v.is_finite())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let label_w = series.iter().map(String::len).max().unwrap_or(6).max(6);
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!(
+        "(bar = {unit}, full scale = {:.2} {unit})\n",
+        max
+    ));
+    for layer in &layers {
+        out.push_str(&format!("{layer}\n"));
+        for s in &series {
+            let Some(r) = records.iter().find(|r| &r.layer == layer && &r.series() == s) else {
+                continue;
+            };
+            let v = value(r);
+            if !v.is_finite() {
+                continue;
+            }
+            let len = ((v / max) * width as f64).round() as usize;
+            out.push_str(&format!(
+                "  {s:<label_w$} |{}{} {v:.2}\n",
+                "█".repeat(len.min(width)),
+                " ".repeat(width - len.min(width)),
+            ));
+        }
+    }
+    out
+}
+
+/// Render a batch-scaling series (Figs. 6–13 style): one line chart row
+/// per (layer, batch) with GFLOPS bars, grouped by layer.
+pub fn scaling_chart(records: &[Record], title: &str, width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let max = records.iter().map(Record::gflops).fold(0.0f64, f64::max).max(1e-12);
+    let mut layers: Vec<&str> = vec![];
+    for r in records {
+        if !layers.contains(&r.layer.as_str()) {
+            layers.push(&r.layer);
+        }
+    }
+    for layer in layers {
+        out.push_str(&format!("{layer}\n"));
+        for r in records.iter().filter(|r| r.layer == layer) {
+            let len = ((r.gflops() / max) * width as f64).round() as usize;
+            out.push_str(&format!(
+                "  N={:<4} |{}{} {:.1} GFLOPS\n",
+                r.batch,
+                "█".repeat(len.min(width)),
+                " ".repeat(width - len.min(width)),
+                r.gflops()
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(layer: &str, algo: &str, batch: usize, best: f64) -> Record {
+        Record {
+            experiment: "fig4".into(),
+            layer: layer.into(),
+            algo: algo.into(),
+            layout: "NHWC".into(),
+            batch,
+            best_s: best,
+            median_s: best,
+            flops: 1_000_000_000,
+            mem_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn bar_chart_scales_bars() {
+        let records = vec![rec("conv1", "im2win", 8, 0.5), rec("conv1", "direct", 8, 1.0)];
+        let chart = bar_chart(&records, "Fig. 4", "GFLOPS", 20, |r| r.gflops());
+        assert!(chart.contains("Fig. 4"));
+        assert!(chart.contains("conv1"));
+        // im2win is 2x faster => full-width bar (20 blocks); direct 10.
+        let full: String = "█".repeat(20);
+        let half: String = "█".repeat(10);
+        assert!(chart.contains(&full));
+        assert!(chart.contains(&half));
+    }
+
+    #[test]
+    fn nan_rows_are_skipped() {
+        let mut r = rec("conv1", "im2win", 8, f64::NAN);
+        r.best_s = f64::NAN;
+        let chart = bar_chart(&[r], "t", "GFLOPS", 10, |r| r.gflops());
+        assert!(!chart.contains("█"));
+    }
+
+    #[test]
+    fn scaling_chart_lists_batches() {
+        let records =
+            vec![rec("conv5", "im2win", 8, 1.0), rec("conv5", "im2win", 16, 0.5)];
+        let chart = scaling_chart(&records, "Fig. 11", 10);
+        assert!(chart.contains("N=8"));
+        assert!(chart.contains("N=16"));
+    }
+}

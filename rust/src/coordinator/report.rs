@@ -1,0 +1,201 @@
+//! Experiment records and report writers (CSV + JSON + console tables).
+
+use crate::config::json::Json;
+use crate::error::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// One measured cell of an experiment grid.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// Experiment id (`fig4`, `fig5`, `fig6`…, `ablation`).
+    pub experiment: String,
+    /// Benchmark layer name (`conv1`…`conv12`).
+    pub layer: String,
+    /// Algorithm name.
+    pub algo: String,
+    /// Layout name (uppercase, as in the paper's legends).
+    pub layout: String,
+    /// Batch size measured.
+    pub batch: usize,
+    /// Best wall time over the repetitions, seconds.
+    pub best_s: f64,
+    /// Median wall time, seconds.
+    pub median_s: f64,
+    /// Useful FLOPs of the measured operation.
+    pub flops: u64,
+    /// Peak tensor memory allocated during one run, bytes.
+    pub mem_bytes: usize,
+}
+
+impl Record {
+    /// TFLOPS at the best time.
+    pub fn tflops(&self) -> f64 {
+        self.flops as f64 / self.best_s / 1e12
+    }
+
+    /// GFLOPS at the best time.
+    pub fn gflops(&self) -> f64 {
+        self.flops as f64 / self.best_s / 1e9
+    }
+
+    /// Series key used in figures: `algo_LAYOUT` (e.g. `im2win_NHWC`).
+    pub fn series(&self) -> String {
+        format!("{}_{}", self.algo, self.layout)
+    }
+}
+
+/// Write records as CSV (stable column order, header included).
+pub fn write_csv(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "experiment,layer,algo,layout,batch,best_s,median_s,flops,gflops,mem_bytes")?;
+    for r in records {
+        writeln!(
+            f,
+            "{},{},{},{},{},{:.6e},{:.6e},{},{:.3},{}",
+            r.experiment,
+            r.layer,
+            r.algo,
+            r.layout,
+            r.batch,
+            r.best_s,
+            r.median_s,
+            r.flops,
+            r.gflops(),
+            r.mem_bytes
+        )?;
+    }
+    Ok(())
+}
+
+/// Write records as a JSON array (machine-readable report).
+pub fn write_json(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let arr = Json::Array(records.iter().map(record_json).collect());
+    std::fs::write(path, arr.to_string())?;
+    Ok(())
+}
+
+fn record_json(r: &Record) -> Json {
+    Json::object(vec![
+        ("experiment", Json::from(r.experiment.as_str())),
+        ("layer", Json::from(r.layer.as_str())),
+        ("algo", Json::from(r.algo.as_str())),
+        ("layout", Json::from(r.layout.as_str())),
+        ("batch", Json::from(r.batch as f64)),
+        ("best_s", Json::from(r.best_s)),
+        ("median_s", Json::from(r.median_s)),
+        ("flops", Json::from(r.flops as f64)),
+        ("gflops", Json::from(r.gflops())),
+        ("mem_bytes", Json::from(r.mem_bytes as f64)),
+    ])
+}
+
+/// Render records as a console table: one row per layer, one column per
+/// series, `value` selecting the cell metric.
+pub fn format_table<F: Fn(&Record) -> String>(records: &[Record], value: F) -> String {
+    let mut layers: Vec<&str> = vec![];
+    let mut series: Vec<String> = vec![];
+    for r in records {
+        if !layers.contains(&r.layer.as_str()) {
+            layers.push(&r.layer);
+        }
+        let s = r.series();
+        if !series.contains(&s) {
+            series.push(s);
+        }
+    }
+    let mut widths: Vec<usize> = series.iter().map(|s| s.len().max(9)).collect();
+    let layer_w = layers.iter().map(|l| l.len()).max().unwrap_or(5).max(5);
+    let mut out = String::new();
+    out.push_str(&format!("{:layer_w$}", "layer"));
+    for (s, w) in series.iter().zip(&widths) {
+        out.push_str(&format!(" | {s:>w$}"));
+    }
+    out.push('\n');
+    out.push_str(&"-".repeat(layer_w + series.iter().zip(&widths).map(|(_, w)| w + 3).sum::<usize>()));
+    out.push('\n');
+    for layer in &layers {
+        out.push_str(&format!("{layer:layer_w$}"));
+        for (i, s) in series.iter().enumerate() {
+            let cell = records
+                .iter()
+                .find(|r| &r.layer == layer && &r.series() == s)
+                .map(&value)
+                .unwrap_or_else(|| "-".into());
+            let w = widths[i];
+            widths[i] = w.max(cell.len());
+            out.push_str(&format!(" | {cell:>w$}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(layer: &str, algo: &str, layout: &str, best: f64) -> Record {
+        Record {
+            experiment: "fig4".into(),
+            layer: layer.into(),
+            algo: algo.into(),
+            layout: layout.into(),
+            batch: 8,
+            best_s: best,
+            median_s: best * 1.1,
+            flops: 1_000_000_000,
+            mem_bytes: 1024,
+        }
+    }
+
+    #[test]
+    fn metrics_math() {
+        let r = rec("conv1", "im2win", "NHWC", 0.25);
+        assert!((r.gflops() - 4.0).abs() < 1e-9);
+        assert!((r.tflops() - 0.004).abs() < 1e-12);
+        assert_eq!(r.series(), "im2win_NHWC");
+    }
+
+    #[test]
+    fn csv_and_json_round_trip_files() {
+        let dir = std::env::temp_dir().join(format!("im2win_report_{}", std::process::id()));
+        let records = vec![rec("conv1", "direct", "NCHW", 0.5), rec("conv2", "im2win", "NHWC", 0.2)];
+        let csv_path = dir.join("t.csv");
+        write_csv(&csv_path, &records).unwrap();
+        let text = std::fs::read_to_string(&csv_path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("experiment,layer"));
+        assert!(text.contains("conv2,im2win,NHWC"));
+
+        let json_path = dir.join("t.json");
+        write_json(&json_path, &records).unwrap();
+        let parsed = crate::config::json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(parsed.as_array().unwrap().len(), 2);
+        assert_eq!(parsed.as_array().unwrap()[1].get("algo").unwrap().as_str(), Some("im2win"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_renders_grid() {
+        let records = vec![
+            rec("conv1", "direct", "NCHW", 0.5),
+            rec("conv1", "im2win", "NHWC", 0.2),
+            rec("conv2", "direct", "NCHW", 0.4),
+        ];
+        let table = format_table(&records, |r| format!("{:.1}", r.gflops()));
+        assert!(table.contains("direct_NCHW"));
+        assert!(table.contains("im2win_NHWC"));
+        assert!(table.contains("conv2"));
+        // Missing cell renders as '-'.
+        assert!(table.lines().last().unwrap().contains('-'));
+    }
+}

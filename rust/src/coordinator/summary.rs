@@ -1,0 +1,226 @@
+//! Headline comparisons — the sentences of the paper's §IV-B computed
+//! from measured records, so EXPERIMENTS.md can quote paper-vs-measured
+//! directly.
+
+use super::report::Record;
+
+/// A named speedup statistic over the benchmark suite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Speedup {
+    /// What is compared (e.g. `im2win NHWC vs NCHW`).
+    pub label: String,
+    /// Minimum per-layer speedup.
+    pub min: f64,
+    /// Maximum per-layer speedup.
+    pub max: f64,
+    /// Geometric-mean speedup.
+    pub geomean: f64,
+    /// Layers included.
+    pub layers: usize,
+}
+
+impl std::fmt::Display for Speedup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {:.2}x – {:.2}x (geomean {:.2}x over {} layers)",
+            self.label, self.min, self.max, self.geomean, self.layers
+        )
+    }
+}
+
+fn best_time(records: &[Record], layer: &str, algo: &str, layout: &str) -> Option<f64> {
+    records
+        .iter()
+        .find(|r| r.layer == layer && r.algo == algo && r.layout == layout)
+        .map(|r| r.best_s)
+}
+
+/// Per-layer speedup of series A over series B (time_B / time_A), over the
+/// layers where both exist; `None` when fewer than one layer matches.
+pub fn speedup(
+    records: &[Record],
+    label: &str,
+    (algo_a, layout_a): (&str, &str),
+    (algo_b, layout_b): (&str, &str),
+    exclude_layers: &[&str],
+) -> Option<Speedup> {
+    let mut ratios = Vec::new();
+    let mut layers: Vec<&str> = records.iter().map(|r| r.layer.as_str()).collect();
+    layers.sort();
+    layers.dedup();
+    for layer in layers {
+        if exclude_layers.contains(&layer) {
+            continue;
+        }
+        let (Some(a), Some(b)) = (
+            best_time(records, layer, algo_a, layout_a),
+            best_time(records, layer, algo_b, layout_b),
+        ) else {
+            continue;
+        };
+        ratios.push(b / a);
+    }
+    if ratios.is_empty() {
+        return None;
+    }
+    let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+    let max = ratios.iter().cloned().fold(f64::MIN, f64::max);
+    let geomean = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    Some(Speedup { label: label.into(), min, max, geomean, layers: ratios.len() })
+}
+
+/// The paper's §IV-B comparison set, computed from Fig. 4-style records.
+pub fn paper_headlines(records: &[Record]) -> Vec<Speedup> {
+    let mut out = Vec::new();
+    let mut push = |s: Option<Speedup>| {
+        if let Some(s) = s {
+            out.push(s);
+        }
+    };
+    // "im2win NHWC outperforms NCHW by at least 11% and up to 355%"
+    push(speedup(records, "im2win NHWC vs im2win NCHW", ("im2win", "NHWC"), ("im2win", "NCHW"), &[]));
+    // "im2win 1.1–4.6x over im2col (NHWC, excluding conv6, conv12)"
+    push(speedup(
+        records,
+        "im2win vs im2col (NHWC, excl conv6/conv12)",
+        ("im2win", "NHWC"),
+        ("im2col", "NHWC"),
+        &["conv6", "conv12"],
+    ));
+    // "direct 1.1–3.8x over im2col (NHWC)"
+    push(speedup(records, "direct vs im2col (NHWC)", ("direct", "NHWC"), ("im2col", "NHWC"), &[]));
+    // "im2win 1.4–2.4x over direct (NCHW)"
+    push(speedup(records, "im2win vs direct (NCHW)", ("im2win", "NCHW"), ("direct", "NCHW"), &[]));
+    // "im2win CHWN8 3.7–16x over CHWN"
+    push(speedup(records, "im2win CHWN8 vs CHWN", ("im2win", "CHWN8"), ("im2win", "CHWN"), &[]));
+    // "direct CHWN8 2.3–8x over CHWN (excluding conv7)"
+    push(speedup(
+        records,
+        "direct CHWN8 vs CHWN (excl conv7)",
+        ("direct", "CHWN8"),
+        ("direct", "CHWN"),
+        &["conv7"],
+    ));
+    out
+}
+
+/// Count how many layers each series wins (the paper: im2win takes 8/12,
+/// direct 3/12, im2col 1/12 — all with NHWC).
+pub fn winners(records: &[Record]) -> Vec<(String, usize)> {
+    let mut layers: Vec<&str> = records.iter().map(|r| r.layer.as_str()).collect();
+    layers.sort();
+    layers.dedup();
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for layer in layers {
+        let Some(best) = records
+            .iter()
+            .filter(|r| r.layer == layer && r.best_s.is_finite())
+            .min_by(|a, b| a.best_s.partial_cmp(&b.best_s).unwrap())
+        else {
+            continue;
+        };
+        let key = best.series();
+        match counts.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, n)) => *n += 1,
+            None => counts.push((key, 1)),
+        }
+    }
+    counts.sort_by(|a, b| b.1.cmp(&a.1));
+    counts
+}
+
+/// Memory ratios of Fig. 5 ("im2col uses 3.9x direct; im2win 1.5x direct;
+/// im2win is 39% of im2col on average").
+pub fn memory_ratios(records: &[Record], layout: &str) -> Option<(f64, f64, f64)> {
+    let mut col_over_direct = Vec::new();
+    let mut win_over_direct = Vec::new();
+    let mut win_over_col = Vec::new();
+    let mut layers: Vec<&str> = records.iter().map(|r| r.layer.as_str()).collect();
+    layers.sort();
+    layers.dedup();
+    for layer in layers {
+        let get = |algo: &str| {
+            records
+                .iter()
+                .find(|r| r.layer == layer && r.algo == algo && r.layout == layout)
+                .map(|r| r.mem_bytes as f64)
+        };
+        let (Some(d), Some(w), Some(c)) = (get("direct"), get("im2win"), get("im2col")) else {
+            continue;
+        };
+        col_over_direct.push(c / d);
+        win_over_direct.push(w / d);
+        win_over_col.push(w / c);
+    }
+    if col_over_direct.is_empty() {
+        return None;
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    Some((mean(&col_over_direct), mean(&win_over_direct), mean(&win_over_col)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(layer: &str, algo: &str, layout: &str, best: f64, mem: usize) -> Record {
+        Record {
+            experiment: "fig4".into(),
+            layer: layer.into(),
+            algo: algo.into(),
+            layout: layout.into(),
+            batch: 8,
+            best_s: best,
+            median_s: best,
+            flops: 1_000_000,
+            mem_bytes: mem,
+        }
+    }
+
+    #[test]
+    fn speedup_math() {
+        let records = vec![
+            rec("conv1", "im2win", "NHWC", 1.0, 0),
+            rec("conv1", "im2win", "NCHW", 2.0, 0),
+            rec("conv2", "im2win", "NHWC", 1.0, 0),
+            rec("conv2", "im2win", "NCHW", 4.0, 0),
+        ];
+        let s = speedup(&records, "t", ("im2win", "NHWC"), ("im2win", "NCHW"), &[]).unwrap();
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.geomean - (8.0f64).sqrt()).abs() < 1e-12);
+        // Exclusion removes conv2.
+        let s2 = speedup(&records, "t", ("im2win", "NHWC"), ("im2win", "NCHW"), &["conv2"]).unwrap();
+        assert_eq!(s2.max, 2.0);
+        assert!(speedup(&records, "t", ("x", "y"), ("im2win", "NCHW"), &[]).is_none());
+    }
+
+    #[test]
+    fn winners_counts_per_layer_best() {
+        let records = vec![
+            rec("conv1", "im2win", "NHWC", 1.0, 0),
+            rec("conv1", "direct", "NHWC", 2.0, 0),
+            rec("conv2", "direct", "NHWC", 0.5, 0),
+            rec("conv2", "im2win", "NHWC", 0.7, 0),
+            rec("conv3", "im2win", "NHWC", 0.1, 0),
+        ];
+        let w = winners(&records);
+        assert_eq!(w[0], ("im2win_NHWC".into(), 2));
+        assert_eq!(w[1], ("direct_NHWC".into(), 1));
+    }
+
+    #[test]
+    fn memory_ratio_means() {
+        let records = vec![
+            rec("conv1", "direct", "NHWC", 1.0, 100),
+            rec("conv1", "im2win", "NHWC", 1.0, 150),
+            rec("conv1", "im2col", "NHWC", 1.0, 400),
+        ];
+        let (cd, wd, wc) = memory_ratios(&records, "NHWC").unwrap();
+        assert!((cd - 4.0).abs() < 1e-12);
+        assert!((wd - 1.5).abs() < 1e-12);
+        assert!((wc - 0.375).abs() < 1e-12);
+        assert!(memory_ratios(&records, "CHWN").is_none());
+    }
+}

@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+//!
+//! Hand-rolled (no `thiserror` on the hot path) so the library stays
+//! dependency-light; `anyhow` is used only in binaries.
+
+use std::fmt;
+
+/// Errors produced by the im2win library.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Tensor dimensions are inconsistent with the requested operation.
+    ShapeMismatch(String),
+    /// Convolution geometry is invalid (e.g. filter larger than input).
+    InvalidConv(String),
+    /// A layout is unsupported by the requested algorithm variant.
+    UnsupportedLayout(String),
+    /// Configuration file / CLI parse error.
+    Config(String),
+    /// JSON parse error (config substrate).
+    Json(String),
+    /// PJRT runtime error (artifact loading / execution).
+    Runtime(String),
+    /// I/O error (stringified to keep `Error: Clone + PartialEq`).
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidConv(m) => write!(f, "invalid convolution: {m}"),
+            Error::UnsupportedLayout(m) => write!(f, "unsupported layout: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_contains_message() {
+        let e = Error::ShapeMismatch("got 3 want 4".into());
+        assert!(e.to_string().contains("got 3 want 4"));
+        assert!(e.to_string().contains("shape mismatch"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("nope"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Register-blocked GEMM microkernels.
+//!
+//! The full tile computes a `MR×NR = 6×16` block of C held entirely in
+//! twelve 8-lane accumulators (the paper's register blocking, §III-D,
+//! applied to the GEMM baseline). Per `k` iteration: two packed-B loads,
+//! six packed-A broadcasts, twelve FMAs.
+
+use crate::simd::{F32x8, LANES};
+
+/// Rows per register tile.
+pub const MR: usize = 6;
+/// Columns per register tile (two 8-lane vectors).
+pub const NR: usize = 16;
+
+/// Full `MR×NR` microkernel: `C[0..MR][0..NR] += Ap · Bp`.
+///
+/// * `ap`: packed A strip, `kc` steps × MR floats (k-major)
+/// * `bp`: packed B strip, `kc` steps × NR floats (k-major)
+/// * `c`: pointer to the tile's top-left element, leading dimension `ldc`
+///
+/// # Safety
+/// `ap`/`bp` must hold `kc*MR` / `kc*NR` floats; `c` must be valid for
+/// reads/writes over an `MR×NR` tile with leading dimension `ldc`.
+#[inline]
+pub unsafe fn microkernel(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize) {
+    // 6 rows × 2 vector columns of accumulators.
+    let mut acc = [[F32x8::zero(); 2]; MR];
+    let mut a = ap;
+    let mut b = bp;
+    for _ in 0..kc {
+        let b0 = F32x8::load(b);
+        let b1 = F32x8::load(b.add(LANES));
+        // Unrolled over the MR rows: broadcast a[r], two FMAs each.
+        for r in 0..MR {
+            let ar = F32x8::splat(*a.add(r));
+            acc[r][0] = b0.fma(ar, acc[r][0]);
+            acc[r][1] = b1.fma(ar, acc[r][1]);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    for r in 0..MR {
+        let row = c.add(r * ldc);
+        F32x8::load(row).add(acc[r][0]).store(row);
+        F32x8::load(row.add(LANES)).add(acc[r][1]).store(row.add(LANES));
+    }
+}
+
+/// Edge-tile microkernel for partial `mr×nr` tiles (`mr ≤ MR`, `nr ≤ NR`).
+/// Computes into a full-size local tile, then scatters the valid region.
+///
+/// # Safety
+/// Same as [`microkernel`] except `c` only needs validity over `mr×nr`.
+#[inline]
+pub unsafe fn microkernel_partial(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut tile = [0.0f32; MR * NR];
+    microkernel(kc, ap, bp, tile.as_mut_ptr(), NR);
+    for r in 0..mr {
+        for j in 0..nr {
+            // `tile` accumulated from zero; add into C.
+            *c.add(r * ldc + j) += tile[r * NR + j] - 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pack helpers mirroring gemm::pack_{a,b} for a standalone kernel test.
+    fn pack(kc: usize, rows: usize, stride: usize, src: &[f32], width: usize) -> Vec<f32> {
+        // k-major: out[p*width + r] = src[r*stride + p]
+        let mut out = vec![0.0; kc * width];
+        for p in 0..kc {
+            for r in 0..rows {
+                out[p * width + r] = src[r * stride + p];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn full_tile_matches_naive() {
+        let kc = 9;
+        let a: Vec<f32> = (0..MR * kc).map(|i| (i % 7) as f32 - 3.0).collect();
+        let bt: Vec<f32> = (0..NR * kc).map(|i| (i % 5) as f32 * 0.5).collect();
+        // B is kc×NR row-major already; pack is identity copy.
+        let bp: Vec<f32> = (0..kc * NR).map(|i| bt[(i / NR) * NR + i % NR]).collect();
+        let ap = pack(kc, MR, kc, &a, MR);
+        let mut c = vec![1.0f32; MR * NR];
+        unsafe { microkernel(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), NR) };
+        for r in 0..MR {
+            for j in 0..NR {
+                let mut expect = 1.0;
+                for p in 0..kc {
+                    expect += a[r * kc + p] * bt[p * NR + j];
+                }
+                assert!((c[r * NR + j] - expect).abs() < 1e-4, "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_tile_writes_only_mr_nr() {
+        let kc = 4;
+        let (mr, nr) = (3, 5);
+        let ap = vec![1.0f32; kc * MR];
+        let bp = vec![1.0f32; kc * NR];
+        // Guard band: 10x20 C filled with sentinel.
+        let ldc = 20;
+        let mut c = vec![7.0f32; 10 * ldc];
+        unsafe { microkernel_partial(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), ldc, mr, nr) };
+        for r in 0..10 {
+            for j in 0..ldc {
+                let expect = if r < mr && j < nr { 7.0 + kc as f32 } else { 7.0 };
+                assert_eq!(c[r * ldc + j], expect, "r={r} j={j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! # im2win — high-performance im2win & direct convolutions on SIMD
+//!
+//! Production-quality reproduction of *"High Performance Im2win and Direct
+//! Convolutions using Three Tensor Layouts on SIMD Architectures"*
+//! (Fu et al., 2024).
+//!
+//! The library implements the paper's full system:
+//!
+//! * four tensor layouts — [`tensor::Layout::Nchw`], [`tensor::Layout::Nhwc`],
+//!   [`tensor::Layout::Chwn`] and the paper's novel blocked
+//!   [`tensor::Layout::Chwn8`] — with layout-aware index math and an
+//!   any-to-any transformation engine;
+//! * three convolution algorithm families across all layouts:
+//!   [`conv::direct`], [`conv::im2win`] (the paper's contribution) and the
+//!   [`conv::im2col`]+GEMM baseline standing in for PyTorch/MKL;
+//! * the paper's optimization set: 64-byte aligned buffers, loop reordering
+//!   per layout, hoisting, register/cache blocking, 8-lane AVX2 FMA
+//!   vectorization ([`simd`]), loop coalescing and thread-level parallelism
+//!   ([`parallel`]);
+//! * the supporting substrates a downstream user needs: a blocked SGEMM
+//!   ([`gemm`]), a roofline model ([`roofline`]), an allocation-tracking
+//!   metrics layer ([`metrics`]), a benchmark harness ([`bench_harness`]),
+//!   an autotuner ([`autotune`]), a CNN model graph + runner ([`model`]),
+//!   a PJRT runtime bridge to the JAX/Pallas AOT artifacts ([`runtime`]),
+//!   a zero-dependency JSON config substrate ([`config`]) and the experiment
+//!   coordinator ([`coordinator`]).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use im2win::prelude::*;
+//!
+//! // conv9 of the paper's Table I, at a reduced batch size.
+//! let p = ConvParams::new(4, 64, 56, 56, 64, 3, 3, 1).unwrap();
+//! let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
+//! let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
+//! let algo = Im2winConv::new();
+//! let out = algo.run(&input, &filter, &p).unwrap();
+//! assert_eq!(out.dims(), p.output_dims());
+//! ```
+#![deny(missing_docs)]
+
+pub mod autotune;
+pub mod bench_harness;
+pub mod config;
+pub mod conv;
+pub mod coordinator;
+pub mod error;
+pub mod gemm;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod roofline;
+pub mod runtime;
+pub mod simd;
+pub mod tensor;
+pub mod testutil;
+
+/// Convenient re-exports of the most common public types.
+pub mod prelude {
+    pub use crate::conv::direct::DirectConv;
+    pub use crate::conv::im2col::Im2colConv;
+    pub use crate::conv::im2win::Im2winConv;
+    pub use crate::conv::{Conv2d, ConvAlgorithm, ConvParams};
+    pub use crate::error::{Error, Result};
+    pub use crate::tensor::{Dims, Layout, Tensor4};
+}

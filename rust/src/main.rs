@@ -1,0 +1,385 @@
+//! `im2win` — command-line driver for the im2win convolution library.
+//!
+//! ```text
+//! im2win info                         # machine spec, peak GFLOPS (Eq. 4), SIMD backend
+//! im2win verify [--scale S]           # all algo x layout vs the naive oracle
+//! im2win bench table1                 # print Table I
+//! im2win bench fig4  [--scale S] [--layers conv5,conv9] [--threads T]
+//! im2win bench fig5  [--scale S] [--layers ...]
+//! im2win bench scaling --algo direct|im2win [--scale S] [--layers ...]
+//! im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
+//! im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win]
+//! im2win roofline [--paper]           # roofline for this host or the paper server
+//! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
+//! ```
+//!
+//! Flag parsing is hand-rolled (`clap` is unavailable offline).
+
+use anyhow::{anyhow, bail, Context, Result};
+use im2win::autotune::tune_w_block;
+use im2win::bench_harness::fmt_time;
+use im2win::config::{ExperimentConfig, Scale};
+use im2win::conv::AlgoKind;
+use im2win::coordinator::{experiments, format_table, layers, summary, write_csv, write_json};
+use im2win::prelude::*;
+use im2win::roofline::{MachineSpec, Roofline};
+use im2win::tensor::Layout;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand words.
+struct Flags {
+    pairs: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut pairs = Vec::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
+            if key == "paper" {
+                pairs.push((key.to_string(), "true".to_string()));
+                continue;
+            }
+            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            pairs.push((key.to_string(), val.clone()));
+        }
+        Ok(Flags { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn scale(&self) -> Result<Scale> {
+        match self.get("scale") {
+            None => Ok(Scale::Ci),
+            Some(s) => Scale::parse(s).ok_or_else(|| anyhow!("unknown scale '{s}'")),
+        }
+    }
+
+    fn layers(&self) -> Vec<String> {
+        self.get("layers")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default()
+    }
+
+    fn layout(&self, default: Layout) -> Result<Layout> {
+        match self.get("layout") {
+            None => Ok(default),
+            Some(s) => Layout::parse(s).ok_or_else(|| anyhow!("unknown layout '{s}'")),
+        }
+    }
+
+    fn algo(&self, default: AlgoKind) -> Result<AlgoKind> {
+        match self.get("algo") {
+            None => Ok(default),
+            Some(s) => AlgoKind::parse(s).ok_or_else(|| anyhow!("unknown algo '{s}'")),
+        }
+    }
+
+    fn apply_threads(&self) {
+        if let Some(t) = self.get("threads").and_then(|v| v.parse().ok()) {
+            im2win::parallel::set_global_threads(t);
+        }
+    }
+}
+
+fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        ExperimentConfig::from_json(&text)?
+    } else {
+        ExperimentConfig::paper_matrix(flags.scale()?)
+    };
+    cfg.scale = flags.scale()?;
+    let layers = flags.layers();
+    if !layers.is_empty() {
+        cfg.layers = layers;
+    }
+    if cfg.threads > 0 {
+        im2win::parallel::set_global_threads(cfg.threads);
+    }
+    flags.apply_threads();
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = args.split_first().map(|(c, r)| (c.as_str(), r)).unwrap_or(("help", &[][..]));
+    match cmd {
+        "info" => info(),
+        "verify" => verify(&Flags::parse(rest)?),
+        "bench" => {
+            let (which, rest2) = rest
+                .split_first()
+                .map(|(c, r)| (c.as_str(), r))
+                .ok_or_else(|| anyhow!("bench needs a target: table1|fig4|fig5|scaling|ablation"))?;
+            let flags = Flags::parse(rest2)?;
+            match which {
+                "table1" => table1(),
+                "fig4" => fig4(&flags),
+                "fig5" => fig5(&flags),
+                "scaling" => scaling(&flags),
+                "ablation" => ablation(&flags),
+                other => bail!("unknown bench target '{other}'"),
+            }
+        }
+        "autotune" => autotune(&Flags::parse(rest)?),
+        "roofline" => roofline_cmd(&Flags::parse(rest)?),
+        "oracle" => oracle(&Flags::parse(rest)?),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `im2win help`)"),
+    }
+}
+
+const HELP: &str = "\
+im2win — high performance im2win & direct convolutions (Fu et al. 2024)
+
+USAGE:
+  im2win info
+  im2win verify   [--scale full|ci|smoke]
+  im2win bench table1
+  im2win bench fig4     [--scale S] [--layers conv5,conv9] [--threads T] [--config file.json]
+  im2win bench fig5     [--scale S] [--layers ...]
+  im2win bench scaling  [--algo direct|im2win] [--scale S] [--layers ...]
+  im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
+  im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win] [--scale S]
+  im2win roofline [--paper]
+  im2win oracle   [--layer conv9]
+";
+
+fn info() -> Result<()> {
+    let spec = MachineSpec::detect();
+    println!("im2win build info");
+    println!(
+        "  simd backend      : {}",
+        if im2win::simd::HAS_AVX2 { "AVX2+FMA (f32x8)" } else { "scalar" }
+    );
+    println!("  threads           : {}", im2win::parallel::global().threads());
+    println!("  cores detected    : {}", spec.cores_per_processor);
+    println!("  est. clock        : {:.2} GHz", spec.clock_hz / 1e9);
+    println!("  est. mem bandwidth: {:.1} GB/s", spec.mem_bw_bytes / 1e9);
+    println!("  peak (Eq. 4)      : {:.1} GFLOPS", spec.peak_flops() / 1e9);
+    println!("  paper server peak : 3584 GFLOPS (2x Xeon Gold 6330)");
+    Ok(())
+}
+
+fn table1() -> Result<()> {
+    println!("Table I — twelve convolution layers of the DNN benchmarks");
+    println!(
+        "{:<8} {:>18} {:>22} {:>18}",
+        "NAME", "INPUT CixHixWi", "FILTER CoxHfxWf,s", "OUTPUT CoxHoxWo"
+    );
+    for l in &layers::TABLE1 {
+        let p = l.params(128);
+        println!(
+            "{:<8} {:>18} {:>22} {:>18}",
+            l.name,
+            format!("{}x{}x{}", l.c_in, l.h_in, l.w_in),
+            format!("{}x{}x{}, {}", l.c_out, l.k, l.k, l.s),
+            format!("{}x{}x{}", p.c_out, p.h_out(), p.w_out()),
+        );
+    }
+    Ok(())
+}
+
+fn verify(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let results = experiments::verify(&cfg)?;
+    println!("verified {} algo x layout cells against the naive oracle", results.len());
+    for (cell, diff) in results {
+        println!("  {:<8} {:<6} max|diff| = {diff:.2e}", cell.algo.name(), cell.layout);
+    }
+    Ok(())
+}
+
+fn fig4(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let spec = MachineSpec::detect();
+    let roof = Roofline::new(spec);
+    println!(
+        "Fig. 4 — TFLOPS, scale={} (batch {}, spatial/{}), {} repeats, {} threads",
+        cfg.scale.name(),
+        cfg.scale.batch(),
+        cfg.scale.spatial_div(),
+        cfg.scale.repeats(),
+        im2win::parallel::global().threads()
+    );
+    let records = experiments::fig4(&cfg)?;
+    println!("{}", format_table(&records, |r| format!("{:.1}", r.gflops())));
+    println!(
+        "(GFLOPS; single-core attainable peak {:.1} GFLOPS)",
+        roof.spec.peak_flops_single_core() / 1e9
+    );
+    println!("\nWinners per layer:");
+    for (series, count) in summary::winners(&records) {
+        println!("  {series:<16} {count}");
+    }
+    println!("\nHeadline speedups (paper ranges in DESIGN.md):");
+    for s in summary::paper_headlines(&records) {
+        println!("  {s}");
+    }
+    write_csv(format!("{}/fig4_{}.csv", cfg.report_dir, cfg.scale.name()), &records)?;
+    write_json(format!("{}/fig4_{}.json", cfg.report_dir, cfg.scale.name()), &records)?;
+    println!("\nwrote {0}/fig4_{1}.csv and {0}/fig4_{1}.json", cfg.report_dir, cfg.scale.name());
+    Ok(())
+}
+
+fn fig5(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    println!("Fig. 5 — memory usage (MiB), scale={}", cfg.scale.name());
+    let records = experiments::fig5(&cfg)?;
+    println!(
+        "{}",
+        format_table(&records, |r| format!("{:.2}", r.mem_bytes as f64 / (1024.0 * 1024.0)))
+    );
+    for layout in ["NCHW", "NHWC"] {
+        if let Some((cd, wd, wc)) = summary::memory_ratios(&records, layout) {
+            println!(
+                "{layout}: im2col = {cd:.1}x direct, im2win = {wd:.1}x direct, im2win/im2col = {:.0}%",
+                wc * 100.0
+            );
+        }
+    }
+    write_csv(format!("{}/fig5_{}.csv", cfg.report_dir, cfg.scale.name()), &records)?;
+    Ok(())
+}
+
+fn scaling(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let algo = flags.algo(AlgoKind::Im2win)?;
+    println!(
+        "Figs. {} — {} batch scaling, sweep {:?}",
+        if algo == AlgoKind::Direct { "6-9" } else { "10-13" },
+        algo,
+        cfg.scale.batch_sweep()
+    );
+    let records = experiments::batch_scaling(&cfg, algo)?;
+    for layout in ["CHWN", "CHWN8", "NCHW", "NHWC"] {
+        let sub: Vec<_> = records.iter().filter(|r| r.layout == layout).cloned().collect();
+        if sub.is_empty() {
+            continue;
+        }
+        println!("\n[{algo} {layout}] GFLOPS by batch:");
+        let mut by_batch: Vec<usize> = sub.iter().map(|r| r.batch).collect();
+        by_batch.sort();
+        by_batch.dedup();
+        for r in &sub {
+            println!("  {:<8} N={:<4} {:>8.2} GFLOPS ({})", r.layer, r.batch, r.gflops(), fmt_time(r.best_s));
+        }
+    }
+    write_csv(
+        format!("{}/scaling_{}_{}.csv", cfg.report_dir, algo.name(), cfg.scale.name()),
+        &records,
+    )?;
+    Ok(())
+}
+
+fn ablation(flags: &Flags) -> Result<()> {
+    let scale = flags.scale()?;
+    let layout = flags.layout(Layout::Nhwc)?;
+    let name = flags.get("layer").unwrap_or("conv9");
+    let layer = layers::by_name(name).ok_or_else(|| anyhow!("unknown layer '{name}'"))?;
+    flags.apply_threads();
+    println!("Ablation ladder on {name} ({layout}), scale={}", scale.name());
+    let records = experiments::ablation(layer, layout, scale)?;
+    let naive = records[0].best_s;
+    for r in &records {
+        println!(
+            "  {:<24} {:>12}  {:>8.2} GFLOPS  ({:.1}x vs naive)",
+            r.algo,
+            fmt_time(r.best_s),
+            r.gflops(),
+            naive / r.best_s
+        );
+    }
+    Ok(())
+}
+
+fn autotune(flags: &Flags) -> Result<()> {
+    let scale = flags.scale()?;
+    let layout = flags.layout(Layout::Nhwc)?;
+    let algo = flags.algo(AlgoKind::Im2win)?;
+    let name = flags.get("layer").unwrap_or("conv5");
+    let layer = layers::by_name(name).ok_or_else(|| anyhow!("unknown layer '{name}'"))?;
+    flags.apply_threads();
+    let p = experiments::layer_params(layer, scale);
+    println!("Autotuning W_o,b for {algo} {layout} on {name} ({p})");
+    let report = tune_w_block(algo, layout, &p, scale.repeats())?;
+    for pt in &report.points {
+        println!(
+            "  W_o,b = {:<2}  {:>12}  {:>8.2} GFLOPS",
+            pt.w_block,
+            fmt_time(pt.result.best_s),
+            p.flops() as f64 / pt.result.best_s / 1e9
+        );
+    }
+    let best = report.best();
+    println!("best: W_o,b = {} ({:.2}x worst-to-best spread)", best.w_block, report.sensitivity());
+    Ok(())
+}
+
+fn roofline_cmd(flags: &Flags) -> Result<()> {
+    let spec = if flags.get("paper").is_some() {
+        MachineSpec::paper_server()
+    } else {
+        MachineSpec::detect()
+    };
+    let roof = Roofline::new(spec);
+    println!(
+        "Roofline ({} spec)",
+        if flags.get("paper").is_some() { "paper server" } else { "detected" }
+    );
+    println!("  peak         : {:.1} GFLOPS (Eq. 4)", roof.spec.peak_flops() / 1e9);
+    println!("  bandwidth    : {:.1} GB/s", roof.spec.mem_bw_bytes / 1e9);
+    println!("  ridge point  : {:.1} FLOP/byte", roof.ridge_intensity());
+    println!("\n  Table I arithmetic intensities (batch 128):");
+    for l in &layers::TABLE1 {
+        let p = l.params(128);
+        let ai = p.arithmetic_intensity();
+        println!(
+            "    {:<8} AI = {:>7.1} FLOP/B  -> {} bound, attainable {:.1} GFLOPS",
+            l.name,
+            ai,
+            if roof.compute_bound(ai) { "compute" } else { "memory " },
+            roof.attainable(ai) / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn oracle(flags: &Flags) -> Result<()> {
+    use im2win::runtime::{artifact_path, PjrtRuntime};
+    let name = flags.get("layer").unwrap_or("conv9");
+    let layer = layers::by_name(name).ok_or_else(|| anyhow!("unknown layer '{name}'"))?;
+    let p = layer.scaled_params(2, 8);
+    let rt = PjrtRuntime::cpu()?;
+    let path = artifact_path(&format!("conv_{name}"));
+    let module = rt.load_hlo_text(&path)?;
+    println!("loaded {} on {}", module.source, rt.platform());
+    let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
+    let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
+    let outputs = module.execute_tensors(&[&input, &filter])?;
+    let oracle = Tensor4::from_logical(p.output_dims(), Layout::Nhwc, &outputs[0]);
+    for algo in AlgoKind::BENCHED {
+        let got = algo.build().run(&input, &filter, &p)?;
+        let diff = oracle.max_abs_diff(&got);
+        println!("  {:<8} vs XLA oracle: max|diff| = {diff:.2e}", algo.name());
+        if diff > 1e-2 {
+            bail!("{} disagrees with the XLA oracle on {name}", algo.name());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! Allocation and runtime metrics.
+//!
+//! The paper's Fig. 5 reports the *memory usage* of each convolution
+//! algorithm × layout. We reproduce that measurement by instrumenting the
+//! tensor allocator ([`crate::tensor::AlignedBuf`]) with thread-safe
+//! counters: every aligned tensor allocation is recorded, and a
+//! [`MemoryScope`] captures the peak of `current` bytes over a region —
+//! exactly the "extra memory an algorithm needs while it runs".
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+static TOTAL_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static TOTAL_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Record an allocation of `bytes` (called by the tensor allocator).
+#[inline]
+pub fn record_alloc(bytes: usize) {
+    let live = LIVE_BYTES.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+    TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    TOTAL_BYTES.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Record a deallocation of `bytes`.
+#[inline]
+pub fn record_dealloc(bytes: usize) {
+    LIVE_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+}
+
+/// Bytes of tensor storage currently live.
+pub fn live_bytes() -> usize {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// A snapshot of the allocation counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemStats {
+    /// Tensor bytes live right now.
+    pub live: usize,
+    /// Peak live bytes since process start (or last scope reset).
+    pub peak: usize,
+    /// Number of tensor allocations performed.
+    pub allocs: usize,
+    /// Cumulative bytes ever allocated.
+    pub total: usize,
+}
+
+/// Read the global counters.
+pub fn stats() -> MemStats {
+    MemStats {
+        live: LIVE_BYTES.load(Ordering::Relaxed),
+        peak: PEAK_BYTES.load(Ordering::Relaxed),
+        allocs: TOTAL_ALLOCS.load(Ordering::Relaxed),
+        total: TOTAL_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Measures the *additional* peak tensor memory used inside a region.
+///
+/// ```
+/// use im2win::metrics::MemoryScope;
+/// use im2win::tensor::{Dims, Layout, Tensor4};
+/// let scope = MemoryScope::start();
+/// let t = Tensor4::zeros(Dims::new(1, 1, 64, 64), Layout::Nchw);
+/// assert!(scope.peak_extra_bytes() >= 64 * 64 * 4);
+/// drop(t);
+/// ```
+///
+/// Note: scopes measure the global counters, so concurrent allocation from
+/// other threads will be attributed to an open scope. The benchmark
+/// harness runs one measured algorithm at a time, matching the paper.
+pub struct MemoryScope {
+    base_live: usize,
+}
+
+impl MemoryScope {
+    /// Open a scope: resets the peak tracker to the current live bytes.
+    pub fn start() -> Self {
+        let base = LIVE_BYTES.load(Ordering::Relaxed);
+        PEAK_BYTES.store(base, Ordering::Relaxed);
+        MemoryScope { base_live: base }
+    }
+
+    /// Peak bytes allocated *above* the level at scope start.
+    pub fn peak_extra_bytes(&self) -> usize {
+        PEAK_BYTES.load(Ordering::Relaxed).saturating_sub(self.base_live)
+    }
+}
+
+/// Simple monotonic timer for the bench harness and coordinator.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: std::time::Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::AlignedBuf;
+
+    #[test]
+    fn counters_track_alloc_and_dealloc() {
+        let before = live_bytes();
+        let buf = AlignedBuf::zeroed(1024);
+        assert_eq!(live_bytes(), before + 4096);
+        drop(buf);
+        assert_eq!(live_bytes(), before);
+    }
+
+    #[test]
+    fn scope_measures_peak_extra() {
+        let scope = MemoryScope::start();
+        {
+            let _a = AlignedBuf::zeroed(256); // 1 KiB
+            let _b = AlignedBuf::zeroed(256); // 1 KiB, peak = 2 KiB
+        }
+        let _c = AlignedBuf::zeroed(64); // smaller than the earlier peak
+        assert!(scope.peak_extra_bytes() >= 2048, "peak={}", scope.peak_extra_bytes());
+    }
+
+    #[test]
+    fn timer_is_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.seconds() >= 0.002);
+    }
+}

@@ -1,0 +1,287 @@
+//! CNN model graph and runner.
+//!
+//! The paper's benchmark layers come from real networks (AlexNet, ZFNet,
+//! VGG, Overfeat — the MEC suite); this module lets a downstream user
+//! compose those layers into runnable models with any convolution
+//! algorithm × layout per layer:
+//!
+//! * [`Op`] — Conv2d / ReLU / MaxPool2d / GlobalAvgPool / Linear;
+//! * [`Model`] — a sequential graph with shape inference and a forward
+//!   pass (batch taken from the input tensor);
+//! * [`zoo`] — ready-made models: `mecnet` (the twelve Table I layers
+//!   chained with pooling/activation), and `tinynet` (the CIFAR-scale CNN
+//!   mirroring `python/compile/model.py`, used by the E2E train example to
+//!   cross-check the PJRT path).
+
+pub mod zoo;
+
+mod ops;
+
+pub use ops::{global_avg_pool, linear, max_pool2d, relu, relu_inplace};
+
+use crate::conv::{AlgoKind, Conv2d, ConvParams};
+use crate::error::{Error, Result};
+use crate::tensor::{Dims, Layout, Tensor4};
+
+/// One layer of a sequential CNN.
+pub enum Op {
+    /// 2-D convolution with a fixed filter.
+    Conv(Conv2d),
+    /// Elementwise `max(x, 0)`.
+    Relu,
+    /// Max pooling with square window `k` and stride `s` (valid padding).
+    MaxPool {
+        /// Pooling window edge.
+        k: usize,
+        /// Pooling stride.
+        s: usize,
+    },
+    /// Average over all `(h, w)` positions, leaving `(n, c, 1, 1)`.
+    GlobalAvgPool,
+    /// Fully connected layer over the flattened `(c·h·w)` features.
+    Linear {
+        /// Weight matrix `[out_features][in_features]`, row-major.
+        weight: Vec<f32>,
+        /// Output feature count.
+        out_features: usize,
+    },
+}
+
+impl Op {
+    /// Output dims for input dims `d`, or an error if incompatible.
+    pub fn out_dims(&self, d: Dims) -> Result<Dims> {
+        match self {
+            Op::Conv(conv) => {
+                let p = conv.params.with_batch(d.n);
+                if d != p.input_dims() {
+                    return Err(Error::ShapeMismatch(format!(
+                        "conv expects {}, got {d}",
+                        p.input_dims()
+                    )));
+                }
+                Ok(p.output_dims())
+            }
+            Op::Relu => Ok(d),
+            Op::MaxPool { k, s } => {
+                if *k == 0 || *s == 0 || *k > d.h || *k > d.w {
+                    return Err(Error::ShapeMismatch(format!("maxpool k={k} s={s} on {d}")));
+                }
+                Ok(Dims::new(d.n, d.c, (d.h - k) / s + 1, (d.w - k) / s + 1))
+            }
+            Op::GlobalAvgPool => Ok(Dims::new(d.n, d.c, 1, 1)),
+            Op::Linear { weight, out_features } => {
+                let in_features = d.c * d.h * d.w;
+                if weight.len() != in_features * out_features {
+                    return Err(Error::ShapeMismatch(format!(
+                        "linear weight {} != {in_features}x{out_features}",
+                        weight.len()
+                    )));
+                }
+                Ok(Dims::new(d.n, *out_features, 1, 1))
+            }
+        }
+    }
+}
+
+/// A sequential CNN. All intermediate activations use the model's layout.
+pub struct Model {
+    /// Human-readable model name.
+    pub name: String,
+    layout: Layout,
+    ops: Vec<Op>,
+    input_dims: Dims, // with n = reference batch (1)
+}
+
+impl Model {
+    /// Start an empty model taking inputs of shape `(·, c, h, w)`.
+    pub fn new(name: &str, layout: Layout, c: usize, h: usize, w: usize) -> Self {
+        Model { name: name.into(), layout, ops: vec![], input_dims: Dims::new(1, c, h, w) }
+    }
+
+    /// The model's activation layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Current output dims for a batch-1 input (shape inference).
+    pub fn out_dims(&self) -> Result<Dims> {
+        let mut d = self.input_dims;
+        for op in &self.ops {
+            d = op.out_dims(d)?;
+        }
+        Ok(d)
+    }
+
+    /// Append a convolution (filter generated or supplied by the caller).
+    pub fn conv(mut self, params: ConvParams, algo: AlgoKind, filter: &Tensor4) -> Result<Self> {
+        let d = self.out_dims()?;
+        let p = params.with_batch(1);
+        if p.input_dims() != d {
+            return Err(Error::ShapeMismatch(format!(
+                "conv input {} does not chain onto {}",
+                p.input_dims(),
+                d
+            )));
+        }
+        self.ops.push(Op::Conv(Conv2d::new(p, algo, self.layout, filter)?));
+        Ok(self)
+    }
+
+    /// Append a ReLU.
+    pub fn relu(mut self) -> Self {
+        self.ops.push(Op::Relu);
+        self
+    }
+
+    /// Append a max-pool.
+    pub fn max_pool(mut self, k: usize, s: usize) -> Result<Self> {
+        self.ops.push(Op::MaxPool { k, s });
+        self.out_dims()?; // validate chaining
+        Ok(self)
+    }
+
+    /// Append a global average pool.
+    pub fn global_avg_pool(mut self) -> Self {
+        self.ops.push(Op::GlobalAvgPool);
+        self
+    }
+
+    /// Append a fully connected layer with the given weight.
+    pub fn linear(mut self, weight: Vec<f32>, out_features: usize) -> Result<Self> {
+        self.ops.push(Op::Linear { weight, out_features });
+        self.out_dims()?;
+        Ok(self)
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the model has no layers.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Run the forward pass. The input may be in any layout; activations
+    /// flow in the model layout and the result is returned in it.
+    pub fn forward(&self, input: &Tensor4) -> Result<Tensor4> {
+        let mut x = if input.layout() == self.layout {
+            input.clone()
+        } else {
+            input.to_layout(self.layout)
+        };
+        let expect = Dims::new(input.dims().n, self.input_dims.c, self.input_dims.h, self.input_dims.w);
+        if x.dims() != expect {
+            return Err(Error::ShapeMismatch(format!(
+                "model {} expects input {expect}, got {}",
+                self.name,
+                x.dims()
+            )));
+        }
+        for op in &self.ops {
+            x = match op {
+                Op::Conv(conv) => conv.forward(&x)?,
+                Op::Relu => {
+                    let mut y = x;
+                    relu_inplace(&mut y);
+                    y
+                }
+                Op::MaxPool { k, s } => max_pool2d(&x, *k, *s)?,
+                Op::GlobalAvgPool => global_avg_pool(&x),
+                Op::Linear { weight, out_features } => linear(&x, weight, *out_features)?,
+            };
+        }
+        Ok(x)
+    }
+
+    /// Total FLOPs of one forward pass at batch `n` (conv + linear only;
+    /// elementwise ops are negligible and excluded, as in the paper).
+    pub fn flops(&self, n: usize) -> Result<u64> {
+        let mut d = Dims::new(n, self.input_dims.c, self.input_dims.h, self.input_dims.w);
+        let mut total = 0u64;
+        for op in &self.ops {
+            if let Op::Conv(conv) = op {
+                total += conv.params.with_batch(n).flops();
+            }
+            if let Op::Linear { out_features, .. } = op {
+                total += 2 * (n * d.c * d.h * d.w * out_features) as u64;
+            }
+            d = op.out_dims(d)?;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build_small(layout: Layout, algo: AlgoKind) -> Model {
+        let p1 = ConvParams::new(1, 3, 12, 12, 4, 3, 3, 1).unwrap();
+        let f1 = Tensor4::random(p1.filter_dims(), Layout::Nchw, 1);
+        let p2 = ConvParams::new(1, 4, 5, 5, 6, 3, 3, 1).unwrap();
+        let f2 = Tensor4::random(p2.filter_dims(), Layout::Nchw, 2);
+        let head: Vec<f32> = (0..6 * 10).map(|i| (i as f32) * 0.01 - 0.3).collect();
+        Model::new("small", layout, 3, 12, 12)
+            .conv(p1, algo, &f1)
+            .unwrap()
+            .relu()
+            .max_pool(2, 2)
+            .unwrap()
+            .conv(p2, algo, &f2)
+            .unwrap()
+            .relu()
+            .global_avg_pool()
+            .linear(head, 10)
+            .unwrap()
+    }
+
+    #[test]
+    fn shape_inference_chains() {
+        let m = build_small(Layout::Nhwc, AlgoKind::Naive);
+        assert_eq!(m.out_dims().unwrap(), Dims::new(1, 10, 1, 1));
+        assert_eq!(m.len(), 7);
+    }
+
+    #[test]
+    fn forward_runs_and_is_layout_invariant() {
+        let x = Tensor4::random(Dims::new(3, 3, 12, 12), Layout::Nchw, 5);
+        let base = build_small(Layout::Nchw, AlgoKind::Naive).forward(&x).unwrap();
+        assert_eq!(base.dims(), Dims::new(3, 10, 1, 1));
+        for layout in Layout::ALL {
+            for algo in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col] {
+                let m = build_small(layout, algo);
+                let y = m.forward(&x).unwrap();
+                assert!(
+                    base.allclose(&y, 1e-3, 1e-4),
+                    "{layout} {algo}: diff {}",
+                    base.max_abs_diff(&y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_conv_chain_rejected() {
+        let p1 = ConvParams::new(1, 3, 12, 12, 4, 3, 3, 1).unwrap();
+        let f1 = Tensor4::random(p1.filter_dims(), Layout::Nchw, 1);
+        // Second conv expects 8 channels but gets 4.
+        let p2 = ConvParams::new(1, 8, 10, 10, 6, 3, 3, 1).unwrap();
+        let f2 = Tensor4::random(p2.filter_dims(), Layout::Nchw, 2);
+        let err = Model::new("bad", Layout::Nchw, 3, 12, 12)
+            .conv(p1, AlgoKind::Naive, &f1)
+            .unwrap()
+            .conv(p2, AlgoKind::Naive, &f2);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn flops_counts_conv_and_linear() {
+        let m = build_small(Layout::Nchw, AlgoKind::Naive);
+        let f = m.flops(2).unwrap();
+        let p1 = ConvParams::new(2, 3, 12, 12, 4, 3, 3, 1).unwrap();
+        let p2 = ConvParams::new(2, 4, 5, 5, 6, 3, 3, 1).unwrap();
+        assert_eq!(f, p1.flops() + p2.flops() + 2 * (2 * 6 * 10) as u64);
+    }
+}

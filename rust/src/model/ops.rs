@@ -1,0 +1,180 @@
+//! Non-convolution model operators (ReLU, pooling, linear).
+//!
+//! These are supporting ops for the model runner, vectorized where the
+//! layout gives unit-stride access but deliberately simple — the paper's
+//! subject is the convolutions.
+
+use crate::error::{Error, Result};
+use crate::simd::{F32x8, LANES};
+use crate::tensor::{Dims, Tensor4};
+#[cfg(test)]
+use crate::tensor::Layout;
+
+/// Elementwise `max(x, 0)` in place (operates on raw storage: padding
+/// lanes of CHWN8 are zeros and stay zeros under ReLU).
+pub fn relu_inplace(x: &mut Tensor4) {
+    let data = x.data_mut();
+    let n = data.len();
+    let nv = n - n % LANES;
+    let zero = F32x8::zero();
+    let mut i = 0;
+    while i < nv {
+        // SAFETY: i + 8 <= n.
+        unsafe {
+            F32x8::load(data.as_ptr().add(i)).max(zero).store(data.as_mut_ptr().add(i));
+        }
+        i += LANES;
+    }
+    for v in &mut data[nv..] {
+        *v = v.max(0.0);
+    }
+}
+
+/// Elementwise ReLU into a fresh tensor.
+pub fn relu(x: &Tensor4) -> Tensor4 {
+    let mut y = x.clone();
+    relu_inplace(&mut y);
+    y
+}
+
+/// Valid max pooling with square window `k`, stride `s`.
+pub fn max_pool2d(x: &Tensor4, k: usize, s: usize) -> Result<Tensor4> {
+    let d = x.dims();
+    if k == 0 || s == 0 || k > d.h || k > d.w {
+        return Err(Error::ShapeMismatch(format!("maxpool k={k} s={s} on {d}")));
+    }
+    let out_d = Dims::new(d.n, d.c, (d.h - k) / s + 1, (d.w - k) / s + 1);
+    let mut y = Tensor4::zeros(out_d, x.layout());
+    for n in 0..d.n {
+        for c in 0..d.c {
+            for ho in 0..out_d.h {
+                for wo in 0..out_d.w {
+                    let mut m = f32::NEG_INFINITY;
+                    for u in 0..k {
+                        for v in 0..k {
+                            m = m.max(x.get(n, c, ho * s + u, wo * s + v));
+                        }
+                    }
+                    y.set(n, c, ho, wo, m);
+                }
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Mean over all `(h, w)` positions, producing `(n, c, 1, 1)`.
+pub fn global_avg_pool(x: &Tensor4) -> Tensor4 {
+    let d = x.dims();
+    let mut y = Tensor4::zeros(Dims::new(d.n, d.c, 1, 1), x.layout());
+    let inv = 1.0 / (d.h * d.w) as f32;
+    for n in 0..d.n {
+        for c in 0..d.c {
+            let mut acc = 0.0;
+            for h in 0..d.h {
+                for w in 0..d.w {
+                    acc += x.get(n, c, h, w);
+                }
+            }
+            y.set(n, c, 0, 0, acc * inv);
+        }
+    }
+    y
+}
+
+/// Fully connected layer: flattens `(c, h, w)` in **logical NCHW order**
+/// (so results are layout-independent) and multiplies by
+/// `weight[out_features][in_features]`. Output is `(n, out_features, 1, 1)`.
+pub fn linear(x: &Tensor4, weight: &[f32], out_features: usize) -> Result<Tensor4> {
+    let d = x.dims();
+    let in_features = d.c * d.h * d.w;
+    if weight.len() != in_features * out_features {
+        return Err(Error::ShapeMismatch(format!(
+            "linear weight {} != {in_features}x{out_features}",
+            weight.len()
+        )));
+    }
+    let mut y = Tensor4::zeros(Dims::new(d.n, out_features, 1, 1), x.layout());
+    // Flatten per image in logical order (cheap relative to conv layers).
+    let mut feat = vec![0.0f32; in_features];
+    for n in 0..d.n {
+        let mut i = 0;
+        for c in 0..d.c {
+            for h in 0..d.h {
+                for w in 0..d.w {
+                    feat[i] = x.get(n, c, h, w);
+                    i += 1;
+                }
+            }
+        }
+        for (o, row) in weight.chunks(in_features).enumerate() {
+            y.set(n, o, 0, 0, crate::simd::dot(&feat, row));
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negatives_all_layouts() {
+        for layout in Layout::ALL {
+            let x = Tensor4::random(Dims::new(3, 2, 4, 5), layout, 3);
+            let y = relu(&x);
+            for (n, c, h, w) in x.dims().iter() {
+                assert_eq!(y.get(n, c, h, w), x.get(n, c, h, w).max(0.0), "{layout}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_pool_known_answer() {
+        let x = Tensor4::from_logical(
+            Dims::new(1, 1, 4, 4),
+            Layout::Nchw,
+            &[1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12., 13., 14., 15., 16.],
+        );
+        let y = max_pool2d(&x, 2, 2).unwrap();
+        assert_eq!(y.logical_vec(), vec![6., 8., 14., 16.]);
+        // Overlapping 3x3 stride 1.
+        let z = max_pool2d(&x, 3, 1).unwrap();
+        assert_eq!(z.logical_vec(), vec![11., 12., 15., 16.]);
+    }
+
+    #[test]
+    fn max_pool_rejects_oversized_window() {
+        let x = Tensor4::zeros(Dims::new(1, 1, 3, 3), Layout::Nchw);
+        assert!(max_pool2d(&x, 4, 1).is_err());
+        assert!(max_pool2d(&x, 2, 0).is_err());
+    }
+
+    #[test]
+    fn global_avg_pool_means() {
+        let x = Tensor4::from_fn(Dims::new(2, 3, 2, 2), Layout::Nhwc, |n, c, h, w| {
+            (n + c + h + w) as f32
+        });
+        let y = global_avg_pool(&x);
+        assert_eq!(y.dims(), Dims::new(2, 3, 1, 1));
+        // mean over h,w of (n+c+h+w) = n + c + mean(h+w) = n + c + 1
+        for n in 0..2 {
+            for c in 0..3 {
+                assert!((y.get(n, c, 0, 0) - (n + c) as f32 - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_is_layout_invariant() {
+        let d = Dims::new(2, 3, 2, 2);
+        let x = Tensor4::random(d, Layout::Nchw, 7);
+        let w: Vec<f32> = (0..12 * 4).map(|i| (i as f32) * 0.1).collect();
+        let base = linear(&x, &w, 4).unwrap();
+        for layout in Layout::ALL {
+            let y = linear(&x.to_layout(layout), &w, 4).unwrap();
+            assert!(base.allclose(&y, 1e-5, 1e-6), "{layout}");
+        }
+        assert!(linear(&x, &w[1..], 4).is_err());
+    }
+}

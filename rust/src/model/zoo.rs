@@ -1,0 +1,113 @@
+//! Ready-made models.
+//!
+//! * [`tinynet`] — the CIFAR-scale CNN that mirrors the JAX model in
+//!   `python/compile/model.py` layer-for-layer; the E2E example trains the
+//!   JAX version through PJRT and then runs inference through this one to
+//!   prove the two stacks agree.
+//! * [`vgg_stack`] — a VGG-style chain built from the paper's conv7–conv12
+//!   geometry family (3×3, stride 1, doubling channels with 2×2 pools),
+//!   used by the `cnn_inference` example to exercise realistic depth.
+
+use super::Model;
+use crate::conv::{AlgoKind, ConvParams};
+use crate::error::Result;
+use crate::tensor::{Layout, Tensor4};
+use crate::testutil::Rng;
+
+/// Deterministic filter with a He-like scale for stable activations.
+fn filter(p: &ConvParams, seed: u64) -> Tensor4 {
+    let scale = (2.0 / (p.c_in * p.h_f * p.w_f) as f32).sqrt();
+    let mut rng = Rng::new(seed);
+    Tensor4::from_fn(p.filter_dims(), Layout::Nchw, |_, _, _, _| rng.f32() * scale)
+}
+
+/// CIFAR-scale CNN (~19k parameters): mirrors `python/compile/model.py`.
+///
+/// ```text
+/// 3×32×32 → conv3×3(16) → ReLU → pool2
+///         → conv3×3(32) → ReLU → pool2
+///         → conv3×3(32) → ReLU → GAP → linear(10)
+/// ```
+pub fn tinynet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
+    let p1 = ConvParams::new(1, 3, 32, 32, 16, 3, 3, 1)?;
+    let p2 = ConvParams::new(1, 16, 15, 15, 32, 3, 3, 1)?;
+    let p3 = ConvParams::new(1, 32, 6, 6, 32, 3, 3, 1)?;
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let head: Vec<f32> = (0..32 * 10).map(|_| rng.f32() * 0.1).collect();
+    Model::new("tinynet", layout, 3, 32, 32)
+        .conv(p1, algo, &filter(&p1, seed + 1))?
+        .relu()
+        .max_pool(2, 2)?
+        .conv(p2, algo, &filter(&p2, seed + 2))?
+        .relu()
+        .max_pool(2, 2)?
+        .conv(p3, algo, &filter(&p3, seed + 3))?
+        .relu()
+        .global_avg_pool()
+        .linear(head, 10)
+}
+
+/// VGG-style stack from the paper's 3×3/stride-1 layer family, at an
+/// `edge×edge` input (use 64 for a quick run, 224 for realism).
+pub fn vgg_stack(layout: Layout, algo: AlgoKind, edge: usize, seed: u64) -> Result<Model> {
+    // conv7-like: 3 -> 64
+    let p1 = ConvParams::new(1, 3, edge, edge, 64, 3, 3, 1)?;
+    let e1 = p1.h_out() / 2; // after pool
+    // conv8-like: 64 -> 128
+    let p2 = ConvParams::new(1, 64, e1, e1, 128, 3, 3, 1)?;
+    let e2 = p2.h_out() / 2;
+    // conv10-like: 128 -> 128
+    let p3 = ConvParams::new(1, 128, e2, e2, 128, 3, 3, 1)?;
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let head: Vec<f32> = (0..128 * 10).map(|_| rng.f32() * 0.05).collect();
+    Model::new("vgg_stack", layout, 3, edge, edge)
+        .conv(p1, algo, &filter(&p1, seed + 10))?
+        .relu()
+        .max_pool(2, 2)?
+        .conv(p2, algo, &filter(&p2, seed + 11))?
+        .relu()
+        .max_pool(2, 2)?
+        .conv(p3, algo, &filter(&p3, seed + 12))?
+        .relu()
+        .global_avg_pool()
+        .linear(head, 10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dims;
+
+    #[test]
+    fn tinynet_shapes() {
+        let m = tinynet(Layout::Nhwc, AlgoKind::Im2win, 1).unwrap();
+        assert_eq!(m.out_dims().unwrap(), Dims::new(1, 10, 1, 1));
+        let x = Tensor4::random(Dims::new(4, 3, 32, 32), Layout::Nhwc, 2);
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.dims(), Dims::new(4, 10, 1, 1));
+    }
+
+    #[test]
+    fn tinynet_agrees_across_algorithms() {
+        let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nchw, 3);
+        let base = tinynet(Layout::Nchw, AlgoKind::Naive, 9).unwrap().forward(&x).unwrap();
+        for algo in AlgoKind::BENCHED {
+            for layout in [Layout::Nhwc, Layout::Chwn8] {
+                let m = tinynet(layout, algo, 9).unwrap();
+                let y = m.forward(&x).unwrap();
+                assert!(
+                    base.allclose(&y, 1e-3, 1e-4),
+                    "{algo} {layout}: diff {}",
+                    base.max_abs_diff(&y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vgg_stack_builds_at_64() {
+        let m = vgg_stack(Layout::Nhwc, AlgoKind::Im2win, 64, 4).unwrap();
+        assert_eq!(m.out_dims().unwrap(), Dims::new(1, 10, 1, 1));
+        assert!(m.flops(1).unwrap() > 100_000_000); // deep enough to matter
+    }
+}

@@ -1,0 +1,72 @@
+//! Thread-level parallelism substrate.
+//!
+//! The paper parallelizes the outer convolution loops with OpenMP using
+//! *guided* scheduling and coalesces the `N_i` and `H_o` loops into one
+//! parallel loop for load balance (§III-D). Neither OpenMP nor a thread-pool
+//! crate is available offline, so this module implements the substrate from
+//! scratch:
+//!
+//! * [`ThreadPool`] — a persistent fork-join pool. The calling thread
+//!   participates as a worker, so a 1-thread pool runs fully inline with
+//!   zero synchronization overhead (important on the single-core CI box).
+//! * Guided self-scheduling: workers repeatedly claim
+//!   `max(remaining / (2·T), min_chunk)` iterations from a shared atomic
+//!   counter — the same policy as OpenMP's `schedule(guided)`.
+//! * [`ThreadPool::parallel_for_coalesced`] — the paper's `N_i × H_o`
+//!   coalescing, exposed generically as a flattened 2-D index space.
+
+mod pool;
+
+pub use pool::{global, set_global_threads, ThreadPool};
+
+/// Splits `0..len` into `pieces` nearly-equal contiguous ranges.
+///
+/// Used for static partitioning (NUMA-style coarse splits) and by tests.
+pub fn split_ranges(len: usize, pieces: usize) -> Vec<std::ops::Range<usize>> {
+    if pieces == 0 || len == 0 {
+        return vec![];
+    }
+    let base = len / pieces;
+    let rem = len % pieces;
+    let mut out = Vec::with_capacity(pieces);
+    let mut start = 0;
+    for i in 0..pieces {
+        let sz = base + usize::from(i < rem);
+        if sz == 0 {
+            continue;
+        }
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for len in [0, 1, 7, 100] {
+            for pieces in [1, 2, 3, 8, 200] {
+                let ranges = split_ranges(len, pieces);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len, "len={len} pieces={pieces}");
+                // contiguous & ordered
+                let mut expect = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, expect);
+                    assert!(!r.is_empty());
+                    expect = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_ranges_is_balanced() {
+        let ranges = split_ranges(10, 3);
+        let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+}

@@ -1,0 +1,345 @@
+//! Persistent fork-join thread pool with guided self-scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Minimum iterations a worker claims per steal; keeps contention on the
+/// shared counter negligible for the fine-grained conv loops.
+const MIN_CHUNK: usize = 1;
+
+/// A dispatched parallel-for job. The function pointer is lifetime-erased;
+/// `ThreadPool::run` guarantees the referent outlives every worker's use by
+/// blocking until all participants finish.
+struct Job {
+    /// `*const dyn Fn(usize)` with the lifetime erased.
+    func: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed iteration index.
+    next: AtomicUsize,
+    /// One-past-last iteration index.
+    end: usize,
+    /// Worker count participating (for the guided chunk formula).
+    nthreads: usize,
+}
+
+// SAFETY: Job is only shared while `run` blocks on job completion, so the
+// erased borrow in `func` remains valid for every access.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim the next guided chunk; returns `None` when the range is empty.
+    fn claim(&self) -> Option<std::ops::Range<usize>> {
+        loop {
+            let cur = self.next.load(Ordering::Relaxed);
+            if cur >= self.end {
+                return None;
+            }
+            let remaining = self.end - cur;
+            // OpenMP guided: chunk proportional to remaining work.
+            let chunk = (remaining / (2 * self.nthreads)).max(MIN_CHUNK).min(remaining);
+            if self
+                .next
+                .compare_exchange_weak(cur, cur + chunk, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(cur..cur + chunk);
+            }
+        }
+    }
+
+    fn run_to_completion(&self) {
+        // SAFETY: see struct invariant.
+        let f = unsafe { &*self.func };
+        while let Some(range) = self.claim() {
+            for i in range {
+                f(i);
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+#[derive(Default)]
+struct State {
+    /// Current job (raw pointer so `State: Default`); valid while `pending > 0`.
+    job: Option<std::sync::Arc<Job>>,
+    /// Bumped for every dispatched job so sleeping workers notice new work.
+    generation: u64,
+    /// Workers still executing the current job.
+    running: usize,
+    shutdown: bool,
+}
+
+/// A persistent fork-join thread pool (OpenMP `parallel for` substitute).
+///
+/// The pool owns `threads - 1` background workers; the thread calling
+/// [`ThreadPool::parallel_for`] joins in as the final worker. Jobs use
+/// guided self-scheduling over the iteration space.
+pub struct ThreadPool {
+    shared: std::sync::Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    nthreads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool that runs jobs on `threads` total threads
+    /// (`threads - 1` spawned + the caller). `threads` is clamped to ≥ 1.
+    pub fn new(threads: usize) -> Self {
+        let nthreads = threads.max(1);
+        let shared = std::sync::Arc::new(Shared::default());
+        let workers = (1..nthreads)
+            .map(|i| {
+                let shared = std::sync::Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("im2win-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, nthreads }
+    }
+
+    /// Number of threads (including the caller).
+    pub fn threads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Run `f(i)` for every `i` in `0..len`, distributing iterations over
+    /// the pool with guided scheduling. Blocks until all iterations finish.
+    pub fn parallel_for<F>(&self, len: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if len == 0 {
+            return;
+        }
+        if self.nthreads == 1 || len == 1 {
+            // Inline fast path: no synchronization at all.
+            for i in 0..len {
+                f(i);
+            }
+            return;
+        }
+
+        let job = std::sync::Arc::new(Job {
+            // Erase the closure's lifetime. Safe because this function does
+            // not return until `running == 0` and the job is cleared.
+            func: unsafe {
+                std::mem::transmute::<*const (dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(
+                    &f as &(dyn Fn(usize) + Sync) as *const _,
+                )
+            },
+            next: AtomicUsize::new(0),
+            end: len,
+            nthreads: self.nthreads,
+        });
+
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "nested parallel_for on the same pool");
+            st.job = Some(std::sync::Arc::clone(&job));
+            st.generation += 1;
+            st.running = self.nthreads - 1;
+            self.shared.work_cv.notify_all();
+        }
+
+        // The caller is a worker too.
+        job.run_to_completion();
+
+        // Wait for background workers to drain their chunks.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.running > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// The paper's loop coalescing: runs `f(a, b)` for the flattened space
+    /// `0..a_len × 0..b_len` as a single guided parallel loop, giving better
+    /// load balance than parallelizing `a` alone when `a_len < threads`
+    /// (§III-D coalesces `N_i` and `H_o` this way).
+    pub fn parallel_for_coalesced<F>(&self, a_len: usize, b_len: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if b_len == 0 {
+            return;
+        }
+        self.parallel_for(a_len * b_len, |im| f(im / b_len, im % b_len));
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen_gen {
+                    if let Some(job) = st.job.clone() {
+                        seen_gen = st.generation;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+
+        job.run_to_completion();
+
+        let mut st = shared.state.lock().unwrap();
+        st.running -= 1;
+        if st.running == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the thread count used when the global pool is first created.
+/// Has no effect once [`global`] has been called. Returns `true` if the
+/// setting was applied before pool creation.
+pub fn set_global_threads(threads: usize) -> bool {
+    if GLOBAL.get().is_some() {
+        return false;
+    }
+    GLOBAL_THREADS.store(threads.max(1), Ordering::Relaxed);
+    true
+}
+
+/// The process-wide pool used by the convolution kernels.
+///
+/// Thread count resolution order: [`set_global_threads`], then the
+/// `IM2WIN_THREADS` environment variable, then
+/// `std::thread::available_parallelism()`.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let configured = GLOBAL_THREADS.load(Ordering::Relaxed);
+        let threads = if configured > 0 {
+            configured
+        } else if let Ok(v) = std::env::var("IM2WIN_THREADS") {
+            v.parse().unwrap_or(1)
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        ThreadPool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            for len in [0, 1, 7, 1000] {
+                let hits: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+                pool.parallel_for(len, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "threads={threads} len={len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_covers_2d_space() {
+        let pool = ThreadPool::new(4);
+        let (a, b) = (5, 13);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for_coalesced(a, b, |i, j| {
+            assert!(i < a && j < b);
+            sum.fetch_add((i * 100 + j) as u64, Ordering::Relaxed);
+        });
+        let expect: u64 =
+            (0..a).flat_map(|i| (0..b).map(move |j| (i * 100 + j) as u64)).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.parallel_for(17, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 50 * 17);
+    }
+
+    #[test]
+    fn borrows_non_static_data() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let out: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(64, |i| {
+            out[i].store(data[i] as usize * 2, Ordering::Relaxed);
+        });
+        for i in 0..64 {
+            assert_eq!(out[i].load(Ordering::Relaxed), i * 2);
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        // A non-Send side effect would fail to compile on a real dispatch
+        // path; here we just check ordering is sequential for T=1.
+        let mut order = vec![];
+        let cell = std::sync::Mutex::new(&mut order);
+        pool.parallel_for(10, |i| {
+            cell.lock().unwrap().push(i);
+        });
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn guided_chunks_shrink() {
+        let job = Job {
+            func: &(|_i: usize| {}) as &(dyn Fn(usize) + Sync) as *const _,
+            next: AtomicUsize::new(0),
+            end: 1000,
+            nthreads: 4,
+        };
+        let first = job.claim().unwrap();
+        let second = job.claim().unwrap();
+        assert_eq!(first, 0..125); // 1000 / (2*4)
+        assert!(second.len() <= first.len());
+        // Draining terminates.
+        while job.claim().is_some() {}
+        assert!(job.claim().is_none());
+    }
+}

@@ -1,0 +1,175 @@
+//! 64-byte-aligned `f32` buffers.
+//!
+//! The paper (§III-D) stores tensors with `posix_memalign` so every element
+//! access touches exactly one cache line and AVX2 loads can use the aligned
+//! forms. We reproduce the same guarantee with `std::alloc` and a 64-byte
+//! alignment (one x86-64 cache line, also the AVX-512 register width).
+
+use std::alloc::{self, Layout as AllocLayout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+use crate::metrics;
+
+/// Cache-line alignment used for all tensor storage, in bytes.
+pub const ALIGN: usize = 64;
+
+/// A heap buffer of `f32` guaranteed to start on a 64-byte boundary.
+///
+/// Dereferences to `&[f32]` / `&mut [f32]`. Zero-initialized on creation
+/// (convolution outputs accumulate, so this is also semantically useful).
+pub struct AlignedBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+// SAFETY: AlignedBuf uniquely owns its allocation, like Vec<f32>.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Allocate a zero-filled buffer of `len` floats.
+    ///
+    /// `len == 0` is allowed and performs no allocation.
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return AlignedBuf { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0) and valid alignment.
+        let raw = unsafe { alloc::alloc_zeroed(layout) };
+        let Some(ptr) = NonNull::new(raw as *mut f32) else {
+            alloc::handle_alloc_error(layout);
+        };
+        metrics::record_alloc(layout.size());
+        AlignedBuf { ptr, len }
+    }
+
+    /// Allocate a buffer initialized from a slice.
+    pub fn from_slice(data: &[f32]) -> Self {
+        let mut buf = Self::zeroed(data.len());
+        buf.copy_from_slice(data);
+        buf
+    }
+
+    /// Number of `f32` elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the buffer holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw const pointer to the first element.
+    #[inline]
+    pub fn as_ptr(&self) -> *const f32 {
+        self.ptr.as_ptr()
+    }
+
+    /// Raw mut pointer to the first element.
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut f32 {
+        self.ptr.as_ptr()
+    }
+
+    fn layout(len: usize) -> AllocLayout {
+        AllocLayout::from_size_align(len * std::mem::size_of::<f32>(), ALIGN)
+            .expect("buffer size overflows allocation layout")
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len != 0 {
+            let layout = Self::layout(self.len);
+            metrics::record_dealloc(layout.size());
+            // SAFETY: allocated in `zeroed` with the identical layout.
+            unsafe { alloc::dealloc(self.ptr.as_ptr() as *mut u8, layout) };
+        }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        Self::from_slice(self)
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        // SAFETY: ptr/len describe a live allocation (or a dangling ptr with
+        // len 0, which is valid for empty slices).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus &mut self guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf(len={})", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_64_bytes() {
+        for len in [1, 7, 8, 63, 64, 1000] {
+            let buf = AlignedBuf::zeroed(len);
+            assert_eq!(buf.as_ptr() as usize % ALIGN, 0, "len={len}");
+        }
+    }
+
+    #[test]
+    fn zero_initialized() {
+        let buf = AlignedBuf::zeroed(129);
+        assert!(buf.iter().all(|&x| x == 0.0));
+        assert_eq!(buf.len(), 129);
+    }
+
+    #[test]
+    fn empty_buffer_is_ok() {
+        let buf = AlignedBuf::zeroed(0);
+        assert!(buf.is_empty());
+        assert_eq!(&buf[..], &[] as &[f32]);
+    }
+
+    #[test]
+    fn from_slice_round_trips() {
+        let data: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let buf = AlignedBuf::from_slice(&data);
+        assert_eq!(&buf[..], &data[..]);
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let mut a = AlignedBuf::from_slice(&[1.0, 2.0, 3.0]);
+        let b = a.clone();
+        a[0] = 42.0;
+        assert_eq!(b[0], 1.0);
+    }
+
+    #[test]
+    fn write_read() {
+        let mut buf = AlignedBuf::zeroed(16);
+        for (i, x) in buf.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        assert_eq!(buf[15], 15.0);
+    }
+}

@@ -1,0 +1,272 @@
+//! The four physical tensor layouts of the paper and their index math.
+//!
+//! Logical coordinates are always `(n, c, h, w)`; a [`Layout`] defines how
+//! those map to a flat offset:
+//!
+//! * **NCHW** — `w` contiguous (unit stride), then `h`, `c`, `n`. The
+//!   classic PyTorch default (paper Fig. 1).
+//! * **NHWC** — `c` contiguous, then `w`, `h`, `n`. The paper's best layout
+//!   for both im2win and direct convolution (Fig. 2).
+//! * **CHWN** — `n` contiguous, then `w`, `h`, `c` (paper Fig. 3, from the
+//!   GPU literature).
+//! * **CHWN8** — the paper's novel layout: the batch is split into blocks of
+//!   8 (`CHWN8_BLOCK`, one AVX2 register of f32); 8 batch elements are laid
+//!   innermost and the remaining `N/8` blocks outermost:
+//!   physical shape `[N/8][C][H][W][8]`. This feeds 256-bit vector registers
+//!   with unit-stride loads without dragging unrelated batch elements
+//!   through the cache (paper §III-B).
+//!
+//! For CHWN8, `N` is padded up to a multiple of 8 (paper: "N_i can be set to
+//! a multiple of 8 (with padding if necessary)"); [`Layout::storage_len`]
+//! accounts for the padding.
+
+use super::Dims;
+
+/// Batch-block size of the CHWN8 layout: 8 f32 lanes = one 256-bit AVX2
+/// register, the paper's `N_vec`.
+pub const CHWN8_BLOCK: usize = 8;
+
+/// Physical data layout of a 4-D tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Batch, channel, height, width — width contiguous.
+    Nchw,
+    /// Batch, height, width, channel — channel contiguous.
+    Nhwc,
+    /// Channel, height, width, batch — batch contiguous.
+    Chwn,
+    /// Blocked batch: `[N/8][C][H][W][8]` — 8 batch lanes contiguous.
+    Chwn8,
+}
+
+/// Per-logical-dimension strides (in elements) for a layout/dims pair.
+///
+/// For the blocked `Chwn8` layout, `n` is the stride between *consecutive
+/// batch indices within a block* (always 1) and `n_block` is the stride
+/// between batch blocks; for the linear layouts `n_block` equals `n *
+/// CHWN8_BLOCK` so generic code can treat every layout uniformly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Strides {
+    /// Stride of the batch dimension (within a block for CHWN8).
+    pub n: usize,
+    /// Stride of the channel dimension.
+    pub c: usize,
+    /// Stride of the height dimension.
+    pub h: usize,
+    /// Stride of the width dimension.
+    pub w: usize,
+    /// Stride between 8-batch blocks (CHWN8); `n * 8` otherwise.
+    pub n_block: usize,
+}
+
+impl Layout {
+    /// All four layouts, in the order the paper's figures enumerate them.
+    pub const ALL: [Layout; 4] = [Layout::Nhwc, Layout::Nchw, Layout::Chwn, Layout::Chwn8];
+
+    /// Short lowercase name used in configs, CLI flags and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Nchw => "nchw",
+            Layout::Nhwc => "nhwc",
+            Layout::Chwn => "chwn",
+            Layout::Chwn8 => "chwn8",
+        }
+    }
+
+    /// Parse a layout from its [`Layout::name`] (case-insensitive).
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s.to_ascii_lowercase().as_str() {
+            "nchw" => Some(Layout::Nchw),
+            "nhwc" => Some(Layout::Nhwc),
+            "chwn" => Some(Layout::Chwn),
+            "chwn8" => Some(Layout::Chwn8),
+            _ => None,
+        }
+    }
+
+    /// Number of `f32` elements required to store `dims` in this layout.
+    ///
+    /// Equals `dims.count()` for the linear layouts; CHWN8 pads the batch to
+    /// a multiple of [`CHWN8_BLOCK`].
+    #[inline]
+    pub fn storage_len(&self, dims: Dims) -> usize {
+        match self {
+            Layout::Chwn8 => self.padded_n(dims.n) * dims.c * dims.h * dims.w,
+            _ => dims.count(),
+        }
+    }
+
+    /// Batch size after CHWN8 padding (identity for other layouts).
+    #[inline]
+    pub fn padded_n(&self, n: usize) -> usize {
+        match self {
+            Layout::Chwn8 => n.div_ceil(CHWN8_BLOCK) * CHWN8_BLOCK,
+            _ => n,
+        }
+    }
+
+    /// Element strides for a tensor of `dims` in this layout.
+    #[inline]
+    pub fn strides(&self, dims: Dims) -> Strides {
+        let Dims { n, c, h, w } = dims;
+        match self {
+            Layout::Nchw => {
+                let s = Strides { w: 1, h: w, c: h * w, n: c * h * w, n_block: 0 };
+                Strides { n_block: s.n * CHWN8_BLOCK, ..s }
+            }
+            Layout::Nhwc => {
+                let s = Strides { c: 1, w: c, h: w * c, n: h * w * c, n_block: 0 };
+                Strides { n_block: s.n * CHWN8_BLOCK, ..s }
+            }
+            Layout::Chwn => {
+                let s = Strides { n: 1, w: n, h: w * n, c: h * w * n, n_block: 0 };
+                Strides { n_block: s.n * CHWN8_BLOCK, ..s }
+            }
+            Layout::Chwn8 => Strides {
+                n: 1, // within a block
+                w: CHWN8_BLOCK,
+                h: w * CHWN8_BLOCK,
+                c: h * w * CHWN8_BLOCK,
+                n_block: c * h * w * CHWN8_BLOCK,
+            },
+        }
+    }
+
+    /// Flat offset of logical coordinate `(n, c, h, w)`.
+    #[inline(always)]
+    pub fn index(&self, dims: Dims, n: usize, c: usize, h: usize, w: usize) -> usize {
+        debug_assert!(n < dims.n && c < dims.c && h < dims.h && w < dims.w,
+            "coord ({n},{c},{h},{w}) out of bounds for {dims}");
+        let s = self.strides(dims);
+        match self {
+            Layout::Chwn8 => {
+                (n / CHWN8_BLOCK) * s.n_block + c * s.c + h * s.h + w * s.w + (n % CHWN8_BLOCK)
+            }
+            _ => n * s.n + c * s.c + h * s.h + w * s.w,
+        }
+    }
+
+    /// Which logical dimension is contiguous (unit-stride) in memory.
+    ///
+    /// This drives the loop-reordering rules of paper §III-C: layouts with a
+    /// `CHW` access pattern (NCHW, CHWN, CHWN8) put the window *width*
+    /// innermost; NHWC puts the *channel* innermost.
+    pub fn unit_stride_dim(&self) -> &'static str {
+        match self {
+            Layout::Nchw => "w",
+            Layout::Nhwc => "c",
+            Layout::Chwn | Layout::Chwn8 => "n",
+        }
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Reports use the uppercase names the paper uses.
+        let s = match self {
+            Layout::Nchw => "NCHW",
+            Layout::Nhwc => "NHWC",
+            Layout::Chwn => "CHWN",
+            Layout::Chwn8 => "CHWN8",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every layout must be a bijection from logical coords onto
+    /// `0..storage_len` (minus CHWN8 padding slots).
+    #[test]
+    fn index_is_injective_and_in_bounds() {
+        let dims = Dims::new(10, 3, 4, 5); // n=10 exercises CHWN8 padding
+        for layout in Layout::ALL {
+            let len = layout.storage_len(dims);
+            let mut seen = vec![false; len];
+            for (n, c, h, w) in dims.iter() {
+                let idx = layout.index(dims, n, c, h, w);
+                assert!(idx < len, "{layout}: idx {idx} >= len {len}");
+                assert!(!seen[idx], "{layout}: duplicate index {idx}");
+                seen[idx] = true;
+            }
+            let used = seen.iter().filter(|&&b| b).count();
+            assert_eq!(used, dims.count(), "{layout}");
+        }
+    }
+
+    #[test]
+    fn nchw_w_is_contiguous() {
+        let d = Dims::new(2, 3, 4, 5);
+        let base = Layout::Nchw.index(d, 1, 2, 3, 0);
+        for w in 0..d.w {
+            assert_eq!(Layout::Nchw.index(d, 1, 2, 3, w), base + w);
+        }
+    }
+
+    #[test]
+    fn nhwc_c_is_contiguous() {
+        let d = Dims::new(2, 3, 4, 5);
+        let base = Layout::Nhwc.index(d, 1, 0, 3, 4);
+        for c in 0..d.c {
+            assert_eq!(Layout::Nhwc.index(d, 1, c, 3, 4), base + c);
+        }
+    }
+
+    #[test]
+    fn chwn_n_is_contiguous() {
+        let d = Dims::new(6, 3, 4, 5);
+        let base = Layout::Chwn.index(d, 0, 2, 3, 4);
+        for n in 0..d.n {
+            assert_eq!(Layout::Chwn.index(d, n, 2, 3, 4), base + n);
+        }
+    }
+
+    #[test]
+    fn chwn8_blocks_of_8_are_contiguous() {
+        let d = Dims::new(16, 3, 4, 5);
+        // Within a block: consecutive n are adjacent.
+        let base = Layout::Chwn8.index(d, 8, 1, 2, 3);
+        for i in 0..CHWN8_BLOCK {
+            assert_eq!(Layout::Chwn8.index(d, 8 + i, 1, 2, 3), base + i);
+        }
+        // Next w within the same block is 8 elements away.
+        assert_eq!(Layout::Chwn8.index(d, 8, 1, 2, 4), base + CHWN8_BLOCK);
+    }
+
+    #[test]
+    fn chwn8_padding() {
+        let d = Dims::new(10, 2, 3, 3);
+        assert_eq!(Layout::Chwn8.padded_n(10), 16);
+        assert_eq!(Layout::Chwn8.storage_len(d), 16 * 2 * 3 * 3);
+        assert_eq!(Layout::Nchw.storage_len(d), d.count());
+        // Multiples of 8 need no padding.
+        assert_eq!(Layout::Chwn8.padded_n(8), 8);
+        assert_eq!(Layout::Chwn8.padded_n(0), 0);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for l in Layout::ALL {
+            assert_eq!(Layout::parse(l.name()), Some(l));
+            assert_eq!(Layout::parse(&l.to_string()), Some(l));
+        }
+        assert_eq!(Layout::parse("nc32hw32"), None);
+    }
+
+    #[test]
+    fn strides_match_index_for_linear_layouts() {
+        let d = Dims::new(4, 3, 5, 6);
+        for layout in [Layout::Nchw, Layout::Nhwc, Layout::Chwn] {
+            let s = layout.strides(d);
+            for (n, c, h, w) in d.iter() {
+                assert_eq!(
+                    layout.index(d, n, c, h, w),
+                    n * s.n + c * s.c + h * s.h + w * s.w,
+                    "{layout}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Tensor substrate: aligned buffers, logical dims, the four physical
+//! layouts of the paper (NCHW, NHWC, CHWN, CHWN8) and the any-to-any
+//! layout transformation engine.
+
+mod alloc;
+mod layout;
+mod shape;
+#[allow(clippy::module_inception)]
+mod tensor;
+mod transform;
+
+pub use alloc::AlignedBuf;
+pub use layout::{Layout, Strides, CHWN8_BLOCK};
+pub use shape::Dims;
+pub use tensor::Tensor4;
+pub use transform::{transform, transform_into};

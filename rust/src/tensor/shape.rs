@@ -1,0 +1,77 @@
+//! Logical 4-D tensor dimensions.
+//!
+//! All tensors in the library are logically `(N, C, H, W)` — batch,
+//! channels, height, width — regardless of their physical [`super::Layout`].
+//! This matches the paper's notation (§II-A).
+
+/// Logical dimensions of a 4-D tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dims {
+    /// Batch size (`N_i` in the paper).
+    pub n: usize,
+    /// Channels (`C_i` / `C_o`).
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+}
+
+impl Dims {
+    /// Construct dims `(n, c, h, w)`.
+    #[inline]
+    pub const fn new(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Dims { n, c, h, w }
+    }
+
+    /// Total number of logical elements.
+    #[inline]
+    pub const fn count(&self) -> usize {
+        self.n * self.c * self.h * self.w
+    }
+
+    /// Iterate all logical coordinates in `(n, c, h, w)` lexicographic order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, usize)> + '_ {
+        let (c, h, w) = (self.c, self.h, self.w);
+        (0..self.n).flat_map(move |ni| {
+            (0..c).flat_map(move |ci| {
+                (0..h).flat_map(move |hi| (0..w).map(move |wi| (ni, ci, hi, wi)))
+            })
+        })
+    }
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}x{}", self.n, self.c, self.h, self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_multiplies() {
+        assert_eq!(Dims::new(2, 3, 4, 5).count(), 120);
+        assert_eq!(Dims::new(1, 1, 1, 1).count(), 1);
+    }
+
+    #[test]
+    fn iter_visits_each_coord_once() {
+        let d = Dims::new(2, 2, 3, 2);
+        let coords: Vec<_> = d.iter().collect();
+        assert_eq!(coords.len(), d.count());
+        let mut sorted = coords.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), d.count());
+        assert_eq!(coords[0], (0, 0, 0, 0));
+        assert_eq!(*coords.last().unwrap(), (1, 1, 2, 1));
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(Dims::new(128, 3, 227, 227).to_string(), "128x3x227x227");
+    }
+}

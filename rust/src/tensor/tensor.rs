@@ -1,0 +1,231 @@
+//! The 4-D `f32` tensor type used throughout the library.
+
+use super::{AlignedBuf, Dims, Layout};
+
+/// A 4-D single-precision tensor with an explicit physical [`Layout`],
+/// stored in a 64-byte-aligned buffer.
+///
+/// Logical coordinates are always `(n, c, h, w)`; the layout controls how
+/// they map into the flat buffer. Hot kernels access the raw slice through
+/// [`Tensor4::data`] with layout-specific index math; everything else can
+/// use the safe [`Tensor4::get`]/[`Tensor4::set`] accessors.
+#[derive(Clone, Debug)]
+pub struct Tensor4 {
+    buf: AlignedBuf,
+    dims: Dims,
+    layout: Layout,
+}
+
+impl Tensor4 {
+    /// Zero-filled tensor of `dims` in `layout`.
+    pub fn zeros(dims: Dims, layout: Layout) -> Self {
+        Tensor4 { buf: AlignedBuf::zeroed(layout.storage_len(dims)), dims, layout }
+    }
+
+    /// Tensor filled by `f(n, c, h, w)` over all logical coordinates.
+    pub fn from_fn(
+        dims: Dims,
+        layout: Layout,
+        mut f: impl FnMut(usize, usize, usize, usize) -> f32,
+    ) -> Self {
+        let mut t = Self::zeros(dims, layout);
+        for (n, c, h, w) in dims.iter() {
+            let idx = layout.index(dims, n, c, h, w);
+            t.buf[idx] = f(n, c, h, w);
+        }
+        t
+    }
+
+    /// Deterministic pseudo-random tensor in `[-1, 1)` (xorshift64*; the
+    /// value at a logical coordinate is independent of the layout, so the
+    /// same `(dims, seed)` in two layouts holds identical logical data).
+    pub fn random(dims: Dims, layout: Layout, seed: u64) -> Self {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            // xorshift64* — tiny, deterministic, good enough for test data.
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let r = state.wrapping_mul(0x2545F4914F6CDD1D);
+            ((r >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+        };
+        // Generate in logical order so the stream is layout-independent.
+        Self::from_fn(dims, layout, |_, _, _, _| next())
+    }
+
+    /// Build from logical-order (`n,c,h,w` lexicographic) data.
+    pub fn from_logical(dims: Dims, layout: Layout, data: &[f32]) -> Self {
+        assert_eq!(data.len(), dims.count(), "data length must match dims");
+        let mut it = data.iter().copied();
+        Self::from_fn(dims, layout, |_, _, _, _| it.next().unwrap())
+    }
+
+    /// Logical dimensions.
+    #[inline]
+    pub fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    /// Physical layout.
+    #[inline]
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// The raw storage slice (includes CHWN8 padding slots, if any).
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Mutable raw storage slice.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+
+    /// Raw const pointer (for unsafe hot loops).
+    #[inline]
+    pub fn as_ptr(&self) -> *const f32 {
+        self.buf.as_ptr()
+    }
+
+    /// Raw mut pointer (for unsafe hot loops).
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut f32 {
+        self.buf.as_mut_ptr()
+    }
+
+    /// Flat offset of a logical coordinate in this tensor's layout.
+    #[inline(always)]
+    pub fn offset(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        self.layout.index(self.dims, n, c, h, w)
+    }
+
+    /// Read the element at a logical coordinate.
+    #[inline(always)]
+    pub fn get(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        self.buf[self.offset(n, c, h, w)]
+    }
+
+    /// Write the element at a logical coordinate.
+    #[inline(always)]
+    pub fn set(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let idx = self.offset(n, c, h, w);
+        self.buf[idx] = v;
+    }
+
+    /// Copy into a fresh tensor with a different layout (logical data
+    /// preserved). Returns a clone when the layout already matches.
+    pub fn to_layout(&self, layout: Layout) -> Tensor4 {
+        super::transform(self, layout)
+    }
+
+    /// All logical elements in `(n,c,h,w)` lexicographic order.
+    pub fn logical_vec(&self) -> Vec<f32> {
+        self.dims.iter().map(|(n, c, h, w)| self.get(n, c, h, w)).collect()
+    }
+
+    /// Maximum absolute elementwise difference over logical coordinates.
+    ///
+    /// Panics if dims differ. Layouts may differ.
+    pub fn max_abs_diff(&self, other: &Tensor4) -> f32 {
+        assert_eq!(self.dims, other.dims, "max_abs_diff dims mismatch");
+        self.dims
+            .iter()
+            .map(|(n, c, h, w)| (self.get(n, c, h, w) - other.get(n, c, h, w)).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// True when all logical elements match within `atol + rtol * |b|`.
+    pub fn allclose(&self, other: &Tensor4, rtol: f32, atol: f32) -> bool {
+        if self.dims != other.dims {
+            return false;
+        }
+        self.dims.iter().all(|(n, c, h, w)| {
+            let a = self.get(n, c, h, w);
+            let b = other.get(n, c, h, w);
+            (a - b).abs() <= atol + rtol * b.abs()
+        })
+    }
+
+    /// Storage footprint in bytes (counts CHWN8 padding — that memory is
+    /// really allocated, which is what the paper's Fig. 5 measures).
+    #[inline]
+    pub fn storage_bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_has_right_size_and_value() {
+        let t = Tensor4::zeros(Dims::new(2, 3, 4, 5), Layout::Nhwc);
+        assert_eq!(t.data().len(), 120);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn get_set_round_trip_all_layouts() {
+        let dims = Dims::new(9, 3, 4, 5); // 9 forces CHWN8 padding
+        for layout in Layout::ALL {
+            let mut t = Tensor4::zeros(dims, layout);
+            t.set(8, 2, 3, 4, 7.5);
+            assert_eq!(t.get(8, 2, 3, 4), 7.5, "{layout}");
+            assert_eq!(t.get(0, 0, 0, 0), 0.0, "{layout}");
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_and_layout_independent() {
+        let dims = Dims::new(3, 2, 4, 4);
+        let a = Tensor4::random(dims, Layout::Nchw, 7);
+        let b = Tensor4::random(dims, Layout::Chwn8, 7);
+        assert_eq!(a.logical_vec(), b.logical_vec());
+        let c = Tensor4::random(dims, Layout::Nchw, 8);
+        assert_ne!(a.logical_vec(), c.logical_vec());
+    }
+
+    #[test]
+    fn random_values_in_range() {
+        let t = Tensor4::random(Dims::new(2, 3, 8, 8), Layout::Nhwc, 3);
+        assert!(t.data().iter().all(|&x| (-1.0..1.0).contains(&x)));
+        // ...and not degenerate.
+        let mean: f32 = t.data().iter().sum::<f32>() / t.data().len() as f32;
+        assert!(mean.abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn from_logical_round_trips() {
+        let dims = Dims::new(2, 2, 2, 2);
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        for layout in Layout::ALL {
+            let t = Tensor4::from_logical(dims, layout, &data);
+            assert_eq!(t.logical_vec(), data, "{layout}");
+        }
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let dims = Dims::new(1, 2, 3, 3);
+        let a = Tensor4::random(dims, Layout::Nchw, 1);
+        let mut b = a.to_layout(Layout::Nhwc);
+        assert!(a.allclose(&b, 0.0, 0.0));
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        b.set(0, 1, 2, 2, b.get(0, 1, 2, 2) + 0.5);
+        assert!(!a.allclose(&b, 1e-6, 1e-6));
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn storage_bytes_counts_padding() {
+        let dims = Dims::new(9, 1, 2, 2);
+        let lin = Tensor4::zeros(dims, Layout::Nchw);
+        let blk = Tensor4::zeros(dims, Layout::Chwn8);
+        assert_eq!(lin.storage_bytes(), 9 * 4 * 4);
+        assert_eq!(blk.storage_bytes(), 16 * 4 * 4);
+    }
+}

@@ -1,0 +1,209 @@
+//! Any-to-any layout transformation engine.
+//!
+//! The generic path walks logical coordinates; the hot pairs used by the
+//! benchmark harness (NCHW↔NHWC, the directions a framework user converts
+//! most) have cache-friendlier specializations that keep the *destination*
+//! writes sequential.
+
+use super::{Dims, Layout, Tensor4, CHWN8_BLOCK};
+
+/// Copy `src` into a fresh tensor with layout `dst_layout`.
+pub fn transform(src: &Tensor4, dst_layout: Layout) -> Tensor4 {
+    let mut dst = Tensor4::zeros(src.dims(), dst_layout);
+    transform_into(src, &mut dst);
+    dst
+}
+
+/// Copy the logical contents of `src` into `dst` (dims must match; layouts
+/// are taken from each tensor).
+///
+/// Panics if dims differ.
+pub fn transform_into(src: &Tensor4, dst: &mut Tensor4) {
+    assert_eq!(src.dims(), dst.dims(), "transform dims mismatch");
+    let dims = src.dims();
+    match (src.layout(), dst.layout()) {
+        (a, b) if a == b => dst.data_mut()[..src.data().len()].copy_from_slice(src.data()),
+        (Layout::Nchw, Layout::Nhwc) => nchw_to_nhwc(src, dst, dims),
+        (Layout::Nhwc, Layout::Nchw) => nhwc_to_nchw(src, dst, dims),
+        (Layout::Chwn, Layout::Chwn8) => chwn_to_chwn8(src, dst, dims),
+        _ => generic(src, dst, dims),
+    }
+}
+
+/// Generic fallback: iterate logical coordinates with destination-major
+/// ordering so writes stay sequential (reads may stride).
+fn generic(src: &Tensor4, dst: &mut Tensor4, dims: Dims) {
+    // Write in the destination's own storage order by iterating its axes
+    // from outermost to innermost.
+    match dst.layout() {
+        Layout::Nchw => {
+            for n in 0..dims.n {
+                for c in 0..dims.c {
+                    for h in 0..dims.h {
+                        for w in 0..dims.w {
+                            dst.set(n, c, h, w, src.get(n, c, h, w));
+                        }
+                    }
+                }
+            }
+        }
+        Layout::Nhwc => {
+            for n in 0..dims.n {
+                for h in 0..dims.h {
+                    for w in 0..dims.w {
+                        for c in 0..dims.c {
+                            dst.set(n, c, h, w, src.get(n, c, h, w));
+                        }
+                    }
+                }
+            }
+        }
+        Layout::Chwn => {
+            for c in 0..dims.c {
+                for h in 0..dims.h {
+                    for w in 0..dims.w {
+                        for n in 0..dims.n {
+                            dst.set(n, c, h, w, src.get(n, c, h, w));
+                        }
+                    }
+                }
+            }
+        }
+        Layout::Chwn8 => {
+            for nb in 0..dims.n.div_ceil(CHWN8_BLOCK) {
+                for c in 0..dims.c {
+                    for h in 0..dims.h {
+                        for w in 0..dims.w {
+                            let hi = ((nb + 1) * CHWN8_BLOCK).min(dims.n);
+                            for n in nb * CHWN8_BLOCK..hi {
+                                dst.set(n, c, h, w, src.get(n, c, h, w));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// NCHW → NHWC: per (n, h, w) gather a strided column of channels.
+fn nchw_to_nhwc(src: &Tensor4, dst: &mut Tensor4, dims: Dims) {
+    let Dims { n, c, h, w } = dims;
+    let s = src.data();
+    let d = dst.data_mut();
+    let (chw, hw) = (c * h * w, h * w);
+    for ni in 0..n {
+        for hi in 0..h {
+            for wi in 0..w {
+                let dbase = ((ni * h + hi) * w + wi) * c;
+                let sbase = ni * chw + hi * w + wi;
+                for ci in 0..c {
+                    d[dbase + ci] = s[sbase + ci * hw];
+                }
+            }
+        }
+    }
+}
+
+/// NHWC → NCHW: per (n, c) gather a strided plane.
+fn nhwc_to_nchw(src: &Tensor4, dst: &mut Tensor4, dims: Dims) {
+    let Dims { n, c, h, w } = dims;
+    let s = src.data();
+    let d = dst.data_mut();
+    let (chw, hw) = (c * h * w, h * w);
+    for ni in 0..n {
+        for ci in 0..c {
+            let dbase = ni * chw + ci * hw;
+            let sbase = ni * h * w * c + ci;
+            for hwi in 0..hw {
+                d[dbase + hwi] = s[sbase + hwi * c];
+            }
+        }
+    }
+}
+
+/// CHWN → CHWN8: contiguous 8-wide copies per (c, h, w).
+fn chwn_to_chwn8(src: &Tensor4, dst: &mut Tensor4, dims: Dims) {
+    let Dims { n, c, h, w } = dims;
+    let nblocks = n.div_ceil(CHWN8_BLOCK);
+    let s = src.data();
+    let d = dst.data_mut();
+    for nb in 0..nblocks {
+        let n0 = nb * CHWN8_BLOCK;
+        let width = (n - n0).min(CHWN8_BLOCK);
+        for ci in 0..c {
+            for hi in 0..h {
+                for wi in 0..w {
+                    let sbase = ((ci * h + hi) * w + wi) * n + n0;
+                    let dbase = (((nb * c + ci) * h + hi) * w + wi) * CHWN8_BLOCK;
+                    d[dbase..dbase + width].copy_from_slice(&s[sbase..sbase + width]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-trip through every ordered layout pair preserves logical data.
+    #[test]
+    fn all_pairs_preserve_logical_contents() {
+        let dims = Dims::new(9, 3, 4, 5); // 9 exercises CHWN8 partial block
+        let reference = Tensor4::random(dims, Layout::Nchw, 42);
+        let logical = reference.logical_vec();
+        for from in Layout::ALL {
+            let src = reference.to_layout(from);
+            assert_eq!(src.logical_vec(), logical, "to {from}");
+            for to in Layout::ALL {
+                let dst = src.to_layout(to);
+                assert_eq!(dst.logical_vec(), logical, "{from}->{to}");
+                assert_eq!(dst.layout(), to);
+            }
+        }
+    }
+
+    #[test]
+    fn same_layout_is_a_copy() {
+        let dims = Dims::new(2, 3, 4, 4);
+        let a = Tensor4::random(dims, Layout::Chwn8, 5);
+        let b = a.to_layout(Layout::Chwn8);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn specialized_paths_match_generic() {
+        let dims = Dims::new(3, 5, 7, 6);
+        let nchw = Tensor4::random(dims, Layout::Nchw, 11);
+
+        // NCHW -> NHWC specialized vs generic
+        let mut fast = Tensor4::zeros(dims, Layout::Nhwc);
+        nchw_to_nhwc(&nchw, &mut fast, dims);
+        let mut slow = Tensor4::zeros(dims, Layout::Nhwc);
+        generic(&nchw, &mut slow, dims);
+        assert_eq!(fast.data(), slow.data());
+
+        // NHWC -> NCHW
+        let nhwc = fast;
+        let mut fast2 = Tensor4::zeros(dims, Layout::Nchw);
+        nhwc_to_nchw(&nhwc, &mut fast2, dims);
+        assert_eq!(fast2.data(), nchw.data());
+
+        // CHWN -> CHWN8
+        let chwn = nchw.to_layout(Layout::Chwn);
+        let mut fast3 = Tensor4::zeros(dims, Layout::Chwn8);
+        chwn_to_chwn8(&chwn, &mut fast3, dims);
+        let mut slow3 = Tensor4::zeros(dims, Layout::Chwn8);
+        generic(&chwn, &mut slow3, dims);
+        assert_eq!(fast3.data(), slow3.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "transform dims mismatch")]
+    fn dims_mismatch_panics() {
+        let a = Tensor4::zeros(Dims::new(1, 1, 2, 2), Layout::Nchw);
+        let mut b = Tensor4::zeros(Dims::new(1, 1, 2, 3), Layout::Nchw);
+        transform_into(&a, &mut b);
+    }
+}

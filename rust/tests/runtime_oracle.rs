@@ -1,0 +1,147 @@
+//! Integration: the Rust kernels vs the JAX/Pallas XLA oracle through the
+//! PJRT runtime — the cross-stack numerical contract.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! artifacts directory is absent so `cargo test` still works in a fresh
+//! checkout.
+
+use im2win::conv::AlgoKind;
+use im2win::coordinator::layers;
+use im2win::prelude::*;
+use im2win::runtime::{artifact_path, tensor_to_literal, PjrtRuntime};
+use im2win::tensor::Dims;
+
+fn have_artifacts() -> bool {
+    let ok = artifact_path("conv_conv9").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` to enable runtime tests");
+    }
+    ok
+}
+
+/// Oracle geometry must mirror aot.py: scaled_params(2, 8).
+fn oracle_params(name: &str) -> ConvParams {
+    layers::by_name(name).unwrap().scaled_params(2, 8)
+}
+
+fn check_layer_against_oracle(rt: &PjrtRuntime, name: &str) {
+    let p = oracle_params(name);
+    let module = rt.load_hlo_text(artifact_path(&format!("conv_{name}"))).unwrap();
+    let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 42);
+    let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 43);
+    let outs = module.execute_tensors(&[&input, &filter]).unwrap();
+    let oracle = Tensor4::from_logical(p.output_dims(), Layout::Nhwc, &outs[0]);
+    // Tolerance scales with the reduction length.
+    let tol = 1e-5 * (p.c_in * p.h_f * p.w_f) as f32;
+    for algo in AlgoKind::BENCHED {
+        for layout in Layout::ALL {
+            if algo == AlgoKind::Im2col && matches!(layout, Layout::Chwn | Layout::Chwn8) {
+                continue;
+            }
+            let got = algo
+                .build()
+                .run(&input.to_layout(layout), &filter.to_layout(layout), &p)
+                .unwrap();
+            let diff = oracle.max_abs_diff(&got);
+            assert!(diff < tol, "{name} {algo} {layout}: diff {diff} > {tol}");
+        }
+    }
+}
+
+#[test]
+fn rust_kernels_match_xla_oracle_small_layers() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    // Layers spanning the suite's regimes: tiny C_i + big filter (conv1),
+    // mid (conv9), channel-heavy (conv12).
+    for name in ["conv1", "conv9", "conv12"] {
+        check_layer_against_oracle(&rt, name);
+    }
+}
+
+#[test]
+fn rust_kernels_match_xla_oracle_remaining_layers() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    for name in ["conv3", "conv5", "conv6"] {
+        check_layer_against_oracle(&rt, name);
+    }
+}
+
+#[test]
+fn tinynet_fwd_artifact_runs_and_is_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load_hlo_text(artifact_path("tinynet_fwd")).unwrap();
+    let x = Tensor4::random(Dims::new(4, 3, 32, 32), Layout::Nchw, 1);
+    let mk = |dims: &[i64], seed: u64| {
+        let len = dims.iter().product::<i64>() as usize;
+        let mut rng = im2win::testutil::Rng::new(seed);
+        let data: Vec<f32> = (0..len).map(|_| rng.f32() * 0.1).collect();
+        xla::Literal::vec1(&data).reshape(dims).unwrap()
+    };
+    let inputs = vec![
+        tensor_to_literal(&x).unwrap(),
+        mk(&[16, 3, 3, 3], 2),
+        mk(&[32, 3, 3, 16], 3),
+        mk(&[32, 3, 3, 32], 4),
+        mk(&[10, 32], 5),
+    ];
+    let out1 = module.execute(&inputs).unwrap();
+    let logits1 = im2win::runtime::literal_to_vec(&out1[0]).unwrap();
+    assert_eq!(logits1.len(), 4 * 10);
+    assert!(logits1.iter().all(|v| v.is_finite()));
+    let out2 = module.execute(&inputs).unwrap();
+    let logits2 = im2win::runtime::literal_to_vec(&out2[0]).unwrap();
+    assert_eq!(logits1, logits2);
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load_hlo_text(artifact_path("tinynet_train")).unwrap();
+    let mut rng = im2win::testutil::Rng::new(7);
+    let xs: Vec<f32> = (0..16 * 3 * 32 * 32).map(|_| rng.f32()).collect();
+    let ys: Vec<i32> = (0..16).map(|_| rng.int(0, 9) as i32).collect();
+    let x = xla::Literal::vec1(&xs).reshape(&[16, 3, 32, 32]).unwrap();
+    let y = xla::Literal::vec1(&ys).reshape(&[16]).unwrap();
+    let mkw = |dims: &[i64], seed: u64, scale: f32| {
+        let len = dims.iter().product::<i64>() as usize;
+        let mut rng = im2win::testutil::Rng::new(seed);
+        let data: Vec<f32> = (0..len).map(|_| rng.f32() * scale).collect();
+        xla::Literal::vec1(&data).reshape(dims).unwrap()
+    };
+    let mut weights = vec![
+        mkw(&[16, 3, 3, 3], 11, 0.27),
+        mkw(&[32, 3, 3, 16], 12, 0.12),
+        mkw(&[32, 3, 3, 32], 13, 0.08),
+        mkw(&[10, 32], 14, 0.01),
+    ];
+    let lr = xla::Literal::vec1(&[0.05f32]).reshape(&[]).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let mut inputs = vec![
+            x.to_vec::<f32>().map(|v| xla::Literal::vec1(&v).reshape(&[16, 3, 32, 32]).unwrap()).unwrap(),
+            y.to_vec::<i32>().map(|v| xla::Literal::vec1(&v).reshape(&[16]).unwrap()).unwrap(),
+        ];
+        inputs.append(&mut weights);
+        inputs.push(lr.to_vec::<f32>().map(|v| xla::Literal::vec1(&v).reshape(&[]).unwrap()).unwrap());
+        let outs = module.execute(&inputs).unwrap();
+        assert_eq!(outs.len(), 5);
+        losses.push(im2win::runtime::literal_to_vec(&outs[0]).unwrap()[0]);
+        weights = outs.into_iter().skip(1).collect();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
