@@ -1,0 +1,89 @@
+//! Serving-path benchmark: sustained inferences/sec through the planned
+//! engine at batch sizes 1 / 8 / 32, plus the micro-batching server's
+//! end-to-end throughput. Future PRs touching the engine, workspace or
+//! server compare against these numbers to catch serving regressions.
+//!
+//! ```bash
+//! cargo bench --bench engine_serving -- --scale ci
+//! cargo bench --bench engine_serving -- --threads 8
+//! ```
+
+mod common;
+
+use im2win::bench_harness::{fmt_time, measure_throughput};
+use im2win::config::Scale;
+use im2win::conv::AlgoKind;
+use im2win::engine::{Engine, PlanCache, Planner, Server};
+use im2win::model::zoo;
+use im2win::prelude::*;
+use im2win::tensor::Dims;
+
+const BATCHES: [usize; 3] = [1, 8, 32];
+
+fn main() {
+    let cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("engine_serving: test mode, skipping measurement");
+        return;
+    }
+    let iters = match cfg.scale {
+        Scale::Full => 30,
+        Scale::Ci => 8,
+        Scale::Smoke => 2,
+    };
+
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 7).expect("tinynet builds");
+    let mut cache = PlanCache::in_memory();
+    let mut engine =
+        Engine::plan(model, &Planner::new(), &mut cache).expect("engine planning succeeds");
+    println!(
+        "engine_serving — tinynet, scale={}, {} iters/batch, {} threads",
+        cfg.scale.name(),
+        iters,
+        im2win::parallel::global().threads()
+    );
+    for (i, plan) in engine.plans().iter().enumerate() {
+        println!("  layer {i}: {} {} W_o,b={}", plan.algo.name(), plan.layout, plan.w_block);
+    }
+
+    // Direct engine forwards at fixed batch sizes (the serving hot path,
+    // no queueing): inferences/sec must scale with batch.
+    println!("\nengine.forward_into throughput:");
+    for batch in BATCHES {
+        let x = Tensor4::random(Dims::new(batch, 3, 32, 32), Layout::Nchw, batch as u64);
+        let mut out = Tensor4::zeros(
+            engine.output_dims(batch).expect("output dims"),
+            Layout::Nchw,
+        );
+        let r = measure_throughput(batch, iters, || {
+            engine.forward_into(&x, &mut out).expect("forward succeeds");
+        });
+        println!(
+            "  batch {batch:>3}: {:>8.1} inf/s   ({} per batched call)",
+            r.inf_per_s(),
+            fmt_time(r.latency_s())
+        );
+    }
+
+    // End-to-end micro-batching server: queue + coalesce + scatter.
+    let requests = 32 * iters;
+    let server = Server::start(engine, 8);
+    let receivers: Vec<_> = (0..requests)
+        .map(|i| {
+            server.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, i as u64))
+        })
+        .collect();
+    for rx in &receivers {
+        rx.recv().expect("server alive").expect("inference succeeds");
+    }
+    let report = server.shutdown();
+    println!("\nserver micro-batching ({requests} single-image requests, max batch 8):");
+    println!(
+        "  {} batches, avg batch {:.2}, busy {}, {:.1} inf/s, {} warm allocs",
+        report.batches,
+        report.avg_batch(),
+        fmt_time(report.busy_s),
+        report.throughput(),
+        report.warm_misses
+    );
+}

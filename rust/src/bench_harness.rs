@@ -76,6 +76,45 @@ fn summarize(times: &[f64]) -> BenchResult {
     BenchResult { best_s: best, median_s: median, mean_s: mean, runs: sorted.len() }
 }
 
+/// Throughput of a serving loop at a fixed batch size.
+///
+/// Latency (`best_s` of [`measure`]) answers "how fast is one call";
+/// serving cares about sustained inferences per second at a batch size,
+/// which is what the engine benches and the `serve` subcommand track.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputResult {
+    /// Images per call.
+    pub batch: usize,
+    /// Timed calls.
+    pub iters: usize,
+    /// Total wall time over the timed calls, seconds.
+    pub total_s: f64,
+}
+
+impl ThroughputResult {
+    /// Sustained inferences (single images) per second.
+    pub fn inf_per_s(&self) -> f64 {
+        (self.batch * self.iters) as f64 / self.total_s
+    }
+
+    /// Mean latency of one batched call, seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.total_s / self.iters as f64
+    }
+}
+
+/// Run `f` (one batched forward of `batch` images) once for warmup, then
+/// `iters` timed repetitions, accumulating total wall time.
+pub fn measure_throughput<F: FnMut()>(batch: usize, iters: usize, mut f: F) -> ThroughputResult {
+    let iters = iters.max(1);
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    ThroughputResult { batch, iters, total_s: t0.elapsed().as_secs_f64().max(1e-12) }
+}
+
 /// Pretty-print seconds with an adaptive unit.
 pub fn fmt_time(seconds: f64) -> String {
     if seconds >= 1.0 {
@@ -120,6 +159,18 @@ mod tests {
         let r = BenchResult { best_s: 0.5, median_s: 0.5, mean_s: 0.5, runs: 1 };
         assert!((r.tflops(1_000_000_000_000) - 2.0).abs() < 1e-9);
         assert!((r.gflops(1_000_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_math_and_counts() {
+        let mut calls = 0;
+        let r = measure_throughput(8, 5, || calls += 1);
+        assert_eq!(calls, 6); // warmup + 5
+        assert_eq!(r.batch, 8);
+        assert_eq!(r.iters, 5);
+        assert!(r.total_s > 0.0);
+        assert!((r.inf_per_s() - 40.0 / r.total_s).abs() < 1e-9);
+        assert!((r.latency_s() - r.total_s / 5.0).abs() < 1e-12);
     }
 
     #[test]

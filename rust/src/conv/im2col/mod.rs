@@ -22,9 +22,10 @@
 //! are excluded from the Fig. 4/5 reproduction by the bench configs.)
 
 use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::gemm::sgemm;
-use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Layout, Tensor4};
+use crate::tensor::{CHWN8_BLOCK, Layout, Tensor4};
 
 /// im2col-based convolution backed by the blocked SGEMM.
 #[derive(Debug, Clone, Default)]
@@ -34,6 +35,27 @@ impl Im2colConv {
     /// Construct the baseline algorithm.
     pub fn new() -> Self {
         Im2colConv
+    }
+}
+
+/// Number of f32 elements of the fully-materialized unrolled matrix for
+/// problem `p` in `layout` — the memory blow-up Fig. 5 measures, and the
+/// transform-byte term the engine's cost model charges im2col with.
+pub fn im2col_matrix_len(p: &ConvParams, layout: Layout) -> usize {
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = p.h_out() * p.w_out();
+    match layout {
+        Layout::Nchw | Layout::Nhwc | Layout::Chwn => p.n * k * cols,
+        Layout::Chwn8 => p.n.div_ceil(CHWN8_BLOCK) * CHWN8_BLOCK * k * cols,
+    }
+}
+
+/// Elements of the repacked filter matrix (zero for NCHW, whose filter is
+/// already `[C_o][K]` row-major).
+fn filter_pack_len(p: &ConvParams, layout: Layout) -> usize {
+    match layout {
+        Layout::Nchw => 0,
+        _ => p.c_out * p.c_in * p.h_f * p.w_f,
     }
 }
 
@@ -53,6 +75,20 @@ impl ConvAlgorithm for Im2colConv {
         p: &ConvParams,
         out: &mut Tensor4,
     ) -> Result<()> {
+        // One-shot path: a throwaway workspace keeps the allocation
+        // profile of the original code (fresh matrices per call).
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, filter, p, out, &mut ws)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         check_geometry(input, filter, p, out)?;
         if filter.layout() != input.layout() {
             return Err(Error::UnsupportedLayout(format!(
@@ -61,13 +97,18 @@ impl ConvAlgorithm for Im2colConv {
                 input.layout()
             )));
         }
+        let layout = input.layout();
+        let mut mat = ws.take("im2col.mat", im2col_matrix_len(p, layout));
+        let mut fmat = ws.take("im2col.fmat", filter_pack_len(p, layout));
         out.data_mut().fill(0.0);
-        match input.layout() {
-            Layout::Nchw => nchw(input, filter, p, out),
-            Layout::Nhwc => nhwc(input, filter, p, out),
-            Layout::Chwn => chwn(input, filter, p, out),
-            Layout::Chwn8 => chwn8(input, filter, p, out),
+        match layout {
+            Layout::Nchw => nchw(input, filter, p, out, &mut mat),
+            Layout::Nhwc => nhwc(input, filter, p, out, &mut mat, &mut fmat),
+            Layout::Chwn => chwn(input, filter, p, out, &mut mat, &mut fmat),
+            Layout::Chwn8 => chwn8(input, filter, p, out, &mut mat, &mut fmat),
         }
+        ws.put("im2col.fmat", fmat);
+        ws.put("im2col.mat", mat);
         Ok(())
     }
 }
@@ -93,12 +134,12 @@ fn unroll_nchw_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
     }
 }
 
-fn nchw(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+fn nchw(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, mat: &mut [f32]) {
     let k = p.c_in * p.h_f * p.w_f;
     let cols = p.h_out() * p.w_out();
     let img = p.c_in * p.h_in * p.w_in;
     // Full-batch unrolled matrix (the memory cost the paper measures).
-    let mut mat = AlignedBuf::zeroed(p.n * k * cols);
+    debug_assert_eq!(mat.len(), p.n * k * cols);
     for n in 0..p.n {
         unroll_nchw_image(&input.data()[n * img..], p, &mut mat[n * k * cols..]);
     }
@@ -138,17 +179,24 @@ fn unroll_nhwc_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
     }
 }
 
-fn nhwc(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+fn nhwc(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    mat: &mut [f32],
+    ft: &mut [f32],
+) {
     let k = p.h_f * p.w_f * p.c_in;
     let rows = p.h_out() * p.w_out();
     let img = p.h_in * p.w_in * p.c_in;
-    let mut mat = AlignedBuf::zeroed(p.n * rows * k);
+    debug_assert_eq!(mat.len(), p.n * rows * k);
     for n in 0..p.n {
         unroll_nhwc_image(&input.data()[n * img..], p, &mut mat[n * rows * k..]);
     }
     // Filter NHWC [Co][u][v][ci] = [Co][K]; GEMM needs Fᵀ = [K][Co].
     let f = filter.data();
-    let mut ft = AlignedBuf::zeroed(k * p.c_out);
+    debug_assert_eq!(ft.len(), k * p.c_out);
     for j in 0..p.c_out {
         for t in 0..k {
             ft[t * p.c_out + j] = f[j * k + t];
@@ -161,7 +209,7 @@ fn nhwc(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
             k,
             &mat[n * rows * k..],
             k,
-            &ft,
+            ft,
             p.c_out,
             &mut out.data_mut()[n * rows * p.c_out..],
             p.c_out,
@@ -170,9 +218,9 @@ fn nhwc(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
 }
 
 /// Pack a CHWN-family filter `[Ci][Hf][Wf][Co]` into `[Co][K=(c,u,v)]`.
-fn pack_filter_chwn(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
+fn pack_filter_chwn(filter: &Tensor4, p: &ConvParams, fmat: &mut [f32]) {
     let k = p.c_in * p.h_f * p.w_f;
-    let mut fmat = AlignedBuf::zeroed(p.c_out * k);
+    debug_assert_eq!(fmat.len(), p.c_out * k);
     for j in 0..p.c_out {
         let mut t = 0;
         for c in 0..p.c_in {
@@ -184,12 +232,18 @@ fn pack_filter_chwn(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
             }
         }
     }
-    fmat
 }
 
 /// Unroll the whole CHWN batch into `K×(H_o·W_o·N)`: each matrix element
 /// row is an `N`-contiguous lane copy.
-fn chwn(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+fn chwn(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    mat: &mut [f32],
+    fmat: &mut [f32],
+) {
     let (h_o, w_o, n) = (p.h_out(), p.w_out(), p.n);
     let k = p.c_in * p.h_f * p.w_f;
     let cols = h_o * w_o * n;
@@ -197,7 +251,7 @@ fn chwn(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let i_h = p.w_in * n;
     let i_c = p.h_in * i_h;
     let x = input.data();
-    let mut mat = AlignedBuf::zeroed(k * cols);
+    debug_assert_eq!(mat.len(), k * cols);
     let mut row = 0;
     for c in 0..p.c_in {
         for u in 0..p.h_f {
@@ -214,13 +268,20 @@ fn chwn(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
             }
         }
     }
-    let fmat = pack_filter_chwn(filter, p);
-    sgemm(p.c_out, cols, k, &fmat, k, &mat, cols, out.data_mut(), cols);
+    pack_filter_chwn(filter, p, fmat);
+    sgemm(p.c_out, cols, k, fmat, k, mat, cols, out.data_mut(), cols);
 }
 
 /// CHWN8: unroll per 8-batch block into `K×(H_o·W_o·8)` and GEMM each
 /// block into its slice of the blocked output.
-fn chwn8(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+fn chwn8(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    mat: &mut [f32],
+    fmat: &mut [f32],
+) {
     const B: usize = CHWN8_BLOCK;
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let k = p.c_in * p.h_f * p.w_f;
@@ -231,9 +292,9 @@ fn chwn8(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let i_nb = p.c_in * i_c;
     let o_nb = p.c_out * h_o * w_o * B;
     let x = input.data();
-    let fmat = pack_filter_chwn(filter, p);
+    pack_filter_chwn(filter, p, fmat);
     // Full-batch materialization (memory fidelity with the other paths).
-    let mut mat = AlignedBuf::zeroed(nblocks * k * cols);
+    debug_assert_eq!(mat.len(), nblocks * k * cols);
     for nb in 0..nblocks {
         let m = &mut mat[nb * k * cols..(nb + 1) * k * cols];
         let xb = &x[nb * i_nb..];
@@ -260,7 +321,7 @@ fn chwn8(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
             p.c_out,
             cols,
             k,
-            &fmat,
+            fmat,
             k,
             &mat[nb * k * cols..],
             cols,

@@ -21,11 +21,12 @@ mod nchw;
 mod nhwc;
 mod transform;
 
-pub use transform::{im2win_dims, im2win_transform};
+pub use transform::{im2win_dims, im2win_transform, im2win_transform_into};
 
 use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::engine::Workspace;
 use crate::error::{Error, Result};
-use crate::tensor::{AlignedBuf, Layout, Tensor4};
+use crate::tensor::{Layout, Tensor4};
 
 /// Default `W_{o,b}` register-blocking factor for im2win kernels.
 pub const DEFAULT_W_BLOCK: usize = 4;
@@ -71,6 +72,20 @@ impl ConvAlgorithm for Im2winConv {
         p: &ConvParams,
         out: &mut Tensor4,
     ) -> Result<()> {
+        // One-shot path: a throwaway workspace gives the same allocation
+        // profile as before (one window tensor + one filter pack per call).
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, filter, p, out, &mut ws)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         check_geometry(input, filter, p, out)?;
         if filter.layout() != input.layout() {
             return Err(Error::UnsupportedLayout(format!(
@@ -79,26 +94,30 @@ impl ConvAlgorithm for Im2winConv {
                 input.layout()
             )));
         }
-        let win = im2win_transform(input, p);
+        let mut win = ws.take_tensor("im2win.win", im2win_dims(p), input.layout());
+        im2win_transform_into(input, p, &mut win);
+        let mut fpack = ws.take("im2win.fpack", p.c_out * p.c_in * p.h_f * p.w_f);
         out.data_mut().fill(0.0);
         match input.layout() {
             Layout::Nhwc => {
-                let fpack = pack_filter_window_major(filter, p);
+                pack_filter_window_major_into(filter, p, &mut fpack);
                 nhwc::run(&win, &fpack, p, out, self.w_block)
             }
             Layout::Nchw => {
-                let fpack = pack_filter_channel_major(filter, p);
+                pack_filter_channel_major_into(filter, p, &mut fpack);
                 nchw::run(&win, &fpack, p, out, self.w_block)
             }
             Layout::Chwn => {
-                let fpack = pack_filter_channel_major(filter, p);
+                pack_filter_channel_major_into(filter, p, &mut fpack);
                 chwn::run(&win, &fpack, p, out, self.w_block)
             }
             Layout::Chwn8 => {
-                let fpack = pack_filter_channel_major(filter, p);
+                pack_filter_channel_major_into(filter, p, &mut fpack);
                 chwn8::run(&win, &fpack, p, out, self.w_block)
             }
         }
+        ws.put("im2win.fpack", fpack);
+        ws.put_tensor("im2win.win", win);
         Ok(())
     }
 }
@@ -106,9 +125,10 @@ impl ConvAlgorithm for Im2winConv {
 /// Pack the filter as `[C_o][t = v·H_f + u][C_i]` — the "NWHC" order of
 /// paper Algorithm 2 line 2, matching the NHWC window tensor: filter for
 /// one output channel is a single contiguous span aligned with the window.
-fn pack_filter_window_major(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
+/// `buf` must hold exactly `C_o·W_f·H_f·C_i` floats; fully overwritten.
+fn pack_filter_window_major_into(filter: &Tensor4, p: &ConvParams, buf: &mut [f32]) {
     let (co, ci, hf, wf) = (p.c_out, p.c_in, p.h_f, p.w_f);
-    let mut buf = AlignedBuf::zeroed(co * wf * hf * ci);
+    debug_assert_eq!(buf.len(), co * wf * hf * ci);
     for j in 0..co {
         for v in 0..wf {
             for u in 0..hf {
@@ -120,15 +140,15 @@ fn pack_filter_window_major(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
             }
         }
     }
-    buf
 }
 
 /// Pack the filter as `[C_o][C_i][t = v·H_f + u]` — matching the NCHW /
 /// CHWN / CHWN8 window tensors, whose flattened window is contiguous *per
-/// channel*.
-fn pack_filter_channel_major(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
+/// channel*. `buf` must hold exactly `C_o·C_i·W_f·H_f` floats; fully
+/// overwritten.
+fn pack_filter_channel_major_into(filter: &Tensor4, p: &ConvParams, buf: &mut [f32]) {
     let (co, ci, hf, wf) = (p.c_out, p.c_in, p.h_f, p.w_f);
-    let mut buf = AlignedBuf::zeroed(co * ci * wf * hf);
+    debug_assert_eq!(buf.len(), co * ci * wf * hf);
     for j in 0..co {
         for r in 0..ci {
             let base = (j * ci + r) * wf * hf;
@@ -139,13 +159,13 @@ fn pack_filter_channel_major(filter: &Tensor4, p: &ConvParams) -> AlignedBuf {
             }
         }
     }
-    buf
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::conv::reference_conv;
+    use crate::tensor::AlignedBuf;
     use crate::testutil::random_problems;
 
     fn check_layout(layout: Layout, p: &ConvParams, seed: u64) {
@@ -212,8 +232,11 @@ mod tests {
     fn filter_packs_agree_with_tensor() {
         let p = ConvParams::new(1, 3, 4, 4, 2, 2, 2, 1).unwrap();
         let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 5);
-        let wmaj = pack_filter_window_major(&f, &p);
-        let cmaj = pack_filter_channel_major(&f, &p);
+        let len = p.c_out * p.c_in * p.h_f * p.w_f;
+        let mut wmaj = AlignedBuf::zeroed(len);
+        pack_filter_window_major_into(&f, &p, &mut wmaj);
+        let mut cmaj = AlignedBuf::zeroed(len);
+        pack_filter_channel_major_into(&f, &p, &mut cmaj);
         for j in 0..p.c_out {
             for v in 0..p.w_f {
                 for u in 0..p.h_f {

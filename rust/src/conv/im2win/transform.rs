@@ -27,16 +27,27 @@ pub fn im2win_dims(p: &ConvParams) -> Dims {
 ///
 /// Panics if `input.dims() != p.input_dims()`.
 pub fn im2win_transform(input: &Tensor4, p: &ConvParams) -> Tensor4 {
-    assert_eq!(input.dims(), p.input_dims(), "im2win_transform input dims");
-    let dims = im2win_dims(p);
-    let mut out = Tensor4::zeros(dims, input.layout());
-    match input.layout() {
-        Layout::Nhwc => nhwc(input, p, &mut out),
-        Layout::Nchw => nchw(input, p, &mut out),
-        Layout::Chwn => chwn(input, p, &mut out),
-        Layout::Chwn8 => chwn8(input, p, &mut out),
-    }
+    let mut out = Tensor4::zeros(im2win_dims(p), input.layout());
+    im2win_transform_into(input, p, &mut out);
     out
+}
+
+/// Transform `input` into a caller-provided window tensor — the
+/// allocation-free path the engine's workspace uses. Every element of
+/// `out` is overwritten, so recycled (stale) storage is safe.
+///
+/// Panics if `input.dims() != p.input_dims()`, or if `out` is not an
+/// `im2win_dims(p)` tensor in `input`'s layout.
+pub fn im2win_transform_into(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    assert_eq!(input.dims(), p.input_dims(), "im2win_transform input dims");
+    assert_eq!(out.dims(), im2win_dims(p), "im2win_transform output dims");
+    assert_eq!(out.layout(), input.layout(), "im2win_transform layout");
+    match input.layout() {
+        Layout::Nhwc => nhwc(input, p, out),
+        Layout::Nchw => nchw(input, p, out),
+        Layout::Chwn => chwn(input, p, out),
+        Layout::Chwn8 => chwn8(input, p, out),
+    }
 }
 
 /// NHWC: windows carry whole `C_i` vectors; copy rows of `C_i` floats.

@@ -20,9 +20,10 @@
 //! contiguous; this is also the layout the MEC paper effectively uses).
 
 use super::{check_geometry, ConvAlgorithm, ConvParams};
+use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::gemm::sgemm;
-use crate::tensor::{AlignedBuf, Layout, Tensor4};
+use crate::tensor::{Layout, Tensor4};
 
 /// Memory-efficient convolution (im2col compressed along the width).
 #[derive(Debug, Clone, Default)]
@@ -40,14 +41,15 @@ pub fn mec_matrix_len(p: &ConvParams) -> usize {
     p.n * p.w_out() * p.h_in * p.w_f * p.c_in
 }
 
-/// Build the MEC lowering `L[n][w_o][h_i][v·C_i + c]`.
-fn lower(input: &Tensor4, p: &ConvParams) -> AlignedBuf {
+/// Build the MEC lowering `L[n][w_o][h_i][v·C_i + c]` into `mat`
+/// (`mec_matrix_len(p)` floats, fully overwritten).
+fn lower(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
     let (ci, hi, wo) = (p.c_in, p.h_in, p.w_out());
     let chunk = p.w_f * ci;
     let i_h = p.w_in * ci;
     let img = hi * i_h;
     let x = input.data();
-    let mut mat = AlignedBuf::zeroed(mec_matrix_len(p));
+    debug_assert_eq!(mat.len(), mec_matrix_len(p));
     let slab = hi * chunk;
     for n in 0..p.n {
         let xn = &x[n * img..(n + 1) * img];
@@ -61,7 +63,6 @@ fn lower(input: &Tensor4, p: &ConvParams) -> AlignedBuf {
             }
         }
     }
-    mat
 }
 
 impl ConvAlgorithm for MecConv {
@@ -80,6 +81,20 @@ impl ConvAlgorithm for MecConv {
         p: &ConvParams,
         out: &mut Tensor4,
     ) -> Result<()> {
+        // One-shot path: throwaway workspace, same allocation profile as
+        // the original per-call buffers.
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, filter, p, out, &mut ws)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         check_geometry(input, filter, p, out)?;
         if input.layout() != Layout::Nhwc || filter.layout() != Layout::Nhwc {
             return Err(Error::UnsupportedLayout(
@@ -91,10 +106,11 @@ impl ConvAlgorithm for MecConv {
         let chunk = p.w_f * p.c_in;
         let slab = p.h_in * chunk;
 
-        let mat = lower(input, p);
+        let mut mat = ws.take("mec.mat", mec_matrix_len(p));
+        lower(input, p, &mut mat);
         // F̂[K][C_o] from the NHWC filter [C_o][K].
         let f = filter.data();
-        let mut ft = AlignedBuf::zeroed(k * co);
+        let mut ft = ws.take("mec.ft", k * co);
         for j in 0..co {
             for t in 0..k {
                 ft[t * co + j] = f[j * k + t];
@@ -122,6 +138,8 @@ impl ConvAlgorithm for MecConv {
                 );
             }
         }
+        ws.put("mec.ft", ft);
+        ws.put("mec.mat", mat);
         Ok(())
     }
 }

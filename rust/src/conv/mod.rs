@@ -23,6 +23,7 @@ mod params;
 pub use naive::reference_conv;
 pub use params::ConvParams;
 
+use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::tensor::{Layout, Tensor4};
 
@@ -45,6 +46,24 @@ pub trait ConvAlgorithm: Send + Sync {
         p: &ConvParams,
         out: &mut Tensor4,
     ) -> Result<()>;
+
+    /// Like [`ConvAlgorithm::run_into`], leasing transform scratch
+    /// (window tensors, lowered matrices, packed filters) from `ws`
+    /// instead of allocating it per call. Algorithms without scratch
+    /// (direct, naive) use this default, which ignores the workspace; the
+    /// transform-based algorithms override it so a serving engine reaches
+    /// steady state with zero per-request allocation.
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let _ = ws;
+        self.run_into(input, filter, p, out)
+    }
 
     /// Convenience wrapper allocating the output tensor.
     fn run(&self, input: &Tensor4, filter: &Tensor4, p: &ConvParams) -> Result<Tensor4> {
@@ -138,8 +157,20 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
-    /// All benchmarked algorithms (naive excluded).
+    /// The three algorithm families benchmarked in the paper's Fig. 4/5
+    /// matrix. `Naive` (the test oracle) and `Mec` (the additional
+    /// memory-efficiency baseline, NHWC-only) are deliberately excluded —
+    /// use [`AlgoKind::ALL`] to enumerate every implemented algorithm.
     pub const BENCHED: [AlgoKind; 3] = [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col];
+
+    /// Every implemented algorithm, including the oracle and MEC.
+    pub const ALL: [AlgoKind; 5] = [
+        AlgoKind::Direct,
+        AlgoKind::Im2win,
+        AlgoKind::Im2col,
+        AlgoKind::Mec,
+        AlgoKind::Naive,
+    ];
 
     /// Parse from a CLI/config name.
     pub fn parse(s: &str) -> Option<Self> {
@@ -161,6 +192,18 @@ impl AlgoKind {
             AlgoKind::Im2col => Box::new(im2col::Im2colConv::new()),
             AlgoKind::Mec => Box::new(mec::MecConv::new()),
             AlgoKind::Naive => Box::new(naive::NaiveConv),
+        }
+    }
+
+    /// Instantiate with an explicit `W_{o,b}` register-blocking factor
+    /// (engine plans carry one). Only `Direct` and `Im2win` expose the
+    /// knob; other algorithms — and `w_block == 0`, the "untuned" marker —
+    /// fall back to [`AlgoKind::build`].
+    pub fn build_tuned(&self, w_block: usize) -> Box<dyn ConvAlgorithm> {
+        match self {
+            AlgoKind::Direct if w_block > 0 => Box::new(direct::DirectConv::with_w_block(w_block)),
+            AlgoKind::Im2win if w_block > 0 => Box::new(im2win::Im2winConv::with_w_block(w_block)),
+            _ => self.build(),
         }
     }
 
@@ -189,6 +232,7 @@ impl std::fmt::Display for AlgoKind {
 pub struct Conv2d {
     /// Problem geometry (batch-size agnostic; `forward` rebatches).
     pub params: ConvParams,
+    kind: AlgoKind,
     algo: Box<dyn ConvAlgorithm>,
     layout: Layout,
     filter: Tensor4,
@@ -209,12 +253,46 @@ impl Conv2d {
         if !algo.supports(layout) {
             return Err(Error::UnsupportedLayout(format!("{kind} does not support {layout}")));
         }
-        Ok(Conv2d { params, algo, layout, filter: filter.to_layout(layout) })
+        Ok(Conv2d { params, kind, algo, layout, filter: filter.to_layout(layout) })
     }
 
     /// The layer's layout.
     pub fn layout(&self) -> Layout {
         self.layout
+    }
+
+    /// The configured algorithm selector.
+    pub fn kind(&self) -> AlgoKind {
+        self.kind
+    }
+
+    /// The layer's filter, stored in the layer's layout.
+    pub fn filter(&self) -> &Tensor4 {
+        &self.filter
+    }
+
+    /// The underlying algorithm implementation (for engine-driven
+    /// dispatch through [`ConvAlgorithm::run_with_workspace`]).
+    pub fn algorithm(&self) -> &dyn ConvAlgorithm {
+        self.algo.as_ref()
+    }
+
+    /// Re-plan the layer in place: swap algorithm, layout and blocking
+    /// factor, converting the stored filter to the new layout. This is the
+    /// hook the inference engine uses to apply a [`crate::engine`] plan to
+    /// a model built with placeholder choices.
+    pub fn reconfigure(&mut self, kind: AlgoKind, layout: Layout, w_block: usize) -> Result<()> {
+        let algo = kind.build_tuned(w_block);
+        if !algo.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!("{kind} does not support {layout}")));
+        }
+        if layout != self.layout {
+            self.filter = self.filter.to_layout(layout);
+            self.layout = layout;
+        }
+        self.kind = kind;
+        self.algo = algo;
+        Ok(())
     }
 
     /// Run the layer on `input` (converted to the layer layout if needed);
@@ -246,10 +324,44 @@ mod tests {
 
     #[test]
     fn algo_kind_parse_round_trip() {
-        for k in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Naive] {
+        // Every implemented algorithm — including Mec, which an earlier
+        // revision silently skipped — must round-trip through its name.
+        for k in AlgoKind::ALL {
             assert_eq!(AlgoKind::parse(k.name()), Some(k));
         }
         assert_eq!(AlgoKind::parse("winograd"), None);
+        assert!(!AlgoKind::BENCHED.contains(&AlgoKind::Mec));
+        assert!(!AlgoKind::BENCHED.contains(&AlgoKind::Naive));
+    }
+
+    #[test]
+    fn conv2d_reconfigure_preserves_results() {
+        let p = ConvParams::new(2, 3, 8, 8, 4, 3, 3, 1).unwrap();
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 1);
+        let x = Tensor4::random(p.input_dims(), Layout::Nchw, 2);
+        let mut layer = Conv2d::new(p, AlgoKind::Naive, Layout::Nchw, &filter).unwrap();
+        let base = layer.forward(&x).unwrap();
+        for (kind, layout) in [
+            (AlgoKind::Im2win, Layout::Nhwc),
+            (AlgoKind::Direct, Layout::Chwn8),
+            (AlgoKind::Im2col, Layout::Nchw),
+            (AlgoKind::Mec, Layout::Nhwc),
+        ] {
+            layer.reconfigure(kind, layout, 2).unwrap();
+            assert_eq!(layer.kind(), kind);
+            assert_eq!(layer.layout(), layout);
+            let y = layer.forward(&x).unwrap();
+            assert!(
+                base.allclose(&y, 1e-4, 1e-4),
+                "{kind} {layout}: diff {}",
+                base.max_abs_diff(&y)
+            );
+        }
+        // MEC has no CHWN kernel: reconfigure must refuse, leaving the
+        // layer in its previous (working) configuration.
+        assert!(layer.reconfigure(AlgoKind::Mec, Layout::Chwn, 0).is_err());
+        assert_eq!(layer.kind(), AlgoKind::Mec);
+        assert_eq!(layer.layout(), Layout::Nhwc);
     }
 
     #[test]

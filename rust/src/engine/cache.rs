@@ -1,0 +1,266 @@
+//! Persistent JSON plan cache.
+//!
+//! Planning is cheap analytically but expensive when empirically refined
+//! (a `W_{o,b}` sweep runs real kernels dozens of times). Following the
+//! amortize-setup-across-inferences idea of the indirect-convolution work,
+//! the cache persists every decided [`LayerPlan`] to disk so a tuned plan
+//! survives process restarts: the second run of `im2win plan`/`serve` (or
+//! an engine construction) hits the cache and runs no tuning at all.
+//!
+//! Keys are `(geometry at the planning batch, incoming layout, thread
+//! count)`. The machine spec is deliberately *not* part of the key: the
+//! cache persists same-host decisions across restarts, and a refining
+//! planner upgrades analytic-only entries in place rather than trusting
+//! them (see [`super::Planner::plan_model`]) — so `--refine` is honored
+//! even against a warm cache. The file format is the repo's own
+//! zero-dependency JSON ([`crate::config::json`]), written with sorted
+//! keys so serialization is canonical: `save → load → save` produces
+//! byte-identical files (pinned by a property test).
+
+use super::planner::LayerPlan;
+use crate::config::json::{self, Json};
+use crate::conv::{AlgoKind, ConvParams};
+use crate::error::{Error, Result};
+use crate::tensor::Layout;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Cache-file format version (bump on incompatible layout changes).
+const VERSION: f64 = 1.0;
+
+/// Canonical cache key for one layer decision: geometry at the planning
+/// batch, the incoming activation layout, and the thread count.
+pub fn layer_key(p: &ConvParams, prev: Layout, threads: usize) -> String {
+    format!(
+        "n{}c{}x{}x{}-o{}f{}x{}s{}x{}-from_{}-t{}",
+        p.n,
+        p.c_in,
+        p.h_in,
+        p.w_in,
+        p.c_out,
+        p.h_f,
+        p.w_f,
+        p.stride_h,
+        p.stride_w,
+        prev.name(),
+        threads
+    )
+}
+
+/// Persistent key → [`LayerPlan`] store (see module docs).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, LayerPlan>,
+    hits: usize,
+    misses: usize,
+}
+
+impl PlanCache {
+    /// A cache with no backing file (tests, one-shot runs).
+    pub fn in_memory() -> Self {
+        PlanCache::default()
+    }
+
+    /// Open the cache at `path`, loading existing entries; a missing file
+    /// yields an empty cache that [`PlanCache::save`] will create.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut cache = PlanCache { path: Some(path.to_path_buf()), ..PlanCache::default() };
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            cache.entries = parse_entries(&text)?;
+        }
+        Ok(cache)
+    }
+
+    /// Write the cache to its backing file (error if opened in-memory).
+    /// Serialization is canonical — sorted keys, shortest-round-trip
+    /// numbers — so repeated saves of equal content are byte-identical.
+    pub fn save(&self) -> Result<()> {
+        let path = self
+            .path
+            .as_ref()
+            .ok_or_else(|| Error::Config("plan cache has no backing file".into()))?;
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json_text())?;
+        Ok(())
+    }
+
+    /// Serialize to canonical JSON text.
+    pub fn to_json_text(&self) -> String {
+        let entries: Vec<(String, Json)> = self
+            .entries
+            .iter()
+            .map(|(k, plan)| (k.clone(), plan_json(plan)))
+            .collect();
+        Json::Object(vec![
+            ("version".into(), Json::Number(VERSION)),
+            ("entries".into(), Json::Object(entries)),
+        ])
+        .to_string()
+    }
+
+    /// Look up a plan; counts a hit or miss.
+    pub fn get(&mut self, key: &str) -> Option<LayerPlan> {
+        match self.entries.get(key).copied() {
+            Some(p) => {
+                self.hits += 1;
+                Some(p)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a plan.
+    pub fn insert(&mut self, key: String, plan: LayerPlan) {
+        self.entries.insert(key, plan);
+    }
+
+    /// Number of stored plans.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no plans are stored.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lookups answered from the cache since load.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Lookups that found nothing since load.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// The backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+fn plan_json(p: &LayerPlan) -> Json {
+    Json::object(vec![
+        ("algo", Json::from(p.algo.name())),
+        ("layout", Json::from(p.layout.name())),
+        ("w_block", Json::Number(p.w_block as f64)),
+        ("est_s", Json::Number(p.est_s)),
+        ("tuned", Json::Bool(p.tuned)),
+    ])
+}
+
+fn parse_plan(v: &Json) -> Result<LayerPlan> {
+    let bad = |what: &str| Error::Config(format!("plan cache entry: bad or missing '{what}'"));
+    let algo_name = v.get("algo").and_then(Json::as_str).ok_or_else(|| bad("algo"))?;
+    let layout_name = v.get("layout").and_then(Json::as_str).ok_or_else(|| bad("layout"))?;
+    Ok(LayerPlan {
+        algo: AlgoKind::parse(algo_name).ok_or_else(|| bad("algo"))?,
+        layout: Layout::parse(layout_name).ok_or_else(|| bad("layout"))?,
+        w_block: v.get("w_block").and_then(Json::as_f64).ok_or_else(|| bad("w_block"))? as usize,
+        est_s: v.get("est_s").and_then(Json::as_f64).ok_or_else(|| bad("est_s"))?,
+        tuned: v.get("tuned").and_then(Json::as_bool).ok_or_else(|| bad("tuned"))?,
+    })
+}
+
+fn parse_entries(text: &str) -> Result<BTreeMap<String, LayerPlan>> {
+    let doc = json::parse(text)?;
+    let version = doc
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Config("plan cache: missing version".into()))?;
+    if version != VERSION {
+        return Err(Error::Config(format!("plan cache: unsupported version {version}")));
+    }
+    let obj = doc
+        .get("entries")
+        .and_then(Json::as_object)
+        .ok_or_else(|| Error::Config("plan cache: missing entries object".into()))?;
+    let mut map = BTreeMap::new();
+    for (k, v) in obj {
+        map.insert(k.clone(), parse_plan(v)?);
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan(i: usize) -> LayerPlan {
+        LayerPlan {
+            algo: [AlgoKind::Im2win, AlgoKind::Direct, AlgoKind::Im2col][i % 3],
+            layout: Layout::ALL[i % 4],
+            w_block: [4, 6, 0][i % 3],
+            est_s: 1.5e-3 * (i + 1) as f64,
+            tuned: i % 2 == 0,
+        }
+    }
+
+    #[test]
+    fn layer_key_is_injective_over_its_fields() {
+        let p = ConvParams::new(8, 3, 32, 32, 16, 3, 3, 1).unwrap();
+        let a = layer_key(&p, Layout::Nchw, 1);
+        assert_ne!(a, layer_key(&p, Layout::Nhwc, 1));
+        assert_ne!(a, layer_key(&p, Layout::Nchw, 4));
+        assert_ne!(a, layer_key(&p.with_batch(16), Layout::Nchw, 1));
+    }
+
+    #[test]
+    fn get_insert_and_counters() {
+        let mut c = PlanCache::in_memory();
+        assert!(c.get("k").is_none());
+        c.insert("k".into(), sample_plan(0));
+        assert_eq!(c.get("k"), Some(sample_plan(0)));
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn text_round_trip_is_byte_identical() {
+        let mut c = PlanCache::in_memory();
+        for i in 0..6 {
+            c.insert(format!("key{i}"), sample_plan(i));
+        }
+        let text1 = c.to_json_text();
+        let mut back = PlanCache::in_memory();
+        back.entries = parse_entries(&text1).unwrap();
+        assert_eq!(back.to_json_text(), text1);
+        for i in 0..6 {
+            assert_eq!(back.get(&format!("key{i}")), Some(sample_plan(i)));
+        }
+    }
+
+    #[test]
+    fn save_and_load_via_file() {
+        let dir = std::env::temp_dir().join(format!("im2win_plancache_{}", std::process::id()));
+        let path = dir.join("plans.json");
+        let mut c = PlanCache::load(&path).unwrap();
+        assert!(c.is_empty());
+        c.insert("a".into(), sample_plan(1));
+        c.path = Some(path.clone());
+        c.save().unwrap();
+        let mut again = PlanCache::load(&path).unwrap();
+        assert_eq!(again.get("a"), Some(sample_plan(1)));
+        assert!(PlanCache::in_memory().save().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(parse_entries("[]").is_err());
+        assert!(parse_entries(r#"{"version": 99, "entries": {}}"#).is_err());
+        assert!(parse_entries(r#"{"version": 1, "entries": {"k": {"algo": "winograd"}}}"#).is_err());
+        assert!(parse_entries(r#"{"version": 1}"#).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Inference engine: plan once, serve many.
+//!
+//! The modules below turn the benchmark-reproduction library into a
+//! serving system (the ROADMAP's step from "reproduce the paper" to
+//! "production-scale"):
+//!
+//! * [`planner`] — picks (algorithm × layout × `W_{o,b}`) per convolution
+//!   layer with an analytic cost model over FLOPs, transform bytes and
+//!   layout-conversion traffic, optionally refined by the empirical
+//!   autotuner;
+//! * [`cache`] — persists decided plans as canonical JSON keyed by
+//!   (geometry, layout, threads), so tuned plans survive restarts;
+//! * [`workspace`] — a keyed lease arena that lets every transform
+//!   buffer, packed filter and activation tensor be allocated once per
+//!   plan and reused across requests;
+//! * [`server`] — a micro-batching front that coalesces single-image
+//!   requests into batched forwards and reports throughput;
+//! * [`Engine`] — the planned-model executor tying them together: it
+//!   applies a plan to a [`Model`] and runs forwards through the
+//!   workspace so steady-state serving performs no scratch allocation.
+//!
+//! ```
+//! use im2win::conv::AlgoKind;
+//! use im2win::engine::{Engine, PlanCache, Planner};
+//! use im2win::model::zoo;
+//! use im2win::prelude::*;
+//! use im2win::tensor::Dims;
+//!
+//! let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 7).unwrap();
+//! let mut cache = PlanCache::in_memory();
+//! let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+//! let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nchw, 1);
+//! let y = engine.forward(&x).unwrap();
+//! assert_eq!(y.dims(), Dims::new(2, 10, 1, 1));
+//! ```
+
+pub mod cache;
+pub mod planner;
+pub mod server;
+pub mod workspace;
+
+pub use cache::{layer_key, PlanCache};
+pub use planner::{LayerPlan, Planner};
+pub use server::{Inference, Server, ServerReport};
+pub use workspace::Workspace;
+
+use crate::error::{Error, Result};
+use crate::model::{Model, Op};
+use crate::model::{global_avg_pool_into, linear_into, max_pool2d_into, relu_inplace};
+use crate::tensor::{transform_into, Dims, Tensor4};
+
+/// A planned model plus the reusable workspace that serves it.
+pub struct Engine {
+    model: Model,
+    plans: Vec<LayerPlan>,
+    ws: Workspace,
+}
+
+impl Engine {
+    /// Plan `model` with `planner` (consulting/filling `cache`), apply the
+    /// plan to its convolution layers, and wrap it for serving.
+    pub fn plan(mut model: Model, planner: &Planner, cache: &mut PlanCache) -> Result<Engine> {
+        let plans = planner.plan_model(&model, cache)?;
+        Planner::apply(&mut model, &plans)?;
+        Ok(Engine { model, plans, ws: Workspace::new() })
+    }
+
+    /// Wrap `model` with explicit per-conv plans (tests, replaying a
+    /// hand-written plan).
+    pub fn with_plans(mut model: Model, plans: Vec<LayerPlan>) -> Result<Engine> {
+        Planner::apply(&mut model, &plans)?;
+        Ok(Engine { model, plans, ws: Workspace::new() })
+    }
+
+    /// The planned model (its own `Model::forward` also follows the plan).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The applied per-convolution plans, in layer order.
+    pub fn plans(&self) -> &[LayerPlan] {
+        &self.plans
+    }
+
+    /// Scratch-arena statistics (hits/misses/parked bytes).
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Output dims for a batch-`n` input.
+    pub fn output_dims(&self, n: usize) -> Result<Dims> {
+        self.model.out_dims_for_batch(n)
+    }
+
+    /// Run a forward pass, allocating the result tensor (in the model's
+    /// base layout). Convenience wrapper over [`Engine::forward_into`].
+    pub fn forward(&mut self, input: &Tensor4) -> Result<Tensor4> {
+        let d = self.output_dims(input.dims().n)?;
+        let mut out = Tensor4::zeros(d, self.model.layout());
+        self.forward_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run a forward pass into a caller-provided output tensor (its dims
+    /// must match [`Engine::output_dims`]; any layout). All intermediate
+    /// storage — layout conversions, conv scratch, activations — is leased
+    /// from the engine's [`Workspace`], so after one request per batch
+    /// size the engine allocates no tensor or scratch buffers (only the
+    /// arena's small per-lease key strings; see [`workspace`]).
+    pub fn forward_into(&mut self, input: &Tensor4, out: &mut Tensor4) -> Result<()> {
+        let n = input.dims().n;
+        let base = self.model.input_dims();
+        let mut d = Dims::new(n, base.c, base.h, base.w);
+        if input.dims() != d {
+            return Err(Error::ShapeMismatch(format!(
+                "engine {} expects input {d}, got {}",
+                self.model.name,
+                input.dims()
+            )));
+        }
+        if out.dims() != self.model.out_dims_for_batch(n)? {
+            return Err(Error::ShapeMismatch(format!(
+                "engine {} output tensor is {}, expected {}",
+                self.model.name,
+                out.dims(),
+                self.model.out_dims_for_batch(n)?
+            )));
+        }
+        let ws = &mut self.ws;
+
+        // Working activation: a leased copy so in-place ops never touch
+        // the caller's input.
+        let mut tag = format!("act:in:{n}");
+        let mut x = ws.take_tensor(&tag, d, self.model.layout());
+        transform_into(input, &mut x);
+
+        for (i, op) in self.model.ops().iter().enumerate() {
+            let next_d = op.out_dims(d)?;
+            let next_tag = format!("act:{i}:{n}");
+            match op {
+                Op::Relu => {
+                    relu_inplace(&mut x);
+                    d = next_d;
+                    continue; // in place: keep lease and tag
+                }
+                Op::Conv(conv) => {
+                    let p = conv.params.with_batch(n);
+                    let mut y = ws.take_tensor(&next_tag, next_d, conv.layout());
+                    if x.layout() == conv.layout() {
+                        conv.algorithm().run_with_workspace(&x, conv.filter(), &p, &mut y, ws)?;
+                    } else {
+                        let ctag = format!("cvt:{i}:{n}");
+                        let mut cx = ws.take_tensor(&ctag, d, conv.layout());
+                        transform_into(&x, &mut cx);
+                        conv.algorithm().run_with_workspace(&cx, conv.filter(), &p, &mut y, ws)?;
+                        ws.put_tensor(&ctag, cx);
+                    }
+                    ws.put_tensor(&tag, x);
+                    x = y;
+                }
+                Op::MaxPool { k, s } => {
+                    let mut y = ws.take_tensor(&next_tag, next_d, x.layout());
+                    max_pool2d_into(&x, *k, *s, &mut y)?;
+                    ws.put_tensor(&tag, x);
+                    x = y;
+                }
+                Op::GlobalAvgPool => {
+                    let mut y = ws.take_tensor(&next_tag, next_d, x.layout());
+                    global_avg_pool_into(&x, &mut y)?;
+                    ws.put_tensor(&tag, x);
+                    x = y;
+                }
+                Op::Linear { weight, out_features } => {
+                    let mut y = ws.take_tensor(&next_tag, next_d, x.layout());
+                    linear_into(&x, weight, *out_features, &mut y)?;
+                    ws.put_tensor(&tag, x);
+                    x = y;
+                }
+            }
+            tag = next_tag;
+            d = next_d;
+        }
+
+        transform_into(&x, out);
+        ws.put_tensor(&tag, x);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::AlgoKind;
+    use crate::model::zoo;
+    use crate::tensor::Layout;
+
+    #[test]
+    fn engine_matches_plain_model_forward() {
+        let x = Tensor4::random(Dims::new(3, 3, 32, 32), Layout::Nchw, 11);
+        let expect =
+            zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 4).unwrap().forward(&x).unwrap();
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 4).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+        assert_eq!(engine.plans().len(), 3);
+        let y = engine.forward(&x).unwrap();
+        assert!(
+            expect.allclose(&y, 1e-3, 1e-4),
+            "engine output diverges: {}",
+            expect.max_abs_diff(&y)
+        );
+        // The planned model's own forward agrees too (plan-driven
+        // Model::forward).
+        let y2 = engine.model().forward(&x).unwrap();
+        assert!(expect.allclose(&y2, 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn repeated_forwards_reuse_scratch_and_stay_exact() {
+        let model = zoo::tinynet(Layout::Nhwc, AlgoKind::Naive, 9).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+        let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nhwc, 3);
+        let first = engine.forward(&x).unwrap();
+        let misses_after_warmup = engine.workspace().misses();
+        for _ in 0..4 {
+            let again = engine.forward(&x).unwrap();
+            assert_eq!(first.data(), again.data(), "stale scratch leaked into results");
+        }
+        assert_eq!(
+            engine.workspace().misses(),
+            misses_after_warmup,
+            "steady-state forwards must not allocate new scratch"
+        );
+        assert!(engine.workspace().hits() > 0);
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+        let bad = Tensor4::zeros(Dims::new(1, 3, 16, 16), Layout::Nchw);
+        assert!(engine.forward(&bad).is_err());
+    }
+}

@@ -1,0 +1,390 @@
+//! Per-layer plan selection over (algorithm × layout × `W_{o,b}`).
+//!
+//! The paper's central empirical result is that no single (algorithm,
+//! layout) pair wins everywhere: im2win-NHWC dominates the 3×3 VGG family,
+//! direct wins where the transform cannot amortize, im2col's GEMM wins
+//! some channel-heavy shapes, and first layers with `C_i = 3` starve the
+//! NHWC vector dimension entirely. The seed library made the *user* pick;
+//! the planner makes the choice per layer with an analytic cost model:
+//!
+//! * **compute** — layer FLOPs over an attainable-throughput estimate:
+//!   machine peak (paper Eq. 4 via [`MachineSpec`]) derated by a per-
+//!   algorithm base efficiency and by how well the layout's unit-stride
+//!   dimension fills an 8-lane vector register (`C_i` for NHWC, `W_o` for
+//!   NCHW, `N` for CHWN/CHWN8 — paper §III-C);
+//! * **transform bytes** — the window tensor (im2win), unrolled matrix
+//!   (im2col), or width-lowered matrix (MEC) written then re-read, over
+//!   the machine's memory bandwidth; direct pays zero;
+//! * **layout conversion** — if the layer's chosen layout differs from the
+//!   incoming activation layout, one read + one write of the input tensor.
+//!
+//! The analytic choice can optionally be *refined* empirically: the
+//! existing [`tune_w_block`] sweep measures the register-blocking factor
+//! for the chosen algorithm on the real geometry, replacing the default
+//! `W_{o,b}` with the fastest sampled value. Refinement is off by default
+//! (it runs real kernels) and its result is exactly what the plan cache
+//! persists, so a process restart never re-tunes.
+
+use super::cache::{layer_key, PlanCache};
+use crate::autotune::tune_w_block;
+use crate::conv::im2col::im2col_matrix_len;
+use crate::conv::im2win::{im2win_dims, DEFAULT_W_BLOCK};
+use crate::conv::mec::mec_matrix_len;
+use crate::conv::{AlgoKind, ConvParams};
+use crate::error::{Error, Result};
+use crate::model::{Model, Op};
+use crate::roofline::MachineSpec;
+use crate::tensor::Layout;
+
+/// The planner's decision for one convolution layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerPlan {
+    /// Chosen algorithm.
+    pub algo: AlgoKind,
+    /// Chosen activation/filter layout.
+    pub layout: Layout,
+    /// Register-blocking factor `W_{o,b}` (0 = algorithm has no knob).
+    pub w_block: usize,
+    /// Analytic cost estimate, seconds (refined plans keep the analytic
+    /// number; the tuned knob is `w_block`).
+    pub est_s: f64,
+    /// True when `w_block` came from an empirical [`tune_w_block`] sweep.
+    pub tuned: bool,
+}
+
+/// Plan selector over (algorithm × layout × blocking) — see module docs.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    /// Machine model used by the analytic cost estimates.
+    pub spec: MachineSpec,
+    /// Thread count assumed by the compute term (and part of cache keys).
+    pub threads: usize,
+    /// Batch size plans are optimized (and cached) for.
+    pub batch: usize,
+    /// Refine the chosen candidate's `W_{o,b}` empirically.
+    pub refine: bool,
+    /// Timed repetitions per candidate when refining.
+    pub refine_repeats: usize,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A fixed nominal machine model: 2.5 GHz, AVX2-class core, ~20 GB/s.
+///
+/// The planner defaults to this instead of [`MachineSpec::detect`] so
+/// planning is fast and *deterministic* — detection times real loops, and
+/// a cost estimate that changes run-to-run would defeat byte-identical
+/// plan-cache round trips. Callers who want host-calibrated plans pass
+/// [`MachineSpec::detect`] explicitly via [`Planner::with_spec`].
+fn nominal_spec() -> MachineSpec {
+    MachineSpec {
+        processors: 1,
+        cores_per_processor: 1,
+        clock_hz: 2.5e9,
+        fma_units: 2,
+        vector_bits: if crate::simd::HAS_AVX2 { 256 } else { 64 },
+        mem_bw_bytes: 20.0e9,
+    }
+}
+
+impl Planner {
+    /// Planner with the deterministic nominal machine model, the global
+    /// pool's thread count, batch 8, refinement off.
+    pub fn new() -> Self {
+        Planner {
+            spec: nominal_spec(),
+            threads: crate::parallel::global().threads(),
+            batch: 8,
+            refine: false,
+            refine_repeats: 3,
+        }
+    }
+
+    /// Planner with an explicit machine model (e.g. [`MachineSpec::detect`]).
+    pub fn with_spec(spec: MachineSpec) -> Self {
+        Planner { spec, ..Self::new() }
+    }
+
+    /// Candidate (algorithm, layout) pairs for a layer: every implemented
+    /// high-performance algorithm on every layout it supports (naive is
+    /// excluded — it exists for correctness checks, not serving).
+    pub fn candidates(&self) -> Vec<(AlgoKind, Layout)> {
+        let mut out = Vec::new();
+        for algo in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Mec] {
+            let built = algo.build();
+            for layout in Layout::ALL {
+                if built.supports(layout) {
+                    out.push((algo, layout));
+                }
+            }
+        }
+        out
+    }
+
+    /// Analytic cost (seconds) of running `algo` on `layout` for geometry
+    /// `p`, with activations arriving in `prev` layout.
+    pub fn estimate(&self, algo: AlgoKind, layout: Layout, p: &ConvParams, prev: Layout) -> f64 {
+        const F32: f64 = 4.0;
+        let peak = self.spec.peak_flops_single_core() * self.threads as f64;
+        let bw = self.spec.mem_bw_bytes;
+
+        // Base efficiency per algorithm (fraction of peak a well-fed
+        // kernel sustains; calibrated to the relative orderings of the
+        // paper's Fig. 4, not to absolute GFLOPS).
+        let base = match algo {
+            AlgoKind::Im2win => 0.62,
+            AlgoKind::Direct => 0.55,
+            AlgoKind::Im2col => 0.48,
+            AlgoKind::Mec => 0.45,
+            AlgoKind::Naive => 0.02,
+        };
+        // Layout quality (paper Fig. 4: NHWC > CHWN8 > CHWN > NCHW for
+        // both direct and im2win).
+        let layout_q = match layout {
+            Layout::Nhwc => 1.0,
+            Layout::Chwn8 => 0.95,
+            Layout::Chwn => 0.80,
+            Layout::Nchw => 0.75,
+        };
+        // Vector-lane utilization of the unit-stride dimension (§III-C):
+        // a 3-channel NHWC first layer fills 3 of 8 lanes, CHWN fills
+        // min(N, 8), NCHW streams the output row.
+        let unit_len = match layout {
+            Layout::Nhwc => p.c_in,
+            Layout::Nchw => p.w_out(),
+            Layout::Chwn | Layout::Chwn8 => p.n,
+        };
+        let lanes = (unit_len.min(8) as f64) / 8.0;
+        let eff = (base * layout_q * (0.25 + 0.75 * lanes)).max(1e-3);
+        let compute_s = p.flops() as f64 / (peak * eff);
+
+        // Transform traffic: bytes written to scratch plus re-read by the
+        // consuming kernel (≈ 2× the scratch size), plus one input read.
+        let input_bytes = layout.storage_len(p.input_dims()) as f64 * F32;
+        let scratch_elems = match algo {
+            AlgoKind::Direct | AlgoKind::Naive => 0,
+            AlgoKind::Im2win => layout.storage_len(im2win_dims(p)),
+            AlgoKind::Im2col => im2col_matrix_len(p, layout),
+            AlgoKind::Mec => mec_matrix_len(p),
+        };
+        let transform_s = if scratch_elems == 0 {
+            0.0
+        } else {
+            (2.0 * scratch_elems as f64 * F32 + input_bytes) / bw
+        };
+
+        // Layout conversion of the incoming activations (read + write).
+        let convert_s = if layout == prev { 0.0 } else { 2.0 * input_bytes / bw };
+
+        compute_s + transform_s + convert_s
+    }
+
+    /// Pick the cheapest candidate for one layer given the incoming
+    /// activation layout. Purely analytic — no kernels run.
+    pub fn plan_conv(&self, p: &ConvParams, prev: Layout) -> LayerPlan {
+        let mut best: Option<LayerPlan> = None;
+        for (algo, layout) in self.candidates() {
+            let est_s = self.estimate(algo, layout, p, prev);
+            let w_block = match algo {
+                AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
+                _ => 0,
+            };
+            let plan = LayerPlan { algo, layout, w_block, est_s, tuned: false };
+            if best.map_or(true, |b| est_s < b.est_s) {
+                best = Some(plan);
+            }
+        }
+        best.expect("candidate set is never empty")
+    }
+
+    /// Empirically refine a plan's `W_{o,b}` with [`tune_w_block`] (only
+    /// meaningful for direct/im2win; other algorithms are left untouched).
+    pub fn refine_plan(&self, p: &ConvParams, plan: &mut LayerPlan) -> Result<()> {
+        if !matches!(plan.algo, AlgoKind::Direct | AlgoKind::Im2win) {
+            return Ok(());
+        }
+        let report = tune_w_block(plan.algo, plan.layout, p, self.refine_repeats)?;
+        plan.w_block = report.best().w_block;
+        plan.tuned = true;
+        Ok(())
+    }
+
+    /// Plan every convolution layer of `model`, front to back, consulting
+    /// (and filling) `cache`. Layers whose key — geometry at the planning
+    /// batch, incoming layout, thread count — is cached are reused
+    /// verbatim, with one exception: when this planner refines
+    /// (`self.refine`) and the cached entry is analytic-only
+    /// (`tuned == false`), the layer is re-planned with an empirical sweep
+    /// and the cache entry is **upgraded** in place. A tuned entry is never
+    /// re-tuned, so the second process run of a refining planner does no
+    /// measurement at all.
+    pub fn plan_model(&self, model: &Model, cache: &mut PlanCache) -> Result<Vec<LayerPlan>> {
+        let mut plans = Vec::new();
+        let mut prev = model.layout();
+        for op in model.ops() {
+            if let Op::Conv(conv) = op {
+                let p = conv.params.with_batch(self.batch);
+                let key = layer_key(&p, prev, self.threads);
+                let plan = match cache.get(&key) {
+                    Some(hit) if hit.tuned || !self.refine => hit,
+                    _ => {
+                        let mut plan = self.plan_conv(&p, prev);
+                        if self.refine {
+                            self.refine_plan(&p, &mut plan)?;
+                        }
+                        cache.insert(key, plan);
+                        plan
+                    }
+                };
+                prev = plan.layout;
+                plans.push(plan);
+            }
+        }
+        Ok(plans)
+    }
+
+    /// Apply `plans` to `model`'s convolution layers in order (the
+    /// plan-driven `Model::forward`: after this, the model's own forward
+    /// and the engine's workspace forward both follow the plan).
+    pub fn apply(model: &mut Model, plans: &[LayerPlan]) -> Result<()> {
+        let mut it = plans.iter();
+        for op in model.ops_mut() {
+            if let Op::Conv(conv) = op {
+                let plan = it.next().ok_or_else(|| {
+                    Error::Config("fewer plans than convolution layers".into())
+                })?;
+                conv.reconfigure(plan.algo, plan.layout, plan.w_block)?;
+            }
+        }
+        if it.next().is_some() {
+            return Err(Error::Config("more plans than convolution layers".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn candidates_cover_all_supported_pairs() {
+        let planner = Planner::new();
+        let c = planner.candidates();
+        // direct 4 + im2win 4 + im2col 4 + mec 1 (NHWC only)
+        assert_eq!(c.len(), 13);
+        assert!(c.contains(&(AlgoKind::Mec, Layout::Nhwc)));
+        assert!(!c.contains(&(AlgoKind::Mec, Layout::Nchw)));
+        assert!(!c.iter().any(|(a, _)| *a == AlgoKind::Naive));
+    }
+
+    #[test]
+    fn estimates_are_positive_and_conversion_costs_show() {
+        let planner = Planner::new();
+        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        for (algo, layout) in planner.candidates() {
+            let same = planner.estimate(algo, layout, &p, layout);
+            assert!(same > 0.0 && same.is_finite(), "{algo} {layout}");
+            let other = if layout == Layout::Nchw { Layout::Nhwc } else { Layout::Nchw };
+            let cross = planner.estimate(algo, layout, &p, other);
+            assert!(cross > same, "{algo} {layout}: conversion must cost something");
+        }
+    }
+
+    #[test]
+    fn transform_free_direct_beats_im2col_on_tiny_output() {
+        // conv12-like: 7x7 input, 3x3 filter — the transform can barely
+        // amortize, so direct should estimate under im2col on a layout
+        // where both are available.
+        let planner = Planner::new();
+        let p = ConvParams::new(8, 512, 7, 7, 512, 3, 3, 1).unwrap();
+        let d = planner.estimate(AlgoKind::Direct, Layout::Nhwc, &p, Layout::Nhwc);
+        let c = planner.estimate(AlgoKind::Im2col, Layout::Nhwc, &p, Layout::Nhwc);
+        assert!(d < c, "direct {d} should beat im2col {c} on conv12");
+    }
+
+    #[test]
+    fn plan_conv_picks_a_supported_candidate() {
+        let planner = Planner::new();
+        for p in crate::testutil::random_problems(12, 2025) {
+            let plan = planner.plan_conv(&p, Layout::Nchw);
+            assert!(plan.algo.build().supports(plan.layout), "{p}");
+            assert!(plan.est_s > 0.0);
+            match plan.algo {
+                AlgoKind::Direct | AlgoKind::Im2win => assert!(plan.w_block >= 1),
+                _ => assert_eq!(plan.w_block, 0),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_model_covers_every_conv_and_fills_cache() {
+        let planner = Planner::new();
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 5).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let plans = planner.plan_model(&model, &mut cache).unwrap();
+        assert_eq!(plans.len(), model.conv_params().len());
+        assert_eq!(cache.len(), plans.len());
+        assert_eq!(cache.misses(), plans.len());
+        // Second pass: all hits, identical plans.
+        let again = planner.plan_model(&model, &mut cache).unwrap();
+        assert_eq!(plans, again);
+        assert_eq!(cache.hits(), plans.len());
+    }
+
+    #[test]
+    fn apply_rejects_plan_count_mismatch() {
+        let mut model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 5).unwrap();
+        let planner = Planner::new();
+        let mut cache = PlanCache::in_memory();
+        let mut plans = planner.plan_model(&model, &mut cache).unwrap();
+        plans.pop();
+        assert!(Planner::apply(&mut model, &plans).is_err());
+    }
+
+    #[test]
+    fn refining_planner_upgrades_untuned_cache_entries() {
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 5).unwrap();
+        let mut cache = PlanCache::in_memory();
+        // First pass: cheap analytic plans land in the cache untuned.
+        Planner::new().plan_model(&model, &mut cache).unwrap();
+        // A refining planner must not accept those hits verbatim.
+        let refiner = Planner { refine: true, refine_repeats: 1, ..Planner::new() };
+        let refined = refiner.plan_model(&model, &mut cache).unwrap();
+        for plan in &refined {
+            if matches!(plan.algo, AlgoKind::Direct | AlgoKind::Im2win) {
+                assert!(plan.tuned, "warm cache silently skipped refinement");
+            }
+        }
+        // ...but a second refining run is a pure hit (no re-tuning).
+        let hits_before = cache.hits();
+        let again = refiner.plan_model(&model, &mut cache).unwrap();
+        assert_eq!(again, refined);
+        assert_eq!(cache.hits(), hits_before + refined.len());
+    }
+
+    #[test]
+    fn refine_sets_a_sampled_w_block() {
+        let planner = Planner::new();
+        let p = ConvParams::new(2, 4, 10, 10, 4, 3, 3, 1).unwrap();
+        let mut plan = LayerPlan {
+            algo: AlgoKind::Im2win,
+            layout: Layout::Nhwc,
+            w_block: DEFAULT_W_BLOCK,
+            est_s: 1.0,
+            tuned: false,
+        };
+        planner.refine_plan(&p, &mut plan).unwrap();
+        assert!(plan.tuned);
+        assert!(crate::autotune::W_BLOCK_CANDIDATES.contains(&plan.w_block));
+        // Non-tunable algorithms are untouched.
+        let mut col = LayerPlan { algo: AlgoKind::Im2col, w_block: 0, tuned: false, ..plan };
+        planner.refine_plan(&p, &mut col).unwrap();
+        assert!(!col.tuned);
+    }
+}

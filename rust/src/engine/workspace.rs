@@ -1,0 +1,165 @@
+//! Reusable scratch arena for the inference engine.
+//!
+//! Every convolution algorithm except direct needs per-call scratch — the
+//! im2win window tensor, the im2col/MEC lowered matrices, packed filters —
+//! and the engine's forward pass needs one activation buffer per layer.
+//! The seed code allocated all of these on every `forward`; a serving
+//! process doing thousands of identical-geometry requests pays that
+//! allocation (and page-fault) cost over and over.
+//!
+//! [`Workspace`] is a keyed lease arena: callers [`Workspace::take`] a
+//! buffer by `(tag, len)`, use it, and [`Workspace::put`] it back. The
+//! first request for a key allocates the buffer (a *miss*); every later
+//! request of the same key reuses it (a *hit*), so steady state performs
+//! no tensor/scratch allocation. (The *keys* are small `String`s built
+//! per lease — a few dozen bytes per layer, negligible next to the
+//! megabyte-scale buffers this arena exists to recycle; interning them is
+//! a possible follow-on.) Keys include the length, so the same tag at two
+//! geometries (e.g. two conv layers sharing a scratch role) occupies two
+//! slots instead of thrashing.
+//!
+//! Buffers are returned **dirty** — contents are whatever the previous
+//! user left. Every kernel routed through the arena fully overwrites its
+//! scratch (the im2win transform and the im2col/MEC lowerings write every
+//! element; convolution outputs are zeroed by `run_into`), which the
+//! stale-scratch property tests in `tests/engine.rs` pin down.
+
+use crate::tensor::{AlignedBuf, Dims, Layout, Tensor4};
+use std::collections::HashMap;
+
+/// A keyed arena of reusable aligned buffers (see module docs).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    slots: HashMap<(String, usize), AlignedBuf>,
+    hits: usize,
+    misses: usize,
+}
+
+impl Workspace {
+    /// An empty arena.
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Lease a buffer of exactly `len` floats under `tag`.
+    ///
+    /// Returns the previously [`Workspace::put`] buffer for `(tag, len)`
+    /// when available (a hit), otherwise allocates a zeroed one (a miss).
+    /// Leased buffers may contain stale data on hits; callers must fully
+    /// overwrite what they read.
+    pub fn take(&mut self, tag: &str, len: usize) -> AlignedBuf {
+        match self.slots.remove(&(tag.to_string(), len)) {
+            Some(buf) => {
+                self.hits += 1;
+                buf
+            }
+            None => {
+                self.misses += 1;
+                AlignedBuf::zeroed(len)
+            }
+        }
+    }
+
+    /// Return a leased buffer so the next [`Workspace::take`] of the same
+    /// `(tag, len)` reuses it.
+    pub fn put(&mut self, tag: &str, buf: AlignedBuf) {
+        let len = buf.len();
+        self.slots.insert((tag.to_string(), len), buf);
+    }
+
+    /// Lease a tensor of `dims` × `layout` under `tag` (storage possibly
+    /// stale — see [`Workspace::take`]).
+    pub fn take_tensor(&mut self, tag: &str, dims: Dims, layout: Layout) -> Tensor4 {
+        let buf = self.take(tag, layout.storage_len(dims));
+        Tensor4::from_parts(buf, dims, layout)
+    }
+
+    /// Return a leased tensor's storage to the arena.
+    pub fn put_tensor(&mut self, tag: &str, t: Tensor4) {
+        self.put(tag, t.into_parts());
+    }
+
+    /// Number of lease requests served from the arena.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Number of lease requests that had to allocate.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Number of parked (not currently leased) buffers.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no buffers are parked.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Total bytes parked in the arena right now.
+    pub fn parked_bytes(&self) -> usize {
+        self.slots.values().map(|b| b.len() * std::mem::size_of::<f32>()).sum()
+    }
+
+    /// Drop every parked buffer and reset the hit/miss counters.
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_reuses_the_same_allocation() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take("x", 128);
+        let ptr = a.as_ptr();
+        a[0] = 42.0;
+        ws.put("x", a);
+        let b = ws.take("x", 128);
+        assert_eq!(b.as_ptr(), ptr, "expected the identical allocation back");
+        assert_eq!(b[0], 42.0, "contents come back dirty by design");
+        assert_eq!(ws.hits(), 1);
+        assert_eq!(ws.misses(), 1);
+    }
+
+    #[test]
+    fn different_lengths_use_distinct_slots() {
+        let mut ws = Workspace::new();
+        let a = ws.take("x", 64);
+        ws.put("x", a);
+        let b = ws.take("x", 128); // miss: same tag, new length
+        assert_eq!(ws.misses(), 2);
+        ws.put("x", b);
+        let _ = ws.take("x", 64); // both sizes now parked: hit
+        let _ = ws.take("x", 128); // hit
+        assert_eq!(ws.hits(), 2);
+    }
+
+    #[test]
+    fn tensor_round_trip_all_layouts() {
+        let dims = Dims::new(9, 3, 4, 5); // 9 exercises CHWN8 padding
+        let mut ws = Workspace::new();
+        for layout in Layout::ALL {
+            let mut t = ws.take_tensor("act", dims, layout);
+            assert_eq!(t.dims(), dims);
+            assert_eq!(t.layout(), layout);
+            t.set(8, 2, 3, 4, 7.0);
+            ws.put_tensor("act", t);
+        }
+        // Four layouts, but NCHW/NHWC/CHWN share a storage length, so
+        // they alias one slot; CHWN8 (padded) gets its own.
+        assert!(ws.len() <= 2);
+        assert!(ws.parked_bytes() > 0);
+        ws.clear();
+        assert!(ws.is_empty());
+        assert_eq!(ws.hits() + ws.misses(), 0);
+    }
+}

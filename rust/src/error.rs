@@ -1,7 +1,7 @@
 //! Crate-wide error type.
 //!
 //! Hand-rolled (no `thiserror` on the hot path) so the library stays
-//! dependency-light; `anyhow` is used only in binaries.
+//! dependency-light; the binary uses plain `Box<dyn Error>`.
 
 use std::fmt;
 

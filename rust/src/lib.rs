@@ -21,9 +21,13 @@
 //!   ([`gemm`]), a roofline model ([`roofline`]), an allocation-tracking
 //!   metrics layer ([`metrics`]), a benchmark harness ([`bench_harness`]),
 //!   an autotuner ([`autotune`]), a CNN model graph + runner ([`model`]),
-//!   a PJRT runtime bridge to the JAX/Pallas AOT artifacts ([`runtime`]),
-//!   a zero-dependency JSON config substrate ([`config`]) and the experiment
-//!   coordinator ([`coordinator`]).
+//!   a PJRT runtime bridge to the JAX/Pallas AOT artifacts ([`runtime`],
+//!   behind the `pjrt` feature), a zero-dependency JSON config substrate
+//!   ([`config`]) and the experiment coordinator ([`coordinator`]);
+//! * an inference [`engine`]: per-layer plan selection over
+//!   (algorithm × layout × blocking) with an analytic cost model, a
+//!   persistent JSON plan cache, a reusable scratch workspace, and a
+//!   micro-batching server for single-image traffic.
 //!
 //! ## Quickstart
 //!
@@ -45,6 +49,7 @@ pub mod bench_harness;
 pub mod config;
 pub mod conv;
 pub mod coordinator;
+pub mod engine;
 pub mod error;
 pub mod gemm;
 pub mod metrics;

@@ -9,47 +9,61 @@
 //! im2win bench scaling --algo direct|im2win [--scale S] [--layers ...]
 //! im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
 //! im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win]
+//! im2win plan  [--model tinynet|vgg] [--batch N] [--cache plans.json] [--refine]
+//! im2win serve [--model tinynet|vgg] [--requests N] [--batch N] [--cache plans.json]
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
 //! ```
 //!
-//! Flag parsing is hand-rolled (`clap` is unavailable offline).
+//! Flag parsing is hand-rolled (`clap` is unavailable offline), and error
+//! handling uses `Box<dyn Error>` (`anyhow` is likewise unavailable).
 
-use anyhow::{anyhow, bail, Context, Result};
 use im2win::autotune::tune_w_block;
 use im2win::bench_harness::fmt_time;
 use im2win::config::{ExperimentConfig, Scale};
 use im2win::conv::AlgoKind;
 use im2win::coordinator::{experiments, format_table, layers, summary, write_csv, write_json};
+use im2win::engine::{Engine, PlanCache, Planner, Server};
+use im2win::model::zoo;
 use im2win::prelude::*;
 use im2win::roofline::{MachineSpec, Roofline};
-use im2win::tensor::Layout;
+use im2win::tensor::{Dims, Layout};
+
+type CliResult<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+/// Build a boxed CLI error from a message.
+fn err(msg: impl Into<String>) -> Box<dyn std::error::Error> {
+    msg.into().into()
+}
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-/// Minimal flag parser: `--key value` pairs after the subcommand words.
+/// Minimal flag parser: `--key value` pairs after the subcommand words,
+/// with a small set of boolean flags that take no value.
 struct Flags {
     pairs: Vec<(String, String)>,
 }
 
+const BOOL_FLAGS: [&str; 3] = ["paper", "refine", "detect"];
+
 impl Flags {
-    fn parse(args: &[String]) -> Result<Flags> {
+    fn parse(args: &[String]) -> CliResult<Flags> {
         let mut pairs = Vec::new();
         let mut it = args.iter();
         while let Some(a) = it.next() {
             let key = a
                 .strip_prefix("--")
-                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
-            if key == "paper" {
+                .ok_or_else(|| err(format!("expected --flag, got '{a}'")))?;
+            if BOOL_FLAGS.contains(&key) {
                 pairs.push((key.to_string(), "true".to_string()));
                 continue;
             }
-            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            let val = it.next().ok_or_else(|| err(format!("--{key} needs a value")))?;
             pairs.push((key.to_string(), val.clone()));
         }
         Ok(Flags { pairs })
@@ -59,10 +73,17 @@ impl Flags {
         self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
-    fn scale(&self) -> Result<Scale> {
+    fn usize_or(&self, key: &str, default: usize) -> CliResult<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| err(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    fn scale(&self) -> CliResult<Scale> {
         match self.get("scale") {
             None => Ok(Scale::Ci),
-            Some(s) => Scale::parse(s).ok_or_else(|| anyhow!("unknown scale '{s}'")),
+            Some(s) => Scale::parse(s).ok_or_else(|| err(format!("unknown scale '{s}'"))),
         }
     }
 
@@ -72,17 +93,17 @@ impl Flags {
             .unwrap_or_default()
     }
 
-    fn layout(&self, default: Layout) -> Result<Layout> {
+    fn layout(&self, default: Layout) -> CliResult<Layout> {
         match self.get("layout") {
             None => Ok(default),
-            Some(s) => Layout::parse(s).ok_or_else(|| anyhow!("unknown layout '{s}'")),
+            Some(s) => Layout::parse(s).ok_or_else(|| err(format!("unknown layout '{s}'"))),
         }
     }
 
-    fn algo(&self, default: AlgoKind) -> Result<AlgoKind> {
+    fn algo(&self, default: AlgoKind) -> CliResult<AlgoKind> {
         match self.get("algo") {
             None => Ok(default),
-            Some(s) => AlgoKind::parse(s).ok_or_else(|| anyhow!("unknown algo '{s}'")),
+            Some(s) => AlgoKind::parse(s).ok_or_else(|| err(format!("unknown algo '{s}'"))),
         }
     }
 
@@ -93,9 +114,10 @@ impl Flags {
     }
 }
 
-fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
+fn config_from_flags(flags: &Flags) -> CliResult<ExperimentConfig> {
     let mut cfg = if let Some(path) = flags.get("config") {
-        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading {path}: {e}")))?;
         ExperimentConfig::from_json(&text)?
     } else {
         ExperimentConfig::paper_matrix(flags.scale()?)
@@ -112,7 +134,7 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn run() -> Result<()> {
+fn run() -> CliResult<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = args.split_first().map(|(c, r)| (c.as_str(), r)).unwrap_or(("help", &[][..]));
     match cmd {
@@ -122,7 +144,7 @@ fn run() -> Result<()> {
             let (which, rest2) = rest
                 .split_first()
                 .map(|(c, r)| (c.as_str(), r))
-                .ok_or_else(|| anyhow!("bench needs a target: table1|fig4|fig5|scaling|ablation"))?;
+                .ok_or_else(|| err("bench needs a target: table1|fig4|fig5|scaling|ablation"))?;
             let flags = Flags::parse(rest2)?;
             match which {
                 "table1" => table1(),
@@ -130,17 +152,19 @@ fn run() -> Result<()> {
                 "fig5" => fig5(&flags),
                 "scaling" => scaling(&flags),
                 "ablation" => ablation(&flags),
-                other => bail!("unknown bench target '{other}'"),
+                other => Err(err(format!("unknown bench target '{other}'"))),
             }
         }
         "autotune" => autotune(&Flags::parse(rest)?),
+        "plan" => plan(&Flags::parse(rest)?),
+        "serve" => serve(&Flags::parse(rest)?),
         "roofline" => roofline_cmd(&Flags::parse(rest)?),
         "oracle" => oracle(&Flags::parse(rest)?),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try `im2win help`)"),
+        other => Err(err(format!("unknown command '{other}' (try `im2win help`)"))),
     }
 }
 
@@ -156,11 +180,15 @@ USAGE:
   im2win bench scaling  [--algo direct|im2win] [--scale S] [--layers ...]
   im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
   im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win] [--scale S]
+  im2win plan     [--model tinynet|vgg] [--edge N] [--batch N] [--threads T]
+                  [--cache plans.json] [--refine] [--detect]
+  im2win serve    [--model tinynet|vgg] [--edge N] [--requests N] [--batch N]
+                  [--threads T] [--cache plans.json]
   im2win roofline [--paper]
-  im2win oracle   [--layer conv9]
+  im2win oracle   [--layer conv9]      (requires a build with --features pjrt)
 ";
 
-fn info() -> Result<()> {
+fn info() -> CliResult<()> {
     let spec = MachineSpec::detect();
     println!("im2win build info");
     println!(
@@ -176,7 +204,7 @@ fn info() -> Result<()> {
     Ok(())
 }
 
-fn table1() -> Result<()> {
+fn table1() -> CliResult<()> {
     println!("Table I — twelve convolution layers of the DNN benchmarks");
     println!(
         "{:<8} {:>18} {:>22} {:>18}",
@@ -195,7 +223,7 @@ fn table1() -> Result<()> {
     Ok(())
 }
 
-fn verify(flags: &Flags) -> Result<()> {
+fn verify(flags: &Flags) -> CliResult<()> {
     let cfg = config_from_flags(flags)?;
     let results = experiments::verify(&cfg)?;
     println!("verified {} algo x layout cells against the naive oracle", results.len());
@@ -205,7 +233,7 @@ fn verify(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn fig4(flags: &Flags) -> Result<()> {
+fn fig4(flags: &Flags) -> CliResult<()> {
     let cfg = config_from_flags(flags)?;
     let spec = MachineSpec::detect();
     let roof = Roofline::new(spec);
@@ -237,7 +265,7 @@ fn fig4(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn fig5(flags: &Flags) -> Result<()> {
+fn fig5(flags: &Flags) -> CliResult<()> {
     let cfg = config_from_flags(flags)?;
     println!("Fig. 5 — memory usage (MiB), scale={}", cfg.scale.name());
     let records = experiments::fig5(&cfg)?;
@@ -257,7 +285,7 @@ fn fig5(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn scaling(flags: &Flags) -> Result<()> {
+fn scaling(flags: &Flags) -> CliResult<()> {
     let cfg = config_from_flags(flags)?;
     let algo = flags.algo(AlgoKind::Im2win)?;
     println!(
@@ -273,9 +301,6 @@ fn scaling(flags: &Flags) -> Result<()> {
             continue;
         }
         println!("\n[{algo} {layout}] GFLOPS by batch:");
-        let mut by_batch: Vec<usize> = sub.iter().map(|r| r.batch).collect();
-        by_batch.sort();
-        by_batch.dedup();
         for r in &sub {
             println!("  {:<8} N={:<4} {:>8.2} GFLOPS ({})", r.layer, r.batch, r.gflops(), fmt_time(r.best_s));
         }
@@ -287,11 +312,11 @@ fn scaling(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn ablation(flags: &Flags) -> Result<()> {
+fn ablation(flags: &Flags) -> CliResult<()> {
     let scale = flags.scale()?;
     let layout = flags.layout(Layout::Nhwc)?;
     let name = flags.get("layer").unwrap_or("conv9");
-    let layer = layers::by_name(name).ok_or_else(|| anyhow!("unknown layer '{name}'"))?;
+    let layer = layers::by_name(name).ok_or_else(|| err(format!("unknown layer '{name}'")))?;
     flags.apply_threads();
     println!("Ablation ladder on {name} ({layout}), scale={}", scale.name());
     let records = experiments::ablation(layer, layout, scale)?;
@@ -308,12 +333,12 @@ fn ablation(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn autotune(flags: &Flags) -> Result<()> {
+fn autotune(flags: &Flags) -> CliResult<()> {
     let scale = flags.scale()?;
     let layout = flags.layout(Layout::Nhwc)?;
     let algo = flags.algo(AlgoKind::Im2win)?;
     let name = flags.get("layer").unwrap_or("conv5");
-    let layer = layers::by_name(name).ok_or_else(|| anyhow!("unknown layer '{name}'"))?;
+    let layer = layers::by_name(name).ok_or_else(|| err(format!("unknown layer '{name}'")))?;
     flags.apply_threads();
     let p = experiments::layer_params(layer, scale);
     println!("Autotuning W_o,b for {algo} {layout} on {name} ({p})");
@@ -331,7 +356,114 @@ fn autotune(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn roofline_cmd(flags: &Flags) -> Result<()> {
+/// Shared by `plan`/`serve`: a zoo model with placeholder algorithm and
+/// layout choices (the engine decides the real ones).
+fn build_model(flags: &Flags) -> CliResult<im2win::model::Model> {
+    let name = flags.get("model").unwrap_or("tinynet");
+    let edge = flags.usize_or("edge", 64)?;
+    let model = match name {
+        "tinynet" => zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 42)?,
+        "vgg" | "vgg_stack" => zoo::vgg_stack(Layout::Nchw, AlgoKind::Naive, edge, 42)?,
+        other => return Err(err(format!("unknown model '{other}' (tinynet|vgg)"))),
+    };
+    Ok(model)
+}
+
+/// Shared by `plan`/`serve`: planner + cache configured from flags.
+fn planner_from_flags(flags: &Flags) -> CliResult<(Planner, PlanCache)> {
+    flags.apply_threads();
+    let mut planner = Planner::new();
+    if flags.get("detect").is_some() {
+        planner.spec = MachineSpec::detect();
+    }
+    planner.refine = flags.get("refine").is_some();
+    planner.batch = flags.usize_or("batch", 8)?;
+    planner.threads = im2win::parallel::global().threads();
+    let cache = match flags.get("cache") {
+        Some(path) => PlanCache::load(path)?,
+        None => PlanCache::in_memory(),
+    };
+    Ok((planner, cache))
+}
+
+fn plan(flags: &Flags) -> CliResult<()> {
+    let model = build_model(flags)?;
+    let (planner, mut cache) = planner_from_flags(flags)?;
+    println!(
+        "Planning {} ({} conv layers) at batch {}, {} threads{}{}",
+        model.name,
+        model.conv_params().len(),
+        planner.batch,
+        planner.threads,
+        if planner.refine { ", empirical W_o,b refinement" } else { "" },
+        if cache.path().is_some() { ", persistent cache" } else { "" },
+    );
+    let plans = planner.plan_model(&model, &mut cache)?;
+    println!(
+        "\n{:<4} {:<26} {:<8} {:<7} {:>6} {:>10} {:>6}",
+        "#", "geometry", "algo", "layout", "W_o,b", "est", "tuned"
+    );
+    for (i, (p, plan)) in model.conv_params().iter().zip(&plans).enumerate() {
+        let q = p.with_batch(planner.batch);
+        println!(
+            "{:<4} {:<26} {:<8} {:<7} {:>6} {:>10} {:>6}",
+            i,
+            q.to_string(),
+            plan.algo.name(),
+            plan.layout.to_string(),
+            plan.w_block,
+            fmt_time(plan.est_s),
+            if plan.tuned { "yes" } else { "no" },
+        );
+    }
+    println!("\ncache: {} hits, {} misses, {} entries", cache.hits(), cache.misses(), cache.len());
+    if cache.path().is_some() {
+        cache.save()?;
+        println!("saved plan cache to {}", cache.path().unwrap().display());
+    }
+    Ok(())
+}
+
+fn serve(flags: &Flags) -> CliResult<()> {
+    let model = build_model(flags)?;
+    let (planner, mut cache) = planner_from_flags(flags)?;
+    let requests = flags.usize_or("requests", 100)?;
+    let max_batch = flags.usize_or("batch", 8)?;
+    let engine = Engine::plan(model, &planner, &mut cache)?;
+    if cache.path().is_some() {
+        cache.save()?;
+    }
+    let base = engine.model().input_dims();
+    let name = engine.model().name.clone();
+    println!(
+        "Serving {name} — {} single-image requests, micro-batch <= {max_batch}, {} threads",
+        requests,
+        im2win::parallel::global().threads()
+    );
+    for (i, plan) in engine.plans().iter().enumerate() {
+        println!("  layer {i}: {} {} W_o,b={}", plan.algo.name(), plan.layout, plan.w_block);
+    }
+    let server = Server::start(engine, max_batch);
+    let dims = Dims::new(1, base.c, base.h, base.w);
+    let receivers: Vec<_> = (0..requests)
+        .map(|i| server.submit(Tensor4::random(dims, Layout::Nchw, i as u64)))
+        .collect();
+    for rx in &receivers {
+        rx.recv()
+            .map_err(|_| err("server dropped a request"))?
+            .map_err(|e| err(format!("inference failed: {e}")))?;
+    }
+    let report = server.shutdown();
+    println!("\nserved {} requests in {} batches", report.served, report.batches);
+    println!("  avg batch      : {:.2}", report.avg_batch());
+    println!("  max batch      : {}", report.max_batch_seen);
+    println!("  busy time      : {}", fmt_time(report.busy_s));
+    println!("  throughput     : {:.1} inf/s", report.throughput());
+    println!("  warm allocs    : {} (scratch misses after warmup)", report.warm_misses);
+    Ok(())
+}
+
+fn roofline_cmd(flags: &Flags) -> CliResult<()> {
     let spec = if flags.get("paper").is_some() {
         MachineSpec::paper_server()
     } else {
@@ -360,10 +492,11 @@ fn roofline_cmd(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn oracle(flags: &Flags) -> Result<()> {
+#[cfg(feature = "pjrt")]
+fn oracle(flags: &Flags) -> CliResult<()> {
     use im2win::runtime::{artifact_path, PjrtRuntime};
     let name = flags.get("layer").unwrap_or("conv9");
-    let layer = layers::by_name(name).ok_or_else(|| anyhow!("unknown layer '{name}'"))?;
+    let layer = layers::by_name(name).ok_or_else(|| err(format!("unknown layer '{name}'")))?;
     let p = layer.scaled_params(2, 8);
     let rt = PjrtRuntime::cpu()?;
     let path = artifact_path(&format!("conv_{name}"));
@@ -378,8 +511,16 @@ fn oracle(flags: &Flags) -> Result<()> {
         let diff = oracle.max_abs_diff(&got);
         println!("  {:<8} vs XLA oracle: max|diff| = {diff:.2e}", algo.name());
         if diff > 1e-2 {
-            bail!("{} disagrees with the XLA oracle on {name}", algo.name());
+            return Err(err(format!("{} disagrees with the XLA oracle on {name}", algo.name())));
         }
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn oracle(_flags: &Flags) -> CliResult<()> {
+    Err(err(
+        "the oracle subcommand needs the PJRT bridge; rebuild with `--features pjrt` \
+         after vendoring the xla bindings (see rust/README.md)",
+    ))
 }

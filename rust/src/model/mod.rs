@@ -17,7 +17,10 @@ pub mod zoo;
 
 mod ops;
 
-pub use ops::{global_avg_pool, linear, max_pool2d, relu, relu_inplace};
+pub use ops::{
+    global_avg_pool, global_avg_pool_into, linear, linear_into, max_pool2d, max_pool2d_into,
+    relu, relu_inplace,
+};
 
 use crate::conv::{AlgoKind, Conv2d, ConvParams};
 use crate::error::{Error, Result};
@@ -101,6 +104,43 @@ impl Model {
     /// The model's activation layout.
     pub fn layout(&self) -> Layout {
         self.layout
+    }
+
+    /// The model's layers, in execution order (read-only view for the
+    /// inference engine's planner and executor).
+    pub fn ops(&self) -> &[Op] {
+        &self.ops
+    }
+
+    /// Mutable view of the layers — the hook the engine uses to apply a
+    /// plan via [`Conv2d::reconfigure`] without rebuilding the model.
+    pub fn ops_mut(&mut self) -> &mut [Op] {
+        &mut self.ops
+    }
+
+    /// Reference input dims at batch 1 (`(1, c, h, w)`).
+    pub fn input_dims(&self) -> Dims {
+        self.input_dims
+    }
+
+    /// Geometries of the convolution layers, in order (batch 1).
+    pub fn conv_params(&self) -> Vec<ConvParams> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Conv(c) => Some(c.params),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Output dims for a batch-`n` input.
+    pub fn out_dims_for_batch(&self, n: usize) -> Result<Dims> {
+        let mut d = Dims::new(n, self.input_dims.c, self.input_dims.h, self.input_dims.w);
+        for op in &self.ops {
+            d = op.out_dims(d)?;
+        }
+        Ok(d)
     }
 
     /// Current output dims for a batch-1 input (shape inference).

@@ -45,6 +45,27 @@ pub fn max_pool2d(x: &Tensor4, k: usize, s: usize) -> Result<Tensor4> {
     }
     let out_d = Dims::new(d.n, d.c, (d.h - k) / s + 1, (d.w - k) / s + 1);
     let mut y = Tensor4::zeros(out_d, x.layout());
+    max_pool2d_into(x, k, s, &mut y)?;
+    Ok(y)
+}
+
+/// Max pooling into a caller-provided output (the engine's reuse path).
+/// `y` must be the pooled dims in `x`'s layout; every logical element is
+/// overwritten, so recycled storage is safe.
+pub fn max_pool2d_into(x: &Tensor4, k: usize, s: usize, y: &mut Tensor4) -> Result<()> {
+    let d = x.dims();
+    if k == 0 || s == 0 || k > d.h || k > d.w {
+        return Err(Error::ShapeMismatch(format!("maxpool k={k} s={s} on {d}")));
+    }
+    let out_d = Dims::new(d.n, d.c, (d.h - k) / s + 1, (d.w - k) / s + 1);
+    if y.dims() != out_d || y.layout() != x.layout() {
+        return Err(Error::ShapeMismatch(format!(
+            "maxpool output {} ({}) != expected {out_d} ({})",
+            y.dims(),
+            y.layout(),
+            x.layout()
+        )));
+    }
     for n in 0..d.n {
         for c in 0..d.c {
             for ho in 0..out_d.h {
@@ -60,13 +81,30 @@ pub fn max_pool2d(x: &Tensor4, k: usize, s: usize) -> Result<Tensor4> {
             }
         }
     }
-    Ok(y)
+    Ok(())
 }
 
 /// Mean over all `(h, w)` positions, producing `(n, c, 1, 1)`.
 pub fn global_avg_pool(x: &Tensor4) -> Tensor4 {
     let d = x.dims();
     let mut y = Tensor4::zeros(Dims::new(d.n, d.c, 1, 1), x.layout());
+    global_avg_pool_into(x, &mut y).expect("freshly allocated GAP output is always valid");
+    y
+}
+
+/// Global average pooling into a caller-provided `(n, c, 1, 1)` output in
+/// `x`'s layout (every logical element overwritten).
+pub fn global_avg_pool_into(x: &Tensor4, y: &mut Tensor4) -> Result<()> {
+    let d = x.dims();
+    let out_d = Dims::new(d.n, d.c, 1, 1);
+    if y.dims() != out_d || y.layout() != x.layout() {
+        return Err(Error::ShapeMismatch(format!(
+            "gap output {} ({}) != expected {out_d} ({})",
+            y.dims(),
+            y.layout(),
+            x.layout()
+        )));
+    }
     let inv = 1.0 / (d.h * d.w) as f32;
     for n in 0..d.n {
         for c in 0..d.c {
@@ -79,13 +117,27 @@ pub fn global_avg_pool(x: &Tensor4) -> Tensor4 {
             y.set(n, c, 0, 0, acc * inv);
         }
     }
-    y
+    Ok(())
 }
 
 /// Fully connected layer: flattens `(c, h, w)` in **logical NCHW order**
 /// (so results are layout-independent) and multiplies by
 /// `weight[out_features][in_features]`. Output is `(n, out_features, 1, 1)`.
 pub fn linear(x: &Tensor4, weight: &[f32], out_features: usize) -> Result<Tensor4> {
+    let d = x.dims();
+    let mut y = Tensor4::zeros(Dims::new(d.n, out_features, 1, 1), x.layout());
+    linear_into(x, weight, out_features, &mut y)?;
+    Ok(y)
+}
+
+/// Linear layer into a caller-provided `(n, out_features, 1, 1)` output in
+/// `x`'s layout (every logical element overwritten).
+pub fn linear_into(
+    x: &Tensor4,
+    weight: &[f32],
+    out_features: usize,
+    y: &mut Tensor4,
+) -> Result<()> {
     let d = x.dims();
     let in_features = d.c * d.h * d.w;
     if weight.len() != in_features * out_features {
@@ -94,7 +146,15 @@ pub fn linear(x: &Tensor4, weight: &[f32], out_features: usize) -> Result<Tensor
             weight.len()
         )));
     }
-    let mut y = Tensor4::zeros(Dims::new(d.n, out_features, 1, 1), x.layout());
+    let out_d = Dims::new(d.n, out_features, 1, 1);
+    if y.dims() != out_d || y.layout() != x.layout() {
+        return Err(Error::ShapeMismatch(format!(
+            "linear output {} ({}) != expected {out_d} ({})",
+            y.dims(),
+            y.layout(),
+            x.layout()
+        )));
+    }
     // Flatten per image in logical order (cheap relative to conv layers).
     let mut feat = vec![0.0f32; in_features];
     for n in 0..d.n {
@@ -111,7 +171,7 @@ pub fn linear(x: &Tensor4, weight: &[f32], out_features: usize) -> Result<Tensor
             y.set(n, o, 0, 0, crate::simd::dot(&feat, row));
         }
     }
-    Ok(y)
+    Ok(())
 }
 
 #[cfg(test)]

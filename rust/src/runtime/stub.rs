@@ -1,0 +1,54 @@
+//! Stub PJRT runtime used when the `pjrt` feature is disabled.
+//!
+//! Mirrors the constructible surface of the real bridge so callers can be
+//! written against one API; every entry point fails with a descriptive
+//! [`Error::Runtime`]. No `xla` symbols are referenced, which is what lets
+//! the default build work with zero external dependencies.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor4;
+use std::path::Path;
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT runtime unavailable: this build does not enable the `pjrt` cargo feature \
+         (the `xla` bindings are not in the offline dependency set); \
+         rebuild with `--features pjrt` after vendoring them"
+            .into(),
+    )
+}
+
+/// Placeholder for the PJRT CPU client (always fails to construct).
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+/// Placeholder for a compiled HLO module (never constructed by the stub).
+pub struct LoadedModule {
+    /// Artifact path, for diagnostics (parity with the real bridge).
+    pub source: String,
+}
+
+impl PjrtRuntime {
+    /// Always returns [`Error::Runtime`] in stub builds.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name (unreachable in practice — `cpu()` never succeeds).
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Always returns [`Error::Runtime`] in stub builds.
+    pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<LoadedModule> {
+        Err(unavailable())
+    }
+}
+
+impl LoadedModule {
+    /// Always returns [`Error::Runtime`] in stub builds.
+    pub fn execute_tensors(&self, _inputs: &[&Tensor4]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable())
+    }
+}

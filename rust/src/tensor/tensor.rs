@@ -53,6 +53,27 @@ impl Tensor4 {
         Self::from_fn(dims, layout, |_, _, _, _| next())
     }
 
+    /// Wrap an existing buffer as a tensor (no copy). Used by the engine's
+    /// workspace to recycle storage across requests; the buffer contents
+    /// are taken as-is, so callers must fully overwrite (or tolerate) any
+    /// stale data.
+    ///
+    /// Panics if `buf.len()` differs from `layout.storage_len(dims)`.
+    pub fn from_parts(buf: AlignedBuf, dims: Dims, layout: Layout) -> Self {
+        assert_eq!(
+            buf.len(),
+            layout.storage_len(dims),
+            "from_parts buffer length mismatch for {dims}"
+        );
+        Tensor4 { buf, dims, layout }
+    }
+
+    /// Unwrap the tensor into its raw storage buffer (no copy) — the
+    /// inverse of [`Tensor4::from_parts`].
+    pub fn into_parts(self) -> AlignedBuf {
+        self.buf
+    }
+
     /// Build from logical-order (`n,c,h,w` lexicographic) data.
     pub fn from_logical(dims: Dims, layout: Layout, data: &[f32]) -> Self {
         assert_eq!(data.len(), dims.count(), "data length must match dims");

@@ -1,0 +1,261 @@
+//! Integration tests for the inference engine subsystem: plan selection
+//! over the zoo models, persistent plan-cache round trips, workspace-reuse
+//! correctness (stale-scratch detection) across all four layouts, and the
+//! micro-batching server's end-to-end contract.
+
+use im2win::conv::{reference_conv, AlgoKind};
+use im2win::engine::{layer_key, Engine, Inference, LayerPlan, PlanCache, Planner, Server};
+use im2win::model::{zoo, Model};
+use im2win::prelude::*;
+use im2win::tensor::Dims;
+use im2win::testutil::random_problems;
+
+fn temp_path(stem: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("im2win_engine_{}_{stem}", std::process::id()))
+}
+
+/// A single-conv model (plus filter copy) for layer-level engine checks.
+fn single_conv_model(p: ConvParams, seed: u64) -> (Model, Tensor4) {
+    let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, seed);
+    let model = Model::new("one_conv", Layout::Nchw, p.c_in, p.h_in, p.w_in)
+        .conv(p.with_batch(1), AlgoKind::Naive, &filter)
+        .unwrap();
+    (model, filter)
+}
+
+// ---------------------------------------------------------------- planner
+
+#[test]
+fn planner_plans_every_layer_of_both_zoo_models() {
+    let planner = Planner::new();
+    for model in [
+        zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 3).unwrap(),
+        zoo::vgg_stack(Layout::Nchw, AlgoKind::Naive, 32, 3).unwrap(),
+    ] {
+        let mut cache = PlanCache::in_memory();
+        let plans = planner.plan_model(&model, &mut cache).unwrap();
+        assert_eq!(
+            plans.len(),
+            model.conv_params().len(),
+            "{}: every conv layer needs a plan",
+            model.name
+        );
+        for plan in &plans {
+            assert!(plan.algo.build().supports(plan.layout), "{}", model.name);
+            assert_ne!(plan.algo, AlgoKind::Naive);
+            assert!(plan.est_s > 0.0 && plan.est_s.is_finite());
+        }
+    }
+}
+
+#[test]
+fn engine_runs_zoo_models_without_user_choices() {
+    // The acceptance path: user supplies geometry only (Naive/Nchw are
+    // placeholders), the engine picks algorithm x layout per layer and the
+    // result matches the oracle model.
+    let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nchw, 70);
+    let expect = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 8).unwrap().forward(&x).unwrap();
+    let mut cache = PlanCache::in_memory();
+    let mut engine = Engine::plan(
+        zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 8).unwrap(),
+        &Planner::new(),
+        &mut cache,
+    )
+    .unwrap();
+    let y = engine.forward(&x).unwrap();
+    assert!(expect.allclose(&y, 1e-3, 1e-4), "diff {}", expect.max_abs_diff(&y));
+}
+
+// ------------------------------------------------------------ plan cache
+
+#[test]
+fn plan_cache_save_load_round_trips_byte_identically() {
+    // Property: for randomized geometries, save -> load -> save produces
+    // byte-identical files (canonical serialization).
+    let planner = Planner::new();
+    let path = temp_path("roundtrip.json");
+    let mut cache = PlanCache::load(&path).unwrap();
+    for (i, p) in random_problems(15, 404).iter().enumerate() {
+        let prev = Layout::ALL[i % 4];
+        let plan = planner.plan_conv(p, prev);
+        cache.insert(layer_key(p, prev, 1 + i % 3), plan);
+    }
+    cache.save().unwrap();
+    let bytes1 = std::fs::read(&path).unwrap();
+
+    let reloaded = PlanCache::load(&path).unwrap();
+    assert_eq!(reloaded.len(), cache.len());
+    reloaded.save().unwrap();
+    let bytes2 = std::fs::read(&path).unwrap();
+    assert_eq!(bytes1, bytes2, "canonical serialization must be byte-stable");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn second_process_run_hits_the_persisted_cache() {
+    let path = temp_path("persist.json");
+    std::fs::remove_file(&path).ok();
+    let planner = Planner::new();
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+
+    // "First process": plan from scratch and persist.
+    let first_plans;
+    {
+        let mut cache = PlanCache::load(&path).unwrap();
+        first_plans = planner.plan_model(&model, &mut cache).unwrap();
+        assert_eq!(cache.misses(), first_plans.len());
+        assert_eq!(cache.hits(), 0);
+        cache.save().unwrap();
+    }
+
+    // "Second process": a fresh load answers every layer from disk.
+    {
+        let mut cache = PlanCache::load(&path).unwrap();
+        let again = planner.plan_model(&model, &mut cache).unwrap();
+        assert_eq!(again, first_plans);
+        assert_eq!(cache.hits(), first_plans.len(), "all layers must be cache hits");
+        assert_eq!(cache.misses(), 0, "a second run must not re-plan or re-tune");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------- workspace-reuse correctness
+
+#[test]
+fn engine_matches_reference_conv_across_layouts_and_repeats() {
+    // Acceptance: engine output with workspace reuse matches
+    // `reference_conv` within 1e-5 on every layout x algorithm, and stays
+    // bit-identical across repeated calls (stale-scratch detection).
+    let p = ConvParams::new(3, 4, 10, 10, 5, 3, 3, 1).unwrap();
+    let x = Tensor4::random(p.input_dims(), Layout::Nchw, 31);
+    for layout in Layout::ALL {
+        for algo in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Mec] {
+            if !algo.build().supports(layout) {
+                continue;
+            }
+            let (model, filter) = single_conv_model(p, 32);
+            let expect = reference_conv(
+                &x.to_layout(layout),
+                &filter.to_layout(layout),
+                &p,
+                layout,
+            );
+            let plan = LayerPlan { algo, layout, w_block: 3, est_s: 1.0, tuned: false };
+            let mut engine = Engine::with_plans(model, vec![plan]).unwrap();
+            let mut outputs = Vec::new();
+            for _ in 0..3 {
+                outputs.push(engine.forward(&x).unwrap());
+            }
+            for y in &outputs {
+                assert!(
+                    expect.allclose(y, 1e-5, 1e-5),
+                    "{algo} {layout}: diff {} vs reference_conv",
+                    expect.max_abs_diff(y)
+                );
+            }
+            assert_eq!(
+                outputs[0].data(),
+                outputs[1].data(),
+                "{algo} {layout}: repeated forwards must be identical"
+            );
+            assert_eq!(outputs[1].data(), outputs[2].data(), "{algo} {layout}");
+        }
+    }
+}
+
+#[test]
+fn interleaved_batch_sizes_do_not_cross_contaminate() {
+    // Alternating batch sizes exercises the per-size slots: a stale buffer
+    // from one size must never leak into the other.
+    let (model, _) = single_conv_model(ConvParams::new(1, 3, 9, 9, 4, 2, 2, 1).unwrap(), 55);
+    let plan =
+        LayerPlan { algo: AlgoKind::Im2win, layout: Layout::Nhwc, w_block: 2, est_s: 1.0, tuned: false };
+    let mut engine = Engine::with_plans(model, vec![plan]).unwrap();
+    let p2 = ConvParams::new(2, 3, 9, 9, 4, 2, 2, 1).unwrap();
+    let p5 = ConvParams::new(5, 3, 9, 9, 4, 2, 2, 1).unwrap();
+    let x2 = Tensor4::random(p2.input_dims(), Layout::Nchw, 81);
+    let x5 = Tensor4::random(p5.input_dims(), Layout::Nchw, 82);
+    let first2 = engine.forward(&x2).unwrap();
+    let first5 = engine.forward(&x5).unwrap();
+    for _ in 0..3 {
+        assert_eq!(engine.forward(&x2).unwrap().data(), first2.data());
+        assert_eq!(engine.forward(&x5).unwrap().data(), first5.data());
+    }
+    // Both sizes warmed: a further interleaved round allocates nothing.
+    let misses = engine.workspace().misses();
+    engine.forward(&x2).unwrap();
+    engine.forward(&x5).unwrap();
+    assert_eq!(engine.workspace().misses(), misses);
+}
+
+// ----------------------------------------------------------------- server
+
+#[test]
+fn server_serves_100_requests_with_no_warm_allocations() {
+    // Acceptance: 100 single-image requests through the server produce
+    // outputs matching reference_conv within 1e-5, and no new scratch
+    // buffers are allocated after warmup.
+    let p = ConvParams::new(1, 3, 12, 12, 4, 3, 3, 1).unwrap();
+    let (model, filter) = single_conv_model(p, 91);
+    let mut cache = PlanCache::in_memory();
+    let engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+    let server = Server::start(engine, 8);
+
+    let images: Vec<Tensor4> =
+        (0..100).map(|i| Tensor4::random(p.input_dims(), Layout::Nchw, 900 + i)).collect();
+    let receivers: Vec<_> = images.iter().map(|x| server.submit(x.clone())).collect();
+    let results: Vec<Inference> =
+        receivers.iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+
+    for (x, inf) in images.iter().zip(&results) {
+        let expect = reference_conv(x, &filter, &p, Layout::Nchw);
+        let got = inf.to_tensor(Layout::Nchw);
+        assert!(
+            expect.allclose(&got, 1e-5, 1e-5),
+            "served output diverges from reference_conv: {}",
+            expect.max_abs_diff(&got)
+        );
+    }
+
+    let report = server.shutdown();
+    assert_eq!(report.served, 100);
+    assert!(report.batches >= 100usize.div_ceil(8), "batches={}", report.batches);
+    assert_eq!(
+        report.warm_misses, 0,
+        "steady-state serving must not allocate scratch (saw {} warm misses)",
+        report.warm_misses
+    );
+    assert!(report.throughput() > 0.0);
+}
+
+#[test]
+fn server_handles_mixed_request_layouts() {
+    let reference = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 14).unwrap();
+    let mut cache = PlanCache::in_memory();
+    let engine = Engine::plan(
+        zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 14).unwrap(),
+        &Planner::new(),
+        &mut cache,
+    )
+    .unwrap();
+    let server = Server::start(engine, 4);
+    let dims = Dims::new(1, 3, 32, 32);
+    let images: Vec<Tensor4> = Layout::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| Tensor4::random(dims, l, 600 + i as u64))
+        .collect();
+    let receivers: Vec<_> = images.iter().map(|x| server.submit(x.clone())).collect();
+    for (x, rx) in images.iter().zip(&receivers) {
+        let inf = rx.recv().unwrap().unwrap();
+        let expect = reference.forward(x).unwrap();
+        let got = inf.to_tensor(Layout::Nchw);
+        assert!(
+            expect.allclose(&got, 1e-3, 1e-4),
+            "layout {}: diff {}",
+            x.layout(),
+            expect.max_abs_diff(&got)
+        );
+    }
+    server.shutdown();
+}

@@ -3,7 +3,9 @@
 //!
 //! Requires `make artifacts`; tests skip (with a loud message) when the
 //! artifacts directory is absent so `cargo test` still works in a fresh
-//! checkout.
+//! checkout. The whole suite is gated on the `pjrt` feature — the default
+//! offline build ships only the stub runtime (see `src/runtime/mod.rs`).
+#![cfg(feature = "pjrt")]
 
 use im2win::conv::AlgoKind;
 use im2win::coordinator::layers;
