@@ -47,3 +47,11 @@ pub fn config_from_args() -> ExperimentConfig {
 pub fn is_test_mode() -> bool {
     std::env::args().any(|a| a == "--test")
 }
+
+/// `--json PATH` argument: where to write the machine-readable results
+/// (the CI bench-smoke job uploads this as the perf-trajectory artifact).
+#[allow(dead_code)] // only the benches that emit JSON call this
+pub fn json_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+}

@@ -1,24 +1,38 @@
 //! Serving-path benchmark: sustained inferences/sec through the planned
-//! engine at batch sizes 1 / 8 / 32, plus the micro-batching server's
-//! end-to-end throughput. Future PRs touching the engine, workspace or
-//! server compare against these numbers to catch serving regressions.
+//! engine at batch sizes 1 / 8 / 32, the micro-batching server's
+//! end-to-end throughput, and the sharded deadline-batching front at 2
+//! shards. Future PRs touching the engine, workspace, server or dispatcher
+//! compare against these numbers to catch serving regressions.
 //!
 //! ```bash
 //! cargo bench --bench engine_serving -- --scale ci
 //! cargo bench --bench engine_serving -- --threads 8
+//! cargo bench --bench engine_serving -- --scale smoke --json serving.json
 //! ```
+//!
+//! `--json PATH` writes the headline numbers as a JSON document — the CI
+//! bench-smoke job uploads it as the perf-trajectory artifact.
 
 mod common;
 
 use im2win::bench_harness::{fmt_time, measure_throughput};
+use im2win::config::json::Json;
 use im2win::config::Scale;
 use im2win::conv::AlgoKind;
-use im2win::engine::{Engine, PlanCache, Planner, Server};
+use im2win::engine::{Engine, PlanCache, Planner, Server, ShardConfig, ShardedServer};
 use im2win::model::zoo;
 use im2win::prelude::*;
 use im2win::tensor::Dims;
+use std::time::Duration;
 
 const BATCHES: [usize; 3] = [1, 8, 32];
+const SHARDS: usize = 2;
+
+fn tinynet_engine(planner: &Planner) -> Engine {
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 7).expect("tinynet builds");
+    let mut cache = PlanCache::in_memory();
+    Engine::plan(model, planner, &mut cache).expect("engine planning succeeds")
+}
 
 fn main() {
     let cfg = common::config_from_args();
@@ -32,10 +46,7 @@ fn main() {
         Scale::Smoke => 2,
     };
 
-    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 7).expect("tinynet builds");
-    let mut cache = PlanCache::in_memory();
-    let mut engine =
-        Engine::plan(model, &Planner::new(), &mut cache).expect("engine planning succeeds");
+    let mut engine = tinynet_engine(&Planner::new());
     println!(
         "engine_serving — tinynet, scale={}, {} iters/batch, {} threads",
         cfg.scale.name(),
@@ -48,6 +59,7 @@ fn main() {
 
     // Direct engine forwards at fixed batch sizes (the serving hot path,
     // no queueing): inferences/sec must scale with batch.
+    let mut engine_rows: Vec<(String, Json)> = Vec::new();
     println!("\nengine.forward_into throughput:");
     for batch in BATCHES {
         let x = Tensor4::random(Dims::new(batch, 3, 32, 32), Layout::Nchw, batch as u64);
@@ -63,6 +75,7 @@ fn main() {
             r.inf_per_s(),
             fmt_time(r.latency_s())
         );
+        engine_rows.push((format!("batch_{batch}"), Json::Number(r.inf_per_s())));
     }
 
     // End-to-end micro-batching server: queue + coalesce + scatter.
@@ -79,11 +92,94 @@ fn main() {
     let report = server.shutdown();
     println!("\nserver micro-batching ({requests} single-image requests, max batch 8):");
     println!(
-        "  {} batches, avg batch {:.2}, busy {}, {:.1} inf/s, {} warm allocs",
+        "  {} batches, avg batch {:.2}, busy {}, {:.1} inf/s, p50 {}, p99 {}, {} warm allocs",
         report.batches,
         report.avg_batch(),
         fmt_time(report.busy_s),
         report.throughput(),
+        fmt_time(report.p50_latency_s),
+        fmt_time(report.p99_latency_s),
         report.warm_misses
     );
+
+    // Sharded front: least-loaded dispatch over SHARDS engines with a
+    // 200 µs batching window, plans keyed per shard.
+    let shard_planner = Planner::new().for_shards(SHARDS);
+    let engines: Vec<Engine> = (0..SHARDS).map(|_| tinynet_engine(&shard_planner)).collect();
+    let sharded = ShardedServer::start(
+        engines,
+        ShardConfig {
+            max_batch: 8,
+            deadline: Duration::from_micros(200),
+            threads_per_shard: shard_planner.threads,
+            ..ShardConfig::default()
+        },
+    );
+    let receivers: Vec<_> = (0..requests)
+        .map(|i| {
+            sharded.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, i as u64))
+        })
+        .collect();
+    for rx in &receivers {
+        rx.recv().expect("sharded server alive").expect("inference succeeds");
+    }
+    let sharded_report = sharded.shutdown();
+    println!(
+        "\nsharded front ({requests} requests, {SHARDS} shards, max batch 8, 200 us window):"
+    );
+    println!(
+        "  {} batches ({} deadline flushes), {:.1} inf/s, worst p99 {}",
+        sharded_report.batches(),
+        sharded_report.deadline_flushes(),
+        sharded_report.throughput(),
+        fmt_time(sharded_report.p99_latency_s())
+    );
+    for (i, s) in sharded_report.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: served {:>5}, avg batch {:.2}, occ {:.1}%, p99 {}",
+            s.served,
+            s.avg_batch(),
+            s.occupancy() * 100.0,
+            fmt_time(s.p99_latency_s)
+        );
+    }
+
+    // Machine-readable artifact for the CI perf trajectory.
+    if let Some(path) = common::json_path() {
+        let doc = Json::object(vec![
+            ("bench", Json::from("engine_serving")),
+            ("scale", Json::from(cfg.scale.name())),
+            (
+                "threads",
+                Json::Number(im2win::parallel::global().threads() as f64),
+            ),
+            ("engine_inf_per_s", Json::Object(engine_rows)),
+            (
+                "server",
+                Json::object(vec![
+                    ("requests", Json::Number(requests as f64)),
+                    ("inf_per_s", Json::Number(report.throughput())),
+                    ("avg_batch", Json::Number(report.avg_batch())),
+                    ("p50_latency_s", Json::Number(report.p50_latency_s)),
+                    ("p99_latency_s", Json::Number(report.p99_latency_s)),
+                    ("warm_misses", Json::Number(report.warm_misses as f64)),
+                ]),
+            ),
+            (
+                "sharded",
+                Json::object(vec![
+                    ("shards", Json::Number(SHARDS as f64)),
+                    ("requests", Json::Number(requests as f64)),
+                    ("inf_per_s", Json::Number(sharded_report.throughput())),
+                    (
+                        "deadline_flushes",
+                        Json::Number(sharded_report.deadline_flushes() as f64),
+                    ),
+                    ("p99_latency_s", Json::Number(sharded_report.p99_latency_s())),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("writing the --json artifact");
+        println!("\nwrote {path}");
+    }
 }

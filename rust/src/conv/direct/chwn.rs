@@ -49,7 +49,7 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
 
     let co_main = co - co % CB;
 
-    parallel::global().parallel_for_coalesced(co.div_ceil(CB), h_o, |cb, ho| {
+    parallel::current().parallel_for_coalesced(co.div_ceil(CB), h_o, |cb, ho| {
         let c0 = cb * CB;
         let cols = if c0 < co_main { CB } else { co - co_main };
         let mut wo = 0;

@@ -57,7 +57,7 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
     };
     let co_main = co - co % CB;
 
-    parallel::global().parallel_for_coalesced(nblocks, h_o, |nb, ho| {
+    parallel::current().parallel_for_coalesced(nblocks, h_o, |nb, ho| {
         let in_nb = nb * i_nb;
         let out_nb = nb * o_nb + ho * o_h;
 

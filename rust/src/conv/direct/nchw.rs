@@ -32,7 +32,7 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
     let f = filter.data();
     let optr = SharedMut::new(out.as_mut_ptr());
 
-    parallel::global().parallel_for_coalesced(p.n, h_o, |ni, ho| {
+    parallel::current().parallel_for_coalesced(p.n, h_o, |ni, ho| {
         let in_base_n = ni * i_n;
         let out_base = ni * o_n + ho * w_o;
         for c in 0..co {

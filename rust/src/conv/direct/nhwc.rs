@@ -47,7 +47,7 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
     let ci_vec = ci - ci % LANES;
     let co_main = co - co % CB;
 
-    parallel::global().parallel_for_coalesced(p.n, h_o, |ni, ho| {
+    parallel::current().parallel_for_coalesced(p.n, h_o, |ni, ho| {
         let in_n = ni * i_n;
         let out_nh = ni * o_n + ho * o_h;
 

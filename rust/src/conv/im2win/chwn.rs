@@ -42,7 +42,7 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
 
     let co_main = co - co % CB;
 
-    parallel::global().parallel_for_coalesced(co.div_ceil(CB), h_o, |jb, m| {
+    parallel::current().parallel_for_coalesced(co.div_ceil(CB), h_o, |jb, m| {
         let j0 = jb * CB;
         let cols = if j0 < co_main { CB } else { co - co_main };
         let mut wo = 0;

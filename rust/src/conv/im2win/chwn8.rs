@@ -46,7 +46,7 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
 
     let co_main = co - co % CB;
 
-    parallel::global().parallel_for_coalesced(nblocks, h_o, |nb, m| {
+    parallel::current().parallel_for_coalesced(nblocks, h_o, |nb, m| {
         let win_b = nb * t_nb + m * t_h;
         let out_b = nb * o_nb + m * o_h;
 

@@ -35,7 +35,7 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
     let f = fpack;
     let optr = SharedMut::new(out.as_mut_ptr());
 
-    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
         let win_n = n * t_n + m * t_h;
         let out_nh = n * o_n + m * w_o;
         for j in 0..co {

@@ -51,7 +51,7 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
 
     let co_main = co - co % CB;
 
-    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
         let row = n * t_n + m * t_h;
         let out_nh = n * o_n + m * o_h;
 

@@ -62,7 +62,7 @@ fn nhwc(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let o_n = h_o * o_h;
     let x = input.data();
     let optr = SharedMut::new(out.as_mut_ptr());
-    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
         let src_n = n * i_n;
         let dst_m = n * o_n + m * o_h;
         for k in 0..wi {
@@ -90,7 +90,7 @@ fn nchw(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let o_n = ci * o_c;
     let x = input.data();
     let optr = SharedMut::new(out.as_mut_ptr());
-    parallel::global().parallel_for_coalesced(p.n, h_o, |n, m| {
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
         for c in 0..ci {
             let src_c = n * i_n + c * i_c;
             let dst = n * o_n + c * o_c + m * o_h;
@@ -118,7 +118,7 @@ fn chwn(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let o_c = h_o * o_h;
     let x = input.data();
     let optr = SharedMut::new(out.as_mut_ptr());
-    parallel::global().parallel_for_coalesced(ci, h_o, |c, m| {
+    parallel::current().parallel_for_coalesced(ci, h_o, |c, m| {
         let src_c = c * i_c;
         let dst_m = c * o_c + m * o_h;
         for k in 0..wi {
@@ -148,7 +148,7 @@ fn chwn8(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let o_nb = ci * o_c;
     let x = input.data();
     let optr = SharedMut::new(out.as_mut_ptr());
-    parallel::global().parallel_for_coalesced(nb, h_o, |b, m| {
+    parallel::current().parallel_for_coalesced(nb, h_o, |b, m| {
         for c in 0..ci {
             let src_c = b * i_nb + c * i_c;
             let dst_m = b * o_nb + c * o_c + m * o_h;

@@ -8,7 +8,12 @@
 //! an engine construction) hits the cache and runs no tuning at all.
 //!
 //! Keys are `(geometry at the planning batch, incoming layout, thread
-//! count)`. The machine spec is deliberately *not* part of the key: the
+//! count)`. The thread count is whatever the deciding planner assumed —
+//! for a sharded server that is the *per-shard* worker count
+//! ([`super::Planner::for_shards`]), so an N-shard process and a
+//! whole-machine process tuning the same geometry occupy distinct
+//! entries instead of silently trading plans optimized for different
+//! parallelism. The machine spec is deliberately *not* part of the key: the
 //! cache persists same-host decisions across restarts, and a refining
 //! planner upgrades analytic-only entries in place rather than trusting
 //! them (see [`super::Planner::plan_model`]) — so `--refine` is honored

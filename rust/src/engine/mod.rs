@@ -13,8 +13,13 @@
 //! * [`workspace`] — a keyed lease arena that lets every transform
 //!   buffer, packed filter and activation tensor be allocated once per
 //!   plan and reused across requests;
-//! * [`server`] — a micro-batching front that coalesces single-image
-//!   requests into batched forwards and reports throughput;
+//! * [`server`] — the micro-batching serve core: coalesces single-image
+//!   requests into batched forwards (greedy drain or a deadline window)
+//!   and reports throughput, flush causes and latency percentiles;
+//! * [`sharded`] — the multi-engine front: [`ShardedServer`] dispatches
+//!   requests to the least-loaded of N shards, each with its own engine,
+//!   workspace, thread pool and (optionally, `pinning` feature) pinned
+//!   core block, batching with deadline-aware windows;
 //! * [`Engine`] — the planned-model executor tying them together: it
 //!   applies a plan to a [`Model`] and runs forwards through the
 //!   workspace so steady-state serving performs no scratch allocation.
@@ -37,11 +42,13 @@
 pub mod cache;
 pub mod planner;
 pub mod server;
+pub mod sharded;
 pub mod workspace;
 
 pub use cache::{layer_key, PlanCache};
 pub use planner::{LayerPlan, Planner};
-pub use server::{Inference, Server, ServerReport};
+pub use server::{Inference, Server, ServerReport, ShardConfig};
+pub use sharded::{ShardedReport, ShardedServer};
 pub use workspace::Workspace;
 
 use crate::error::{Error, Result};

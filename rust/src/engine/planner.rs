@@ -93,11 +93,11 @@ fn nominal_spec() -> MachineSpec {
 
 impl Planner {
     /// Planner with the deterministic nominal machine model, the global
-    /// pool's thread count, batch 8, refinement off.
+    /// pool's (configured) thread count, batch 8, refinement off.
     pub fn new() -> Self {
         Planner {
             spec: nominal_spec(),
-            threads: crate::parallel::global().threads(),
+            threads: crate::parallel::configured_threads(),
             batch: 8,
             refine: false,
             refine_repeats: 3,
@@ -107,6 +107,18 @@ impl Planner {
     /// Planner with an explicit machine model (e.g. [`MachineSpec::detect`]).
     pub fn with_spec(spec: MachineSpec) -> Self {
         Planner { spec, ..Self::new() }
+    }
+
+    /// Derive the planner for one shard of an `shards`-way sharded server:
+    /// identical spec, batch and refinement policy, but the compute term —
+    /// and therefore every [`layer_key`] this planner's decisions persist
+    /// under — uses the per-shard thread count (this planner's threads
+    /// divided across shards, at least 1). A plan tuned for the whole
+    /// machine is never silently reused for a fraction of it, and each
+    /// shard width caches its own decisions.
+    pub fn for_shards(&self, shards: usize) -> Planner {
+        let threads = (self.threads / shards.max(1)).max(1);
+        Planner { threads, ..self.clone() }
     }
 
     /// Candidate (algorithm, layout) pairs for a layer: every implemented
@@ -335,6 +347,23 @@ mod tests {
         let again = planner.plan_model(&model, &mut cache).unwrap();
         assert_eq!(plans, again);
         assert_eq!(cache.hits(), plans.len());
+    }
+
+    #[test]
+    fn sharded_planner_keys_use_per_shard_threads() {
+        let planner = Planner { threads: 8, ..Planner::new() };
+        let shard = planner.for_shards(4);
+        assert_eq!(shard.threads, 2);
+        // Degenerate cases clamp instead of zeroing out.
+        assert_eq!(planner.for_shards(0).threads, 8);
+        assert_eq!(planner.for_shards(100).threads, 1);
+        // The per-shard thread count flows into the cache key, so sharded
+        // plans never collide with whole-machine plans.
+        let p = ConvParams::new(8, 3, 32, 32, 16, 3, 3, 1).unwrap();
+        assert_ne!(
+            layer_key(&p, Layout::Nchw, planner.threads),
+            layer_key(&p, Layout::Nchw, shard.threads)
+        );
     }
 
     #[test]

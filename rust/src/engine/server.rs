@@ -1,26 +1,42 @@
-//! Micro-batching inference server.
+//! Micro-batching serve core and the single-worker [`Server`] front.
 //!
 //! Single-image requests arrive one at a time, but every kernel in this
 //! library gets faster per image as the batch grows (vector lanes fill,
-//! transforms amortize, the GEMMs deepen). The server closes that gap the
-//! way production serving systems do: a worker thread drains whatever
-//! requests are queued (up to `max_batch`), stacks them into one batched
-//! tensor, runs a single [`Engine`] forward on the shared thread pool,
-//! and scatters the per-image results back to the callers.
+//! transforms amortize, the GEMMs deepen). The serve loop closes that gap
+//! the way production serving systems do: a worker thread collects queued
+//! requests into a batching window (up to [`ShardConfig::max_batch`], or
+//! until [`ShardConfig::deadline`] elapses after the window opens), stacks
+//! them into one batched tensor, runs a single [`Engine`] forward, and
+//! scatters the per-image results back to the callers.
+//!
+//! A zero deadline degenerates to the original greedy drain — take
+//! whatever is queued right now, never wait — which is what the plain
+//! [`Server`] uses. The multi-shard front ([`super::ShardedServer`]) runs
+//! the same loop once per shard with a non-zero window, so a shard flushes
+//! either full or at its deadline, never holding requests hostage to a
+//! straggler batch elsewhere.
 //!
 //! Batch tensors and result buffers are leased per batch size, so after
-//! one batch of each size the serving loop performs no scratch
-//! allocation (pinned by the engine acceptance test). The final
-//! [`ServerReport`] carries served/batch counts, wall time, throughput,
-//! and the workspace-miss count observed after warmup.
+//! one batch of each size the serving loop performs no scratch allocation
+//! (pinned by the engine acceptance test). The final [`ServerReport`]
+//! carries served/batch counts, wall/busy time, flush-cause counters,
+//! queue-depth high-water mark, p50/p99 request latency, and the
+//! workspace-miss count observed after warmup.
+//!
+//! On shutdown the request channel closes and the loop *drains*: every
+//! request already queued is still batched, run, and answered before the
+//! worker exits (pinned by a regression test — queued requests are never
+//! dropped silently).
 
 use super::Engine;
 use crate::error::{Error, Result};
 use crate::tensor::{Dims, Tensor4};
 use std::collections::{HashMap, HashSet};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One inference result: the logical values of the model output for a
 /// single image, in `(c, h, w)` lexicographic order.
@@ -40,7 +56,40 @@ impl Inference {
     }
 }
 
-/// Serving statistics returned by [`Server::shutdown`].
+/// Batching and worker-placement knobs shared by [`Server`] and
+/// [`super::ShardedServer`].
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Most requests one forward coalesces (clamped to ≥ 1).
+    pub max_batch: usize,
+    /// Deadline-aware batching window: once the first request of a batch
+    /// arrives, keep collecting until `max_batch` is reached or this much
+    /// time has elapsed. [`Duration::ZERO`] degenerates to greedy drain
+    /// (take whatever is queued right now, never wait).
+    pub deadline: Duration,
+    /// Worker threads per shard (0 = divide the global pool's thread count
+    /// evenly across shards, at least 1 each). Ignored by the single
+    /// [`Server`], which runs on the global pool.
+    pub threads_per_shard: usize,
+    /// Pin each shard's worker group to a disjoint block of CPU cores
+    /// (shard `i` gets cores `i·T .. (i+1)·T`). Effective only with the
+    /// `pinning` feature on Linux; a portable no-op otherwise.
+    pub pin: bool,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            max_batch: 8,
+            deadline: Duration::ZERO,
+            threads_per_shard: 0,
+            pin: false,
+        }
+    }
+}
+
+/// Serving statistics for one worker/shard, returned by
+/// [`Server::shutdown`] (and per shard by [`super::ShardedServer`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServerReport {
     /// Requests answered.
@@ -51,6 +100,20 @@ pub struct ServerReport {
     pub max_batch_seen: usize,
     /// Wall time spent inside batched forwards, seconds.
     pub busy_s: f64,
+    /// Wall time from worker start to drain, seconds.
+    pub wall_s: f64,
+    /// Batches flushed because the deadline window expired under
+    /// `max_batch` (always 0 with a zero deadline).
+    pub deadline_flushes: usize,
+    /// Batches flushed because they reached `max_batch`.
+    pub full_flushes: usize,
+    /// High-water mark of the queued+in-flight request count, observed at
+    /// batch formation.
+    pub max_queue_depth: usize,
+    /// Median request latency (submit → response), seconds.
+    pub p50_latency_s: f64,
+    /// 99th-percentile request latency (submit → response), seconds.
+    pub p99_latency_s: f64,
     /// Workspace misses observed on batches whose size had already been
     /// seen once — 0 means steady-state serving allocated no scratch.
     pub warm_misses: usize,
@@ -74,67 +137,181 @@ impl ServerReport {
             0.0
         }
     }
+
+    /// Fraction of the worker's wall time spent inside forwards.
+    pub fn occupancy(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.busy_s / self.wall_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
 }
 
-struct Request {
-    image: Tensor4,
-    resp: mpsc::Sender<Result<Inference>>,
+/// A queued request: the image, where to send the answer, and when it was
+/// submitted (for the latency percentiles).
+pub(crate) struct Request {
+    pub(crate) image: Tensor4,
+    pub(crate) resp: mpsc::Sender<Result<Inference>>,
+    pub(crate) submitted: Instant,
 }
 
-/// Micro-batching front over an [`Engine`] (see module docs).
+impl Request {
+    pub(crate) fn new(image: Tensor4, resp: mpsc::Sender<Result<Inference>>) -> Request {
+        Request { image, resp, submitted: Instant::now() }
+    }
+}
+
+/// Micro-batching front over a single [`Engine`] (see module docs). For
+/// multi-engine dispatch with deadline windows and worker pinning, see
+/// [`super::ShardedServer`] — this type is the one-worker special case and
+/// shares its serve loop.
 pub struct Server {
     tx: mpsc::Sender<Request>,
+    depth: Arc<AtomicUsize>,
     worker: JoinHandle<ServerReport>,
 }
 
 impl Server {
-    /// Spawn the serving worker. `max_batch` bounds how many queued
-    /// requests one forward coalesces (clamped to ≥ 1).
+    /// Spawn the serving worker with greedy-drain batching. `max_batch`
+    /// bounds how many queued requests one forward coalesces (≥ 1).
     pub fn start(engine: Engine, max_batch: usize) -> Server {
+        Server::start_with(engine, &ShardConfig { max_batch, ..ShardConfig::default() })
+    }
+
+    /// Spawn the serving worker with explicit batching knobs (`max_batch`
+    /// and the deadline window; the shard placement fields are ignored —
+    /// a single server runs on the global pool).
+    pub fn start_with(engine: Engine, cfg: &ShardConfig) -> Server {
         let (tx, rx) = mpsc::channel::<Request>();
-        let max_batch = max_batch.max(1);
+        let depth = Arc::new(AtomicUsize::new(0));
+        let loop_depth = Arc::clone(&depth);
+        let max_batch = cfg.max_batch.max(1);
+        let deadline = cfg.deadline;
         let worker = std::thread::Builder::new()
             .name("im2win-server".into())
-            .spawn(move || serve_loop(engine, rx, max_batch))
+            .spawn(move || serve_loop(engine, rx, max_batch, deadline, &loop_depth))
             .expect("failed to spawn server worker");
-        Server { tx, worker }
+        Server { tx, depth, worker }
     }
 
     /// Queue a single-image request (`n` must be 1; any layout). The
     /// returned channel yields the result once its batch completes.
     pub fn submit(&self, image: Tensor4) -> mpsc::Receiver<Result<Inference>> {
         let (resp, result) = mpsc::channel();
+        self.depth.fetch_add(1, Ordering::Relaxed);
         // A send error means the worker already exited; the caller then
         // sees a disconnected result channel.
-        let _ = self.tx.send(Request { image, resp });
+        if self.tx.send(Request::new(image, resp)).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
         result
     }
 
-    /// Stop accepting requests, drain the queue, and join the worker.
+    /// Requests queued or in flight right now.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting requests and join the worker. Every request already
+    /// queued is still served (or answered with an error) before the
+    /// worker exits — shutdown never drops a submitted request silently.
     pub fn shutdown(self) -> ServerReport {
         drop(self.tx);
         self.worker.join().expect("server worker panicked")
     }
 }
 
-fn serve_loop(mut engine: Engine, rx: mpsc::Receiver<Request>, max_batch: usize) -> ServerReport {
+/// Sorted-percentile helper: (p50, p99) of `lat`, or zeros when empty.
+fn latency_percentiles(lat: &mut [f64]) -> (f64, f64) {
+    if lat.is_empty() {
+        return (0.0, 0.0);
+    }
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let pick = |q: f64| lat[(((lat.len() - 1) as f64) * q).round() as usize];
+    (pick(0.50), pick(0.99))
+}
+
+/// The serve loop shared by [`Server`] (one instance, zero deadline by
+/// default) and [`super::ShardedServer`] (one instance per shard).
+///
+/// Batching policy: block for the first request, then collect until
+/// `max_batch` or until `deadline` elapses (greedy `try_recv` drain when
+/// the deadline is zero). When the request channel disconnects the loop
+/// drains every remaining queued request before returning — a shutdown
+/// never drops work.
+pub(crate) fn serve_loop(
+    mut engine: Engine,
+    rx: mpsc::Receiver<Request>,
+    max_batch: usize,
+    deadline: Duration,
+    depth: &AtomicUsize,
+) -> ServerReport {
+    let started = Instant::now();
     let base = engine.model().input_dims();
     let layout = engine.model().layout();
     let mut ins: HashMap<usize, Tensor4> = HashMap::new();
     let mut outs: HashMap<usize, Tensor4> = HashMap::new();
     let mut seen_sizes: HashSet<usize> = HashSet::new();
-    let mut report =
-        ServerReport { served: 0, batches: 0, max_batch_seen: 0, busy_s: 0.0, warm_misses: 0 };
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut report = ServerReport {
+        served: 0,
+        batches: 0,
+        max_batch_seen: 0,
+        busy_s: 0.0,
+        wall_s: 0.0,
+        deadline_flushes: 0,
+        full_flushes: 0,
+        max_queue_depth: 0,
+        p50_latency_s: 0.0,
+        p99_latency_s: 0.0,
+        warm_misses: 0,
+    };
 
-    // Block for the first request, then greedily coalesce what is queued.
+    // Answer one request and release its slot in the depth gauge. The
+    // gauge drops *before* the send: a caller unblocked by the reply must
+    // never observe this request still counted in `queue_depth`.
+    let respond = |r: &Request, result: Result<Inference>, lat: &mut Vec<f64>| {
+        if result.is_ok() {
+            lat.push(r.submitted.elapsed().as_secs_f64());
+        }
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = r.resp.send(result);
+    };
+
+    // Block for the first request, then fill the batching window.
     while let Ok(first) = rx.recv() {
         let mut batch = vec![first];
-        while batch.len() < max_batch {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
+        let mut deadline_flush = false;
+        if deadline.is_zero() {
+            // Greedy drain: coalesce what is queued, never wait.
+            while batch.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+        } else {
+            // Deadline window: wait for stragglers until the window closes.
+            let flush_at = Instant::now() + deadline;
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= flush_at {
+                    deadline_flush = true;
+                    break;
+                }
+                match rx.recv_timeout(flush_at - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => {
+                        deadline_flush = true;
+                        break;
+                    }
+                    // Disconnected: flush now, the outer loop drains the rest.
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
             }
         }
+        report.max_queue_depth = report.max_queue_depth.max(depth.load(Ordering::Relaxed));
 
         // Reject malformed images up front so they don't poison the batch.
         let expect = Dims::new(1, base.c, base.h, base.w);
@@ -142,10 +319,14 @@ fn serve_loop(mut engine: Engine, rx: mpsc::Receiver<Request>, max_batch: usize)
             if r.image.dims() == expect {
                 true
             } else {
-                let _ = r.resp.send(Err(Error::ShapeMismatch(format!(
-                    "server expects single images of {expect}, got {}",
-                    r.image.dims()
-                ))));
+                respond(
+                    r,
+                    Err(Error::ShapeMismatch(format!(
+                        "server expects single images of {expect}, got {}",
+                        r.image.dims()
+                    ))),
+                    &mut latencies,
+                );
                 false
             }
         });
@@ -157,9 +338,7 @@ fn serve_loop(mut engine: Engine, rx: mpsc::Receiver<Request>, max_batch: usize)
         // Stack the images into a leased batch tensor (logical copy, so
         // request layouts may differ from the engine layout).
         let in_dims = Dims::new(k, base.c, base.h, base.w);
-        let mut input = ins
-            .remove(&k)
-            .unwrap_or_else(|| Tensor4::zeros(in_dims, layout));
+        let mut input = ins.remove(&k).unwrap_or_else(|| Tensor4::zeros(in_dims, layout));
         for (j, r) in batch.iter().enumerate() {
             for (_, c, h, w) in expect.iter() {
                 input.set(j, c, h, w, r.image.get(0, c, h, w));
@@ -170,9 +349,7 @@ fn serve_loop(mut engine: Engine, rx: mpsc::Receiver<Request>, max_batch: usize)
         let misses_before = engine.workspace().misses();
         let t0 = Instant::now();
         let result = match outs.remove(&k) {
-            Some(mut out) => engine
-                .forward_into(&input, &mut out)
-                .map(|()| out),
+            Some(mut out) => engine.forward_into(&input, &mut out).map(|()| out),
             None => match engine.output_dims(k) {
                 Ok(d) => {
                     let mut out = Tensor4::zeros(d, layout);
@@ -196,21 +373,28 @@ fn serve_loop(mut engine: Engine, rx: mpsc::Receiver<Request>, max_batch: usize)
                     for (_, c, h, w) in one.iter() {
                         values.push(out.get(j, c, h, w));
                     }
-                    let _ = r.resp.send(Ok(Inference { dims: one, values }));
+                    respond(r, Ok(Inference { dims: one, values }), &mut latencies);
                 }
                 report.served += k;
                 report.batches += 1;
                 report.max_batch_seen = report.max_batch_seen.max(k);
+                if k >= max_batch {
+                    report.full_flushes += 1;
+                } else if deadline_flush {
+                    report.deadline_flushes += 1;
+                }
                 outs.insert(k, out);
             }
             Err(e) => {
                 for r in &batch {
-                    let _ = r.resp.send(Err(e.clone()));
+                    respond(r, Err(e.clone()), &mut latencies);
                 }
             }
         }
         ins.insert(k, input);
     }
+    report.wall_s = started.elapsed().as_secs_f64();
+    (report.p50_latency_s, report.p99_latency_s) = latency_percentiles(&mut latencies);
     report
 }
 
@@ -252,6 +436,11 @@ mod tests {
         assert!(report.batches <= 12);
         assert!(report.max_batch_seen >= 1);
         assert!(report.throughput() > 0.0);
+        assert!(report.wall_s >= report.busy_s);
+        assert!(report.p99_latency_s >= report.p50_latency_s);
+        assert!(report.p50_latency_s > 0.0);
+        // Greedy drain never waits for a window.
+        assert_eq!(report.deadline_flushes, 0);
     }
 
     #[test]
@@ -263,5 +452,37 @@ mod tests {
         assert!(good.recv().unwrap().is_ok());
         let report = server.shutdown();
         assert_eq!(report.served, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests_instead_of_dropping_them() {
+        // Regression: shutdown consumes the server while requests are still
+        // queued; every one of them must still be answered before the
+        // worker exits — none dropped, none left hanging.
+        let server = Server::start(tinynet_engine(), 4);
+        let rxs: Vec<_> = (0..20)
+            .map(|i| server.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, i)))
+            .collect();
+        let report = server.shutdown();
+        assert_eq!(report.served, 20, "shutdown dropped queued requests");
+        for rx in &rxs {
+            // Worker already exited: the answer must be sitting in the channel.
+            rx.try_recv().expect("request dropped at shutdown").unwrap();
+        }
+    }
+
+    #[test]
+    fn queue_depth_returns_to_zero_after_serving() {
+        let server = Server::start(tinynet_engine(), 4);
+        let rxs: Vec<_> = (0..6)
+            .map(|i| server.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, i)))
+            .collect();
+        for rx in &rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(server.queue_depth(), 0);
+        let report = server.shutdown();
+        assert!(report.max_queue_depth >= 1);
+        assert!(report.occupancy() > 0.0 && report.occupancy() <= 1.0);
     }
 }

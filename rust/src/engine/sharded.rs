@@ -1,0 +1,281 @@
+//! Sharded, deadline-aware serving: multi-engine dispatch with
+//! NUMA-style worker pinning.
+//!
+//! A single [`super::Server`] is one greedy-drain worker over one
+//! [`super::Engine`] — one slow batch stalls every queued request behind
+//! it. Once the kernels are near machine peak, end-to-end throughput is
+//! dominated by work partitioning and thread placement (Georganas et al.,
+//! "Anatomy of High-Performance Deep Learning Convolutions on SIMD
+//! Architectures"), which is exactly the layer this module adds:
+//!
+//! * **Sharding** — [`ShardedServer`] owns N shards, each with its own
+//!   [`super::Engine`] (hence its own plan set and [`super::Workspace`])
+//!   and its own [`crate::parallel::ThreadPool`], installed as the shard
+//!   thread's scoped pool so concurrent shards never contend for the
+//!   global fork-join pool.
+//! * **Least-loaded dispatch** — [`ShardedServer::submit`] routes each
+//!   request to the shard with the smallest queued+in-flight count,
+//!   breaking ties round-robin; [`ShardedServer::submit_to`] pins a
+//!   request to a shard explicitly (tests, admission-control experiments).
+//! * **Deadline-aware batching** — every shard runs the shared serve loop
+//!   with a non-zero [`super::ShardConfig::deadline`]: a batch flushes
+//!   when full *or* when the window closes, so a trickle of requests is
+//!   never parked waiting for a batch that will not fill.
+//! * **Worker pinning** — with [`super::ShardConfig::pin`], shard `i`'s
+//!   worker group (loop thread + pool workers) pins itself to the core
+//!   block `i·T .. (i+1)·T` via `sched_setaffinity` (the `pinning`
+//!   feature; portable no-op elsewhere), giving NUMA-style placement
+//!   where each shard's working set stays on its socket.
+//!
+//! Plans are shard-aware: engines handed to [`ShardedServer::start`]
+//! should be planned with [`super::Planner::for_shards`], whose
+//! threads-per-shard count flows into the plan-cache keys — a plan tuned
+//! for the whole machine is never silently reused for a quarter of it.
+
+use super::server::{serve_loop, Inference, Request, ServerReport, ShardConfig};
+use super::Engine;
+use crate::error::Result;
+use crate::parallel::{self, ThreadPool};
+use crate::tensor::Tensor4;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One shard: its request channel, load gauge, and worker handle.
+struct Shard {
+    tx: mpsc::Sender<Request>,
+    depth: Arc<AtomicUsize>,
+    worker: JoinHandle<ServerReport>,
+}
+
+/// Multi-engine, deadline-batching serving front (see module docs).
+pub struct ShardedServer {
+    shards: Vec<Shard>,
+    /// Round-robin cursor for tie-breaking the least-loaded scan.
+    rr: AtomicUsize,
+}
+
+impl ShardedServer {
+    /// Start one shard per engine. Each shard spawns a worker thread that
+    /// builds its own thread pool ([`ShardConfig::threads_per_shard`]
+    /// threads; 0 divides the global pool's count evenly), optionally pins
+    /// the group to its core block, and runs the shared serve loop with
+    /// the configured batching window.
+    ///
+    /// Engines should be planned per shard (see
+    /// [`super::Planner::for_shards`]) so their plans — and the cache keys
+    /// those plans persist under — reflect the per-shard thread count.
+    ///
+    /// # Panics
+    /// Panics when `engines` is empty.
+    pub fn start(engines: Vec<Engine>, cfg: ShardConfig) -> ShardedServer {
+        assert!(!engines.is_empty(), "ShardedServer needs at least one engine");
+        let nshards = engines.len();
+        // configured_threads (not global()): sizing must not spawn a
+        // global worker set that would sit parked beside the shard pools.
+        let tps = if cfg.threads_per_shard > 0 {
+            cfg.threads_per_shard
+        } else {
+            (parallel::configured_threads() / nshards).max(1)
+        };
+        let max_batch = cfg.max_batch.max(1);
+        let shards = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let (tx, rx) = mpsc::channel::<Request>();
+                let depth = Arc::new(AtomicUsize::new(0));
+                let loop_depth = Arc::clone(&depth);
+                let deadline = cfg.deadline;
+                let cores: Vec<usize> =
+                    if cfg.pin { (i * tps..(i + 1) * tps).collect() } else { Vec::new() };
+                let worker = std::thread::Builder::new()
+                    .name(format!("im2win-shard-{i}"))
+                    .spawn(move || {
+                        // Shard-private pool: the fork-join pool has a single
+                        // job slot, so concurrent shards must never share one.
+                        // Pool workers pin to cores[1..]; the loop thread (a
+                        // pool participant) takes cores[0].
+                        let pool = Arc::new(ThreadPool::with_pinning(tps, &cores));
+                        if let Some(&c0) = cores.first() {
+                            parallel::pin_current_thread(&[c0]);
+                        }
+                        let _scoped = parallel::install_scoped(pool);
+                        serve_loop(engine, rx, max_batch, deadline, &loop_depth)
+                    })
+                    .expect("failed to spawn shard worker");
+                Shard { tx, depth, worker }
+            })
+            .collect();
+        ShardedServer { shards, rr: AtomicUsize::new(0) }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests queued or in flight on `shard` right now.
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.shards[shard].depth.load(Ordering::Relaxed)
+    }
+
+    /// Queue a single-image request on the least-loaded shard (smallest
+    /// queued+in-flight count; ties rotate round-robin so equally idle
+    /// shards share the traffic). The returned channel yields the result
+    /// once the owning shard's batch completes.
+    pub fn submit(&self, image: Tensor4) -> mpsc::Receiver<Result<Inference>> {
+        let n = self.shards.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let shard = (0..n)
+            .map(|k| (start + k) % n)
+            .min_by_key(|&s| self.shards[s].depth.load(Ordering::Relaxed))
+            .expect("at least one shard");
+        self.submit_to(shard, image)
+    }
+
+    /// Queue a request on a specific shard (tests, admission control).
+    ///
+    /// # Panics
+    /// Panics when `shard >= self.shards()`.
+    pub fn submit_to(&self, shard: usize, image: Tensor4) -> mpsc::Receiver<Result<Inference>> {
+        let s = &self.shards[shard];
+        let (resp, result) = mpsc::channel();
+        s.depth.fetch_add(1, Ordering::Relaxed);
+        if s.tx.send(Request::new(image, resp)).is_err() {
+            s.depth.fetch_sub(1, Ordering::Relaxed);
+        }
+        result
+    }
+
+    /// Stop accepting requests and join every shard. All request channels
+    /// close *before* any join, so the shards drain their queues
+    /// concurrently; like [`super::Server::shutdown`], every queued
+    /// request is answered before its worker exits.
+    pub fn shutdown(self) -> ShardedReport {
+        let mut workers = Vec::with_capacity(self.shards.len());
+        for s in self.shards {
+            drop(s.tx);
+            workers.push(s.worker);
+        }
+        let mut shards = Vec::with_capacity(workers.len());
+        for w in workers {
+            shards.push(w.join().expect("shard worker panicked"));
+        }
+        ShardedReport { shards }
+    }
+}
+
+/// Aggregate serving statistics: one [`ServerReport`] per shard plus
+/// whole-front summaries.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Per-shard reports, in shard order.
+    pub shards: Vec<ServerReport>,
+}
+
+impl ShardedReport {
+    /// Requests answered across all shards.
+    pub fn served(&self) -> usize {
+        self.shards.iter().map(|s| s.served).sum()
+    }
+
+    /// Batched forwards executed across all shards.
+    pub fn batches(&self) -> usize {
+        self.shards.iter().map(|s| s.batches).sum()
+    }
+
+    /// Batches flushed by the deadline window across all shards.
+    pub fn deadline_flushes(&self) -> usize {
+        self.shards.iter().map(|s| s.deadline_flushes).sum()
+    }
+
+    /// End-to-end throughput: total served over the longest shard wall
+    /// time (shards run concurrently, so wall times overlap rather than
+    /// add).
+    pub fn throughput(&self) -> f64 {
+        let wall = self.shards.iter().map(|s| s.wall_s).fold(0.0, f64::max);
+        if wall > 0.0 {
+            self.served() as f64 / wall
+        } else {
+            0.0
+        }
+    }
+
+    /// Worst shard p99 latency — the front's tail once dispatch is fair.
+    pub fn p99_latency_s(&self) -> f64 {
+        self.shards.iter().map(|s| s.p99_latency_s).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::AlgoKind;
+    use crate::engine::{PlanCache, Planner};
+    use crate::model::zoo;
+    use crate::tensor::{Dims, Layout};
+    use std::time::Duration;
+
+    fn tinynet_engine(threads: usize) -> Engine {
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 21).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let planner = Planner { threads, ..Planner::new() };
+        Engine::plan(model, &planner, &mut cache).unwrap()
+    }
+
+    #[test]
+    fn single_shard_greedy_front_behaves_like_server() {
+        let server = ShardedServer::start(vec![tinynet_engine(1)], ShardConfig::default());
+        assert_eq!(server.shards(), 1);
+        assert_eq!(server.queue_depth(0), 0);
+        let rx = server.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, 1));
+        rx.recv().unwrap().unwrap();
+        let report = server.shutdown();
+        assert_eq!(report.served(), 1);
+        assert_eq!(report.shards.len(), 1);
+        assert!(report.throughput() > 0.0);
+    }
+
+    #[test]
+    fn least_loaded_dispatch_alternates_between_idle_shards() {
+        let engines = vec![tinynet_engine(1), tinynet_engine(1)];
+        let cfg = ShardConfig {
+            max_batch: 4,
+            deadline: Duration::from_millis(2),
+            threads_per_shard: 1,
+            ..ShardConfig::default()
+        };
+        let server = ShardedServer::start(engines, cfg);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| server.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, i)))
+            .collect();
+        for rx in &rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = server.shutdown();
+        assert_eq!(report.served(), 10);
+        // The round-robin tiebreak guarantees the second request lands on
+        // the other shard even if the first already completed.
+        assert!(
+            report.shards.iter().all(|s| s.served > 0),
+            "dispatch starved a shard: {:?}",
+            report.shards.iter().map(|s| s.served).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn sharded_shutdown_drains_all_queues() {
+        let engines = vec![tinynet_engine(1), tinynet_engine(1)];
+        let server = ShardedServer::start(engines, ShardConfig::default());
+        let rxs: Vec<_> = (0..16)
+            .map(|i| server.submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, i)))
+            .collect();
+        let report = server.shutdown();
+        assert_eq!(report.served(), 16, "sharded shutdown dropped queued requests");
+        for rx in &rxs {
+            rx.try_recv().expect("request dropped at shutdown").unwrap();
+        }
+    }
+}

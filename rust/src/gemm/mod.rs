@@ -60,7 +60,7 @@ pub fn sgemm(
     assert!(b.len() >= (k - 1) * ldb + n, "B slice too small");
     assert!(c.len() >= (m - 1) * ldc + n, "C slice too small");
 
-    let pool = parallel::global();
+    let pool = parallel::current();
     let c_addr = c.as_mut_ptr() as usize;
 
     // jc / pc / ic blocking (GotoBLAS loop nest).

@@ -26,8 +26,11 @@
 //!   ([`config`]) and the experiment coordinator ([`coordinator`]);
 //! * an inference [`engine`]: per-layer plan selection over
 //!   (algorithm × layout × blocking) with an analytic cost model, a
-//!   persistent JSON plan cache, a reusable scratch workspace, and a
-//!   micro-batching server for single-image traffic.
+//!   persistent JSON plan cache (shard-aware keys), a reusable scratch
+//!   workspace, a micro-batching server for single-image traffic, and a
+//!   sharded deadline-batching front ([`engine::ShardedServer`]) with
+//!   least-loaded dispatch and optional NUMA-style worker pinning
+//!   (`pinning` feature).
 //!
 //! ## Quickstart
 //!

@@ -10,7 +10,8 @@
 //! im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
 //! im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win]
 //! im2win plan  [--model tinynet|vgg] [--batch N] [--cache plans.json] [--refine]
-//! im2win serve [--model tinynet|vgg] [--requests N] [--batch N] [--cache plans.json]
+//! im2win serve [--model tinynet|vgg] [--requests N] [--shards N] [--deadline-us D]
+//!              [--max-batch B] [--pin] [--cache plans.json]
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
 //! ```
@@ -23,7 +24,7 @@ use im2win::bench_harness::fmt_time;
 use im2win::config::{ExperimentConfig, Scale};
 use im2win::conv::AlgoKind;
 use im2win::coordinator::{experiments, format_table, layers, summary, write_csv, write_json};
-use im2win::engine::{Engine, PlanCache, Planner, Server};
+use im2win::engine::{Engine, PlanCache, Planner, ShardConfig, ShardedServer};
 use im2win::model::zoo;
 use im2win::prelude::*;
 use im2win::roofline::{MachineSpec, Roofline};
@@ -49,7 +50,7 @@ struct Flags {
     pairs: Vec<(String, String)>,
 }
 
-const BOOL_FLAGS: [&str; 3] = ["paper", "refine", "detect"];
+const BOOL_FLAGS: [&str; 4] = ["paper", "refine", "detect", "pin"];
 
 impl Flags {
     fn parse(args: &[String]) -> CliResult<Flags> {
@@ -182,10 +183,11 @@ USAGE:
   im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win] [--scale S]
   im2win plan     [--model tinynet|vgg] [--edge N] [--batch N] [--threads T]
                   [--cache plans.json] [--refine] [--detect]
-  im2win serve    [--model tinynet|vgg] [--edge N] [--requests N] [--batch N]
+  im2win serve    [--model tinynet|vgg] [--edge N] [--requests N] [--shards N]
+                  [--deadline-us D] [--max-batch B] [--pin] [--batch N]
                   [--threads T] [--cache plans.json]
   im2win roofline [--paper]
-  im2win oracle   [--layer conv9]      (requires a build with --features pjrt)
+  im2win oracle   [--layer conv9]      (requires a build with --features pjrt-sys)
 ";
 
 fn info() -> CliResult<()> {
@@ -378,7 +380,7 @@ fn planner_from_flags(flags: &Flags) -> CliResult<(Planner, PlanCache)> {
     }
     planner.refine = flags.get("refine").is_some();
     planner.batch = flags.usize_or("batch", 8)?;
-    planner.threads = im2win::parallel::global().threads();
+    planner.threads = im2win::parallel::configured_threads();
     let cache = match flags.get("cache") {
         Some(path) => PlanCache::load(path)?,
         None => PlanCache::in_memory(),
@@ -425,25 +427,45 @@ fn plan(flags: &Flags) -> CliResult<()> {
 }
 
 fn serve(flags: &Flags) -> CliResult<()> {
-    let model = build_model(flags)?;
     let (planner, mut cache) = planner_from_flags(flags)?;
     let requests = flags.usize_or("requests", 100)?;
-    let max_batch = flags.usize_or("batch", 8)?;
-    let engine = Engine::plan(model, &planner, &mut cache)?;
+    let max_batch = flags.usize_or("max-batch", flags.usize_or("batch", 8)?)?;
+    let shards = flags.usize_or("shards", 1)?.max(1);
+    let deadline_us = flags.usize_or("deadline-us", 0)?;
+    let pin = flags.get("pin").is_some();
+
+    // Plan every shard with the per-shard thread count so plan-cache keys
+    // reflect the actual parallelism each engine will run with.
+    let shard_planner = planner.for_shards(shards);
+    let mut engines = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let model = build_model(flags)?;
+        engines.push(Engine::plan(model, &shard_planner, &mut cache)?);
+    }
     if cache.path().is_some() {
         cache.save()?;
     }
-    let base = engine.model().input_dims();
-    let name = engine.model().name.clone();
+    let base = engines[0].model().input_dims();
+    let name = engines[0].model().name.clone();
     println!(
-        "Serving {name} — {} single-image requests, micro-batch <= {max_batch}, {} threads",
-        requests,
-        im2win::parallel::global().threads()
+        "Serving {name} — {requests} single-image requests, {shards} shard(s), \
+         micro-batch <= {max_batch}, deadline {deadline_us} us, {} threads total, \
+         {} threads/shard{}",
+        im2win::parallel::configured_threads(),
+        shard_planner.threads,
+        if pin { ", pinned worker groups" } else { "" },
     );
-    for (i, plan) in engine.plans().iter().enumerate() {
+    for (i, plan) in engines[0].plans().iter().enumerate() {
         println!("  layer {i}: {} {} W_o,b={}", plan.algo.name(), plan.layout, plan.w_block);
     }
-    let server = Server::start(engine, max_batch);
+
+    let cfg = ShardConfig {
+        max_batch,
+        deadline: std::time::Duration::from_micros(deadline_us as u64),
+        threads_per_shard: shard_planner.threads,
+        pin,
+    };
+    let server = ShardedServer::start(engines, cfg);
     let dims = Dims::new(1, base.c, base.h, base.w);
     let receivers: Vec<_> = (0..requests)
         .map(|i| server.submit(Tensor4::random(dims, Layout::Nchw, i as u64)))
@@ -454,12 +476,26 @@ fn serve(flags: &Flags) -> CliResult<()> {
             .map_err(|e| err(format!("inference failed: {e}")))?;
     }
     let report = server.shutdown();
-    println!("\nserved {} requests in {} batches", report.served, report.batches);
-    println!("  avg batch      : {:.2}", report.avg_batch());
-    println!("  max batch      : {}", report.max_batch_seen);
-    println!("  busy time      : {}", fmt_time(report.busy_s));
-    println!("  throughput     : {:.1} inf/s", report.throughput());
-    println!("  warm allocs    : {} (scratch misses after warmup)", report.warm_misses);
+    println!("\nserved {} requests in {} batches", report.served(), report.batches());
+    println!("  throughput     : {:.1} inf/s (longest shard wall)", report.throughput());
+    println!("  deadline flush : {} batches", report.deadline_flushes());
+    println!("  worst p99      : {}", fmt_time(report.p99_latency_s()));
+    for (i, s) in report.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: served {:>5}  batches {:>4} (avg {:.2}, {} full / {} deadline)  \
+             depth<= {:>3}  occ {:>5.1}%  p50 {}  p99 {}  warm allocs {}",
+            s.served,
+            s.batches,
+            s.avg_batch(),
+            s.full_flushes,
+            s.deadline_flushes,
+            s.max_queue_depth,
+            s.occupancy() * 100.0,
+            fmt_time(s.p50_latency_s),
+            fmt_time(s.p99_latency_s),
+            s.warm_misses,
+        );
+    }
     Ok(())
 }
 
@@ -520,7 +556,7 @@ fn oracle(flags: &Flags) -> CliResult<()> {
 #[cfg(not(feature = "pjrt"))]
 fn oracle(_flags: &Flags) -> CliResult<()> {
     Err(err(
-        "the oracle subcommand needs the PJRT bridge; rebuild with `--features pjrt` \
+        "the oracle subcommand needs the PJRT bridge; rebuild with `--features pjrt-sys` \
          after vendoring the xla bindings (see rust/README.md)",
     ))
 }

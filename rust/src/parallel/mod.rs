@@ -14,10 +14,21 @@
 //!   counter — the same policy as OpenMP's `schedule(guided)`.
 //! * [`ThreadPool::parallel_for_coalesced`] — the paper's `N_i × H_o`
 //!   coalescing, exposed generically as a flattened 2-D index space.
+//! * Scoped per-thread pools ([`current`] / [`install_scoped`]) — kernels
+//!   resolve their pool per thread, so a sharded server can give every
+//!   shard its own worker group instead of contending for the global pool.
+//! * Worker-group pinning ([`ThreadPool::with_pinning`],
+//!   [`pin_current_thread`]) — NUMA-style core placement behind the
+//!   `pinning` feature (Linux `sched_setaffinity`; portable no-op
+//!   elsewhere), following the thread-placement findings of Georganas et
+//!   al. on SIMD convolution serving.
 
 mod pool;
 
-pub use pool::{global, set_global_threads, ThreadPool};
+pub use pool::{
+    configured_threads, current, global, install_scoped, pin_current_thread,
+    set_global_threads, PoolRef, ScopedPoolGuard, ThreadPool,
+};
 
 /// Splits `0..len` into `pieces` nearly-equal contiguous ranges.
 ///

@@ -1,7 +1,9 @@
-//! Persistent fork-join thread pool with guided self-scheduling.
+//! Persistent fork-join thread pool with guided self-scheduling, plus
+//! per-thread scoped pools and optional worker-group core pinning.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 /// Minimum iterations a worker claims per steal; keeps contention on the
@@ -83,32 +85,61 @@ struct State {
 /// [`ThreadPool::parallel_for`] joins in as the final worker. Jobs use
 /// guided self-scheduling over the iteration space.
 pub struct ThreadPool {
-    shared: std::sync::Arc<Shared>,
+    shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     nthreads: usize,
+    pinned: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
     /// Create a pool that runs jobs on `threads` total threads
     /// (`threads - 1` spawned + the caller). `threads` is clamped to ≥ 1.
     pub fn new(threads: usize) -> Self {
+        Self::with_pinning(threads, &[])
+    }
+
+    /// Like [`ThreadPool::new`], but each spawned worker pins itself to one
+    /// CPU from `cores` (worker `i` takes `cores[i % cores.len()]`; an empty
+    /// slice pins nothing). The calling thread — which participates in every
+    /// job — is *not* pinned here; callers wanting full worker-group pinning
+    /// pin themselves with [`pin_current_thread`], conventionally to
+    /// `cores[0]`. Without the `pinning` feature (or off Linux) the affinity
+    /// calls are portable no-ops and this behaves exactly like `new`.
+    pub fn with_pinning(threads: usize, cores: &[usize]) -> Self {
         let nthreads = threads.max(1);
-        let shared = std::sync::Arc::new(Shared::default());
+        let shared = Arc::new(Shared::default());
+        let pinned = Arc::new(AtomicUsize::new(0));
         let workers = (1..nthreads)
             .map(|i| {
-                let shared = std::sync::Arc::clone(&shared);
+                let shared = Arc::clone(&shared);
+                let pinned = Arc::clone(&pinned);
+                let core =
+                    if cores.is_empty() { None } else { Some(cores[i % cores.len()]) };
                 std::thread::Builder::new()
                     .name(format!("im2win-worker-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || {
+                        if let Some(c) = core {
+                            if pin_current_thread(&[c]) {
+                                pinned.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        worker_loop(&shared)
+                    })
                     .expect("failed to spawn pool worker")
             })
             .collect();
-        ThreadPool { shared, workers, nthreads }
+        ThreadPool { shared, workers, nthreads, pinned }
     }
 
     /// Number of threads (including the caller).
     pub fn threads(&self) -> usize {
         self.nthreads
+    }
+
+    /// Spawned workers whose affinity call succeeded (always 0 without the
+    /// `pinning` feature).
+    pub fn pinned_workers(&self) -> usize {
+        self.pinned.load(Ordering::Relaxed)
     }
 
     /// Run `f(i)` for every `i` in `0..len`, distributing iterations over
@@ -232,23 +263,138 @@ pub fn set_global_threads(threads: usize) -> bool {
     true
 }
 
+/// Thread count the global pool would be created with right now:
+/// [`set_global_threads`], then the `IM2WIN_THREADS` environment variable,
+/// then `std::thread::available_parallelism()`.
+fn resolve_threads() -> usize {
+    let configured = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if configured > 0 {
+        configured
+    } else if let Ok(v) = std::env::var("IM2WIN_THREADS") {
+        v.parse().unwrap_or(1)
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
 /// The process-wide pool used by the convolution kernels.
 ///
 /// Thread count resolution order: [`set_global_threads`], then the
 /// `IM2WIN_THREADS` environment variable, then
 /// `std::thread::available_parallelism()`.
 pub fn global() -> &'static ThreadPool {
-    GLOBAL.get_or_init(|| {
-        let configured = GLOBAL_THREADS.load(Ordering::Relaxed);
-        let threads = if configured > 0 {
-            configured
-        } else if let Ok(v) = std::env::var("IM2WIN_THREADS") {
-            v.parse().unwrap_or(1)
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        };
-        ThreadPool::new(threads)
-    })
+    GLOBAL.get_or_init(|| ThreadPool::new(resolve_threads()))
+}
+
+/// The global pool's thread count — or the count it *would* be created
+/// with — without forcing its creation. Sizing code (the planner, the
+/// sharded server dividing cores across shards) uses this so a process
+/// that runs everything on per-shard pools never spawns a parked global
+/// worker set on the side.
+pub fn configured_threads() -> usize {
+    match GLOBAL.get() {
+        Some(p) => p.threads(),
+        None => resolve_threads(),
+    }
+}
+
+thread_local! {
+    /// Per-thread pool override (see [`install_scoped`]).
+    static SCOPED: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
+}
+
+/// A reference to the pool serving the current thread: either the
+/// process-wide [`global`] pool or a scoped per-thread override installed
+/// by [`install_scoped`]. Derefs to [`ThreadPool`], so kernel code calls
+/// `parallel::current().parallel_for(..)` without caring which it got.
+pub enum PoolRef {
+    /// The process-wide pool.
+    Global(&'static ThreadPool),
+    /// This thread's scoped override.
+    Scoped(Arc<ThreadPool>),
+}
+
+impl std::ops::Deref for PoolRef {
+    type Target = ThreadPool;
+
+    fn deref(&self) -> &ThreadPool {
+        match self {
+            PoolRef::Global(p) => p,
+            PoolRef::Scoped(p) => p,
+        }
+    }
+}
+
+/// The pool the current thread should run parallel loops on.
+///
+/// Kernels resolve their pool through this instead of [`global`] so that a
+/// sharded server can give every shard worker its own pool: the fork-join
+/// pool has a single job slot, so two threads driving one pool concurrently
+/// would race. A thread with no scoped pool gets the global one — exactly
+/// the pre-sharding behavior.
+pub fn current() -> PoolRef {
+    match SCOPED.with(|s| s.borrow().clone()) {
+        Some(p) => PoolRef::Scoped(p),
+        None => PoolRef::Global(global()),
+    }
+}
+
+/// Install `pool` as the current thread's pool for [`current`] lookups
+/// until the returned guard drops (the previous override, if any, is
+/// restored). Only affects the calling thread.
+#[must_use = "dropping the guard immediately uninstalls the scoped pool"]
+pub fn install_scoped(pool: Arc<ThreadPool>) -> ScopedPoolGuard {
+    let prev = SCOPED.with(|s| s.borrow_mut().replace(pool));
+    ScopedPoolGuard { prev }
+}
+
+/// Restores the previously scoped pool (if any) when dropped.
+pub struct ScopedPoolGuard {
+    prev: Option<Arc<ThreadPool>>,
+}
+
+impl Drop for ScopedPoolGuard {
+    fn drop(&mut self) {
+        SCOPED.with(|s| *s.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Pin the calling thread to the CPU set `cpus` (NUMA-style worker-group
+/// placement). Returns `true` when the affinity call succeeded. Compiled
+/// to a no-op returning `false` unless the `pinning` feature is enabled on
+/// Linux; an empty or fully out-of-range set also returns `false`.
+#[cfg(all(feature = "pinning", target_os = "linux"))]
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    // Mirrors glibc's cpu_set_t: a 1024-bit mask. Declared here so the
+    // crate keeps zero dependencies — std already links libc, which
+    // provides the symbol.
+    const MAX_CPUS: usize = 1024;
+    const WORD: usize = usize::BITS as usize;
+    #[repr(C)]
+    struct CpuSet([usize; MAX_CPUS / WORD]);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let mut set = CpuSet([0; MAX_CPUS / WORD]);
+    let mut any = false;
+    for &c in cpus {
+        if c < MAX_CPUS {
+            set.0[c / WORD] |= 1usize << (c % WORD);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    // SAFETY: plain FFI call; the mask outlives the call and pid 0 means
+    // "the calling thread".
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+/// Portable no-op fallback (non-Linux, or the `pinning` feature disabled).
+#[cfg(not(all(feature = "pinning", target_os = "linux")))]
+pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+    false
 }
 
 #[cfg(test)]
@@ -324,6 +470,78 @@ mod tests {
             cell.lock().unwrap().push(i);
         });
         assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_pool_overrides_global_for_this_thread_only() {
+        let pool = Arc::new(ThreadPool::new(2));
+        {
+            let _g = install_scoped(Arc::clone(&pool));
+            match current() {
+                PoolRef::Scoped(p) => assert_eq!(p.threads(), 2),
+                PoolRef::Global(_) => panic!("scoped pool not picked up"),
+            }
+            // The override is thread-local: a fresh thread sees the global pool.
+            std::thread::spawn(|| assert!(matches!(current(), PoolRef::Global(_))))
+                .join()
+                .unwrap();
+            // Scoped installs nest and restore.
+            let inner = Arc::new(ThreadPool::new(3));
+            {
+                let _g2 = install_scoped(inner);
+                match current() {
+                    PoolRef::Scoped(p) => assert_eq!(p.threads(), 3),
+                    PoolRef::Global(_) => panic!("nested scoped pool not picked up"),
+                }
+            }
+            match current() {
+                PoolRef::Scoped(p) => assert_eq!(p.threads(), 2),
+                PoolRef::Global(_) => panic!("outer scoped pool not restored"),
+            }
+        }
+        assert!(matches!(current(), PoolRef::Global(_)));
+    }
+
+    #[test]
+    fn scoped_pool_runs_parallel_loops() {
+        let _g = install_scoped(Arc::new(ThreadPool::new(3)));
+        let counter = AtomicUsize::new(0);
+        current().parallel_for(100, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pinned_pool_covers_every_index() {
+        // Correctness must hold whether or not the affinity calls succeed
+        // (no `pinning` feature => pinned_workers() == 0, same scheduling).
+        let pool = ThreadPool::with_pinning(4, &[0, 1]);
+        assert_eq!(pool.threads(), 4);
+        assert!(pool.pinned_workers() <= 3);
+        let hits: Vec<AtomicUsize> = (0..256).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(256, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn configured_threads_agrees_with_the_global_pool() {
+        assert!(configured_threads() >= 1);
+        // Once the global pool exists, the configured count is its count.
+        let g = global().threads();
+        assert_eq!(configured_threads(), g);
+    }
+
+    #[test]
+    fn pin_current_thread_handles_degenerate_sets() {
+        // Empty set: nothing to pin, reported as failure on every platform.
+        assert!(!pin_current_thread(&[]));
+        // Out-of-range CPU ids are ignored rather than corrupting the mask.
+        assert!(!pin_current_thread(&[1 << 20]));
+        // A plausible set must not panic regardless of feature/platform.
+        let _ = pin_current_thread(&[0]);
     }
 
     #[test]

@@ -16,23 +16,26 @@
 //!
 //! # Feature gating
 //!
-//! The `xla` bindings are not part of the offline dependency set, so the
-//! real bridge ([`pjrt`]) is compiled only with the **`pjrt`** cargo
-//! feature; the default build ships [`stub`] — the same API surface where
-//! every entry point returns a clean [`crate::error::Error::Runtime`]
-//! explaining that the binary was built without PJRT support. Callers
-//! (the `im2win oracle` subcommand, the oracle tests) degrade gracefully.
+//! Two features layer here. **`pjrt`** enables the PJRT-facing surface
+//! (the `im2win oracle` subcommand and runtime call sites) but still
+//! compiles the [`stub`] — so CI can build and test the feature without
+//! any external crates. **`pjrt-sys`** (which implies `pjrt`) swaps in
+//! the real bridge ([`pjrt`]); it needs the vendored `xla` bindings,
+//! which are not part of the offline dependency set. In every stub build
+//! each entry point returns a clean [`crate::error::Error::Runtime`]
+//! explaining that the binary was built without PJRT support, and callers
+//! degrade gracefully.
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-sys")]
 mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-sys")]
 pub use pjrt::{
     literal_to_tensor, literal_to_vec, tensor_to_literal, LoadedModule, PjrtRuntime,
 };
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-sys"))]
 mod stub;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-sys"))]
 pub use stub::{LoadedModule, PjrtRuntime};
 
 /// Standard location of an artifact by stem: `artifacts/<stem>.hlo.txt`,
@@ -54,7 +57,7 @@ mod tests {
         assert!(s.ends_with("conv_conv9.hlo.txt"), "{s}");
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(feature = "pjrt-sys"))]
     #[test]
     fn stub_runtime_reports_missing_feature() {
         let err = PjrtRuntime::cpu().unwrap_err();

@@ -1,9 +1,10 @@
-//! Stub PJRT runtime used when the `pjrt` feature is disabled.
+//! Stub PJRT runtime used when the `pjrt-sys` feature is disabled (i.e.
+//! both the default build and the binding-free `--features pjrt` build).
 //!
 //! Mirrors the constructible surface of the real bridge so callers can be
 //! written against one API; every entry point fails with a descriptive
 //! [`Error::Runtime`]. No `xla` symbols are referenced, which is what lets
-//! the default build work with zero external dependencies.
+//! these builds work with zero external dependencies.
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor4;
@@ -11,9 +12,9 @@ use std::path::Path;
 
 fn unavailable() -> Error {
     Error::Runtime(
-        "PJRT runtime unavailable: this build does not enable the `pjrt` cargo feature \
+        "PJRT runtime unavailable: this build does not enable the `pjrt-sys` cargo feature \
          (the `xla` bindings are not in the offline dependency set); \
-         rebuild with `--features pjrt` after vendoring them"
+         rebuild with `--features pjrt-sys` after vendoring them"
             .into(),
     )
 }

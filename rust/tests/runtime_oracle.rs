@@ -3,9 +3,10 @@
 //!
 //! Requires `make artifacts`; tests skip (with a loud message) when the
 //! artifacts directory is absent so `cargo test` still works in a fresh
-//! checkout. The whole suite is gated on the `pjrt` feature — the default
-//! offline build ships only the stub runtime (see `src/runtime/mod.rs`).
-#![cfg(feature = "pjrt")]
+//! checkout. The whole suite is gated on the `pjrt-sys` feature — both
+//! the default offline build and the binding-free `--features pjrt` build
+//! ship only the stub runtime (see `src/runtime/mod.rs`).
+#![cfg(feature = "pjrt-sys")]
 
 use im2win::conv::AlgoKind;
 use im2win::coordinator::layers;

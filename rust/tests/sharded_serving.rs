@@ -1,0 +1,195 @@
+//! Integration tests for the sharded, deadline-aware serving front:
+//! ≥2 shards processing concurrently, deadline-based flush under
+//! `max_batch`, straggler isolation across shards, drain-on-shutdown,
+//! and shard-aware plan keys.
+
+use im2win::conv::AlgoKind;
+use im2win::engine::{layer_key, Engine, Inference, PlanCache, Planner, ShardConfig, ShardedServer};
+use im2win::model::zoo;
+use im2win::prelude::*;
+use im2win::tensor::Dims;
+use std::sync::mpsc::TryRecvError;
+use std::time::Duration;
+
+const DIMS: Dims = Dims { n: 1, c: 3, h: 32, w: 32 };
+
+fn tinynet_engine(threads: usize) -> Engine {
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 21).unwrap();
+    let mut cache = PlanCache::in_memory();
+    let planner = Planner { threads, ..Planner::new() };
+    Engine::plan(model, &planner, &mut cache).unwrap()
+}
+
+fn image(seed: u64) -> Tensor4 {
+    Tensor4::random(DIMS, Layout::Nchw, seed)
+}
+
+#[test]
+fn two_shards_serve_concurrently_with_deadline_flush() {
+    // Acceptance: 2 shards, each fed 4 requests — far under max_batch 16 —
+    // with a 5 ms window. Results arriving while the server is still open
+    // prove the flush came from the deadline, not from shutdown drain.
+    let reference = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 21).unwrap();
+    let engines = vec![tinynet_engine(1), tinynet_engine(1)];
+    let cfg = ShardConfig {
+        max_batch: 16,
+        deadline: Duration::from_millis(5),
+        threads_per_shard: 1,
+        ..ShardConfig::default()
+    };
+    let server = ShardedServer::start(engines, cfg);
+    assert_eq!(server.shards(), 2);
+
+    let images: Vec<Tensor4> = (0..8).map(|i| image(300 + i)).collect();
+    let rxs: Vec<_> = images
+        .iter()
+        .enumerate()
+        .map(|(i, x)| server.submit_to(i % 2, x.clone()))
+        .collect();
+    for (x, rx) in images.iter().zip(&rxs) {
+        let inf = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        let expect = reference.forward(x).unwrap();
+        let got = inf.to_tensor(Layout::Nchw);
+        assert!(
+            expect.allclose(&got, 1e-3, 1e-4),
+            "sharded result diverges: {}",
+            expect.max_abs_diff(&got)
+        );
+    }
+
+    let report = server.shutdown();
+    assert_eq!(report.shards.len(), 2);
+    assert_eq!(report.served(), 8);
+    for (i, s) in report.shards.iter().enumerate() {
+        assert_eq!(s.served, 4, "shard {i} served the wrong request count");
+        assert!(s.max_batch_seen < 16, "shard {i}: a batch filled without enough requests");
+        assert!(
+            s.deadline_flushes >= 1,
+            "shard {i}: under-full batches must flush at the deadline (batches={})",
+            s.batches
+        );
+    }
+}
+
+#[test]
+fn straggler_burst_on_one_shard_does_not_delay_the_other() {
+    // 96 requests pinned to shard 0 (≥ 24 batched forwards at max_batch 4)
+    // and a single request pinned to shard 1. If the shards truly run
+    // concurrently, shard 1 answers its request while shard 0 is still
+    // chewing through the burst.
+    let engines = vec![tinynet_engine(1), tinynet_engine(1)];
+    let cfg = ShardConfig { max_batch: 4, threads_per_shard: 1, ..ShardConfig::default() };
+    let server = ShardedServer::start(engines, cfg);
+
+    let burst: Vec<_> = (0..96).map(|i| server.submit_to(0, image(i))).collect();
+    let lone = server.submit_to(1, image(7777));
+    lone.recv_timeout(Duration::from_secs(60))
+        .expect("shard 1 response blocked behind shard 0's burst")
+        .unwrap();
+
+    // Snapshot shard 0's progress the moment shard 1 answered.
+    let mut results: Vec<Option<Inference>> = Vec::with_capacity(burst.len());
+    let mut outstanding = 0;
+    for rx in &burst {
+        match rx.try_recv() {
+            Ok(r) => results.push(Some(r.unwrap())),
+            Err(TryRecvError::Empty) => {
+                outstanding += 1;
+                results.push(None);
+            }
+            Err(TryRecvError::Disconnected) => panic!("shard 0 dropped a burst request"),
+        }
+    }
+    assert!(
+        outstanding > 0,
+        "shard 0 finished its 96-request burst before shard 1 served one request — \
+         the straggler shard is serializing the front"
+    );
+
+    // Every burst request still completes.
+    for (rx, slot) in burst.iter().zip(&mut results) {
+        if slot.is_none() {
+            *slot = Some(rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap());
+        }
+    }
+    assert!(results.iter().all(|r| r.is_some()));
+
+    let report = server.shutdown();
+    assert_eq!(report.shards[0].served, 96);
+    assert_eq!(report.shards[1].served, 1);
+}
+
+#[test]
+fn batches_flush_at_the_deadline_when_under_max_batch() {
+    // 3 requests against max_batch 32: the batch can never fill, so only
+    // the deadline (10 ms) can flush it — and the results must arrive
+    // while the server is still accepting requests.
+    let server = ShardedServer::start(
+        vec![tinynet_engine(1)],
+        ShardConfig {
+            max_batch: 32,
+            deadline: Duration::from_millis(10),
+            threads_per_shard: 1,
+            ..ShardConfig::default()
+        },
+    );
+    let rxs: Vec<_> = (0..3).map(|i| server.submit(image(40 + i))).collect();
+    for rx in &rxs {
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("an under-full batch never flushed before shutdown")
+            .unwrap();
+    }
+    let report = server.shutdown();
+    let s = &report.shards[0];
+    assert_eq!(s.served, 3);
+    assert!(s.deadline_flushes >= 1, "no deadline flush recorded (batches={})", s.batches);
+    assert_eq!(s.full_flushes, 0, "a 3-request load can never fill max_batch 32");
+    assert!(s.max_batch_seen <= 3);
+}
+
+#[test]
+fn sharded_shutdown_drains_every_shard_queue() {
+    // Regression for the drop-on-shutdown bug: queue up work on both
+    // shards, shut down immediately, and require every request answered.
+    let engines = vec![tinynet_engine(1), tinynet_engine(1)];
+    let cfg = ShardConfig {
+        max_batch: 8,
+        deadline: Duration::from_millis(1),
+        threads_per_shard: 1,
+        ..ShardConfig::default()
+    };
+    let server = ShardedServer::start(engines, cfg);
+    let rxs: Vec<_> = (0..24).map(|i| server.submit(image(500 + i))).collect();
+    let report = server.shutdown();
+    assert_eq!(report.served(), 24, "shutdown dropped queued requests");
+    assert_eq!(report.served(), report.shards.iter().map(|s| s.served).sum::<usize>());
+    for rx in &rxs {
+        rx.try_recv().expect("a queued request was dropped at shutdown").unwrap();
+    }
+}
+
+#[test]
+fn sharded_engines_plan_under_per_shard_cache_keys() {
+    // Planning 2 shards of an 8-thread machine must read/write the cache
+    // under threads=4 keys, disjoint from the whole-machine threads=8 keys.
+    let planner = Planner { threads: 8, ..Planner::new() };
+    let shard_planner = planner.for_shards(2);
+    assert_eq!(shard_planner.threads, 4);
+
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 3).unwrap();
+    let mut cache = PlanCache::in_memory();
+    planner.plan_model(&model, &mut cache).unwrap();
+    let whole_machine_entries = cache.len();
+    shard_planner.plan_model(&model, &mut cache).unwrap();
+    assert_eq!(
+        cache.len(),
+        2 * whole_machine_entries,
+        "sharded planning must not reuse whole-machine cache entries"
+    );
+
+    let p = ConvParams::new(8, 3, 32, 32, 16, 3, 3, 1).unwrap();
+    assert_ne!(
+        layer_key(&p, Layout::Nchw, planner.threads),
+        layer_key(&p, Layout::Nchw, shard_planner.threads)
+    );
+}
