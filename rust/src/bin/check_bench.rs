@@ -1,0 +1,171 @@
+//! CI bench regression gate: compare a serving-bench JSON artifact
+//! against a committed baseline with generous tolerances.
+//!
+//! ```text
+//! check_bench <current.json> <baseline.json> [--fail-below R] [--warn-below R] [--update]
+//! ```
+//!
+//! Metrics compared (higher is better): every `engine_inf_per_s.*` row
+//! plus `server.inf_per_s` and `sharded.inf_per_s` — the headline
+//! numbers `cargo bench --bench engine_serving -- --json` emits. A
+//! metric below `fail-below × baseline` (default 0.5) fails the gate;
+//! below `warn-below × baseline` (default 0.8) warns. A metric present
+//! in the baseline but missing from the current artifact fails; a
+//! metric only in the current artifact is reported as new. The wide
+//! default tolerance absorbs runner-to-runner variance — the gate
+//! exists to catch the serving path falling off a cliff, not 10% noise.
+//!
+//! `--update` rewrites the baseline from the current artifact instead
+//! of comparing, so re-baselining after an accepted perf change (or on
+//! new CI hardware) is one command.
+
+use im2win::config::json::{self, Json};
+
+fn main() {
+    std::process::exit(run());
+}
+
+fn usage() -> i32 {
+    eprintln!(
+        "usage: check_bench <current.json> <baseline.json> \
+         [--fail-below R] [--warn-below R] [--update]"
+    );
+    2
+}
+
+fn run() -> i32 {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths: Vec<String> = Vec::new();
+    let mut fail_below = 0.5;
+    let mut warn_below = 0.8;
+    let mut update = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--update" => update = true,
+            "--fail-below" | "--warn-below" => {
+                let v = match it.next().and_then(|v| v.parse::<f64>().ok()) {
+                    Some(v) => v,
+                    None => {
+                        eprintln!("{a} expects a ratio");
+                        return usage();
+                    }
+                };
+                if a == "--fail-below" {
+                    fail_below = v;
+                } else {
+                    warn_below = v;
+                }
+            }
+            other if !other.starts_with("--") => paths.push(other.to_string()),
+            other => {
+                eprintln!("unknown flag '{other}'");
+                return usage();
+            }
+        }
+    }
+    if paths.len() != 2 {
+        return usage();
+    }
+    let (current_path, baseline_path) = (&paths[0], &paths[1]);
+    let current = match load(current_path) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("error: reading {current_path}: {e}");
+            return 1;
+        }
+    };
+    if update {
+        // Refuse to brick the gate with a metric-less document (wrong
+        // file, truncated bench output).
+        if metrics(&current).is_empty() {
+            eprintln!("error: {current_path} exposes no bench metrics; not re-baselining");
+            return 1;
+        }
+        if let Err(e) = std::fs::copy(current_path, baseline_path) {
+            eprintln!("error: updating {baseline_path}: {e}");
+            return 1;
+        }
+        println!("re-baselined {baseline_path} from {current_path}");
+        return 0;
+    }
+    let baseline = match load(baseline_path) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("error: reading {baseline_path}: {e}");
+            return 1;
+        }
+    };
+    compare(&current, &baseline, fail_below, warn_below)
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    json::parse(&text).map_err(|e| e.to_string())
+}
+
+/// The throughput metrics a serving-bench document exposes (name, value).
+fn metrics(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(rows) = doc.get("engine_inf_per_s").and_then(Json::as_object) {
+        for (k, v) in rows {
+            if let Some(n) = v.as_f64() {
+                out.push((format!("engine_inf_per_s.{k}"), n));
+            }
+        }
+    }
+    for section in ["server", "sharded"] {
+        let v = doc.get(section).and_then(|s| s.get("inf_per_s")).and_then(Json::as_f64);
+        if let Some(n) = v {
+            out.push((format!("{section}.inf_per_s"), n));
+        }
+    }
+    out
+}
+
+fn compare(current: &Json, baseline: &Json, fail_below: f64, warn_below: f64) -> i32 {
+    let scale = |doc: &Json| doc.get("scale").and_then(Json::as_str).unwrap_or("?").to_string();
+    if scale(current) != scale(baseline) {
+        println!(
+            "WARN scale mismatch: current '{}' vs baseline '{}' — ratios may be meaningless",
+            scale(current),
+            scale(baseline)
+        );
+    }
+    let cur = metrics(current);
+    let base = metrics(baseline);
+    if base.is_empty() {
+        eprintln!("error: baseline exposes no metrics (corrupt file?)");
+        return 1;
+    }
+    let mut failed = 0usize;
+    let mut warned = 0usize;
+    for (name, b) in &base {
+        let Some((_, c)) = cur.iter().find(|(n, _)| n == name) else {
+            println!("FAIL {name}: missing from current artifact (baseline {b:.1} inf/s)");
+            failed += 1;
+            continue;
+        };
+        let ratio = if *b > 0.0 { c / b } else { f64::INFINITY };
+        let verdict = if ratio < fail_below {
+            failed += 1;
+            "FAIL"
+        } else if ratio < warn_below {
+            warned += 1;
+            "WARN"
+        } else {
+            "  OK"
+        };
+        println!("{verdict} {name}: {c:.1} inf/s vs baseline {b:.1} ({ratio:.2}x)");
+    }
+    for (name, c) in &cur {
+        if !base.iter().any(|(n, _)| n == name) {
+            println!(" NEW {name}: {c:.1} inf/s (not in baseline)");
+        }
+    }
+    println!(
+        "{} metrics: {failed} failed (<{fail_below}x), {warned} warned (<{warn_below}x)",
+        base.len()
+    );
+    i32::from(failed > 0)
+}

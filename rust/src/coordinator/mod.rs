@@ -17,4 +17,4 @@ pub mod report;
 pub mod summary;
 
 pub use layers::{by_name, select, BenchLayer, TABLE1};
-pub use report::{format_table, write_csv, write_json, Record};
+pub use report::{format_table, parse_csv, read_csv, read_json, write_csv, write_json, Record};

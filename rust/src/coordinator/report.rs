@@ -1,12 +1,16 @@
-//! Experiment records and report writers (CSV + JSON + console tables).
+//! Experiment records and report writers/readers (CSV + JSON + console
+//! tables). The CSV and JSON schemas are stable: the calibration
+//! subsystem ([`crate::engine::calibrate`]) reads records back from both
+//! formats, so writers and readers round-trip every field (including
+//! hostile labels — see the quoting rules on [`write_csv`]).
 
-use crate::config::json::Json;
-use crate::error::Result;
+use crate::config::json::{self, Json};
+use crate::error::{Error, Result};
 use std::io::Write;
 use std::path::Path;
 
 /// One measured cell of an experiment grid.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Record {
     /// Experiment id (`fig4`, `fig5`, `fig6`…, `ablation`).
     pub experiment: String,
@@ -45,6 +49,22 @@ impl Record {
     }
 }
 
+/// The CSV header (stable column order; `gflops` is derived on write and
+/// ignored on read).
+const CSV_HEADER: &str =
+    "experiment,layer,algo,layout,batch,best_s,median_s,flops,gflops,mem_bytes";
+
+/// RFC 4180-style field quoting: a field containing a comma, quote or
+/// newline is wrapped in double quotes with embedded quotes doubled, so a
+/// hostile experiment/layout label cannot shift columns for the reader.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
 /// Write records as CSV (stable column order, header included).
 pub fn write_csv(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
     let path = path.as_ref();
@@ -52,15 +72,15 @@ pub fn write_csv(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
         std::fs::create_dir_all(parent)?;
     }
     let mut f = std::fs::File::create(path)?;
-    writeln!(f, "experiment,layer,algo,layout,batch,best_s,median_s,flops,gflops,mem_bytes")?;
+    writeln!(f, "{CSV_HEADER}")?;
     for r in records {
         writeln!(
             f,
             "{},{},{},{},{},{:.6e},{:.6e},{},{:.3},{}",
-            r.experiment,
-            r.layer,
-            r.algo,
-            r.layout,
+            csv_field(&r.experiment),
+            csv_field(&r.layer),
+            csv_field(&r.algo),
+            csv_field(&r.layout),
             r.batch,
             r.best_s,
             r.median_s,
@@ -72,6 +92,101 @@ pub fn write_csv(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
     Ok(())
 }
 
+/// Read records back from a CSV file written by [`write_csv`].
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Vec<Record>> {
+    parse_csv(&std::fs::read_to_string(path.as_ref())?)
+}
+
+/// Parse [`write_csv`]-format text (quote-aware — see [`write_csv`]).
+pub fn parse_csv(text: &str) -> Result<Vec<Record>> {
+    let mut rows = csv_rows(text)?;
+    if rows.is_empty() {
+        return Err(Error::Config("report csv: empty document".into()));
+    }
+    let header = rows.remove(0);
+    if header.join(",") != CSV_HEADER {
+        return Err(Error::Config(format!(
+            "report csv: unexpected header '{}'",
+            header.join(",")
+        )));
+    }
+    let mut records = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != 10 {
+            return Err(Error::Config(format!(
+                "report csv: row {} has {} fields, expected 10",
+                i + 2,
+                row.len()
+            )));
+        }
+        let num = |j: usize, what: &str| -> Result<f64> {
+            row[j].parse::<f64>().map_err(|_| {
+                Error::Config(format!("report csv: row {} bad {what} '{}'", i + 2, row[j]))
+            })
+        };
+        records.push(Record {
+            experiment: row[0].clone(),
+            layer: row[1].clone(),
+            algo: row[2].clone(),
+            layout: row[3].clone(),
+            batch: num(4, "batch")? as usize,
+            best_s: num(5, "best_s")?,
+            median_s: num(6, "median_s")?,
+            flops: num(7, "flops")? as u64,
+            // row[8] (gflops) is derived — recomputed from flops/best_s.
+            mem_bytes: num(9, "mem_bytes")? as usize,
+        });
+    }
+    Ok(records)
+}
+
+/// Split CSV text into rows of unquoted fields (handles quoted fields
+/// with doubled quotes and embedded commas/newlines).
+fn csv_rows(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    let mut saw_any = false;
+    while let Some(c) = chars.next() {
+        saw_any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                _ => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => row.push(std::mem::take(&mut field)),
+                '\r' => {} // swallowed; \n terminates the row
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                _ => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err(Error::Config("report csv: unterminated quoted field".into()));
+    }
+    // Final row without a trailing newline.
+    if saw_any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
 /// Write records as a JSON array (machine-readable report).
 pub fn write_json(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
     let path = path.as_ref();
@@ -81,6 +196,36 @@ pub fn write_json(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
     let arr = Json::Array(records.iter().map(record_json).collect());
     std::fs::write(path, arr.to_string())?;
     Ok(())
+}
+
+/// Read records back from a JSON array written by [`write_json`].
+pub fn read_json(path: impl AsRef<Path>) -> Result<Vec<Record>> {
+    let doc = json::parse(&std::fs::read_to_string(path.as_ref())?)?;
+    let arr = doc
+        .as_array()
+        .ok_or_else(|| Error::Config("report json: expected a top-level array".into()))?;
+    arr.iter().map(record_from_json).collect()
+}
+
+fn record_from_json(v: &Json) -> Result<Record> {
+    let bad = |what: &str| Error::Config(format!("report json: bad or missing '{what}'"));
+    let s = |key: &str| -> Result<String> {
+        v.get(key).and_then(Json::as_str).map(str::to_string).ok_or_else(|| bad(key))
+    };
+    let n = |key: &str| -> Result<f64> {
+        v.get(key).and_then(Json::as_f64).ok_or_else(|| bad(key))
+    };
+    Ok(Record {
+        experiment: s("experiment")?,
+        layer: s("layer")?,
+        algo: s("algo")?,
+        layout: s("layout")?,
+        batch: n("batch")? as usize,
+        best_s: n("best_s")?,
+        median_s: n("median_s")?,
+        flops: n("flops")? as u64,
+        mem_bytes: n("mem_bytes")? as usize,
+    })
 }
 
 fn record_json(r: &Record) -> Json {
@@ -182,6 +327,65 @@ mod tests {
         assert_eq!(parsed.as_array().unwrap().len(), 2);
         assert_eq!(parsed.as_array().unwrap()[1].get("algo").unwrap().as_str(), Some("im2win"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_quotes_hostile_names_and_round_trips() {
+        // Labels with commas, quotes and a newline must survive a
+        // write → read cycle unchanged (the calibration reader depends
+        // on this). Float fields are dyadic so the 7-significant-digit
+        // CSV formatting is exact.
+        let hostile = Record {
+            experiment: "abl,ation \"v2\"".into(),
+            layer: "conv\n1,b".into(),
+            algo: "im2win+\"regblock\"".into(),
+            layout: "NHWC,packed".into(),
+            batch: 8,
+            best_s: 0.25,
+            median_s: 0.5,
+            flops: 1_000_000_000,
+            mem_bytes: 4096,
+        };
+        let benign = rec("conv1", "direct", "NCHW", 0.5);
+        let dir = std::env::temp_dir().join(format!("im2win_hostile_{}", std::process::id()));
+        let path = dir.join("hostile.csv");
+        write_csv(&path, &[hostile.clone(), benign.clone()]).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], hostile);
+        assert_eq!(back[0].layer, "conv\n1,b");
+        // Benign record: exact strings, floats at writer precision.
+        assert_eq!(back[1].experiment, benign.experiment);
+        assert_eq!(back[1].batch, benign.batch);
+        assert!((back[1].best_s - benign.best_s).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_reader_round_trips_records() {
+        let dir = std::env::temp_dir().join(format!("im2win_readjson_{}", std::process::id()));
+        let path = dir.join("t.json");
+        let records =
+            vec![rec("conv1", "direct", "NCHW", 0.5), rec("conv2", "im2win", "NHWC", 0.25)];
+        write_json(&path, &records).unwrap();
+        let back = read_json(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].algo, "im2win");
+        assert_eq!(back[1].flops, records[1].flops);
+        assert!((back[1].best_s - records[1].best_s).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_parser_rejects_malformed_documents() {
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("wrong,header\n1,2").is_err());
+        let short = format!("{CSV_HEADER}\nfig4,conv1,direct\n");
+        assert!(parse_csv(&short).is_err());
+        let bad_num = format!("{CSV_HEADER}\nfig4,conv1,direct,NCHW,x,1.0,1.0,10,1.0,0\n");
+        assert!(parse_csv(&bad_num).is_err());
+        let unterminated = format!("{CSV_HEADER}\n\"fig4,conv1,direct,NCHW,8,1.0,1.0,10,1.0,0\n");
+        assert!(parse_csv(&unterminated).is_err());
     }
 
     #[test]

@@ -17,10 +17,16 @@
 //! cache persists same-host decisions across restarts, and a refining
 //! planner upgrades analytic-only entries in place rather than trusting
 //! them (see [`super::Planner::plan_model`]) — so `--refine` is honored
-//! even against a warm cache. The file format is the repo's own
-//! zero-dependency JSON ([`crate::config::json`]), written with sorted
-//! keys so serialization is canonical: `save → load → save` produces
-//! byte-identical files (pinned by a property test).
+//! even against a warm cache. The *cost model* that decided the entries
+//! is tracked separately: the cache stores the fingerprint of the
+//! calibration profile (or `""` for the analytic constants) its entries
+//! were scored under, and [`PlanCache::sync_profile`] drops every entry
+//! when a planner with a different fingerprint consults it — a refit
+//! invalidates stale plans instead of silently reusing them. The file
+//! format is the repo's own zero-dependency JSON
+//! ([`crate::config::json`]), written with sorted keys so serialization
+//! is canonical: `save → load → save` produces byte-identical files
+//! (pinned by a property test).
 
 use super::planner::LayerPlan;
 use crate::config::json::{self, Json};
@@ -57,6 +63,10 @@ pub fn layer_key(p: &ConvParams, prev: Layout, threads: usize) -> String {
 pub struct PlanCache {
     path: Option<PathBuf>,
     entries: BTreeMap<String, LayerPlan>,
+    /// Fingerprint of the calibration profile the stored entries were
+    /// decided under (empty = the analytic constants). See
+    /// [`PlanCache::sync_profile`].
+    profile: String,
     hits: usize,
     misses: usize,
 }
@@ -74,7 +84,9 @@ impl PlanCache {
         let mut cache = PlanCache { path: Some(path.to_path_buf()), ..PlanCache::default() };
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
-            cache.entries = parse_entries(&text)?;
+            let (profile, entries) = parse_document(&text)?;
+            cache.profile = profile;
+            cache.entries = entries;
         }
         Ok(cache)
     }
@@ -105,9 +117,32 @@ impl PlanCache {
             .collect();
         Json::Object(vec![
             ("version".into(), Json::Number(VERSION)),
+            ("profile".into(), Json::String(self.profile.clone())),
             ("entries".into(), Json::Object(entries)),
         ])
         .to_string()
+    }
+
+    /// Sync the cache to the calibration-profile fingerprint of the
+    /// planner about to consult it (empty = analytic constants). A
+    /// mismatch means every stored decision was scored under a different
+    /// cost model, so the entries are dropped — re-planned, not silently
+    /// reused — and the new fingerprint is recorded. Returns how many
+    /// entries were invalidated (0 when the fingerprints already agree).
+    pub fn sync_profile(&mut self, fingerprint: &str) -> usize {
+        if self.profile == fingerprint {
+            return 0;
+        }
+        let dropped = self.entries.len();
+        self.entries.clear();
+        self.profile = fingerprint.to_string();
+        dropped
+    }
+
+    /// Fingerprint of the profile the stored entries were decided under
+    /// (empty = the analytic constants).
+    pub fn profile_fingerprint(&self) -> &str {
+        &self.profile
     }
 
     /// Look up a plan; counts a hit or miss.
@@ -178,7 +213,10 @@ fn parse_plan(v: &Json) -> Result<LayerPlan> {
     })
 }
 
-fn parse_entries(text: &str) -> Result<BTreeMap<String, LayerPlan>> {
+/// Parse a cache document into its (profile fingerprint, entries) parts.
+/// The `profile` field is optional on read (pre-calibration files) and
+/// always written, defaulting to the analytic marker `""`.
+fn parse_document(text: &str) -> Result<(String, BTreeMap<String, LayerPlan>)> {
     let doc = json::parse(text)?;
     let version = doc
         .get("version")
@@ -187,6 +225,7 @@ fn parse_entries(text: &str) -> Result<BTreeMap<String, LayerPlan>> {
     if version != VERSION {
         return Err(Error::Config(format!("plan cache: unsupported version {version}")));
     }
+    let profile = doc.get("profile").and_then(Json::as_str).unwrap_or_default().to_string();
     let obj = doc
         .get("entries")
         .and_then(Json::as_object)
@@ -195,7 +234,7 @@ fn parse_entries(text: &str) -> Result<BTreeMap<String, LayerPlan>> {
     for (k, v) in obj {
         map.insert(k.clone(), parse_plan(v)?);
     }
-    Ok(map)
+    Ok((profile, map))
 }
 
 #[cfg(test)]
@@ -234,16 +273,51 @@ mod tests {
     #[test]
     fn text_round_trip_is_byte_identical() {
         let mut c = PlanCache::in_memory();
+        c.sync_profile("0123456789abcdef");
         for i in 0..6 {
             c.insert(format!("key{i}"), sample_plan(i));
         }
         let text1 = c.to_json_text();
         let mut back = PlanCache::in_memory();
-        back.entries = parse_entries(&text1).unwrap();
+        let (profile, entries) = parse_document(&text1).unwrap();
+        back.profile = profile;
+        back.entries = entries;
         assert_eq!(back.to_json_text(), text1);
+        assert_eq!(back.profile_fingerprint(), "0123456789abcdef");
         for i in 0..6 {
             assert_eq!(back.get(&format!("key{i}")), Some(sample_plan(i)));
         }
+    }
+
+    #[test]
+    fn sync_profile_invalidates_on_fingerprint_change() {
+        let mut c = PlanCache::in_memory();
+        c.insert("a".into(), sample_plan(0));
+        c.insert("b".into(), sample_plan(1));
+        // Analytic → analytic: nothing to do.
+        assert_eq!(c.sync_profile(""), 0);
+        assert_eq!(c.len(), 2);
+        // Analytic → calibrated: every analytic decision is stale.
+        assert_eq!(c.sync_profile("fp1"), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.profile_fingerprint(), "fp1");
+        // Same fingerprint again: entries survive.
+        c.insert("a".into(), sample_plan(2));
+        assert_eq!(c.sync_profile("fp1"), 0);
+        assert_eq!(c.get("a"), Some(sample_plan(2)));
+        // Refit (new fingerprint): stale again.
+        assert_eq!(c.sync_profile("fp2"), 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn profile_field_is_optional_on_read() {
+        // Pre-calibration cache files carry no 'profile' field; they load
+        // as analytic ("") caches.
+        let text = r#"{"version": 1, "entries": {}}"#;
+        let (profile, entries) = parse_document(text).unwrap();
+        assert_eq!(profile, "");
+        assert!(entries.is_empty());
     }
 
     #[test]
@@ -263,9 +337,11 @@ mod tests {
 
     #[test]
     fn rejects_malformed_documents() {
-        assert!(parse_entries("[]").is_err());
-        assert!(parse_entries(r#"{"version": 99, "entries": {}}"#).is_err());
-        assert!(parse_entries(r#"{"version": 1, "entries": {"k": {"algo": "winograd"}}}"#).is_err());
-        assert!(parse_entries(r#"{"version": 1}"#).is_err());
+        assert!(parse_document("[]").is_err());
+        assert!(parse_document(r#"{"version": 99, "entries": {}}"#).is_err());
+        assert!(
+            parse_document(r#"{"version": 1, "entries": {"k": {"algo": "winograd"}}}"#).is_err()
+        );
+        assert!(parse_document(r#"{"version": 1}"#).is_err());
     }
 }

@@ -1,0 +1,679 @@
+//! Measured cost-model calibration: fit the planner from benchmark records.
+//!
+//! The paper's central finding is that the best (algorithm × layout ×
+//! blocking) choice is geometry- *and machine*-dependent — im2win/NHWC
+//! reaches up to 95% of peak on one machine while other layouts win
+//! elsewhere. The analytic [`super::Planner`] scores candidates with
+//! hard-coded per-algorithm efficiency constants derated from a nominal
+//! machine spec that matches no real host. Following the
+//! measured-performance-model tradition (Georganas et al., *Anatomy of
+//! High-Performance Deep Learning Convolutions on SIMD Architectures*)
+//! and the autotuned blocking of Zhang et al. (*High Performance
+//! Zero-Memory Overhead Direct Convolutions*), this module replaces those
+//! constants with numbers measured on the machine that will serve:
+//!
+//! * [`CalibrationProfile::fit`] ingests the [`Record`]s the
+//!   `coordinator` already emits (CSV or JSON, same stable schemas) and
+//!   fits a per-(algorithm × layout) efficiency table — achieved GFLOPS
+//!   as a fraction of the **empirical peak** (the best observed record)
+//!   — plus per-geometry residual buckets keyed by [`ShapeClass`]
+//!   (narrow/wide channel count × small/large spatial extent), so a
+//!   3-channel first layer and a 512-channel tail layer calibrate
+//!   independently.
+//! * The profile persists as versioned canonical JSON next to the
+//!   [`super::PlanCache`] (same sorted-keys discipline: `save → load →
+//!   save` is byte-identical), and [`CalibrationProfile::fingerprint`]
+//!   hashes that canonical text. The plan cache stores the fingerprint
+//!   of the profile its entries were decided under; a mismatch
+//!   invalidates the entries (see [`super::PlanCache::sync_profile`]) so
+//!   stale plans are re-planned rather than silently reused.
+//! * [`super::Planner::with_profile`] consults the fit in
+//!   `Planner::estimate`: the compute term uses the measured efficiency
+//!   and the measured per-thread peak; candidates with no measured
+//!   samples fall back to the analytic constants. Transform-traffic and
+//!   layout-conversion terms stay analytic (the records time full runs,
+//!   but bandwidth terms are what make *relative* choices like
+//!   direct-vs-im2col geometry-sensitive, and they need no machine fit
+//!   beyond the spec).
+//! * [`warm_pack`] pre-fills a plan cache with calibrated decisions for
+//!   the whole Table I layer suite (every incoming layout), shipping
+//!   pre-tuned plans so a fresh process serves with zero planning work.
+//!
+//! Bucket classes at fit time come from the geometry the record
+//! *actually measured*: channels from the Table I layer named by the
+//! record (scaling never touches them), spatial extent reconstructed
+//! from the record's FLOPs (see [`measured_params`]) — so a smoke-scale
+//! sweep of conv9 at 14×14 buckets as a small-spatial problem, not as
+//! the unscaled 56×56 layer. Records from unknown layers (or with
+//! inconsistent FLOPs) still contribute to the per-series table, just
+//! not to a bucket. The classes are coarse by design — they are
+//! residual corrections, not a per-shape database.
+
+use super::cache::{layer_key, PlanCache};
+use super::planner::Planner;
+use crate::config::json::{self, Json};
+use crate::conv::{AlgoKind, ConvParams};
+use crate::coordinator::layers::{self, BenchLayer};
+use crate::coordinator::report::Record;
+use crate::error::{Error, Result};
+use crate::tensor::Layout;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Profile-file format version (bump on incompatible layout changes).
+const VERSION: f64 = 1.0;
+
+/// Coarse problem-shape class used for residual correction buckets.
+///
+/// Two axes, two classes each: channel count (`C_i`) narrow/wide and
+/// spatial extent (`H_i × W_i`) small/large. The thresholds split the
+/// Table I suite roughly in half on each axis and — more importantly —
+/// separate the regimes the paper shows behave differently: channel-
+/// starved first layers (`C_i = 3` fills 3 of 8 NHWC lanes) vs
+/// channel-rich tails, and large activations (transform-bandwidth
+/// bound) vs small ones (compute/latency bound).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeClass {
+    /// `C_i >= 64`: the NHWC vector dimension is saturated.
+    pub wide_channels: bool,
+    /// `H_i × W_i >= 56 × 56`: transform traffic dominates the window.
+    pub large_spatial: bool,
+}
+
+impl ShapeClass {
+    /// Channel-count threshold between `narrow` and `wide`.
+    pub const CHANNEL_THRESHOLD: usize = 64;
+    /// Spatial-extent (`H_i × W_i`) threshold between `small` and `large`.
+    pub const SPATIAL_THRESHOLD: usize = 56 * 56;
+
+    /// Classify a concrete problem geometry.
+    pub fn of(p: &ConvParams) -> ShapeClass {
+        ShapeClass {
+            wide_channels: p.c_in >= Self::CHANNEL_THRESHOLD,
+            large_spatial: p.h_in * p.w_in >= Self::SPATIAL_THRESHOLD,
+        }
+    }
+
+    /// Stable bucket key used in the profile JSON.
+    pub fn key(&self) -> &'static str {
+        match (self.wide_channels, self.large_spatial) {
+            (false, false) => "narrow_small",
+            (false, true) => "narrow_large",
+            (true, false) => "wide_small",
+            (true, true) => "wide_large",
+        }
+    }
+}
+
+/// One fitted efficiency cell: mean fraction of the empirical peak, and
+/// how many records backed it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EffStat {
+    /// Mean achieved-GFLOPS / empirical-peak-GFLOPS over the samples.
+    pub eff: f64,
+    /// Number of records aggregated into `eff`.
+    pub samples: usize,
+}
+
+/// Per-(algorithm × layout) fit: the overall efficiency plus the
+/// [`ShapeClass`]-bucketed residual corrections.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SeriesFit {
+    /// Efficiency over every sample of this series.
+    pub overall: EffStat,
+    /// Bucket key ([`ShapeClass::key`]) → efficiency over that bucket.
+    pub buckets: BTreeMap<String, EffStat>,
+}
+
+/// A measured cost model fitted from coordinator benchmark records —
+/// see the module docs for the full story.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationProfile {
+    /// Empirical machine peak: GFLOPS of the best observed record.
+    pub peak_gflops: f64,
+    /// Thread count the records were measured with (scales the peak to
+    /// the consulting planner's thread count).
+    pub threads: usize,
+    /// Series key (`algo_LAYOUT`, e.g. `im2win_NHWC`) → fitted stats.
+    table: BTreeMap<String, SeriesFit>,
+}
+
+/// The series key a record contributes to: `algo_LAYOUT`, exactly
+/// [`Record::series`].
+pub fn series_key(algo: AlgoKind, layout: Layout) -> String {
+    format!("{}_{layout}", algo.name())
+}
+
+/// Reconstruct the geometry a record actually measured. The coordinator
+/// benchmarks Table I layers at *scaled* spatial extents
+/// ([`BenchLayer::scaled_params`]), and records carry only the layer
+/// name, batch and FLOPs — so the measured square geometry is recovered
+/// from `flops = 2·N·C_o·H_o·W_o·C_i·H_f·W_f`: the output plane gives
+/// the output edge, and `H_i = (H_o − 1)·s + k`. Returns `None` when the
+/// FLOPs are inconsistent with a square problem of this layer's
+/// channel/filter configuration (hand-written or foreign records) —
+/// callers then skip shape-bucketing rather than misfile the sample.
+pub fn measured_params(layer: &BenchLayer, r: &Record) -> Option<ConvParams> {
+    let denom = 2u64
+        * (r.batch as u64)
+        * (layer.c_out as u64)
+        * (layer.c_in as u64)
+        * (layer.k as u64)
+        * (layer.k as u64);
+    if denom == 0 || r.flops == 0 || r.flops % denom != 0 {
+        return None;
+    }
+    let out_positions = r.flops / denom;
+    let out_edge = (out_positions as f64).sqrt().round() as u64;
+    if out_edge == 0 || out_edge * out_edge != out_positions {
+        return None;
+    }
+    let in_edge = (out_edge as usize - 1) * layer.s + layer.k;
+    ConvParams::new(r.batch, layer.c_in, in_edge, in_edge, layer.c_out, layer.k, layer.k, layer.s)
+        .ok()
+}
+
+impl CalibrationProfile {
+    /// An empty profile (tests, incremental construction via
+    /// [`CalibrationProfile::set_series`]).
+    pub fn new(peak_gflops: f64, threads: usize) -> Self {
+        CalibrationProfile { peak_gflops, threads: threads.max(1), table: BTreeMap::new() }
+    }
+
+    /// Fit a profile from benchmark records measured with `threads`
+    /// worker threads. Records are usable when they time a parseable
+    /// (algorithm, layout) cell with finite positive time and nonzero
+    /// FLOPs — memory-only rows (Fig. 5's NaN times) and ablation rows
+    /// with composite algorithm labels are skipped. Errors when nothing
+    /// usable remains.
+    pub fn fit(records: &[Record], threads: usize) -> Result<CalibrationProfile> {
+        let usable: Vec<(&Record, AlgoKind, Layout)> = records
+            .iter()
+            .filter(|r| r.best_s.is_finite() && r.best_s > 0.0 && r.flops > 0)
+            .filter_map(|r| {
+                let algo = AlgoKind::parse(&r.algo)?;
+                let layout = Layout::parse(&r.layout)?;
+                Some((r, algo, layout))
+            })
+            .collect();
+        if usable.is_empty() {
+            return Err(Error::Config(
+                "calibration: no usable timed records (need finite best_s, nonzero flops, \
+                 parseable algo/layout)"
+                    .into(),
+            ));
+        }
+        let peak_gflops = usable.iter().map(|(r, _, _)| r.gflops()).fold(f64::MIN, f64::max);
+        let mut sums: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+        let mut bucket_sums: BTreeMap<(String, &'static str), (f64, usize)> = BTreeMap::new();
+        for (r, algo, layout) in &usable {
+            let eff = (r.gflops() / peak_gflops).clamp(1e-3, 1.0);
+            let key = series_key(*algo, *layout);
+            let cell = sums.entry(key.clone()).or_insert((0.0, 0));
+            cell.0 += eff;
+            cell.1 += 1;
+            let measured = layers::by_name(&r.layer).and_then(|l| measured_params(l, r));
+            if let Some(p) = measured {
+                let bucket = ShapeClass::of(&p).key();
+                let cell = bucket_sums.entry((key, bucket)).or_insert((0.0, 0));
+                cell.0 += eff;
+                cell.1 += 1;
+            }
+        }
+        let mut profile = CalibrationProfile::new(peak_gflops, threads);
+        for (key, (sum, n)) in sums {
+            let overall = EffStat { eff: sum / n as f64, samples: n };
+            profile.table.insert(key, SeriesFit { overall, buckets: BTreeMap::new() });
+        }
+        for ((key, bucket), (sum, n)) in bucket_sums {
+            profile
+                .table
+                .get_mut(&key)
+                .expect("bucketed series was inserted above")
+                .buckets
+                .insert(bucket.to_string(), EffStat { eff: sum / n as f64, samples: n });
+        }
+        Ok(profile)
+    }
+
+    /// Measured efficiency for a candidate on a concrete geometry: the
+    /// [`ShapeClass`] bucket when it has samples, else the series
+    /// overall, else `None` (caller falls back to the analytic model).
+    pub fn efficiency(&self, algo: AlgoKind, layout: Layout, p: &ConvParams) -> Option<f64> {
+        let fit = self.table.get(&series_key(algo, layout))?;
+        if let Some(stat) = fit.buckets.get(ShapeClass::of(p).key()) {
+            if stat.samples > 0 {
+                return Some(stat.eff);
+            }
+        }
+        (fit.overall.samples > 0).then_some(fit.overall.eff)
+    }
+
+    /// Empirical peak FLOP/s per measurement thread — the consulting
+    /// planner multiplies by its own thread count, so per-shard planners
+    /// ([`super::Planner::for_shards`]) scale the measured peak down the
+    /// same way the analytic model scales its nominal peak.
+    pub fn peak_flops_per_thread(&self) -> f64 {
+        self.peak_gflops * 1e9 / self.threads.max(1) as f64
+    }
+
+    /// Insert (or replace) a series' overall efficiency — test/tooling
+    /// hook for building synthetic profiles without records.
+    pub fn set_series(&mut self, algo: AlgoKind, layout: Layout, eff: f64, samples: usize) {
+        self.table.entry(series_key(algo, layout)).or_default().overall =
+            EffStat { eff, samples };
+    }
+
+    /// Insert (or replace) one shape-class bucket of a series.
+    pub fn set_bucket(
+        &mut self,
+        algo: AlgoKind,
+        layout: Layout,
+        class: ShapeClass,
+        eff: f64,
+        samples: usize,
+    ) {
+        self.table
+            .entry(series_key(algo, layout))
+            .or_default()
+            .buckets
+            .insert(class.key().to_string(), EffStat { eff, samples });
+    }
+
+    /// Fitted series keys in canonical order (reporting).
+    pub fn series(&self) -> impl Iterator<Item = (&str, &SeriesFit)> {
+        self.table.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Number of fitted (algorithm × layout) series.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// True when no series were fitted.
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Serialize to canonical JSON: fixed field order, `BTreeMap`-sorted
+    /// series and bucket keys — `save → load → save` is byte-identical,
+    /// like the plan cache.
+    pub fn to_json_text(&self) -> String {
+        let series: Vec<(String, Json)> = self
+            .table
+            .iter()
+            .map(|(k, fit)| {
+                let buckets: Vec<(String, Json)> = fit
+                    .buckets
+                    .iter()
+                    .map(|(b, stat)| (b.clone(), stat_json(stat)))
+                    .collect();
+                (
+                    k.clone(),
+                    Json::Object(vec![
+                        ("overall".into(), stat_json(&fit.overall)),
+                        ("buckets".into(), Json::Object(buckets)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Object(vec![
+            ("version".into(), Json::Number(VERSION)),
+            ("peak_gflops".into(), Json::Number(self.peak_gflops)),
+            ("threads".into(), Json::Number(self.threads as f64)),
+            ("series".into(), Json::Object(series)),
+        ])
+        .to_string()
+    }
+
+    /// Parse a profile from [`CalibrationProfile::to_json_text`] output.
+    pub fn parse(text: &str) -> Result<CalibrationProfile> {
+        let bad = |what: &str| Error::Config(format!("calibration profile: bad '{what}'"));
+        let doc = json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_f64).ok_or_else(|| bad("version"))?;
+        if version != VERSION {
+            return Err(Error::Config(format!(
+                "calibration profile: unsupported version {version}"
+            )));
+        }
+        let peak_gflops =
+            doc.get("peak_gflops").and_then(Json::as_f64).ok_or_else(|| bad("peak_gflops"))?;
+        let threads =
+            doc.get("threads").and_then(Json::as_f64).ok_or_else(|| bad("threads"))? as usize;
+        let series = doc.get("series").and_then(Json::as_object).ok_or_else(|| bad("series"))?;
+        let mut table = BTreeMap::new();
+        for (key, v) in series {
+            let overall = parse_stat(v.get("overall").ok_or_else(|| bad("overall"))?)?;
+            let mut buckets = BTreeMap::new();
+            for (b, stat) in
+                v.get("buckets").and_then(Json::as_object).ok_or_else(|| bad("buckets"))?
+            {
+                buckets.insert(b.clone(), parse_stat(stat)?);
+            }
+            table.insert(key.clone(), SeriesFit { overall, buckets });
+        }
+        Ok(CalibrationProfile { peak_gflops, threads: threads.max(1), table })
+    }
+
+    /// Load a profile from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<CalibrationProfile> {
+        Self::parse(&std::fs::read_to_string(path.as_ref())?)
+    }
+
+    /// Write the canonical JSON to a file (creating parent directories).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json_text())?;
+        Ok(())
+    }
+
+    /// Stable content fingerprint: FNV-1a 64 over the canonical JSON
+    /// text, hex-encoded. Any change to the fit changes the fingerprint;
+    /// the plan cache invalidates entries decided under a different one.
+    pub fn fingerprint(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_json_text().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+}
+
+fn stat_json(s: &EffStat) -> Json {
+    Json::Object(vec![
+        ("eff".into(), Json::Number(s.eff)),
+        ("samples".into(), Json::Number(s.samples as f64)),
+    ])
+}
+
+fn parse_stat(v: &Json) -> Result<EffStat> {
+    let bad = |what: &str| Error::Config(format!("calibration profile: bad '{what}'"));
+    Ok(EffStat {
+        eff: v.get("eff").and_then(Json::as_f64).ok_or_else(|| bad("eff"))?,
+        samples: v.get("samples").and_then(Json::as_f64).ok_or_else(|| bad("samples"))? as usize,
+    })
+}
+
+/// One row of the analytic-vs-calibrated comparison over measured layers
+/// (the CI `calibrate-smoke` assertion and the CLI's shift table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanShift {
+    /// Table I layer name.
+    pub layer: String,
+    /// The analytic planner's choice, as an `algo_LAYOUT` series key.
+    pub analytic: String,
+    /// The calibrated planner's choice.
+    pub calibrated: String,
+    /// Fastest measured series for this layer, when timed records exist.
+    pub rank1: Option<String>,
+}
+
+impl PlanShift {
+    /// The calibrated choice differs from the analytic one.
+    pub fn changed(&self) -> bool {
+        self.analytic != self.calibrated
+    }
+
+    /// The calibrated choice agrees with the measurement's rank-1 series.
+    pub fn matches_rank1(&self) -> bool {
+        self.rank1.as_deref() == Some(self.calibrated.as_str())
+    }
+}
+
+/// Compare analytic vs calibrated plans for every Table I layer that
+/// appears in `records`, at `threads` worker threads (incoming
+/// activations assumed NCHW, the zoo default). Each layer is planned at
+/// the geometry its fastest record actually measured
+/// ([`measured_params`] — so rank-1 and the plans talk about the same
+/// problem), falling back to the unscaled layer at batch `batch` when
+/// no measured geometry can be reconstructed. A fit that is read but
+/// ignored produces rows where nothing `changed()` and nothing
+/// `matches_rank1()` — exactly what the CI smoke job rejects.
+pub fn plan_shift(
+    profile: &CalibrationProfile,
+    records: &[Record],
+    batch: usize,
+    threads: usize,
+) -> Vec<PlanShift> {
+    let analytic = Planner { threads, batch, ..Planner::new() };
+    let calibrated = Planner { profile: Some(profile.clone()), ..analytic.clone() };
+    let mut seen: Vec<&'static BenchLayer> = Vec::new();
+    for r in records {
+        if let Some(layer) = layers::by_name(&r.layer) {
+            if !seen.iter().any(|l| l.name == layer.name) {
+                seen.push(layer);
+            }
+        }
+    }
+    seen.iter()
+        .map(|layer| {
+            let fastest = records
+                .iter()
+                .filter(|r| {
+                    r.layer == layer.name && r.best_s.is_finite() && r.best_s > 0.0 && r.flops > 0
+                })
+                .min_by(|x, y| x.best_s.total_cmp(&y.best_s));
+            let p = fastest
+                .and_then(|r| measured_params(layer, r))
+                .unwrap_or_else(|| layer.params(batch));
+            let a = analytic.plan_conv(&p, Layout::Nchw);
+            let c = calibrated.plan_conv(&p, Layout::Nchw);
+            // Normalize the rank-1 label through the same parse the fit
+            // uses, so case-variant records still compare equal to the
+            // canonical series_key the plans report.
+            let rank1 = fastest.map(|r| {
+                match (AlgoKind::parse(&r.algo), Layout::parse(&r.layout)) {
+                    (Some(algo), Some(layout)) => series_key(algo, layout),
+                    _ => r.series(),
+                }
+            });
+            PlanShift {
+                layer: layer.name.to_string(),
+                analytic: series_key(a.algo, a.layout),
+                calibrated: series_key(c.algo, c.layout),
+                rank1,
+            }
+        })
+        .collect()
+}
+
+/// Pre-fill `cache` with `planner`'s decisions for the whole Table I
+/// suite at the planner's batch and thread count, one entry per incoming
+/// layout — the "warm-pack": ship pre-tuned plans so a fresh process
+/// serves the benchmark suite with zero planning work. Returns the
+/// number of entries written. The cache is synced to the planner's
+/// profile fingerprint first (dropping entries decided under a different
+/// cost model), so a later `plan_model` by the same planner finds the
+/// warm entries instead of invalidating them.
+pub fn warm_pack(planner: &Planner, cache: &mut PlanCache) -> usize {
+    cache.sync_profile(&planner.profile_fingerprint());
+    let mut n = 0;
+    for layer in &layers::TABLE1 {
+        let p = layer.params(planner.batch);
+        for prev in Layout::ALL {
+            let key = layer_key(&p, prev, planner.threads);
+            let plan = planner.plan_conv(&p, prev);
+            cache.insert(key, plan);
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(layer: &str, algo: &str, layout: &str, gflops: f64) -> Record {
+        // FLOPs match the named layer's full geometry at batch 8, so
+        // measured_params reconstructs it and bucket classes line up.
+        let flops = layers::by_name(layer).map_or(1_000_000_000, |l| l.params(8).flops());
+        Record {
+            experiment: "fig4".into(),
+            layer: layer.into(),
+            algo: algo.into(),
+            layout: layout.into(),
+            batch: 8,
+            best_s: flops as f64 / (gflops * 1e9),
+            median_s: 1.1 * flops as f64 / (gflops * 1e9),
+            flops,
+            mem_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn shape_classes_split_the_suite() {
+        let conv1 = layers::by_name("conv1").unwrap(); // C=3, 227x227
+        let conv12 = layers::by_name("conv12").unwrap(); // C=512, 7x7
+        let c1 = ShapeClass::of(&conv1.params(8));
+        assert!(!c1.wide_channels && c1.large_spatial);
+        assert_eq!(c1.key(), "narrow_large");
+        let c12 = ShapeClass::of(&conv12.params(8));
+        assert!(c12.wide_channels && !c12.large_spatial);
+        assert_eq!(c12.key(), "wide_small");
+    }
+
+    #[test]
+    fn measured_params_reconstructs_scaled_geometry() {
+        let conv9 = layers::by_name("conv9").unwrap();
+        // A smoke-scale sweep measures conv9 at batch 2, spatial / 8.
+        let scaled = conv9.scaled_params(2, 8);
+        let r =
+            Record { batch: 2, flops: scaled.flops(), ..record("conv9", "im2win", "NHWC", 1.0) };
+        let p = measured_params(conv9, &r).unwrap();
+        assert_eq!((p.n, p.h_in, p.w_in), (scaled.n, scaled.h_in, scaled.w_in));
+        // The measured class is the scaled problem's, not the 56x56 layer's.
+        assert_ne!(ShapeClass::of(&p), ShapeClass::of(&conv9.params(8)));
+        assert_eq!(ShapeClass::of(&p).key(), "wide_small");
+        // FLOPs inconsistent with a square problem refuse to bucket.
+        let bogus = Record { flops: r.flops + 1, ..r };
+        assert!(measured_params(conv9, &bogus).is_none());
+    }
+
+    #[test]
+    fn fit_computes_peak_and_bucketed_efficiencies() {
+        let records = vec![
+            record("conv9", "im2win", "NHWC", 40.0),
+            record("conv9", "direct", "NHWC", 20.0),
+            record("conv12", "im2win", "NHWC", 10.0),
+            // Unusable rows: NaN time (fig5) and composite ablation name.
+            Record { best_s: f64::NAN, ..record("conv9", "im2col", "NCHW", 1.0) },
+            record("conv9", "direct+regblock", "NHWC", 99.0),
+        ];
+        let p = CalibrationProfile::fit(&records, 4).unwrap();
+        assert!((p.peak_gflops - 40.0).abs() < 1e-9);
+        assert_eq!(p.threads, 4);
+        assert_eq!(p.len(), 2); // im2win_NHWC, direct_NHWC
+        // im2win overall: mean(1.0, 0.25) = 0.625.
+        let conv9 = layers::by_name("conv9").unwrap().params(8);
+        let conv12 = layers::by_name("conv12").unwrap().params(8);
+        // conv9 (64ch, 56x56 → wide_large) bucket holds only the 40-GFLOPS row.
+        let e9 = p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &conv9).unwrap();
+        assert!((e9 - 1.0).abs() < 1e-9, "bucketed eff {e9}");
+        // conv12 (wide_small) bucket holds only the 10-GFLOPS row.
+        let e12 = p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &conv12).unwrap();
+        assert!((e12 - 0.25).abs() < 1e-9, "bucketed eff {e12}");
+        // A geometry outside any sampled bucket falls back to the overall.
+        let narrow = ConvParams::new(8, 3, 16, 16, 8, 3, 3, 1).unwrap();
+        let eo = p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &narrow).unwrap();
+        assert!((eo - 0.625).abs() < 1e-9, "overall eff {eo}");
+        // Unmeasured series report nothing.
+        assert!(p.efficiency(AlgoKind::Mec, Layout::Nhwc, &conv9).is_none());
+    }
+
+    #[test]
+    fn fit_rejects_unusable_input() {
+        assert!(CalibrationProfile::fit(&[], 1).is_err());
+        let only_nan = vec![Record { best_s: f64::NAN, ..record("conv9", "im2win", "NHWC", 1.0) }];
+        assert!(CalibrationProfile::fit(&only_nan, 1).is_err());
+    }
+
+    #[test]
+    fn json_round_trip_is_byte_identical() {
+        let records = vec![
+            record("conv9", "im2win", "NHWC", 40.0),
+            record("conv9", "direct", "NCHW", 13.5),
+            record("conv1", "im2col", "CHWN8", 7.25),
+        ];
+        let p = CalibrationProfile::fit(&records, 2).unwrap();
+        let text1 = p.to_json_text();
+        let back = CalibrationProfile::parse(&text1).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json_text(), text1);
+        assert_eq!(back.fingerprint(), p.fingerprint());
+    }
+
+    #[test]
+    fn save_and_load_via_file() {
+        let dir = std::env::temp_dir().join(format!("im2win_calprof_{}", std::process::id()));
+        let path = dir.join("profile.json");
+        let p = CalibrationProfile::fit(&[record("conv9", "im2win", "NHWC", 8.0)], 1).unwrap();
+        p.save(&path).unwrap();
+        let back = CalibrationProfile::load(&path).unwrap();
+        assert_eq!(back, p);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let mut a = CalibrationProfile::new(10.0, 2);
+        a.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.5, 3);
+        let mut b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.6, 3);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(CalibrationProfile::parse("[]").is_err());
+        assert!(CalibrationProfile::parse(r#"{"version": 99}"#).is_err());
+        assert!(CalibrationProfile::parse(
+            r#"{"version": 1, "peak_gflops": 10, "threads": 1, "series": {"x": {}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn warm_pack_covers_the_suite_for_every_incoming_layout() {
+        let planner = Planner { threads: 3, batch: 4, ..Planner::new() };
+        let mut cache = PlanCache::in_memory();
+        let n = warm_pack(&planner, &mut cache);
+        assert_eq!(n, layers::TABLE1.len() * Layout::ALL.len());
+        assert_eq!(cache.len(), n);
+        let p = layers::by_name("conv5").unwrap().params(4);
+        assert!(cache.get(&layer_key(&p, Layout::Nchw, 3)).is_some());
+        // Wrong thread count misses: warm-packs are parallelism-specific.
+        assert!(cache.get(&layer_key(&p, Layout::Nchw, 7)).is_none());
+    }
+
+    #[test]
+    fn plan_shift_reports_rank1_and_changes() {
+        // Make measured reality invert the analytic preference on conv12:
+        // im2col/NCHW measures fastest by a wide margin.
+        let records = vec![
+            record("conv12", "im2col", "NCHW", 100.0),
+            record("conv12", "im2win", "NHWC", 2.0),
+            record("conv12", "direct", "NHWC", 1.0),
+        ];
+        let profile = CalibrationProfile::fit(&records, 1).unwrap();
+        let shifts = plan_shift(&profile, &records, 8, 1);
+        assert_eq!(shifts.len(), 1);
+        let s = &shifts[0];
+        assert_eq!(s.layer, "conv12");
+        assert_eq!(s.rank1.as_deref(), Some("im2col_NCHW"));
+        assert!(
+            s.changed() || s.matches_rank1(),
+            "fit had no effect: analytic={} calibrated={}",
+            s.analytic,
+            s.calibrated
+        );
+        assert_eq!(s.calibrated, "im2col_NCHW");
+    }
+}

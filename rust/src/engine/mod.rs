@@ -9,7 +9,13 @@
 //!   layout-conversion traffic, optionally refined by the empirical
 //!   autotuner;
 //! * [`cache`] — persists decided plans as canonical JSON keyed by
-//!   (geometry, layout, threads), so tuned plans survive restarts;
+//!   (geometry, layout, threads), so tuned plans survive restarts, and
+//!   tracks the calibration-profile fingerprint its entries were decided
+//!   under (a refit invalidates stale plans);
+//! * [`calibrate`] — fits the planner's efficiency table and empirical
+//!   peak from recorded `coordinator` benchmarks (CSV/JSON), persists
+//!   the fit as a canonical-JSON [`CalibrationProfile`], and pre-fills
+//!   plan caches for the Table I suite ([`warm_pack`]);
 //! * [`workspace`] — a keyed lease arena that lets every transform
 //!   buffer, packed filter and activation tensor be allocated once per
 //!   plan and reused across requests;
@@ -40,12 +46,14 @@
 //! ```
 
 pub mod cache;
+pub mod calibrate;
 pub mod planner;
 pub mod server;
 pub mod sharded;
 pub mod workspace;
 
 pub use cache::{layer_key, PlanCache};
+pub use calibrate::{warm_pack, CalibrationProfile, PlanShift, ShapeClass};
 pub use planner::{LayerPlan, Planner};
 pub use server::{Inference, Server, ServerReport, ShardConfig};
 pub use sharded::{ShardedReport, ShardedServer};

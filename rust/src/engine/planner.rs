@@ -26,6 +26,7 @@
 //! persists, so a process restart never re-tunes.
 
 use super::cache::{layer_key, PlanCache};
+use super::calibrate::CalibrationProfile;
 use crate::autotune::tune_w_block;
 use crate::conv::im2col::im2col_matrix_len;
 use crate::conv::im2win::{im2win_dims, DEFAULT_W_BLOCK};
@@ -65,6 +66,13 @@ pub struct Planner {
     pub refine: bool,
     /// Timed repetitions per candidate when refining.
     pub refine_repeats: usize,
+    /// Measured cost model fitted from coordinator benchmark records
+    /// ([`CalibrationProfile`]). When present, the compute term of
+    /// [`Planner::estimate`] uses the measured per-(algorithm × layout)
+    /// efficiency and the empirical peak instead of the analytic
+    /// constants; candidates without measured samples still fall back to
+    /// the analytic model.
+    pub profile: Option<CalibrationProfile>,
 }
 
 impl Default for Planner {
@@ -101,12 +109,27 @@ impl Planner {
             batch: 8,
             refine: false,
             refine_repeats: 3,
+            profile: None,
         }
     }
 
     /// Planner with an explicit machine model (e.g. [`MachineSpec::detect`]).
     pub fn with_spec(spec: MachineSpec) -> Self {
         Planner { spec, ..Self::new() }
+    }
+
+    /// Planner consulting a measured [`CalibrationProfile`] (see
+    /// [`crate::engine::calibrate`]): estimates ground their compute term
+    /// in the fitted efficiency table wherever it has samples.
+    pub fn with_profile(profile: CalibrationProfile) -> Self {
+        Planner { profile: Some(profile), ..Self::new() }
+    }
+
+    /// Fingerprint of the consulted profile (empty when planning with the
+    /// analytic constants) — the value plan-cache entries are keyed
+    /// against via [`PlanCache::sync_profile`].
+    pub fn profile_fingerprint(&self) -> String {
+        self.profile.as_ref().map(CalibrationProfile::fingerprint).unwrap_or_default()
     }
 
     /// Derive the planner for one shard of an `shards`-way sharded server:
@@ -137,42 +160,67 @@ impl Planner {
         out
     }
 
-    /// Analytic cost (seconds) of running `algo` on `layout` for geometry
-    /// `p`, with activations arriving in `prev` layout.
+    /// Cost estimate (seconds) of running `algo` on `layout` for geometry
+    /// `p`, with activations arriving in `prev` layout. With a
+    /// [`CalibrationProfile`], the compute term uses the fitted
+    /// efficiency where the candidate has samples and the analytic
+    /// efficiency constants otherwise — but always over the *empirical*
+    /// peak, so measured and unmeasured candidates rank on one scale.
+    /// Without a profile the nominal analytic model applies unchanged;
+    /// transform and conversion traffic are always analytic over the
+    /// spec's memory bandwidth.
     pub fn estimate(&self, algo: AlgoKind, layout: Layout, p: &ConvParams, prev: Layout) -> f64 {
         const F32: f64 = 4.0;
-        let peak = self.spec.peak_flops_single_core() * self.threads as f64;
         let bw = self.spec.mem_bw_bytes;
 
-        // Base efficiency per algorithm (fraction of peak a well-fed
-        // kernel sustains; calibrated to the relative orderings of the
-        // paper's Fig. 4, not to absolute GFLOPS).
-        let base = match algo {
-            AlgoKind::Im2win => 0.62,
-            AlgoKind::Direct => 0.55,
-            AlgoKind::Im2col => 0.48,
-            AlgoKind::Mec => 0.45,
-            AlgoKind::Naive => 0.02,
+        // Every candidate is scored against the same peak: the profile's
+        // empirical peak when calibrated, the nominal analytic peak
+        // otherwise. Mixing peaks would let a never-measured candidate
+        // win purely because the analytic model is optimistic relative
+        // to what this machine actually sustains.
+        let peak = match &self.profile {
+            Some(prof) => prof.peak_flops_per_thread() * self.threads as f64,
+            None => self.spec.peak_flops_single_core() * self.threads as f64,
         };
-        // Layout quality (paper Fig. 4: NHWC > CHWN8 > CHWN > NCHW for
-        // both direct and im2win).
-        let layout_q = match layout {
-            Layout::Nhwc => 1.0,
-            Layout::Chwn8 => 0.95,
-            Layout::Chwn => 0.80,
-            Layout::Nchw => 0.75,
+        let measured = self
+            .profile
+            .as_ref()
+            .and_then(|prof| prof.efficiency(algo, layout, p));
+        let compute_s = if let Some(eff) = measured {
+            // Measured term: empirical peak derated by the fitted
+            // efficiency (monotone: better measured eff ⇒ lower estimate).
+            p.flops() as f64 / (peak * eff.max(1e-3))
+        } else {
+            // Base efficiency per algorithm (fraction of peak a well-fed
+            // kernel sustains; calibrated to the relative orderings of the
+            // paper's Fig. 4, not to absolute GFLOPS).
+            let base = match algo {
+                AlgoKind::Im2win => 0.62,
+                AlgoKind::Direct => 0.55,
+                AlgoKind::Im2col => 0.48,
+                AlgoKind::Mec => 0.45,
+                AlgoKind::Naive => 0.02,
+            };
+            // Layout quality (paper Fig. 4: NHWC > CHWN8 > CHWN > NCHW for
+            // both direct and im2win).
+            let layout_q = match layout {
+                Layout::Nhwc => 1.0,
+                Layout::Chwn8 => 0.95,
+                Layout::Chwn => 0.80,
+                Layout::Nchw => 0.75,
+            };
+            // Vector-lane utilization of the unit-stride dimension (§III-C):
+            // a 3-channel NHWC first layer fills 3 of 8 lanes, CHWN fills
+            // min(N, 8), NCHW streams the output row.
+            let unit_len = match layout {
+                Layout::Nhwc => p.c_in,
+                Layout::Nchw => p.w_out(),
+                Layout::Chwn | Layout::Chwn8 => p.n,
+            };
+            let lanes = (unit_len.min(8) as f64) / 8.0;
+            let eff = (base * layout_q * (0.25 + 0.75 * lanes)).max(1e-3);
+            p.flops() as f64 / (peak * eff)
         };
-        // Vector-lane utilization of the unit-stride dimension (§III-C):
-        // a 3-channel NHWC first layer fills 3 of 8 lanes, CHWN fills
-        // min(N, 8), NCHW streams the output row.
-        let unit_len = match layout {
-            Layout::Nhwc => p.c_in,
-            Layout::Nchw => p.w_out(),
-            Layout::Chwn | Layout::Chwn8 => p.n,
-        };
-        let lanes = (unit_len.min(8) as f64) / 8.0;
-        let eff = (base * layout_q * (0.25 + 0.75 * lanes)).max(1e-3);
-        let compute_s = p.flops() as f64 / (peak * eff);
 
         // Transform traffic: bytes written to scratch plus re-read by the
         // consuming kernel (≈ 2× the scratch size), plus one input read.
@@ -234,7 +282,14 @@ impl Planner {
     /// and the cache entry is **upgraded** in place. A tuned entry is never
     /// re-tuned, so the second process run of a refining planner does no
     /// measurement at all.
+    ///
+    /// Before any lookup the cache is synced to this planner's
+    /// [`Planner::profile_fingerprint`]: entries decided under a
+    /// different calibration profile (or under the analytic constants
+    /// when this planner is calibrated, and vice versa) are invalidated
+    /// and re-planned rather than silently reused.
     pub fn plan_model(&self, model: &Model, cache: &mut PlanCache) -> Result<Vec<LayerPlan>> {
+        cache.sync_profile(&self.profile_fingerprint());
         let mut plans = Vec::new();
         let mut prev = model.layout();
         for op in model.ops() {
@@ -395,6 +450,47 @@ mod tests {
         let again = refiner.plan_model(&model, &mut cache).unwrap();
         assert_eq!(again, refined);
         assert_eq!(cache.hits(), hits_before + refined.len());
+    }
+
+    #[test]
+    fn profile_overrides_the_compute_term_where_measured() {
+        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let analytic = Planner::new();
+        let mut profile = CalibrationProfile::new(50.0, analytic.threads);
+        profile.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.9, 4);
+        let per_thread_peak = profile.peak_flops_per_thread();
+        let calibrated = Planner { profile: Some(profile), ..Planner::new() };
+        // Measured candidate: estimate moves off the analytic number.
+        let a = analytic.estimate(AlgoKind::Im2win, Layout::Nhwc, &p, Layout::Nhwc);
+        let c = calibrated.estimate(AlgoKind::Im2win, Layout::Nhwc, &p, Layout::Nhwc);
+        assert_ne!(a, c, "profile was read but ignored");
+        // Unmeasured candidate: the analytic efficiency constants apply,
+        // but grounded in the empirical peak so every candidate ranks on
+        // one scale. Direct on its own layout is pure compute (no
+        // transform, no conversion), so est × peak is peak-invariant.
+        let a2 = analytic.estimate(AlgoKind::Direct, Layout::Nchw, &p, Layout::Nchw);
+        let c2 = calibrated.estimate(AlgoKind::Direct, Layout::Nchw, &p, Layout::Nchw);
+        let peak_a = analytic.spec.peak_flops_single_core() * analytic.threads as f64;
+        let peak_c = per_thread_peak * calibrated.threads as f64;
+        let (lhs, rhs) = (a2 * peak_a, c2 * peak_c);
+        assert!((lhs - rhs).abs() <= 1e-9 * lhs, "analytic eff not preserved: {lhs} vs {rhs}");
+        // Fingerprints: empty without a profile, stable hex with one.
+        assert_eq!(analytic.profile_fingerprint(), "");
+        assert_eq!(calibrated.profile_fingerprint().len(), 16);
+    }
+
+    #[test]
+    fn estimate_is_monotone_in_measured_efficiency() {
+        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let mut last = f64::INFINITY;
+        for eff in [0.05, 0.1, 0.2, 0.4, 0.8] {
+            let mut profile = CalibrationProfile::new(40.0, 1);
+            profile.set_series(AlgoKind::Direct, Layout::Nhwc, eff, 2);
+            let planner = Planner { profile: Some(profile), threads: 1, ..Planner::new() };
+            let est = planner.estimate(AlgoKind::Direct, Layout::Nhwc, &p, Layout::Nhwc);
+            assert!(est < last, "eff {eff}: estimate {est} did not drop below {last}");
+            last = est;
+        }
     }
 
     #[test]

@@ -9,9 +9,12 @@
 //! im2win bench scaling --algo direct|im2win [--scale S] [--layers ...]
 //! im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
 //! im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win]
+//! im2win calibrate [--from report.csv|--run] [--out profile.json] [--warm-pack]
+//!                  [--assert-shift]         # fit the planner from measurements
 //! im2win plan  [--model tinynet|vgg] [--batch N] [--cache plans.json] [--refine]
+//!              [--profile profile.json]
 //! im2win serve [--model tinynet|vgg] [--requests N] [--shards N] [--deadline-us D]
-//!              [--max-batch B] [--pin] [--cache plans.json]
+//!              [--max-batch B] [--pin] [--cache plans.json] [--profile profile.json]
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
 //! ```
@@ -23,8 +26,13 @@ use im2win::autotune::tune_w_block;
 use im2win::bench_harness::fmt_time;
 use im2win::config::{ExperimentConfig, Scale};
 use im2win::conv::AlgoKind;
-use im2win::coordinator::{experiments, format_table, layers, summary, write_csv, write_json};
-use im2win::engine::{Engine, PlanCache, Planner, ShardConfig, ShardedServer};
+use im2win::coordinator::{
+    experiments, format_table, layers, read_csv, read_json, summary, write_csv, write_json,
+    Record,
+};
+use im2win::engine::{
+    calibrate, CalibrationProfile, Engine, PlanCache, Planner, ShardConfig, ShardedServer,
+};
 use im2win::model::zoo;
 use im2win::prelude::*;
 use im2win::roofline::{MachineSpec, Roofline};
@@ -50,7 +58,8 @@ struct Flags {
     pairs: Vec<(String, String)>,
 }
 
-const BOOL_FLAGS: [&str; 4] = ["paper", "refine", "detect", "pin"];
+const BOOL_FLAGS: [&str; 7] =
+    ["paper", "refine", "detect", "pin", "run", "warm-pack", "assert-shift"];
 
 impl Flags {
     fn parse(args: &[String]) -> CliResult<Flags> {
@@ -157,6 +166,7 @@ fn run() -> CliResult<()> {
             }
         }
         "autotune" => autotune(&Flags::parse(rest)?),
+        "calibrate" => calibrate_cmd(&Flags::parse(rest)?),
         "plan" => plan(&Flags::parse(rest)?),
         "serve" => serve(&Flags::parse(rest)?),
         "roofline" => roofline_cmd(&Flags::parse(rest)?),
@@ -181,11 +191,16 @@ USAGE:
   im2win bench scaling  [--algo direct|im2win] [--scale S] [--layers ...]
   im2win bench ablation [--layer conv9] [--layout nhwc] [--scale S]
   im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win] [--scale S]
+  im2win calibrate [--from report.csv|report.json | --run | --profile profile.json]
+                  [--out profile.json] [--scale S] [--layers conv5,conv9]
+                  [--batch N] [--threads T] [--warm-pack] [--cache plans.json]
+                  [--assert-shift]
   im2win plan     [--model tinynet|vgg] [--edge N] [--batch N] [--threads T]
                   [--cache plans.json] [--refine] [--detect]
+                  [--profile profile.json]
   im2win serve    [--model tinynet|vgg] [--edge N] [--requests N] [--shards N]
                   [--deadline-us D] [--max-batch B] [--pin] [--batch N]
-                  [--threads T] [--cache plans.json]
+                  [--threads T] [--cache plans.json] [--profile profile.json]
   im2win roofline [--paper]
   im2win oracle   [--layer conv9]      (requires a build with --features pjrt-sys)
 ";
@@ -358,6 +373,150 @@ fn autotune(flags: &Flags) -> CliResult<()> {
     Ok(())
 }
 
+/// `im2win calibrate` — fit a measured cost model from coordinator
+/// benchmark records and persist it as a [`CalibrationProfile`]:
+///
+/// * `--from report.csv|report.json` reads existing records;
+/// * `--run` (default when no source is given) runs a bounded
+///   coordinator sweep itself (`--scale`, default smoke; `--layers`,
+///   default conv5,conv9,conv12);
+/// * `--profile profile.json` loads an already-fitted profile instead
+///   (the three sources are mutually exclusive);
+/// * `--out` picks the profile destination (default calibration.json);
+/// * `--assert-shift` exits nonzero unless the fit provably influences
+///   planning (some geometry's plan changed vs the analytic model or
+///   matches the measurement's rank-1 series) — the CI smoke gate;
+/// * `--warm-pack` pre-fills the plan cache (`--cache`, default
+///   plans.json) with calibrated plans for the whole Table I suite.
+fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
+    flags.apply_threads();
+    let threads = im2win::parallel::configured_threads();
+    let batch = flags.usize_or("batch", 8)?;
+    let sources = [flags.get("profile"), flags.get("from"), flags.get("run")];
+    if sources.iter().filter(|s| s.is_some()).count() > 1 {
+        return Err(err("calibrate: --profile, --from and --run are mutually exclusive"));
+    }
+
+    // 1. Obtain records (and a profile: loaded, or fitted from records).
+    let mut records: Vec<Record> = Vec::new();
+    let profile = if let Some(path) = flags.get("profile") {
+        let profile = CalibrationProfile::load(path)
+            .map_err(|e| err(format!("loading calibration profile {path}: {e}")))?;
+        println!("loaded profile {path} (fingerprint {})", profile.fingerprint());
+        profile
+    } else {
+        if let Some(path) = flags.get("from") {
+            let loaded =
+                if path.ends_with(".json") { read_json(path) } else { read_csv(path) };
+            records = loaded.map_err(|e| err(format!("reading records {path}: {e}")))?;
+            println!("read {} records from {path}", records.len());
+            // The report schemas carry no thread count; the fit assumes
+            // the current configuration unless told otherwise.
+            println!(
+                "note: assuming records were measured with {threads} threads \
+                 (pass --threads to match the recording run)"
+            );
+        } else {
+            // Bounded sweep: smoke scale and a three-layer spread of the
+            // suite (channel-starved, mid, channel-rich) unless told
+            // otherwise.
+            let scale = match flags.get("scale") {
+                None => Scale::Smoke,
+                Some(s) => Scale::parse(s).ok_or_else(|| err(format!("unknown scale '{s}'")))?,
+            };
+            let mut cfg = ExperimentConfig::paper_matrix(scale);
+            let layers = flags.layers();
+            cfg.layers = if layers.is_empty() {
+                vec!["conv5".into(), "conv9".into(), "conv12".into()]
+            } else {
+                layers
+            };
+            println!(
+                "running calibration sweep: scale={}, layers={}, {threads} threads",
+                scale.name(),
+                cfg.layers.join(",")
+            );
+            records = experiments::fig4(&cfg)?;
+            println!("measured {} cells", records.len());
+        }
+        let profile = CalibrationProfile::fit(&records, threads)?;
+        let out = flags.get("out").unwrap_or("calibration.json");
+        profile.save(out)?;
+        println!(
+            "fitted profile: {} series, empirical peak {:.2} GFLOPS ({} threads)",
+            profile.len(),
+            profile.peak_gflops,
+            profile.threads
+        );
+        println!("wrote {out} (fingerprint {})", profile.fingerprint());
+        profile
+    };
+
+    // 2. Report the fit.
+    println!("\n{:<16} {:>8} {:>8}  buckets", "series", "eff", "samples");
+    for (key, fit) in profile.series() {
+        let buckets: Vec<String> = fit
+            .buckets
+            .iter()
+            .map(|(b, s)| format!("{b}={:.2}({})", s.eff, s.samples))
+            .collect();
+        println!(
+            "{key:<16} {:>8.3} {:>8}  {}",
+            fit.overall.eff,
+            fit.overall.samples,
+            buckets.join(" ")
+        );
+    }
+
+    // 3. Show (and optionally assert) the fit's effect on planning.
+    if !records.is_empty() {
+        let shifts = calibrate::plan_shift(&profile, &records, batch, threads);
+        println!("\n{:<8} {:<16} {:<16} {:<16}", "layer", "analytic", "calibrated", "measured#1");
+        for s in &shifts {
+            println!(
+                "{:<8} {:<16} {:<16} {:<16}{}",
+                s.layer,
+                s.analytic,
+                s.calibrated,
+                s.rank1.as_deref().unwrap_or("-"),
+                if s.changed() { "  *changed*" } else { "" }
+            );
+        }
+        let effective = shifts.iter().any(|s| s.changed() || s.matches_rank1());
+        if effective {
+            println!("\ncalibration influences planning (a plan changed or matches rank-1)");
+        } else {
+            println!("\ncalibration did not change any plan and matches no rank-1 measurement");
+            if flags.get("assert-shift").is_some() {
+                return Err(err("calibration fit is read but ignored (--assert-shift)"));
+            }
+        }
+    } else if flags.get("assert-shift").is_some() {
+        return Err(err("--assert-shift needs records (--run or --from), not --profile"));
+    }
+
+    // 4. Warm-pack: pre-fill the plan cache for the Table I suite.
+    if flags.get("warm-pack").is_some() {
+        let cache_path = flags.get("cache").unwrap_or("plans.json");
+        let mut cache = PlanCache::load(cache_path)?;
+        let planner =
+            Planner { profile: Some(profile.clone()), threads, batch, ..Planner::new() };
+        let dropped = cache.sync_profile(&planner.profile_fingerprint());
+        if dropped > 0 {
+            println!("warm-pack: invalidated {dropped} stale entries");
+        }
+        let n = calibrate::warm_pack(&planner, &mut cache);
+        cache.save()?;
+        println!(
+            "warm-packed {n} plans ({} layers x {} incoming layouts, batch {batch}, \
+             {threads} threads) into {cache_path}",
+            layers::TABLE1.len(),
+            Layout::ALL.len()
+        );
+    }
+    Ok(())
+}
+
 /// Shared by `plan`/`serve`: a zoo model with placeholder algorithm and
 /// layout choices (the engine decides the real ones).
 fn build_model(flags: &Flags) -> CliResult<im2win::model::Model> {
@@ -381,10 +540,30 @@ fn planner_from_flags(flags: &Flags) -> CliResult<(Planner, PlanCache)> {
     planner.refine = flags.get("refine").is_some();
     planner.batch = flags.usize_or("batch", 8)?;
     planner.threads = im2win::parallel::configured_threads();
-    let cache = match flags.get("cache") {
+    if let Some(path) = flags.get("profile") {
+        let profile = CalibrationProfile::load(path)
+            .map_err(|e| err(format!("loading calibration profile {path}: {e}")))?;
+        println!(
+            "calibration profile {path}: {} series, peak {:.1} GFLOPS, fingerprint {}",
+            profile.len(),
+            profile.peak_gflops,
+            profile.fingerprint()
+        );
+        planner.profile = Some(profile);
+    }
+    let mut cache = match flags.get("cache") {
         Some(path) => PlanCache::load(path)?,
         None => PlanCache::in_memory(),
     };
+    // Entries decided under a different cost model are stale; drop them
+    // up front so the run re-plans (plan_model would do the same, but
+    // syncing here lets the CLI report it).
+    let dropped = cache.sync_profile(&planner.profile_fingerprint());
+    if dropped > 0 {
+        println!(
+            "plan cache: invalidated {dropped} stale entries (cost-model fingerprint changed)"
+        );
+    }
     Ok((planner, cache))
 }
 

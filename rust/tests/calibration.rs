@@ -1,0 +1,232 @@
+//! Integration tests for measured cost-model calibration: fitting a
+//! [`CalibrationProfile`] from coordinator reports (CSV and JSON), the
+//! profile provably changing the planner's decisions, fingerprint-driven
+//! plan-cache invalidation end to end through files, warm-packing the
+//! Table I suite, and the monotonicity property of calibrated estimates.
+
+use im2win::config::{ExperimentConfig, Scale};
+use im2win::conv::AlgoKind;
+use im2win::coordinator::{by_name, experiments, read_csv, read_json, write_csv, write_json};
+use im2win::coordinator::{Record, TABLE1};
+use im2win::engine::{layer_key, warm_pack, CalibrationProfile, PlanCache, Planner};
+use im2win::model::zoo;
+use im2win::prelude::*;
+use im2win::testutil::random_problems;
+
+fn temp_dir(stem: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("im2win_calib_{}_{stem}", std::process::id()))
+}
+
+/// A timed record with dyadic best_s so the CSV writer's 7-significant-
+/// digit float formatting is exact and CSV/JSON round trips agree bit
+/// for bit.
+fn record(layer: &str, algo: &str, layout: &str, best_s: f64) -> Record {
+    Record {
+        experiment: "fig4".into(),
+        layer: layer.into(),
+        algo: algo.into(),
+        layout: layout.into(),
+        batch: 8,
+        best_s,
+        median_s: best_s * 2.0,
+        flops: 1_000_000_000,
+        mem_bytes: 2048,
+    }
+}
+
+/// Records that invert the analytic preference on conv12: im2col/NCHW
+/// measures an order of magnitude faster than the im2win/direct cells.
+fn conv12_upset() -> Vec<Record> {
+    vec![
+        record("conv12", "im2col", "NCHW", 0.0078125), // 128 GFLOPS
+        record("conv12", "im2win", "NHWC", 0.5),       // 2 GFLOPS
+        record("conv12", "direct", "NHWC", 0.5),
+    ]
+}
+
+#[test]
+fn fit_agrees_between_csv_and_json_reports() {
+    let dir = temp_dir("formats");
+    let records = vec![
+        record("conv9", "im2win", "NHWC", 0.0625),
+        record("conv9", "direct", "NHWC", 0.125),
+        record("conv12", "im2col", "NCHW", 0.25),
+        record("conv1", "im2win", "CHWN8", 0.5),
+    ];
+    let csv_path = dir.join("r.csv");
+    let json_path = dir.join("r.json");
+    write_csv(&csv_path, &records).unwrap();
+    write_json(&json_path, &records).unwrap();
+    let from_csv = CalibrationProfile::fit(&read_csv(&csv_path).unwrap(), 2).unwrap();
+    let from_json = CalibrationProfile::fit(&read_json(&json_path).unwrap(), 2).unwrap();
+    assert_eq!(from_csv, from_json);
+    assert_eq!(from_csv.fingerprint(), from_json.fingerprint());
+    assert_eq!(from_csv.to_json_text(), from_json.to_json_text());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn profile_save_load_round_trips_byte_identically() {
+    // Like the plan cache: save → load → save is byte-identical.
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("profile.json");
+    let profile = CalibrationProfile::fit(&conv12_upset(), 3).unwrap();
+    profile.save(&path).unwrap();
+    let text1 = std::fs::read_to_string(&path).unwrap();
+    let back = CalibrationProfile::load(&path).unwrap();
+    back.save(&path).unwrap();
+    let text2 = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text1, text2);
+    assert_eq!(back, profile);
+    assert_eq!(back.fingerprint(), profile.fingerprint());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn calibration_provably_changes_a_plan() {
+    // The acceptance check: the same geometry plans differently under
+    // the fitted model than under the analytic constants.
+    let profile = CalibrationProfile::fit(&conv12_upset(), 1).unwrap();
+    let analytic = Planner { threads: 1, batch: 8, ..Planner::new() };
+    let calibrated = Planner { profile: Some(profile), ..analytic.clone() };
+    let p = by_name("conv12").unwrap().params(8);
+    let a = analytic.plan_conv(&p, Layout::Nchw);
+    let c = calibrated.plan_conv(&p, Layout::Nchw);
+    assert_ne!(
+        (a.algo, a.layout),
+        (c.algo, c.layout),
+        "measured upset must change the plan (analytic {}/{}, calibrated {}/{})",
+        a.algo,
+        a.layout,
+        c.algo,
+        c.layout
+    );
+    // And it changes it *toward* the measurement's rank-1 cell.
+    assert_eq!((c.algo, c.layout), (AlgoKind::Im2col, Layout::Nchw));
+}
+
+#[test]
+fn estimate_is_monotone_in_measured_efficiency_across_problems() {
+    // Property: better measured efficiency ⇒ strictly lower estimated
+    // cost, all else equal, for every geometry and candidate series.
+    for p in random_problems(8, 77) {
+        for (algo, layout) in [
+            (AlgoKind::Im2win, Layout::Nhwc),
+            (AlgoKind::Direct, Layout::Chwn8),
+            (AlgoKind::Im2col, Layout::Nchw),
+        ] {
+            let mut last = f64::INFINITY;
+            for eff in [0.02, 0.1, 0.3, 0.6, 0.95] {
+                let mut profile = CalibrationProfile::new(25.0, 2);
+                profile.set_series(algo, layout, eff, 1);
+                let planner = Planner { profile: Some(profile), threads: 2, ..Planner::new() };
+                let est = planner.estimate(algo, layout, &p, layout);
+                assert!(
+                    est < last,
+                    "{algo} {layout} on {p}: eff {eff} gave {est}, not below {last}"
+                );
+                last = est;
+            }
+        }
+    }
+}
+
+#[test]
+fn fingerprint_change_invalidates_persisted_plans_end_to_end() {
+    let dir = temp_dir("invalidate");
+    let path = dir.join("plans.json");
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 5).unwrap();
+
+    // 1. Analytic planning fills and persists the cache.
+    let analytic = Planner::new();
+    let mut cache = PlanCache::load(&path).unwrap();
+    let a_plans = analytic.plan_model(&model, &mut cache).unwrap();
+    assert_eq!(cache.profile_fingerprint(), "");
+    cache.save().unwrap();
+
+    // 2. A calibrated planner must not reuse analytic decisions: the
+    //    fingerprint mismatch drops every entry and re-plans.
+    let mut profile = CalibrationProfile::new(20.0, analytic.threads);
+    profile.set_series(AlgoKind::Im2col, Layout::Nchw, 0.95, 4);
+    profile.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.05, 4);
+    let calibrated = Planner { profile: Some(profile), ..Planner::new() };
+    let mut cache2 = PlanCache::load(&path).unwrap();
+    assert_eq!(cache2.len(), a_plans.len());
+    let c_plans = calibrated.plan_model(&model, &mut cache2).unwrap();
+    assert_eq!(cache2.hits(), 0, "stale analytic plans were reused");
+    assert_eq!(cache2.misses(), c_plans.len());
+    assert_eq!(cache2.profile_fingerprint(), calibrated.profile_fingerprint());
+    cache2.save().unwrap();
+
+    // 3. Same profile again: pure hits, identical plans.
+    let mut cache3 = PlanCache::load(&path).unwrap();
+    let again = calibrated.plan_model(&model, &mut cache3).unwrap();
+    assert_eq!(again, c_plans);
+    assert_eq!(cache3.hits(), c_plans.len());
+    assert_eq!(cache3.misses(), 0);
+
+    // 4. Going back to the analytic constants invalidates once more.
+    let mut cache4 = PlanCache::load(&path).unwrap();
+    analytic.plan_model(&model, &mut cache4).unwrap();
+    assert_eq!(cache4.hits(), 0);
+    assert_eq!(cache4.profile_fingerprint(), "");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_pack_persists_plans_for_the_whole_suite() {
+    let dir = temp_dir("warmpack");
+    let path = dir.join("plans.json");
+    let profile = CalibrationProfile::fit(&conv12_upset(), 2).unwrap();
+    let planner = Planner { profile: Some(profile), threads: 2, batch: 8, ..Planner::new() };
+    let mut cache = PlanCache::load(&path).unwrap();
+    cache.sync_profile(&planner.profile_fingerprint());
+    let n = warm_pack(&planner, &mut cache);
+    assert_eq!(n, TABLE1.len() * Layout::ALL.len());
+    cache.save().unwrap();
+
+    // A fresh process (same profile) finds every Table I decision warm.
+    let mut warm = PlanCache::load(&path).unwrap();
+    warm.sync_profile(&planner.profile_fingerprint());
+    assert_eq!(warm.len(), n, "fingerprint sync must keep warm-packed plans");
+    for layer in &TABLE1 {
+        let p = layer.params(planner.batch);
+        for prev in Layout::ALL {
+            let plan = warm.get(&layer_key(&p, prev, planner.threads));
+            assert!(plan.is_some(), "{}: missing warm plan", layer.name);
+        }
+    }
+    assert_eq!(warm.misses(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fit_from_a_real_smoke_sweep_grounds_the_planner() {
+    // End to end on real kernels: a tiny coordinator sweep → fit →
+    // the profile covers every measured series and feeds estimates.
+    let mut cfg = ExperimentConfig::paper_matrix(Scale::Smoke);
+    cfg.layers = vec!["conv9".into()];
+    let records = experiments::fig4(&cfg).unwrap();
+    let threads = im2win::parallel::configured_threads();
+    let profile = CalibrationProfile::fit(&records, threads).unwrap();
+    assert!(profile.peak_gflops > 0.0);
+    let best = records.iter().map(Record::gflops).fold(f64::MIN, f64::max);
+    assert!((profile.peak_gflops - best).abs() < 1e-9);
+    let p = by_name("conv9").unwrap().params(8);
+    for r in &records {
+        let algo = AlgoKind::parse(&r.algo).unwrap();
+        let layout = Layout::parse(&r.layout).unwrap();
+        let eff = profile.efficiency(algo, layout, &p);
+        assert!(eff.is_some(), "{}: measured series missing from fit", r.series());
+        assert!(eff.unwrap() > 0.0 && eff.unwrap() <= 1.0);
+    }
+    // The calibrated planner consults the fit (estimates move).
+    let analytic = Planner { threads, batch: 8, ..Planner::new() };
+    let calibrated = Planner { profile: Some(profile), ..analytic.clone() };
+    let moved = records.iter().any(|r| {
+        let algo = AlgoKind::parse(&r.algo).unwrap();
+        let layout = Layout::parse(&r.layout).unwrap();
+        analytic.estimate(algo, layout, &p, layout) != calibrated.estimate(algo, layout, &p, layout)
+    });
+    assert!(moved, "no estimate consulted the measured fit");
+}
