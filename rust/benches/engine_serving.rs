@@ -1,5 +1,6 @@
 //! Serving-path benchmark: sustained inferences/sec through the planned
-//! engine at batch sizes 1 / 8 / 32, the micro-batching server's
+//! engine at batch sizes 1 / 8 / 32, the prepacked + fused bias/ReLU
+//! epilogue path on the biased tinynet, the micro-batching server's
 //! end-to-end throughput, and the sharded deadline-batching front at 2
 //! shards. Future PRs touching the engine, workspace, server or dispatcher
 //! compare against these numbers to catch serving regressions.
@@ -78,6 +79,37 @@ fn main() {
         engine_rows.push((format!("batch_{batch}"), Json::Number(r.inf_per_s())));
     }
 
+    // Prepacked + fused epilogue path: the biased tinynet routes every
+    // conv's bias and following ReLU through the kernels' store
+    // epilogues, with filters packed once at plan time. This is the
+    // serving hot path the check_bench gate tracks for fusion
+    // regressions.
+    let model = zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 7).expect("biased tinynet");
+    let mut cache = PlanCache::in_memory();
+    let mut fused_engine =
+        Engine::plan(model, &Planner::new(), &mut cache).expect("engine planning succeeds");
+    let mut fused_rows: Vec<(String, Json)> = Vec::new();
+    println!(
+        "\nprepacked+fused engine.forward_into throughput (biased tinynet, {} fused ReLUs):",
+        fused_engine.fused_relu_count()
+    );
+    for batch in BATCHES {
+        let x = Tensor4::random(Dims::new(batch, 3, 32, 32), Layout::Nchw, batch as u64);
+        let mut out = Tensor4::zeros(
+            fused_engine.output_dims(batch).expect("output dims"),
+            Layout::Nchw,
+        );
+        let r = measure_throughput(batch, iters, || {
+            fused_engine.forward_into(&x, &mut out).expect("fused forward succeeds");
+        });
+        println!(
+            "  batch {batch:>3}: {:>8.1} inf/s   ({} per batched call)",
+            r.inf_per_s(),
+            fmt_time(r.latency_s())
+        );
+        fused_rows.push((format!("batch_{batch}"), Json::Number(r.inf_per_s())));
+    }
+
     // End-to-end micro-batching server: queue + coalesce + scatter.
     let requests = 32 * iters;
     let server = Server::start(engine, 8);
@@ -154,6 +186,7 @@ fn main() {
                 Json::Number(im2win::parallel::global().threads() as f64),
             ),
             ("engine_inf_per_s", Json::Object(engine_rows)),
+            ("prepacked", Json::Object(fused_rows)),
             (
                 "server",
                 Json::object(vec![

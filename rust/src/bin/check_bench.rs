@@ -5,8 +5,9 @@
 //! check_bench <current.json> <baseline.json> [--fail-below R] [--warn-below R] [--update]
 //! ```
 //!
-//! Metrics compared (higher is better): every `engine_inf_per_s.*` row
-//! plus `server.inf_per_s` and `sharded.inf_per_s` — the headline
+//! Metrics compared (higher is better): every `engine_inf_per_s.*` and
+//! `prepacked.*` row (the prepacked-filter + fused bias/ReLU epilogue
+//! path) plus `server.inf_per_s` and `sharded.inf_per_s` — the headline
 //! numbers `cargo bench --bench engine_serving -- --json` emits. A
 //! metric below `fail-below × baseline` (default 0.5) fails the gate;
 //! below `warn-below × baseline` (default 0.8) warns. A metric present
@@ -107,10 +108,12 @@ fn load(path: &str) -> Result<Json, String> {
 /// The throughput metrics a serving-bench document exposes (name, value).
 fn metrics(doc: &Json) -> Vec<(String, f64)> {
     let mut out = Vec::new();
-    if let Some(rows) = doc.get("engine_inf_per_s").and_then(Json::as_object) {
-        for (k, v) in rows {
-            if let Some(n) = v.as_f64() {
-                out.push((format!("engine_inf_per_s.{k}"), n));
+    for section in ["engine_inf_per_s", "prepacked"] {
+        if let Some(rows) = doc.get(section).and_then(Json::as_object) {
+            for (k, v) in rows {
+                if let Some(n) = v.as_f64() {
+                    out.push((format!("{section}.{k}"), n));
+                }
             }
         }
     }

@@ -10,7 +10,7 @@
 //! 8-lane slice drags a full `N`-wide cache footprint per (c,h,w) access,
 //! so cache utilization collapses as `N` grows — fixed by CHWN8.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::{F32x8, LANES};
 use crate::tensor::Tensor4;
@@ -22,7 +22,14 @@ const MAX_BLOCK: usize = 3;
 /// behaviour, the effect the paper isolates.
 const CB: usize = 4;
 
-pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
@@ -86,8 +93,9 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                 for b in 0..bl {
                     for cc in 0..cols {
                         // SAFETY: disjoint (cb, ho) output rows per thread.
+                        // Lanes share the output channel: vector epilogue.
                         unsafe {
-                            acc[b][cc]
+                            ep.apply_vec(c0 + cc, acc[b][cc])
                                 .store(optr.at((c0 + cc) * o_c + ho * o_h + (wo + b) * o_w + n0))
                         };
                     }
@@ -111,7 +119,8 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                     }
                     for (b, a) in acc.iter().enumerate().take(bl) {
                         unsafe {
-                            *optr.at((c0 + cc) * o_c + ho * o_h + (wo + b) * o_w + nn) = *a
+                            *optr.at((c0 + cc) * o_c + ho * o_h + (wo + b) * o_w + nn) =
+                                ep.apply(c0 + cc, *a)
                         };
                     }
                 }

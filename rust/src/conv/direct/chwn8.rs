@@ -9,7 +9,8 @@
 //! Lanes padded beyond the logical batch hold zeros on input and produce
 //! zeros on output.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::epilogue::lane_mask;
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::F32x8;
 use crate::tensor::{CHWN8_BLOCK, Tensor4};
@@ -21,7 +22,14 @@ const MAX_BLOCK: usize = 3;
 /// MAX_BLOCK·CB FMAs, keeping the FMA ports saturated.
 const CB: usize = 4;
 
-pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
@@ -30,6 +38,10 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
     let w_block = w_block.clamp(1, MAX_BLOCK);
     let nblocks = p.n.div_ceil(CHWN8_BLOCK);
     const B: usize = CHWN8_BLOCK;
+    // Padding lanes of the final batch block compute zeros; mask the
+    // epilogued stores there so bias/ReLU keeps them at zero.
+    let tail_valid = p.n - (nblocks - 1) * B;
+    let mask_tail = tail_valid < B && !ep.is_none();
 
     // Input [N/8][Ci][Hi][Wi][8]; output [N/8][Co][Ho][Wo][8].
     let i_w = B;
@@ -60,6 +72,7 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
     parallel::current().parallel_for_coalesced(nblocks, h_o, |nb, ho| {
         let in_nb = nb * i_nb;
         let out_nb = nb * o_nb + ho * o_h;
+        let mask = if mask_tail && nb + 1 == nblocks { Some(lane_mask(tail_valid)) } else { None };
 
         // Main tiles: CB output channels × w_block output columns.
         let mut c = 0;
@@ -96,9 +109,11 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                 for b in 0..bl {
                     for cc in 0..CB {
                         // SAFETY: disjoint (nb, ho) regions per thread.
-                        unsafe {
-                            acc[b][cc].store(optr.at(out_nb + (c + cc) * o_c + (wo + b) * o_w))
-                        };
+                        let mut v = ep.apply_vec(c + cc, acc[b][cc]);
+                        if let Some(mk) = mask {
+                            v = v.mul(mk);
+                        }
+                        unsafe { v.store(optr.at(out_nb + (c + cc) * o_c + (wo + b) * o_w)) };
                     }
                 }
                 wo += bl;
@@ -131,7 +146,11 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                 }
                 for (b, a) in acc.iter().enumerate().take(bl) {
                     // SAFETY: disjoint (nb, ho) regions per thread.
-                    unsafe { a.store(optr.at(out_row + (wo + b) * o_w)) };
+                    let mut v = ep.apply_vec(c, *a);
+                    if let Some(mk) = mask {
+                        v = v.mul(mk);
+                    }
+                    unsafe { v.store(optr.at(out_row + (wo + b) * o_w)) };
                 }
                 wo += bl;
             }

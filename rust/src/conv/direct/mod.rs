@@ -21,7 +21,8 @@ mod chwn8;
 mod nchw;
 mod nhwc;
 
-use super::{check_geometry, ConvAlgorithm, ConvParams};
+use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
+use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::tensor::{Layout, Tensor4};
 
@@ -79,14 +80,50 @@ impl ConvAlgorithm for DirectConv {
                 input.layout()
             )));
         }
-        out.data_mut().fill(0.0);
-        match input.layout() {
-            Layout::Nchw => nchw::run(input, filter, p, out, self.w_block),
-            Layout::Nhwc => nhwc::run(input, filter, p, out, self.w_block),
-            Layout::Chwn => chwn::run(input, filter, p, out, self.w_block),
-            Layout::Chwn8 => chwn8::run(input, filter, p, out, self.w_block),
-        }
+        // No output zeroing: every kernel stores each output element
+        // exactly once from register accumulators.
+        run_kernels(input, filter, p, out, self.w_block, Epilogue::None);
         Ok(())
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PackedFilter,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        // Direct convolution needs no scratch; the pack holds the filter
+        // tensor in the execution layout.
+        let _ = ws;
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        let filter = packed
+            .tensor()
+            .ok_or_else(|| Error::Config("direct pack holds no filter tensor".into()))?;
+        run_kernels(input, filter, p, out, self.w_block, ep);
+        Ok(())
+    }
+}
+
+/// Dispatch to the layout kernel, fusing `ep` into the accumulator
+/// stores.
+fn run_kernels(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
+    match input.layout() {
+        Layout::Nchw => nchw::run(input, filter, p, out, w_block, ep),
+        Layout::Nhwc => nhwc::run(input, filter, p, out, w_block, ep),
+        Layout::Chwn => chwn::run(input, filter, p, out, w_block, ep),
+        Layout::Chwn8 => chwn8::run(input, filter, p, out, w_block, ep),
     }
 }
 

@@ -8,12 +8,19 @@
 //! direct convolution performs poorly on NCHW: vector efficiency is capped
 //! by the filter width.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd;
 use crate::tensor::Tensor4;
 
-pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
@@ -57,8 +64,9 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                 }
                 for (b, a) in acc.iter().enumerate().take(bl) {
                     // SAFETY: (ni, ho) regions are disjoint across threads;
-                    // offset is in bounds by loop ranges.
-                    unsafe { *optr.at(orow + wo + b) = *a };
+                    // offset is in bounds by loop ranges. Epilogue fused
+                    // into the accumulator store.
+                    unsafe { *optr.at(orow + wo + b) = ep.apply(c, *a) };
                 }
                 wo += bl;
             }

@@ -12,7 +12,7 @@
 //! `W_{o,b}·C_{o,b}` FMAs, keeping the FMA ports — not the load ports —
 //! saturated.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::{F32x8, LANES};
 use crate::tensor::Tensor4;
@@ -22,7 +22,14 @@ const MAX_WB: usize = 3;
 /// Output-channel block (accumulator columns): WB×CB ≤ 12 ymm registers.
 const CB: usize = 4;
 
-pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
@@ -98,9 +105,10 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                 for b in 0..bl {
                     for c in 0..CB {
                         // SAFETY: disjoint (ni, ho) regions per thread.
+                        // The epilogue folds into the accumulator store.
                         unsafe {
                             *optr.at(out_nh + (wo + b) * o_w + j + c) =
-                                acc[b][c].hsum() + accs[b][c];
+                                ep.apply(j + c, acc[b][c].hsum() + accs[b][c]);
                         }
                     }
                 }
@@ -146,7 +154,10 @@ pub(super) fn run(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut T
                 }
                 for b in 0..bl {
                     // SAFETY: disjoint (ni, ho) regions per thread.
-                    unsafe { *optr.at(out_nh + (wo + b) * o_w + j) = acc[b].hsum() + accs[b] };
+                    unsafe {
+                        *optr.at(out_nh + (wo + b) * o_w + j) =
+                            ep.apply(j, acc[b].hsum() + accs[b]);
+                    }
                 }
                 wo += bl;
             }

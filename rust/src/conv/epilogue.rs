@@ -1,0 +1,192 @@
+//! Fused per-output epilogues (bias add, ReLU).
+//!
+//! A weights-stationary server runs `conv → +bias → ReLU` on every layer.
+//! Executed as three passes, the bias and ReLU each re-read and re-write
+//! the whole output tensor — pure memory traffic on data that was just
+//! register-resident inside the convolution kernel. [`Epilogue`] lets the
+//! kernels apply both at the single point where each accumulator tile is
+//! stored (the "minimize memory movement per output" discipline of the
+//! direct-convolution literature): every output element is produced,
+//! biased, clamped and stored exactly once.
+//!
+//! The scalar/vector `apply` helpers are branch-per-store, not
+//! branch-per-FMA: they run once per output element, amortized over the
+//! `C_i·H_f·W_f` multiply–adds that produced it.
+
+use crate::error::{Error, Result};
+use crate::simd::{F32x8, LANES};
+use crate::tensor::Tensor4;
+
+/// What to fold into the kernel's accumulator store for each output
+/// element of channel `c_o`. Bias slices are indexed by output channel
+/// and must hold exactly `C_o` values ([`Epilogue::check`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub enum Epilogue<'a> {
+    /// Store the raw convolution result (the historical behavior).
+    #[default]
+    None,
+    /// Clamp to `max(v, 0)`.
+    Relu,
+    /// Add `bias[c_o]`.
+    Bias(&'a [f32]),
+    /// Add `bias[c_o]`, then clamp to `max(v, 0)`.
+    BiasRelu(&'a [f32]),
+}
+
+impl<'a> Epilogue<'a> {
+    /// True for [`Epilogue::None`] (kernels can skip masking work).
+    #[inline(always)]
+    pub fn is_none(&self) -> bool {
+        matches!(self, Epilogue::None)
+    }
+
+    /// The bias slice, if this epilogue carries one.
+    #[inline(always)]
+    pub fn bias(&self) -> Option<&'a [f32]> {
+        match *self {
+            Epilogue::Bias(b) | Epilogue::BiasRelu(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// True when the epilogue ends in a ReLU clamp.
+    #[inline(always)]
+    pub fn relu(&self) -> bool {
+        matches!(self, Epilogue::Relu | Epilogue::BiasRelu(_))
+    }
+
+    /// Validate the bias length against the layer's output channel count.
+    pub fn check(&self, c_out: usize) -> Result<()> {
+        match self.bias() {
+            Some(b) if b.len() != c_out => Err(Error::ShapeMismatch(format!(
+                "epilogue bias has {} entries, layer has {c_out} output channels",
+                b.len()
+            ))),
+            _ => Ok(()),
+        }
+    }
+
+    /// Apply to one scalar output of channel `co`.
+    #[inline(always)]
+    pub fn apply(&self, co: usize, v: f32) -> f32 {
+        match *self {
+            Epilogue::None => v,
+            Epilogue::Relu => v.max(0.0),
+            Epilogue::Bias(b) => v + b[co],
+            Epilogue::BiasRelu(b) => (v + b[co]).max(0.0),
+        }
+    }
+
+    /// Apply to an 8-lane vector of outputs that all belong to channel
+    /// `co` (the CHWN/CHWN8 store shape: lanes are batch images).
+    #[inline(always)]
+    pub fn apply_vec(&self, co: usize, v: F32x8) -> F32x8 {
+        match *self {
+            Epilogue::None => v,
+            Epilogue::Relu => v.max(F32x8::zero()),
+            Epilogue::Bias(b) => v.add(F32x8::splat(b[co])),
+            Epilogue::BiasRelu(b) => v.add(F32x8::splat(b[co])).max(F32x8::zero()),
+        }
+    }
+
+    /// Unfused fallback: apply over every logical element of `out`
+    /// (used by algorithms without a fused store path, and by
+    /// [`crate::conv::Conv2d::forward`]'s plain bias application).
+    /// Operating on logical coordinates leaves CHWN8 batch-padding lanes
+    /// untouched, preserving their all-zero invariant.
+    pub fn apply_to(&self, out: &mut Tensor4) {
+        if self.is_none() {
+            return;
+        }
+        for (n, c, h, w) in out.dims().iter() {
+            let v = out.get(n, c, h, w);
+            out.set(n, c, h, w, self.apply(c, v));
+        }
+    }
+}
+
+/// 8-lane mask with `valid` leading `1.0` lanes and `0.0` elsewhere.
+///
+/// CHWN8 kernels multiply their epilogued stores by this on the final
+/// partial batch block: bias/ReLU would otherwise write `max(bias, 0)`
+/// into the batch-padding lanes, breaking the layout's "padding lanes are
+/// zero" invariant that downstream kernels rely on.
+pub(crate) fn lane_mask(valid: usize) -> F32x8 {
+    let mut m = [0.0f32; LANES];
+    for lane in m.iter_mut().take(valid.min(LANES)) {
+        *lane = 1.0;
+    }
+    // SAFETY: `m` holds exactly 8 floats.
+    unsafe { F32x8::load(m.as_ptr()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Dims, Layout};
+
+    #[test]
+    fn apply_matches_definition() {
+        let bias = [0.5f32, -2.0];
+        assert_eq!(Epilogue::None.apply(1, -3.0), -3.0);
+        assert_eq!(Epilogue::Relu.apply(0, -3.0), 0.0);
+        assert_eq!(Epilogue::Bias(&bias).apply(1, -3.0), -5.0);
+        assert_eq!(Epilogue::BiasRelu(&bias).apply(1, -3.0), 0.0);
+        assert_eq!(Epilogue::BiasRelu(&bias).apply(0, 1.0), 1.5);
+    }
+
+    #[test]
+    fn apply_vec_matches_scalar() {
+        let bias = [0.25f32, -0.75, 1.5];
+        let x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let v = unsafe { F32x8::load(x.as_ptr()) };
+        for ep in [
+            Epilogue::None,
+            Epilogue::Relu,
+            Epilogue::Bias(&bias),
+            Epilogue::BiasRelu(&bias),
+        ] {
+            let got = ep.apply_vec(2, v).to_array();
+            for (lane, &xv) in x.iter().enumerate() {
+                assert_eq!(got[lane], ep.apply(2, xv), "{ep:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn check_validates_bias_length() {
+        let bias = [1.0f32; 4];
+        assert!(Epilogue::Bias(&bias).check(4).is_ok());
+        assert!(Epilogue::BiasRelu(&bias).check(5).is_err());
+        assert!(Epilogue::Relu.check(99).is_ok());
+        assert!(Epilogue::None.check(99).is_ok());
+    }
+
+    #[test]
+    fn apply_to_is_layout_invariant_and_spares_padding() {
+        let dims = Dims::new(5, 3, 4, 4); // 5 forces CHWN8 padding lanes
+        let bias = [0.5f32, -0.25, 1.0];
+        let base = Tensor4::random(dims, Layout::Nchw, 17);
+        let mut expect = base.clone();
+        Epilogue::BiasRelu(&bias).apply_to(&mut expect);
+        for layout in Layout::ALL {
+            let mut t = base.to_layout(layout);
+            Epilogue::BiasRelu(&bias).apply_to(&mut t);
+            assert!(expect.allclose(&t, 0.0, 1e-7), "{layout}");
+        }
+        // CHWN8 padding lanes stay zero even under a positive bias.
+        let mut blocked = base.to_layout(Layout::Chwn8);
+        Epilogue::Bias(&bias).apply_to(&mut blocked);
+        for chunk in blocked.data().chunks_exact(8) {
+            assert!(chunk[5..].iter().all(|&v| v == 0.0), "padding lane disturbed");
+        }
+    }
+
+    #[test]
+    fn lane_mask_zeroes_padding_lanes() {
+        let m = lane_mask(3).to_array();
+        assert_eq!(m, [1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(lane_mask(8).to_array(), [1.0; 8]);
+        assert_eq!(lane_mask(12).to_array(), [1.0; 8]);
+    }
+}

@@ -20,12 +20,20 @@
 //! (The paper benches im2col only on NCHW/NHWC because PyTorch supports
 //! only those; the CHWN/CHWN8 paths here are a capability extension and
 //! are excluded from the Fig. 4/5 reproduction by the bench configs.)
+//!
+//! Because the GEMM output lands directly in the conv layout, the fused
+//! [`Epilogue`] rides the GEMM's own epilogue hook
+//! ([`crate::gemm::GemmEpilogue`]): output channels are the GEMM's rows
+//! (NCHW/CHWN/CHWN8) or columns (NHWC), and the bias/ReLU fires as the
+//! microkernel stores its final accumulator tile.
 
-use super::{check_geometry, ConvAlgorithm, ConvParams};
+use super::{
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter,
+};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
-use crate::gemm::sgemm;
-use crate::tensor::{CHWN8_BLOCK, Layout, Tensor4};
+use crate::gemm::{sgemm_fused, GemmEpilogue};
+use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Layout, Tensor4};
 
 /// im2col-based convolution backed by the blocked SGEMM.
 #[derive(Debug, Clone, Default)]
@@ -56,6 +64,18 @@ fn filter_pack_len(p: &ConvParams, layout: Layout) -> usize {
     match layout {
         Layout::Nchw => 0,
         _ => p.c_out * p.c_in * p.h_f * p.w_f,
+    }
+}
+
+/// Translate a conv [`Epilogue`] into the GEMM-level epilogue for a
+/// layout whose output channels run along the GEMM's rows (`per_row`) or
+/// columns.
+fn gemm_ep(ep: Epilogue<'_>, per_row: bool) -> Option<GemmEpilogue<'_>> {
+    match ep {
+        Epilogue::None => None,
+        Epilogue::Relu => Some(GemmEpilogue { bias: None, relu: true, per_row }),
+        Epilogue::Bias(b) => Some(GemmEpilogue { bias: Some(b), relu: false, per_row }),
+        Epilogue::BiasRelu(b) => Some(GemmEpilogue { bias: Some(b), relu: true, per_row }),
     }
 }
 
@@ -100,14 +120,107 @@ impl ConvAlgorithm for Im2colConv {
         let layout = input.layout();
         let mut mat = ws.take("im2col.mat", im2col_matrix_len(p, layout));
         let mut fmat = ws.take("im2col.fmat", filter_pack_len(p, layout));
+        // The GEMM accumulates (`C += A·B`), so recycled output storage
+        // must start from zero.
         out.data_mut().fill(0.0);
         match layout {
-            Layout::Nchw => nchw(input, filter, p, out, &mut mat),
-            Layout::Nhwc => nhwc(input, filter, p, out, &mut mat, &mut fmat),
-            Layout::Chwn => chwn(input, filter, p, out, &mut mat, &mut fmat),
-            Layout::Chwn8 => chwn8(input, filter, p, out, &mut mat, &mut fmat),
+            Layout::Nchw => {
+                lower_nchw(input, p, &mut mat);
+                // Filter [Co][Ci][Hf][Wf] is already [Co][K] row-major.
+                gemm_nchw(&mat, filter.data(), p, out, Epilogue::None);
+            }
+            Layout::Nhwc => {
+                lower_nhwc(input, p, &mut mat);
+                pack_filter_nhwc_t(filter, p, &mut fmat);
+                gemm_nhwc(&mat, &fmat, p, out, Epilogue::None);
+            }
+            Layout::Chwn => {
+                lower_chwn(input, p, &mut mat);
+                pack_filter_chwn(filter, p, &mut fmat);
+                gemm_chwn(&mat, &fmat, p, out, Epilogue::None);
+            }
+            Layout::Chwn8 => {
+                lower_chwn8(input, p, &mut mat);
+                pack_filter_chwn(filter, p, &mut fmat);
+                gemm_chwn8(&mat, &fmat, p, out, Epilogue::None);
+            }
         }
         ws.put("im2col.fmat", fmat);
+        ws.put("im2col.mat", mat);
+        Ok(())
+    }
+
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        let owned;
+        let f = if filter.layout() == layout {
+            filter
+        } else {
+            owned = filter.to_layout(layout);
+            &owned
+        };
+        let len = p.c_out * p.c_in * p.h_f * p.w_f;
+        let mut buf = AlignedBuf::zeroed(len);
+        match layout {
+            Layout::Nchw => {
+                // Already [Co][K] row-major: a straight copy is the pack.
+                super::note_filter_pack();
+                buf.copy_from_slice(f.data());
+            }
+            Layout::Nhwc => pack_filter_nhwc_t(f, p, &mut buf),
+            Layout::Chwn | Layout::Chwn8 => pack_filter_chwn(f, p, &mut buf),
+        }
+        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PackedFilter,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        let fmat = packed
+            .buf()
+            .ok_or_else(|| Error::Config("im2col pack holds no filter matrix".into()))?;
+        let layout = input.layout();
+        let mut mat = ws.take("im2col.mat", im2col_matrix_len(p, layout));
+        out.data_mut().fill(0.0);
+        match layout {
+            Layout::Nchw => {
+                lower_nchw(input, p, &mut mat);
+                gemm_nchw(&mat, fmat, p, out, ep);
+            }
+            Layout::Nhwc => {
+                lower_nhwc(input, p, &mut mat);
+                gemm_nhwc(&mat, fmat, p, out, ep);
+            }
+            Layout::Chwn => {
+                lower_chwn(input, p, &mut mat);
+                gemm_chwn(&mat, fmat, p, out, ep);
+            }
+            Layout::Chwn8 => {
+                lower_chwn8(input, p, &mut mat);
+                gemm_chwn8(&mat, fmat, p, out, ep);
+                // The per-row epilogue covers every column of the blocked
+                // GEMM output, including batch-padding lanes of the final
+                // block; restore their zero invariant.
+                if ep.bias().is_some() {
+                    zero_chwn8_batch_padding(out, p);
+                }
+            }
+        }
         ws.put("im2col.mat", mat);
         Ok(())
     }
@@ -134,7 +247,8 @@ fn unroll_nchw_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
     }
 }
 
-fn nchw(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, mat: &mut [f32]) {
+/// Unroll the full NCHW batch (one `K×cols` matrix per image).
+fn lower_nchw(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
     let k = p.c_in * p.h_f * p.w_f;
     let cols = p.h_out() * p.w_out();
     let img = p.c_in * p.h_in * p.w_in;
@@ -143,10 +257,15 @@ fn nchw(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, ma
     for n in 0..p.n {
         unroll_nchw_image(&input.data()[n * img..], p, &mut mat[n * k * cols..]);
     }
-    // Filter [Co][Ci][Hf][Wf] is already [Co][K] row-major.
-    let f = filter.data();
+}
+
+/// Per-image `F[C_o×K] · M` GEMMs with the epilogue on the channel rows.
+fn gemm_nchw(mat: &[f32], f: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = p.h_out() * p.w_out();
+    let ge = gemm_ep(ep, true);
     for n in 0..p.n {
-        sgemm(
+        sgemm_fused(
             p.c_out,
             cols,
             k,
@@ -156,6 +275,7 @@ fn nchw(input: &Tensor4, filter: &Tensor4, p: &ConvParams, out: &mut Tensor4, ma
             cols,
             &mut out.data_mut()[n * p.c_out * cols..],
             cols,
+            ge,
         );
     }
 }
@@ -179,14 +299,8 @@ fn unroll_nhwc_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
     }
 }
 
-fn nhwc(
-    input: &Tensor4,
-    filter: &Tensor4,
-    p: &ConvParams,
-    out: &mut Tensor4,
-    mat: &mut [f32],
-    ft: &mut [f32],
-) {
+/// Unroll the full NHWC batch.
+fn lower_nhwc(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
     let k = p.h_f * p.w_f * p.c_in;
     let rows = p.h_out() * p.w_out();
     let img = p.h_in * p.w_in * p.c_in;
@@ -194,16 +308,30 @@ fn nhwc(
     for n in 0..p.n {
         unroll_nhwc_image(&input.data()[n * img..], p, &mut mat[n * rows * k..]);
     }
-    // Filter NHWC [Co][u][v][ci] = [Co][K]; GEMM needs Fᵀ = [K][Co].
+}
+
+/// Pack the NHWC filter `[Co][K]` as its transpose `Fᵀ = [K][Co]` so the
+/// GEMM output lands channel-minor.
+fn pack_filter_nhwc_t(filter: &Tensor4, p: &ConvParams, ft: &mut [f32]) {
+    let k = p.h_f * p.w_f * p.c_in;
     let f = filter.data();
     debug_assert_eq!(ft.len(), k * p.c_out);
+    super::note_filter_pack();
     for j in 0..p.c_out {
         for t in 0..k {
             ft[t * p.c_out + j] = f[j * k + t];
         }
     }
+}
+
+/// Per-image `M · Fᵀ[K×C_o]` GEMMs with the epilogue on the channel
+/// columns.
+fn gemm_nhwc(mat: &[f32], ft: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let k = p.h_f * p.w_f * p.c_in;
+    let rows = p.h_out() * p.w_out();
+    let ge = gemm_ep(ep, false);
     for n in 0..p.n {
-        sgemm(
+        sgemm_fused(
             rows,
             p.c_out,
             k,
@@ -213,6 +341,7 @@ fn nhwc(
             p.c_out,
             &mut out.data_mut()[n * rows * p.c_out..],
             p.c_out,
+            ge,
         );
     }
 }
@@ -221,6 +350,7 @@ fn nhwc(
 fn pack_filter_chwn(filter: &Tensor4, p: &ConvParams, fmat: &mut [f32]) {
     let k = p.c_in * p.h_f * p.w_f;
     debug_assert_eq!(fmat.len(), p.c_out * k);
+    super::note_filter_pack();
     for j in 0..p.c_out {
         let mut t = 0;
         for c in 0..p.c_in {
@@ -236,14 +366,7 @@ fn pack_filter_chwn(filter: &Tensor4, p: &ConvParams, fmat: &mut [f32]) {
 
 /// Unroll the whole CHWN batch into `K×(H_o·W_o·N)`: each matrix element
 /// row is an `N`-contiguous lane copy.
-fn chwn(
-    input: &Tensor4,
-    filter: &Tensor4,
-    p: &ConvParams,
-    out: &mut Tensor4,
-    mat: &mut [f32],
-    fmat: &mut [f32],
-) {
+fn lower_chwn(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
     let (h_o, w_o, n) = (p.h_out(), p.w_out(), p.n);
     let k = p.c_in * p.h_f * p.w_f;
     let cols = h_o * w_o * n;
@@ -268,20 +391,18 @@ fn chwn(
             }
         }
     }
-    pack_filter_chwn(filter, p, fmat);
-    sgemm(p.c_out, cols, k, fmat, k, mat, cols, out.data_mut(), cols);
 }
 
-/// CHWN8: unroll per 8-batch block into `K×(H_o·W_o·8)` and GEMM each
-/// block into its slice of the blocked output.
-fn chwn8(
-    input: &Tensor4,
-    filter: &Tensor4,
-    p: &ConvParams,
-    out: &mut Tensor4,
-    mat: &mut [f32],
-    fmat: &mut [f32],
-) {
+/// Whole-batch `F[C_o×K] · M` GEMM with the epilogue on the channel rows.
+fn gemm_chwn(mat: &[f32], fmat: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = p.h_out() * p.w_out() * p.n;
+    let ge = gemm_ep(ep, true);
+    sgemm_fused(p.c_out, cols, k, fmat, k, mat, cols, out.data_mut(), cols, ge);
+}
+
+/// CHWN8: unroll per 8-batch block into `K×(H_o·W_o·8)`.
+fn lower_chwn8(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
     const B: usize = CHWN8_BLOCK;
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let k = p.c_in * p.h_f * p.w_f;
@@ -290,9 +411,7 @@ fn chwn8(
     let i_h = p.w_in * B;
     let i_c = p.h_in * i_h;
     let i_nb = p.c_in * i_c;
-    let o_nb = p.c_out * h_o * w_o * B;
     let x = input.data();
-    pack_filter_chwn(filter, p, fmat);
     // Full-batch materialization (memory fidelity with the other paths).
     debug_assert_eq!(mat.len(), nblocks * k * cols);
     for nb in 0..nblocks {
@@ -316,8 +435,20 @@ fn chwn8(
             }
         }
     }
+}
+
+/// Per-block `F[C_o×K] · M` GEMMs into the blocked output, epilogue on
+/// the channel rows.
+fn gemm_chwn8(mat: &[f32], fmat: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    const B: usize = CHWN8_BLOCK;
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let k = p.c_in * p.h_f * p.w_f;
+    let cols = h_o * w_o * B;
+    let nblocks = p.n.div_ceil(B);
+    let o_nb = p.c_out * h_o * w_o * B;
+    let ge = gemm_ep(ep, true);
     for nb in 0..nblocks {
-        sgemm(
+        sgemm_fused(
             p.c_out,
             cols,
             k,
@@ -327,7 +458,24 @@ fn chwn8(
             cols,
             &mut out.data_mut()[nb * o_nb..],
             cols,
+            ge,
         );
+    }
+}
+
+/// Zero the batch-padding lanes of a CHWN8 output's final block (a biased
+/// epilogue writes `epilogue(0)` there; the layout invariant is zeros).
+fn zero_chwn8_batch_padding(out: &mut Tensor4, p: &ConvParams) {
+    const B: usize = CHWN8_BLOCK;
+    let rem = p.n % B;
+    if rem == 0 {
+        return;
+    }
+    let rows = p.c_out * p.h_out() * p.w_out();
+    let base = (p.n.div_ceil(B) - 1) * rows * B;
+    let data = out.data_mut();
+    for r in 0..rows {
+        data[base + r * B + rem..base + (r + 1) * B].fill(0.0);
     }
 }
 
@@ -394,6 +542,26 @@ mod tests {
         let p = ConvParams::with_strides(3, 2, 10, 9, 4, 2, 3, 2, 2).unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 31);
+        }
+    }
+
+    #[test]
+    fn prepacked_matches_per_call_path() {
+        let p = ConvParams::new(3, 4, 9, 9, 5, 3, 3, 1).unwrap();
+        let algo = Im2colConv::new();
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 77);
+            let filter = Tensor4::random(p.filter_dims(), layout, 78);
+            let expect = algo.run(&input, &filter, &p).unwrap();
+            let packed = algo.prepare(&filter, &p, layout).unwrap();
+            let mut ws = Workspace::new();
+            let mut out = Tensor4::zeros(p.output_dims(), layout);
+            algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::None).unwrap();
+            assert!(
+                expect.allclose(&out, 1e-5, 1e-5),
+                "{layout}: diff {}",
+                expect.max_abs_diff(&out)
+            );
         }
     }
 }

@@ -6,7 +6,7 @@
 //! `C_o×H_o`. As in the direct CHWN kernel, cache efficiency degrades for
 //! large `N` — the effect CHWN8 removes.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::{F32x8, LANES};
 use crate::tensor::{AlignedBuf, Tensor4};
@@ -16,7 +16,14 @@ const MAX_BLOCK: usize = 3;
 /// Output-channel columns (MAX_BLOCK×CB ≤ 12 ymm accumulators).
 const CB: usize = 4;
 
-pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    win: &Tensor4,
+    fpack: &AlignedBuf,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
@@ -75,8 +82,10 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                 for b in 0..bl {
                     for cc in 0..cols {
                         // SAFETY: disjoint (jb, m) regions per thread.
+                        // Lanes share the output channel, so the epilogue
+                        // applies vector-wide at the store.
                         unsafe {
-                            acc[b][cc]
+                            ep.apply_vec(j0 + cc, acc[b][cc])
                                 .store(optr.at((j0 + cc) * o_c + m * o_h + (wo + b) * o_w + n0))
                         };
                     }
@@ -100,7 +109,8 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                     }
                     for (b, a) in acc.iter().enumerate().take(bl) {
                         unsafe {
-                            *optr.at((j0 + cc) * o_c + m * o_h + (wo + b) * o_w + nn) = *a
+                            *optr.at((j0 + cc) * o_c + m * o_h + (wo + b) * o_w + nn) =
+                                ep.apply(j0 + cc, *a)
                         };
                     }
                 }

@@ -6,7 +6,8 @@
 //! width. The paper measures 3.7–16× over plain CHWN from exactly this
 //! change. Parallelism runs over `(N/8)×H_o` blocks.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::epilogue::lane_mask;
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::F32x8;
 use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Tensor4};
@@ -18,13 +19,25 @@ const MAX_BLOCK: usize = 3;
 /// MAX_BLOCK·CB FMAs — FMA-port bound instead of load-port bound.
 const CB: usize = 4;
 
-pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    win: &Tensor4,
+    fpack: &AlignedBuf,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     const B: usize = CHWN8_BLOCK;
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
     let w_block = w_block.clamp(1, MAX_BLOCK);
     let nblocks = p.n.div_ceil(B);
+    // Batch-padding lanes of the final block compute zeros; a bias/ReLU
+    // epilogue would turn them into `max(bias, 0)`, so epilogued stores
+    // on that block are masked back to zero.
+    let tail_valid = p.n - (nblocks - 1) * B;
+    let mask_tail = tail_valid < B && !ep.is_none();
 
     // Window tensor [N/8][Ci][Ho][Wi*Hf][8].
     let t_w = B;
@@ -49,6 +62,7 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
     parallel::current().parallel_for_coalesced(nblocks, h_o, |nb, m| {
         let win_b = nb * t_nb + m * t_h;
         let out_b = nb * o_nb + m * o_h;
+        let mask = if mask_tail && nb + 1 == nblocks { Some(lane_mask(tail_valid)) } else { None };
 
         // Main tiles: CB output channels × w_block output columns.
         let mut j = 0;
@@ -82,9 +96,11 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                 for b in 0..bl {
                     for c in 0..CB {
                         // SAFETY: disjoint (nb, m) regions per thread.
-                        unsafe {
-                            acc[b][c].store(optr.at(out_b + (j + c) * o_c + (wo + b) * o_w))
-                        };
+                        let mut v = ep.apply_vec(j + c, acc[b][c]);
+                        if let Some(mk) = mask {
+                            v = v.mul(mk);
+                        }
+                        unsafe { v.store(optr.at(out_b + (j + c) * o_c + (wo + b) * o_w)) };
                     }
                 }
                 wo += bl;
@@ -116,7 +132,11 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                 }
                 for (b, a) in acc.iter().enumerate().take(bl) {
                     // SAFETY: disjoint (nb, m) regions per thread.
-                    unsafe { a.store(optr.at(out_row + (wo + b) * o_w)) };
+                    let mut v = ep.apply_vec(j, *a);
+                    if let Some(mk) = mask {
+                        v = v.mul(mk);
+                    }
+                    unsafe { v.store(optr.at(out_row + (wo + b) * o_w)) };
                 }
                 wo += bl;
             }

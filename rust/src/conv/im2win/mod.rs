@@ -23,10 +23,10 @@ mod transform;
 
 pub use transform::{im2win_dims, im2win_transform, im2win_transform_into};
 
-use super::{check_geometry, ConvAlgorithm, ConvParams};
+use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
-use crate::tensor::{Layout, Tensor4};
+use crate::tensor::{AlignedBuf, Layout, Tensor4};
 
 /// Default `W_{o,b}` register-blocking factor for im2win kernels.
 pub const DEFAULT_W_BLOCK: usize = 4;
@@ -97,26 +97,79 @@ impl ConvAlgorithm for Im2winConv {
         let mut win = ws.take_tensor("im2win.win", im2win_dims(p), input.layout());
         im2win_transform_into(input, p, &mut win);
         let mut fpack = ws.take("im2win.fpack", p.c_out * p.c_in * p.h_f * p.w_f);
-        out.data_mut().fill(0.0);
+        // No output zeroing: every kernel writes each output element
+        // exactly once from register accumulators (pinned by the
+        // `kernels_overwrite_poisoned_output` test), so a zero fill would
+        // be a wasted full pass over the output tensor.
         match input.layout() {
             Layout::Nhwc => {
                 pack_filter_window_major_into(filter, p, &mut fpack);
-                nhwc::run(&win, &fpack, p, out, self.w_block)
+                nhwc::run(&win, &fpack, p, out, self.w_block, Epilogue::None)
             }
             Layout::Nchw => {
                 pack_filter_channel_major_into(filter, p, &mut fpack);
-                nchw::run(&win, &fpack, p, out, self.w_block)
+                nchw::run(&win, &fpack, p, out, self.w_block, Epilogue::None)
             }
             Layout::Chwn => {
                 pack_filter_channel_major_into(filter, p, &mut fpack);
-                chwn::run(&win, &fpack, p, out, self.w_block)
+                chwn::run(&win, &fpack, p, out, self.w_block, Epilogue::None)
             }
             Layout::Chwn8 => {
                 pack_filter_channel_major_into(filter, p, &mut fpack);
-                chwn8::run(&win, &fpack, p, out, self.w_block)
+                chwn8::run(&win, &fpack, p, out, self.w_block, Epilogue::None)
             }
         }
         ws.put("im2win.fpack", fpack);
+        ws.put_tensor("im2win.win", win);
+        Ok(())
+    }
+
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        let owned;
+        let f = if filter.layout() == layout {
+            filter
+        } else {
+            owned = filter.to_layout(layout);
+            &owned
+        };
+        let mut buf = AlignedBuf::zeroed(p.c_out * p.c_in * p.h_f * p.w_f);
+        match layout {
+            Layout::Nhwc => pack_filter_window_major_into(f, p, &mut buf),
+            _ => pack_filter_channel_major_into(f, p, &mut buf),
+        }
+        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PackedFilter,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        let fpack = packed
+            .buf()
+            .ok_or_else(|| Error::Config("im2win pack holds no coefficient buffer".into()))?;
+        let mut win = ws.take_tensor("im2win.win", im2win_dims(p), input.layout());
+        im2win_transform_into(input, p, &mut win);
+        match input.layout() {
+            Layout::Nhwc => nhwc::run(&win, fpack, p, out, self.w_block, ep),
+            Layout::Nchw => nchw::run(&win, fpack, p, out, self.w_block, ep),
+            Layout::Chwn => chwn::run(&win, fpack, p, out, self.w_block, ep),
+            Layout::Chwn8 => chwn8::run(&win, fpack, p, out, self.w_block, ep),
+        }
         ws.put_tensor("im2win.win", win);
         Ok(())
     }
@@ -129,6 +182,7 @@ impl ConvAlgorithm for Im2winConv {
 fn pack_filter_window_major_into(filter: &Tensor4, p: &ConvParams, buf: &mut [f32]) {
     let (co, ci, hf, wf) = (p.c_out, p.c_in, p.h_f, p.w_f);
     debug_assert_eq!(buf.len(), co * wf * hf * ci);
+    super::note_filter_pack();
     for j in 0..co {
         for v in 0..wf {
             for u in 0..hf {
@@ -149,6 +203,7 @@ fn pack_filter_window_major_into(filter: &Tensor4, p: &ConvParams, buf: &mut [f3
 fn pack_filter_channel_major_into(filter: &Tensor4, p: &ConvParams, buf: &mut [f32]) {
     let (co, ci, hf, wf) = (p.c_out, p.c_in, p.h_f, p.w_f);
     debug_assert_eq!(buf.len(), co * ci * wf * hf);
+    super::note_filter_pack();
     for j in 0..co {
         for r in 0..ci {
             let base = (j * ci + r) * wf * hf;
@@ -225,6 +280,34 @@ mod tests {
         let p = ConvParams::with_strides(3, 4, 11, 9, 5, 3, 2, 2, 3).unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 66);
+        }
+    }
+
+    #[test]
+    fn kernels_overwrite_poisoned_output() {
+        // The overwrite contract behind dropping the output zero-fill:
+        // every im2win kernel writes each output element exactly once, so
+        // a NaN-poisoned (recycled) output tensor must come out fully
+        // overwritten and equal to the reference.
+        let p = ConvParams::new(5, 3, 9, 9, 5, 3, 3, 1).unwrap(); // n=5: CHWN8 partial block
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 21);
+            let filter = Tensor4::random(p.filter_dims(), layout, 22);
+            let expect = reference_conv(&input, &filter, &p, layout);
+            let algo = Im2winConv::new();
+            let mut ws = crate::engine::Workspace::new();
+            let mut out = Tensor4::zeros(p.output_dims(), layout);
+            out.data_mut().fill(f32::NAN);
+            algo.run_with_workspace(&input, &filter, &p, &mut out, &mut ws).unwrap();
+            assert!(
+                out.data().iter().all(|v| v.is_finite()),
+                "{layout}: poison survived in output storage"
+            );
+            assert!(
+                expect.allclose(&out, 1e-4, 1e-4),
+                "{layout}: max diff {}",
+                expect.max_abs_diff(&out)
+            );
         }
     }
 

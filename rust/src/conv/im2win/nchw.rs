@@ -6,14 +6,21 @@
 //! of `W_f·H_f·C_i`) beats NCHW by up to 355% in the paper — the structure
 //! below preserves exactly that effect.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::{F32x8, LANES};
 use crate::tensor::{AlignedBuf, Tensor4};
 
 const MAX_BLOCK: usize = 8;
 
-pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    win: &Tensor4,
+    fpack: &AlignedBuf,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
@@ -68,8 +75,9 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                     }
                 }
                 for b in 0..bl {
-                    // SAFETY: disjoint (n, m) rows per thread.
-                    unsafe { *optr.at(orow + wo + b) = accv[b].hsum() + accs[b] };
+                    // SAFETY: disjoint (n, m) rows per thread; epilogue
+                    // fused into the accumulator store.
+                    unsafe { *optr.at(orow + wo + b) = ep.apply(j, accv[b].hsum() + accs[b]) };
                 }
                 wo += bl;
             }

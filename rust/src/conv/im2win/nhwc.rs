@@ -17,7 +17,7 @@
 //! * one filter span (`L` floats per output channel) is streamed per tile
 //!   row and reused across the whole output row.
 
-use crate::conv::{ConvParams, SharedMut};
+use crate::conv::{ConvParams, Epilogue, SharedMut};
 use crate::parallel;
 use crate::simd::{F32x8, LANES};
 use crate::tensor::{AlignedBuf, Tensor4};
@@ -27,7 +27,14 @@ const MAX_WB: usize = 3;
 /// Output-channel block (accumulator columns): WB×CB ≤ 12 ymm registers.
 const CB: usize = 4;
 
-pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut Tensor4, w_block: usize) {
+pub(super) fn run(
+    win: &Tensor4,
+    fpack: &AlignedBuf,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    w_block: usize,
+    ep: Epilogue<'_>,
+) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
@@ -94,10 +101,11 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                 }
                 for b in 0..bl {
                     for c in 0..CB {
-                        // SAFETY: disjoint (n, m) rows per thread.
+                        // SAFETY: disjoint (n, m) rows per thread. The
+                        // epilogue folds into the accumulator store.
                         unsafe {
                             *optr.at(out_nh + (wo + b) * o_w + j + c) =
-                                acc[b][c].hsum() + accs[b][c];
+                                ep.apply(j + c, acc[b][c].hsum() + accs[b][c]);
                         }
                     }
                 }
@@ -134,7 +142,10 @@ pub(super) fn run(win: &Tensor4, fpack: &AlignedBuf, p: &ConvParams, out: &mut T
                 }
                 for b in 0..bl {
                     // SAFETY: disjoint (n, m) rows per thread.
-                    unsafe { *optr.at(out_nh + (wo + b) * o_w + j) = acc[b].hsum() + accs[b] };
+                    unsafe {
+                        *optr.at(out_nh + (wo + b) * o_w + j) =
+                            ep.apply(j, acc[b].hsum() + accs[b]);
+                    }
                 }
                 wo += bl;
             }

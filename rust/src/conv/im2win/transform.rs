@@ -78,7 +78,14 @@ fn nhwc(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     });
 }
 
-/// NCHW: per (n, c, m) the flattened row gathers strided elements.
+/// NCHW: per (n, c, m) the flattened row is an `H_f×W_i` transpose of the
+/// input rows the output row reads.
+///
+/// Instead of the element-at-a-time gather (the last scalar transform),
+/// each filter row `u` is streamed with contiguous 8-wide vector loads;
+/// only the stride-`H_f` scatter into the window row stays scalar, so the
+/// load side runs at full cache-line utilization and the 8·`H_f` stores
+/// of one chunk land in one small, cache-resident window span.
 fn nchw(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
     let (wi, h_o) = (p.w_in, p.h_out());
@@ -88,18 +95,44 @@ fn nchw(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     let o_h = wi * hf;
     let o_c = h_o * o_h;
     let o_n = ci * o_c;
+    let wi_vec = wi - wi % crate::simd::LANES;
     let x = input.data();
     let optr = SharedMut::new(out.as_mut_ptr());
     parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
         for c in 0..ci {
             let src_c = n * i_n + c * i_c;
             let dst = n * o_n + c * o_c + m * o_h;
-            for k in 0..wi {
-                for u in 0..hf {
-                    // SAFETY: disjoint (n, m) rows; in bounds.
+            if hf == 1 {
+                // Degenerate transpose: the flattened row *is* the input
+                // row — one contiguous (fully vectorized) copy.
+                // SAFETY: disjoint (n, m) rows per thread; wi floats are
+                // in bounds on both sides.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        x.as_ptr().add(src_c + m * sh * i_h),
+                        optr.at(dst),
+                        wi,
+                    );
+                }
+                continue;
+            }
+            for u in 0..hf {
+                let src = src_c + (m * sh + u) * i_h;
+                let mut k = 0;
+                while k < wi_vec {
+                    // SAFETY: k + 8 <= wi; disjoint (n, m) rows per
+                    // thread; scatter offsets bounded by k < wi, u < hf.
                     unsafe {
-                        *optr.at(dst + k * hf + u) = *x.get_unchecked(src_c + (m * sh + u) * i_h + k);
+                        let v = crate::simd::F32x8::load(x.as_ptr().add(src + k)).to_array();
+                        for (i, val) in v.iter().enumerate() {
+                            *optr.at(dst + (k + i) * hf + u) = *val;
+                        }
                     }
+                    k += crate::simd::LANES;
+                }
+                for k in wi_vec..wi {
+                    // SAFETY: as above.
+                    unsafe { *optr.at(dst + k * hf + u) = *x.get_unchecked(src + k) };
                 }
             }
         }

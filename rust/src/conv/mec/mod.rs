@@ -111,6 +111,7 @@ impl ConvAlgorithm for MecConv {
         // F̂[K][C_o] from the NHWC filter [C_o][K].
         let f = filter.data();
         let mut ft = ws.take("mec.ft", k * co);
+        super::note_filter_pack();
         for j in 0..co {
             for t in 0..k {
                 ft[t * co + j] = f[j * k + t];

@@ -14,18 +14,40 @@
 //! loop-reordering rules of paper §III-C.
 
 pub mod direct;
+mod epilogue;
 pub mod im2col;
 pub mod im2win;
 pub mod mec;
 mod naive;
 mod params;
 
+pub use epilogue::Epilogue;
 pub use naive::reference_conv;
 pub use params::ConvParams;
 
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
-use crate::tensor::{Layout, Tensor4};
+use crate::tensor::{AlignedBuf, Dims, Layout, Tensor4};
+use std::cell::Cell;
+
+thread_local! {
+    static FILTER_PACKS: Cell<usize> = Cell::new(0);
+}
+
+/// Number of filter packs (copies of a filter into a kernel-consumable
+/// order, including [`ConvAlgorithm::prepare`] calls) performed by the
+/// *current thread* since it started. Packing always happens on the
+/// calling thread, so serving tests use this to prove steady state
+/// re-packs nothing; the thread-local scope keeps concurrently running
+/// tests from polluting each other's counts.
+pub fn filter_pack_count() -> usize {
+    FILTER_PACKS.with(|c| c.get())
+}
+
+/// Record one filter pack on the current thread.
+pub(crate) fn note_filter_pack() {
+    FILTER_PACKS.with(|c| c.set(c.get() + 1));
+}
 
 /// A convolution algorithm operating on a specific tensor layout family.
 pub trait ConvAlgorithm: Send + Sync {
@@ -71,6 +93,166 @@ pub trait ConvAlgorithm: Send + Sync {
         self.run_into(input, filter, p, &mut out)?;
         Ok(out)
     }
+
+    /// Pack `filter` once into this algorithm's kernel-consumable order
+    /// for repeated [`ConvAlgorithm::run_prepacked`] execution on
+    /// `layout`. A weights-stationary server calls this at plan time and
+    /// never re-packs on the request path.
+    ///
+    /// Only the filter geometry of `p` matters (`C_o, C_i, H_f, W_f`);
+    /// the returned pack serves any batch size. The default stores the
+    /// filter tensor itself (converted to `layout`) — right for
+    /// algorithms whose kernels consume the raw filter (direct, naive,
+    /// MEC); transform-based algorithms override it with their real pack
+    /// format.
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        if !self.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!(
+                "{} does not support {layout}",
+                self.name()
+            )));
+        }
+        note_filter_pack();
+        Ok(PackedFilter::from_tensor(self.name(), filter.to_layout(layout)))
+    }
+
+    /// Run the convolution with a filter pre-packed by
+    /// [`ConvAlgorithm::prepare`], applying `ep` at the point each output
+    /// element is stored. No per-call filter packing happens here.
+    ///
+    /// The default runs the unfused path on the stored filter tensor and
+    /// applies the epilogue as a separate pass; algorithms with fused
+    /// store sites override it.
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PackedFilter,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        let filter = packed.tensor().ok_or_else(|| {
+            Error::Config(format!("{} pack does not hold a filter tensor", self.name()))
+        })?;
+        self.run_with_workspace(input, filter, p, out, ws)?;
+        ep.apply_to(out);
+        Ok(())
+    }
+}
+
+/// A filter pre-packed by [`ConvAlgorithm::prepare`] for a specific
+/// (algorithm, layout, filter geometry). Opaque to callers; the engine
+/// caches one per convolution layer and hands it back on every request.
+pub struct PackedFilter {
+    algo: &'static str,
+    layout: Layout,
+    filter_dims: Dims,
+    data: PackedData,
+}
+
+enum PackedData {
+    /// Kernel-order packed coefficients (im2win spans, im2col matrices).
+    Buf(AlignedBuf),
+    /// The filter tensor itself, in the execution layout (direct, naive).
+    Tensor(Tensor4),
+}
+
+impl PackedFilter {
+    /// Wrap a kernel-order coefficient buffer.
+    pub(crate) fn from_buf(
+        algo: &'static str,
+        layout: Layout,
+        p: &ConvParams,
+        buf: AlignedBuf,
+    ) -> Self {
+        PackedFilter { algo, layout, filter_dims: p.filter_dims(), data: PackedData::Buf(buf) }
+    }
+
+    /// Wrap a filter tensor kept in its execution layout.
+    pub(crate) fn from_tensor(algo: &'static str, filter: Tensor4) -> Self {
+        PackedFilter {
+            algo,
+            layout: filter.layout(),
+            filter_dims: filter.dims(),
+            data: PackedData::Tensor(filter),
+        }
+    }
+
+    /// Name of the algorithm this pack was prepared for.
+    pub fn algo(&self) -> &'static str {
+        self.algo
+    }
+
+    /// Layout this pack executes on.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Filter dims `(C_o, C_i, H_f, W_f)` the pack was built from.
+    pub fn filter_dims(&self) -> Dims {
+        self.filter_dims
+    }
+
+    /// Bytes held by the pack (the per-layer cost of weights-stationary
+    /// serving).
+    pub fn storage_bytes(&self) -> usize {
+        let elems = match &self.data {
+            PackedData::Buf(b) => b.len(),
+            PackedData::Tensor(t) => t.data().len(),
+        };
+        elems * std::mem::size_of::<f32>()
+    }
+
+    /// The packed coefficient buffer, when this pack holds one.
+    pub(crate) fn buf(&self) -> Option<&AlignedBuf> {
+        match &self.data {
+            PackedData::Buf(b) => Some(b),
+            PackedData::Tensor(_) => None,
+        }
+    }
+
+    /// The stored filter tensor, when this pack holds one.
+    pub(crate) fn tensor(&self) -> Option<&Tensor4> {
+        match &self.data {
+            PackedData::Tensor(t) => Some(t),
+            PackedData::Buf(_) => None,
+        }
+    }
+
+    /// Reject a pack prepared for a different algorithm, layout or filter
+    /// geometry than the run it is handed to.
+    pub fn validate(&self, algo: &str, p: &ConvParams, layout: Layout) -> Result<()> {
+        if self.algo != algo {
+            return Err(Error::Config(format!(
+                "packed filter was prepared for {}, not {algo}",
+                self.algo
+            )));
+        }
+        if self.layout != layout {
+            return Err(Error::UnsupportedLayout(format!(
+                "packed filter was prepared for {}, run on {layout}",
+                self.layout
+            )));
+        }
+        if self.filter_dims != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "packed filter dims {} != expected {}",
+                self.filter_dims,
+                p.filter_dims()
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// Validate that `input`/`filter`/`out` agree with `p` and share a layout.
@@ -80,18 +262,25 @@ pub(crate) fn check_geometry(
     p: &ConvParams,
     out: &Tensor4,
 ) -> Result<()> {
-    if input.dims() != p.input_dims() {
-        return Err(Error::ShapeMismatch(format!(
-            "input dims {} != expected {}",
-            input.dims(),
-            p.input_dims()
-        )));
-    }
+    check_io_geometry(input, p, out)?;
     if filter.dims() != p.filter_dims() {
         return Err(Error::ShapeMismatch(format!(
             "filter dims {} != expected {}",
             filter.dims(),
             p.filter_dims()
+        )));
+    }
+    Ok(())
+}
+
+/// Like [`check_geometry`] but without a filter tensor — the prepacked
+/// path validates the filter through [`PackedFilter::validate`] instead.
+pub(crate) fn check_io_geometry(input: &Tensor4, p: &ConvParams, out: &Tensor4) -> Result<()> {
+    if input.dims() != p.input_dims() {
+        return Err(Error::ShapeMismatch(format!(
+            "input dims {} != expected {}",
+            input.dims(),
+            p.input_dims()
         )));
     }
     if out.dims() != p.output_dims() {
@@ -236,6 +425,7 @@ pub struct Conv2d {
     algo: Box<dyn ConvAlgorithm>,
     layout: Layout,
     filter: Tensor4,
+    bias: Option<Vec<f32>>,
 }
 
 impl Conv2d {
@@ -253,7 +443,34 @@ impl Conv2d {
         if !algo.supports(layout) {
             return Err(Error::UnsupportedLayout(format!("{kind} does not support {layout}")));
         }
-        Ok(Conv2d { params, kind, algo, layout, filter: filter.to_layout(layout) })
+        Ok(Conv2d { params, kind, algo, layout, filter: filter.to_layout(layout), bias: None })
+    }
+
+    /// Build a layer with a per-output-channel bias (`bias.len()` must be
+    /// `C_o`). The bias is applied by [`Conv2d::forward`], and fused into
+    /// the kernel's store epilogue when run through the inference engine.
+    pub fn with_bias(
+        params: ConvParams,
+        kind: AlgoKind,
+        layout: Layout,
+        filter: &Tensor4,
+        bias: &[f32],
+    ) -> Result<Self> {
+        if bias.len() != params.c_out {
+            return Err(Error::ShapeMismatch(format!(
+                "bias has {} entries, conv has {} output channels",
+                bias.len(),
+                params.c_out
+            )));
+        }
+        let mut layer = Self::new(params, kind, layout, filter)?;
+        layer.bias = Some(bias.to_vec());
+        Ok(layer)
+    }
+
+    /// The layer's per-channel bias, if it has one.
+    pub fn bias(&self) -> Option<&[f32]> {
+        self.bias.as_deref()
     }
 
     /// The layer's layout.
@@ -313,7 +530,11 @@ impl Conv2d {
             owned = input.to_layout(self.layout);
             &owned
         };
-        self.algo.run(x, &self.filter, &p)
+        let mut y = self.algo.run(x, &self.filter, &p)?;
+        if let Some(b) = &self.bias {
+            Epilogue::Bias(b).apply_to(&mut y);
+        }
+        Ok(y)
     }
 }
 

@@ -497,7 +497,9 @@ pub fn warm_pack(planner: &Planner, cache: &mut PlanCache) -> usize {
     for layer in &layers::TABLE1 {
         let p = layer.params(planner.batch);
         for prev in Layout::ALL {
-            let key = layer_key(&p, prev, planner.threads);
+            // cache_key == layer_key for the default (prepacked) planner;
+            // a one-shot planner warm-packs under its own `-oneshot` keys.
+            let key = planner.cache_key(&p, prev);
             let plan = planner.plan_conv(&p, prev);
             cache.insert(key, plan);
             n += 1;

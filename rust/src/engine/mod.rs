@@ -27,8 +27,13 @@
 //!   workspace, thread pool and (optionally, `pinning` feature) pinned
 //!   core block, batching with deadline-aware windows;
 //! * [`Engine`] — the planned-model executor tying them together: it
-//!   applies a plan to a [`Model`] and runs forwards through the
-//!   workspace so steady-state serving performs no scratch allocation.
+//!   applies a plan to a [`Model`], packs every convolution filter once
+//!   into its kernel-consumable order ([`crate::conv::PackedFilter`]),
+//!   and runs forwards through the workspace with each layer's bias —
+//!   and a directly following ReLU — fused into the kernel's store
+//!   epilogue ([`crate::conv::Epilogue`]), so steady-state serving
+//!   performs no scratch allocation, no filter re-packing and no
+//!   separate bias/activation passes.
 //!
 //! ```
 //! use im2win::conv::AlgoKind;
@@ -59,6 +64,7 @@ pub use server::{Inference, Server, ServerReport, ShardConfig};
 pub use sharded::{ShardedReport, ShardedServer};
 pub use workspace::Workspace;
 
+use crate::conv::{Epilogue, PackedFilter};
 use crate::error::{Error, Result};
 use crate::model::{Model, Op};
 use crate::model::{global_avg_pool_into, linear_into, max_pool2d_into, relu_inplace};
@@ -68,23 +74,45 @@ use crate::tensor::{transform_into, Dims, Tensor4};
 pub struct Engine {
     model: Model,
     plans: Vec<LayerPlan>,
+    /// One pre-packed filter per convolution layer, in layer order —
+    /// built at plan time, so request-path forwards never re-pack.
+    packed: Vec<PackedFilter>,
+    /// Per-op flag: `true` marks a [`Op::Relu`] that is folded into the
+    /// preceding convolution's store epilogue (the executor skips it).
+    fused_relu: Vec<bool>,
     ws: Workspace,
 }
 
 impl Engine {
     /// Plan `model` with `planner` (consulting/filling `cache`), apply the
-    /// plan to its convolution layers, and wrap it for serving.
-    pub fn plan(mut model: Model, planner: &Planner, cache: &mut PlanCache) -> Result<Engine> {
+    /// plan to its convolution layers, pack every filter once, and wrap
+    /// it for serving.
+    pub fn plan(model: Model, planner: &Planner, cache: &mut PlanCache) -> Result<Engine> {
         let plans = planner.plan_model(&model, cache)?;
-        Planner::apply(&mut model, &plans)?;
-        Ok(Engine { model, plans, ws: Workspace::new() })
+        Self::build(model, plans)
     }
 
     /// Wrap `model` with explicit per-conv plans (tests, replaying a
     /// hand-written plan).
-    pub fn with_plans(mut model: Model, plans: Vec<LayerPlan>) -> Result<Engine> {
+    pub fn with_plans(model: Model, plans: Vec<LayerPlan>) -> Result<Engine> {
+        Self::build(model, plans)
+    }
+
+    /// Apply `plans` (via [`Conv2d::reconfigure`]) and rebuild the
+    /// per-layer packed-filter cache: reconfiguring a layer changes its
+    /// algorithm/layout, which invalidates any previous pack.
+    ///
+    /// [`Conv2d::reconfigure`]: crate::conv::Conv2d::reconfigure
+    fn build(mut model: Model, plans: Vec<LayerPlan>) -> Result<Engine> {
         Planner::apply(&mut model, &plans)?;
-        Ok(Engine { model, plans, ws: Workspace::new() })
+        let mut packed = Vec::new();
+        for op in model.ops() {
+            if let Op::Conv(conv) = op {
+                packed.push(conv.algorithm().prepare(conv.filter(), &conv.params, conv.layout())?);
+            }
+        }
+        let fused_relu = fused_relu_map(model.ops());
+        Ok(Engine { model, plans, packed, fused_relu, ws: Workspace::new() })
     }
 
     /// The planned model (its own `Model::forward` also follows the plan).
@@ -100,6 +128,18 @@ impl Engine {
     /// Scratch-arena statistics (hits/misses/parked bytes).
     pub fn workspace(&self) -> &Workspace {
         &self.ws
+    }
+
+    /// The per-layer packed filters, in convolution-layer order (one per
+    /// conv; packed once at plan time).
+    pub fn packed_filters(&self) -> &[PackedFilter] {
+        &self.packed
+    }
+
+    /// Number of ReLU ops folded into a preceding convolution's fused
+    /// store epilogue.
+    pub fn fused_relu_count(&self) -> usize {
+        self.fused_relu.iter().filter(|&&f| f).count()
     }
 
     /// Output dims for a batch-`n` input.
@@ -149,25 +189,41 @@ impl Engine {
         let mut x = ws.take_tensor(&tag, d, self.model.layout());
         transform_into(input, &mut x);
 
+        let mut conv_idx = 0usize;
         for (i, op) in self.model.ops().iter().enumerate() {
             let next_d = op.out_dims(d)?;
             let next_tag = format!("act:{i}:{n}");
             match op {
                 Op::Relu => {
-                    relu_inplace(&mut x);
+                    // A fused ReLU already happened inside the previous
+                    // conv's store epilogue — skip the extra pass.
+                    if !self.fused_relu[i] {
+                        relu_inplace(&mut x);
+                    }
                     d = next_d;
                     continue; // in place: keep lease and tag
                 }
                 Op::Conv(conv) => {
                     let p = conv.params.with_batch(n);
+                    // Fold the layer's bias — and a directly following
+                    // ReLU — into the kernel's accumulator stores.
+                    let fuse_relu = self.fused_relu.get(i + 1).copied().unwrap_or(false);
+                    let ep = match (conv.bias(), fuse_relu) {
+                        (Some(b), true) => Epilogue::BiasRelu(b),
+                        (Some(b), false) => Epilogue::Bias(b),
+                        (None, true) => Epilogue::Relu,
+                        (None, false) => Epilogue::None,
+                    };
+                    let pack = &self.packed[conv_idx];
+                    conv_idx += 1;
                     let mut y = ws.take_tensor(&next_tag, next_d, conv.layout());
                     if x.layout() == conv.layout() {
-                        conv.algorithm().run_with_workspace(&x, conv.filter(), &p, &mut y, ws)?;
+                        conv.algorithm().run_prepacked(&x, pack, &p, &mut y, ws, ep)?;
                     } else {
                         let ctag = format!("cvt:{i}:{n}");
                         let mut cx = ws.take_tensor(&ctag, d, conv.layout());
                         transform_into(&x, &mut cx);
-                        conv.algorithm().run_with_workspace(&cx, conv.filter(), &p, &mut y, ws)?;
+                        conv.algorithm().run_prepacked(&cx, pack, &p, &mut y, ws, ep)?;
                         ws.put_tensor(&ctag, cx);
                     }
                     ws.put_tensor(&tag, x);
@@ -202,10 +258,22 @@ impl Engine {
     }
 }
 
+/// Mark every [`Op::Relu`] that directly follows a convolution: those are
+/// folded into the conv's store epilogue and skipped by the executor.
+fn fused_relu_map(ops: &[Op]) -> Vec<bool> {
+    let mut fused = vec![false; ops.len()];
+    for i in 1..ops.len() {
+        if matches!(ops[i], Op::Relu) && matches!(ops[i - 1], Op::Conv(_)) {
+            fused[i] = true;
+        }
+    }
+    fused
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::AlgoKind;
+    use crate::conv::{AlgoKind, ConvParams};
     use crate::model::zoo;
     use crate::tensor::Layout;
 
@@ -248,6 +316,58 @@ mod tests {
             "steady-state forwards must not allocate new scratch"
         );
         assert!(engine.workspace().hits() > 0);
+    }
+
+    #[test]
+    fn fused_bias_relu_matches_plain_model_forward() {
+        // The unfused reference: Conv2d::forward applies the bias as a
+        // separate pass and Op::Relu runs as its own op. The engine fuses
+        // both into the kernels' store epilogues — results must agree.
+        let x = Tensor4::random(Dims::new(3, 3, 32, 32), Layout::Nchw, 21);
+        let expect =
+            zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 6).unwrap().forward(&x).unwrap();
+        let model = zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 6).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+        assert_eq!(engine.packed_filters().len(), 3);
+        assert_eq!(engine.fused_relu_count(), 3, "all three conv→ReLU pairs must fuse");
+        let y = engine.forward(&x).unwrap();
+        assert!(
+            expect.allclose(&y, 1e-3, 1e-4),
+            "fused engine diverges: {}",
+            expect.max_abs_diff(&y)
+        );
+        // Repeats stay bit-identical (stale-scratch detection on the
+        // fused path).
+        let again = engine.forward(&x).unwrap();
+        assert_eq!(y.data(), again.data());
+    }
+
+    #[test]
+    fn relu_not_following_a_conv_is_not_fused() {
+        use crate::model::Op;
+        let p = ConvParams::new(1, 3, 8, 8, 4, 3, 3, 1).unwrap();
+        let f = Tensor4::random(p.filter_dims(), Layout::Nchw, 2);
+        // conv → pool → relu: the ReLU does not follow the conv directly.
+        let model = crate::model::Model::new("gap_relu", Layout::Nchw, 3, 8, 8)
+            .conv(p, AlgoKind::Naive, &f)
+            .unwrap()
+            .max_pool(2, 2)
+            .unwrap()
+            .relu();
+        let expect = model.forward(&Tensor4::random(p.input_dims(), Layout::Nchw, 3)).unwrap();
+        let model2 = crate::model::Model::new("gap_relu", Layout::Nchw, 3, 8, 8)
+            .conv(p, AlgoKind::Naive, &f)
+            .unwrap()
+            .max_pool(2, 2)
+            .unwrap()
+            .relu();
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan(model2, &Planner::new(), &mut cache).unwrap();
+        assert_eq!(engine.fused_relu_count(), 0);
+        assert!(matches!(engine.model().ops()[2], Op::Relu));
+        let y = engine.forward(&Tensor4::random(p.input_dims(), Layout::Nchw, 3)).unwrap();
+        assert!(expect.allclose(&y, 1e-3, 1e-4), "diff {}", expect.max_abs_diff(&y));
     }
 
     #[test]

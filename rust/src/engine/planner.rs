@@ -73,6 +73,14 @@ pub struct Planner {
     /// constants; candidates without measured samples still fall back to
     /// the analytic model.
     pub profile: Option<CalibrationProfile>,
+    /// Model prepacked-weights execution (the default): filters are
+    /// packed once at plan time ([`crate::conv::ConvAlgorithm::prepare`])
+    /// and the per-call filter re-pack traffic is dropped from
+    /// [`Planner::estimate`]. Set `false` to plan for one-shot
+    /// `run`/`run_with_workspace` execution, which re-packs the filter on
+    /// every call; the two execution models rank candidates differently,
+    /// so they also cache under distinct keys ([`Planner::cache_key`]).
+    pub prepacked: bool,
 }
 
 impl Default for Planner {
@@ -110,6 +118,7 @@ impl Planner {
             refine: false,
             refine_repeats: 3,
             profile: None,
+            prepacked: true,
         }
     }
 
@@ -240,7 +249,38 @@ impl Planner {
         // Layout conversion of the incoming activations (read + write).
         let convert_s = if layout == prev { 0.0 } else { 2.0 * input_bytes / bw };
 
-        compute_s + transform_s + convert_s
+        // Per-call filter re-pack traffic (write + re-read of the packed
+        // copy): im2win always packs, im2col packs on every layout except
+        // NCHW (whose filter is already GEMM-shaped), MEC packs F̂; direct
+        // runs on the raw filter. Prepacked execution pays this once at
+        // plan time, so the planner drops it — keeping calibrated plan
+        // ranking honest about what the serving hot path actually does.
+        // MEC is the exception: it has no fused prepacked path (its
+        // trait-default `run_prepacked` re-packs F̂ on every call), so its
+        // pack traffic is charged under both execution models.
+        let fpack_bytes = (p.c_out * p.c_in * p.h_f * p.w_f) as f64 * F32;
+        let pack_s = match algo {
+            AlgoKind::Mec => 2.0 * fpack_bytes / bw,
+            _ if self.prepacked => 0.0,
+            AlgoKind::Im2win => 2.0 * fpack_bytes / bw,
+            AlgoKind::Im2col if layout != Layout::Nchw => 2.0 * fpack_bytes / bw,
+            _ => 0.0,
+        };
+
+        compute_s + transform_s + convert_s + pack_s
+    }
+
+    /// Cache key for one layer decision under this planner's execution
+    /// model: [`layer_key`] plus a `-oneshot` suffix when per-call filter
+    /// packing is costed. Prepacked and one-shot planners rank candidates
+    /// differently and must not trade cache entries.
+    pub fn cache_key(&self, p: &ConvParams, prev: Layout) -> String {
+        let base = layer_key(p, prev, self.threads);
+        if self.prepacked {
+            base
+        } else {
+            format!("{base}-oneshot")
+        }
     }
 
     /// Pick the cheapest candidate for one layer given the incoming
@@ -295,7 +335,7 @@ impl Planner {
         for op in model.ops() {
             if let Op::Conv(conv) = op {
                 let p = conv.params.with_batch(self.batch);
-                let key = layer_key(&p, prev, self.threads);
+                let key = self.cache_key(&p, prev);
                 let plan = match cache.get(&key) {
                     Some(hit) if hit.tuned || !self.refine => hit,
                     _ => {
@@ -419,6 +459,46 @@ mod tests {
             layer_key(&p, Layout::Nchw, planner.threads),
             layer_key(&p, Layout::Nchw, shard.threads)
         );
+    }
+
+    #[test]
+    fn oneshot_planner_charges_filter_packing() {
+        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let pre = Planner::new();
+        assert!(pre.prepacked, "serving engines prepack by default");
+        let one = Planner { prepacked: false, ..Planner::new() };
+        // Packing algorithms cost strictly more per call without
+        // prepacking; direct (no pack) is unchanged.
+        for (algo, layout) in [(AlgoKind::Im2win, Layout::Nhwc), (AlgoKind::Im2col, Layout::Nhwc)]
+        {
+            let a = pre.estimate(algo, layout, &p, layout);
+            let b = one.estimate(algo, layout, &p, layout);
+            assert!(b > a, "{algo} {layout}: one-shot {b} must exceed prepacked {a}");
+        }
+        assert_eq!(
+            pre.estimate(AlgoKind::Direct, Layout::Nhwc, &p, Layout::Nhwc),
+            one.estimate(AlgoKind::Direct, Layout::Nhwc, &p, Layout::Nhwc),
+        );
+        // MEC has no fused prepacked path (trait-default run_prepacked
+        // re-packs F̂ per call), so its pack cost is charged either way —
+        // the prepacked planner must not under-cost it.
+        assert_eq!(
+            pre.estimate(AlgoKind::Mec, Layout::Nhwc, &p, Layout::Nhwc),
+            one.estimate(AlgoKind::Mec, Layout::Nhwc, &p, Layout::Nhwc),
+        );
+        assert!(
+            pre.estimate(AlgoKind::Mec, Layout::Nhwc, &p, Layout::Nhwc)
+                > pre.estimate(AlgoKind::Im2win, Layout::Nhwc, &p, Layout::Nhwc),
+            "prepacked im2win must out-rank never-prepacked MEC on equal footing"
+        );
+        // im2col's NCHW filter is already GEMM-shaped: no pack either way.
+        assert_eq!(
+            pre.estimate(AlgoKind::Im2col, Layout::Nchw, &p, Layout::Nchw),
+            one.estimate(AlgoKind::Im2col, Layout::Nchw, &p, Layout::Nchw),
+        );
+        // The two execution models never trade plan-cache entries.
+        assert_ne!(pre.cache_key(&p, Layout::Nchw), one.cache_key(&p, Layout::Nchw));
+        assert_eq!(pre.cache_key(&p, Layout::Nchw), layer_key(&p, Layout::Nchw, pre.threads));
     }
 
     #[test]

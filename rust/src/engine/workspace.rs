@@ -21,8 +21,10 @@
 //! Buffers are returned **dirty** — contents are whatever the previous
 //! user left. Every kernel routed through the arena fully overwrites its
 //! scratch (the im2win transform and the im2col/MEC lowerings write every
-//! element; convolution outputs are zeroed by `run_into`), which the
-//! stale-scratch property tests in `tests/engine.rs` pin down.
+//! element; the im2win/direct kernels store every output element exactly
+//! once, and the GEMM-backed paths zero their accumulation target first),
+//! which the stale-scratch property tests in `tests/engine.rs` and
+//! `tests/fused_epilogue.rs` pin down.
 
 use crate::tensor::{AlignedBuf, Dims, Layout, Tensor4};
 use std::collections::HashMap;

@@ -4,6 +4,11 @@
 //! twelve 8-lane accumulators (the paper's register blocking, §III-D,
 //! applied to the GEMM baseline). Per `k` iteration: two packed-B loads,
 //! six packed-A broadcasts, twelve FMAs.
+//!
+//! Both kernels can fold a bias/ReLU [`TileEpilogue`] into the final
+//! accumulator store — the fused path the im2col convolution uses so a
+//! serving engine never runs a separate bias/activation pass over the
+//! GEMM output.
 
 use crate::simd::{F32x8, LANES};
 
@@ -12,7 +17,98 @@ pub const MR: usize = 6;
 /// Columns per register tile (two 8-lane vectors).
 pub const NR: usize = 16;
 
-/// Full `MR×NR` microkernel: `C[0..MR][0..NR] += Ap · Bp`.
+/// Epilogue applied by a microkernel as it stores its C tile.
+///
+/// `row0`/`col0` are the tile's global C coordinates, so the bias slice is
+/// indexed absolutely. Only the *final* k-block of a GEMM may carry a
+/// non-`None` epilogue — earlier blocks store partial sums.
+#[derive(Clone, Copy)]
+pub(crate) enum TileEpilogue<'a> {
+    /// Plain accumulate-and-store (no epilogue).
+    None,
+    /// Bias indexed by the C row (GEMMs whose rows are output channels);
+    /// optional ReLU clamp after the add.
+    PerRow {
+        /// Bias by global row index, if any.
+        bias: Option<&'a [f32]>,
+        /// Clamp to `max(v, 0)` after the bias.
+        relu: bool,
+        /// Global row index of the tile's first row.
+        row0: usize,
+    },
+    /// Bias indexed by the C column (GEMMs whose columns are output
+    /// channels); optional ReLU clamp after the add.
+    PerCol {
+        /// Bias by global column index, if any.
+        bias: Option<&'a [f32]>,
+        /// Clamp to `max(v, 0)` after the bias.
+        relu: bool,
+        /// Global column index of the tile's first column.
+        col0: usize,
+    },
+}
+
+impl TileEpilogue<'_> {
+    /// Scalar application at tile-relative row `r`, column `j`.
+    #[inline(always)]
+    fn apply(&self, r: usize, j: usize, v: f32) -> f32 {
+        match *self {
+            TileEpilogue::None => v,
+            TileEpilogue::PerRow { bias, relu, row0 } => {
+                let v = v + bias.map_or(0.0, |b| b[row0 + r]);
+                if relu {
+                    v.max(0.0)
+                } else {
+                    v
+                }
+            }
+            TileEpilogue::PerCol { bias, relu, col0 } => {
+                let v = v + bias.map_or(0.0, |b| b[col0 + j]);
+                if relu {
+                    v.max(0.0)
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    /// Vector application to 8 consecutive columns starting at
+    /// tile-relative (`r`, `j`).
+    ///
+    /// # Safety
+    /// For `PerCol` with a bias, `col0 + j + 8` must be within the bias
+    /// slice (guaranteed when the 8 columns are real C columns).
+    #[inline(always)]
+    unsafe fn apply_vec(&self, r: usize, j: usize, v: F32x8) -> F32x8 {
+        match *self {
+            TileEpilogue::None => v,
+            TileEpilogue::PerRow { bias, relu, row0 } => {
+                let mut v = match bias {
+                    Some(b) => v.add(F32x8::splat(b[row0 + r])),
+                    None => v,
+                };
+                if relu {
+                    v = v.max(F32x8::zero());
+                }
+                v
+            }
+            TileEpilogue::PerCol { bias, relu, col0 } => {
+                let mut v = match bias {
+                    Some(b) => v.add(F32x8::load(b.as_ptr().add(col0 + j))),
+                    None => v,
+                };
+                if relu {
+                    v = v.max(F32x8::zero());
+                }
+                v
+            }
+        }
+    }
+}
+
+/// Full `MR×NR` microkernel: `C[0..MR][0..NR] += Ap · Bp`, with `ep`
+/// folded into the stores.
 ///
 /// * `ap`: packed A strip, `kc` steps × MR floats (k-major)
 /// * `bp`: packed B strip, `kc` steps × NR floats (k-major)
@@ -20,9 +116,17 @@ pub const NR: usize = 16;
 ///
 /// # Safety
 /// `ap`/`bp` must hold `kc*MR` / `kc*NR` floats; `c` must be valid for
-/// reads/writes over an `MR×NR` tile with leading dimension `ldc`.
+/// reads/writes over an `MR×NR` tile with leading dimension `ldc`; a
+/// `PerCol` bias must cover all NR tile columns.
 #[inline]
-pub unsafe fn microkernel(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize) {
+pub(crate) unsafe fn microkernel(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    ep: TileEpilogue<'_>,
+) {
     // 6 rows × 2 vector columns of accumulators.
     let mut acc = [[F32x8::zero(); 2]; MR];
     let mut a = ap;
@@ -41,18 +145,22 @@ pub unsafe fn microkernel(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32
     }
     for r in 0..MR {
         let row = c.add(r * ldc);
-        F32x8::load(row).add(acc[r][0]).store(row);
-        F32x8::load(row.add(LANES)).add(acc[r][1]).store(row.add(LANES));
+        let v0 = ep.apply_vec(r, 0, F32x8::load(row).add(acc[r][0]));
+        v0.store(row);
+        let v1 = ep.apply_vec(r, LANES, F32x8::load(row.add(LANES)).add(acc[r][1]));
+        v1.store(row.add(LANES));
     }
 }
 
 /// Edge-tile microkernel for partial `mr×nr` tiles (`mr ≤ MR`, `nr ≤ NR`).
-/// Computes into a full-size local tile, then scatters the valid region.
+/// Computes into a full-size local tile, then adds the valid region into C
+/// in 8-lane chunks (scalar tail), applying `ep` at the store.
 ///
 /// # Safety
-/// Same as [`microkernel`] except `c` only needs validity over `mr×nr`.
+/// Same as [`microkernel`] except `c` only needs validity over `mr×nr`
+/// and a `PerCol` bias only needs to cover the `nr` real columns.
 #[inline]
-pub unsafe fn microkernel_partial(
+pub(crate) unsafe fn microkernel_partial(
     kc: usize,
     ap: *const f32,
     bp: *const f32,
@@ -60,13 +168,25 @@ pub unsafe fn microkernel_partial(
     ldc: usize,
     mr: usize,
     nr: usize,
+    ep: TileEpilogue<'_>,
 ) {
     let mut tile = [0.0f32; MR * NR];
-    microkernel(kc, ap, bp, tile.as_mut_ptr(), NR);
+    microkernel(kc, ap, bp, tile.as_mut_ptr(), NR, TileEpilogue::None);
+    let nr_vec = nr - nr % LANES;
     for r in 0..mr {
-        for j in 0..nr {
-            // `tile` accumulated from zero; add into C.
-            *c.add(r * ldc + j) += tile[r * NR + j] - 0.0;
+        let crow = c.add(r * ldc);
+        let trow = tile.as_ptr().add(r * NR);
+        let mut j = 0;
+        while j < nr_vec {
+            // `tile` accumulated from zero; add into C vector-wide. The
+            // 8 columns are real (j + 8 <= nr), so a PerCol bias load is
+            // in bounds.
+            let v = ep.apply_vec(r, j, F32x8::load(crow.add(j)).add(F32x8::load(trow.add(j))));
+            v.store(crow.add(j));
+            j += LANES;
+        }
+        for j in nr_vec..nr {
+            *crow.add(j) = ep.apply(r, j, *crow.add(j) + *trow.add(j));
         }
     }
 }
@@ -96,7 +216,9 @@ mod tests {
         let bp: Vec<f32> = (0..kc * NR).map(|i| bt[(i / NR) * NR + i % NR]).collect();
         let ap = pack(kc, MR, kc, &a, MR);
         let mut c = vec![1.0f32; MR * NR];
-        unsafe { microkernel(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), NR) };
+        unsafe {
+            microkernel(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), NR, TileEpilogue::None)
+        };
         for r in 0..MR {
             for j in 0..NR {
                 let mut expect = 1.0;
@@ -117,11 +239,92 @@ mod tests {
         // Guard band: 10x20 C filled with sentinel.
         let ldc = 20;
         let mut c = vec![7.0f32; 10 * ldc];
-        unsafe { microkernel_partial(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), ldc, mr, nr) };
+        unsafe {
+            microkernel_partial(
+                kc,
+                ap.as_ptr(),
+                bp.as_ptr(),
+                c.as_mut_ptr(),
+                ldc,
+                mr,
+                nr,
+                TileEpilogue::None,
+            )
+        };
         for r in 0..10 {
             for j in 0..ldc {
                 let expect = if r < mr && j < nr { 7.0 + kc as f32 } else { 7.0 };
                 assert_eq!(c[r * ldc + j], expect, "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_tile_vector_chunk_matches_scalar_tail() {
+        // nr = 13 exercises one full 8-lane chunk plus a 5-wide tail.
+        let kc = 3;
+        let (mr, nr) = (MR, 13);
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i % 4) as f32 - 1.5).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i % 6) as f32 * 0.25).collect();
+        let ldc = NR;
+        let mut c = vec![0.5f32; MR * ldc];
+        let mut expect = c.clone();
+        unsafe {
+            microkernel_partial(
+                kc,
+                ap.as_ptr(),
+                bp.as_ptr(),
+                c.as_mut_ptr(),
+                ldc,
+                mr,
+                nr,
+                TileEpilogue::None,
+            );
+            microkernel(kc, ap.as_ptr(), bp.as_ptr(), expect.as_mut_ptr(), ldc, TileEpilogue::None);
+        }
+        for r in 0..mr {
+            for j in 0..nr {
+                assert_eq!(c[r * ldc + j], expect[r * ldc + j], "r={r} j={j}");
+            }
+            for j in nr..NR {
+                assert_eq!(c[r * ldc + j], 0.5, "r={r} j={j}: outside nr must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogues_match_separate_application() {
+        let kc = 5;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i % 5) as f32 - 2.0).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i % 7) as f32 * 0.3 - 0.9).collect();
+        let row_bias: Vec<f32> = (0..MR + 2).map(|i| i as f32 * 0.4 - 1.0).collect();
+        let col_bias: Vec<f32> = (0..NR + 3).map(|i| 0.8 - i as f32 * 0.2).collect();
+        let mut plain = vec![0.25f32; MR * NR];
+        unsafe {
+            microkernel(kc, ap.as_ptr(), bp.as_ptr(), plain.as_mut_ptr(), NR, TileEpilogue::None)
+        };
+        // Per-row with offset row0=2 + ReLU.
+        let mut fused = vec![0.25f32; MR * NR];
+        let ep = TileEpilogue::PerRow { bias: Some(&row_bias), relu: true, row0: 2 };
+        unsafe { microkernel(kc, ap.as_ptr(), bp.as_ptr(), fused.as_mut_ptr(), NR, ep) };
+        for r in 0..MR {
+            for j in 0..NR {
+                let expect = (plain[r * NR + j] + row_bias[2 + r]).max(0.0);
+                assert!((fused[r * NR + j] - expect).abs() < 1e-5, "per-row r={r} j={j}");
+            }
+        }
+        // Per-col without ReLU through the partial kernel (nr=11: both
+        // the vector chunk and the scalar tail apply the epilogue).
+        let (mr, nr) = (4, 11);
+        let mut fused = vec![0.25f32; MR * NR];
+        let ep = TileEpilogue::PerCol { bias: Some(&col_bias), relu: false, col0: 3 };
+        unsafe {
+            microkernel_partial(kc, ap.as_ptr(), bp.as_ptr(), fused.as_mut_ptr(), NR, mr, nr, ep)
+        };
+        for r in 0..mr {
+            for j in 0..nr {
+                let expect = plain[r * NR + j] + col_bias[3 + j];
+                assert!((fused[r * NR + j] - expect).abs() < 1e-5, "per-col r={r} j={j}");
             }
         }
     }

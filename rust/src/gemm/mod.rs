@@ -23,7 +23,26 @@ mod kernels;
 
 use crate::parallel;
 use crate::tensor::AlignedBuf;
-use kernels::{microkernel, microkernel_partial, MR, NR};
+use kernels::{microkernel, microkernel_partial, TileEpilogue, MR, NR};
+
+/// Bias/ReLU epilogue fused into [`sgemm_fused`]'s final accumulator
+/// stores (the im2col convolution's fused path).
+///
+/// The epilogue fires exactly once per C element, on the GEMM's last
+/// k-block — earlier k-blocks store partial sums and must stay raw. It
+/// therefore describes the *finished* value `C + A·B`.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmEpilogue<'a> {
+    /// Per-row or per-column bias (length ≥ `m` resp. `n`); `None` adds
+    /// nothing.
+    pub bias: Option<&'a [f32]>,
+    /// Clamp each finished element to `max(v, 0)` after the bias.
+    pub relu: bool,
+    /// Index the bias (and identity of the epilogue) by C's row (`true`)
+    /// or column (`false`) — whichever dimension carries the output
+    /// channels in the caller's GEMM shape.
+    pub per_row: bool,
+}
 
 /// Cache-block size along `k` (rows of a packed B panel). `KC·NR` floats of
 /// B must stay L1-resident: 256·16·4 B = 16 KiB.
@@ -52,6 +71,26 @@ pub fn sgemm(
     c: &mut [f32],
     ldc: usize,
 ) {
+    sgemm_fused(m, n, k, a, lda, b, ldb, c, ldc, None);
+}
+
+/// [`sgemm`] with an optional bias/ReLU epilogue folded into the final
+/// k-block's accumulator stores (see [`GemmEpilogue`]). With `ep ==
+/// None` this is exactly `sgemm`. Degenerate shapes (`m`, `n` or `k`
+/// zero) return without touching C — no epilogue is applied.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_fused(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    ep: Option<GemmEpilogue<'_>>,
+) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
@@ -59,6 +98,12 @@ pub fn sgemm(
     assert!(a.len() >= (m - 1) * lda + k, "A slice too small");
     assert!(b.len() >= (k - 1) * ldb + n, "B slice too small");
     assert!(c.len() >= (m - 1) * ldc + n, "C slice too small");
+    if let Some(e) = &ep {
+        if let Some(bias) = e.bias {
+            let need = if e.per_row { m } else { n };
+            assert!(bias.len() >= need, "epilogue bias shorter than its C dimension");
+        }
+    }
 
     let pool = parallel::current();
     let c_addr = c.as_mut_ptr() as usize;
@@ -68,6 +113,9 @@ pub fn sgemm(
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
+            // The epilogue fires only when this k-block finishes the
+            // reduction — every earlier block stores partial sums.
+            let block_ep = if pc + kc == k { ep } else { None };
             // Pack B panel: kc × nc, grouped in NR-wide column strips.
             let bpack = pack_b(&b[pc * ldb + jc..], ldb, kc, nc);
             let mblocks = m.div_ceil(MC);
@@ -79,19 +127,44 @@ pub fn sgemm(
                 // SAFETY: row panels [ic, ic+mc) are disjoint across the
                 // parallel iterations, so the raw writes never alias.
                 let c_ptr = c_addr as *mut f32;
-                macro_tile(&apack, &bpack, mc, nc, kc, unsafe {
-                    std::slice::from_raw_parts_mut(
-                        c_ptr.add(ic * ldc + jc),
-                        (mc - 1) * ldc + nc,
-                    )
-                }, ldc);
+                macro_tile(
+                    &apack,
+                    &bpack,
+                    mc,
+                    nc,
+                    kc,
+                    unsafe {
+                        std::slice::from_raw_parts_mut(
+                            c_ptr.add(ic * ldc + jc),
+                            (mc - 1) * ldc + nc,
+                        )
+                    },
+                    ldc,
+                    block_ep,
+                    ic,
+                    jc,
+                );
             });
         }
     }
 }
 
 /// Multiply one packed `mc×kc` A block with a packed `kc×nc` B panel.
-fn macro_tile(apack: &[f32], bpack: &[f32], mc: usize, nc: usize, kc: usize, c: &mut [f32], ldc: usize) {
+/// `row0`/`col0` locate the block in the full C matrix so per-tile
+/// epilogues index the bias absolutely.
+#[allow(clippy::too_many_arguments)]
+fn macro_tile(
+    apack: &[f32],
+    bpack: &[f32],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c: &mut [f32],
+    ldc: usize,
+    ep: Option<GemmEpilogue<'_>>,
+    row0: usize,
+    col0: usize,
+) {
     for jr in (0..nc).step_by(NR) {
         let nr = NR.min(nc - jr);
         let bstrip = &bpack[jr * kc..jr * kc + kc * NR];
@@ -99,13 +172,38 @@ fn macro_tile(apack: &[f32], bpack: &[f32], mc: usize, nc: usize, kc: usize, c: 
             let mr = MR.min(mc - ir);
             let astrip = &apack[ir * kc..ir * kc + kc * MR];
             let coff = ir * ldc + jr;
+            let tile_ep = match &ep {
+                None => TileEpilogue::None,
+                Some(e) if e.per_row => {
+                    TileEpilogue::PerRow { bias: e.bias, relu: e.relu, row0: row0 + ir }
+                }
+                Some(e) => TileEpilogue::PerCol { bias: e.bias, relu: e.relu, col0: col0 + jr },
+            };
             if mr == MR && nr == NR {
                 // SAFETY: full tile fits in C by loop bounds.
-                unsafe { microkernel(kc, astrip.as_ptr(), bstrip.as_ptr(), c.as_mut_ptr().add(coff), ldc) };
+                unsafe {
+                    microkernel(
+                        kc,
+                        astrip.as_ptr(),
+                        bstrip.as_ptr(),
+                        c.as_mut_ptr().add(coff),
+                        ldc,
+                        tile_ep,
+                    )
+                };
             } else {
                 // SAFETY: partial kernel bounds writes to mr×nr.
                 unsafe {
-                    microkernel_partial(kc, astrip.as_ptr(), bstrip.as_ptr(), c.as_mut_ptr().add(coff), ldc, mr, nr)
+                    microkernel_partial(
+                        kc,
+                        astrip.as_ptr(),
+                        bstrip.as_ptr(),
+                        c.as_mut_ptr().add(coff),
+                        ldc,
+                        mr,
+                        nr,
+                        tile_ep,
+                    )
                 };
             }
         }
@@ -255,6 +353,63 @@ mod tests {
         sgemm(m, n, k, &a, lda, &b, ldb, &mut c, ldc);
         sgemm_naive(m, n, k, &a, lda, &b, ldb, &mut c_ref, ldc);
         assert_eq!(c, c_ref);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_passes() {
+        // k > KC forces multiple k-blocks: the epilogue must fire exactly
+        // once, on the final block. Odd m/n exercise partial tiles.
+        for (m, n, k) in [(7, 17, 9), (MR * 2 + 1, NR * 2 + 5, KC + 13)] {
+            let a = fill(m * k, 4);
+            let b = fill(k * n, 5);
+            let c0 = fill(m * n, 6);
+            let row_bias = fill(m, 7);
+            let col_bias = fill(n, 8);
+            for per_row in [true, false] {
+                for relu in [true, false] {
+                    let bias: &[f32] = if per_row { &row_bias } else { &col_bias };
+                    let mut fused = c0.clone();
+                    sgemm_fused(
+                        m,
+                        n,
+                        k,
+                        &a,
+                        k,
+                        &b,
+                        n,
+                        &mut fused,
+                        n,
+                        Some(GemmEpilogue { bias: Some(bias), relu, per_row }),
+                    );
+                    let mut expect = c0.clone();
+                    sgemm_naive(m, n, k, &a, k, &b, n, &mut expect, n);
+                    for i in 0..m * n {
+                        let bias_i = if per_row { row_bias[i / n] } else { col_bias[i % n] };
+                        let mut e = expect[i] + bias_i;
+                        if relu {
+                            e = e.max(0.0);
+                        }
+                        assert!(
+                            (fused[i] - e).abs() <= 1e-3 * (1.0 + e.abs()),
+                            "({m},{n},{k}) per_row={per_row} relu={relu} idx {i}: {} vs {e}",
+                            fused[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_none_is_plain_sgemm() {
+        let (m, n, k) = (13, 21, 34);
+        let a = fill(m * k, 9);
+        let b = fill(k * n, 10);
+        let mut c1 = fill(m * n, 11);
+        let mut c2 = c1.clone();
+        sgemm(m, n, k, &a, k, &b, n, &mut c1, n);
+        sgemm_fused(m, n, k, &a, k, &b, n, &mut c2, n, None);
+        assert_eq!(c1, c2);
     }
 
     #[test]

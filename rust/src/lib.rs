@@ -27,10 +27,12 @@
 //! * an inference [`engine`]: per-layer plan selection over
 //!   (algorithm × layout × blocking) with an analytic cost model, a
 //!   persistent JSON plan cache (shard-aware keys), a reusable scratch
-//!   workspace, a micro-batching server for single-image traffic, and a
-//!   sharded deadline-batching front ([`engine::ShardedServer`]) with
-//!   least-loaded dispatch and optional NUMA-style worker pinning
-//!   (`pinning` feature).
+//!   workspace, per-layer prepacked filters ([`conv::PackedFilter`])
+//!   with bias/ReLU fused into the kernels' store epilogues
+//!   ([`conv::Epilogue`]), a micro-batching server for single-image
+//!   traffic, and a sharded deadline-batching front
+//!   ([`engine::ShardedServer`]) with least-loaded dispatch and optional
+//!   NUMA-style worker pinning (`pinning` feature).
 //!
 //! ## Quickstart
 //!
@@ -69,7 +71,7 @@ pub mod prelude {
     pub use crate::conv::direct::DirectConv;
     pub use crate::conv::im2col::Im2colConv;
     pub use crate::conv::im2win::Im2winConv;
-    pub use crate::conv::{Conv2d, ConvAlgorithm, ConvParams};
+    pub use crate::conv::{Conv2d, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
     pub use crate::error::{Error, Result};
     pub use crate::tensor::{Dims, Layout, Tensor4};
 }

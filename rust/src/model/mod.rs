@@ -153,7 +153,31 @@ impl Model {
     }
 
     /// Append a convolution (filter generated or supplied by the caller).
-    pub fn conv(mut self, params: ConvParams, algo: AlgoKind, filter: &Tensor4) -> Result<Self> {
+    pub fn conv(self, params: ConvParams, algo: AlgoKind, filter: &Tensor4) -> Result<Self> {
+        self.push_conv(params, algo, filter, None)
+    }
+
+    /// Append a convolution with a per-output-channel bias. The bias is
+    /// part of the conv op (applied by [`Conv2d::forward`]); the
+    /// inference engine fuses it — together with a directly following
+    /// [`Op::Relu`] — into the kernel's store epilogue.
+    pub fn conv_bias(
+        self,
+        params: ConvParams,
+        algo: AlgoKind,
+        filter: &Tensor4,
+        bias: &[f32],
+    ) -> Result<Self> {
+        self.push_conv(params, algo, filter, Some(bias))
+    }
+
+    fn push_conv(
+        mut self,
+        params: ConvParams,
+        algo: AlgoKind,
+        filter: &Tensor4,
+        bias: Option<&[f32]>,
+    ) -> Result<Self> {
         let d = self.out_dims()?;
         let p = params.with_batch(1);
         if p.input_dims() != d {
@@ -163,7 +187,11 @@ impl Model {
                 d
             )));
         }
-        self.ops.push(Op::Conv(Conv2d::new(p, algo, self.layout, filter)?));
+        let layer = match bias {
+            Some(b) => Conv2d::with_bias(p, algo, self.layout, filter, b)?,
+            None => Conv2d::new(p, algo, self.layout, filter)?,
+        };
+        self.ops.push(Op::Conv(layer));
         Ok(self)
     }
 
@@ -300,6 +328,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn conv_bias_shifts_outputs_per_channel() {
+        let p = ConvParams::new(1, 2, 6, 6, 3, 3, 3, 1).unwrap();
+        let f = Tensor4::random(p.filter_dims(), Layout::Nchw, 4);
+        let x = Tensor4::random(p.input_dims(), Layout::Nchw, 5);
+        let bias = [0.5f32, -1.0, 2.0];
+        let plain = Model::new("p", Layout::Nchw, 2, 6, 6)
+            .conv(p, AlgoKind::Naive, &f)
+            .unwrap()
+            .forward(&x)
+            .unwrap();
+        let biased = Model::new("b", Layout::Nchw, 2, 6, 6)
+            .conv_bias(p, AlgoKind::Naive, &f, &bias)
+            .unwrap()
+            .forward(&x)
+            .unwrap();
+        for (n, c, h, w) in plain.dims().iter() {
+            let d = biased.get(n, c, h, w) - plain.get(n, c, h, w);
+            assert!((d - bias[c]).abs() < 1e-6, "c={c}: shift {d}");
+        }
+        // Wrong bias length is rejected at build time.
+        assert!(Model::new("bad", Layout::Nchw, 2, 6, 6)
+            .conv_bias(p, AlgoKind::Naive, &f, &bias[..2])
+            .is_err());
     }
 
     #[test]

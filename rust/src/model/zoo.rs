@@ -47,6 +47,31 @@ pub fn tinynet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
         .linear(head, 10)
 }
 
+/// [`tinynet`] with a per-channel bias on every convolution — the model
+/// that exercises (and benchmarks) the engine's fused bias+ReLU epilogue
+/// path. Same geometry and filters as `tinynet(layout, algo, seed)`.
+pub fn tinynet_biased(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
+    let p1 = ConvParams::new(1, 3, 32, 32, 16, 3, 3, 1)?;
+    let p2 = ConvParams::new(1, 16, 15, 15, 32, 3, 3, 1)?;
+    let p3 = ConvParams::new(1, 32, 6, 6, 32, 3, 3, 1)?;
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let head: Vec<f32> = (0..32 * 10).map(|_| rng.f32() * 0.1).collect();
+    let mut brng = Rng::new(seed ^ 0xB1A5);
+    let mut bias = |c: usize| -> Vec<f32> { (0..c).map(|_| brng.f32() * 0.2).collect() };
+    let (b1, b2, b3) = (bias(16), bias(32), bias(32));
+    Model::new("tinynet_biased", layout, 3, 32, 32)
+        .conv_bias(p1, algo, &filter(&p1, seed + 1), &b1)?
+        .relu()
+        .max_pool(2, 2)?
+        .conv_bias(p2, algo, &filter(&p2, seed + 2), &b2)?
+        .relu()
+        .max_pool(2, 2)?
+        .conv_bias(p3, algo, &filter(&p3, seed + 3), &b3)?
+        .relu()
+        .global_avg_pool()
+        .linear(head, 10)
+}
+
 /// VGG-style stack from the paper's 3×3/stride-1 layer family, at an
 /// `edge×edge` input (use 64 for a quick run, 224 for realism).
 pub fn vgg_stack(layout: Layout, algo: AlgoKind, edge: usize, seed: u64) -> Result<Model> {
@@ -101,6 +126,25 @@ mod tests {
                     base.max_abs_diff(&y)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn tinynet_biased_agrees_across_algorithms() {
+        let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nchw, 12);
+        let base = tinynet_biased(Layout::Nchw, AlgoKind::Naive, 9).unwrap().forward(&x).unwrap();
+        // The bias must actually matter (otherwise the fused-epilogue
+        // tests exercise nothing).
+        let unbiased = tinynet(Layout::Nchw, AlgoKind::Naive, 9).unwrap().forward(&x).unwrap();
+        assert!(base.max_abs_diff(&unbiased) > 1e-4, "bias had no effect");
+        for algo in AlgoKind::BENCHED {
+            let m = tinynet_biased(Layout::Nhwc, algo, 9).unwrap();
+            let y = m.forward(&x).unwrap();
+            assert!(
+                base.allclose(&y, 1e-3, 1e-4),
+                "{algo}: diff {}",
+                base.max_abs_diff(&y)
+            );
         }
     }
 

@@ -188,6 +188,51 @@ fn interleaved_batch_sizes_do_not_cross_contaminate() {
     assert_eq!(engine.workspace().misses(), misses);
 }
 
+// -------------------------------------------- prepacked serving steady state
+
+#[test]
+fn serving_steady_state_packs_each_filter_exactly_once() {
+    // The weights-stationary contract: every conv filter is packed
+    // exactly once, at plan time — never on the request path. The pack
+    // counter is thread-local and packing happens on the calling thread,
+    // so concurrent tests cannot perturb this count.
+    let model = zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 5).unwrap();
+    let n_convs = model.conv_params().len();
+    let before = im2win::conv::filter_pack_count();
+    let mut cache = PlanCache::in_memory();
+    let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+    assert_eq!(
+        im2win::conv::filter_pack_count() - before,
+        n_convs,
+        "plan time must pack exactly once per conv layer"
+    );
+    assert_eq!(engine.packed_filters().len(), n_convs);
+
+    // Warm up both batch sizes the steady-state loop uses.
+    let x1 = Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, 31);
+    let x4 = Tensor4::random(Dims::new(4, 3, 32, 32), Layout::Nchw, 32);
+    let first1 = engine.forward(&x1).unwrap();
+    let first4 = engine.forward(&x4).unwrap();
+    let packs_warm = im2win::conv::filter_pack_count();
+    let misses_warm = engine.workspace().misses();
+
+    for _ in 0..10 {
+        assert_eq!(engine.forward(&x1).unwrap().data(), first1.data());
+        assert_eq!(engine.forward(&x4).unwrap().data(), first4.data());
+    }
+    assert_eq!(
+        im2win::conv::filter_pack_count(),
+        packs_warm,
+        "steady-state serving re-packed a filter"
+    );
+    assert_eq!(
+        engine.workspace().misses(),
+        misses_warm,
+        "steady-state serving allocated new scratch"
+    );
+    assert!(engine.workspace().hits() > 0);
+}
+
 // ----------------------------------------------------------------- server
 
 #[test]

@@ -1,0 +1,223 @@
+//! Fused prepacked-filter + epilogue parity tests.
+//!
+//! The contract under test: for every algorithm with a fused path
+//! (im2win, direct, im2col) on every layout it supports,
+//! `prepare` + `run_prepacked(.., epilogue)` must match the unfused
+//! reference `conv → +bias → ReLU` within 1e-4 — including recycled
+//! (stale) workspace scratch, NaN-poisoned output storage, CHWN8
+//! batch-padding invariants, and pack/run mismatch rejection.
+
+use im2win::conv::{reference_conv, AlgoKind, Epilogue};
+use im2win::engine::Workspace;
+use im2win::prelude::*;
+use im2win::tensor::Dims;
+
+/// Unfused reference: reference_conv, then bias and ReLU as separate
+/// logical passes.
+fn reference_with_epilogue(
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    layout: Layout,
+    bias: Option<&[f32]>,
+    relu: bool,
+) -> Tensor4 {
+    let mut out = reference_conv(input, filter, p, layout);
+    for (n, c, h, w) in out.dims().iter() {
+        let mut v = out.get(n, c, h, w);
+        if let Some(b) = bias {
+            v += b[c];
+        }
+        if relu {
+            v = v.max(0.0);
+        }
+        out.set(n, c, h, w, v);
+    }
+    out
+}
+
+fn epilogue_for(bias: Option<&[f32]>, relu: bool) -> Epilogue<'_> {
+    match (bias, relu) {
+        (None, false) => Epilogue::None,
+        (None, true) => Epilogue::Relu,
+        (Some(b), false) => Epilogue::Bias(b),
+        (Some(b), true) => Epilogue::BiasRelu(b),
+    }
+}
+
+const FUSED_ALGOS: [AlgoKind; 3] = [AlgoKind::Im2win, AlgoKind::Direct, AlgoKind::Im2col];
+
+#[test]
+fn fused_matches_unfused_reference_all_layouts() {
+    // Two geometries: n=5/co=7 exercises the CHWN8 partial batch block
+    // and every kernel's channel tail; the second exercises vector batch
+    // lanes (n=10), strides and a rectangular filter.
+    let problems = [
+        ConvParams::new(5, 6, 12, 12, 7, 3, 3, 1).unwrap(),
+        ConvParams::with_strides(10, 8, 11, 9, 4, 3, 2, 2, 1).unwrap(),
+    ];
+    for (pi, p) in problems.iter().enumerate() {
+        let bias: Vec<f32> = (0..p.c_out).map(|c| (c as f32) * 0.3 - 0.8).collect();
+        for algo in FUSED_ALGOS {
+            let a = algo.build();
+            for layout in Layout::ALL {
+                if !a.supports(layout) {
+                    continue;
+                }
+                let x = Tensor4::random(p.input_dims(), layout, 40 + pi as u64);
+                let f = Tensor4::random(p.filter_dims(), layout, 50 + pi as u64);
+                let packed = a.prepare(&f, p, layout).unwrap();
+                let mut ws = Workspace::new();
+                for relu in [false, true] {
+                    for b in [None, Some(bias.as_slice())] {
+                        let expect = reference_with_epilogue(&x, &f, p, layout, b, relu);
+                        // Poisoned output: the fused path must fully
+                        // define every storage element it leaves visible.
+                        let mut out = Tensor4::zeros(p.output_dims(), layout);
+                        out.data_mut().fill(f32::NAN);
+                        a.run_prepacked(&x, &packed, p, &mut out, &mut ws, epilogue_for(b, relu))
+                            .unwrap();
+                        assert!(
+                            out.data().iter().all(|v| v.is_finite()),
+                            "{algo} {layout} relu={relu} bias={}: NaN survived",
+                            b.is_some()
+                        );
+                        assert!(
+                            expect.allclose(&out, 1e-4, 1e-4),
+                            "{algo} {layout} relu={relu} bias={}: max diff {}",
+                            b.is_some(),
+                            expect.max_abs_diff(&out)
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_prepacked_runs_reuse_scratch_and_stay_identical() {
+    // Same workspace across calls: stale window tensors / lowered
+    // matrices must be fully overwritten, results bit-identical.
+    let p = ConvParams::new(4, 5, 10, 10, 6, 3, 3, 1).unwrap();
+    let bias: Vec<f32> = (0..p.c_out).map(|c| 0.4 - c as f32 * 0.15).collect();
+    for algo in FUSED_ALGOS {
+        let a = algo.build();
+        for layout in Layout::ALL {
+            if !a.supports(layout) {
+                continue;
+            }
+            let x = Tensor4::random(p.input_dims(), layout, 91);
+            let f = Tensor4::random(p.filter_dims(), layout, 92);
+            let packed = a.prepare(&f, &p, layout).unwrap();
+            let mut ws = Workspace::new();
+            let mut first = Tensor4::zeros(p.output_dims(), layout);
+            a.run_prepacked(&x, &packed, &p, &mut first, &mut ws, Epilogue::BiasRelu(&bias))
+                .unwrap();
+            let misses = ws.misses();
+            for _ in 0..3 {
+                let mut again = Tensor4::zeros(p.output_dims(), layout);
+                a.run_prepacked(&x, &packed, &p, &mut again, &mut ws, Epilogue::BiasRelu(&bias))
+                    .unwrap();
+                assert_eq!(first.data(), again.data(), "{algo} {layout}: nondeterministic");
+            }
+            assert_eq!(ws.misses(), misses, "{algo} {layout}: warm runs must not allocate");
+        }
+    }
+}
+
+#[test]
+fn chwn8_padding_lanes_stay_zero_under_fused_bias_relu() {
+    // n=5 < 8: one partial batch block whose lanes 5..8 are padding. A
+    // strictly positive bias would leave max(bias, 0) > 0 there if the
+    // kernels did not mask their epilogued stores.
+    let p = ConvParams::new(5, 4, 8, 8, 6, 3, 3, 1).unwrap();
+    let bias = vec![0.5f32; p.c_out];
+    for algo in FUSED_ALGOS {
+        let a = algo.build();
+        let x = Tensor4::random(p.input_dims(), Layout::Chwn8, 61);
+        let f = Tensor4::random(p.filter_dims(), Layout::Chwn8, 62);
+        let packed = a.prepare(&f, &p, Layout::Chwn8).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor4::zeros(p.output_dims(), Layout::Chwn8);
+        a.run_prepacked(&x, &packed, &p, &mut out, &mut ws, Epilogue::BiasRelu(&bias)).unwrap();
+        // Storage is [N/8=1][Co][Ho][Wo][8]: every 8-chunk's lanes 5..8
+        // are batch padding.
+        for (i, chunk) in out.data().chunks_exact(8).enumerate() {
+            assert!(
+                chunk[5..].iter().all(|&v| v == 0.0),
+                "{algo}: padding lane disturbed in chunk {i}: {:?}",
+                &chunk[5..]
+            );
+        }
+        // ...and the valid lanes still match the reference.
+        let expect =
+            reference_with_epilogue(&x, &f, &p, Layout::Chwn8, Some(&bias), true);
+        assert!(expect.allclose(&out, 1e-4, 1e-4), "{algo}: {}", expect.max_abs_diff(&out));
+    }
+}
+
+#[test]
+fn mismatched_packs_are_rejected() {
+    let p = ConvParams::new(2, 3, 8, 8, 4, 3, 3, 1).unwrap();
+    let layout = Layout::Nhwc;
+    let x = Tensor4::random(p.input_dims(), layout, 71);
+    let f = Tensor4::random(p.filter_dims(), layout, 72);
+    let im2win = AlgoKind::Im2win.build();
+    let direct = AlgoKind::Direct.build();
+    let pack = im2win.prepare(&f, &p, layout).unwrap();
+    assert_eq!(pack.algo(), "im2win");
+    assert_eq!(pack.layout(), layout);
+    assert_eq!(pack.filter_dims(), Dims::new(4, 3, 3, 3));
+    assert!(pack.storage_bytes() > 0);
+    let mut ws = Workspace::new();
+    let mut out = Tensor4::zeros(p.output_dims(), layout);
+    // Wrong algorithm for the pack.
+    assert!(direct
+        .run_prepacked(&x, &pack, &p, &mut out, &mut ws, Epilogue::None)
+        .is_err());
+    // Wrong layout: pack was prepared for NHWC.
+    let x_nchw = x.to_layout(Layout::Nchw);
+    let mut out_nchw = Tensor4::zeros(p.output_dims(), Layout::Nchw);
+    assert!(im2win
+        .run_prepacked(&x_nchw, &pack, &p, &mut out_nchw, &mut ws, Epilogue::None)
+        .is_err());
+    // Wrong geometry.
+    let p2 = ConvParams::new(2, 3, 8, 8, 5, 3, 3, 1).unwrap();
+    let mut out2 = Tensor4::zeros(p2.output_dims(), layout);
+    assert!(im2win
+        .run_prepacked(&x, &pack, &p2, &mut out2, &mut ws, Epilogue::None)
+        .is_err());
+    // Bias length must match C_o.
+    let short = [1.0f32; 3];
+    assert!(im2win
+        .run_prepacked(&x, &pack, &p, &mut out, &mut ws, Epilogue::Bias(&short))
+        .is_err());
+    // The happy path still works after all those rejections.
+    im2win.run_prepacked(&x, &pack, &p, &mut out, &mut ws, Epilogue::None).unwrap();
+    let expect = reference_conv(&x, &f, &p, layout);
+    assert!(expect.allclose(&out, 1e-4, 1e-4));
+}
+
+#[test]
+fn default_prepacked_path_covers_mec_and_naive() {
+    // Algorithms without a fused override (MEC, naive) run through the
+    // default prepare/run_prepacked: tensor-pack + unfused epilogue pass.
+    let p = ConvParams::new(3, 4, 9, 9, 5, 3, 3, 1).unwrap();
+    let bias: Vec<f32> = (0..p.c_out).map(|c| c as f32 * 0.2 - 0.3).collect();
+    for (algo, layout) in [(AlgoKind::Mec, Layout::Nhwc), (AlgoKind::Naive, Layout::Nchw)] {
+        let a = algo.build();
+        let x = Tensor4::random(p.input_dims(), layout, 81);
+        let f = Tensor4::random(p.filter_dims(), layout, 82);
+        let packed = a.prepare(&f, &p, layout).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor4::zeros(p.output_dims(), layout);
+        a.run_prepacked(&x, &packed, &p, &mut out, &mut ws, Epilogue::BiasRelu(&bias)).unwrap();
+        let expect = reference_with_epilogue(&x, &f, &p, layout, Some(&bias), true);
+        assert!(
+            expect.allclose(&out, 1e-4, 1e-4),
+            "{algo} {layout}: diff {}",
+            expect.max_abs_diff(&out)
+        );
+    }
+}
