@@ -1,9 +1,12 @@
 //! Serving-path benchmark: sustained inferences/sec through the planned
 //! engine at batch sizes 1 / 8 / 32, the prepacked + fused bias/ReLU
 //! epilogue path on the biased tinynet, the micro-batching server's
-//! end-to-end throughput, and the sharded deadline-batching front at 2
-//! shards. Future PRs touching the engine, workspace, server or dispatcher
-//! compare against these numbers to catch serving regressions.
+//! end-to-end throughput, the sharded deadline-batching front at 2
+//! shards, and the async non-blocking front under an open-loop arrival
+//! generator (offered load ~1.5× the measured sync throughput, so the
+//! rings visibly backpressure). Future PRs touching the engine,
+//! workspace, server or dispatcher compare against these numbers to
+//! catch serving regressions.
 //!
 //! ```bash
 //! cargo bench --bench engine_serving -- --scale ci
@@ -20,11 +23,15 @@ use im2win::bench_harness::{fmt_time, measure_throughput};
 use im2win::config::json::Json;
 use im2win::config::Scale;
 use im2win::conv::AlgoKind;
-use im2win::engine::{Engine, PlanCache, Planner, Server, ShardConfig, ShardedServer};
+use im2win::engine::{
+    AsyncConfig, AsyncServer, Engine, PlanCache, Planner, Server, ShardConfig, ShardedServer,
+    Shed, TrySubmitError,
+};
 use im2win::model::zoo;
 use im2win::prelude::*;
 use im2win::tensor::Dims;
-use std::time::Duration;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 const BATCHES: [usize; 3] = [1, 8, 32];
 const SHARDS: usize = 2;
@@ -176,6 +183,75 @@ fn main() {
         );
     }
 
+    // Async non-blocking front: an open-loop arrival generator offers
+    // requests at ~1.5x the sync server's measured throughput, so the
+    // bounded rings exercise real backpressure (QueueFull is counted,
+    // not retried — open loop means arrivals do not wait on the server).
+    let offered = (report.throughput() * 1.5).max(200.0);
+    let shard_planner = Planner::new().for_shards(SHARDS);
+    let engines: Vec<Engine> = (0..SHARDS).map(|_| tinynet_engine(&shard_planner)).collect();
+    let async_server = AsyncServer::start(
+        engines,
+        ShardConfig {
+            max_batch: 8,
+            deadline: Duration::from_micros(200),
+            threads_per_shard: shard_planner.threads,
+            ..ShardConfig::default()
+        },
+        AsyncConfig { queue_depth: 64, shed: Shed::Reject },
+    );
+    let client = async_server.client();
+    let start = Instant::now();
+    let mut pending: VecDeque<_> = VecDeque::with_capacity(requests);
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    for k in 0..requests {
+        let due = start + Duration::from_secs_f64(k as f64 / offered);
+        while Instant::now() < due {
+            std::hint::spin_loop();
+        }
+        let img = Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, k as u64);
+        match client.try_submit(img) {
+            Ok(t) => {
+                admitted += 1;
+                pending.push_back(t);
+            }
+            Err(TrySubmitError::QueueFull(_)) => rejected += 1,
+            Err(TrySubmitError::Closed(_)) => break,
+        }
+        // Opportunistically consume completed tickets so outstanding
+        // handles stay bounded: slot_allocs should measure the server's
+        // freelist, not this harness hoarding every ticket to the end.
+        while let Some(mut t) = pending.pop_front() {
+            match t.try_wait() {
+                Some(r) => {
+                    r.expect("async inference succeeds");
+                }
+                None => {
+                    pending.push_front(t);
+                    break;
+                }
+            }
+        }
+    }
+    for t in pending {
+        t.wait().expect("async inference succeeds");
+    }
+    let async_report = async_server.shutdown();
+    println!(
+        "\nasync front ({requests} offered at {offered:.0}/s, {SHARDS} shards, \
+         depth 64, shed=reject):"
+    );
+    println!(
+        "  admitted {admitted} / rejected {rejected}, {} batches, {:.1} inf/s, \
+         queue p99 {}, done p99 {}, slot allocs {}",
+        async_report.sharded.batches(),
+        async_report.sharded.throughput(),
+        fmt_time(async_report.sharded.p99_queue_s()),
+        fmt_time(async_report.sharded.p99_latency_s()),
+        async_report.slot_allocs,
+    );
+
     // Machine-readable artifact for the CI perf trajectory.
     if let Some(path) = common::json_path() {
         let doc = Json::object(vec![
@@ -209,6 +285,19 @@ fn main() {
                         Json::Number(sharded_report.deadline_flushes() as f64),
                     ),
                     ("p99_latency_s", Json::Number(sharded_report.p99_latency_s())),
+                ]),
+            ),
+            (
+                "async",
+                Json::object(vec![
+                    ("shards", Json::Number(SHARDS as f64)),
+                    ("offered_per_s", Json::Number(offered)),
+                    ("admitted", Json::Number(admitted as f64)),
+                    ("rejected", Json::Number(rejected as f64)),
+                    ("inf_per_s", Json::Number(async_report.sharded.throughput())),
+                    ("p99_queue_s", Json::Number(async_report.sharded.p99_queue_s())),
+                    ("p99_latency_s", Json::Number(async_report.sharded.p99_latency_s())),
+                    ("slot_allocs", Json::Number(async_report.slot_allocs as f64)),
                 ]),
             ),
         ]);

@@ -7,8 +7,10 @@
 //!
 //! Metrics compared (higher is better): every `engine_inf_per_s.*` and
 //! `prepacked.*` row (the prepacked-filter + fused bias/ReLU epilogue
-//! path) plus `server.inf_per_s` and `sharded.inf_per_s` — the headline
-//! numbers `cargo bench --bench engine_serving -- --json` emits. A
+//! path) plus `server.inf_per_s`, `sharded.inf_per_s` and
+//! `async.inf_per_s` (the non-blocking ring front under open-loop
+//! offered load) — the headline numbers
+//! `cargo bench --bench engine_serving -- --json` emits. A
 //! metric below `fail-below × baseline` (default 0.5) fails the gate;
 //! below `warn-below × baseline` (default 0.8) warns. A metric present
 //! in the baseline but missing from the current artifact fails; a
@@ -117,7 +119,7 @@ fn metrics(doc: &Json) -> Vec<(String, f64)> {
             }
         }
     }
-    for section in ["server", "sharded"] {
+    for section in ["server", "sharded", "async"] {
         let v = doc.get(section).and_then(|s| s.get("inf_per_s")).and_then(Json::as_f64);
         if let Some(n) = v {
             out.push((format!("{section}.inf_per_s"), n));

@@ -11,7 +11,11 @@
 //!
 //! The scalar/vector `apply` helpers are branch-per-store, not
 //! branch-per-FMA: they run once per output element, amortized over the
-//! `C_i·H_f·W_f` multiply–adds that produced it.
+//! `C_i·H_f·W_f` multiply–adds that produced it. The GEMM-backed paths
+//! (im2col, MEC) apply the same epilogue through
+//! [`crate::gemm::GemmEpilogue`] on the final k-block's stores instead;
+//! fused-vs-unfused parity across every algorithm × layout × epilogue is
+//! pinned by `tests/fused_epilogue.rs`.
 
 use crate::error::{Error, Result};
 use crate::simd::{F32x8, LANES};

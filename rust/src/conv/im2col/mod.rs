@@ -69,8 +69,9 @@ fn filter_pack_len(p: &ConvParams, layout: Layout) -> usize {
 
 /// Translate a conv [`Epilogue`] into the GEMM-level epilogue for a
 /// layout whose output channels run along the GEMM's rows (`per_row`) or
-/// columns.
-fn gemm_ep(ep: Epilogue<'_>, per_row: bool) -> Option<GemmEpilogue<'_>> {
+/// columns. Shared with the MEC path, whose per-row GEMMs carry the
+/// channels along C's columns.
+pub(crate) fn gemm_ep(ep: Epilogue<'_>, per_row: bool) -> Option<GemmEpilogue<'_>> {
     match ep {
         Epilogue::None => None,
         Epilogue::Relu => Some(GemmEpilogue { bias: None, relu: true, per_row }),

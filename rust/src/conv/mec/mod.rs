@@ -18,12 +18,22 @@
 //!
 //! NHWC only (MEC needs the channel innermost for its slabs to be
 //! contiguous; this is also the layout the MEC paper effectively uses).
+//!
+//! The prepacked serving path ([`ConvAlgorithm::prepare`] /
+//! [`ConvAlgorithm::run_prepacked`]) packs `F̂` once and rides the
+//! GEMM's own fused epilogue ([`crate::gemm::GemmEpilogue`]): output
+//! channels run along each per-row GEMM's columns, so bias/ReLU fire as
+//! the microkernel stores its final accumulator tile — same discipline
+//! as the im2col path, no separate bias/activation pass.
 
-use super::{check_geometry, ConvAlgorithm, ConvParams};
+use super::im2col::gemm_ep;
+use super::{
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter,
+};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
-use crate::gemm::sgemm;
-use crate::tensor::{Layout, Tensor4};
+use crate::gemm::sgemm_fused;
+use crate::tensor::{AlignedBuf, Layout, Tensor4};
 
 /// Memory-efficient convolution (im2col compressed along the width).
 #[derive(Debug, Clone, Default)]
@@ -65,6 +75,52 @@ fn lower(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
     }
 }
 
+/// Pack the NHWC filter `[C_o][K]` as its transpose `F̂ = [K][C_o]` so
+/// each per-row GEMM's output lands channel-minor.
+fn pack_filter_t(filter: &Tensor4, p: &ConvParams, ft: &mut [f32]) {
+    let k = p.h_f * p.w_f * p.c_in;
+    let f = filter.data();
+    debug_assert_eq!(ft.len(), k * p.c_out);
+    super::note_filter_pack();
+    for j in 0..p.c_out {
+        for t in 0..k {
+            ft[t * p.c_out + j] = f[j * k + t];
+        }
+    }
+}
+
+/// The per-output-row GEMMs over the lowered matrix. `out` must be
+/// zeroed (the GEMM accumulates); the epilogue fires on each GEMM's
+/// final k-block, channels along C's columns.
+fn gemm_rows(mat: &[f32], ft: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let (h_o, w_o, co) = (p.h_out(), p.w_out(), p.c_out);
+    let k = p.h_f * p.w_f * p.c_in;
+    let chunk = p.w_f * p.c_in;
+    let slab = p.h_in * chunk;
+    let o_h = w_o * co;
+    let o_n = h_o * o_h;
+    let ge = gemm_ep(ep, false);
+    for n in 0..p.n {
+        let mslab = &mat[n * w_o * slab..(n + 1) * w_o * slab];
+        for ho in 0..h_o {
+            // A = rows [Wo][K] at vertical offset ho·s_h, lda = slab.
+            let a = &mslab[ho * p.stride_h * chunk..];
+            sgemm_fused(
+                w_o,
+                co,
+                k,
+                a,
+                slab,
+                ft,
+                co,
+                &mut out.data_mut()[n * o_n + ho * o_h..],
+                co,
+                ge,
+            );
+        }
+    }
+}
+
 impl ConvAlgorithm for MecConv {
     fn name(&self) -> &'static str {
         "mec"
@@ -101,45 +157,69 @@ impl ConvAlgorithm for MecConv {
                 "MEC convolution requires the NHWC layout".into(),
             ));
         }
-        let (h_o, w_o, co) = (p.h_out(), p.w_out(), p.c_out);
-        let k = p.h_f * p.w_f * p.c_in;
-        let chunk = p.w_f * p.c_in;
-        let slab = p.h_in * chunk;
-
         let mut mat = ws.take("mec.mat", mec_matrix_len(p));
         lower(input, p, &mut mat);
-        // F̂[K][C_o] from the NHWC filter [C_o][K].
-        let f = filter.data();
-        let mut ft = ws.take("mec.ft", k * co);
-        super::note_filter_pack();
-        for j in 0..co {
-            for t in 0..k {
-                ft[t * co + j] = f[j * k + t];
-            }
-        }
-
+        // F̂[K][C_o] from the NHWC filter [C_o][K] — packed per call on
+        // this one-shot path; the serving path packs once in `prepare`.
+        let mut ft = ws.take("mec.ft", p.h_f * p.w_f * p.c_in * p.c_out);
+        pack_filter_t(filter, p, &mut ft);
         out.data_mut().fill(0.0);
-        let o_h = w_o * co;
-        let o_n = h_o * o_h;
-        for n in 0..p.n {
-            let mslab = &mat[n * w_o * slab..(n + 1) * w_o * slab];
-            for ho in 0..h_o {
-                // A = rows [Wo][K] at vertical offset ho·s_h, lda = slab.
-                let a = &mslab[ho * p.stride_h * chunk..];
-                sgemm(
-                    w_o,
-                    co,
-                    k,
-                    a,
-                    slab,
-                    &ft,
-                    co,
-                    &mut out.data_mut()[n * o_n + ho * o_h..],
-                    co,
-                );
-            }
-        }
+        gemm_rows(&mat, &ft, p, out, Epilogue::None);
         ws.put("mec.ft", ft);
+        ws.put("mec.mat", mat);
+        Ok(())
+    }
+
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        if !self.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!(
+                "{} does not support {layout}",
+                self.name()
+            )));
+        }
+        let owned;
+        let f = if filter.layout() == layout {
+            filter
+        } else {
+            owned = filter.to_layout(layout);
+            &owned
+        };
+        let mut buf = AlignedBuf::zeroed(p.h_f * p.w_f * p.c_in * p.c_out);
+        pack_filter_t(f, p, &mut buf);
+        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PackedFilter,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        if input.layout() != Layout::Nhwc {
+            return Err(Error::UnsupportedLayout(
+                "MEC convolution requires the NHWC layout".into(),
+            ));
+        }
+        let ft = packed
+            .buf()
+            .ok_or_else(|| Error::Config("mec pack holds no filter matrix".into()))?;
+        let mut mat = ws.take("mec.mat", mec_matrix_len(p));
+        lower(input, p, &mut mat);
+        out.data_mut().fill(0.0);
+        gemm_rows(&mat, ft, p, out, ep);
         ws.put("mec.mat", mat);
         Ok(())
     }
@@ -199,5 +279,26 @@ mod tests {
         let expect = reference_conv(&input, &filter, &p, Layout::Nhwc);
         let got = MecConv::new().run(&input, &filter, &p).unwrap();
         assert!(expect.allclose(&got, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn prepacked_matches_per_call_path() {
+        let p = ConvParams::with_strides(3, 4, 11, 9, 5, 3, 2, 2, 1).unwrap();
+        let algo = MecConv::new();
+        let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 55);
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 56);
+        let expect = algo.run(&input, &filter, &p).unwrap();
+        let packed = algo.prepare(&filter, &p, Layout::Nhwc).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor4::zeros(p.output_dims(), Layout::Nhwc);
+        algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::None).unwrap();
+        assert!(
+            expect.allclose(&out, 1e-5, 1e-5),
+            "prepacked MEC diverges: {}",
+            expect.max_abs_diff(&out)
+        );
+        // MEC has no CHWN kernels: prepare refuses rather than packing a
+        // filter no kernel can consume.
+        assert!(algo.prepare(&filter, &p, Layout::Chwn).is_err());
     }
 }

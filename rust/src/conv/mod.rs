@@ -11,7 +11,16 @@
 //!
 //! All algorithms implement [`ConvAlgorithm`] and accept any tensor
 //! [`Layout`]; each dispatches to a layout-specialized kernel following the
-//! loop-reordering rules of paper §III-C.
+//! loop-reordering rules of paper §III-C. (The fourth baseline, [`mec`],
+//! is NHWC-only by construction.)
+//!
+//! For serving, every algorithm also exposes the weights-stationary pair
+//! [`ConvAlgorithm::prepare`] / [`ConvAlgorithm::run_prepacked`]: the
+//! filter is packed once into the kernel-consumable order
+//! ([`PackedFilter`]) and bias/ReLU are applied at the accumulator
+//! store through [`Epilogue`] — im2win, direct, im2col and MEC all fuse
+//! at the store site; only the naive oracle uses the unfused default.
+//! See `docs/ARCHITECTURE.md` for where this sits on the request path.
 
 pub mod direct;
 mod epilogue;

@@ -1,0 +1,963 @@
+//! Async, non-blocking submission front for the sharded server.
+//!
+//! The synchronous fronts ([`super::Server`], [`super::ShardedServer`])
+//! hand every caller an unbounded `mpsc` channel: submission never fails,
+//! so under overload the queue — and every caller's latency — grows
+//! without bound, and a caller that blocks on `recv` holds a thread for
+//! the whole round trip. A front door serving millions of concurrent
+//! callers needs the opposite contract, the one the paper's premise
+//! implies at system scale: the hot loop stays saturated only if
+//! admission never blocks on it. This module provides that contract:
+//!
+//! * **Lock-free bounded rings** — each shard owns a fixed-capacity
+//!   MPMC ring (Vyukov-style sequence-numbered slots). A submit is one
+//!   CAS plus one slot write: no lock, and *no allocation* — the image
+//!   tensor moves into the ring and the completion slot is recycled from
+//!   a pre-primed freelist ([`AsyncServer::slot_allocs`] counts the
+//!   fallback allocations, which stay 0 in steady state).
+//! * **Backpressure, not buffering** — a full ring makes
+//!   [`AsyncClient::try_submit`] return [`TrySubmitError::QueueFull`]
+//!   immediately (policy [`Shed::Reject`]). Callers see overload at the
+//!   door instead of as unbounded tail latency.
+//! * **Load shedding** — with [`Shed::OldestFirst`] the submit path
+//!   instead evicts the *oldest* queued request (answered with
+//!   [`crate::error::Error::Overloaded`]) and admits the new one: the
+//!   queue holds the freshest work, the natural policy when requests
+//!   have deadlines and stale work is worthless.
+//! * **Tickets** — [`AsyncClient::try_submit`] returns a [`Ticket`]
+//!   the caller can poll ([`Ticket::try_wait`]), bound
+//!   ([`Ticket::wait_timeout`]) or block on ([`Ticket::wait`]); the
+//!   handle is condvar-backed, so a blocked wait costs nothing and a
+//!   poll is one mutex-protected option check.
+//! * **Shared serve loop** — shard workers drain the rings through the
+//!   same deadline-batching serve loop as the synchronous fronts
+//!   ([`super::server`]), so batching windows, flush accounting,
+//!   drain-on-shutdown and the queue-wait / completion-latency
+//!   percentiles in [`super::ServerReport`] behave identically across
+//!   both fronts.
+//!
+//! ```
+//! use im2win::conv::AlgoKind;
+//! use im2win::engine::{AsyncConfig, AsyncServer, Engine, PlanCache, Planner, ShardConfig};
+//! use im2win::model::zoo;
+//! use im2win::prelude::*;
+//! use im2win::tensor::Dims;
+//!
+//! let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+//! let mut cache = PlanCache::in_memory();
+//! let engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+//! let server = AsyncServer::start(vec![engine], ShardConfig::default(), AsyncConfig::default());
+//! let client = server.client();
+//! let ticket = client
+//!     .try_submit(Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, 7))
+//!     .expect("a fresh ring admits the first request");
+//! let inference = ticket.wait().unwrap();
+//! assert_eq!(inference.dims, Dims::new(1, 10, 1, 1));
+//! let report = server.shutdown();
+//! assert_eq!(report.sharded.served(), 1);
+//! ```
+
+use super::server::{Inference, Request, ServerReport, ShardConfig, Source};
+use super::sharded::{resolve_threads_per_shard, spawn_shard_worker, ShardedReport};
+use super::Engine;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor4;
+use std::cell::UnsafeCell;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Upper bound on one consumer park: the doorbell wakes a sleeping drain
+/// loop promptly in the common case, and this slice bounds the cost of
+/// the (benign, unavoidable without a heavier protocol) race where a
+/// producer's push lands between the consumer's emptiness recheck and its
+/// wait — worst case the request waits one slice, never forever.
+const PARK_SLICE: Duration = Duration::from_millis(1);
+
+// ---------------------------------------------------------------------------
+// Lock-free bounded MPMC ring (Vyukov sequence-numbered slots).
+// ---------------------------------------------------------------------------
+
+/// One ring slot: a sequence number gating ownership plus the payload.
+struct RingSlot<T> {
+    seq: AtomicUsize,
+    value: UnsafeCell<Option<T>>,
+}
+
+/// Fixed-capacity lock-free MPMC queue. `push` is wait-free in the
+/// uncontended case (one CAS, one slot write); `pop` likewise. Used for
+/// the per-shard request rings (multi-producer submit, single-consumer
+/// drain — plus producer-side eviction under [`Shed::OldestFirst`],
+/// which is why the consumer side must also be multi-consumer safe) and
+/// for the completion-slot freelist.
+struct Ring<T> {
+    slots: Box<[RingSlot<T>]>,
+    mask: usize,
+    enqueue: AtomicUsize,
+    dequeue: AtomicUsize,
+}
+
+// SAFETY: slot payloads are moved in/out only by the thread that won the
+// slot's CAS, and the seq protocol publishes the write before any reader
+// claims it; T crossing threads needs Send, nothing needs Sync on T.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Ring<T> {
+    /// Ring with capacity `cap` rounded up to the next power of two (≥ 2).
+    fn with_capacity(cap: usize) -> Ring<T> {
+        let cap = cap.max(2).next_power_of_two();
+        let slots: Vec<RingSlot<T>> = (0..cap)
+            .map(|i| RingSlot { seq: AtomicUsize::new(i), value: UnsafeCell::new(None) })
+            .collect();
+        Ring {
+            slots: slots.into_boxed_slice(),
+            mask: cap - 1,
+            enqueue: AtomicUsize::new(0),
+            dequeue: AtomicUsize::new(0),
+        }
+    }
+
+    /// Usable capacity (the rounded-up power of two).
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Racy emptiness hint (exact when no concurrent operations).
+    fn is_empty(&self) -> bool {
+        let d = self.dequeue.load(Ordering::SeqCst);
+        let e = self.enqueue.load(Ordering::SeqCst);
+        e == d
+    }
+
+    /// Enqueue `v`; on a full ring, hand it back as `Err(v)`.
+    fn push(&self, v: T) -> std::result::Result<(), T> {
+        let mut pos = self.enqueue.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq.wrapping_sub(pos) as isize;
+            if diff == 0 {
+                match self.enqueue.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: the CAS gave this thread exclusive claim
+                        // on the slot until the seq store publishes it.
+                        unsafe { *slot.value.get() = Some(v) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                return Err(v); // full: the slot is a full lap behind
+            } else {
+                pos = self.enqueue.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue the oldest element, or `None` when the ring is empty.
+    fn pop(&self) -> Option<T> {
+        let mut pos = self.dequeue.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq.wrapping_sub(pos.wrapping_add(1)) as isize;
+            if diff == 0 {
+                match self.dequeue.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: exclusive claim, as in `push`.
+                        let v = unsafe { (*slot.value.get()).take() };
+                        slot.seq.store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        return v;
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                return None; // empty: the slot has not been written this lap
+            } else {
+                pos = self.dequeue.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-shard queue: ring + doorbell for the drain loop.
+// ---------------------------------------------------------------------------
+
+/// One shard's bounded request queue: the lock-free ring plus a doorbell
+/// condvar so an idle drain loop parks instead of spinning. Implements
+/// the same blocking surface as an `mpsc` receiver (see
+/// [`super::server::Source`]) so the shared serve loop drains either.
+pub(crate) struct ShardQueue {
+    ring: Ring<Request>,
+    closed: AtomicBool,
+    /// Set while the consumer is parked; producers check it after a push
+    /// and ring the doorbell only then, keeping the loaded-path submit
+    /// free of the mutex.
+    sleeping: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ShardQueue {
+    fn new(depth: usize) -> ShardQueue {
+        ShardQueue {
+            ring: Ring::with_capacity(depth),
+            closed: AtomicBool::new(false),
+            sleeping: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit a request; `Err` hands it back when the ring is full.
+    fn push(&self, r: Request) -> std::result::Result<(), Request> {
+        let out = self.ring.push(r);
+        if out.is_ok() && self.sleeping.load(Ordering::SeqCst) {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+        out
+    }
+
+    /// Evict the oldest queued request ([`Shed::OldestFirst`]).
+    fn pop_oldest(&self) -> Option<Request> {
+        self.ring.pop()
+    }
+
+    /// Close the queue: the drain loop finishes the backlog and exits.
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Park the consumer for at most `d` (bounded so a racing push can
+    /// never be lost, only delayed by one slice — see [`PARK_SLICE`]).
+    fn park(&self, d: Duration) {
+        let g = self.lock.lock().unwrap();
+        self.sleeping.store(true, Ordering::SeqCst);
+        // Recheck with the flag published: a push that raced the flag is
+        // caught here; one that lands later sees the flag and notifies.
+        if !self.ring.is_empty() || self.closed.load(Ordering::SeqCst) {
+            self.sleeping.store(false, Ordering::SeqCst);
+            return;
+        }
+        let (g, _timed_out) = self.cv.wait_timeout(g, d).unwrap();
+        self.sleeping.store(false, Ordering::SeqCst);
+        drop(g);
+    }
+
+    /// Blocking receive: a request, or `Err` once closed *and* drained
+    /// (mirrors `mpsc::Receiver::recv` so shutdown still drains).
+    pub(crate) fn recv(&self) -> std::result::Result<Request, RecvError> {
+        loop {
+            if let Some(r) = self.ring.pop() {
+                return Ok(r);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                // One more pop covers a push that raced the closed flag.
+                return self.ring.pop().ok_or(RecvError);
+            }
+            self.park(PARK_SLICE);
+        }
+    }
+
+    /// Non-blocking receive (mirrors `mpsc::Receiver::try_recv`).
+    pub(crate) fn try_recv(&self) -> std::result::Result<Request, TryRecvError> {
+        match self.ring.pop() {
+            Some(r) => Ok(r),
+            None if self.closed.load(Ordering::SeqCst) => {
+                self.ring.pop().ok_or(TryRecvError::Disconnected)
+            }
+            None => Err(TryRecvError::Empty),
+        }
+    }
+
+    /// Receive with a deadline (mirrors `mpsc::Receiver::recv_timeout`).
+    pub(crate) fn recv_timeout(
+        &self,
+        d: Duration,
+    ) -> std::result::Result<Request, RecvTimeoutError> {
+        let deadline = Instant::now() + d;
+        loop {
+            if let Some(r) = self.ring.pop() {
+                return Ok(r);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return self.ring.pop().ok_or(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            self.park(PARK_SLICE.min(deadline - now));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Completion slots, their freelist, and the caller-facing Ticket.
+// ---------------------------------------------------------------------------
+
+/// The condvar-backed rendezvous between a shard worker and a waiting
+/// caller: the worker [`CompletionSlot::complete`]s it exactly once, the
+/// ticket takes the result exactly once.
+pub(crate) struct CompletionSlot {
+    state: Mutex<Option<Result<Inference>>>,
+    cv: Condvar,
+}
+
+impl CompletionSlot {
+    fn new() -> CompletionSlot {
+        CompletionSlot { state: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    /// Deliver the result and wake every waiter.
+    pub(crate) fn complete(&self, result: Result<Inference>) {
+        *self.state.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn is_ready(&self) -> bool {
+        self.state.lock().unwrap().is_some()
+    }
+
+    fn take_ready(&self) -> Option<Result<Inference>> {
+        self.state.lock().unwrap().take()
+    }
+
+    fn wait_take(&self) -> Result<Inference> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn wait_timeout_take(&self, d: Duration) -> Option<Result<Inference>> {
+        let deadline = Instant::now() + d;
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    fn reset(&self) {
+        *self.state.lock().unwrap() = None;
+    }
+}
+
+/// Lock-free freelist of completion slots, fully primed at construction
+/// so the steady-state submit path allocates nothing: a submit pops a
+/// recycled slot, a consumed [`Ticket`] pushes it back. Popping from an
+/// exhausted freelist falls back to a fresh allocation and counts it
+/// (`misses`), which the serving tests pin at 0 for steady traffic.
+struct SlotPool {
+    free: Ring<Arc<CompletionSlot>>,
+    misses: AtomicUsize,
+}
+
+impl SlotPool {
+    fn new(cap: usize) -> Arc<SlotPool> {
+        let pool = SlotPool { free: Ring::with_capacity(cap), misses: AtomicUsize::new(0) };
+        for _ in 0..pool.free.capacity() {
+            let _ = pool.free.push(Arc::new(CompletionSlot::new()));
+        }
+        Arc::new(pool)
+    }
+
+    fn take(&self) -> Arc<CompletionSlot> {
+        match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::new(CompletionSlot::new())
+            }
+        }
+    }
+
+    fn put(&self, slot: Arc<CompletionSlot>) {
+        slot.reset();
+        // A full freelist (more outstanding slots than the pool tracks)
+        // simply drops the surplus back to the allocator.
+        let _ = self.free.push(slot);
+    }
+}
+
+/// Handle to one admitted request. Poll it, bound it, or block on it;
+/// the result is yielded exactly once. Dropping a consumed ticket
+/// recycles its completion slot into the front's freelist, which is what
+/// keeps the steady-state submit path allocation-free.
+pub struct Ticket {
+    slot: Option<Arc<CompletionSlot>>,
+    pool: Arc<SlotPool>,
+    taken: bool,
+}
+
+impl Ticket {
+    fn new(slot: Arc<CompletionSlot>, pool: Arc<SlotPool>) -> Ticket {
+        Ticket { slot: Some(slot), pool, taken: false }
+    }
+
+    /// Whether the result has arrived (or was already taken).
+    pub fn is_done(&self) -> bool {
+        if self.taken {
+            return true;
+        }
+        match &self.slot {
+            Some(s) => s.is_ready(),
+            None => true,
+        }
+    }
+
+    /// Non-blocking poll: the result if it is ready and not yet taken.
+    pub fn try_wait(&mut self) -> Option<Result<Inference>> {
+        if self.taken {
+            return None;
+        }
+        let r = self.slot.as_ref().and_then(|s| s.take_ready());
+        if r.is_some() {
+            self.taken = true;
+        }
+        r
+    }
+
+    /// Block for at most `d`; `None` on expiry (the request stays in
+    /// flight — poll or wait again later).
+    pub fn wait_timeout(&mut self, d: Duration) -> Option<Result<Inference>> {
+        if self.taken {
+            return None;
+        }
+        let r = self.slot.as_ref().and_then(|s| s.wait_timeout_take(d));
+        if r.is_some() {
+            self.taken = true;
+        }
+        r
+    }
+
+    /// Block until the result arrives. Every admitted request is
+    /// answered — by its batch, by a shed eviction, or by the shutdown
+    /// drain — so this cannot hang on a live server.
+    pub fn wait(mut self) -> Result<Inference> {
+        if self.taken {
+            return Err(Error::Config("ticket result already taken".into()));
+        }
+        let r = self.slot.as_ref().expect("slot present until drop").wait_take();
+        self.taken = true;
+        r
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if let Some(slot) = self.slot.take() {
+            // Recycle once the result has been consumed (or delivered and
+            // abandoned, or the worker side is provably gone). A slot
+            // whose request is still in flight must NOT be recycled — a
+            // later occupant would receive the old request's result — so
+            // it is left to deallocate when the worker drops its handle.
+            if self.taken || slot.take_ready().is_some() || Arc::strong_count(&slot) == 1 {
+                self.pool.put(slot);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission control: errors and shed policy.
+// ---------------------------------------------------------------------------
+
+/// Why a non-blocking submit was refused. Both variants hand the image
+/// back so a retrying caller pays no copy.
+pub enum TrySubmitError {
+    /// The target shard's ring is full and the policy is
+    /// [`Shed::Reject`]: backpressure, try again later (or elsewhere).
+    QueueFull(Tensor4),
+    /// The server is shutting down; no further requests are admitted.
+    Closed(Tensor4),
+}
+
+impl TrySubmitError {
+    /// Recover the image for a retry.
+    pub fn into_image(self) -> Tensor4 {
+        match self {
+            TrySubmitError::QueueFull(t) | TrySubmitError::Closed(t) => t,
+        }
+    }
+}
+
+impl fmt::Debug for TrySubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrySubmitError::QueueFull(_) => f.write_str("QueueFull(..)"),
+            TrySubmitError::Closed(_) => f.write_str("Closed(..)"),
+        }
+    }
+}
+
+impl fmt::Display for TrySubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrySubmitError::QueueFull(_) => f.write_str("queue full (backpressure)"),
+            TrySubmitError::Closed(_) => f.write_str("server closed"),
+        }
+    }
+}
+
+impl std::error::Error for TrySubmitError {}
+
+/// What to do when a submit finds its shard's ring full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// Refuse the new request ([`TrySubmitError::QueueFull`]): the
+    /// caller owns the retry policy. Favors work already admitted.
+    Reject,
+    /// Evict the *oldest* queued request (it is answered with
+    /// [`Error::Overloaded`]) and admit the new one. Favors fresh work —
+    /// the right policy when results go stale faster than the backlog
+    /// drains.
+    OldestFirst,
+}
+
+impl Shed {
+    /// Parse a CLI/config name (`reject` | `oldest`).
+    pub fn parse(s: &str) -> Option<Shed> {
+        match s.to_ascii_lowercase().as_str() {
+            "reject" => Some(Shed::Reject),
+            "oldest" | "oldest-first" => Some(Shed::OldestFirst),
+            _ => None,
+        }
+    }
+
+    /// Report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Shed::Reject => "reject",
+            Shed::OldestFirst => "oldest",
+        }
+    }
+}
+
+impl fmt::Display for Shed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Admission-control knobs for the async front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AsyncConfig {
+    /// Per-shard ring capacity (rounded up to a power of two, ≥ 2). The
+    /// hard bound on queued-but-unbatched requests per shard — the knob
+    /// that keeps a million concurrent callers from wedging the drain
+    /// loop behind an unbounded backlog.
+    pub queue_depth: usize,
+    /// Full-ring policy.
+    pub shed: Shed,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig { queue_depth: 256, shed: Shed::Reject }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The front itself.
+// ---------------------------------------------------------------------------
+
+/// One shard as the front sees it: its ring and its load gauge.
+struct AsyncShard {
+    queue: Arc<ShardQueue>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// State shared by the server handle and every [`AsyncClient`].
+struct FrontState {
+    shards: Vec<AsyncShard>,
+    rr: AtomicUsize,
+    shed_policy: Shed,
+    shed: AtomicUsize,
+    pool: Arc<SlotPool>,
+    closed: AtomicBool,
+}
+
+/// The async serving front: N shard workers draining bounded lock-free
+/// rings through the shared deadline-batching serve loop (see module
+/// docs). Obtain submission handles with [`AsyncServer::client`].
+pub struct AsyncServer {
+    front: Arc<FrontState>,
+    workers: Vec<JoinHandle<ServerReport>>,
+}
+
+/// Cheaply cloneable submission handle (an `Arc` internally): hand one
+/// to every caller thread. All methods are non-blocking.
+#[derive(Clone)]
+pub struct AsyncClient {
+    front: Arc<FrontState>,
+}
+
+/// What [`AsyncServer::shutdown`] returns: the per-shard serve-loop
+/// reports plus the front-level admission counters.
+#[derive(Debug, Clone)]
+pub struct AsyncReport {
+    /// Per-shard serve statistics (batching, throughput, queue-wait and
+    /// completion-latency percentiles), as for [`super::ShardedServer`].
+    pub sharded: ShardedReport,
+    /// Requests evicted by [`Shed::OldestFirst`] (each was answered with
+    /// [`Error::Overloaded`]).
+    pub shed: usize,
+    /// Completion slots allocated because the freelist was exhausted —
+    /// 0 means the submit path allocated nothing after startup.
+    pub slot_allocs: usize,
+}
+
+impl AsyncServer {
+    /// Start one shard per engine, as [`super::ShardedServer::start`]
+    /// does (same batching windows, per-shard pools and optional core
+    /// pinning from `cfg`), but fed by bounded lock-free rings of
+    /// `acfg.queue_depth` entries with `acfg.shed` as the full-ring
+    /// policy. Engines should be planned with
+    /// [`super::Planner::for_shards`].
+    ///
+    /// # Panics
+    /// Panics when `engines` is empty.
+    pub fn start(engines: Vec<Engine>, cfg: ShardConfig, acfg: AsyncConfig) -> AsyncServer {
+        assert!(!engines.is_empty(), "AsyncServer needs at least one engine");
+        let nshards = engines.len();
+        let tps = resolve_threads_per_shard(&cfg, nshards);
+        // Prime enough slots for every ring position plus one in-flight
+        // batch per shard, doubled for tickets a caller holds after
+        // completion; beyond this the pool falls back to allocating.
+        let pool = SlotPool::new((acfg.queue_depth + cfg.max_batch.max(1)) * nshards * 2);
+        let mut shards = Vec::with_capacity(nshards);
+        let mut workers = Vec::with_capacity(nshards);
+        for (i, engine) in engines.into_iter().enumerate() {
+            let queue = Arc::new(ShardQueue::new(acfg.queue_depth));
+            let depth = Arc::new(AtomicUsize::new(0));
+            workers.push(spawn_shard_worker(
+                i,
+                engine,
+                Source::Ring(Arc::clone(&queue)),
+                Arc::clone(&depth),
+                &cfg,
+                tps,
+            ));
+            shards.push(AsyncShard { queue, depth });
+        }
+        let front = Arc::new(FrontState {
+            shards,
+            rr: AtomicUsize::new(0),
+            shed_policy: acfg.shed,
+            shed: AtomicUsize::new(0),
+            pool,
+            closed: AtomicBool::new(false),
+        });
+        AsyncServer { front, workers }
+    }
+
+    /// A new submission handle (clone freely across caller threads).
+    pub fn client(&self) -> AsyncClient {
+        AsyncClient { front: Arc::clone(&self.front) }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.front.shards.len()
+    }
+
+    /// Requests queued or in flight on `shard` right now.
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.front.shards[shard].depth.load(Ordering::Relaxed)
+    }
+
+    /// Requests evicted so far under [`Shed::OldestFirst`].
+    pub fn shed_count(&self) -> usize {
+        self.front.shed.load(Ordering::Relaxed)
+    }
+
+    /// Completion slots allocated past the primed freelist so far
+    /// (0 ⇒ the submit path has not allocated since startup).
+    pub fn slot_allocs(&self) -> usize {
+        self.front.pool.misses.load(Ordering::Relaxed)
+    }
+
+    /// Stop admitting, drain every ring, join every worker. Every
+    /// admitted ticket is answered before this returns — by its batch or
+    /// (for a request that raced the close) with [`Error::Overloaded`].
+    pub fn shutdown(self) -> AsyncReport {
+        self.front.closed.store(true, Ordering::SeqCst);
+        for s in &self.front.shards {
+            s.queue.close();
+        }
+        let mut shards = Vec::with_capacity(self.workers.len());
+        for w in self.workers {
+            shards.push(w.join().expect("async shard worker panicked"));
+        }
+        // A submit that raced the closed flag may have landed after its
+        // worker's final drain; answer any such straggler now so no
+        // ticket is left hanging.
+        for s in &self.front.shards {
+            while let Some(r) = s.queue.pop_oldest() {
+                s.depth.fetch_sub(1, Ordering::Relaxed);
+                r.resp.send(Err(Error::Overloaded(
+                    "request admitted during shutdown was not served".into(),
+                )));
+            }
+        }
+        AsyncReport {
+            sharded: ShardedReport { shards },
+            shed: self.front.shed.load(Ordering::Relaxed),
+            slot_allocs: self.front.pool.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl AsyncClient {
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.front.shards.len()
+    }
+
+    /// Requests queued or in flight on `shard` right now.
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.front.shards[shard].depth.load(Ordering::Relaxed)
+    }
+
+    /// Non-blocking submit to the least-loaded shard (smallest
+    /// queued+in-flight count, ties rotating round-robin, exactly like
+    /// [`super::ShardedServer::submit`]). Never waits: the request is
+    /// admitted and a [`Ticket`] returned, or the overload is surfaced
+    /// immediately per the configured [`Shed`] policy.
+    pub fn try_submit(&self, image: Tensor4) -> std::result::Result<Ticket, TrySubmitError> {
+        let n = self.front.shards.len();
+        let start = self.front.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let shard = (0..n)
+            .map(|k| (start + k) % n)
+            .min_by_key(|&s| self.front.shards[s].depth.load(Ordering::Relaxed))
+            .expect("at least one shard");
+        self.try_submit_to(shard, image)
+    }
+
+    /// Non-blocking submit pinned to a specific shard.
+    ///
+    /// # Panics
+    /// Panics when `shard >= self.shards()`.
+    pub fn try_submit_to(
+        &self,
+        shard: usize,
+        image: Tensor4,
+    ) -> std::result::Result<Ticket, TrySubmitError> {
+        if self.front.closed.load(Ordering::SeqCst) {
+            return Err(TrySubmitError::Closed(image));
+        }
+        let s = &self.front.shards[shard];
+        let slot = self.front.pool.take();
+        let mut req = Request::with_slot(image, Arc::clone(&slot));
+        s.depth.fetch_add(1, Ordering::Relaxed);
+        loop {
+            match s.queue.push(req) {
+                Ok(()) => {
+                    // Recheck after the push: a shutdown that raced this
+                    // submit may already have run its straggler drain, and
+                    // nobody else would ever answer a request that landed
+                    // after it. Our own push is visible to us, so draining
+                    // the ring here guarantees the ticket is answered.
+                    if self.front.closed.load(Ordering::SeqCst) {
+                        while let Some(r) = s.queue.pop_oldest() {
+                            s.depth.fetch_sub(1, Ordering::Relaxed);
+                            r.resp.send(Err(Error::Overloaded(
+                                "request admitted during shutdown was not served".into(),
+                            )));
+                        }
+                    }
+                    return Ok(Ticket::new(slot, Arc::clone(&self.front.pool)));
+                }
+                Err(back) => match self.front.shed_policy {
+                    Shed::Reject => {
+                        s.depth.fetch_sub(1, Ordering::Relaxed);
+                        // Hand the image back; dropping the request's
+                        // responder releases its slot handle so the slot
+                        // recycles cleanly.
+                        let Request { image, .. } = back;
+                        self.front.pool.put(slot);
+                        return Err(TrySubmitError::QueueFull(image));
+                    }
+                    Shed::OldestFirst => {
+                        req = back;
+                        // Evict the oldest queued request to make room;
+                        // if the drain loop emptied a slot meanwhile the
+                        // pop misses and the retry push succeeds.
+                        if let Some(old) = s.queue.pop_oldest() {
+                            s.depth.fetch_sub(1, Ordering::Relaxed);
+                            self.front.shed.fetch_add(1, Ordering::Relaxed);
+                            old.resp.send(Err(Error::Overloaded(
+                                "shed oldest-first: ring full at admission".into(),
+                            )));
+                        }
+                    }
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn ring_fills_drains_and_wraps() {
+        let ring: Ring<usize> = Ring::with_capacity(4);
+        assert_eq!(ring.capacity(), 4);
+        assert!(ring.is_empty());
+        for lap in 0..3 {
+            for i in 0..4 {
+                ring.push(lap * 10 + i).unwrap();
+            }
+            // Full: the element comes back.
+            assert_eq!(ring.push(99), Err(99));
+            assert!(!ring.is_empty());
+            for i in 0..4 {
+                assert_eq!(ring.pop(), Some(lap * 10 + i));
+            }
+            assert_eq!(ring.pop(), None);
+            assert!(ring.is_empty());
+        }
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up_to_power_of_two() {
+        let ring: Ring<u8> = Ring::with_capacity(5);
+        assert_eq!(ring.capacity(), 8);
+        let ring: Ring<u8> = Ring::with_capacity(0);
+        assert_eq!(ring.capacity(), 2);
+    }
+
+    #[test]
+    fn ring_concurrent_producers_and_consumers_lose_nothing() {
+        let ring: Arc<Ring<usize>> = Arc::new(Ring::with_capacity(64));
+        let produced = 4 * 500;
+        let seen = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let ring = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    let mut v = p * 500 + i;
+                    loop {
+                        match ring.push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let ring = Arc::clone(&ring);
+            let seen = Arc::clone(&seen);
+            let sum = Arc::clone(&sum);
+            handles.push(std::thread::spawn(move || loop {
+                match ring.pop() {
+                    Some(v) => {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        if seen.fetch_add(1, Ordering::Relaxed) + 1 == produced {
+                            return;
+                        }
+                    }
+                    None => {
+                        if seen.load(Ordering::Relaxed) >= produced {
+                            return;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::Relaxed), produced);
+        assert_eq!(sum.load(Ordering::Relaxed), (0..produced).sum::<usize>());
+    }
+
+    #[test]
+    fn shed_parse_round_trips() {
+        for s in [Shed::Reject, Shed::OldestFirst] {
+            assert_eq!(Shed::parse(s.name()), Some(s));
+        }
+        assert_eq!(Shed::parse("oldest-first"), Some(Shed::OldestFirst));
+        assert_eq!(Shed::parse("newest"), None);
+    }
+
+    #[test]
+    fn slot_pool_recycles_without_allocating() {
+        let pool = SlotPool::new(4);
+        let primed = pool.free.capacity();
+        for _ in 0..3 * primed {
+            let s = pool.take();
+            s.complete(Err(Error::Config("x".into())));
+            pool.put(s);
+        }
+        assert_eq!(pool.misses.load(Ordering::Relaxed), 0);
+        // A recycled slot comes back empty.
+        let s = pool.take();
+        assert!(!s.is_ready());
+    }
+
+    #[test]
+    fn exhausted_slot_pool_falls_back_to_allocation() {
+        let pool = SlotPool::new(2);
+        let held: Vec<_> = (0..pool.free.capacity() + 3).map(|_| pool.take()).collect();
+        assert_eq!(pool.misses.load(Ordering::Relaxed), 3);
+        drop(held);
+    }
+
+    #[test]
+    fn completion_slot_wait_timeout_expires_then_delivers() {
+        let slot = Arc::new(CompletionSlot::new());
+        assert!(slot.wait_timeout_take(Duration::from_millis(1)).is_none());
+        let s2 = Arc::clone(&slot);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            s2.complete(Err(Error::Config("done".into())));
+        });
+        let got = slot.wait_timeout_take(Duration::from_secs(5));
+        h.join().unwrap();
+        assert!(matches!(got, Some(Err(Error::Config(_)))));
+        // Taken exactly once.
+        assert!(slot.take_ready().is_none());
+    }
+}

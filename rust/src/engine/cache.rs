@@ -27,6 +27,9 @@
 //! ([`crate::config::json`]), written with sorted keys so serialization
 //! is canonical: `save → load → save` produces byte-identical files
 //! (pinned by a property test).
+//!
+//! Where this sits in the system — and which serving front consults it
+//! when — is mapped in `docs/ARCHITECTURE.md`.
 
 use super::planner::LayerPlan;
 use crate::config::json::{self, Json};

@@ -39,6 +39,9 @@
 //!   the whole Table I layer suite (every incoming layout), shipping
 //!   pre-tuned plans so a fresh process serves with zero planning work.
 //!
+//! The calibrate → plan → serve pipeline, and which CI job gates each
+//! stage, is mapped in `docs/ARCHITECTURE.md`.
+//!
 //! Bucket classes at fit time come from the geometry the record
 //! *actually measured*: channels from the Table I layer named by the
 //! record (scaling never touches them), spatial extent reconstructed

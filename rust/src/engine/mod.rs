@@ -26,6 +26,12 @@
 //!   requests to the least-loaded of N shards, each with its own engine,
 //!   workspace, thread pool and (optionally, `pinning` feature) pinned
 //!   core block, batching with deadline-aware windows;
+//! * [`async_front`] — the non-blocking front door over the same shard
+//!   workers: [`AsyncClient::try_submit`] admits a request into a
+//!   bounded lock-free ring (or surfaces overload immediately —
+//!   [`TrySubmitError::QueueFull`] backpressure or oldest-first load
+//!   shedding) and returns a [`Ticket`] the caller polls or blocks on,
+//!   so a slow caller never stalls admission for everyone else;
 //! * [`Engine`] — the planned-model executor tying them together: it
 //!   applies a plan to a [`Model`], packs every convolution filter once
 //!   into its kernel-consumable order ([`crate::conv::PackedFilter`]),
@@ -50,6 +56,7 @@
 //! assert_eq!(y.dims(), Dims::new(2, 10, 1, 1));
 //! ```
 
+pub mod async_front;
 pub mod cache;
 pub mod calibrate;
 pub mod planner;
@@ -57,6 +64,9 @@ pub mod server;
 pub mod sharded;
 pub mod workspace;
 
+pub use async_front::{
+    AsyncClient, AsyncConfig, AsyncReport, AsyncServer, Shed, Ticket, TrySubmitError,
+};
 pub use cache::{layer_key, PlanCache};
 pub use calibrate::{warm_pack, CalibrationProfile, PlanShift, ShapeClass};
 pub use planner::{LayerPlan, Planner};
@@ -162,6 +172,26 @@ impl Engine {
     /// from the engine's [`Workspace`], so after one request per batch
     /// size the engine allocates no tensor or scratch buffers (only the
     /// arena's small per-lease key strings; see [`workspace`]).
+    ///
+    /// ```
+    /// use im2win::conv::AlgoKind;
+    /// use im2win::engine::{Engine, PlanCache, Planner};
+    /// use im2win::model::zoo;
+    /// use im2win::prelude::*;
+    /// use im2win::tensor::Dims;
+    ///
+    /// let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 3).unwrap();
+    /// let mut cache = PlanCache::in_memory();
+    /// let mut engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();
+    /// let x = Tensor4::random(Dims::new(4, 3, 32, 32), Layout::Nchw, 1);
+    /// let mut out = Tensor4::zeros(engine.output_dims(4).unwrap(), Layout::Nchw);
+    /// engine.forward_into(&x, &mut out).unwrap();
+    /// // A repeat at the same batch size leases every buffer from the
+    /// // workspace instead of allocating.
+    /// let misses = engine.workspace().misses();
+    /// engine.forward_into(&x, &mut out).unwrap();
+    /// assert_eq!(engine.workspace().misses(), misses);
+    /// ```
     pub fn forward_into(&mut self, input: &Tensor4, out: &mut Tensor4) -> Result<()> {
         let n = input.dims().n;
         let base = self.model.input_dims();

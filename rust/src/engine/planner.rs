@@ -24,6 +24,23 @@
 //! `W_{o,b}` with the fastest sampled value. Refinement is off by default
 //! (it runs real kernels) and its result is exactly what the plan cache
 //! persists, so a process restart never re-tunes.
+//!
+//! ```
+//! use im2win::conv::AlgoKind;
+//! use im2win::engine::{PlanCache, Planner};
+//! use im2win::model::zoo;
+//! use im2win::tensor::Layout;
+//!
+//! let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+//! let mut cache = PlanCache::in_memory();
+//! let plans = Planner::new().plan_model(&model, &mut cache).unwrap();
+//! assert_eq!(plans.len(), 3); // one decision per conv layer
+//! assert!(plans.iter().all(|p| p.est_s > 0.0));
+//! // Re-planning the same model is a pure cache hit.
+//! let again = Planner::new().plan_model(&model, &mut cache).unwrap();
+//! assert_eq!(plans, again);
+//! assert!(cache.hits() >= 3);
+//! ```
 
 use super::cache::{layer_key, PlanCache};
 use super::calibrate::CalibrationProfile;

@@ -20,20 +20,28 @@
 //! one batch of each size the serving loop performs no scratch allocation
 //! (pinned by the engine acceptance test). The final [`ServerReport`]
 //! carries served/batch counts, wall/busy time, flush-cause counters,
-//! queue-depth high-water mark, p50/p99 request latency, and the
+//! queue-depth high-water mark, p50/p99 completion latency (admission →
+//! done) and queue wait (admission → batch flush), and the
 //! workspace-miss count observed after warmup.
+//!
+//! The loop is front-agnostic: it drains a `Source`, which is either an
+//! unbounded `mpsc` channel (this module's [`Server`] and the sharded
+//! front) or one of the async front's bounded lock-free rings
+//! ([`super::async_front`]) — batching windows, statistics and the
+//! shutdown-drain contract are identical either way.
 //!
 //! On shutdown the request channel closes and the loop *drains*: every
 //! request already queued is still batched, run, and answered before the
 //! worker exits (pinned by a regression test — queued requests are never
 //! dropped silently).
 
+use super::async_front::{CompletionSlot, ShardQueue};
 use super::Engine;
 use crate::error::{Error, Result};
 use crate::tensor::{Dims, Tensor4};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::mpsc::{self, RecvError, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -110,10 +118,16 @@ pub struct ServerReport {
     /// High-water mark of the queued+in-flight request count, observed at
     /// batch formation.
     pub max_queue_depth: usize,
-    /// Median request latency (submit → response), seconds.
+    /// Median completion latency (admission → done), seconds.
     pub p50_latency_s: f64,
-    /// 99th-percentile request latency (submit → response), seconds.
+    /// 99th-percentile completion latency (admission → done), seconds.
     pub p99_latency_s: f64,
+    /// Median queue wait (admission → batch flush), seconds — the part
+    /// of the completion latency spent waiting for a batching window,
+    /// before any compute ran.
+    pub p50_queue_s: f64,
+    /// 99th-percentile queue wait (admission → batch flush), seconds.
+    pub p99_queue_s: f64,
     /// Workspace misses observed on batches whose size had already been
     /// seen once — 0 means steady-state serving allocated no scratch.
     pub warm_misses: usize,
@@ -148,17 +162,84 @@ impl ServerReport {
     }
 }
 
+/// Where a request's answer goes: the synchronous fronts hand each
+/// caller a private `mpsc` channel, the async front a recycled
+/// condvar-backed [`CompletionSlot`] behind its [`super::Ticket`].
+pub(crate) enum Responder {
+    /// Per-request response channel ([`Server`], [`super::ShardedServer`]).
+    Channel(mpsc::Sender<Result<Inference>>),
+    /// Pooled completion slot ([`super::AsyncServer`]).
+    Slot(Arc<CompletionSlot>),
+}
+
+impl Responder {
+    /// Deliver the answer (a dead channel receiver is the caller's
+    /// choice; delivery never fails from the server's point of view).
+    pub(crate) fn send(&self, result: Result<Inference>) {
+        match self {
+            Responder::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            Responder::Slot(slot) => slot.complete(result),
+        }
+    }
+}
+
 /// A queued request: the image, where to send the answer, and when it was
 /// submitted (for the latency percentiles).
 pub(crate) struct Request {
     pub(crate) image: Tensor4,
-    pub(crate) resp: mpsc::Sender<Result<Inference>>,
+    pub(crate) resp: Responder,
     pub(crate) submitted: Instant,
 }
 
 impl Request {
     pub(crate) fn new(image: Tensor4, resp: mpsc::Sender<Result<Inference>>) -> Request {
-        Request { image, resp, submitted: Instant::now() }
+        Request { image, resp: Responder::Channel(resp), submitted: Instant::now() }
+    }
+
+    pub(crate) fn with_slot(image: Tensor4, slot: Arc<CompletionSlot>) -> Request {
+        Request { image, resp: Responder::Slot(slot), submitted: Instant::now() }
+    }
+}
+
+/// Where the serve loop pulls requests from: the synchronous fronts'
+/// unbounded `mpsc` channels or the async front's bounded lock-free
+/// rings ([`ShardQueue`]). Both expose `mpsc`-shaped blocking semantics
+/// — including "disconnected only once closed *and* drained" — so one
+/// loop implements batching, deadline windows and shutdown drain for
+/// every front.
+pub(crate) enum Source {
+    /// Unbounded channel ([`Server`], [`super::ShardedServer`]).
+    Mpsc(mpsc::Receiver<Request>),
+    /// Bounded lock-free ring ([`super::AsyncServer`]).
+    Ring(Arc<ShardQueue>),
+}
+
+impl Source {
+    /// Block for the next request; `Err` once the source is closed and
+    /// fully drained.
+    fn recv(&self) -> std::result::Result<Request, RecvError> {
+        match self {
+            Source::Mpsc(rx) => rx.recv(),
+            Source::Ring(q) => q.recv(),
+        }
+    }
+
+    /// Non-blocking poll for a queued request.
+    fn try_recv(&self) -> std::result::Result<Request, TryRecvError> {
+        match self {
+            Source::Mpsc(rx) => rx.try_recv(),
+            Source::Ring(q) => q.try_recv(),
+        }
+    }
+
+    /// Block for the next request for at most `d`.
+    fn recv_timeout(&self, d: Duration) -> std::result::Result<Request, RecvTimeoutError> {
+        match self {
+            Source::Mpsc(rx) => rx.recv_timeout(d),
+            Source::Ring(q) => q.recv_timeout(d),
+        }
     }
 }
 
@@ -190,7 +271,7 @@ impl Server {
         let deadline = cfg.deadline;
         let worker = std::thread::Builder::new()
             .name("im2win-server".into())
-            .spawn(move || serve_loop(engine, rx, max_batch, deadline, &loop_depth))
+            .spawn(move || serve_loop(engine, Source::Mpsc(rx), max_batch, deadline, &loop_depth))
             .expect("failed to spawn server worker");
         Server { tx, depth, worker }
     }
@@ -233,16 +314,18 @@ fn latency_percentiles(lat: &mut [f64]) -> (f64, f64) {
 }
 
 /// The serve loop shared by [`Server`] (one instance, zero deadline by
-/// default) and [`super::ShardedServer`] (one instance per shard).
+/// default), [`super::ShardedServer`] (one instance per shard) and
+/// [`super::AsyncServer`] (one instance per shard, draining a bounded
+/// ring instead of a channel — see [`Source`]).
 ///
 /// Batching policy: block for the first request, then collect until
 /// `max_batch` or until `deadline` elapses (greedy `try_recv` drain when
-/// the deadline is zero). When the request channel disconnects the loop
-/// drains every remaining queued request before returning — a shutdown
-/// never drops work.
+/// the deadline is zero). When the source disconnects the loop drains
+/// every remaining queued request before returning — a shutdown never
+/// drops work.
 pub(crate) fn serve_loop(
     mut engine: Engine,
-    rx: mpsc::Receiver<Request>,
+    src: Source,
     max_batch: usize,
     deadline: Duration,
     depth: &AtomicUsize,
@@ -254,6 +337,7 @@ pub(crate) fn serve_loop(
     let mut outs: HashMap<usize, Tensor4> = HashMap::new();
     let mut seen_sizes: HashSet<usize> = HashSet::new();
     let mut latencies: Vec<f64> = Vec::new();
+    let mut queue_waits: Vec<f64> = Vec::new();
     let mut report = ServerReport {
         served: 0,
         batches: 0,
@@ -265,6 +349,8 @@ pub(crate) fn serve_loop(
         max_queue_depth: 0,
         p50_latency_s: 0.0,
         p99_latency_s: 0.0,
+        p50_queue_s: 0.0,
+        p99_queue_s: 0.0,
         warm_misses: 0,
     };
 
@@ -276,17 +362,17 @@ pub(crate) fn serve_loop(
             lat.push(r.submitted.elapsed().as_secs_f64());
         }
         depth.fetch_sub(1, Ordering::Relaxed);
-        let _ = r.resp.send(result);
+        r.resp.send(result);
     };
 
     // Block for the first request, then fill the batching window.
-    while let Ok(first) = rx.recv() {
+    while let Ok(first) = src.recv() {
         let mut batch = vec![first];
         let mut deadline_flush = false;
         if deadline.is_zero() {
             // Greedy drain: coalesce what is queued, never wait.
             while batch.len() < max_batch {
-                match rx.try_recv() {
+                match src.try_recv() {
                     Ok(r) => batch.push(r),
                     Err(_) => break,
                 }
@@ -300,7 +386,7 @@ pub(crate) fn serve_loop(
                     deadline_flush = true;
                     break;
                 }
-                match rx.recv_timeout(flush_at - now) {
+                match src.recv_timeout(flush_at - now) {
                     Ok(r) => batch.push(r),
                     Err(RecvTimeoutError::Timeout) => {
                         deadline_flush = true;
@@ -333,6 +419,12 @@ pub(crate) fn serve_loop(
         let k = batch.len();
         if k == 0 {
             continue;
+        }
+        // Queue wait: admission → flush, recorded for every request that
+        // made it into this batched forward (the compute-free slice of
+        // the completion latency).
+        for r in &batch {
+            queue_waits.push(r.submitted.elapsed().as_secs_f64());
         }
 
         // Stack the images into a leased batch tensor (logical copy, so
@@ -395,6 +487,7 @@ pub(crate) fn serve_loop(
     }
     report.wall_s = started.elapsed().as_secs_f64();
     (report.p50_latency_s, report.p99_latency_s) = latency_percentiles(&mut latencies);
+    (report.p50_queue_s, report.p99_queue_s) = latency_percentiles(&mut queue_waits);
     report
 }
 
@@ -439,6 +532,10 @@ mod tests {
         assert!(report.wall_s >= report.busy_s);
         assert!(report.p99_latency_s >= report.p50_latency_s);
         assert!(report.p50_latency_s > 0.0);
+        // Queue wait is the compute-free prefix of the completion
+        // latency: pointwise smaller, so percentile-wise smaller too.
+        assert!(report.p99_queue_s >= report.p50_queue_s);
+        assert!(report.p50_queue_s <= report.p50_latency_s);
         // Greedy drain never waits for a window.
         assert_eq!(report.deadline_flushes, 0);
     }

@@ -31,8 +31,16 @@
 //! should be planned with [`super::Planner::for_shards`], whose
 //! threads-per-shard count flows into the plan-cache keys — a plan tuned
 //! for the whole machine is never silently reused for a quarter of it.
+//!
+//! Submission here is synchronous and unbounded (`mpsc`): it never
+//! refuses work, so under overload the backlog — and tail latency —
+//! grows without bound. The async sibling ([`super::async_front`])
+//! keeps this module's shard workers, placement and batching windows
+//! (via the shared `spawn_shard_worker` helper) but feeds them from
+//! bounded lock-free rings with non-blocking admission and load
+//! shedding.
 
-use super::server::{serve_loop, Inference, Request, ServerReport, ShardConfig};
+use super::server::{serve_loop, Inference, Request, ServerReport, ShardConfig, Source};
 use super::Engine;
 use crate::error::Result;
 use crate::parallel::{self, ThreadPool};
@@ -47,6 +55,53 @@ struct Shard {
     tx: mpsc::Sender<Request>,
     depth: Arc<AtomicUsize>,
     worker: JoinHandle<ServerReport>,
+}
+
+/// Threads each shard's private pool gets: the explicit
+/// [`ShardConfig::threads_per_shard`], or the global pool's configured
+/// count divided evenly across shards (at least 1 each). Uses
+/// `configured_threads` (not `global()`) so sizing never spawns a global
+/// worker set that would sit parked beside the shard pools.
+pub(crate) fn resolve_threads_per_shard(cfg: &ShardConfig, nshards: usize) -> usize {
+    if cfg.threads_per_shard > 0 {
+        cfg.threads_per_shard
+    } else {
+        (parallel::configured_threads() / nshards).max(1)
+    }
+}
+
+/// Spawn shard `i`'s worker thread: build its private thread pool
+/// ([`resolve_threads_per_shard`] threads), optionally pin the worker
+/// group to the shard's disjoint core block, install the pool as the
+/// thread's scoped pool, and run the shared serve loop over `src` —
+/// identical placement and batching whether `src` is a synchronous
+/// channel ([`ShardedServer`]) or an async ring ([`super::AsyncServer`]).
+pub(crate) fn spawn_shard_worker(
+    i: usize,
+    engine: Engine,
+    src: Source,
+    depth: Arc<AtomicUsize>,
+    cfg: &ShardConfig,
+    tps: usize,
+) -> JoinHandle<ServerReport> {
+    let max_batch = cfg.max_batch.max(1);
+    let deadline = cfg.deadline;
+    let cores: Vec<usize> = if cfg.pin { parallel::core_block(i, tps) } else { Vec::new() };
+    std::thread::Builder::new()
+        .name(format!("im2win-shard-{i}"))
+        .spawn(move || {
+            // Shard-private pool: the fork-join pool has a single job
+            // slot, so concurrent shards must never share one. Pool
+            // workers pin to cores[1..]; the loop thread (a pool
+            // participant) takes cores[0].
+            let pool = Arc::new(ThreadPool::with_pinning(tps, &cores));
+            if let Some(&c0) = cores.first() {
+                parallel::pin_current_thread(&[c0]);
+            }
+            let _scoped = parallel::install_scoped(pool);
+            serve_loop(engine, src, max_batch, deadline, &depth)
+        })
+        .expect("failed to spawn shard worker")
 }
 
 /// Multi-engine, deadline-batching serving front (see module docs).
@@ -72,39 +127,15 @@ impl ShardedServer {
     pub fn start(engines: Vec<Engine>, cfg: ShardConfig) -> ShardedServer {
         assert!(!engines.is_empty(), "ShardedServer needs at least one engine");
         let nshards = engines.len();
-        // configured_threads (not global()): sizing must not spawn a
-        // global worker set that would sit parked beside the shard pools.
-        let tps = if cfg.threads_per_shard > 0 {
-            cfg.threads_per_shard
-        } else {
-            (parallel::configured_threads() / nshards).max(1)
-        };
-        let max_batch = cfg.max_batch.max(1);
+        let tps = resolve_threads_per_shard(&cfg, nshards);
         let shards = engines
             .into_iter()
             .enumerate()
             .map(|(i, engine)| {
                 let (tx, rx) = mpsc::channel::<Request>();
                 let depth = Arc::new(AtomicUsize::new(0));
-                let loop_depth = Arc::clone(&depth);
-                let deadline = cfg.deadline;
-                let cores: Vec<usize> =
-                    if cfg.pin { (i * tps..(i + 1) * tps).collect() } else { Vec::new() };
-                let worker = std::thread::Builder::new()
-                    .name(format!("im2win-shard-{i}"))
-                    .spawn(move || {
-                        // Shard-private pool: the fork-join pool has a single
-                        // job slot, so concurrent shards must never share one.
-                        // Pool workers pin to cores[1..]; the loop thread (a
-                        // pool participant) takes cores[0].
-                        let pool = Arc::new(ThreadPool::with_pinning(tps, &cores));
-                        if let Some(&c0) = cores.first() {
-                            parallel::pin_current_thread(&[c0]);
-                        }
-                        let _scoped = parallel::install_scoped(pool);
-                        serve_loop(engine, rx, max_batch, deadline, &loop_depth)
-                    })
-                    .expect("failed to spawn shard worker");
+                let worker =
+                    spawn_shard_worker(i, engine, Source::Mpsc(rx), Arc::clone(&depth), &cfg, tps);
                 Shard { tx, depth, worker }
             })
             .collect();
@@ -203,9 +234,21 @@ impl ShardedReport {
         }
     }
 
-    /// Worst shard p99 latency — the front's tail once dispatch is fair.
+    /// Worst shard p99 completion latency — the front's tail once
+    /// dispatch is fair.
     pub fn p99_latency_s(&self) -> f64 {
         self.shards.iter().map(|s| s.p99_latency_s).fold(0.0, f64::max)
+    }
+
+    /// Worst shard median completion latency (admission → done).
+    pub fn p50_latency_s(&self) -> f64 {
+        self.shards.iter().map(|s| s.p50_latency_s).fold(0.0, f64::max)
+    }
+
+    /// Worst shard p99 queue wait (admission → batch flush) — how long
+    /// requests sat unbatched before any compute ran.
+    pub fn p99_queue_s(&self) -> f64 {
+        self.shards.iter().map(|s| s.p99_queue_s).fold(0.0, f64::max)
     }
 }
 

@@ -24,7 +24,10 @@
 //! element; the im2win/direct kernels store every output element exactly
 //! once, and the GEMM-backed paths zero their accumulation target first),
 //! which the stale-scratch property tests in `tests/engine.rs` and
-//! `tests/fused_epilogue.rs` pin down.
+//! `tests/fused_epilogue.rs` pin down. (The async front applies the
+//! same recycle-don't-allocate discipline to its completion slots —
+//! see [`super::async_front`] — so the whole request path, submission
+//! included, is allocation-free in steady state.)
 
 use crate::tensor::{AlignedBuf, Dims, Layout, Tensor4};
 use std::collections::HashMap;

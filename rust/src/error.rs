@@ -22,6 +22,9 @@ pub enum Error {
     Runtime(String),
     /// I/O error (stringified to keep `Error: Clone + PartialEq`).
     Io(String),
+    /// The serving front refused or shed this request under overload
+    /// (admission control — see `engine::async_front`).
+    Overloaded(String),
 }
 
 impl fmt::Display for Error {
@@ -34,6 +37,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
         }
     }
 }

@@ -30,9 +30,16 @@
 //!   workspace, per-layer prepacked filters ([`conv::PackedFilter`])
 //!   with bias/ReLU fused into the kernels' store epilogues
 //!   ([`conv::Epilogue`]), a micro-batching server for single-image
-//!   traffic, and a sharded deadline-batching front
+//!   traffic, a sharded deadline-batching front
 //!   ([`engine::ShardedServer`]) with least-loaded dispatch and optional
-//!   NUMA-style worker pinning (`pinning` feature).
+//!   NUMA-style worker pinning (`pinning` feature), and an async
+//!   non-blocking submission front ([`engine::AsyncServer`]): bounded
+//!   lock-free per-shard rings, ticket-based completion, and admission
+//!   control with backpressure or oldest-first load shedding.
+//!
+//! A module-by-module map of how these layers fit together — including
+//! the life of a request from `submit` to its epilogue-fused store and
+//! a paper-section ↔ module table — lives in `docs/ARCHITECTURE.md`.
 //!
 //! ## Quickstart
 //!

@@ -15,6 +15,7 @@
 //!              [--profile profile.json]
 //! im2win serve [--model tinynet|vgg] [--requests N] [--shards N] [--deadline-us D]
 //!              [--max-batch B] [--pin] [--cache plans.json] [--profile profile.json]
+//!              [--async] [--queue-depth N] [--shed reject|oldest]
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
 //! ```
@@ -31,7 +32,8 @@ use im2win::coordinator::{
     Record,
 };
 use im2win::engine::{
-    calibrate, CalibrationProfile, Engine, PlanCache, Planner, ShardConfig, ShardedServer,
+    calibrate, AsyncConfig, AsyncServer, CalibrationProfile, Engine, PlanCache, Planner,
+    ShardConfig, ShardedServer, Shed, TrySubmitError,
 };
 use im2win::model::zoo;
 use im2win::prelude::*;
@@ -58,8 +60,8 @@ struct Flags {
     pairs: Vec<(String, String)>,
 }
 
-const BOOL_FLAGS: [&str; 7] =
-    ["paper", "refine", "detect", "pin", "run", "warm-pack", "assert-shift"];
+const BOOL_FLAGS: [&str; 8] =
+    ["paper", "refine", "detect", "pin", "run", "warm-pack", "assert-shift", "async"];
 
 impl Flags {
     fn parse(args: &[String]) -> CliResult<Flags> {
@@ -201,6 +203,7 @@ USAGE:
   im2win serve    [--model tinynet|vgg] [--edge N] [--requests N] [--shards N]
                   [--deadline-us D] [--max-batch B] [--pin] [--batch N]
                   [--threads T] [--cache plans.json] [--profile profile.json]
+                  [--async] [--queue-depth N] [--shed reject|oldest]
   im2win roofline [--paper]
   im2win oracle   [--layer conv9]      (requires a build with --features pjrt-sys)
 ";
@@ -644,8 +647,11 @@ fn serve(flags: &Flags) -> CliResult<()> {
         threads_per_shard: shard_planner.threads,
         pin,
     };
-    let server = ShardedServer::start(engines, cfg);
     let dims = Dims::new(1, base.c, base.h, base.w);
+    if flags.get("async").is_some() {
+        return serve_async(flags, engines, cfg, requests, dims);
+    }
+    let server = ShardedServer::start(engines, cfg);
     let receivers: Vec<_> = (0..requests)
         .map(|i| server.submit(Tensor4::random(dims, Layout::Nchw, i as u64)))
         .collect();
@@ -659,10 +665,17 @@ fn serve(flags: &Flags) -> CliResult<()> {
     println!("  throughput     : {:.1} inf/s (longest shard wall)", report.throughput());
     println!("  deadline flush : {} batches", report.deadline_flushes());
     println!("  worst p99      : {}", fmt_time(report.p99_latency_s()));
-    for (i, s) in report.shards.iter().enumerate() {
+    print_shard_lines(&report.shards);
+    Ok(())
+}
+
+/// Per-shard stat lines shared by the sync and async serve reports.
+fn print_shard_lines(shards: &[im2win::engine::ServerReport]) {
+    for (i, s) in shards.iter().enumerate() {
         println!(
             "  shard {i}: served {:>5}  batches {:>4} (avg {:.2}, {} full / {} deadline)  \
-             depth<= {:>3}  occ {:>5.1}%  p50 {}  p99 {}  warm allocs {}",
+             depth<= {:>3}  occ {:>5.1}%  queue p50 {} p99 {}  done p50 {} p99 {}  \
+             warm allocs {}",
             s.served,
             s.batches,
             s.avg_batch(),
@@ -670,11 +683,85 @@ fn serve(flags: &Flags) -> CliResult<()> {
             s.deadline_flushes,
             s.max_queue_depth,
             s.occupancy() * 100.0,
+            fmt_time(s.p50_queue_s),
+            fmt_time(s.p99_queue_s),
             fmt_time(s.p50_latency_s),
             fmt_time(s.p99_latency_s),
             s.warm_misses,
         );
     }
+}
+
+/// `im2win serve --async`: non-blocking submission through the bounded
+/// per-shard rings. The submit loop retries on
+/// [`TrySubmitError::QueueFull`] (counting each backpressure event) so
+/// every request is eventually admitted; with `--shed oldest` admission
+/// always succeeds and overload surfaces as shed (evicted) requests
+/// instead.
+fn serve_async(
+    flags: &Flags,
+    engines: Vec<Engine>,
+    cfg: ShardConfig,
+    requests: usize,
+    dims: Dims,
+) -> CliResult<()> {
+    let queue_depth = flags.usize_or("queue-depth", 256)?;
+    let shed = match flags.get("shed") {
+        None => Shed::Reject,
+        Some(s) => Shed::parse(s).ok_or_else(|| err(format!("unknown shed policy '{s}'")))?,
+    };
+    println!("async front: queue depth {queue_depth}/shard, shed policy '{shed}'");
+    let server = AsyncServer::start(engines, cfg, AsyncConfig { queue_depth, shed });
+    let client = server.client();
+    let mut tickets = Vec::with_capacity(requests);
+    let mut queue_full = 0usize;
+    for i in 0..requests {
+        let mut image = Tensor4::random(dims, Layout::Nchw, i as u64);
+        loop {
+            match client.try_submit(image) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                Err(TrySubmitError::QueueFull(back)) => {
+                    queue_full += 1;
+                    image = back;
+                    std::thread::yield_now();
+                }
+                Err(TrySubmitError::Closed(_)) => {
+                    return Err(err("server closed during submission"));
+                }
+            }
+        }
+    }
+    let mut ok = 0usize;
+    let mut shed_seen = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => ok += 1,
+            Err(im2win::error::Error::Overloaded(_)) => shed_seen += 1,
+            Err(e) => return Err(err(format!("inference failed: {e}"))),
+        }
+    }
+    let report = server.shutdown();
+    println!(
+        "\nserved {} requests in {} batches ({} answered OK, {} shed)",
+        report.sharded.served(),
+        report.sharded.batches(),
+        ok,
+        shed_seen,
+    );
+    println!("  throughput     : {:.1} inf/s (longest shard wall)", report.sharded.throughput());
+    println!("  backpressure   : {queue_full} QueueFull retries at the submit loop");
+    println!("  shed           : {} requests (policy '{shed}')", report.shed);
+    println!("  slot allocs    : {} (0 = allocation-free submit path)", report.slot_allocs);
+    println!("  deadline flush : {} batches", report.sharded.deadline_flushes());
+    println!(
+        "  worst queue p99: {}  worst done p99: {}",
+        fmt_time(report.sharded.p99_queue_s()),
+        fmt_time(report.sharded.p99_latency_s()),
+    );
+    print_shard_lines(&report.sharded.shards);
     Ok(())
 }
 

@@ -26,7 +26,7 @@
 mod pool;
 
 pub use pool::{
-    configured_threads, current, global, install_scoped, pin_current_thread,
+    configured_threads, core_block, current, global, install_scoped, pin_current_thread,
     set_global_threads, PoolRef, ScopedPoolGuard, ThreadPool,
 };
 

@@ -359,6 +359,17 @@ impl Drop for ScopedPoolGuard {
     }
 }
 
+/// The disjoint core block for worker group `group` when every group
+/// owns `threads` cores: `group·threads .. (group+1)·threads`.
+///
+/// This is the NUMA-style placement both serving fronts use — shard `i`
+/// pins its loop thread to the block's first core and its pool workers
+/// to the rest, so concurrently batching shards never migrate onto each
+/// other's cores (see `engine::sharded::spawn_shard_worker`).
+pub fn core_block(group: usize, threads: usize) -> Vec<usize> {
+    (group * threads..(group + 1) * threads).collect()
+}
+
 /// Pin the calling thread to the CPU set `cpus` (NUMA-style worker-group
 /// placement). Returns `true` when the affinity call succeeded. Compiled
 /// to a no-op returning `false` unless the `pinning` feature is enabled on
@@ -532,6 +543,17 @@ mod tests {
         // Once the global pool exists, the configured count is its count.
         let g = global().threads();
         assert_eq!(configured_threads(), g);
+    }
+
+    #[test]
+    fn core_blocks_are_disjoint_and_contiguous() {
+        assert_eq!(core_block(0, 4), vec![0, 1, 2, 3]);
+        assert_eq!(core_block(2, 3), vec![6, 7, 8]);
+        assert!(core_block(5, 0).is_empty());
+        // Consecutive groups tile the core space with no overlap.
+        let a = core_block(0, 4);
+        let b = core_block(1, 4);
+        assert_eq!(a.last().unwrap() + 1, b[0]);
     }
 
     #[test]

@@ -18,9 +18,10 @@
 //!
 //! Two features layer here. **`pjrt`** enables the PJRT-facing surface
 //! (the `im2win oracle` subcommand and runtime call sites) but still
-//! compiles the [`stub`] — so CI can build and test the feature without
-//! any external crates. **`pjrt-sys`** (which implies `pjrt`) swaps in
-//! the real bridge ([`pjrt`]); it needs the vendored `xla` bindings,
+//! compiles the `stub` module — so CI can build and test the feature
+//! without any external crates. **`pjrt-sys`** (which implies `pjrt`)
+//! swaps in the real bridge (the `pjrt` module, exposed through the
+//! same [`PjrtRuntime`] name); it needs the vendored `xla` bindings,
 //! which are not part of the offline dependency set. In every stub build
 //! each entry point returns a clean [`crate::error::Error::Runtime`]
 //! explaining that the binary was built without PJRT support, and callers

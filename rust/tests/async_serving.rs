@@ -1,0 +1,325 @@
+//! Integration tests for the async non-blocking serving front
+//! (`engine::async_front`): correctness through the rings, backpressure
+//! under a full ring, shed-policy behavior, ticket timeouts, completion
+//! latency accounting, drain-on-shutdown, and the zero-allocation
+//! steady-state submit path.
+
+use im2win::conv::AlgoKind;
+use im2win::engine::{
+    AsyncConfig, AsyncServer, Engine, PlanCache, Planner, ShardConfig, Shed, ShardedServer,
+    TrySubmitError,
+};
+use im2win::model::zoo;
+use im2win::prelude::*;
+use im2win::tensor::Dims;
+use std::time::Duration;
+
+fn tinynet_engine(threads: usize) -> Engine {
+    let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 21).unwrap();
+    let mut cache = PlanCache::in_memory();
+    let planner = Planner { threads, ..Planner::new() };
+    Engine::plan(model, &planner, &mut cache).unwrap()
+}
+
+fn image(seed: u64) -> Tensor4 {
+    Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, seed)
+}
+
+fn small_cfg() -> ShardConfig {
+    ShardConfig { max_batch: 4, threads_per_shard: 1, ..ShardConfig::default() }
+}
+
+#[test]
+fn async_front_serves_correct_results() {
+    let reference = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 21).unwrap();
+    let server =
+        AsyncServer::start(vec![tinynet_engine(1)], small_cfg(), AsyncConfig::default());
+    let client = server.client();
+    let images: Vec<Tensor4> = (0..12).map(|i| image(100 + i)).collect();
+    let tickets: Vec<_> = images
+        .iter()
+        .map(|x| client.try_submit(x.clone()).expect("default depth admits 12 requests"))
+        .collect();
+    for (x, t) in images.iter().zip(tickets) {
+        let inf = t.wait().unwrap();
+        assert_eq!(inf.dims, Dims::new(1, 10, 1, 1));
+        let expect = reference.forward(x).unwrap();
+        let got = inf.to_tensor(Layout::Nchw);
+        assert!(
+            expect.allclose(&got, 1e-3, 1e-4),
+            "async-served logits diverge: {}",
+            expect.max_abs_diff(&got)
+        );
+    }
+    let report = server.shutdown();
+    assert_eq!(report.sharded.served(), 12);
+    assert_eq!(report.shed, 0);
+    assert!(report.sharded.throughput() > 0.0);
+}
+
+#[test]
+fn full_ring_backpressures_with_queue_full_not_deadlock() {
+    // queue_depth 2 and a single 1-thread shard: the submit loop outruns
+    // the drain loop immediately, so Reject policy must surface
+    // QueueFull — and hand the image back — rather than block or drop.
+    let cfg = ShardConfig { max_batch: 1, threads_per_shard: 1, ..ShardConfig::default() };
+    let server = AsyncServer::start(
+        vec![tinynet_engine(1)],
+        cfg,
+        AsyncConfig { queue_depth: 2, shed: Shed::Reject },
+    );
+    let client = server.client();
+    let mut tickets = Vec::new();
+    let mut queue_full = 0usize;
+    let mut img = image(7);
+    let mut attempts = 0usize;
+    while tickets.len() < 32 {
+        attempts += 1;
+        assert!(attempts < 100_000, "submit loop wedged: backpressure never cleared");
+        match client.try_submit(img) {
+            Ok(t) => {
+                tickets.push(t);
+                img = image(7 + tickets.len() as u64);
+            }
+            Err(TrySubmitError::QueueFull(back)) => {
+                queue_full += 1;
+                img = back; // retry without a copy
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            Err(TrySubmitError::Closed(_)) => panic!("server closed mid-test"),
+        }
+    }
+    assert!(
+        queue_full > 0,
+        "a depth-2 ring fed faster than it drains must report QueueFull"
+    );
+    // Every admitted request still completes successfully.
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let report = server.shutdown();
+    assert_eq!(report.sharded.served(), 32);
+    assert_eq!(report.shed, 0, "Reject policy never evicts queued work");
+}
+
+#[test]
+fn oldest_first_shed_evicts_queued_work_instead_of_refusing() {
+    let cfg = ShardConfig { max_batch: 1, threads_per_shard: 1, ..ShardConfig::default() };
+    let server = AsyncServer::start(
+        vec![tinynet_engine(1)],
+        cfg,
+        AsyncConfig { queue_depth: 2, shed: Shed::OldestFirst },
+    );
+    let client = server.client();
+    // Under OldestFirst every submit is admitted — overload lands on the
+    // oldest queued ticket as Error::Overloaded instead.
+    let tickets: Vec<_> = (0..64)
+        .map(|i| client.try_submit(image(i)).expect("OldestFirst always admits"))
+        .collect();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => ok += 1,
+            Err(Error::Overloaded(_)) => shed += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(ok + shed, 64, "every admitted ticket must be answered");
+    assert!(shed > 0, "a depth-2 ring fed 64 requests back-to-back must shed");
+    assert!(ok > 0, "shedding must not starve the queue entirely");
+    let report = server.shutdown();
+    assert_eq!(report.shed, shed);
+    assert_eq!(report.sharded.served(), ok);
+}
+
+#[test]
+fn wait_timeout_expires_then_the_result_still_arrives() {
+    let cfg = ShardConfig { max_batch: 2, threads_per_shard: 1, ..ShardConfig::default() };
+    let server = AsyncServer::start(
+        vec![tinynet_engine(1)],
+        cfg,
+        AsyncConfig { queue_depth: 256, shed: Shed::Reject },
+    );
+    let client = server.client();
+    let mut tickets: Vec<_> =
+        (0..32).map(|i| client.try_submit(image(i)).expect("depth 256 admits 32")).collect();
+    // The last-submitted request sits behind 31 others on one slow
+    // shard: a 1 µs wait must expire, not block until completion.
+    let mut last = tickets.pop().unwrap();
+    if !last.is_done() {
+        let early = last.wait_timeout(Duration::from_micros(1));
+        assert!(early.is_none(), "1 µs wait behind a deep queue should expire");
+    }
+    // The expired wait left the request in flight; a real wait gets it.
+    let inf = last.wait().unwrap();
+    assert_eq!(inf.dims, Dims::new(1, 10, 1, 1));
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let report = server.shutdown();
+    assert_eq!(report.sharded.served(), 32);
+}
+
+#[test]
+fn try_wait_yields_the_result_exactly_once() {
+    let server =
+        AsyncServer::start(vec![tinynet_engine(1)], small_cfg(), AsyncConfig::default());
+    let client = server.client();
+    let mut t = client.try_submit(image(3)).unwrap();
+    // Poll until done (bounded).
+    let mut got = None;
+    for _ in 0..100_000 {
+        if let Some(r) = t.try_wait() {
+            got = Some(r);
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    got.expect("poll loop should observe completion").unwrap();
+    assert!(t.is_done());
+    assert!(t.try_wait().is_none(), "a consumed ticket yields nothing further");
+    server.shutdown();
+}
+
+#[test]
+fn completion_latency_is_monotonic_and_matches_sync_semantics() {
+    // Same workload through the sync sharded front and the async front:
+    // both must answer everything, and the async report's percentiles
+    // must be internally consistent — queue wait (admission → flush) is
+    // a prefix of completion latency (admission → done), so its
+    // percentiles can never exceed the completion percentiles.
+    let cfg = ShardConfig {
+        max_batch: 4,
+        deadline: Duration::from_millis(1),
+        threads_per_shard: 1,
+        ..ShardConfig::default()
+    };
+    let sync = ShardedServer::start(vec![tinynet_engine(1)], cfg.clone());
+    let rxs: Vec<_> = (0..24).map(|i| sync.submit(image(i))).collect();
+    for rx in &rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let sync_report = sync.shutdown();
+
+    let server = AsyncServer::start(vec![tinynet_engine(1)], cfg, AsyncConfig::default());
+    let client = server.client();
+    let tickets: Vec<_> = (0..24).map(|i| client.try_submit(image(i)).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let report = server.shutdown();
+
+    assert_eq!(report.sharded.served(), sync_report.served());
+    for (which, s) in
+        sync_report.shards.iter().chain(report.sharded.shards.iter()).enumerate()
+    {
+        assert!(s.p99_latency_s >= s.p50_latency_s, "shard {which}: p99 < p50");
+        assert!(s.p99_queue_s >= s.p50_queue_s, "shard {which}: queue p99 < p50");
+        assert!(
+            s.p50_queue_s <= s.p50_latency_s && s.p99_queue_s <= s.p99_latency_s,
+            "shard {which}: queue wait exceeds completion latency"
+        );
+        assert!(s.p50_latency_s > 0.0);
+    }
+    assert!(report.sharded.p99_latency_s() >= report.sharded.p50_latency_s());
+    assert!(report.sharded.p99_queue_s() <= report.sharded.p99_latency_s());
+}
+
+#[test]
+fn shutdown_drains_every_admitted_ticket() {
+    let server = AsyncServer::start(
+        vec![tinynet_engine(1), tinynet_engine(1)],
+        small_cfg(),
+        AsyncConfig { queue_depth: 64, shed: Shed::Reject },
+    );
+    let client = server.client();
+    let mut tickets: Vec<_> =
+        (0..40).map(|i| client.try_submit(image(i)).expect("depth 64 admits 40")).collect();
+    // Shut down with the queues still loaded: every admitted ticket must
+    // be answered before shutdown returns.
+    let report = server.shutdown();
+    assert_eq!(report.sharded.served(), 40, "shutdown dropped admitted requests");
+    for t in &mut tickets {
+        let r = t.try_wait().expect("ticket unanswered after shutdown");
+        r.expect("drained request should succeed");
+    }
+}
+
+#[test]
+fn submits_after_shutdown_are_refused_cleanly() {
+    let server =
+        AsyncServer::start(vec![tinynet_engine(1)], small_cfg(), AsyncConfig::default());
+    let client = server.client();
+    client.try_submit(image(1)).unwrap().wait().unwrap();
+    server.shutdown();
+    match client.try_submit(image(2)) {
+        Err(TrySubmitError::Closed(img)) => assert_eq!(img.dims(), Dims::new(1, 3, 32, 32)),
+        Err(TrySubmitError::QueueFull(_)) => panic!("closed front reported QueueFull"),
+        Ok(_) => panic!("closed front admitted a request"),
+    }
+}
+
+#[test]
+fn steady_state_submit_path_allocates_no_completion_slots() {
+    let server = AsyncServer::start(
+        vec![tinynet_engine(1)],
+        small_cfg(),
+        AsyncConfig { queue_depth: 16, shed: Shed::Reject },
+    );
+    let client = server.client();
+    // Sequential submit → wait keeps outstanding tickets at 1: the
+    // primed freelist recycles one slot forever, so the submit path
+    // performs zero allocations across 200 requests.
+    for i in 0..200 {
+        let mut img = image(i);
+        let t = loop {
+            match client.try_submit(img) {
+                Ok(t) => break t,
+                Err(TrySubmitError::QueueFull(back)) => {
+                    img = back;
+                    std::thread::yield_now();
+                }
+                Err(TrySubmitError::Closed(_)) => panic!("server closed mid-test"),
+            }
+        };
+        t.wait().unwrap();
+    }
+    assert_eq!(server.slot_allocs(), 0, "steady-state submits must not allocate slots");
+    let report = server.shutdown();
+    assert_eq!(report.sharded.served(), 200);
+    assert_eq!(report.slot_allocs, 0);
+    // The serve loop itself also reached allocation-free steady state.
+    assert_eq!(report.sharded.shards[0].warm_misses, 0);
+}
+
+#[test]
+fn least_loaded_dispatch_feeds_every_shard() {
+    let cfg = ShardConfig {
+        max_batch: 4,
+        deadline: Duration::from_millis(2),
+        threads_per_shard: 1,
+        ..ShardConfig::default()
+    };
+    let server = AsyncServer::start(
+        vec![tinynet_engine(1), tinynet_engine(1)],
+        cfg,
+        AsyncConfig::default(),
+    );
+    assert_eq!(server.shards(), 2);
+    let client = server.client();
+    assert_eq!(client.shards(), 2);
+    let tickets: Vec<_> = (0..10).map(|i| client.try_submit(image(i)).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(client.queue_depth(0), 0);
+    assert_eq!(client.queue_depth(1), 0);
+    let report = server.shutdown();
+    assert_eq!(report.sharded.served(), 10);
+    assert!(
+        report.sharded.shards.iter().all(|s| s.served > 0),
+        "round-robin tiebreak should feed both idle shards: {:?}",
+        report.sharded.shards.iter().map(|s| s.served).collect::<Vec<_>>()
+    );
+}
