@@ -2,9 +2,11 @@
 //! engine at batch sizes 1 / 8 / 32, the prepacked + fused bias/ReLU
 //! epilogue path on the biased tinynet, the micro-batching server's
 //! end-to-end throughput, the sharded deadline-batching front at 2
-//! shards, and the async non-blocking front under an open-loop arrival
+//! shards, the async non-blocking front under an open-loop arrival
 //! generator (offered load ~1.5× the measured sync throughput, so the
-//! rings visibly backpressure). Future PRs touching the engine,
+//! rings visibly backpressure), and the graph planner's mixed-layout
+//! mixnet execution against the greedy per-layer plan (the global DP
+//! must not lose to greedy). Future PRs touching the engine,
 //! workspace, server or dispatcher compare against these numbers to
 //! catch serving regressions.
 //!
@@ -252,6 +254,46 @@ fn main() {
         async_report.slot_allocs,
     );
 
+    // Graph-planned vs greedy mixed-layout execution: on mixnet the
+    // greedy per-layer planner keeps the stem in the incoming NCHW
+    // (each layer alone cannot pay for a conversion) while the exact
+    // DP converts once and runs both stem convs in CHWN8 — the global
+    // optimum. The planner is pinned to threads=4 / batch=8 so the
+    // cost-model regime (and therefore the plans under test) is stable
+    // across runner core counts.
+    let graph_planner = Planner { threads: 4, batch: 8, ..Planner::new() };
+    let mixnet = || zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 42).expect("mixnet builds");
+    let mut cache = PlanCache::in_memory();
+    let mut greedy_engine =
+        Engine::plan(mixnet(), &graph_planner, &mut cache).expect("greedy planning succeeds");
+    let mut cache = PlanCache::in_memory();
+    let mut graph_engine = Engine::plan_graph(mixnet(), &graph_planner, &mut cache)
+        .expect("graph planning succeeds");
+    let gbatch = 8;
+    let gx = Tensor4::random(Dims::new(gbatch, 3, 40, 40), Layout::Nchw, 11);
+    let mut gout = Tensor4::zeros(
+        graph_engine.output_dims(gbatch).expect("output dims"),
+        Layout::Nchw,
+    );
+    let greedy_r = measure_throughput(gbatch, iters, || {
+        greedy_engine.forward_into(&gx, &mut gout).expect("greedy forward succeeds");
+    });
+    let graph_r = measure_throughput(gbatch, iters, || {
+        graph_engine.forward_into(&gx, &mut gout).expect("graph forward succeeds");
+    });
+    let gplan = graph_engine.graph_plan().expect("graph engine carries its plan");
+    println!(
+        "\ngraph planner vs greedy (mixnet, batch {gbatch}, {} layouts, {} conversions):",
+        gplan.distinct_layouts(),
+        gplan.conversions.len()
+    );
+    println!("  greedy: {:>8.1} inf/s", greedy_r.inf_per_s());
+    println!(
+        "  graph:  {:>8.1} inf/s   ({:.2}x)",
+        graph_r.inf_per_s(),
+        graph_r.inf_per_s() / greedy_r.inf_per_s().max(1e-9)
+    );
+
     // Machine-readable artifact for the CI perf trajectory.
     if let Some(path) = common::json_path() {
         let doc = Json::object(vec![
@@ -263,6 +305,13 @@ fn main() {
             ),
             ("engine_inf_per_s", Json::Object(engine_rows)),
             ("prepacked", Json::Object(fused_rows)),
+            (
+                "graph",
+                Json::object(vec![
+                    ("greedy_inf_per_s", Json::Number(greedy_r.inf_per_s())),
+                    ("graph_inf_per_s", Json::Number(graph_r.inf_per_s())),
+                ]),
+            ),
             (
                 "server",
                 Json::object(vec![

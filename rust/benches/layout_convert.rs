@@ -1,0 +1,121 @@
+//! Layout-conversion microbench: effective bandwidth of every ordered
+//! layout pair (4 layouts → 12 ordered pairs) across the Table I
+//! geometries. These are the numbers the graph planner's edge costs come
+//! from: `calibrate::measure_convert` records the per-pair mean into the
+//! `CalibrationProfile` and `Planner::convert_cost` prices a conversion
+//! as `2 × destination bytes / bandwidth` — the same read-plus-write
+//! convention this bench reports, so a printed GB/s cell and the
+//! planner's cost for that pair round-trip exactly.
+//!
+//! ```bash
+//! cargo bench --bench layout_convert -- --scale ci
+//! cargo bench --bench layout_convert -- --layers conv5,conv9 --json convert.json
+//! ```
+//!
+//! `--json PATH` writes the per-pair matrix plus the fitted profile table
+//! as a JSON document for the CI perf-trajectory artifact.
+
+mod common;
+
+use im2win::config::json::Json;
+use im2win::coordinator::layers;
+use im2win::engine::calibrate::{self, CalibrationProfile};
+use im2win::prelude::*;
+use im2win::tensor::transform_into;
+
+fn main() {
+    let cfg = common::config_from_args();
+    if common::is_test_mode() {
+        println!("layout_convert: test mode, skipping measurement");
+        return;
+    }
+    let scale = cfg.scale;
+    let repeats = scale.repeats().max(3);
+    let selected = layers::select(&cfg.layers);
+    let geoms: Vec<(&str, Dims)> = selected
+        .iter()
+        .map(|l| {
+            (l.name, l.scaled_params(scale.batch(), scale.spatial_div()).input_dims())
+        })
+        .collect();
+
+    println!(
+        "layout_convert — {} geometries, scale={}, {} repeats, {} threads",
+        geoms.len(),
+        scale.name(),
+        repeats,
+        im2win::parallel::global().threads()
+    );
+    print!("{:>14}", "pair \\ GB/s");
+    for (name, _) in &geoms {
+        print!(" {name:>8}");
+    }
+    println!("     mean");
+
+    // Per-pair × per-geometry matrix: pre-allocated destination, so the
+    // timing sees only the data movement; bandwidth counts the read and
+    // the write (2 × destination storage bytes / best time).
+    let mut pair_rows: Vec<(String, Json)> = Vec::new();
+    for from in Layout::ALL {
+        for to in Layout::ALL {
+            if from == to {
+                continue;
+            }
+            print!("{:>6} -> {:<5}", from.name(), to.name());
+            let mut cells: Vec<(String, Json)> = Vec::new();
+            let (mut sum, mut n) = (0.0, 0usize);
+            for &(name, dims) in &geoms {
+                let src = Tensor4::random(dims, from, 0x5EED);
+                let mut dst = Tensor4::zeros(dims, to);
+                let bytes = dst.storage_bytes() as f64;
+                let r = im2win::bench_harness::measure(repeats, || {
+                    transform_into(&src, &mut dst);
+                });
+                let gbps = if r.best_s > 0.0 { 2.0 * bytes / r.best_s / 1e9 } else { 0.0 };
+                print!(" {gbps:>8.2}");
+                cells.push((name.to_string(), Json::Number(gbps)));
+                sum += gbps;
+                n += 1;
+            }
+            let mean = if n > 0 { sum / n as f64 } else { 0.0 };
+            println!(" {mean:>8.2}");
+            cells.push(("mean_gbps".into(), Json::Number(mean)));
+            pair_rows.push((
+                calibrate::convert_key(from, to),
+                Json::Object(cells),
+            ));
+        }
+    }
+
+    // Fit the same measurement into a calibration profile — this is
+    // exactly what `im2win calibrate --run` does, and what the graph
+    // planner reads back through `convert_bandwidth`.
+    let mut profile =
+        CalibrationProfile::new(0.0, im2win::parallel::global().threads());
+    let dims: Vec<Dims> = geoms.iter().map(|&(_, d)| d).collect();
+    let pairs = calibrate::measure_convert(&mut profile, &dims, repeats);
+    println!("\nfitted into CalibrationProfile ({pairs} pairs):");
+    for (key, stat) in profile.converts() {
+        println!("  {key:<16} {:>8.2} GB/s  ({} geometries)", stat.gbps, stat.samples);
+    }
+
+    if let Some(path) = common::json_path() {
+        let fitted: Vec<(String, Json)> = profile
+            .converts()
+            .map(|(k, s)| (k.to_string(), Json::Number(s.gbps)))
+            .collect();
+        let doc = Json::object(vec![
+            ("bench", Json::from("layout_convert")),
+            ("scale", Json::from(scale.name())),
+            (
+                "threads",
+                Json::Number(im2win::parallel::global().threads() as f64),
+            ),
+            ("geometries", Json::Number(geoms.len() as f64)),
+            ("pairs_gbps", Json::Object(pair_rows)),
+            ("fitted_gbps", Json::Object(fitted)),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("writing the --json artifact");
+        println!("\nwrote {path}");
+    }
+}

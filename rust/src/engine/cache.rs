@@ -31,6 +31,7 @@
 //! Where this sits in the system — and which serving front consults it
 //! when — is mapped in `docs/ARCHITECTURE.md`.
 
+use super::graph::{ConversionPoint, GraphPlan};
 use super::planner::LayerPlan;
 use crate::config::json::{self, Json};
 use crate::conv::{AlgoKind, ConvParams};
@@ -66,6 +67,11 @@ pub fn layer_key(p: &ConvParams, prev: Layout, threads: usize) -> String {
 pub struct PlanCache {
     path: Option<PathBuf>,
     entries: BTreeMap<String, LayerPlan>,
+    /// Whole-graph entries ([`GraphPlan`]), keyed by
+    /// [`super::graph::graph_key`] — model fingerprint, incoming layout,
+    /// batch, threads. They live and die with the same profile
+    /// fingerprint as the per-layer entries.
+    graphs: BTreeMap<String, GraphPlan>,
     /// Fingerprint of the calibration profile the stored entries were
     /// decided under (empty = the analytic constants). See
     /// [`PlanCache::sync_profile`].
@@ -87,9 +93,10 @@ impl PlanCache {
         let mut cache = PlanCache { path: Some(path.to_path_buf()), ..PlanCache::default() };
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
-            let (profile, entries) = parse_document(&text)?;
+            let (profile, entries, graphs) = parse_document(&text)?;
             cache.profile = profile;
             cache.entries = entries;
+            cache.graphs = graphs;
         }
         Ok(cache)
     }
@@ -118,10 +125,16 @@ impl PlanCache {
             .iter()
             .map(|(k, plan)| (k.clone(), plan_json(plan)))
             .collect();
+        let graphs: Vec<(String, Json)> = self
+            .graphs
+            .iter()
+            .map(|(k, graph)| (k.clone(), graph_json(graph)))
+            .collect();
         Json::Object(vec![
             ("version".into(), Json::Number(VERSION)),
             ("profile".into(), Json::String(self.profile.clone())),
             ("entries".into(), Json::Object(entries)),
+            ("graphs".into(), Json::Object(graphs)),
         ])
         .to_string()
     }
@@ -136,8 +149,9 @@ impl PlanCache {
         if self.profile == fingerprint {
             return 0;
         }
-        let dropped = self.entries.len();
+        let dropped = self.entries.len() + self.graphs.len();
         self.entries.clear();
+        self.graphs.clear();
         self.profile = fingerprint.to_string();
         dropped
     }
@@ -146,6 +160,31 @@ impl PlanCache {
     /// (empty = the analytic constants).
     pub fn profile_fingerprint(&self) -> &str {
         &self.profile
+    }
+
+    /// Look up a whole-graph plan (key from [`super::graph::graph_key`]);
+    /// counts a hit or miss.
+    pub fn get_graph(&mut self, key: &str) -> Option<GraphPlan> {
+        match self.graphs.get(key).cloned() {
+            Some(g) => {
+                self.hits += 1;
+                Some(g)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a whole-graph plan.
+    pub fn insert_graph(&mut self, key: String, graph: GraphPlan) {
+        self.graphs.insert(key, graph);
+    }
+
+    /// Number of stored whole-graph plans.
+    pub fn graph_len(&self) -> usize {
+        self.graphs.len()
     }
 
     /// Look up a plan; counts a hit or miss.
@@ -216,10 +255,63 @@ fn parse_plan(v: &Json) -> Result<LayerPlan> {
     })
 }
 
-/// Parse a cache document into its (profile fingerprint, entries) parts.
-/// The `profile` field is optional on read (pre-calibration files) and
-/// always written, defaulting to the analytic marker `""`.
-fn parse_document(text: &str) -> Result<(String, BTreeMap<String, LayerPlan>)> {
+fn graph_json(g: &GraphPlan) -> Json {
+    let conversions: Vec<Json> = g
+        .conversions
+        .iter()
+        .map(|c| {
+            Json::object(vec![
+                ("conv_index", Json::Number(c.conv_index as f64)),
+                ("est_s", Json::Number(c.est_s)),
+                ("from", Json::from(c.from.name())),
+                ("to", Json::from(c.to.name())),
+            ])
+        })
+        .collect();
+    Json::object(vec![
+        ("conversions", Json::Array(conversions)),
+        ("plans", Json::Array(g.plans.iter().map(plan_json).collect())),
+        ("total_s", Json::Number(g.total_s)),
+    ])
+}
+
+fn parse_graph(v: &Json) -> Result<GraphPlan> {
+    let bad = |what: &str| Error::Config(format!("plan cache graph entry: bad or missing '{what}'"));
+    let plans = v
+        .get("plans")
+        .and_then(Json::as_array)
+        .ok_or_else(|| bad("plans"))?
+        .iter()
+        .map(parse_plan)
+        .collect::<Result<Vec<_>>>()?;
+    let mut conversions = Vec::new();
+    for c in v.get("conversions").and_then(Json::as_array).ok_or_else(|| bad("conversions"))? {
+        let from = c.get("from").and_then(Json::as_str).ok_or_else(|| bad("from"))?;
+        let to = c.get("to").and_then(Json::as_str).ok_or_else(|| bad("to"))?;
+        conversions.push(ConversionPoint {
+            conv_index: c
+                .get("conv_index")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad("conv_index"))? as usize,
+            from: Layout::parse(from).ok_or_else(|| bad("from"))?,
+            to: Layout::parse(to).ok_or_else(|| bad("to"))?,
+            est_s: c.get("est_s").and_then(Json::as_f64).ok_or_else(|| bad("est_s"))?,
+        });
+    }
+    Ok(GraphPlan {
+        plans,
+        conversions,
+        total_s: v.get("total_s").and_then(Json::as_f64).ok_or_else(|| bad("total_s"))?,
+    })
+}
+
+/// Parse a cache document into its (profile fingerprint, entries, graphs)
+/// parts. The `profile` and `graphs` fields are optional on read (older
+/// files predate them) and always written, defaulting to the analytic
+/// marker `""` and no graphs.
+fn parse_document(
+    text: &str,
+) -> Result<(String, BTreeMap<String, LayerPlan>, BTreeMap<String, GraphPlan>)> {
     let doc = json::parse(text)?;
     let version = doc
         .get("version")
@@ -237,7 +329,13 @@ fn parse_document(text: &str) -> Result<(String, BTreeMap<String, LayerPlan>)> {
     for (k, v) in obj {
         map.insert(k.clone(), parse_plan(v)?);
     }
-    Ok((profile, map))
+    let mut graphs = BTreeMap::new();
+    if let Some(gobj) = doc.get("graphs").and_then(Json::as_object) {
+        for (k, v) in gobj {
+            graphs.insert(k.clone(), parse_graph(v)?);
+        }
+    }
+    Ok((profile, map, graphs))
 }
 
 #[cfg(test)]
@@ -273,6 +371,19 @@ mod tests {
         assert_eq!(c.len(), 1);
     }
 
+    fn sample_graph() -> GraphPlan {
+        GraphPlan {
+            plans: vec![sample_plan(0), sample_plan(1), sample_plan(2)],
+            conversions: vec![ConversionPoint {
+                conv_index: 1,
+                from: Layout::Nchw,
+                to: Layout::Chwn8,
+                est_s: 2.5e-4,
+            }],
+            total_s: 7.5e-3,
+        }
+    }
+
     #[test]
     fn text_round_trip_is_byte_identical() {
         let mut c = PlanCache::in_memory();
@@ -280,16 +391,19 @@ mod tests {
         for i in 0..6 {
             c.insert(format!("key{i}"), sample_plan(i));
         }
+        c.insert_graph("gkey".into(), sample_graph());
         let text1 = c.to_json_text();
         let mut back = PlanCache::in_memory();
-        let (profile, entries) = parse_document(&text1).unwrap();
+        let (profile, entries, graphs) = parse_document(&text1).unwrap();
         back.profile = profile;
         back.entries = entries;
+        back.graphs = graphs;
         assert_eq!(back.to_json_text(), text1);
         assert_eq!(back.profile_fingerprint(), "0123456789abcdef");
         for i in 0..6 {
             assert_eq!(back.get(&format!("key{i}")), Some(sample_plan(i)));
         }
+        assert_eq!(back.get_graph("gkey"), Some(sample_graph()));
     }
 
     #[test]
@@ -314,13 +428,26 @@ mod tests {
     }
 
     #[test]
-    fn profile_field_is_optional_on_read() {
-        // Pre-calibration cache files carry no 'profile' field; they load
-        // as analytic ("") caches.
+    fn profile_and_graphs_fields_are_optional_on_read() {
+        // Older cache files carry no 'profile' or 'graphs' field; they
+        // load as analytic ("") caches with no graph plans.
         let text = r#"{"version": 1, "entries": {}}"#;
-        let (profile, entries) = parse_document(text).unwrap();
+        let (profile, entries, graphs) = parse_document(text).unwrap();
         assert_eq!(profile, "");
         assert!(entries.is_empty());
+        assert!(graphs.is_empty());
+    }
+
+    #[test]
+    fn sync_profile_drops_graphs_too() {
+        let mut c = PlanCache::in_memory();
+        c.insert("a".into(), sample_plan(0));
+        c.insert_graph("g".into(), sample_graph());
+        assert_eq!(c.graph_len(), 1);
+        // One layer entry + one graph entry invalidated together.
+        assert_eq!(c.sync_profile("fp1"), 2);
+        assert_eq!(c.graph_len(), 0);
+        assert!(c.get_graph("g").is_none());
     }
 
     #[test]

@@ -30,11 +30,18 @@
 //! * [`super::Planner::with_profile`] consults the fit in
 //!   `Planner::estimate`: the compute term uses the measured efficiency
 //!   and the measured per-thread peak; candidates with no measured
-//!   samples fall back to the analytic constants. Transform-traffic and
-//!   layout-conversion terms stay analytic (the records time full runs,
-//!   but bandwidth terms are what make *relative* choices like
-//!   direct-vs-im2col geometry-sensitive, and they need no machine fit
-//!   beyond the spec).
+//!   samples fall back to the analytic constants. Transform-traffic
+//!   terms stay analytic (the records time full runs, but transform
+//!   terms are what make *relative* choices like direct-vs-im2col
+//!   geometry-sensitive, and they need no machine fit beyond the spec).
+//!   Layout-*conversion* costs, by contrast, are pure memory moves whose
+//!   speed varies wildly per ordered pair (NCHW↔NHWC and CHWN→CHWN8
+//!   have specialized kernels; the other pairs fall back to a scalar
+//!   generic loop) — [`measure_convert`] times every ordered pair on
+//!   real tensors and [`CalibrationProfile::convert_bandwidth`] feeds
+//!   the measured number into [`super::Planner::convert_cost`], the
+//!   single method that prices conversions for both the greedy chain
+//!   and the graph DP's lattice edges ([`super::graph`]).
 //! * [`warm_pack`] pre-fills a plan cache with calibrated decisions for
 //!   the whole Table I layer suite (every incoming layout), shipping
 //!   pre-tuned plans so a fresh process serves with zero planning work.
@@ -54,12 +61,13 @@
 
 use super::cache::{layer_key, PlanCache};
 use super::planner::Planner;
+use crate::bench_harness::measure;
 use crate::config::json::{self, Json};
 use crate::conv::{AlgoKind, ConvParams};
 use crate::coordinator::layers::{self, BenchLayer};
 use crate::coordinator::report::Record;
 use crate::error::{Error, Result};
-use crate::tensor::Layout;
+use crate::tensor::{transform_into, Dims, Layout, Tensor4};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -128,6 +136,17 @@ pub struct SeriesFit {
     pub buckets: BTreeMap<String, EffStat>,
 }
 
+/// One measured layout-conversion cell: effective bandwidth in GB/s
+/// (counting the read *and* the write, i.e. `2 × destination storage
+/// bytes / best time`) and how many geometries backed it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ConvertStat {
+    /// Mean effective bandwidth over the sampled geometries, GB/s.
+    pub gbps: f64,
+    /// Number of geometries aggregated into `gbps`.
+    pub samples: usize,
+}
+
 /// A measured cost model fitted from coordinator benchmark records —
 /// see the module docs for the full story.
 #[derive(Debug, Clone, PartialEq)]
@@ -137,8 +156,17 @@ pub struct CalibrationProfile {
     /// Thread count the records were measured with (scales the peak to
     /// the consulting planner's thread count).
     pub threads: usize,
+    /// Ordered layout pair (`FROM->TO`, see [`convert_key`]) → measured
+    /// conversion bandwidth.
+    convert: BTreeMap<String, ConvertStat>,
     /// Series key (`algo_LAYOUT`, e.g. `im2win_NHWC`) → fitted stats.
     table: BTreeMap<String, SeriesFit>,
+}
+
+/// The profile key for an ordered layout-conversion pair: `FROM->TO`
+/// (e.g. `NCHW->CHWN8`).
+pub fn convert_key(from: Layout, to: Layout) -> String {
+    format!("{}->{}", from.name(), to.name())
 }
 
 /// The series key a record contributes to: `algo_LAYOUT`, exactly
@@ -180,7 +208,12 @@ impl CalibrationProfile {
     /// An empty profile (tests, incremental construction via
     /// [`CalibrationProfile::set_series`]).
     pub fn new(peak_gflops: f64, threads: usize) -> Self {
-        CalibrationProfile { peak_gflops, threads: threads.max(1), table: BTreeMap::new() }
+        CalibrationProfile {
+            peak_gflops,
+            threads: threads.max(1),
+            convert: BTreeMap::new(),
+            table: BTreeMap::new(),
+        }
     }
 
     /// Fit a profile from benchmark records measured with `threads`
@@ -267,6 +300,25 @@ impl CalibrationProfile {
             EffStat { eff, samples };
     }
 
+    /// Insert (or replace) one measured layout-conversion cell.
+    pub fn set_convert(&mut self, from: Layout, to: Layout, gbps: f64, samples: usize) {
+        self.convert.insert(convert_key(from, to), ConvertStat { gbps, samples });
+    }
+
+    /// Measured conversion bandwidth for an ordered layout pair, in
+    /// **bytes/s** (ready for the planner's byte-counting cost terms), or
+    /// `None` when the pair was never sampled — the planner then falls
+    /// back to the machine spec's nominal bandwidth.
+    pub fn convert_bandwidth(&self, from: Layout, to: Layout) -> Option<f64> {
+        let stat = self.convert.get(&convert_key(from, to))?;
+        (stat.samples > 0 && stat.gbps > 0.0).then_some(stat.gbps * 1e9)
+    }
+
+    /// Measured conversion cells in canonical key order (reporting).
+    pub fn converts(&self) -> impl Iterator<Item = (&str, &ConvertStat)> {
+        self.convert.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
     /// Insert (or replace) one shape-class bucket of a series.
     pub fn set_bucket(
         &mut self,
@@ -320,10 +372,24 @@ impl CalibrationProfile {
                 )
             })
             .collect();
+        let convert: Vec<(String, Json)> = self
+            .convert
+            .iter()
+            .map(|(k, stat)| {
+                (
+                    k.clone(),
+                    Json::Object(vec![
+                        ("gbps".into(), Json::Number(stat.gbps)),
+                        ("samples".into(), Json::Number(stat.samples as f64)),
+                    ]),
+                )
+            })
+            .collect();
         Json::Object(vec![
             ("version".into(), Json::Number(VERSION)),
             ("peak_gflops".into(), Json::Number(self.peak_gflops)),
             ("threads".into(), Json::Number(self.threads as f64)),
+            ("convert".into(), Json::Object(convert)),
             ("series".into(), Json::Object(series)),
         ])
         .to_string()
@@ -355,7 +421,25 @@ impl CalibrationProfile {
             }
             table.insert(key.clone(), SeriesFit { overall, buckets });
         }
-        Ok(CalibrationProfile { peak_gflops, threads: threads.max(1), table })
+        // Optional on read: pre-graph-planner profiles have no convert
+        // table; they load with every pair unsampled.
+        let mut convert = BTreeMap::new();
+        if let Some(cobj) = doc.get("convert").and_then(Json::as_object) {
+            for (k, v) in cobj {
+                convert.insert(
+                    k.clone(),
+                    ConvertStat {
+                        gbps: v.get("gbps").and_then(Json::as_f64).ok_or_else(|| bad("gbps"))?,
+                        samples: v
+                            .get("samples")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| bad("samples"))?
+                            as usize,
+                    },
+                );
+            }
+        }
+        Ok(CalibrationProfile { peak_gflops, threads: threads.max(1), convert, table })
     }
 
     /// Load a profile from a file.
@@ -486,6 +570,48 @@ pub fn plan_shift(
         .collect()
 }
 
+/// Time every ordered layout-conversion pair on real tensors and record
+/// the results into `profile` — the measurement behind the planner's
+/// conversion costs and the `layout_convert` microbench. For each of the
+/// 12 ordered pairs, every geometry in `geoms` is converted `repeats`
+/// times through [`transform_into`] (pre-allocated destination, so the
+/// timing sees only the move) and the effective bandwidth is `2 ×
+/// destination storage bytes / best time` — read plus write, the same
+/// convention [`super::Planner::convert_cost`] prices with, so a
+/// measured pair and its cost round-trip exactly. The per-pair stat is
+/// the mean over geometries. Returns the number of pairs sampled (12
+/// when `geoms` is non-empty).
+pub fn measure_convert(
+    profile: &mut CalibrationProfile,
+    geoms: &[Dims],
+    repeats: usize,
+) -> usize {
+    let mut pairs = 0;
+    for from in Layout::ALL {
+        for to in Layout::ALL {
+            if from == to {
+                continue;
+            }
+            let (mut sum_gbps, mut n) = (0.0, 0usize);
+            for &dims in geoms {
+                let src = Tensor4::random(dims, from, 0x5EED);
+                let mut dst = Tensor4::zeros(dims, to);
+                let bytes = dst.storage_bytes() as f64;
+                let r = measure(repeats, || transform_into(&src, &mut dst));
+                if r.best_s > 0.0 {
+                    sum_gbps += 2.0 * bytes / r.best_s / 1e9;
+                    n += 1;
+                }
+            }
+            if n > 0 {
+                profile.set_convert(from, to, sum_gbps / n as f64, n);
+                pairs += 1;
+            }
+        }
+    }
+    pairs
+}
+
 /// Pre-fill `cache` with `planner`'s decisions for the whole Table I
 /// suite at the planner's batch and thread count, one entry per incoming
 /// layout — the "warm-pack": ship pre-tuned plans so a fresh process
@@ -606,12 +732,52 @@ mod tests {
             record("conv9", "direct", "NCHW", 13.5),
             record("conv1", "im2col", "CHWN8", 7.25),
         ];
-        let p = CalibrationProfile::fit(&records, 2).unwrap();
+        let mut p = CalibrationProfile::fit(&records, 2).unwrap();
+        p.set_convert(Layout::Nchw, Layout::Nhwc, 12.5, 3);
+        p.set_convert(Layout::Chwn, Layout::Chwn8, 20.0, 3);
         let text1 = p.to_json_text();
         let back = CalibrationProfile::parse(&text1).unwrap();
         assert_eq!(back, p);
         assert_eq!(back.to_json_text(), text1);
         assert_eq!(back.fingerprint(), p.fingerprint());
+    }
+
+    #[test]
+    fn convert_table_is_per_ordered_pair_and_optional_on_read() {
+        let mut p = CalibrationProfile::new(10.0, 1);
+        assert!(p.convert_bandwidth(Layout::Nchw, Layout::Nhwc).is_none());
+        p.set_convert(Layout::Nchw, Layout::Nhwc, 8.0, 2);
+        // Sampled pair reports bytes/s; the reverse direction is a
+        // distinct cell and stays unsampled.
+        assert_eq!(p.convert_bandwidth(Layout::Nchw, Layout::Nhwc), Some(8.0e9));
+        assert!(p.convert_bandwidth(Layout::Nhwc, Layout::Nchw).is_none());
+        // Zero-sample or zero-bandwidth cells never feed the planner.
+        p.set_convert(Layout::Nhwc, Layout::Chwn, 0.0, 4);
+        assert!(p.convert_bandwidth(Layout::Nhwc, Layout::Chwn).is_none());
+        // Pre-graph-planner profile text (no 'convert' field) still loads.
+        let old = r#"{"version": 1, "peak_gflops": 10, "threads": 1, "series": {}}"#;
+        let back = CalibrationProfile::parse(old).unwrap();
+        assert!(back.convert_bandwidth(Layout::Nchw, Layout::Nhwc).is_none());
+        assert_eq!(back.converts().count(), 0);
+    }
+
+    #[test]
+    fn measure_convert_samples_all_twelve_ordered_pairs() {
+        let mut p = CalibrationProfile::new(10.0, 1);
+        let geoms = [Dims::new(2, 3, 8, 8), Dims::new(8, 4, 4, 4)];
+        let pairs = measure_convert(&mut p, &geoms, 1);
+        assert_eq!(pairs, 12);
+        assert_eq!(p.converts().count(), 12);
+        for from in Layout::ALL {
+            for to in Layout::ALL {
+                if from == to {
+                    assert!(p.convert_bandwidth(from, to).is_none());
+                } else {
+                    let bw = p.convert_bandwidth(from, to).unwrap();
+                    assert!(bw.is_finite() && bw > 0.0, "{from}->{to}: {bw}");
+                }
+            }
+        }
     }
 
     #[test]

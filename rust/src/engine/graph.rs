@@ -1,0 +1,491 @@
+//! Graph-level layout planning: exact global assignment over the chain.
+//!
+//! The per-layer [`super::Planner`] is greedy: it walks the convolution
+//! layers front to back and charges layout-conversion traffic against the
+//! *previous* layer's choice, so a layout that is marginally best for one
+//! layer can force an expensive conversion before the next — or, dually,
+//! a conversion that does not pay for itself within a single layer is
+//! never taken even when two or three consecutive layers would all profit
+//! from it. Following the layout-streaming observation of Georganas et
+//! al. 2018 (*Anatomy of High-Performance Deep Learning Convolutions on
+//! SIMD Architectures*), this module optimizes the whole chain at once:
+//!
+//! * the model becomes a **lattice** of `(layer, layout)` states — one
+//!   column per convolution, one row per [`Layout`];
+//! * each node costs the cheapest algorithm for that layout on that
+//!   geometry ([`Planner::estimate`] with `prev == layout`, i.e. the pure
+//!   compute + transform cost with no conversion term);
+//! * each edge costs the layout conversion of that layer's input
+//!   activation ([`Planner::convert_cost`] — measured per-pair bandwidth
+//!   when the calibration profile sampled it, the analytic
+//!   read+write-over-bandwidth guess otherwise);
+//! * a Viterbi sweep solves the shortest path **exactly**. The lattice is
+//!   tiny (layers × 4 layouts), so planning stays trivially cheap, and by
+//!   construction the DP total never exceeds the greedy chain's total
+//!   under the same cost model — the greedy assignment is one feasible
+//!   path through the lattice.
+//!
+//! The result is a [`GraphPlan`]: per-conv [`LayerPlan`]s plus explicit,
+//! costed [`ConversionPoint`]s and the end-to-end estimate. The engine
+//! executes it as a *mixed-layout* plan — each convolution runs in its
+//! assigned layout, activations are converted only at the planned points
+//! (scratch leased from the workspace), filters are prepacked per
+//! assigned layout, and fused bias/ReLU epilogues are preserved
+//! ([`super::Engine::plan_graph`]).
+//!
+//! Graph plans persist in the [`super::PlanCache`] under a whole-graph
+//! key — the model's structural fingerprint plus batch and thread count —
+//! and invalidate with the calibration-profile fingerprint exactly like
+//! layer entries, so a refit re-plans the graph rather than silently
+//! reusing a stale assignment.
+//!
+//! ```
+//! use im2win::conv::AlgoKind;
+//! use im2win::engine::{PlanCache, Planner};
+//! use im2win::model::zoo;
+//! use im2win::tensor::Layout;
+//!
+//! let model = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+//! let planner = Planner { threads: 4, batch: 8, ..Planner::new() };
+//! let mut cache = PlanCache::in_memory();
+//! let graph = planner.plan_graph(&model, &mut cache).unwrap();
+//! assert_eq!(graph.plans.len(), 3);
+//! // The exact solution never costs more than the greedy chain.
+//! let greedy = planner.plan_model(&model, &mut cache).unwrap();
+//! let greedy_total: f64 = greedy.iter().map(|p| p.est_s).sum();
+//! assert!(graph.total_s <= greedy_total + 1e-12);
+//! ```
+
+use super::cache::PlanCache;
+use super::planner::{LayerPlan, Planner};
+use crate::conv::{AlgoKind, ConvParams};
+use crate::conv::im2win::DEFAULT_W_BLOCK;
+use crate::error::Result;
+use crate::model::{Model, Op};
+use crate::tensor::Layout;
+
+/// An explicit, costed layout conversion inserted by the graph plan:
+/// the input activation of convolution layer `conv_index` is converted
+/// from the layout it was produced in to the layout that layer runs in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConversionPoint {
+    /// Which convolution's input is converted (index over conv layers,
+    /// in execution order; `0` converts the model's entry activation).
+    pub conv_index: usize,
+    /// Layout the activation arrives in.
+    pub from: Layout,
+    /// Layout the convolution runs in.
+    pub to: Layout,
+    /// Estimated conversion cost, seconds ([`Planner::convert_cost`]).
+    pub est_s: f64,
+}
+
+/// A whole-model plan: one [`LayerPlan`] per convolution (each with its
+/// own algorithm and layout), the explicit conversion points between
+/// them, and the end-to-end cost the DP minimized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphPlan {
+    /// Per-convolution decisions, in layer order.
+    pub plans: Vec<LayerPlan>,
+    /// Layout conversions the executor must perform, in layer order.
+    /// Layers absent from this list receive their input in the layout
+    /// they run in.
+    pub conversions: Vec<ConversionPoint>,
+    /// Total estimated cost of the assignment: Σ node costs + Σ
+    /// conversion costs, seconds.
+    pub total_s: f64,
+}
+
+impl GraphPlan {
+    /// Total estimated conversion traffic of the assignment, seconds.
+    pub fn conversion_s(&self) -> f64 {
+        self.conversions.iter().map(|c| c.est_s).sum()
+    }
+
+    /// Number of distinct layouts the assignment uses.
+    pub fn distinct_layouts(&self) -> usize {
+        let mut seen = Vec::new();
+        for p in &self.plans {
+            if !seen.contains(&p.layout) {
+                seen.push(p.layout);
+            }
+        }
+        seen.len()
+    }
+}
+
+/// Cache key for a whole-graph entry: the model's structural
+/// fingerprint, the incoming activation layout, and the planning batch
+/// and thread count — everything the DP's answer depends on besides the
+/// calibration profile (which the cache tracks separately via
+/// [`PlanCache::sync_profile`]). One-shot planners key separately, like
+/// [`Planner::cache_key`].
+pub fn graph_key(model: &Model, batch: usize, threads: usize, prepacked: bool) -> String {
+    let base = format!(
+        "g{}-from_{}-b{}-t{}",
+        model.fingerprint(),
+        model.layout().name(),
+        batch,
+        threads
+    );
+    if prepacked {
+        base
+    } else {
+        format!("{base}-oneshot")
+    }
+}
+
+impl Planner {
+    /// Conversion cost (seconds) of re-laying an activation of shape
+    /// `p.input_dims()` from `from` into `to`: the read+write traffic of
+    /// the destination tensor over the conversion bandwidth. The
+    /// bandwidth is the **measured** per-pair figure when the calibration
+    /// profile sampled this ordered pair
+    /// ([`super::CalibrationProfile::convert_bandwidth`] — the layout-
+    /// conversion microbench feeds it), and the spec's analytic memory
+    /// bandwidth otherwise. Same-layout is free. Both the greedy
+    /// [`Planner::estimate`] conversion term and the graph DP's edge
+    /// costs go through here, so the two planners always price
+    /// conversions identically.
+    pub fn convert_cost(&self, from: Layout, to: Layout, p: &ConvParams) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let bytes = to.storage_len(p.input_dims()) as f64 * 4.0;
+        let bw = self
+            .profile
+            .as_ref()
+            .and_then(|prof| prof.convert_bandwidth(from, to))
+            .unwrap_or(self.spec.mem_bw_bytes);
+        2.0 * bytes / bw
+    }
+
+    /// Cheapest algorithm for `p` pinned to `layout` (the DP's node
+    /// cost: no conversion term — edges carry that).
+    fn node_plan(&self, p: &ConvParams, layout: Layout) -> LayerPlan {
+        let mut best: Option<LayerPlan> = None;
+        for (algo, l) in self.candidates() {
+            if l != layout {
+                continue;
+            }
+            let est_s = self.estimate(algo, layout, p, layout);
+            let w_block = match algo {
+                AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
+                _ => 0,
+            };
+            let plan = LayerPlan { algo, layout, w_block, est_s, tuned: false };
+            if best.map_or(true, |b| est_s < b.est_s) {
+                best = Some(plan);
+            }
+        }
+        best.expect("every layout has at least one supporting algorithm")
+    }
+
+    /// Solve global layout assignment for `model` exactly, consulting
+    /// (and filling) `cache` under a whole-graph key.
+    ///
+    /// The DP runs a Viterbi sweep over the `(conv layer × layout)`
+    /// lattice: source state is the model's activation layout at zero
+    /// cost, node costs come from [`Planner::estimate`] with `prev ==
+    /// layout`, edge costs from [`Planner::convert_cost`], and no
+    /// terminal conversion is charged (matching the greedy chain, which
+    /// also leaves the last activation wherever its layer produced it).
+    /// Cached graphs are reused verbatim, except that a refining planner
+    /// (`self.refine`) re-plans — and upgrades — entries whose tunable
+    /// layers are analytic-only, mirroring [`Planner::plan_model`].
+    pub fn plan_graph(&self, model: &Model, cache: &mut PlanCache) -> Result<GraphPlan> {
+        cache.sync_profile(&self.profile_fingerprint());
+        let key = graph_key(model, self.batch, self.threads, self.prepacked);
+        if let Some(hit) = cache.get_graph(&key) {
+            let needs_upgrade = self.refine
+                && hit.plans.iter().any(|p| {
+                    !p.tuned && matches!(p.algo, AlgoKind::Direct | AlgoKind::Im2win)
+                });
+            if !needs_upgrade {
+                return Ok(hit);
+            }
+        }
+        let mut graph = self.solve_graph(model);
+        if self.refine {
+            let mut convs = model.ops().iter().filter_map(|op| match op {
+                Op::Conv(c) => Some(c.params.with_batch(self.batch)),
+                _ => None,
+            });
+            for plan in &mut graph.plans {
+                let p = convs.next().expect("one geometry per planned layer");
+                self.refine_plan(&p, plan)?;
+            }
+        }
+        cache.insert_graph(key, graph.clone());
+        Ok(graph)
+    }
+
+    /// The Viterbi sweep itself (no cache, no refinement).
+    fn solve_graph(&self, model: &Model) -> GraphPlan {
+        let convs: Vec<ConvParams> = model
+            .ops()
+            .iter()
+            .filter_map(|op| match op {
+                Op::Conv(c) => Some(c.params.with_batch(self.batch)),
+                _ => None,
+            })
+            .collect();
+        if convs.is_empty() {
+            return GraphPlan { plans: Vec::new(), conversions: Vec::new(), total_s: 0.0 };
+        }
+
+        let states = Layout::ALL;
+        // cost[s] = cheapest cost of any path ending with the *previous*
+        // activation in layout `states[s]`; source = the model layout.
+        let mut cost = [f64::INFINITY; 4];
+        let source = states
+            .iter()
+            .position(|&l| l == model.layout())
+            .expect("model layout is one of Layout::ALL");
+        cost[source] = 0.0;
+        // back[i][s]: index of the predecessor state that minimized the
+        // path into (layer i, layout s); node[i][s]: that state's plan.
+        let mut back: Vec<[usize; 4]> = Vec::with_capacity(convs.len());
+        let mut node: Vec<[LayerPlan; 4]> = Vec::with_capacity(convs.len());
+        for p in &convs {
+            let plans = [
+                self.node_plan(p, states[0]),
+                self.node_plan(p, states[1]),
+                self.node_plan(p, states[2]),
+                self.node_plan(p, states[3]),
+            ];
+            let mut next = [f64::INFINITY; 4];
+            let mut bp = [0usize; 4];
+            for (s, &layout) in states.iter().enumerate() {
+                for (f, &from) in states.iter().enumerate() {
+                    if !cost[f].is_finite() {
+                        continue;
+                    }
+                    let through = cost[f] + self.convert_cost(from, layout, p);
+                    if through < next[s] {
+                        next[s] = through;
+                        bp[s] = f;
+                    }
+                }
+                next[s] += plans[s].est_s;
+            }
+            back.push(bp);
+            node.push(plans);
+            cost = next;
+        }
+
+        // Cheapest terminal state, then backtrack the layout sequence.
+        let mut end = 0usize;
+        for s in 1..4 {
+            if cost[s] < cost[end] {
+                end = s;
+            }
+        }
+        let total_s = cost[end];
+        let mut seq = vec![end; convs.len()];
+        for i in (1..convs.len()).rev() {
+            seq[i - 1] = back[i][seq[i]];
+        }
+
+        let mut plans = Vec::with_capacity(convs.len());
+        let mut conversions = Vec::new();
+        let mut prev = model.layout();
+        for (i, p) in convs.iter().enumerate() {
+            let plan = node[i][seq[i]];
+            if plan.layout != prev {
+                conversions.push(ConversionPoint {
+                    conv_index: i,
+                    from: prev,
+                    to: plan.layout,
+                    est_s: self.convert_cost(prev, plan.layout, p),
+                });
+            }
+            prev = plan.layout;
+            plans.push(plan);
+        }
+        GraphPlan { plans, conversions, total_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn pinned() -> Planner {
+        // The mixnet trap is regime-sensitive: pin the parallelism and
+        // batch the geometry was designed for.
+        Planner { threads: 4, batch: 8, ..Planner::new() }
+    }
+
+    fn greedy_total(planner: &Planner, model: &Model) -> f64 {
+        let mut cache = PlanCache::in_memory();
+        planner.plan_model(model, &mut cache).unwrap().iter().map(|p| p.est_s).sum()
+    }
+
+    #[test]
+    fn dp_never_exceeds_greedy_on_any_zoo_model() {
+        let planner = pinned();
+        for layout in Layout::ALL {
+            let models = [
+                zoo::tinynet(layout, AlgoKind::Naive, 1).unwrap(),
+                zoo::tinynet_biased(layout, AlgoKind::Naive, 1).unwrap(),
+                zoo::vgg_stack(layout, AlgoKind::Naive, 64, 1).unwrap(),
+                zoo::mixnet(layout, AlgoKind::Naive, 1).unwrap(),
+            ];
+            for model in models {
+                let mut cache = PlanCache::in_memory();
+                let graph = planner.plan_graph(&model, &mut cache).unwrap();
+                let greedy = greedy_total(&planner, &model);
+                assert!(
+                    graph.total_s <= greedy + 1e-12,
+                    "{} from {layout}: dp {} > greedy {greedy}",
+                    model.name,
+                    graph.total_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dp_strictly_beats_greedy_on_mixnet() {
+        let planner = pinned();
+        let model = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let graph = planner.plan_graph(&model, &mut cache).unwrap();
+        let greedy = greedy_total(&planner, &model);
+        assert!(
+            graph.total_s < greedy * (1.0 - 1e-6),
+            "mixnet is the DP's showcase: dp {} !< greedy {greedy}",
+            graph.total_s
+        );
+        // ...and the winning assignment is genuinely mixed: the stem
+        // amortizes one conversion over two narrow-channel layers, the
+        // wide tail switches to NHWC.
+        assert!(graph.distinct_layouts() > 1, "optimal assignment should mix layouts");
+        assert!(!graph.conversions.is_empty());
+        // Conversion points are consistent with the assignment.
+        let mut prev = model.layout();
+        let mut cv = graph.conversions.iter();
+        for (i, plan) in graph.plans.iter().enumerate() {
+            if plan.layout != prev {
+                let c = cv.next().expect("missing conversion point");
+                assert_eq!((c.conv_index, c.from, c.to), (i, prev, plan.layout));
+                assert!(c.est_s > 0.0);
+            }
+            prev = plan.layout;
+        }
+        assert!(cv.next().is_none(), "spurious conversion point");
+    }
+
+    #[test]
+    fn total_decomposes_into_nodes_plus_conversions() {
+        let planner = pinned();
+        let model = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 2).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let graph = planner.plan_graph(&model, &mut cache).unwrap();
+        let nodes: f64 = graph.plans.iter().map(|p| p.est_s).sum();
+        let total = nodes + graph.conversion_s();
+        assert!(
+            (graph.total_s - total).abs() <= 1e-12 * graph.total_s.max(1.0),
+            "total {} != nodes+conversions {total}",
+            graph.total_s
+        );
+    }
+
+    #[test]
+    fn uniform_input_layout_needs_no_entry_conversion() {
+        // When the model layout already matches the DP's choice for the
+        // first layer, no conversion is charged at entry.
+        let planner = pinned();
+        let model = zoo::mixnet(Layout::Chwn8, AlgoKind::Naive, 1).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let graph = planner.plan_graph(&model, &mut cache).unwrap();
+        assert_eq!(graph.plans[0].layout, Layout::Chwn8);
+        assert!(graph.conversions.iter().all(|c| c.conv_index != 0));
+    }
+
+    #[test]
+    fn graph_plans_hit_the_cache() {
+        let planner = pinned();
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 3).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let first = planner.plan_graph(&model, &mut cache).unwrap();
+        assert_eq!(cache.graph_len(), 1);
+        let misses = cache.misses();
+        let again = planner.plan_graph(&model, &mut cache).unwrap();
+        assert_eq!(first, again);
+        assert_eq!(cache.misses(), misses, "second plan must be a pure hit");
+        assert!(cache.hits() > 0);
+    }
+
+    #[test]
+    fn graph_key_separates_models_batches_threads_and_execution() {
+        let a = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+        let b = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+        let c = zoo::tinynet(Layout::Nhwc, AlgoKind::Naive, 1).unwrap();
+        let base = graph_key(&a, 8, 4, true);
+        assert_ne!(base, graph_key(&b, 8, 4, true));
+        assert_ne!(base, graph_key(&c, 8, 4, true));
+        assert_ne!(base, graph_key(&a, 16, 4, true));
+        assert_ne!(base, graph_key(&a, 8, 2, true));
+        assert_ne!(base, graph_key(&a, 8, 4, false));
+        assert!(graph_key(&a, 8, 4, false).ends_with("-oneshot"));
+    }
+
+    #[test]
+    fn convert_cost_is_zero_on_identity_and_positive_otherwise() {
+        let planner = Planner::new();
+        let p = ConvParams::new(8, 16, 20, 20, 16, 3, 3, 1).unwrap();
+        for from in Layout::ALL {
+            for to in Layout::ALL {
+                let c = planner.convert_cost(from, to, &p);
+                if from == to {
+                    assert_eq!(c, 0.0);
+                } else {
+                    assert!(c > 0.0, "{from}->{to}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn convert_cost_uses_measured_bandwidth_where_sampled() {
+        use super::super::calibrate::CalibrationProfile;
+        let p = ConvParams::new(8, 16, 20, 20, 16, 3, 3, 1).unwrap();
+        let analytic = Planner::new();
+        let a = analytic.convert_cost(Layout::Nchw, Layout::Nhwc, &p);
+        // A profile that sampled NCHW->NHWC at twice the analytic
+        // bandwidth halves that pair's cost — and only that pair's.
+        let mut profile = CalibrationProfile::new(50.0, analytic.threads);
+        profile.set_convert(Layout::Nchw, Layout::Nhwc, 2.0 * analytic.spec.mem_bw_bytes / 1e9, 3);
+        let calibrated = Planner { profile: Some(profile), ..Planner::new() };
+        let c = calibrated.convert_cost(Layout::Nchw, Layout::Nhwc, &p);
+        assert!((c - a / 2.0).abs() <= 1e-12 * a, "measured bw ignored: {c} vs {a}");
+        // The unsampled reverse direction stays analytic.
+        assert_eq!(
+            calibrated.convert_cost(Layout::Nhwc, Layout::Nchw, &p),
+            analytic.convert_cost(Layout::Nhwc, Layout::Nchw, &p),
+        );
+    }
+
+    #[test]
+    fn greedy_estimate_and_dp_edges_price_conversions_identically() {
+        // Planner::estimate's conversion term must be exactly
+        // convert_cost, or "DP <= greedy" would compare different
+        // objectives.
+        let planner = Planner::new();
+        let p = ConvParams::new(8, 16, 20, 20, 16, 3, 3, 1).unwrap();
+        for (algo, layout) in planner.candidates() {
+            for prev in Layout::ALL {
+                let with = planner.estimate(algo, layout, &p, prev);
+                let without = planner.estimate(algo, layout, &p, layout);
+                let edge = planner.convert_cost(prev, layout, &p);
+                assert!(
+                    (with - without - edge).abs() <= 1e-15 * with.max(1.0),
+                    "{algo} {layout} from {prev}: {with} != {without} + {edge}"
+                );
+            }
+        }
+    }
+}

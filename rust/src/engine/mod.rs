@@ -12,10 +12,17 @@
 //!   (geometry, layout, threads), so tuned plans survive restarts, and
 //!   tracks the calibration-profile fingerprint its entries were decided
 //!   under (a refit invalidates stale plans);
-//! * [`calibrate`] — fits the planner's efficiency table and empirical
-//!   peak from recorded `coordinator` benchmarks (CSV/JSON), persists
-//!   the fit as a canonical-JSON [`CalibrationProfile`], and pre-fills
-//!   plan caches for the Table I suite ([`warm_pack`]);
+//! * [`calibrate`] — fits the planner's efficiency table, empirical
+//!   peak and per-pair layout-conversion bandwidths from recorded
+//!   `coordinator` benchmarks (CSV/JSON), persists the fit as a
+//!   canonical-JSON [`CalibrationProfile`], and pre-fills plan caches
+//!   for the Table I suite ([`warm_pack`]);
+//! * [`graph`] — whole-model layout assignment: an exact dynamic program
+//!   over the (convolution × layout) lattice, node costs from the
+//!   (optionally calibrated) planner estimate and edge costs from
+//!   measured conversion bandwidth, yielding a [`GraphPlan`] with
+//!   per-layer layouts and explicit costed conversion points, cached
+//!   whole-graph by model fingerprint;
 //! * [`workspace`] — a keyed lease arena that lets every transform
 //!   buffer, packed filter and activation tensor be allocated once per
 //!   plan and reused across requests;
@@ -59,6 +66,7 @@
 pub mod async_front;
 pub mod cache;
 pub mod calibrate;
+pub mod graph;
 pub mod planner;
 pub mod server;
 pub mod sharded;
@@ -69,6 +77,7 @@ pub use async_front::{
 };
 pub use cache::{layer_key, PlanCache};
 pub use calibrate::{warm_pack, CalibrationProfile, PlanShift, ShapeClass};
+pub use graph::{graph_key, ConversionPoint, GraphPlan};
 pub use planner::{LayerPlan, Planner};
 pub use server::{Inference, Server, ServerReport, ShardConfig};
 pub use sharded::{ShardedReport, ShardedServer};
@@ -78,12 +87,22 @@ use crate::conv::{Epilogue, PackedFilter};
 use crate::error::{Error, Result};
 use crate::model::{Model, Op};
 use crate::model::{global_avg_pool_into, linear_into, max_pool2d_into, relu_inplace};
-use crate::tensor::{transform_into, Dims, Tensor4};
+use crate::tensor::{transform_into, Dims, Layout, Tensor4};
 
 /// A planned model plus the reusable workspace that serves it.
 pub struct Engine {
     model: Model,
     plans: Vec<LayerPlan>,
+    /// The whole-graph plan this engine executes, when it was built by
+    /// [`Engine::plan_graph`] (`None` for greedy per-layer planning).
+    graph: Option<GraphPlan>,
+    /// Layout the entry activation is leased in: the first convolution's
+    /// planned layout, so a plan that reassigns the stem (mixed-layout
+    /// graph plans, but also a greedy plan that disagrees with the model
+    /// layout) pays its entry conversion once in the input copy instead
+    /// of copying *and* converting. Every op between the entry and the
+    /// first conv is layout-generic, so this is always safe.
+    entry_layout: Layout,
     /// One pre-packed filter per convolution layer, in layer order —
     /// built at plan time, so request-path forwards never re-pack.
     packed: Vec<PackedFilter>,
@@ -100,6 +119,35 @@ impl Engine {
     pub fn plan(model: Model, planner: &Planner, cache: &mut PlanCache) -> Result<Engine> {
         let plans = planner.plan_model(&model, cache)?;
         Self::build(model, plans)
+    }
+
+    /// Plan `model` with the exact graph-level layout DP
+    /// ([`Planner::plan_graph`]) instead of the greedy per-layer chain:
+    /// each convolution gets its globally-optimal algorithm and layout,
+    /// and the engine executes the resulting mixed-layout plan — filters
+    /// prepacked per assigned layout, conversions leased from the
+    /// workspace, fused epilogues preserved.
+    ///
+    /// ```
+    /// use im2win::conv::AlgoKind;
+    /// use im2win::engine::{Engine, PlanCache, Planner};
+    /// use im2win::model::zoo;
+    /// use im2win::prelude::*;
+    /// use im2win::tensor::Dims;
+    ///
+    /// let model = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 7).unwrap();
+    /// let planner = Planner { threads: 4, batch: 8, ..Planner::new() };
+    /// let mut cache = PlanCache::in_memory();
+    /// let mut engine = Engine::plan_graph(model, &planner, &mut cache).unwrap();
+    /// assert!(engine.graph_plan().is_some());
+    /// let x = Tensor4::random(Dims::new(2, 3, 40, 40), Layout::Nchw, 1);
+    /// assert_eq!(engine.forward(&x).unwrap().dims(), Dims::new(2, 10, 1, 1));
+    /// ```
+    pub fn plan_graph(model: Model, planner: &Planner, cache: &mut PlanCache) -> Result<Engine> {
+        let graph = planner.plan_graph(&model, cache)?;
+        let mut engine = Self::build(model, graph.plans.clone())?;
+        engine.graph = Some(graph);
+        Ok(engine)
     }
 
     /// Wrap `model` with explicit per-conv plans (tests, replaying a
@@ -122,7 +170,16 @@ impl Engine {
             }
         }
         let fused_relu = fused_relu_map(model.ops());
-        Ok(Engine { model, plans, packed, fused_relu, ws: Workspace::new() })
+        let entry_layout = plans.first().map_or(model.layout(), |p| p.layout);
+        Ok(Engine {
+            model,
+            plans,
+            graph: None,
+            entry_layout,
+            packed,
+            fused_relu,
+            ws: Workspace::new(),
+        })
     }
 
     /// The planned model (its own `Model::forward` also follows the plan).
@@ -133,6 +190,12 @@ impl Engine {
     /// The applied per-convolution plans, in layer order.
     pub fn plans(&self) -> &[LayerPlan] {
         &self.plans
+    }
+
+    /// The whole-graph plan, when this engine was built by
+    /// [`Engine::plan_graph`].
+    pub fn graph_plan(&self) -> Option<&GraphPlan> {
+        self.graph.as_ref()
     }
 
     /// Scratch-arena statistics (hits/misses/parked bytes).
@@ -214,9 +277,11 @@ impl Engine {
         let ws = &mut self.ws;
 
         // Working activation: a leased copy so in-place ops never touch
-        // the caller's input.
+        // the caller's input. Leased in the first convolution's planned
+        // layout (see `entry_layout`), so the unavoidable input copy
+        // doubles as the entry conversion.
         let mut tag = format!("act:in:{n}");
-        let mut x = ws.take_tensor(&tag, d, self.model.layout());
+        let mut x = ws.take_tensor(&tag, d, self.entry_layout);
         transform_into(input, &mut x);
 
         let mut conv_idx = 0usize;
@@ -398,6 +463,33 @@ mod tests {
         assert!(matches!(engine.model().ops()[2], Op::Relu));
         let y = engine.forward(&Tensor4::random(p.input_dims(), Layout::Nchw, 3)).unwrap();
         assert!(expect.allclose(&y, 1e-3, 1e-4), "diff {}", expect.max_abs_diff(&y));
+    }
+
+    #[test]
+    fn graph_planned_engine_matches_model_forward() {
+        let x = Tensor4::random(Dims::new(2, 3, 40, 40), Layout::Nchw, 17);
+        let expect = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 5).unwrap().forward(&x).unwrap();
+        let model = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 5).unwrap();
+        // The thread/batch point where mixnet's optimal assignment is
+        // provably mixed (see zoo::mixnet docs).
+        let planner = Planner { threads: 4, batch: 8, ..Planner::new() };
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan_graph(model, &planner, &mut cache).unwrap();
+        let graph = engine.graph_plan().expect("graph-built engine records its plan").clone();
+        assert_eq!(graph.plans.len(), 3);
+        assert!(graph.distinct_layouts() > 1, "mixnet graph plan should be mixed");
+        let y = engine.forward(&x).unwrap();
+        assert!(
+            expect.allclose(&y, 1e-3, 1e-4),
+            "graph-planned engine diverges: {}",
+            expect.max_abs_diff(&y)
+        );
+        // Steady state on the mixed-layout path: scratch reused,
+        // results bit-identical.
+        let misses = engine.workspace().misses();
+        let again = engine.forward(&x).unwrap();
+        assert_eq!(y.data(), again.data());
+        assert_eq!(engine.workspace().misses(), misses);
     }
 
     #[test]

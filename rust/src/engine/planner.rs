@@ -263,8 +263,12 @@ impl Planner {
             (2.0 * scratch_elems as f64 * F32 + input_bytes) / bw
         };
 
-        // Layout conversion of the incoming activations (read + write).
-        let convert_s = if layout == prev { 0.0 } else { 2.0 * input_bytes / bw };
+        // Layout conversion of the incoming activations (read + write;
+        // measured per-pair bandwidth where the profile sampled it). The
+        // same method prices the graph DP's lattice edges
+        // ([`super::graph`]), so greedy and graph plans always rank
+        // conversions identically.
+        let convert_s = self.convert_cost(prev, layout, p);
 
         // Per-call filter re-pack traffic (write + re-read of the packed
         // copy): im2win always packs, im2col packs on every layout except

@@ -11,10 +11,11 @@
 //! im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win]
 //! im2win calibrate [--from report.csv|--run] [--out profile.json] [--warm-pack]
 //!                  [--assert-shift]         # fit the planner from measurements
-//! im2win plan  [--model tinynet|vgg] [--batch N] [--cache plans.json] [--refine]
-//!              [--profile profile.json]
-//! im2win serve [--model tinynet|vgg] [--requests N] [--shards N] [--deadline-us D]
-//!              [--max-batch B] [--pin] [--cache plans.json] [--profile profile.json]
+//! im2win plan  [--model tinynet|vgg|mixnet] [--batch N] [--cache plans.json]
+//!              [--refine] [--graph] [--profile profile.json]
+//! im2win serve [--model tinynet|vgg|mixnet] [--requests N] [--shards N]
+//!              [--deadline-us D] [--max-batch B] [--pin] [--graph]
+//!              [--cache plans.json] [--profile profile.json]
 //!              [--async] [--queue-depth N] [--shed reject|oldest]
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
@@ -60,8 +61,8 @@ struct Flags {
     pairs: Vec<(String, String)>,
 }
 
-const BOOL_FLAGS: [&str; 8] =
-    ["paper", "refine", "detect", "pin", "run", "warm-pack", "assert-shift", "async"];
+const BOOL_FLAGS: [&str; 9] =
+    ["paper", "refine", "detect", "pin", "run", "warm-pack", "assert-shift", "async", "graph"];
 
 impl Flags {
     fn parse(args: &[String]) -> CliResult<Flags> {
@@ -197,11 +198,11 @@ USAGE:
                   [--out profile.json] [--scale S] [--layers conv5,conv9]
                   [--batch N] [--threads T] [--warm-pack] [--cache plans.json]
                   [--assert-shift]
-  im2win plan     [--model tinynet|vgg] [--edge N] [--batch N] [--threads T]
-                  [--cache plans.json] [--refine] [--detect]
+  im2win plan     [--model tinynet|vgg|mixnet] [--edge N] [--batch N] [--threads T]
+                  [--cache plans.json] [--refine] [--detect] [--graph]
                   [--profile profile.json]
-  im2win serve    [--model tinynet|vgg] [--edge N] [--requests N] [--shards N]
-                  [--deadline-us D] [--max-batch B] [--pin] [--batch N]
+  im2win serve    [--model tinynet|vgg|mixnet] [--edge N] [--requests N] [--shards N]
+                  [--deadline-us D] [--max-batch B] [--pin] [--batch N] [--graph]
                   [--threads T] [--cache plans.json] [--profile profile.json]
                   [--async] [--queue-depth N] [--shed reject|oldest]
   im2win roofline [--paper]
@@ -402,6 +403,10 @@ fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
 
     // 1. Obtain records (and a profile: loaded, or fitted from records).
     let mut records: Vec<Record> = Vec::new();
+    // Input geometries of a local sweep: `--run` also times every ordered
+    // layout-conversion pair on them (the bandwidths are host-local, so
+    // records loaded with `--from` get none).
+    let mut convert_geoms: Vec<Dims> = Vec::new();
     let profile = if let Some(path) = flags.get("profile") {
         let profile = CalibrationProfile::load(path)
             .map_err(|e| err(format!("loading calibration profile {path}: {e}")))?;
@@ -441,8 +446,21 @@ fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
             );
             records = experiments::fig4(&cfg)?;
             println!("measured {} cells", records.len());
+            convert_geoms = cfg
+                .layers
+                .iter()
+                .filter_map(|n| layers::by_name(n))
+                .map(|l| l.scaled_params(scale.batch(), scale.spatial_div()).input_dims())
+                .collect();
         }
-        let profile = CalibrationProfile::fit(&records, threads)?;
+        let mut profile = CalibrationProfile::fit(&records, threads)?;
+        if !convert_geoms.is_empty() {
+            let pairs = calibrate::measure_convert(&mut profile, &convert_geoms, 3);
+            println!(
+                "measured {pairs} layout-conversion pairs over {} geometries",
+                convert_geoms.len()
+            );
+        }
         let out = flags.get("out").unwrap_or("calibration.json");
         profile.save(out)?;
         println!(
@@ -469,6 +487,12 @@ fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
             fit.overall.samples,
             buckets.join(" ")
         );
+    }
+    if profile.converts().count() > 0 {
+        println!("\n{:<16} {:>10} {:>8}", "conversion", "GB/s", "samples");
+        for (pair, stat) in profile.converts() {
+            println!("{pair:<16} {:>10.2} {:>8}", stat.gbps, stat.samples);
+        }
     }
 
     // 3. Show (and optionally assert) the fit's effect on planning.
@@ -528,7 +552,8 @@ fn build_model(flags: &Flags) -> CliResult<im2win::model::Model> {
     let model = match name {
         "tinynet" => zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 42)?,
         "vgg" | "vgg_stack" => zoo::vgg_stack(Layout::Nchw, AlgoKind::Naive, edge, 42)?,
-        other => return Err(err(format!("unknown model '{other}' (tinynet|vgg)"))),
+        "mixnet" => zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 42)?,
+        other => return Err(err(format!("unknown model '{other}' (tinynet|vgg|mixnet)"))),
     };
     Ok(model)
 }
@@ -573,21 +598,40 @@ fn planner_from_flags(flags: &Flags) -> CliResult<(Planner, PlanCache)> {
 fn plan(flags: &Flags) -> CliResult<()> {
     let model = build_model(flags)?;
     let (planner, mut cache) = planner_from_flags(flags)?;
+    let graph_mode = flags.get("graph").is_some();
     println!(
-        "Planning {} ({} conv layers) at batch {}, {} threads{}{}",
+        "Planning {} ({} conv layers) at batch {}, {} threads{}{}{}",
         model.name,
         model.conv_params().len(),
         planner.batch,
         planner.threads,
+        if graph_mode { ", exact graph DP" } else { "" },
         if planner.refine { ", empirical W_o,b refinement" } else { "" },
         if cache.path().is_some() { ", persistent cache" } else { "" },
     );
-    let plans = planner.plan_model(&model, &mut cache)?;
+    let (plans, graph) = if graph_mode {
+        let graph = planner.plan_graph(&model, &mut cache)?;
+        (graph.plans.clone(), Some(graph))
+    } else {
+        (planner.plan_model(&model, &mut cache)?, None)
+    };
     println!(
         "\n{:<4} {:<26} {:<8} {:<7} {:>6} {:>10} {:>6}",
         "#", "geometry", "algo", "layout", "W_o,b", "est", "tuned"
     );
+    let mut conversions = graph.as_ref().map(|g| g.conversions.iter().peekable());
     for (i, (p, plan)) in model.conv_params().iter().zip(&plans).enumerate() {
+        if let Some(cv) = conversions.as_mut() {
+            if cv.peek().is_some_and(|c| c.conv_index == i) {
+                let c = cv.next().unwrap();
+                println!(
+                    "     convert {} -> {} ({})",
+                    c.from,
+                    c.to,
+                    fmt_time(c.est_s)
+                );
+            }
+        }
         let q = p.with_batch(planner.batch);
         println!(
             "{:<4} {:<26} {:<8} {:<7} {:>6} {:>10} {:>6}",
@@ -598,6 +642,18 @@ fn plan(flags: &Flags) -> CliResult<()> {
             plan.w_block,
             fmt_time(plan.est_s),
             if plan.tuned { "yes" } else { "no" },
+        );
+    }
+    if let Some(g) = &graph {
+        let nodes: f64 = g.plans.iter().map(|p| p.est_s).sum();
+        println!(
+            "\ngraph total: {} = {} node cost + {} conversion cost, \
+             {} distinct layouts, {} conversion(s)",
+            fmt_time(g.total_s),
+            fmt_time(nodes),
+            fmt_time(g.conversion_s()),
+            g.distinct_layouts(),
+            g.conversions.len(),
         );
     }
     println!("\ncache: {} hits, {} misses, {} entries", cache.hits(), cache.misses(), cache.len());
@@ -618,11 +674,16 @@ fn serve(flags: &Flags) -> CliResult<()> {
 
     // Plan every shard with the per-shard thread count so plan-cache keys
     // reflect the actual parallelism each engine will run with.
+    let graph_mode = flags.get("graph").is_some();
     let shard_planner = planner.for_shards(shards);
     let mut engines = Vec::with_capacity(shards);
     for _ in 0..shards {
         let model = build_model(flags)?;
-        engines.push(Engine::plan(model, &shard_planner, &mut cache)?);
+        engines.push(if graph_mode {
+            Engine::plan_graph(model, &shard_planner, &mut cache)?
+        } else {
+            Engine::plan(model, &shard_planner, &mut cache)?
+        });
     }
     if cache.path().is_some() {
         cache.save()?;
@@ -639,6 +700,16 @@ fn serve(flags: &Flags) -> CliResult<()> {
     );
     for (i, plan) in engines[0].plans().iter().enumerate() {
         println!("  layer {i}: {} {} W_o,b={}", plan.algo.name(), plan.layout, plan.w_block);
+    }
+    if let Some(g) = engines[0].graph_plan() {
+        println!(
+            "  graph plan: {} distinct layouts, {} conversion(s) costing {}, \
+             total estimate {}",
+            g.distinct_layouts(),
+            g.conversions.len(),
+            fmt_time(g.conversion_s()),
+            fmt_time(g.total_s),
+        );
     }
 
     let cfg = ShardConfig {

@@ -232,12 +232,17 @@ impl Model {
     }
 
     /// Run the forward pass. The input may be in any layout; activations
-    /// flow in the model layout and the result is returned in it.
+    /// flow in the model layout and the result is returned in it. An
+    /// input already in the model layout is *borrowed*, not deep-copied
+    /// — the first layer reads the caller's tensor directly (ops never
+    /// mutate their input; the in-place ReLU materializes its own copy
+    /// first).
     pub fn forward(&self, input: &Tensor4) -> Result<Tensor4> {
-        let mut x = if input.layout() == self.layout {
-            input.clone()
+        use std::borrow::Cow;
+        let mut x: Cow<'_, Tensor4> = if input.layout() == self.layout {
+            Cow::Borrowed(input)
         } else {
-            input.to_layout(self.layout)
+            Cow::Owned(input.to_layout(self.layout))
         };
         let expect = Dims::new(input.dims().n, self.input_dims.c, self.input_dims.h, self.input_dims.w);
         if x.dims() != expect {
@@ -248,19 +253,63 @@ impl Model {
             )));
         }
         for op in &self.ops {
-            x = match op {
+            x = Cow::Owned(match op {
                 Op::Conv(conv) => conv.forward(&x)?,
                 Op::Relu => {
-                    let mut y = x;
+                    let mut y = x.into_owned();
                     relu_inplace(&mut y);
                     y
                 }
                 Op::MaxPool { k, s } => max_pool2d(&x, *k, *s)?,
                 Op::GlobalAvgPool => global_avg_pool(&x),
                 Op::Linear { weight, out_features } => linear(&x, weight, *out_features)?,
-            };
+            });
         }
-        Ok(x)
+        Ok(x.into_owned())
+    }
+
+    /// Stable structural fingerprint (FNV-1a 64, hex): the model's name,
+    /// activation layout, input shape, and the per-layer structure —
+    /// convolution geometries (with bias presence), pooling windows and
+    /// linear widths. Weight *values* are deliberately excluded: planning
+    /// depends only on structure, and the fingerprint keys whole-graph
+    /// plan-cache entries ([`crate::engine::graph::graph_key`]).
+    pub fn fingerprint(&self) -> String {
+        let mut text = format!(
+            "{}|{}|{}x{}x{}",
+            self.name, self.layout, self.input_dims.c, self.input_dims.h, self.input_dims.w
+        );
+        for op in &self.ops {
+            match op {
+                Op::Conv(conv) => {
+                    let p = &conv.params;
+                    text.push_str(&format!(
+                        "|conv:{}x{}x{}->{}f{}x{}s{}x{}b{}",
+                        p.c_in,
+                        p.h_in,
+                        p.w_in,
+                        p.c_out,
+                        p.h_f,
+                        p.w_f,
+                        p.stride_h,
+                        p.stride_w,
+                        u8::from(conv.bias().is_some())
+                    ));
+                }
+                Op::Relu => text.push_str("|relu"),
+                Op::MaxPool { k, s } => text.push_str(&format!("|pool:{k}s{s}")),
+                Op::GlobalAvgPool => text.push_str("|gap"),
+                Op::Linear { weight, out_features } => {
+                    text.push_str(&format!("|linear:{}x{}", weight.len(), out_features));
+                }
+            }
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
     }
 
     /// Total FLOPs of one forward pass at batch `n` (conv + linear only;

@@ -7,6 +7,9 @@
 //! * [`vgg_stack`] — a VGG-style chain built from the paper's conv7–conv12
 //!   geometry family (3×3, stride 1, doubling channels with 2×2 pools),
 //!   used by the `cnn_inference` example to exercise realistic depth.
+//! * [`mixnet`] — a layout-diverse stack (narrow-channel stem, wide-
+//!   channel tail) whose optimal layout assignment is mixed: the showcase
+//!   for graph-level planning ([`crate::engine::graph`]).
 
 use super::Model;
 use crate::conv::{AlgoKind, ConvParams};
@@ -98,6 +101,44 @@ pub fn vgg_stack(layout: Layout, algo: AlgoKind, edge: usize, seed: u64) -> Resu
         .linear(head, 10)
 }
 
+/// Layout-diverse stack built to make graph-level planning non-trivial:
+/// a wide-spatial, narrow-channel stem (3→6 channels at 5×5, then 6→64
+/// at 3×3 — both starve the NHWC vector dimension, favoring CHWN8's
+/// batch-major lanes) feeding a wide-channel tail (64→128 at 3×3, where
+/// NHWC saturates its lanes and wins).
+///
+/// ```text
+/// 3×40×40 → conv5×5(6)   → ReLU
+///         → conv3×3(64)  → ReLU → pool2
+///         → conv3×3(128) → ReLU → GAP → linear(10)
+/// ```
+///
+/// The greedy per-layer planner is trapped here (at the planner's
+/// default batch 8 and 4 threads): converting the stem to CHWN8 does not
+/// pay for itself within conv1 alone — its 6 output channels are too few
+/// — so the greedy chain leaves conv1 in the model layout and converts
+/// twice later. The exact graph DP sees that one conversion amortizes
+/// over *both* stem layers and assigns `CHWN8, CHWN8, NHWC`: a provably
+/// mixed optimum that strictly beats the greedy chain
+/// ([`crate::engine::graph`]).
+pub fn mixnet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
+    let p1 = ConvParams::new(1, 3, 40, 40, 6, 5, 5, 1)?;
+    let p2 = ConvParams::new(1, 6, 36, 36, 64, 3, 3, 1)?;
+    let p3 = ConvParams::new(1, 64, 17, 17, 128, 3, 3, 1)?;
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let head: Vec<f32> = (0..128 * 10).map(|_| rng.f32() * 0.05).collect();
+    Model::new("mixnet", layout, 3, 40, 40)
+        .conv(p1, algo, &filter(&p1, seed + 21))?
+        .relu()
+        .conv(p2, algo, &filter(&p2, seed + 22))?
+        .relu()
+        .max_pool(2, 2)?
+        .conv(p3, algo, &filter(&p3, seed + 23))?
+        .relu()
+        .global_avg_pool()
+        .linear(head, 10)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +186,25 @@ mod tests {
                 "{algo}: diff {}",
                 base.max_abs_diff(&y)
             );
+        }
+    }
+
+    #[test]
+    fn mixnet_shapes_and_parity() {
+        let m = mixnet(Layout::Nchw, AlgoKind::Naive, 7).unwrap();
+        assert_eq!(m.out_dims().unwrap(), Dims::new(1, 10, 1, 1));
+        let x = Tensor4::random(Dims::new(2, 3, 40, 40), Layout::Nchw, 8);
+        let base = m.forward(&x).unwrap();
+        assert_eq!(base.dims(), Dims::new(2, 10, 1, 1));
+        for algo in AlgoKind::BENCHED {
+            for layout in [Layout::Nhwc, Layout::Chwn8] {
+                let y = mixnet(layout, algo, 7).unwrap().forward(&x).unwrap();
+                assert!(
+                    base.allclose(&y, 1e-3, 1e-4),
+                    "{algo} {layout}: diff {}",
+                    base.max_abs_diff(&y)
+                );
+            }
         }
     }
 

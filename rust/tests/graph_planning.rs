@@ -1,0 +1,185 @@
+//! Integration tests for the graph planner: end-to-end parity of the
+//! mixed-layout execution against the single-layout engine and the
+//! oracle model from every starting input layout, the DP ≤ greedy
+//! guarantee over the whole zoo (strict on mixnet, the model built so
+//! the greedy chain leaves money on the table), and whole-graph plan
+//! persistence through the on-disk cache.
+
+use im2win::conv::AlgoKind;
+use im2win::engine::{calibrate::CalibrationProfile, Engine, PlanCache, Planner};
+use im2win::model::{zoo, Model};
+use im2win::prelude::*;
+
+/// The mixnet trap is regime-sensitive: pin the cost model to the
+/// parallelism and batch the geometry was designed for, so the plans
+/// under test are identical on every runner.
+fn pinned() -> Planner {
+    Planner { threads: 4, batch: 8, ..Planner::new() }
+}
+
+fn temp_path(stem: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("im2win_graph_{}_{stem}", std::process::id()))
+}
+
+#[test]
+fn graph_engine_matches_oracle_from_every_starting_layout() {
+    // Acceptance: the graph-planned mixed-layout forward is parity-clean
+    // no matter which layout the model (and its input) start in, stays
+    // bit-identical across repeats, and allocates nothing once warm.
+    for (i, &layout) in Layout::ALL.iter().enumerate() {
+        let seed = 21 + i as u64;
+        let x = Tensor4::random(Dims::new(2, 3, 40, 40), layout, 400 + i as u64);
+        let expect =
+            zoo::mixnet(layout, AlgoKind::Naive, seed).unwrap().forward(&x).unwrap();
+
+        let mut cache = PlanCache::in_memory();
+        let mut engine = Engine::plan_graph(
+            zoo::mixnet(layout, AlgoKind::Naive, seed).unwrap(),
+            &pinned(),
+            &mut cache,
+        )
+        .unwrap();
+        let y = engine.forward(&x).unwrap();
+        assert!(
+            expect.allclose(&y, 1e-3, 1e-4),
+            "from {layout}: graph-planned forward diverges from oracle by {}",
+            expect.max_abs_diff(&y)
+        );
+
+        let misses = engine.workspace().misses();
+        let y2 = engine.forward(&x).unwrap();
+        assert_eq!(y.data(), y2.data(), "from {layout}: repeat forward must be identical");
+        assert_eq!(
+            engine.workspace().misses(),
+            misses,
+            "from {layout}: warm forward allocated new scratch"
+        );
+    }
+}
+
+#[test]
+fn graph_engine_matches_single_layout_engine() {
+    // The mixed-layout plan and the greedy single-chain plan are
+    // different execution strategies for the same function: their
+    // outputs must agree with each other (and the oracle) on mixnet,
+    // where the graph plan genuinely mixes layouts.
+    let planner = pinned();
+    let x = Tensor4::random(Dims::new(4, 3, 40, 40), Layout::Nchw, 77);
+    let expect =
+        zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 9).unwrap().forward(&x).unwrap();
+
+    let mut cache = PlanCache::in_memory();
+    let mut greedy = Engine::plan(
+        zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 9).unwrap(),
+        &planner,
+        &mut cache,
+    )
+    .unwrap();
+    let mut cache = PlanCache::in_memory();
+    let mut graph = Engine::plan_graph(
+        zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 9).unwrap(),
+        &planner,
+        &mut cache,
+    )
+    .unwrap();
+    let gplan = graph.graph_plan().expect("graph engine carries its plan");
+    assert!(gplan.distinct_layouts() > 1, "mixnet's optimum must mix layouts");
+
+    let y_greedy = greedy.forward(&x).unwrap();
+    let y_graph = graph.forward(&x).unwrap();
+    assert!(expect.allclose(&y_greedy, 1e-3, 1e-4), "{}", expect.max_abs_diff(&y_greedy));
+    assert!(expect.allclose(&y_graph, 1e-3, 1e-4), "{}", expect.max_abs_diff(&y_graph));
+    assert!(
+        y_greedy.allclose(&y_graph, 1e-3, 1e-4),
+        "greedy and graph-planned forwards diverge by {}",
+        y_greedy.max_abs_diff(&y_graph)
+    );
+}
+
+#[test]
+fn dp_total_never_exceeds_greedy_across_the_zoo() {
+    // The greedy assignment is one feasible path through the lattice, so
+    // the exact DP can never cost more under the shared cost model — on
+    // any zoo model, from any starting layout. On mixnet the inequality
+    // must be strict: that model exists to prove the greedy chain
+    // suboptimal.
+    let planner = pinned();
+    let greedy_total = |model: &Model| -> f64 {
+        let mut cache = PlanCache::in_memory();
+        planner.plan_model(model, &mut cache).unwrap().iter().map(|p| p.est_s).sum()
+    };
+    for layout in Layout::ALL {
+        let models = [
+            zoo::tinynet(layout, AlgoKind::Naive, 1).unwrap(),
+            zoo::tinynet_biased(layout, AlgoKind::Naive, 1).unwrap(),
+            zoo::vgg_stack(layout, AlgoKind::Naive, 64, 1).unwrap(),
+            zoo::mixnet(layout, AlgoKind::Naive, 1).unwrap(),
+        ];
+        for model in models {
+            let mut cache = PlanCache::in_memory();
+            let graph = planner.plan_graph(&model, &mut cache).unwrap();
+            let greedy = greedy_total(&model);
+            assert!(
+                graph.total_s <= greedy + 1e-12,
+                "{} from {layout}: dp {} > greedy {greedy}",
+                model.name,
+                graph.total_s
+            );
+        }
+    }
+    let mixnet = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+    let mut cache = PlanCache::in_memory();
+    let graph = planner.plan_graph(&mixnet, &mut cache).unwrap();
+    let greedy = greedy_total(&mixnet);
+    assert!(
+        graph.total_s < greedy * (1.0 - 1e-6),
+        "mixnet: dp {} must be strictly cheaper than greedy {greedy}",
+        graph.total_s
+    );
+}
+
+#[test]
+fn second_process_run_hits_the_persisted_graph() {
+    // Whole-graph entries round-trip through the on-disk cache: a fresh
+    // load answers the DP from disk without re-solving.
+    let path = temp_path("persist.json");
+    std::fs::remove_file(&path).ok();
+    let planner = pinned();
+    let model = || zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 6).unwrap();
+
+    let first;
+    {
+        let mut cache = PlanCache::load(&path).unwrap();
+        first = planner.plan_graph(&model(), &mut cache).unwrap();
+        assert_eq!(cache.graph_len(), 1);
+        cache.save().unwrap();
+    }
+    {
+        let mut cache = PlanCache::load(&path).unwrap();
+        assert_eq!(cache.graph_len(), 1, "graph entry must survive the round trip");
+        let again = planner.plan_graph(&model(), &mut cache).unwrap();
+        assert_eq!(first, again, "persisted graph must be reused verbatim");
+        assert_eq!(cache.misses(), 0, "a second run must not re-solve the DP");
+        assert!(cache.hits() > 0);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn calibration_refit_invalidates_persisted_graphs() {
+    // A planner under a different calibration profile must not reuse a
+    // graph solved under the old cost model: sync_profile drops it and
+    // the DP re-solves.
+    let planner = pinned();
+    let model = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 6).unwrap();
+    let mut cache = PlanCache::in_memory();
+    planner.plan_graph(&model, &mut cache).unwrap();
+    assert_eq!(cache.graph_len(), 1);
+
+    let mut profile = CalibrationProfile::new(50.0, planner.threads);
+    profile.set_convert(Layout::Nchw, Layout::Chwn8, 35.0, 3);
+    let calibrated = Planner { profile: Some(profile), ..pinned() };
+    let graph = calibrated.plan_graph(&model, &mut cache).unwrap();
+    assert_eq!(cache.graph_len(), 1, "stale graph must be dropped, fresh one stored");
+    assert!(graph.total_s > 0.0 && graph.total_s.is_finite());
+}
