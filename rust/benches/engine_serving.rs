@@ -4,9 +4,11 @@
 //! end-to-end throughput, the sharded deadline-batching front at 2
 //! shards, the async non-blocking front under an open-loop arrival
 //! generator (offered load ~1.5× the measured sync throughput, so the
-//! rings visibly backpressure), and the graph planner's mixed-layout
+//! rings visibly backpressure), the graph planner's mixed-layout
 //! mixnet execution against the greedy per-layer plan (the global DP
-//! must not lose to greedy). Future PRs touching the engine,
+//! must not lose to greedy), and the depthwise-separable mobilenet_v1
+//! serving path (with the planner-selected depthwise layer count as a
+//! CI invariant). Future PRs touching the engine,
 //! workspace, server or dispatcher compare against these numbers to
 //! catch serving regressions.
 //!
@@ -294,6 +296,42 @@ fn main() {
         graph_r.inf_per_s() / greedy_r.inf_per_s().max(1e-9)
     );
 
+    // MobileNet-class depthwise-separable serving: mobilenet_v1's five
+    // depthwise layers route through the dedicated depthwise kernels
+    // whenever the planner picks them. The emitted depthwise_layers
+    // count doubles as a CI invariant — if the planner ever stops
+    // selecting the specialist for depthwise geometry, the row drops to
+    // zero and the gate fails. Pinned to threads=4 / batch=8 like the
+    // graph section so the plans under test are runner-independent.
+    let mob_planner = Planner { threads: 4, batch: 8, ..Planner::new() };
+    let model = zoo::mobilenet_v1(Layout::Nchw, AlgoKind::Naive, 42).expect("mobilenet builds");
+    let mut cache = PlanCache::in_memory();
+    let mut mob_engine =
+        Engine::plan(model, &mob_planner, &mut cache).expect("mobilenet planning succeeds");
+    let dw_layers = mob_engine
+        .plans()
+        .iter()
+        .filter(|pl| pl.algo == AlgoKind::Depthwise)
+        .count();
+    let mbatch = 8;
+    let mx = Tensor4::random(Dims::new(mbatch, 3, 32, 32), Layout::Nchw, 13);
+    let mut mout = Tensor4::zeros(
+        mob_engine.output_dims(mbatch).expect("output dims"),
+        Layout::Nchw,
+    );
+    let mob_r = measure_throughput(mbatch, iters, || {
+        mob_engine.forward_into(&mx, &mut mout).expect("mobilenet forward succeeds");
+    });
+    println!(
+        "\nmobilenet_v1 (batch {mbatch}, {dw_layers} of {} convs planned depthwise):",
+        mob_engine.plans().len()
+    );
+    println!(
+        "  {:>8.1} inf/s   ({} per batched call)",
+        mob_r.inf_per_s(),
+        fmt_time(mob_r.latency_s())
+    );
+
     // Machine-readable artifact for the CI perf trajectory.
     if let Some(path) = common::json_path() {
         let doc = Json::object(vec![
@@ -310,6 +348,13 @@ fn main() {
                 Json::object(vec![
                     ("greedy_inf_per_s", Json::Number(greedy_r.inf_per_s())),
                     ("graph_inf_per_s", Json::Number(graph_r.inf_per_s())),
+                ]),
+            ),
+            (
+                "mobilenet",
+                Json::object(vec![
+                    ("batch_8", Json::Number(mob_r.inf_per_s())),
+                    ("depthwise_layers", Json::Number(dw_layers as f64)),
                 ]),
             ),
             (

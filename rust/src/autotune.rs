@@ -96,7 +96,7 @@ mod tests {
 
     #[test]
     fn tunes_im2win_and_picks_a_candidate() {
-        let p = ConvParams::new(2, 4, 12, 12, 4, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(4, 4).input(12, 12).filter(3, 3).stride(1).build().unwrap();
         let report = tune_w_block(AlgoKind::Im2win, Layout::Nhwc, &p, 2).unwrap();
         assert_eq!(report.points.len(), W_BLOCK_CANDIDATES.len());
         assert!(W_BLOCK_CANDIDATES.contains(&report.best().w_block));
@@ -105,7 +105,7 @@ mod tests {
 
     #[test]
     fn tunes_direct() {
-        let p = ConvParams::new(2, 3, 10, 10, 4, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(3, 4).input(10, 10).filter(3, 3).stride(1).build().unwrap();
         let report = tune_w_block(AlgoKind::Direct, Layout::Chwn8, &p, 2).unwrap();
         assert_eq!(report.algo, AlgoKind::Direct);
         assert!(report.best().result.best_s > 0.0);
@@ -113,7 +113,7 @@ mod tests {
 
     #[test]
     fn rejects_untunable_algorithms() {
-        let p = ConvParams::new(1, 2, 6, 6, 2, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(2, 2).input(6, 6).filter(3, 3).stride(1).build().unwrap();
         assert!(tune_w_block(AlgoKind::Im2col, Layout::Nchw, &p, 1).is_err());
         assert!(tune_w_block(AlgoKind::Naive, Layout::Nchw, &p, 1).is_err());
     }

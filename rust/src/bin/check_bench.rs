@@ -7,8 +7,10 @@
 //!
 //! Metrics compared (higher is better): every `engine_inf_per_s.*`,
 //! `prepacked.*` (the prepacked-filter + fused bias/ReLU epilogue
-//! path) and `graph.*` row (greedy vs graph-planned mixed-layout
-//! mixnet) plus `server.inf_per_s`, `sharded.inf_per_s` and
+//! path), `graph.*` (greedy vs graph-planned mixed-layout mixnet) and
+//! `mobilenet.*` row (depthwise-separable serving throughput plus the
+//! planner-selected depthwise layer count) plus
+//! `server.inf_per_s`, `sharded.inf_per_s` and
 //! `async.inf_per_s` (the non-blocking ring front under open-loop
 //! offered load) — the headline numbers
 //! `cargo bench --bench engine_serving -- --json` emits. A
@@ -111,7 +113,7 @@ fn load(path: &str) -> Result<Json, String> {
 /// The throughput metrics a serving-bench document exposes (name, value).
 fn metrics(doc: &Json) -> Vec<(String, f64)> {
     let mut out = Vec::new();
-    for section in ["engine_inf_per_s", "prepacked", "graph"] {
+    for section in ["engine_inf_per_s", "prepacked", "graph", "mobilenet"] {
         if let Some(rows) = doc.get(section).and_then(Json::as_object) {
             for (k, v) in rows {
                 if let Some(n) = v.as_f64() {

@@ -1,0 +1,439 @@
+//! Dedicated depthwise convolution kernels (NHWC and CHWN8).
+//!
+//! Depthwise convolution (`groups == C_in == C_out`) gives each channel
+//! its own `H_f×W_f` filter — the backbone of MobileNet-class models. The
+//! general grouped driver ([`super::grouped`]) would run it as `C` dense
+//! single-channel convolutions, destroying vector efficiency (1 channel =
+//! 1 lane). These kernels instead pick the vector dimension the layout
+//! already provides:
+//!
+//! * **NHWC** — channels are unit-stride, and depthwise never mixes them:
+//!   output `(n, h_o, w_o, c..c+8)` is an 8-lane FMA over the taps, with
+//!   the filter packed `[H_f·W_f][C]` so the 8 per-channel filter values
+//!   load as one vector ([`Epilogue::apply_channels`] handles the
+//!   lanes-are-channels store).
+//! * **CHWN8** — the batch block is the vector dimension (as in every
+//!   CHWN8 kernel); the per-channel filter value broadcasts across the 8
+//!   images, and the partial final block masks epilogued stores exactly
+//!   like the dense CHWN8 kernels.
+//!
+//! Padding and dilation are native: border taps are skipped (their
+//! contribution is zero), dilated taps stride by `d_h/d_w`. Every output
+//! element is stored exactly once from a register accumulator, so
+//! recycled (poisoned) output tensors come back fully overwritten.
+
+use super::epilogue::lane_mask;
+use super::{
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter,
+    SharedMut,
+};
+use crate::engine::Workspace;
+use crate::error::{Error, Result};
+use crate::parallel;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Layout, Tensor4};
+
+/// Depthwise convolution with channel- (NHWC) or batch- (CHWN8)
+/// vectorized kernels. Requires [`ConvParams::is_depthwise`] geometry.
+#[derive(Debug, Clone, Default)]
+pub struct DepthwiseConv;
+
+impl DepthwiseConv {
+    /// Construct the depthwise algorithm.
+    pub fn new() -> Self {
+        DepthwiseConv
+    }
+}
+
+/// Reject non-depthwise geometry: these kernels assume channel `c`'s
+/// output reads exactly input channel `c`.
+fn check_depthwise(p: &ConvParams) -> Result<()> {
+    if !p.is_depthwise() {
+        return Err(Error::Config(format!(
+            "depthwise conv requires groups == c_in == c_out, got {p}"
+        )));
+    }
+    Ok(())
+}
+
+/// Pack the depthwise filter (logical dims `(C, 1, H_f, W_f)`) as
+/// `[t = u·W_f + v][C]`: the per-tap values for 8 consecutive channels are
+/// one contiguous vector load. `buf` holds `H_f·W_f·C` floats, fully
+/// overwritten.
+fn pack_filter_channel_minor(filter: &Tensor4, p: &ConvParams, buf: &mut [f32]) {
+    let c = p.c_out;
+    debug_assert_eq!(buf.len(), p.h_f * p.w_f * c);
+    super::note_filter_pack();
+    for u in 0..p.h_f {
+        for v in 0..p.w_f {
+            let base = (u * p.w_f + v) * c;
+            for ch in 0..c {
+                buf[base + ch] = filter.get(ch, 0, u, v);
+            }
+        }
+    }
+}
+
+impl ConvAlgorithm for DepthwiseConv {
+    fn name(&self) -> &'static str {
+        "depthwise"
+    }
+
+    fn supports(&self, layout: Layout) -> bool {
+        matches!(layout, Layout::Nhwc | Layout::Chwn8)
+    }
+
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+    ) -> Result<()> {
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, filter, p, out, &mut ws)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        check_depthwise(p)?;
+        if !self.supports(input.layout()) {
+            return Err(Error::UnsupportedLayout(format!(
+                "depthwise conv supports NHWC and CHWN8, not {}",
+                input.layout()
+            )));
+        }
+        if filter.layout() != input.layout() {
+            return Err(Error::UnsupportedLayout(format!(
+                "depthwise conv expects filter layout {} to match input {}",
+                filter.layout(),
+                input.layout()
+            )));
+        }
+        let mut fpack = ws.take("depthwise.fpack", p.h_f * p.w_f * p.c_out);
+        pack_filter_channel_minor(filter, p, &mut fpack);
+        match input.layout() {
+            Layout::Nhwc => run_nhwc(input, &fpack, p, out, Epilogue::None),
+            _ => run_chwn8(input, &fpack, p, out, Epilogue::None),
+        }
+        ws.put("depthwise.fpack", fpack);
+        Ok(())
+    }
+
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        check_depthwise(p)?;
+        if !self.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!(
+                "depthwise conv supports NHWC and CHWN8, not {layout}"
+            )));
+        }
+        let owned;
+        let f = if filter.layout() == layout {
+            filter
+        } else {
+            owned = filter.to_layout(layout);
+            &owned
+        };
+        let mut buf = AlignedBuf::zeroed(p.h_f * p.w_f * p.c_out);
+        pack_filter_channel_minor(f, p, &mut buf);
+        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PackedFilter,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        let _ = ws; // depthwise needs no scratch
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        check_depthwise(p)?;
+        let fpack = packed
+            .buf()
+            .ok_or_else(|| Error::Config("depthwise pack holds no coefficient buffer".into()))?;
+        match input.layout() {
+            Layout::Nhwc => run_nhwc(input, fpack, p, out, ep),
+            Layout::Chwn8 => run_chwn8(input, fpack, p, out, ep),
+            other => {
+                return Err(Error::UnsupportedLayout(format!(
+                    "depthwise conv supports NHWC and CHWN8, not {other}"
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// NHWC depthwise kernel: vectorized over channels, parallel over `N×H_o`.
+fn run_nhwc(input: &Tensor4, fp: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let c = p.c_out;
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (hf, wf) = (p.h_f, p.w_f);
+    let (sh, sw) = (p.stride_h, p.stride_w);
+    let (dh, dw) = (p.dilation_h, p.dilation_w);
+    let (ph, pw) = (p.pad_h, p.pad_w);
+
+    let i_h = p.w_in * c;
+    let i_n = p.h_in * i_h;
+    let o_h = w_o * c;
+    let o_n = h_o * o_h;
+
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    let c_vec = c - c % LANES;
+
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, ho| {
+        let in_n = n * i_n;
+        let out_row = n * o_n + ho * o_h;
+        for wo in 0..w_o {
+            let obase = out_row + wo * c;
+            let mut c0 = 0;
+            while c0 < c_vec {
+                let mut acc = F32x8::zero();
+                for u in 0..hf {
+                    let hi = match (ho * sh + u * dh).checked_sub(ph) {
+                        Some(h) if h < p.h_in => h,
+                        _ => continue, // border tap: zero contribution
+                    };
+                    for v in 0..wf {
+                        let wi = match (wo * sw + v * dw).checked_sub(pw) {
+                            Some(w) if w < p.w_in => w,
+                            _ => continue,
+                        };
+                        // SAFETY: c0 + 8 <= c; coordinates in bounds.
+                        unsafe {
+                            let iv = F32x8::load(x.as_ptr().add(in_n + hi * i_h + wi * c + c0));
+                            let fv = F32x8::load(fp.as_ptr().add((u * wf + v) * c + c0));
+                            acc = iv.fma(fv, acc);
+                        }
+                    }
+                }
+                // SAFETY: disjoint (n, ho) rows per thread. Lanes are
+                // consecutive channels: per-lane bias epilogue.
+                unsafe { ep.apply_channels(c0, acc).store(optr.at(obase + c0)) };
+                c0 += LANES;
+            }
+            // Channel tail: scalar lanes.
+            for cc in c_vec..c {
+                let mut a = 0.0f32;
+                for u in 0..hf {
+                    let hi = match (ho * sh + u * dh).checked_sub(ph) {
+                        Some(h) if h < p.h_in => h,
+                        _ => continue,
+                    };
+                    for v in 0..wf {
+                        let wi = match (wo * sw + v * dw).checked_sub(pw) {
+                            Some(w) if w < p.w_in => w,
+                            _ => continue,
+                        };
+                        a += x[in_n + hi * i_h + wi * c + cc] * fp[(u * wf + v) * c + cc];
+                    }
+                }
+                // SAFETY: as above.
+                unsafe { *optr.at(obase + cc) = ep.apply(cc, a) };
+            }
+        }
+    });
+}
+
+/// CHWN8 depthwise kernel: 8 batch lanes per vector, parallel over
+/// `(N/8)×H_o` blocks; the partial final block masks epilogued stores.
+fn run_chwn8(input: &Tensor4, fp: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    const B: usize = CHWN8_BLOCK;
+    let c = p.c_out;
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (hf, wf) = (p.h_f, p.w_f);
+    let (sh, sw) = (p.stride_h, p.stride_w);
+    let (dh, dw) = (p.dilation_h, p.dilation_w);
+    let (ph, pw) = (p.pad_h, p.pad_w);
+    let nblocks = p.n.div_ceil(B);
+    let tail_valid = p.n - (nblocks - 1) * B;
+    let mask_tail = tail_valid < B && !ep.is_none();
+
+    // Input [N/8][C][Hi][Wi][8]; output [N/8][C][Ho][Wo][8].
+    let i_h = p.w_in * B;
+    let i_c = p.h_in * i_h;
+    let i_nb = c * i_c;
+    let o_h = w_o * B;
+    let o_c = h_o * o_h;
+    let o_nb = c * o_c;
+
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+
+    parallel::current().parallel_for_coalesced(nblocks, h_o, |nb, ho| {
+        let mask = if mask_tail && nb + 1 == nblocks { Some(lane_mask(tail_valid)) } else { None };
+        for cc in 0..c {
+            let in_c = nb * i_nb + cc * i_c;
+            let out_row = nb * o_nb + cc * o_c + ho * o_h;
+            for wo in 0..w_o {
+                let mut acc = F32x8::zero();
+                for u in 0..hf {
+                    let hi = match (ho * sh + u * dh).checked_sub(ph) {
+                        Some(h) if h < p.h_in => h,
+                        _ => continue,
+                    };
+                    for v in 0..wf {
+                        let wi = match (wo * sw + v * dw).checked_sub(pw) {
+                            Some(w) if w < p.w_in => w,
+                            _ => continue,
+                        };
+                        // SAFETY: coordinates in bounds; the final batch
+                        // block is fully allocated (zero padding lanes).
+                        unsafe {
+                            let fv = F32x8::splat(*fp.get_unchecked((u * wf + v) * c + cc));
+                            acc = F32x8::load(x.as_ptr().add(in_c + hi * i_h + wi * B))
+                                .fma(fv, acc);
+                        }
+                    }
+                }
+                // SAFETY: disjoint (nb, ho) regions per thread. Lanes
+                // share channel `cc`: vector epilogue + tail mask.
+                let mut vv = ep.apply_vec(cc, acc);
+                if let Some(mk) = mask {
+                    vv = vv.mul(mk);
+                }
+                unsafe { vv.store(optr.at(out_row + wo * B)) };
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference_conv;
+
+    fn depthwise_params(c: usize, n: usize, hw: usize, f: usize, s: usize, pad: usize, d: usize) -> ConvParams {
+        ConvParams::builder()
+            .batch(n)
+            .channels(c, c)
+            .input(hw, hw)
+            .filter(f, f)
+            .stride(s)
+            .pad(pad)
+            .dilation(d)
+            .groups(c)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn matches_reference_both_layouts() {
+        // c = 11 exercises the NHWC channel tail; n = 5 the CHWN8 partial
+        // block. Covers padded, strided and dilated depthwise geometry.
+        for (c, n, hw, f, s, pad, d) in
+            [(11, 2, 9, 3, 1, 1, 1), (8, 5, 8, 3, 2, 1, 1), (16, 3, 11, 3, 1, 2, 2)]
+        {
+            let p = depthwise_params(c, n, hw, f, s, pad, d);
+            for layout in [Layout::Nhwc, Layout::Chwn8] {
+                let input = Tensor4::random(p.input_dims(), layout, 91);
+                let filter = Tensor4::random(p.filter_dims(), layout, 92);
+                let expect = reference_conv(&input, &filter, &p, layout);
+                let mut out = Tensor4::zeros(p.output_dims(), layout);
+                out.data_mut().fill(f32::NAN);
+                let mut ws = Workspace::new();
+                DepthwiseConv::new()
+                    .run_with_workspace(&input, &filter, &p, &mut out, &mut ws)
+                    .unwrap();
+                assert!(
+                    out.data().iter().all(|v| v.is_finite()),
+                    "{layout} {p}: poison survived"
+                );
+                assert!(
+                    expect.allclose(&out, 1e-4, 1e-4),
+                    "{layout} {p}: max diff {}",
+                    expect.max_abs_diff(&out)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_fused_epilogues_match_unfused() {
+        let p = depthwise_params(10, 5, 8, 3, 1, 1, 1);
+        let algo = DepthwiseConv::new();
+        let bias: Vec<f32> = (0..p.c_out).map(|i| i as f32 * 0.25 - 1.0).collect();
+        for layout in [Layout::Nhwc, Layout::Chwn8] {
+            let input = Tensor4::random(p.input_dims(), layout, 14);
+            let filter = Tensor4::random(p.filter_dims(), layout, 15);
+            let packed = algo.prepare(&filter, &p, layout).unwrap();
+            for ep in [
+                Epilogue::None,
+                Epilogue::Relu,
+                Epilogue::Bias(&bias),
+                Epilogue::BiasRelu(&bias),
+            ] {
+                let mut expect = reference_conv(&input, &filter, &p, layout);
+                ep.apply_to(&mut expect);
+                let mut out = Tensor4::zeros(p.output_dims(), layout);
+                out.data_mut().fill(f32::NAN);
+                let mut ws = Workspace::new();
+                algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, ep).unwrap();
+                assert!(
+                    expect.allclose(&out, 1e-4, 1e-4),
+                    "{layout} {ep:?}: max diff {}",
+                    expect.max_abs_diff(&out)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_non_depthwise_and_unsupported_layouts() {
+        let dense = ConvParams::builder()
+            .channels(4, 4)
+            .input(6, 6)
+            .filter(3, 3)
+            .build()
+            .unwrap();
+        let x = Tensor4::zeros(dense.input_dims(), Layout::Nhwc);
+        let f = Tensor4::zeros(dense.filter_dims(), Layout::Nhwc);
+        assert!(DepthwiseConv::new().run(&x, &f, &dense).is_err());
+
+        let p = depthwise_params(4, 1, 6, 3, 1, 1, 1);
+        let algo = DepthwiseConv::new();
+        assert!(!algo.supports(Layout::Nchw));
+        assert!(!algo.supports(Layout::Chwn));
+        let xb = Tensor4::zeros(p.input_dims(), Layout::Nchw);
+        let fb = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
+        assert!(algo.run(&xb, &fb, &p).is_err());
+        assert!(algo.prepare(&fb, &p, Layout::Nchw).is_err());
+    }
+
+    #[test]
+    fn chwn8_padding_lanes_stay_zero_under_bias() {
+        let p = depthwise_params(3, 5, 6, 3, 1, 1, 1);
+        let input = Tensor4::random(p.input_dims(), Layout::Chwn8, 3);
+        let filter = Tensor4::random(p.filter_dims(), Layout::Chwn8, 4);
+        let bias = vec![7.0f32; p.c_out];
+        let algo = DepthwiseConv::new();
+        let packed = algo.prepare(&filter, &p, Layout::Chwn8).unwrap();
+        let mut out = Tensor4::zeros(p.output_dims(), Layout::Chwn8);
+        let mut ws = Workspace::new();
+        algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::Bias(&bias))
+            .unwrap();
+        for chunk in out.data().chunks_exact(CHWN8_BLOCK) {
+            assert!(chunk[5..].iter().all(|&v| v == 0.0), "padding lane disturbed");
+        }
+    }
+}

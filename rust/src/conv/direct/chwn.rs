@@ -34,6 +34,7 @@ pub(super) fn run(
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
     let (sh, sw) = (p.stride_h, p.stride_w);
+    let (dh, dw) = (p.dilation_h, p.dilation_w);
     let (n, wi) = (p.n, p.w_in);
     let w_block = w_block.clamp(1, MAX_BLOCK);
 
@@ -70,13 +71,13 @@ pub(super) fn run(
                     let in_c = r * i_c;
                     let f_cbase = r * f_c + c0;
                     for u in 0..hf {
-                        let in_row = in_c + (ho * sh + u) * i_h;
+                        let in_row = in_c + (ho * sh + u * dh) * i_h;
                         for v in 0..wf {
                             // SAFETY: all offsets bounded by loop ranges.
                             unsafe {
                                 let mut iv = [F32x8::zero(); MAX_BLOCK];
                                 for (b, vv) in iv.iter_mut().enumerate().take(bl) {
-                                    let ip = in_row + ((wo + b) * sw + v) * i_w + n0;
+                                    let ip = in_row + ((wo + b) * sw + v * dw) * i_w + n0;
                                     *vv = F32x8::load(x.as_ptr().add(ip));
                                 }
                                 let ftap = f_cbase + u * f_u + v * f_v;
@@ -108,11 +109,11 @@ pub(super) fn run(
                     let mut acc = [0.0f32; MAX_BLOCK];
                     for r in 0..ci {
                         for u in 0..hf {
-                            let in_row = r * i_c + (ho * sh + u) * i_h;
+                            let in_row = r * i_c + (ho * sh + u * dh) * i_h;
                             for v in 0..wf {
                                 let fval = f[r * f_c + u * f_u + v * f_v + c0 + cc];
                                 for (b, a) in acc.iter_mut().enumerate().take(bl) {
-                                    *a += x[in_row + ((wo + b) * sw + v) * i_w + nn] * fval;
+                                    *a += x[in_row + ((wo + b) * sw + v * dw) * i_w + nn] * fval;
                                 }
                             }
                         }

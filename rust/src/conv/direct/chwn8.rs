@@ -34,6 +34,7 @@ pub(super) fn run(
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
     let (sh, sw) = (p.stride_h, p.stride_w);
+    let (dh, dw) = (p.dilation_h, p.dilation_w);
     let wi = p.w_in;
     let w_block = w_block.clamp(1, MAX_BLOCK);
     let nblocks = p.n.div_ceil(CHWN8_BLOCK);
@@ -84,14 +85,14 @@ pub(super) fn run(
                 for r in 0..ci {
                     let in_c = in_nb + r * i_c;
                     for u in 0..hf {
-                        let in_row = in_c + (ho * sh + u) * i_h;
+                        let in_row = in_c + (ho * sh + u * dh) * i_h;
                         for v in 0..wf {
                             // SAFETY: offsets bounded by loop ranges; the
                             // final batch block is fully allocated (padded).
                             unsafe {
                                 let mut iv = [F32x8::zero(); MAX_BLOCK];
                                 for (b, vv) in iv.iter_mut().enumerate().take(bl) {
-                                    let ip = in_row + ((wo + b) * sw + v) * i_w;
+                                    let ip = in_row + ((wo + b) * sw + v * dw) * i_w;
                                     *vv = F32x8::load(x.as_ptr().add(ip));
                                 }
                                 for cc in 0..CB {
@@ -131,13 +132,13 @@ pub(super) fn run(
                 for r in 0..ci {
                     let in_c = in_nb + r * i_c;
                     for u in 0..hf {
-                        let in_row = in_c + (ho * sh + u) * i_h;
+                        let in_row = in_c + (ho * sh + u * dh) * i_h;
                         for v in 0..wf {
                             // SAFETY: as above.
                             unsafe {
                                 let fv = F32x8::splat(*f.get_unchecked(f_at(c, r, u, v)));
                                 for (b, a) in acc.iter_mut().enumerate().take(bl) {
-                                    let ip = in_row + ((wo + b) * sw + v) * i_w;
+                                    let ip = in_row + ((wo + b) * sw + v * dw) * i_w;
                                     *a = F32x8::load(x.as_ptr().add(ip)).fma(fv, *a);
                                 }
                             }

@@ -24,7 +24,7 @@ mod nhwc;
 use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
-use crate::tensor::{Layout, Tensor4};
+use crate::tensor::{CHWN8_BLOCK, Layout, Tensor4};
 
 /// Default output-width register-blocking factor (`W_{o,b}`); the autotuner
 /// ([`crate::autotune`]) can pick per-shape values.
@@ -72,6 +72,20 @@ impl ConvAlgorithm for DirectConv {
         p: &ConvParams,
         out: &mut Tensor4,
     ) -> Result<()> {
+        // Padded problems need a workspace for the materialized border;
+        // a throwaway one keeps the unpadded path allocation-free.
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, filter, p, out, &mut ws)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         check_geometry(input, filter, p, out)?;
         if filter.layout() != input.layout() {
             return Err(Error::UnsupportedLayout(format!(
@@ -80,9 +94,12 @@ impl ConvAlgorithm for DirectConv {
                 input.layout()
             )));
         }
+        if p.groups > 1 {
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, Epilogue::None);
+        }
         // No output zeroing: every kernel stores each output element
         // exactly once from register accumulators.
-        run_kernels(input, filter, p, out, self.w_block, Epilogue::None);
+        self.run_dense(input, filter, p, out, ws, Epilogue::None);
         Ok(())
     }
 
@@ -95,17 +112,117 @@ impl ConvAlgorithm for DirectConv {
         ws: &mut Workspace,
         ep: Epilogue<'_>,
     ) -> Result<()> {
-        // Direct convolution needs no scratch; the pack holds the filter
-        // tensor in the execution layout.
-        let _ = ws;
         check_io_geometry(input, p, out)?;
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
         let filter = packed
             .tensor()
             .ok_or_else(|| Error::Config("direct pack holds no filter tensor".into()))?;
-        run_kernels(input, filter, p, out, self.w_block, ep);
+        if p.groups > 1 {
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
+        }
+        self.run_dense(input, filter, p, out, ws, ep);
         Ok(())
+    }
+}
+
+impl DirectConv {
+    /// Run a dense (`groups == 1`) problem. Dilation is native in the
+    /// kernels; padding is handled by materializing the zero border once
+    /// into workspace scratch and running the kernels on the equivalent
+    /// unpadded problem (direct convolution has no lowering step to absorb
+    /// the border into, so this is its minimal extra-memory concession).
+    fn run_dense(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) {
+        if p.pad_h == 0 && p.pad_w == 0 {
+            run_kernels(input, filter, p, out, self.w_block, ep);
+            return;
+        }
+        let pp = unpadded_equivalent(p);
+        let mut padded = ws.take_tensor("direct.padded", pp.input_dims(), input.layout());
+        pad_input_into(input, p, &mut padded);
+        run_kernels(&padded, filter, &pp, out, self.w_block, ep);
+        ws.put_tensor("direct.padded", padded);
+    }
+}
+
+/// The same problem with the zero border folded into the input extent:
+/// `pad = 0`, `H_in/W_in` grown by `2·pad`. Output geometry is identical.
+fn unpadded_equivalent(p: &ConvParams) -> ConvParams {
+    ConvParams::builder()
+        .batch(p.n)
+        .channels(p.c_in, p.c_out)
+        .input(p.h_in + 2 * p.pad_h, p.w_in + 2 * p.pad_w)
+        .filter(p.h_f, p.w_f)
+        .stride_hw(p.stride_h, p.stride_w)
+        .dilation_hw(p.dilation_h, p.dilation_w)
+        .build()
+        .expect("padded geometry is valid whenever the original is")
+}
+
+/// Copy `input` into the center of the zero-padded tensor `out`
+/// (dims `(N, C_i, H_in + 2·pad_h, W_in + 2·pad_w)` in `input`'s layout).
+/// Each layout has a contiguous span per (image, channel) row, so the copy
+/// is a row-wise `memcpy` after one zero fill.
+fn pad_input_into(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (hi, wi) = (p.h_in, p.w_in);
+    let (ph, pw) = (p.pad_h, p.pad_w);
+    let (hp, wp) = (hi + 2 * ph, wi + 2 * pw);
+    let x = input.data();
+    let dst = out.data_mut();
+    dst.fill(0.0);
+    match input.layout() {
+        Layout::Nhwc => {
+            let row = wi * p.c_in;
+            for n in 0..p.n {
+                for h in 0..hi {
+                    let s = (n * hi + h) * row;
+                    let d = ((n * hp + h + ph) * wp + pw) * p.c_in;
+                    dst[d..d + row].copy_from_slice(&x[s..s + row]);
+                }
+            }
+        }
+        Layout::Nchw => {
+            for n in 0..p.n {
+                for c in 0..p.c_in {
+                    for h in 0..hi {
+                        let s = ((n * p.c_in + c) * hi + h) * wi;
+                        let d = ((n * p.c_in + c) * hp + h + ph) * wp + pw;
+                        dst[d..d + wi].copy_from_slice(&x[s..s + wi]);
+                    }
+                }
+            }
+        }
+        Layout::Chwn => {
+            let row = wi * p.n;
+            for c in 0..p.c_in {
+                for h in 0..hi {
+                    let s = (c * hi + h) * row;
+                    let d = ((c * hp + h + ph) * wp + pw) * p.n;
+                    dst[d..d + row].copy_from_slice(&x[s..s + row]);
+                }
+            }
+        }
+        Layout::Chwn8 => {
+            const B: usize = CHWN8_BLOCK;
+            let row = wi * B;
+            for nb in 0..p.n.div_ceil(B) {
+                for c in 0..p.c_in {
+                    for h in 0..hi {
+                        let s = ((nb * p.c_in + c) * hi + h) * row;
+                        let d = (((nb * p.c_in + c) * hp + h + ph) * wp + pw) * B;
+                        dst[d..d + row].copy_from_slice(&x[s..s + row]);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -179,7 +296,7 @@ mod tests {
     #[test]
     fn table1_shape_conv9_small_batch() {
         // conv9 geometry at batch 2 (full H/W to exercise real strides).
-        let p = ConvParams::new(2, 8, 56, 56, 8, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(8, 8).input(56, 56).filter(3, 3).stride(1).build().unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 42);
         }
@@ -188,7 +305,7 @@ mod tests {
     #[test]
     fn stride_4_large_filter() {
         // conv1-like: 11x11 stride 4.
-        let p = ConvParams::new(3, 3, 39, 39, 4, 11, 11, 4).unwrap();
+        let p = ConvParams::builder().batch(3).channels(3, 4).input(39, 39).filter(11, 11).stride(4).build().unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 7);
         }
@@ -196,7 +313,7 @@ mod tests {
 
     #[test]
     fn rejects_mismatched_filter_layout() {
-        let p = ConvParams::new(1, 2, 4, 4, 2, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(2, 2).input(4, 4).filter(3, 3).stride(1).build().unwrap();
         let input = Tensor4::zeros(p.input_dims(), Layout::Nhwc);
         let filter = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
         assert!(DirectConv::new().run(&input, &filter, &p).is_err());
@@ -205,7 +322,7 @@ mod tests {
     #[test]
     fn chwn8_non_multiple_batch() {
         // N=5 forces a partial final block in CHWN8.
-        let p = ConvParams::new(5, 3, 7, 7, 4, 3, 3, 2).unwrap();
+        let p = ConvParams::builder().batch(5).channels(3, 4).input(7, 7).filter(3, 3).stride(2).build().unwrap();
         check_layout(Layout::Chwn8, &p, 77);
     }
 }

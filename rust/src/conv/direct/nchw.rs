@@ -25,6 +25,7 @@ pub(super) fn run(
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
     let (sh, sw) = (p.stride_h, p.stride_w);
+    let (dh, dw) = (p.dilation_h, p.dilation_w);
     let (hi, wi) = (p.h_in, p.w_in);
 
     // Hoisted strides (paper: hoist the 1-D index computations).
@@ -54,11 +55,23 @@ pub(super) fn run(
                     let in_base_c = in_base_n + r * i_c;
                     let f_base_c = f_base_co + r * f_c;
                     for u in 0..hf {
-                        let irow = in_base_c + (ho * sh + u) * wi;
+                        let irow = in_base_c + (ho * sh + u * dh) * wi;
                         let frow = &f[f_base_c + u * wf..f_base_c + u * wf + wf];
-                        for (b, a) in acc.iter_mut().enumerate().take(bl) {
-                            let istart = irow + (wo + b) * sw;
-                            *a += simd::dot(&x[istart..istart + wf], frow);
+                        if dw == 1 {
+                            for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                let istart = irow + (wo + b) * sw;
+                                *a += simd::dot(&x[istart..istart + wf], frow);
+                            }
+                        } else {
+                            // Dilated taps are not contiguous in W: the
+                            // vector dot over the filter row degenerates to
+                            // a scalar gather.
+                            for (b, a) in acc.iter_mut().enumerate().take(bl) {
+                                let istart = irow + (wo + b) * sw;
+                                for (v, &fv) in frow.iter().enumerate() {
+                                    *a += x[istart + v * dw] * fv;
+                                }
+                            }
                         }
                     }
                 }

@@ -34,6 +34,7 @@ pub(super) fn run(
     let (ci, co) = (p.c_in, p.c_out);
     let (hf, wf) = (p.h_f, p.w_f);
     let (sh, sw) = (p.stride_h, p.stride_w);
+    let (dh, dw) = (p.dilation_h, p.dilation_w);
     let wi = p.w_in;
     let wb = w_block.clamp(1, MAX_WB);
 
@@ -67,9 +68,9 @@ pub(super) fn run(
                 let mut acc = [[F32x8::zero(); CB]; MAX_WB];
                 let mut accs = [[0.0f32; CB]; MAX_WB];
                 for u in 0..hf {
-                    let in_row = in_n + (ho * sh + u) * i_h;
+                    let in_row = in_n + (ho * sh + u * dh) * i_h;
                     for v in 0..wf {
-                        let i0 = in_row + v * ci;
+                        let i0 = in_row + v * dw * ci;
                         let fro = u * f_u + v * f_v;
                         let mut r = 0;
                         while r < ci_vec {
@@ -126,9 +127,9 @@ pub(super) fn run(
                 let mut acc = [F32x8::zero(); MAX_WB];
                 let mut accs = [0.0f32; MAX_WB];
                 for u in 0..hf {
-                    let in_row = in_n + (ho * sh + u) * i_h;
+                    let in_row = in_n + (ho * sh + u * dh) * i_h;
                     for v in 0..wf {
-                        let i0 = in_row + v * ci;
+                        let i0 = in_row + v * dw * ci;
                         let fro = f_base + u * f_u + v * f_v;
                         let mut r = 0;
                         while r < ci_vec {

@@ -93,6 +93,29 @@ impl<'a> Epilogue<'a> {
         }
     }
 
+    /// Apply to an 8-lane vector of outputs belonging to *consecutive
+    /// channels* `co0..co0+8` (the NHWC depthwise store shape: lanes are
+    /// channels, so a bias epilogue loads eight bias entries instead of
+    /// splatting one). The bias slice must reach `co0 + 8`; callers with
+    /// a channel tail use the scalar [`Epilogue::apply`] instead.
+    #[inline(always)]
+    pub fn apply_channels(&self, co0: usize, v: F32x8) -> F32x8 {
+        match *self {
+            Epilogue::None => v,
+            Epilogue::Relu => v.max(F32x8::zero()),
+            // SAFETY: callers guarantee bias[co0..co0+8] is in bounds
+            // (checked here in debug builds).
+            Epilogue::Bias(b) => {
+                debug_assert!(co0 + LANES <= b.len());
+                v.add(unsafe { F32x8::load(b.as_ptr().add(co0)) })
+            }
+            Epilogue::BiasRelu(b) => {
+                debug_assert!(co0 + LANES <= b.len());
+                v.add(unsafe { F32x8::load(b.as_ptr().add(co0)) }).max(F32x8::zero())
+            }
+        }
+    }
+
     /// Unfused fallback: apply over every logical element of `out`
     /// (used by algorithms without a fused store path, and by
     /// [`crate::conv::Conv2d::forward`]'s plain bias application).
@@ -153,6 +176,24 @@ mod tests {
             let got = ep.apply_vec(2, v).to_array();
             for (lane, &xv) in x.iter().enumerate() {
                 assert_eq!(got[lane], ep.apply(2, xv), "{ep:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_channels_loads_per_lane_bias() {
+        let bias: Vec<f32> = (0..16).map(|i| i as f32 * 0.5).collect();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let v = unsafe { F32x8::load(x.as_ptr()) };
+        for ep in [
+            Epilogue::None,
+            Epilogue::Relu,
+            Epilogue::Bias(&bias),
+            Epilogue::BiasRelu(&bias),
+        ] {
+            let got = ep.apply_channels(4, v).to_array();
+            for (lane, &xv) in x.iter().enumerate() {
+                assert_eq!(got[lane], ep.apply(4 + lane, xv), "{ep:?} lane {lane}");
             }
         }
     }

@@ -1,0 +1,149 @@
+//! Grouped-convolution driver: runs any dense algorithm per group.
+//!
+//! A grouped convolution with `G` groups is `G` independent dense
+//! convolutions over channel slices: group `g` reads input channels
+//! `[g·C_i/G, (g+1)·C_i/G)` and writes output channels
+//! `[g·C_o/G, (g+1)·C_o/G)`. Rather than teach every layout-specialized
+//! kernel about channel strides, the driver slices the operands into
+//! per-group dense sub-problems (`groups == 1`) and reuses the algorithm's
+//! existing fast path on each. The slice/scatter passes run over logical
+//! coordinates — correctness-grade glue around the optimized inner runs.
+//! Depthwise problems (`G == C_i == C_o`) have a dedicated fast path in
+//! [`super::depthwise`]; this driver is the general fallback that keeps
+//! every (algorithm × layout) pair geometry-complete.
+
+use super::im2col::zero_chwn8_batch_padding;
+use super::{ConvAlgorithm, ConvParams, Epilogue};
+use crate::engine::Workspace;
+use crate::error::Result;
+use crate::tensor::{Layout, Tensor4};
+
+/// Run `p` (with `p.groups > 1`) by dispatching each group's dense
+/// sub-problem to `algo`, scattering outputs (with `ep` fused into the
+/// scatter) back into `out`. Every logical output element is written, so
+/// a recycled (poisoned) `out` comes back fully defined; CHWN8
+/// batch-padding lanes are re-zeroed at the end.
+pub(crate) fn run_grouped(
+    algo: &dyn ConvAlgorithm,
+    input: &Tensor4,
+    filter: &Tensor4,
+    p: &ConvParams,
+    out: &mut Tensor4,
+    ws: &mut Workspace,
+    ep: Epilogue<'_>,
+) -> Result<()> {
+    debug_assert!(p.groups > 1);
+    ep.check(p.c_out)?;
+    let layout = input.layout();
+    let gci = p.group_c_in();
+    let gco = p.group_c_out();
+    // The dense per-group sub-problem: same spatial geometry, one group's
+    // worth of channels, groups == 1 (so the dispatch below cannot recurse
+    // back into this driver).
+    let dense = ConvParams::builder()
+        .batch(p.n)
+        .channels(gci, gco)
+        .input(p.h_in, p.w_in)
+        .filter(p.h_f, p.w_f)
+        .stride_hw(p.stride_h, p.stride_w)
+        .pad_hw(p.pad_h, p.pad_w)
+        .dilation_hw(p.dilation_h, p.dilation_w)
+        .build()?;
+
+    let mut sub_out = Tensor4::zeros(dense.output_dims(), layout);
+    for g in 0..p.groups {
+        let ci0 = g * gci;
+        let co0 = g * gco;
+        let sub_in = Tensor4::from_fn(dense.input_dims(), layout, |n, c, h, w| {
+            input.get(n, ci0 + c, h, w)
+        });
+        // Filter logical dims are (C_o, C_i/G, H_f, W_f): slice the output
+        // channel axis only.
+        let sub_f = Tensor4::from_fn(dense.filter_dims(), layout, |j, c, u, v| {
+            filter.get(co0 + j, c, u, v)
+        });
+        algo.run_with_workspace(&sub_in, &sub_f, &dense, &mut sub_out, ws)?;
+        for n in 0..p.n {
+            for c in 0..gco {
+                for h in 0..p.h_out() {
+                    for w in 0..p.w_out() {
+                        let v = ep.apply(co0 + c, sub_out.get(n, c, h, w));
+                        out.set(n, co0 + c, h, w, v);
+                    }
+                }
+            }
+        }
+    }
+    if layout == Layout::Chwn8 {
+        // Logical scatter never touches batch-padding lanes; restore their
+        // all-zero invariant in case `out` arrived poisoned.
+        zero_chwn8_batch_padding(out, p);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::im2win::Im2winConv;
+    use crate::conv::reference_conv;
+    use crate::tensor::CHWN8_BLOCK;
+
+    #[test]
+    fn grouped_matches_reference_all_layouts() {
+        let p = ConvParams::builder()
+            .batch(5) // forces a partial CHWN8 batch block
+            .channels(4, 6)
+            .input(7, 6)
+            .filter(3, 3)
+            .pad(1)
+            .groups(2)
+            .build()
+            .unwrap();
+        let algo = Im2winConv::new();
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 31);
+            let filter = Tensor4::random(p.filter_dims(), layout, 32);
+            let expect = reference_conv(&input, &filter, &p, layout);
+            let mut out = Tensor4::zeros(p.output_dims(), layout);
+            // Poison everything (for CHWN8, padding lanes included) so the
+            // full-overwrite + re-zero contract is exercised.
+            out.data_mut().fill(f32::NAN);
+            let mut ws = Workspace::new();
+            run_grouped(&algo, &input, &filter, &p, &mut out, &mut ws, Epilogue::None).unwrap();
+            assert!(
+                out.data().iter().all(|v| v.is_finite()),
+                "{layout}: poison survived"
+            );
+            assert!(
+                expect.allclose(&out, 1e-4, 1e-4),
+                "{layout}: max diff {}",
+                expect.max_abs_diff(&out)
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_chwn8_padding_lanes_stay_zero() {
+        let p = ConvParams::builder()
+            .batch(3)
+            .channels(2, 2)
+            .input(4, 4)
+            .filter(1, 1)
+            .groups(2)
+            .build()
+            .unwrap();
+        let input = Tensor4::random(p.input_dims(), Layout::Chwn8, 7);
+        let filter = Tensor4::random(p.filter_dims(), Layout::Chwn8, 8);
+        let bias = vec![5.0f32; p.c_out];
+        let mut out = Tensor4::zeros(p.output_dims(), Layout::Chwn8);
+        out.data_mut().fill(f32::NAN);
+        let mut ws = Workspace::new();
+        let algo = Im2winConv::new();
+        run_grouped(&algo, &input, &filter, &p, &mut out, &mut ws, Epilogue::Bias(&bias))
+            .unwrap();
+        for chunk in out.data().chunks_exact(CHWN8_BLOCK) {
+            assert!(chunk[3..].iter().all(|&v| v == 0.0), "padding lane disturbed");
+        }
+    }
+}

@@ -50,7 +50,9 @@ impl Im2colConv {
 /// problem `p` in `layout` — the memory blow-up Fig. 5 measures, and the
 /// transform-byte term the engine's cost model charges im2col with.
 pub fn im2col_matrix_len(p: &ConvParams, layout: Layout) -> usize {
-    let k = p.c_in * p.h_f * p.w_f;
+    // Grouped problems lower one group at a time, so the materialized
+    // matrix holds one group's worth of channels.
+    let k = p.group_c_in() * p.h_f * p.w_f;
     let cols = p.h_out() * p.w_out();
     match layout {
         Layout::Nchw | Layout::Nhwc | Layout::Chwn => p.n * k * cols,
@@ -63,7 +65,7 @@ pub fn im2col_matrix_len(p: &ConvParams, layout: Layout) -> usize {
 fn filter_pack_len(p: &ConvParams, layout: Layout) -> usize {
     match layout {
         Layout::Nchw => 0,
-        _ => p.c_out * p.c_in * p.h_f * p.w_f,
+        _ => p.filter_dims().count(),
     }
 }
 
@@ -118,6 +120,9 @@ impl ConvAlgorithm for Im2colConv {
                 input.layout()
             )));
         }
+        if p.groups > 1 {
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, Epilogue::None);
+        }
         let layout = input.layout();
         let mut mat = ws.take("im2col.mat", im2col_matrix_len(p, layout));
         let mut fmat = ws.take("im2col.fmat", filter_pack_len(p, layout));
@@ -166,7 +171,12 @@ impl ConvAlgorithm for Im2colConv {
             owned = filter.to_layout(layout);
             &owned
         };
-        let len = p.c_out * p.c_in * p.h_f * p.w_f;
+        if p.groups > 1 {
+            // Grouped runs re-slice the filter per group: store the tensor.
+            super::note_filter_pack();
+            return Ok(PackedFilter::from_tensor(self.name(), f.clone()));
+        }
+        let len = p.filter_dims().count();
         let mut buf = AlignedBuf::zeroed(len);
         match layout {
             Layout::Nchw => {
@@ -192,6 +202,12 @@ impl ConvAlgorithm for Im2colConv {
         check_io_geometry(input, p, out)?;
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
+        if p.groups > 1 {
+            let filter = packed.tensor().ok_or_else(|| {
+                Error::Config("grouped im2col pack does not hold a filter tensor".into())
+            })?;
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
+        }
         let fmat = packed
             .buf()
             .ok_or_else(|| Error::Config("im2col pack holds no filter matrix".into()))?;
@@ -227,19 +243,53 @@ impl ConvAlgorithm for Im2colConv {
     }
 }
 
+/// True when the window gathers need no zero border and no dilated taps —
+/// the fast-path condition for every lowering below.
+fn default_window(p: &ConvParams) -> bool {
+    p.pad_h == 0 && p.pad_w == 0 && p.dilation_h == 1 && p.dilation_w == 1
+}
+
+/// The padded input row a filter row `u` of output row `ho` reads, or
+/// `None` when the tap lands in the zero border.
+#[inline]
+fn src_h(p: &ConvParams, ho: usize, u: usize) -> Option<usize> {
+    (ho * p.stride_h + u * p.dilation_h).checked_sub(p.pad_h).filter(|&h| h < p.h_in)
+}
+
+/// Column analogue of [`src_h`].
+#[inline]
+fn src_w(p: &ConvParams, wo: usize, v: usize) -> Option<usize> {
+    (wo * p.stride_w + v * p.dilation_w).checked_sub(p.pad_w).filter(|&w| w < p.w_in)
+}
+
 /// Unroll one NCHW image into `K×(H_o·W_o)`, `K` ordered `(c, u, v)`.
 fn unroll_nchw_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let cols = h_o * w_o;
+    let dense = default_window(p);
     let mut k = 0;
     for c in 0..p.c_in {
         for u in 0..p.h_f {
             for v in 0..p.w_f {
                 let row = &mut mat[k * cols..(k + 1) * cols];
-                for ho in 0..h_o {
-                    let src = c * p.h_in * p.w_in + (ho * p.stride_h + u) * p.w_in + v;
-                    for wo in 0..w_o {
-                        row[ho * w_o + wo] = x[src + wo * p.stride_w];
+                if dense {
+                    for ho in 0..h_o {
+                        let src = c * p.h_in * p.w_in + (ho * p.stride_h + u) * p.w_in + v;
+                        for wo in 0..w_o {
+                            row[ho * w_o + wo] = x[src + wo * p.stride_w];
+                        }
+                    }
+                } else {
+                    // Padded/dilated taps: per-element gather with the
+                    // zero border materialized into the matrix.
+                    for ho in 0..h_o {
+                        let hi = src_h(p, ho, u);
+                        for wo in 0..w_o {
+                            row[ho * w_o + wo] = match (hi, src_w(p, wo, v)) {
+                                (Some(h), Some(w)) => x[(c * p.h_in + h) * p.w_in + w],
+                                _ => 0.0,
+                            };
+                        }
                     }
                 }
                 k += 1;
@@ -288,13 +338,32 @@ fn unroll_nhwc_image(x: &[f32], p: &ConvParams, mat: &mut [f32]) {
     let k = p.h_f * p.w_f * ci;
     let i_h = p.w_in * ci;
     let chunk = p.w_f * ci;
+    let dense = default_window(p);
     for ho in 0..h_o {
         for wo in 0..w_o {
             let dst = &mut mat[(ho * w_o + wo) * k..(ho * w_o + wo + 1) * k];
-            let src0 = (ho * p.stride_h) * i_h + (wo * p.stride_w) * ci;
-            for u in 0..p.h_f {
-                dst[u * chunk..(u + 1) * chunk]
-                    .copy_from_slice(&x[src0 + u * i_h..src0 + u * i_h + chunk]);
+            if dense {
+                let src0 = (ho * p.stride_h) * i_h + (wo * p.stride_w) * ci;
+                for u in 0..p.h_f {
+                    dst[u * chunk..(u + 1) * chunk]
+                        .copy_from_slice(&x[src0 + u * i_h..src0 + u * i_h + chunk]);
+                }
+            } else {
+                // Per-tap C_i chunks: in-range taps stay a memcpy, border
+                // taps fill zeros.
+                for u in 0..p.h_f {
+                    let hi = src_h(p, ho, u);
+                    for v in 0..p.w_f {
+                        let d = (u * p.w_f + v) * ci;
+                        match (hi, src_w(p, wo, v)) {
+                            (Some(h), Some(w)) => {
+                                let s = h * i_h + w * ci;
+                                dst[d..d + ci].copy_from_slice(&x[s..s + ci]);
+                            }
+                            _ => dst[d..d + ci].fill(0.0),
+                        }
+                    }
+                }
             }
         }
     }
@@ -382,10 +451,16 @@ fn lower_chwn(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
             for v in 0..p.w_f {
                 let dst = &mut mat[row * cols..(row + 1) * cols];
                 for ho in 0..h_o {
+                    let hi = src_h(p, ho, u);
                     for wo in 0..w_o {
-                        let src = c * i_c + (ho * p.stride_h + u) * i_h + (wo * p.stride_w + v) * i_w;
-                        dst[(ho * w_o + wo) * n..(ho * w_o + wo + 1) * n]
-                            .copy_from_slice(&x[src..src + n]);
+                        let d = (ho * w_o + wo) * n;
+                        match (hi, src_w(p, wo, v)) {
+                            (Some(h), Some(w)) => {
+                                let src = c * i_c + h * i_h + w * i_w;
+                                dst[d..d + n].copy_from_slice(&x[src..src + n]);
+                            }
+                            _ => dst[d..d + n].fill(0.0),
+                        }
                     }
                 }
                 row += 1;
@@ -424,11 +499,16 @@ fn lower_chwn8(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
                 for v in 0..p.w_f {
                     let dst = &mut m[row * cols..(row + 1) * cols];
                     for ho in 0..h_o {
+                        let hi = src_h(p, ho, u);
                         for wo in 0..w_o {
-                            let src =
-                                c * i_c + (ho * p.stride_h + u) * i_h + (wo * p.stride_w + v) * B;
-                            dst[(ho * w_o + wo) * B..(ho * w_o + wo + 1) * B]
-                                .copy_from_slice(&xb[src..src + B]);
+                            let d = (ho * w_o + wo) * B;
+                            match (hi, src_w(p, wo, v)) {
+                                (Some(h), Some(w)) => {
+                                    let src = c * i_c + h * i_h + w * B;
+                                    dst[d..d + B].copy_from_slice(&xb[src..src + B]);
+                                }
+                                _ => dst[d..d + B].fill(0.0),
+                            }
                         }
                     }
                     row += 1;
@@ -466,7 +546,7 @@ fn gemm_chwn8(mat: &[f32], fmat: &[f32], p: &ConvParams, out: &mut Tensor4, ep: 
 
 /// Zero the batch-padding lanes of a CHWN8 output's final block (a biased
 /// epilogue writes `epilogue(0)` there; the layout invariant is zeros).
-fn zero_chwn8_batch_padding(out: &mut Tensor4, p: &ConvParams) {
+pub(crate) fn zero_chwn8_batch_padding(out: &mut Tensor4, p: &ConvParams) {
     const B: usize = CHWN8_BLOCK;
     let rem = p.n % B;
     if rem == 0 {
@@ -510,7 +590,7 @@ mod tests {
     #[test]
     fn large_k_exercises_gemm_blocking() {
         // K = 16*3*3 = 144; cols ~ 36: hits multiple GEMM tiles.
-        let p = ConvParams::new(2, 16, 8, 8, 8, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(16, 8).input(8, 8).filter(3, 3).stride(1).build().unwrap();
         for layout in [Layout::Nchw, Layout::Nhwc] {
             check_layout(layout, &p, 9);
         }
@@ -522,7 +602,7 @@ mod tests {
         use crate::metrics::MemoryScope;
         // 3x3 stride-1: im2col should materialize ~Hf*Wf/Hf = Wf times more
         // than im2win's window tensor.
-        let p = ConvParams::new(4, 8, 16, 16, 8, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(4).channels(8, 8).input(16, 16).filter(3, 3).stride(1).build().unwrap();
         let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
         let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
 
@@ -540,7 +620,7 @@ mod tests {
 
     #[test]
     fn stride_and_rect_filters() {
-        let p = ConvParams::with_strides(3, 2, 10, 9, 4, 2, 3, 2, 2).unwrap();
+        let p = ConvParams::builder().batch(3).channels(2, 4).input(10, 9).filter(2, 3).stride(2).build().unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 31);
         }
@@ -548,7 +628,7 @@ mod tests {
 
     #[test]
     fn prepacked_matches_per_call_path() {
-        let p = ConvParams::new(3, 4, 9, 9, 5, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(3).channels(4, 5).input(9, 9).filter(3, 3).stride(1).build().unwrap();
         let algo = Im2colConv::new();
         for layout in Layout::ALL {
             let input = Tensor4::random(p.input_dims(), layout, 77);

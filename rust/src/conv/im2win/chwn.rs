@@ -26,13 +26,13 @@ pub(super) fn run(
 ) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
-    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let (hf, wf) = (p.h_f, p.w_f);
     let n = p.n;
     let w_block = w_block.clamp(1, MAX_BLOCK);
 
-    // Window tensor [Ci][Ho][Wi*Hf][N].
+    // Window tensor [Ci][Ho][win_w*Hf][N].
     let t_w = n;
-    let t_h = p.w_in * hf * n;
+    let t_h = p.win_w() * hf * n;
     let t_c = h_o * t_h;
     // Output [Co][Ho][Wo][N].
     let o_w = n;
@@ -40,7 +40,7 @@ pub(super) fn run(
     let o_c = h_o * o_h;
 
     let span = wf * hf;
-    let col = sw * hf; // window-position distance between output columns
+    let col = p.win_col_step() * hf; // window-position distance between output columns
     let n_vec = n - n % LANES;
 
     let x = win.data();

@@ -30,7 +30,7 @@ pub(super) fn run(
     const B: usize = CHWN8_BLOCK;
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
-    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let (hf, wf) = (p.h_f, p.w_f);
     let w_block = w_block.clamp(1, MAX_BLOCK);
     let nblocks = p.n.div_ceil(B);
     // Batch-padding lanes of the final block compute zeros; a bias/ReLU
@@ -39,9 +39,9 @@ pub(super) fn run(
     let tail_valid = p.n - (nblocks - 1) * B;
     let mask_tail = tail_valid < B && !ep.is_none();
 
-    // Window tensor [N/8][Ci][Ho][Wi*Hf][8].
+    // Window tensor [N/8][Ci][Ho][win_w*Hf][8].
     let t_w = B;
-    let t_h = p.w_in * hf * B;
+    let t_h = p.win_w() * hf * B;
     let t_c = h_o * t_h;
     let t_nb = ci * t_c;
     // Output [N/8][Co][Ho][Wo][8].
@@ -51,7 +51,7 @@ pub(super) fn run(
     let o_nb = co * o_c;
 
     let span = wf * hf;
-    let col = sw * hf;
+    let col = p.win_col_step() * hf;
 
     let x = win.data();
     let f = fpack;

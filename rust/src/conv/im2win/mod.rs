@@ -94,9 +94,15 @@ impl ConvAlgorithm for Im2winConv {
                 input.layout()
             )));
         }
+        if p.groups > 1 {
+            // Grouped problems run as per-group dense sub-convolutions
+            // through the shared driver (which re-enters this method with
+            // `groups == 1`).
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, Epilogue::None);
+        }
         let mut win = ws.take_tensor("im2win.win", im2win_dims(p), input.layout());
         im2win_transform_into(input, p, &mut win);
-        let mut fpack = ws.take("im2win.fpack", p.c_out * p.c_in * p.h_f * p.w_f);
+        let mut fpack = ws.take("im2win.fpack", p.filter_dims().count());
         // No output zeroing: every kernel writes each output element
         // exactly once from register accumulators (pinned by the
         // `kernels_overwrite_poisoned_output` test), so a zero fill would
@@ -139,7 +145,13 @@ impl ConvAlgorithm for Im2winConv {
             owned = filter.to_layout(layout);
             &owned
         };
-        let mut buf = AlignedBuf::zeroed(p.c_out * p.c_in * p.h_f * p.w_f);
+        if p.groups > 1 {
+            // Grouped runs re-slice the filter per group, so the pack
+            // stores the tensor itself (same fallback shape as direct).
+            super::note_filter_pack();
+            return Ok(PackedFilter::from_tensor(self.name(), f.clone()));
+        }
+        let mut buf = AlignedBuf::zeroed(p.filter_dims().count());
         match layout {
             Layout::Nhwc => pack_filter_window_major_into(f, p, &mut buf),
             _ => pack_filter_channel_major_into(f, p, &mut buf),
@@ -159,6 +171,12 @@ impl ConvAlgorithm for Im2winConv {
         check_io_geometry(input, p, out)?;
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
+        if p.groups > 1 {
+            let filter = packed.tensor().ok_or_else(|| {
+                Error::Config("grouped im2win pack does not hold a filter tensor".into())
+            })?;
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
+        }
         let fpack = packed
             .buf()
             .ok_or_else(|| Error::Config("im2win pack holds no coefficient buffer".into()))?;
@@ -269,7 +287,7 @@ mod tests {
     #[test]
     fn conv5_like_shape_all_layouts() {
         // conv5 geometry scaled down: 5x5 filter, stride 1, large-ish Ci.
-        let p = ConvParams::new(2, 16, 12, 12, 8, 5, 5, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(16, 8).input(12, 12).filter(5, 5).stride(1).build().unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 55);
         }
@@ -277,7 +295,7 @@ mod tests {
 
     #[test]
     fn strided_rectangular() {
-        let p = ConvParams::with_strides(3, 4, 11, 9, 5, 3, 2, 2, 3).unwrap();
+        let p = ConvParams::builder().batch(3).channels(4, 5).input(11, 9).filter(3, 2).stride_hw(2, 3).build().unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 66);
         }
@@ -289,7 +307,7 @@ mod tests {
         // every im2win kernel writes each output element exactly once, so
         // a NaN-poisoned (recycled) output tensor must come out fully
         // overwritten and equal to the reference.
-        let p = ConvParams::new(5, 3, 9, 9, 5, 3, 3, 1).unwrap(); // n=5: CHWN8 partial block
+        let p = ConvParams::builder().batch(5).channels(3, 5).input(9, 9).filter(3, 3).stride(1).build().unwrap(); // n=5: CHWN8 partial block
         for layout in Layout::ALL {
             let input = Tensor4::random(p.input_dims(), layout, 21);
             let filter = Tensor4::random(p.filter_dims(), layout, 22);
@@ -313,7 +331,7 @@ mod tests {
 
     #[test]
     fn filter_packs_agree_with_tensor() {
-        let p = ConvParams::new(1, 3, 4, 4, 2, 2, 2, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(3, 2).input(4, 4).filter(2, 2).stride(1).build().unwrap();
         let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 5);
         let len = p.c_out * p.c_in * p.h_f * p.w_f;
         let mut wmaj = AlignedBuf::zeroed(len);

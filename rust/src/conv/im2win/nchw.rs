@@ -23,11 +23,11 @@ pub(super) fn run(
 ) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
-    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let (hf, wf) = (p.h_f, p.w_f);
     let w_block = w_block.clamp(1, MAX_BLOCK);
 
-    // Window tensor [N][Ci][Ho][Wi*Hf].
-    let t_h = p.w_in * hf;
+    // Window tensor [N][Ci][Ho][win_w*Hf].
+    let t_h = p.win_w() * hf;
     let t_c = h_o * t_h;
     let t_n = ci * t_c;
     // Output [N][Co][Ho][Wo].
@@ -36,7 +36,7 @@ pub(super) fn run(
 
     let span = wf * hf; // per-channel contiguous window length
     let span_vec = span - span % LANES;
-    let col = sw * hf;
+    let col = p.win_col_step() * hf;
 
     let x = win.data();
     let f = fpack;

@@ -37,11 +37,12 @@ pub(super) fn run(
 ) {
     let (h_o, w_o) = (p.h_out(), p.w_out());
     let (ci, co) = (p.c_in, p.c_out);
-    let (hf, wf, sw) = (p.h_f, p.w_f, p.stride_w);
+    let (hf, wf) = (p.h_f, p.w_f);
     let wb = w_block.clamp(1, MAX_WB);
 
-    // Window tensor [N][Ho][Wi*Hf][Ci].
-    let t_h = p.w_in * hf * ci;
+    // Window tensor [N][Ho][win_w*Hf][Ci] (win_w = Wi for the default
+    // geometry; padded/dilated problems widen it, see the transform).
+    let t_h = p.win_w() * hf * ci;
     let t_n = h_o * t_h;
     // Output [N][Ho][Wo][Co].
     let o_w = co;
@@ -50,7 +51,7 @@ pub(super) fn run(
 
     let span = wf * hf * ci; // L: contiguous window/filter length
     let span_vec = span - span % LANES;
-    let col = sw * hf * ci; // distance between adjacent output columns
+    let col = p.win_col_step() * hf * ci; // distance between adjacent output columns
 
     let x = win.data();
     let f = fpack;

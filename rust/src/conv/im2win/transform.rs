@@ -12,6 +12,19 @@
 //! the *contiguous* flattened range `[w_o·s_w·H_f, (w_o·s_w + W_f)·H_f)` —
 //! unit-stride access for the whole convolution window, which is what the
 //! conv kernels in this module exploit.
+//!
+//! **Generalized geometry.** Padding and dilation reshape the window
+//! tensor without touching the kernels' access pattern: the flattened row
+//! becomes `win_w·H_f` *virtual* columns ([`ConvParams::win_w`]) where
+//! window column `k` maps to input column `k − p_w` while horizontally
+//! adjacent windows still share columns (`d_w == 1`, the padded width) and
+//! to `(k/W_f)·s_w + (k%W_f)·d_w − p_w` once dilation unshares them; the
+//! filter-row source becomes input row `m·s_h + u·d_h − p_h`. Out-of-range
+//! sources are zero-filled, so the kernels keep reading one contiguous
+//! span of `W_f·H_f` columns per output at column step
+//! [`ConvParams::win_col_step`] — they never see the border. Grouped
+//! geometry never reaches this transform (the grouped driver slices to
+//! dense per-group problems first).
 
 use crate::conv::{ConvParams, SharedMut};
 use crate::parallel;
@@ -20,7 +33,33 @@ use crate::tensor::{Dims, Layout, Tensor4, CHWN8_BLOCK};
 /// Logical dims of the im2win tensor for problem `p`.
 #[inline]
 pub fn im2win_dims(p: &ConvParams) -> Dims {
-    Dims::new(p.n, p.c_in, p.h_out(), p.w_in * p.h_f)
+    Dims::new(p.n, p.c_in, p.h_out(), p.win_w() * p.h_f)
+}
+
+/// Source input row of window row `(m, u)`, `None` in the zero border.
+#[inline]
+fn src_row(p: &ConvParams, m: usize, u: usize) -> Option<usize> {
+    let row = m * p.stride_h + u * p.dilation_h;
+    if row < p.pad_h || row - p.pad_h >= p.h_in {
+        None
+    } else {
+        Some(row - p.pad_h)
+    }
+}
+
+/// Source input column of window column `k`, `None` in the zero border.
+#[inline]
+fn src_col(p: &ConvParams, k: usize) -> Option<usize> {
+    let col = if p.dilation_w == 1 {
+        k
+    } else {
+        (k / p.w_f) * p.stride_w + (k % p.w_f) * p.dilation_w
+    };
+    if col < p.pad_w || col - p.pad_w >= p.w_in {
+        None
+    } else {
+        Some(col - p.pad_w)
+    }
 }
 
 /// Transform `input` into its im2win window tensor (same layout).
@@ -50,8 +89,18 @@ pub fn im2win_transform_into(input: &Tensor4, p: &ConvParams, out: &mut Tensor4)
     }
 }
 
+/// True when the window geometry is the paper's original (no padding, no
+/// dilation) and the specialized fast copies below apply unchanged.
+#[inline]
+fn default_window(p: &ConvParams) -> bool {
+    p.pad_h == 0 && p.pad_w == 0 && p.dilation_h == 1 && p.dilation_w == 1
+}
+
 /// NHWC: windows carry whole `C_i` vectors; copy rows of `C_i` floats.
 fn nhwc(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    if !default_window(p) {
+        return nhwc_general(input, p, out);
+    }
     let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
     let (wi, h_o) = (p.w_in, p.h_out());
     let i_w = ci;
@@ -78,6 +127,42 @@ fn nhwc(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     });
 }
 
+/// NHWC with padding/dilation: same `C_i`-chunk copies over the virtual
+/// window columns, zero-filling border chunks.
+fn nhwc_general(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (ci, hf) = (p.c_in, p.h_f);
+    let (k_w, h_o) = (p.win_w(), p.h_out());
+    let i_w = ci;
+    let i_h = p.w_in * ci;
+    let i_n = p.h_in * i_h;
+    let o_w = ci;
+    let o_h = k_w * hf * ci;
+    let o_n = h_o * o_h;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
+        let src_n = n * i_n;
+        let dst_m = n * o_n + m * o_h;
+        for k in 0..k_w {
+            let col = src_col(p, k);
+            for u in 0..hf {
+                let dst = dst_m + (k * hf + u) * o_w;
+                // SAFETY: disjoint (n, m) rows per thread; ranges in bounds.
+                unsafe {
+                    match (src_row(p, m, u), col) {
+                        (Some(r), Some(c)) => std::ptr::copy_nonoverlapping(
+                            x.as_ptr().add(src_n + r * i_h + c * i_w),
+                            optr.at(dst),
+                            ci,
+                        ),
+                        _ => std::ptr::write_bytes(optr.at(dst), 0, ci),
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// NCHW: per (n, c, m) the flattened row is an `H_f×W_i` transpose of the
 /// input rows the output row reads.
 ///
@@ -87,6 +172,9 @@ fn nhwc(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
 /// load side runs at full cache-line utilization and the 8·`H_f` stores
 /// of one chunk land in one small, cache-resident window span.
 fn nchw(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    if !default_window(p) {
+        return nchw_general(input, p, out);
+    }
     let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
     let (wi, h_o) = (p.w_in, p.h_out());
     let i_h = wi;
@@ -139,8 +227,43 @@ fn nchw(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     });
 }
 
+/// NCHW with padding/dilation: scalar gather over the virtual window
+/// columns (the vectorized transpose assumes dense shared columns).
+fn nchw_general(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (ci, hf) = (p.c_in, p.h_f);
+    let (k_w, h_o) = (p.win_w(), p.h_out());
+    let i_h = p.w_in;
+    let i_c = p.h_in * p.w_in;
+    let i_n = ci * i_c;
+    let o_h = k_w * hf;
+    let o_c = h_o * o_h;
+    let o_n = ci * o_c;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, m| {
+        for c in 0..ci {
+            let src_c = n * i_n + c * i_c;
+            let dst = n * o_n + c * o_c + m * o_h;
+            for k in 0..k_w {
+                let col = src_col(p, k);
+                for u in 0..hf {
+                    let v = match (src_row(p, m, u), col) {
+                        (Some(r), Some(cc)) => x[src_c + r * i_h + cc],
+                        _ => 0.0,
+                    };
+                    // SAFETY: disjoint (n, m) rows per thread; in bounds.
+                    unsafe { *optr.at(dst + k * hf + u) = v };
+                }
+            }
+        }
+    });
+}
+
 /// CHWN: windows carry whole `N` vectors; copy rows of `N` floats.
 fn chwn(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    if !default_window(p) {
+        return chwn_general(input, p, out);
+    }
     let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
     let (wi, h_o, n) = (p.w_in, p.h_out(), p.n);
     let i_w = n;
@@ -167,8 +290,47 @@ fn chwn(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     });
 }
 
+/// CHWN with padding/dilation: `N`-chunk copies over the virtual window
+/// columns, zero-filling border chunks.
+fn chwn_general(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    let (ci, hf, n) = (p.c_in, p.h_f, p.n);
+    let (k_w, h_o) = (p.win_w(), p.h_out());
+    let i_w = n;
+    let i_h = p.w_in * n;
+    let i_c = p.h_in * i_h;
+    let o_w = n;
+    let o_h = k_w * hf * n;
+    let o_c = h_o * o_h;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::current().parallel_for_coalesced(ci, h_o, |c, m| {
+        let src_c = c * i_c;
+        let dst_m = c * o_c + m * o_h;
+        for k in 0..k_w {
+            let col = src_col(p, k);
+            for u in 0..hf {
+                let dst = dst_m + (k * hf + u) * o_w;
+                // SAFETY: disjoint (c, m) rows per thread; in bounds.
+                unsafe {
+                    match (src_row(p, m, u), col) {
+                        (Some(r), Some(cc)) => std::ptr::copy_nonoverlapping(
+                            x.as_ptr().add(src_c + r * i_h + cc * i_w),
+                            optr.at(dst),
+                            n,
+                        ),
+                        _ => std::ptr::write_bytes(optr.at(dst), 0, n),
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// CHWN8: per batch block, copy rows of 8 lanes.
 fn chwn8(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    if !default_window(p) {
+        return chwn8_general(input, p, out);
+    }
     const B: usize = CHWN8_BLOCK;
     let (ci, hf, sh) = (p.c_in, p.h_f, p.stride_h);
     let (wi, h_o) = (p.w_in, p.h_out());
@@ -199,6 +361,46 @@ fn chwn8(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
     });
 }
 
+/// CHWN8 with padding/dilation: 8-lane chunk copies over the virtual
+/// window columns, zero-filling border chunks.
+fn chwn8_general(input: &Tensor4, p: &ConvParams, out: &mut Tensor4) {
+    const B: usize = CHWN8_BLOCK;
+    let (ci, hf) = (p.c_in, p.h_f);
+    let (k_w, h_o) = (p.win_w(), p.h_out());
+    let nb = p.n.div_ceil(B);
+    let i_h = p.w_in * B;
+    let i_c = p.h_in * i_h;
+    let i_nb = ci * i_c;
+    let o_h = k_w * hf * B;
+    let o_c = h_o * o_h;
+    let o_nb = ci * o_c;
+    let x = input.data();
+    let optr = SharedMut::new(out.as_mut_ptr());
+    parallel::current().parallel_for_coalesced(nb, h_o, |b, m| {
+        for c in 0..ci {
+            let src_c = b * i_nb + c * i_c;
+            let dst_m = b * o_nb + c * o_c + m * o_h;
+            for k in 0..k_w {
+                let col = src_col(p, k);
+                for u in 0..hf {
+                    let dst = dst_m + (k * hf + u) * B;
+                    // SAFETY: disjoint (b, m) rows per thread; in bounds.
+                    unsafe {
+                        match (src_row(p, m, u), col) {
+                            (Some(r), Some(cc)) => std::ptr::copy_nonoverlapping(
+                                x.as_ptr().add(src_c + r * i_h + cc * B),
+                                optr.at(dst),
+                                B,
+                            ),
+                            _ => std::ptr::write_bytes(optr.at(dst), 0, B),
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,7 +409,7 @@ mod tests {
     /// `Î(n, c, m, k·H_f + u) == I(n, c, m·s_h + u, k)`.
     #[test]
     fn transform_equation_holds_all_layouts() {
-        let p = ConvParams::with_strides(9, 3, 8, 6, 4, 3, 2, 2, 1).unwrap();
+        let p = ConvParams::builder().batch(9).channels(3, 4).input(8, 6).filter(3, 2).stride_hw(2, 1).build().unwrap();
         for layout in Layout::ALL {
             let input = Tensor4::random(p.input_dims(), layout, 11);
             let t = im2win_transform(&input, &p);
@@ -235,7 +437,7 @@ mod tests {
     /// dimension and equals the direct window elements.
     #[test]
     fn window_slices_are_contiguous() {
-        let p = ConvParams::new(1, 1, 6, 6, 1, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(1, 1).input(6, 6).filter(3, 3).stride(1).build().unwrap();
         let input = Tensor4::random(p.input_dims(), Layout::Nchw, 3);
         let t = im2win_transform(&input, &p);
         let hf = p.h_f;
@@ -251,10 +453,92 @@ mod tests {
         }
     }
 
+    /// The generalized defining equation on every layout: window column
+    /// `k`/filter row `u` hold the padded/dilated source element, zero in
+    /// the border — with stale (poisoned) destination storage.
+    #[test]
+    fn generalized_transform_equation_holds_all_layouts() {
+        let cases = [
+            // padded
+            ConvParams::builder().batch(9).channels(3, 4).input(6, 5).filter(3, 3).pad(1).build(),
+            // dilated (unshared columns)
+            ConvParams::builder().batch(2).channels(2, 2).input(9, 9).filter(3, 3).dilation(2).build(),
+            // padded + dilated + strided + rectangular
+            ConvParams::builder()
+                .batch(3)
+                .channels(2, 2)
+                .input(8, 7)
+                .filter(3, 2)
+                .stride_hw(2, 1)
+                .pad_hw(2, 1)
+                .dilation_hw(1, 2)
+                .build(),
+        ];
+        for p in cases {
+            let p = p.unwrap();
+            for layout in Layout::ALL {
+                let input = Tensor4::random(p.input_dims(), layout, 23);
+                let mut t = Tensor4::from_fn(im2win_dims(&p), layout, |_, _, _, _| f32::NAN);
+                im2win_transform_into(&input, &p, &mut t);
+                for n in 0..p.n {
+                    for c in 0..p.c_in {
+                        for m in 0..p.h_out() {
+                            for k in 0..p.win_w() {
+                                for u in 0..p.h_f {
+                                    let expect = match (src_row(&p, m, u), src_col(&p, k)) {
+                                        (Some(r), Some(cc)) => input.get(n, c, r, cc),
+                                        _ => 0.0,
+                                    };
+                                    assert_eq!(
+                                        t.get(n, c, m, k * p.h_f + u),
+                                        expect,
+                                        "{p} {layout} n={n} c={c} m={m} k={k} u={u}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The generalized window of output column `w_o` is still one
+    /// contiguous flattened span of `W_f·H_f` starting at
+    /// `w_o·win_col_step·H_f`.
+    #[test]
+    fn generalized_window_slices_are_contiguous() {
+        let p = ConvParams::builder()
+            .channels(1, 1)
+            .input(7, 7)
+            .filter(3, 3)
+            .pad(1)
+            .dilation(2)
+            .build()
+            .unwrap();
+        let input = Tensor4::random(p.input_dims(), Layout::Nchw, 5);
+        let t = im2win_transform(&input, &p);
+        let hf = p.h_f;
+        for m in 0..p.h_out() {
+            for wo in 0..p.w_out() {
+                for v in 0..p.w_f {
+                    for u in 0..hf {
+                        let k = wo * p.win_col_step() + v;
+                        let expect = match (src_row(&p, m, u), src_col(&p, k)) {
+                            (Some(r), Some(cc)) => input.get(0, 0, r, cc),
+                            _ => 0.0,
+                        };
+                        assert_eq!(t.get(0, 0, m, k * hf + u), expect);
+                    }
+                }
+            }
+        }
+    }
+
     /// Memory ratio vs input ≈ H_f for stride 1 (paper's memory argument).
     #[test]
     fn size_grows_by_filter_height() {
-        let p = ConvParams::new(1, 16, 32, 32, 16, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(16, 16).input(32, 32).filter(3, 3).stride(1).build().unwrap();
         let d = im2win_dims(&p);
         let ratio = d.count() as f64 / p.input_dims().count() as f64;
         assert!(ratio < p.h_f as f64, "ratio={ratio}");
@@ -264,7 +548,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "input dims")]
     fn wrong_dims_panics() {
-        let p = ConvParams::new(1, 1, 5, 5, 1, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(1, 1).input(5, 5).filter(3, 3).stride(1).build().unwrap();
         let bad = Tensor4::zeros(Dims::new(1, 1, 4, 5), Layout::Nchw);
         im2win_transform(&bad, &p);
     }

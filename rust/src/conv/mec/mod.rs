@@ -47,29 +47,67 @@ impl MecConv {
 }
 
 /// Number of f32 elements in the MEC lowered matrix for problem `p`.
+/// Generalized geometry widens the slab to [`ConvParams::mec_rows`]
+/// virtual rows (the zero-padded height, or per-output unshared rows when
+/// the height is dilated); grouped problems lower one group at a time.
 pub fn mec_matrix_len(p: &ConvParams) -> usize {
-    p.n * p.w_out() * p.h_in * p.w_f * p.c_in
+    p.n * p.w_out() * p.mec_rows() * p.w_f * p.group_c_in()
 }
 
-/// Build the MEC lowering `L[n][w_o][h_i][v·C_i + c]` into `mat`
-/// (`mec_matrix_len(p)` floats, fully overwritten).
+/// Build the MEC lowering `L[n][w_o][r][v·C_i + c]` into `mat`
+/// (`mec_matrix_len(p)` floats, fully overwritten). Slab row `r` is the
+/// padded input row `r` when the height is undilated (rows shared between
+/// vertically overlapping windows, the MEC compression); under height
+/// dilation rows are unshared: `r = h_o·H_f + u` reads input row
+/// `h_o·s_h + u·d_h − pad_h`. Border taps are zero-filled.
 fn lower(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
-    let (ci, hi, wo) = (p.c_in, p.h_in, p.w_out());
+    let (ci, wo) = (p.c_in, p.w_out());
+    let rows = p.mec_rows();
     let chunk = p.w_f * ci;
     let i_h = p.w_in * ci;
-    let img = hi * i_h;
+    let img = p.h_in * i_h;
     let x = input.data();
     debug_assert_eq!(mat.len(), mec_matrix_len(p));
-    let slab = hi * chunk;
+    let slab = rows * chunk;
+    let dense_w = p.pad_w == 0 && p.dilation_w == 1;
     for n in 0..p.n {
         let xn = &x[n * img..(n + 1) * img];
         let mn = &mut mat[n * wo * slab..(n + 1) * wo * slab];
         for w in 0..wo {
             let dst = &mut mn[w * slab..(w + 1) * slab];
-            for h in 0..hi {
-                // One contiguous copy of W_f·C_i floats per input row.
-                let src = h * i_h + w * p.stride_w * ci;
-                dst[h * chunk..(h + 1) * chunk].copy_from_slice(&xn[src..src + chunk]);
+            for r in 0..rows {
+                let hi = if p.dilation_h == 1 {
+                    r.checked_sub(p.pad_h).filter(|&h| h < p.h_in)
+                } else {
+                    ((r / p.h_f) * p.stride_h + (r % p.h_f) * p.dilation_h)
+                        .checked_sub(p.pad_h)
+                        .filter(|&h| h < p.h_in)
+                };
+                let drow = &mut dst[r * chunk..(r + 1) * chunk];
+                match hi {
+                    None => drow.fill(0.0),
+                    Some(h) if dense_w => {
+                        // One contiguous copy of W_f·C_i floats per row.
+                        let src = h * i_h + w * p.stride_w * ci;
+                        drow.copy_from_slice(&xn[src..src + chunk]);
+                    }
+                    Some(h) => {
+                        // Padded/dilated width: per-tap C_i chunks.
+                        for v in 0..p.w_f {
+                            let d = v * ci;
+                            let wi = (w * p.stride_w + v * p.dilation_w)
+                                .checked_sub(p.pad_w)
+                                .filter(|&ww| ww < p.w_in);
+                            match wi {
+                                Some(ww) => {
+                                    let s = h * i_h + ww * ci;
+                                    drow[d..d + ci].copy_from_slice(&xn[s..s + ci]);
+                                }
+                                None => drow[d..d + ci].fill(0.0),
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -96,15 +134,16 @@ fn gemm_rows(mat: &[f32], ft: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epi
     let (h_o, w_o, co) = (p.h_out(), p.w_out(), p.c_out);
     let k = p.h_f * p.w_f * p.c_in;
     let chunk = p.w_f * p.c_in;
-    let slab = p.h_in * chunk;
+    let slab = p.mec_rows() * chunk;
     let o_h = w_o * co;
     let o_n = h_o * o_h;
     let ge = gemm_ep(ep, false);
     for n in 0..p.n {
         let mslab = &mat[n * w_o * slab..(n + 1) * w_o * slab];
         for ho in 0..h_o {
-            // A = rows [Wo][K] at vertical offset ho·s_h, lda = slab.
-            let a = &mslab[ho * p.stride_h * chunk..];
+            // A = rows [Wo][K] at vertical slab offset ho·mec_row_step
+            // (s_h when rows are shared, H_f when dilated), lda = slab.
+            let a = &mslab[ho * p.mec_row_step() * chunk..];
             sgemm_fused(
                 w_o,
                 co,
@@ -157,6 +196,9 @@ impl ConvAlgorithm for MecConv {
                 "MEC convolution requires the NHWC layout".into(),
             ));
         }
+        if p.groups > 1 {
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, Epilogue::None);
+        }
         let mut mat = ws.take("mec.mat", mec_matrix_len(p));
         lower(input, p, &mut mat);
         // F̂[K][C_o] from the NHWC filter [C_o][K] — packed per call on
@@ -191,6 +233,11 @@ impl ConvAlgorithm for MecConv {
             owned = filter.to_layout(layout);
             &owned
         };
+        if p.groups > 1 {
+            // Grouped runs re-slice the filter per group: store the tensor.
+            super::note_filter_pack();
+            return Ok(PackedFilter::from_tensor(self.name(), f.clone()));
+        }
         let mut buf = AlignedBuf::zeroed(p.h_f * p.w_f * p.c_in * p.c_out);
         pack_filter_t(f, p, &mut buf);
         Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
@@ -212,6 +259,12 @@ impl ConvAlgorithm for MecConv {
             return Err(Error::UnsupportedLayout(
                 "MEC convolution requires the NHWC layout".into(),
             ));
+        }
+        if p.groups > 1 {
+            let filter = packed.tensor().ok_or_else(|| {
+                Error::Config("grouped mec pack does not hold a filter tensor".into())
+            })?;
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
         }
         let ft = packed
             .buf()
@@ -248,7 +301,7 @@ mod tests {
 
     #[test]
     fn rejects_non_nhwc() {
-        let p = ConvParams::new(1, 2, 5, 5, 2, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(2, 2).input(5, 5).filter(3, 3).stride(1).build().unwrap();
         let x = Tensor4::zeros(p.input_dims(), Layout::Nchw);
         let f = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
         assert!(MecConv::new().run(&x, &f, &p).is_err());
@@ -263,7 +316,7 @@ mod tests {
         use crate::conv::im2win::im2win_dims;
         // Rectangular filter: im2win stacks along H (×H_f=3), MEC lowers
         // along W (×W_f=7). A square case makes them equal by symmetry.
-        let p = ConvParams::with_strides(2, 8, 40, 24, 8, 3, 7, 1, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(8, 8).input(40, 24).filter(3, 7).stride(1).build().unwrap();
         let mec = mec_matrix_len(&p);
         let win = im2win_dims(&p).count();
         let col = p.n * p.h_out() * p.w_out() * p.h_f * p.w_f * p.c_in;
@@ -273,7 +326,7 @@ mod tests {
 
     #[test]
     fn strided_geometry() {
-        let p = ConvParams::with_strides(3, 4, 13, 11, 5, 3, 2, 2, 3).unwrap();
+        let p = ConvParams::builder().batch(3).channels(4, 5).input(13, 11).filter(3, 2).stride_hw(2, 3).build().unwrap();
         let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 9);
         let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 10);
         let expect = reference_conv(&input, &filter, &p, Layout::Nhwc);
@@ -283,7 +336,7 @@ mod tests {
 
     #[test]
     fn prepacked_matches_per_call_path() {
-        let p = ConvParams::with_strides(3, 4, 11, 9, 5, 3, 2, 2, 1).unwrap();
+        let p = ConvParams::builder().batch(3).channels(4, 5).input(11, 9).filter(3, 2).stride_hw(2, 1).build().unwrap();
         let algo = MecConv::new();
         let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 55);
         let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 56);

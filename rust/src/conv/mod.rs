@@ -22,8 +22,10 @@
 //! at the store site; only the naive oracle uses the unfused default.
 //! See `docs/ARCHITECTURE.md` for where this sits on the request path.
 
+pub mod depthwise;
 pub mod direct;
 mod epilogue;
+mod grouped;
 pub mod im2col;
 pub mod im2win;
 pub mod mec;
@@ -32,7 +34,7 @@ mod params;
 
 pub use epilogue::Epilogue;
 pub use naive::reference_conv;
-pub use params::ConvParams;
+pub use params::{ConvParams, ConvParamsBuilder};
 
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
@@ -350,6 +352,9 @@ pub enum AlgoKind {
     /// MEC (Cho & Brand 2017): width-only lowering + per-row GEMMs
     /// (NHWC only) — the memory-efficient baseline of the paper's §II-C.
     Mec,
+    /// Dedicated depthwise kernels (`groups == C_in == C_out`); NHWC and
+    /// CHWN8 only. The planner offers it only for depthwise geometry.
+    Depthwise,
     /// Unoptimized seven-loop reference (tests, ablations).
     Naive,
 }
@@ -361,12 +366,14 @@ impl AlgoKind {
     /// use [`AlgoKind::ALL`] to enumerate every implemented algorithm.
     pub const BENCHED: [AlgoKind; 3] = [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col];
 
-    /// Every implemented algorithm, including the oracle and MEC.
-    pub const ALL: [AlgoKind; 5] = [
+    /// Every implemented algorithm, including the oracle, MEC and the
+    /// depthwise specialist.
+    pub const ALL: [AlgoKind; 6] = [
         AlgoKind::Direct,
         AlgoKind::Im2win,
         AlgoKind::Im2col,
         AlgoKind::Mec,
+        AlgoKind::Depthwise,
         AlgoKind::Naive,
     ];
 
@@ -377,6 +384,7 @@ impl AlgoKind {
             "im2win" => Some(AlgoKind::Im2win),
             "im2col" => Some(AlgoKind::Im2col),
             "mec" => Some(AlgoKind::Mec),
+            "depthwise" => Some(AlgoKind::Depthwise),
             "naive" => Some(AlgoKind::Naive),
             _ => None,
         }
@@ -389,6 +397,7 @@ impl AlgoKind {
             AlgoKind::Im2win => Box::new(im2win::Im2winConv::new()),
             AlgoKind::Im2col => Box::new(im2col::Im2colConv::new()),
             AlgoKind::Mec => Box::new(mec::MecConv::new()),
+            AlgoKind::Depthwise => Box::new(depthwise::DepthwiseConv::new()),
             AlgoKind::Naive => Box::new(naive::NaiveConv),
         }
     }
@@ -412,6 +421,7 @@ impl AlgoKind {
             AlgoKind::Im2win => "im2win",
             AlgoKind::Im2col => "im2col",
             AlgoKind::Mec => "mec",
+            AlgoKind::Depthwise => "depthwise",
             AlgoKind::Naive => "naive",
         }
     }
@@ -566,7 +576,7 @@ mod tests {
 
     #[test]
     fn conv2d_reconfigure_preserves_results() {
-        let p = ConvParams::new(2, 3, 8, 8, 4, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(3, 4).input(8, 8).filter(3, 3).stride(1).build().unwrap();
         let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 1);
         let x = Tensor4::random(p.input_dims(), Layout::Nchw, 2);
         let mut layer = Conv2d::new(p, AlgoKind::Naive, Layout::Nchw, &filter).unwrap();
@@ -596,7 +606,7 @@ mod tests {
 
     #[test]
     fn check_geometry_catches_mismatches() {
-        let p = ConvParams::new(1, 2, 4, 4, 3, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(2, 3).input(4, 4).filter(3, 3).stride(1).build().unwrap();
         let input = Tensor4::zeros(p.input_dims(), Layout::Nchw);
         let filter = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
         let out = Tensor4::zeros(p.output_dims(), Layout::Nchw);
@@ -611,7 +621,7 @@ mod tests {
 
     #[test]
     fn conv2d_forward_any_input_layout() {
-        let p = ConvParams::new(2, 3, 6, 6, 4, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(3, 4).input(6, 6).filter(3, 3).stride(1).build().unwrap();
         let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 1);
         let layer = Conv2d::new(p, AlgoKind::Naive, Layout::Nhwc, &filter).unwrap();
         let x_nchw = Tensor4::random(p.input_dims(), Layout::Nchw, 2);

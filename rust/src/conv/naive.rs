@@ -20,15 +20,29 @@ pub fn reference_conv(
     let mut out = Tensor4::zeros(p.output_dims(), layout);
     let x = if input.layout() == layout { input.clone() } else { input.to_layout(layout) };
     let (h_o, w_o) = (p.h_out(), p.w_out());
+    let gci = p.group_c_in();
+    let gco = p.group_c_out();
     for n in 0..p.n {
         for co in 0..p.c_out {
+            let group = co / gco;
             for ho in 0..h_o {
                 for wo in 0..w_o {
                     let mut acc = 0.0f32;
-                    for ci in 0..p.c_in {
+                    for ci in 0..gci {
                         for u in 0..p.h_f {
                             for v in 0..p.w_f {
-                                acc += x.get(n, ci, ho * p.stride_h + u, wo * p.stride_w + v)
+                                // Padded coordinates: out-of-range taps
+                                // read the implicit zero border.
+                                let hi = ho * p.stride_h + u * p.dilation_h;
+                                let wi = wo * p.stride_w + v * p.dilation_w;
+                                if hi < p.pad_h || wi < p.pad_w {
+                                    continue;
+                                }
+                                let (hi, wi) = (hi - p.pad_h, wi - p.pad_w);
+                                if hi >= p.h_in || wi >= p.w_in {
+                                    continue;
+                                }
+                                acc += x.get(n, group * gci + ci, hi, wi)
                                     * filter.get(co, ci, u, v);
                             }
                         }
@@ -76,7 +90,7 @@ mod tests {
     /// Hand-computed 1x1x3x3 ⊛ 1x1x2x2 case.
     #[test]
     fn tiny_known_answer() {
-        let p = ConvParams::new(1, 1, 3, 3, 1, 2, 2, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(1, 1).input(3, 3).filter(2, 2).stride(1).build().unwrap();
         let input = Tensor4::from_logical(
             p.input_dims(),
             Layout::Nchw,
@@ -91,7 +105,7 @@ mod tests {
     /// Multi-channel accumulation: all-ones tensors count window elements.
     #[test]
     fn ones_count_macs() {
-        let p = ConvParams::new(2, 3, 5, 4, 2, 2, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(3, 2).input(5, 4).filter(2, 3).stride(1).build().unwrap();
         let input = Tensor4::from_fn(p.input_dims(), Layout::Nhwc, |_, _, _, _| 1.0);
         let filter = Tensor4::from_fn(p.filter_dims(), Layout::Nhwc, |_, _, _, _| 1.0);
         let out = reference_conv(&input, &filter, &p, Layout::Nhwc);
@@ -103,7 +117,7 @@ mod tests {
     /// Result is independent of the computation layout.
     #[test]
     fn layout_invariance() {
-        let p = ConvParams::new(3, 2, 6, 5, 4, 3, 2, 2).unwrap();
+        let p = ConvParams::builder().batch(3).channels(2, 4).input(6, 5).filter(3, 2).stride(2).build().unwrap();
         let input = Tensor4::random(p.input_dims(), Layout::Nchw, 9);
         let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 10);
         let base = reference_conv(&input, &filter, &p, Layout::Nchw);
@@ -115,10 +129,51 @@ mod tests {
         }
     }
 
+    /// Zero padding reads the implicit border: a 3x3 all-ones filter over
+    /// a padded 2x2 input sums the whole input at every output site.
+    #[test]
+    fn padded_known_answer() {
+        let p = ConvParams::builder().channels(1, 1).input(2, 2).filter(3, 3).pad(1).build().unwrap();
+        assert_eq!((p.h_out(), p.w_out()), (2, 2));
+        let input = Tensor4::from_logical(p.input_dims(), Layout::Nchw, &[1., 2., 3., 4.]);
+        let filter = Tensor4::from_fn(p.filter_dims(), Layout::Nchw, |_, _, _, _| 1.0);
+        let out = reference_conv(&input, &filter, &p, Layout::Nchw);
+        assert_eq!(out.logical_vec(), vec![10., 10., 10., 10.]);
+    }
+
+    /// Dilation-2 taps skip every other element.
+    #[test]
+    fn dilated_known_answer() {
+        let p = ConvParams::builder().channels(1, 1).input(3, 3).filter(2, 2).dilation(2).build().unwrap();
+        assert_eq!((p.h_out(), p.w_out()), (1, 1));
+        let input = Tensor4::from_logical(
+            p.input_dims(),
+            Layout::Nchw,
+            &[1., 2., 3., 4., 5., 6., 7., 8., 9.],
+        );
+        let filter = Tensor4::from_fn(p.filter_dims(), Layout::Nchw, |_, _, _, _| 1.0);
+        let out = reference_conv(&input, &filter, &p, Layout::Nchw);
+        // taps at (0,0),(0,2),(2,0),(2,2): 1+3+7+9
+        assert_eq!(out.logical_vec(), vec![20.]);
+    }
+
+    /// Groups route each output channel to its own input slice.
+    #[test]
+    fn grouped_known_answer() {
+        let p = ConvParams::builder().channels(2, 2).input(2, 2).filter(1, 1).groups(2).build().unwrap();
+        let input = Tensor4::from_fn(p.input_dims(), Layout::Nchw, |_, c, _, _| (c + 1) as f32);
+        // filter_dims = (2, 1, 1, 1): out channel 0 scales by 10, 1 by 100.
+        let filter = Tensor4::from_logical(p.filter_dims(), Layout::Nchw, &[10., 100.]);
+        let out = reference_conv(&input, &filter, &p, Layout::Nchw);
+        // channel 0 sees input channel 0 (=1) only; channel 1 sees input
+        // channel 1 (=2) only.
+        assert_eq!(out.logical_vec(), vec![10., 10., 10., 10., 200., 200., 200., 200.]);
+    }
+
     /// Stride-2 geometry picks the right window origins.
     #[test]
     fn stride_two() {
-        let p = ConvParams::new(1, 1, 5, 5, 1, 1, 1, 2).unwrap();
+        let p = ConvParams::builder().batch(1).channels(1, 1).input(5, 5).filter(1, 1).stride(2).build().unwrap();
         let input =
             Tensor4::from_fn(p.input_dims(), Layout::Nchw, |_, _, h, w| (h * 5 + w) as f32);
         let filter = Tensor4::from_logical(p.filter_dims(), Layout::Nchw, &[1.0]);

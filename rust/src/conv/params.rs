@@ -3,11 +3,17 @@
 use crate::error::{Error, Result};
 use crate::tensor::Dims;
 
-/// Geometry of a 2-D convolution (paper §II-A).
+/// Geometry of a 2-D convolution (paper §II-A), generalized beyond the
+/// paper's Table I family.
 ///
 /// The paper's benchmark suite uses *valid* (unpadded) convolutions with
-/// square filters and equal strides; this type supports rectangular filters
-/// and per-axis strides, with no padding — matching the paper's Table I.
+/// square filters, equal strides, dilation 1 and a single group; this type
+/// additionally supports zero padding, dilated filters and grouped /
+/// depthwise convolution, so MobileNet-class models plan and serve through
+/// the same engine as the Table I suite.
+///
+/// Construct via [`ConvParams::builder`]; the positional constructors are
+/// deprecated thin wrappers kept for downstream source compatibility.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvParams {
     /// Batch size `N_i`.
@@ -28,10 +34,155 @@ pub struct ConvParams {
     pub stride_h: usize,
     /// Horizontal stride `s_w`.
     pub stride_w: usize,
+    /// Vertical zero padding `p_h` (rows added above *and* below).
+    pub pad_h: usize,
+    /// Horizontal zero padding `p_w` (columns added left *and* right).
+    pub pad_w: usize,
+    /// Vertical dilation `d_h` (1 = dense filter).
+    pub dilation_h: usize,
+    /// Horizontal dilation `d_w` (1 = dense filter).
+    pub dilation_w: usize,
+    /// Channel groups `g`: input channels are split into `g` groups of
+    /// `C_i/g`, each convolved with `C_o/g` filters of depth `C_i/g`.
+    /// `g == C_i == C_o` is depthwise.
+    pub groups: usize,
+}
+
+/// Fluent builder for [`ConvParams`] — the one construction path.
+///
+/// Defaults: batch 1, stride 1, padding 0, dilation 1, groups 1. Channels,
+/// input and filter extents have no default and must be set (the zero
+/// placeholders fail validation in [`ConvParamsBuilder::build`]).
+///
+/// ```
+/// use im2win::conv::ConvParams;
+/// let p = ConvParams::builder()
+///     .batch(8)
+///     .channels(32, 32)
+///     .input(28, 28)
+///     .filter(3, 3)
+///     .stride(1)
+///     .pad(1)
+///     .groups(32) // depthwise
+///     .build()
+///     .unwrap();
+/// assert_eq!((p.h_out(), p.w_out()), (28, 28));
+/// assert!(p.is_depthwise());
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct ConvParamsBuilder {
+    p: ConvParams,
+}
+
+impl Default for ConvParamsBuilder {
+    fn default() -> Self {
+        ConvParamsBuilder {
+            p: ConvParams {
+                n: 1,
+                c_in: 0,
+                h_in: 0,
+                w_in: 0,
+                c_out: 0,
+                h_f: 0,
+                w_f: 0,
+                stride_h: 1,
+                stride_w: 1,
+                pad_h: 0,
+                pad_w: 0,
+                dilation_h: 1,
+                dilation_w: 1,
+                groups: 1,
+            },
+        }
+    }
+}
+
+impl ConvParamsBuilder {
+    /// Batch size `N_i` (default 1).
+    pub fn batch(mut self, n: usize) -> Self {
+        self.p.n = n;
+        self
+    }
+
+    /// Input and output channel counts `(C_i, C_o)`.
+    pub fn channels(mut self, c_in: usize, c_out: usize) -> Self {
+        self.p.c_in = c_in;
+        self.p.c_out = c_out;
+        self
+    }
+
+    /// Input spatial extent `(H_i, W_i)`.
+    pub fn input(mut self, h: usize, w: usize) -> Self {
+        self.p.h_in = h;
+        self.p.w_in = w;
+        self
+    }
+
+    /// Filter spatial extent `(H_f, W_f)`.
+    pub fn filter(mut self, h: usize, w: usize) -> Self {
+        self.p.h_f = h;
+        self.p.w_f = w;
+        self
+    }
+
+    /// Equal stride on both axes (default 1).
+    pub fn stride(self, s: usize) -> Self {
+        self.stride_hw(s, s)
+    }
+
+    /// Per-axis strides `(s_h, s_w)`.
+    pub fn stride_hw(mut self, s_h: usize, s_w: usize) -> Self {
+        self.p.stride_h = s_h;
+        self.p.stride_w = s_w;
+        self
+    }
+
+    /// Equal zero padding on both axes (default 0).
+    pub fn pad(self, p: usize) -> Self {
+        self.pad_hw(p, p)
+    }
+
+    /// Per-axis zero padding `(p_h, p_w)`.
+    pub fn pad_hw(mut self, p_h: usize, p_w: usize) -> Self {
+        self.p.pad_h = p_h;
+        self.p.pad_w = p_w;
+        self
+    }
+
+    /// Equal dilation on both axes (default 1).
+    pub fn dilation(self, d: usize) -> Self {
+        self.dilation_hw(d, d)
+    }
+
+    /// Per-axis dilation `(d_h, d_w)`.
+    pub fn dilation_hw(mut self, d_h: usize, d_w: usize) -> Self {
+        self.p.dilation_h = d_h;
+        self.p.dilation_w = d_w;
+        self
+    }
+
+    /// Channel group count (default 1; `groups == c_in == c_out` is
+    /// depthwise).
+    pub fn groups(mut self, g: usize) -> Self {
+        self.p.groups = g;
+        self
+    }
+
+    /// Validate and produce the geometry.
+    pub fn build(self) -> Result<ConvParams> {
+        self.p.validate()?;
+        Ok(self.p)
+    }
 }
 
 impl ConvParams {
+    /// Start a [`ConvParamsBuilder`] (the canonical construction path).
+    pub fn builder() -> ConvParamsBuilder {
+        ConvParamsBuilder::default()
+    }
+
     /// Square-filter, equal-stride constructor (all of Table I).
+    #[deprecated(note = "use ConvParams::builder()")]
     pub fn new(
         n: usize,
         c_in: usize,
@@ -42,10 +193,17 @@ impl ConvParams {
         w_f: usize,
         stride: usize,
     ) -> Result<Self> {
-        Self::with_strides(n, c_in, h_in, w_in, c_out, h_f, w_f, stride, stride)
+        Self::builder()
+            .batch(n)
+            .channels(c_in, c_out)
+            .input(h_in, w_in)
+            .filter(h_f, w_f)
+            .stride(stride)
+            .build()
     }
 
-    /// Full constructor with independent strides.
+    /// Positional constructor with independent strides.
+    #[deprecated(note = "use ConvParams::builder()")]
     #[allow(clippy::too_many_arguments)]
     pub fn with_strides(
         n: usize,
@@ -58,9 +216,13 @@ impl ConvParams {
         stride_h: usize,
         stride_w: usize,
     ) -> Result<Self> {
-        let p = ConvParams { n, c_in, h_in, w_in, c_out, h_f, w_f, stride_h, stride_w };
-        p.validate()?;
-        Ok(p)
+        Self::builder()
+            .batch(n)
+            .channels(c_in, c_out)
+            .input(h_in, w_in)
+            .filter(h_f, w_f)
+            .stride_hw(stride_h, stride_w)
+            .build()
     }
 
     fn validate(&self) -> Result<()> {
@@ -73,25 +235,136 @@ impl ConvParams {
         if self.h_f == 0 || self.w_f == 0 {
             return Err(Error::InvalidConv("zero-sized filter".into()));
         }
-        if self.h_f > self.h_in || self.w_f > self.w_in {
+        if self.dilation_h == 0 || self.dilation_w == 0 {
+            return Err(Error::InvalidConv("dilation must be >= 1".into()));
+        }
+        if self.groups == 0 {
+            return Err(Error::InvalidConv("groups must be >= 1".into()));
+        }
+        if self.c_in % self.groups != 0 || self.c_out % self.groups != 0 {
             return Err(Error::InvalidConv(format!(
-                "filter {}x{} larger than input {}x{}",
-                self.h_f, self.w_f, self.h_in, self.w_in
+                "groups {} must divide both c_in {} and c_out {}",
+                self.groups, self.c_in, self.c_out
+            )));
+        }
+        if self.eff_h_f() > self.h_in + 2 * self.pad_h
+            || self.eff_w_f() > self.w_in + 2 * self.pad_w
+        {
+            return Err(Error::InvalidConv(format!(
+                "effective filter {}x{} larger than padded input {}x{}",
+                self.eff_h_f(),
+                self.eff_w_f(),
+                self.h_in + 2 * self.pad_h,
+                self.w_in + 2 * self.pad_w
             )));
         }
         Ok(())
     }
 
-    /// Output height `H_o = (H_i − H_f)/s_h + 1`.
+    /// Effective (dilated) filter height `(H_f − 1)·d_h + 1`.
     #[inline]
-    pub fn h_out(&self) -> usize {
-        (self.h_in - self.h_f) / self.stride_h + 1
+    pub fn eff_h_f(&self) -> usize {
+        (self.h_f - 1) * self.dilation_h + 1
     }
 
-    /// Output width `W_o = (W_i − W_f)/s_w + 1`.
+    /// Effective (dilated) filter width `(W_f − 1)·d_w + 1`.
+    #[inline]
+    pub fn eff_w_f(&self) -> usize {
+        (self.w_f - 1) * self.dilation_w + 1
+    }
+
+    /// Output height `H_o = (H_i + 2p_h − ((H_f−1)d_h + 1))/s_h + 1`.
+    #[inline]
+    pub fn h_out(&self) -> usize {
+        (self.h_in + 2 * self.pad_h - self.eff_h_f()) / self.stride_h + 1
+    }
+
+    /// Output width `W_o = (W_i + 2p_w − ((W_f−1)d_w + 1))/s_w + 1`.
     #[inline]
     pub fn w_out(&self) -> usize {
-        (self.w_in - self.w_f) / self.stride_w + 1
+        (self.w_in + 2 * self.pad_w - self.eff_w_f()) / self.stride_w + 1
+    }
+
+    /// True for the paper's original geometry family: no padding, dense
+    /// filters, one group. Everything the seed library supported.
+    #[inline]
+    pub fn has_default_geometry(&self) -> bool {
+        self.pad_h == 0
+            && self.pad_w == 0
+            && self.dilation_h == 1
+            && self.dilation_w == 1
+            && self.groups == 1
+    }
+
+    /// True when every channel convolves independently
+    /// (`groups == C_i == C_o`, more than one group).
+    #[inline]
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.c_in && self.groups == self.c_out
+    }
+
+    /// Per-group input channel count `C_i / g` — the filter's depth.
+    #[inline]
+    pub fn group_c_in(&self) -> usize {
+        self.c_in / self.groups
+    }
+
+    /// Per-group output channel count `C_o / g`.
+    #[inline]
+    pub fn group_c_out(&self) -> usize {
+        self.c_out / self.groups
+    }
+
+    /// Width (column count) of the im2win window tensor's virtual row.
+    ///
+    /// Window column `k` maps to input column `k − p_w` when `d_w == 1`
+    /// (columns are *shared* between horizontally adjacent windows exactly
+    /// as in the paper, just over the padded width), and to
+    /// `(k/W_f)·s_w + (k%W_f)·d_w − p_w` when `d_w > 1` (a dilated gather
+    /// breaks column sharing, so each output column owns its `W_f`
+    /// columns). Out-of-range source columns are zero-filled.
+    #[inline]
+    pub fn win_w(&self) -> usize {
+        if self.dilation_w == 1 {
+            self.w_in + 2 * self.pad_w
+        } else {
+            self.w_out() * self.w_f
+        }
+    }
+
+    /// Column step between horizontally adjacent im2win windows (the
+    /// `s_w` of the kernels' pointer arithmetic): `s_w` while columns are
+    /// shared, `W_f` once dilation unshares them.
+    #[inline]
+    pub fn win_col_step(&self) -> usize {
+        if self.dilation_w == 1 {
+            self.stride_w
+        } else {
+            self.w_f
+        }
+    }
+
+    /// Row count of the MEC lowered slab's virtual height: the padded
+    /// input height while rows are shared (`d_h == 1`), `H_o·H_f`
+    /// unshared rows once vertical dilation breaks sharing.
+    #[inline]
+    pub fn mec_rows(&self) -> usize {
+        if self.dilation_h == 1 {
+            self.h_in + 2 * self.pad_h
+        } else {
+            self.h_out() * self.h_f
+        }
+    }
+
+    /// Row step between vertically adjacent MEC GEMM panels (`s_h` while
+    /// rows are shared, `H_f` once dilation unshares them).
+    #[inline]
+    pub fn mec_row_step(&self) -> usize {
+        if self.dilation_h == 1 {
+            self.stride_h
+        } else {
+            self.h_f
+        }
     }
 
     /// Logical dims of the input tensor `(N, C_i, H_i, W_i)`.
@@ -100,11 +373,12 @@ impl ConvParams {
         Dims::new(self.n, self.c_in, self.h_in, self.w_in)
     }
 
-    /// Logical dims of the filter tensor `(C_o, C_i, H_f, W_f)` — the
-    /// filter's "batch" axis is the output channel.
+    /// Logical dims of the filter tensor `(C_o, C_i/g, H_f, W_f)` — the
+    /// filter's "batch" axis is the output channel, and its depth is the
+    /// *per-group* input channel count.
     #[inline]
     pub fn filter_dims(&self) -> Dims {
-        Dims::new(self.c_out, self.c_in, self.h_f, self.w_f)
+        Dims::new(self.c_out, self.group_c_in(), self.h_f, self.w_f)
     }
 
     /// Logical dims of the output tensor `(N, C_o, H_o, W_o)`.
@@ -114,14 +388,15 @@ impl ConvParams {
     }
 
     /// Multiply–add FLOP count (2 ops per MAC), the numerator of the
-    /// paper's TFLOPS metric.
+    /// paper's TFLOPS metric. Grouping divides the per-output reduction
+    /// depth: each output channel only sees `C_i/g` input channels.
     #[inline]
     pub fn flops(&self) -> u64 {
         2 * self.n as u64
             * self.c_out as u64
             * self.h_out() as u64
             * self.w_out() as u64
-            * self.c_in as u64
+            * self.group_c_in() as u64
             * self.h_f as u64
             * self.w_f as u64
     }
@@ -148,7 +423,18 @@ impl std::fmt::Display for ConvParams {
             "N{} {}x{}x{} -> {} f{}x{} s{}/{}",
             self.n, self.c_in, self.h_in, self.w_in, self.c_out, self.h_f, self.w_f,
             self.stride_h, self.stride_w
-        )
+        )?;
+        // Generalized geometry is always spelled out so logs are
+        // unambiguous; the paper's default family prints exactly as it
+        // always has.
+        if !self.has_default_geometry() {
+            write!(
+                f,
+                " p{}/{} d{}/{} g{}",
+                self.pad_h, self.pad_w, self.dilation_h, self.dilation_w, self.groups
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -156,10 +442,21 @@ impl std::fmt::Display for ConvParams {
 mod tests {
     use super::*;
 
+    fn table1(n: usize, ci: usize, hw: usize, co: usize, f: usize, s: usize) -> ConvParams {
+        ConvParams::builder()
+            .batch(n)
+            .channels(ci, co)
+            .input(hw, hw)
+            .filter(f, f)
+            .stride(s)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn conv1_geometry_matches_table1() {
         // conv1: 3x227x227, 96 filters 11x11 stride 4 -> 96x55x55
-        let p = ConvParams::new(128, 3, 227, 227, 96, 11, 11, 4).unwrap();
+        let p = table1(128, 3, 227, 96, 11, 4);
         assert_eq!(p.h_out(), 55);
         assert_eq!(p.w_out(), 55);
         assert_eq!(p.output_dims(), Dims::new(128, 96, 55, 55));
@@ -168,28 +465,144 @@ mod tests {
     #[test]
     fn conv12_geometry_matches_table1() {
         // conv12: 512x7x7, 512 filters 3x3 stride 1 -> 512x5x5
-        let p = ConvParams::new(1, 512, 7, 7, 512, 3, 3, 1).unwrap();
+        let p = table1(1, 512, 7, 512, 3, 1);
         assert_eq!((p.h_out(), p.w_out()), (5, 5));
     }
 
     #[test]
     fn flops_formula() {
-        let p = ConvParams::new(2, 3, 5, 5, 4, 3, 3, 1).unwrap();
+        let p = table1(2, 3, 5, 4, 3, 1);
         // 2*N*Co*Ho*Wo*Ci*Hf*Wf = 2*2*4*3*3*3*3*3
         assert_eq!(p.flops(), 2 * 2 * 4 * 3 * 3 * 3 * 3 * 3);
     }
 
     #[test]
     fn invalid_geometries_rejected() {
-        assert!(ConvParams::new(0, 3, 5, 5, 4, 3, 3, 1).is_err());
-        assert!(ConvParams::new(1, 3, 5, 5, 4, 6, 3, 1).is_err()); // filter taller than input
-        assert!(ConvParams::new(1, 3, 5, 5, 4, 3, 3, 0).is_err()); // zero stride
-        assert!(ConvParams::new(1, 3, 5, 5, 4, 0, 3, 1).is_err()); // empty filter
+        let base = || ConvParams::builder().channels(3, 4).input(5, 5).filter(3, 3);
+        assert!(base().batch(0).build().is_err());
+        assert!(base().filter(6, 3).build().is_err()); // filter taller than input
+        assert!(base().stride(0).build().is_err());
+        assert!(base().filter(0, 3).build().is_err());
+        assert!(base().dilation(0).build().is_err());
+        assert!(base().groups(0).build().is_err());
+        // Unset channels / input / filter fail instead of panicking.
+        assert!(ConvParams::builder().build().is_err());
+        assert!(ConvParams::builder().channels(3, 4).filter(1, 1).build().is_err());
+    }
+
+    #[test]
+    fn deprecated_constructors_still_build() {
+        #[allow(deprecated)]
+        let a = ConvParams::new(2, 3, 5, 5, 4, 3, 3, 1).unwrap();
+        #[allow(deprecated)]
+        let b = ConvParams::with_strides(2, 3, 5, 5, 4, 3, 3, 1, 1).unwrap();
+        let c = table1(2, 3, 5, 4, 3, 1);
+        assert_eq!(a, c);
+        assert_eq!(b, c);
+        assert!(a.has_default_geometry());
+    }
+
+    #[test]
+    fn padded_geometry() {
+        // 3x3 'same' conv: 28x28 stays 28x28 under pad 1 stride 1.
+        let p = ConvParams::builder()
+            .channels(8, 8)
+            .input(28, 28)
+            .filter(3, 3)
+            .pad(1)
+            .build()
+            .unwrap();
+        assert_eq!((p.h_out(), p.w_out()), (28, 28));
+        assert!(!p.has_default_geometry());
+        // Padding lets the effective filter exceed the raw input.
+        assert!(ConvParams::builder()
+            .channels(1, 1)
+            .input(2, 2)
+            .filter(3, 3)
+            .pad(1)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn dilated_geometry() {
+        // 3x3 dilation 2 has effective extent 5.
+        let p = ConvParams::builder()
+            .channels(2, 2)
+            .input(9, 9)
+            .filter(3, 3)
+            .dilation(2)
+            .build()
+            .unwrap();
+        assert_eq!((p.eff_h_f(), p.eff_w_f()), (5, 5));
+        assert_eq!((p.h_out(), p.w_out()), (5, 5));
+        // Dilated windows stop sharing columns.
+        assert_eq!(p.win_w(), p.w_out() * p.w_f);
+        assert_eq!(p.win_col_step(), p.w_f);
+        assert_eq!(p.mec_rows(), p.h_out() * p.h_f);
+        assert_eq!(p.mec_row_step(), p.h_f);
+    }
+
+    #[test]
+    fn default_window_geometry_matches_paper() {
+        let p = table1(2, 3, 8, 4, 3, 2);
+        assert_eq!(p.win_w(), p.w_in);
+        assert_eq!(p.win_col_step(), p.stride_w);
+        assert_eq!(p.mec_rows(), p.h_in);
+        assert_eq!(p.mec_row_step(), p.stride_h);
+    }
+
+    #[test]
+    fn grouped_geometry() {
+        let p = ConvParams::builder()
+            .batch(2)
+            .channels(8, 12)
+            .input(6, 6)
+            .filter(3, 3)
+            .groups(4)
+            .build()
+            .unwrap();
+        assert_eq!(p.group_c_in(), 2);
+        assert_eq!(p.group_c_out(), 3);
+        assert_eq!(p.filter_dims(), Dims::new(12, 2, 3, 3));
+        assert!(!p.is_depthwise());
+        // FLOPs divide by groups: depth per output channel is C_i/g.
+        let dense = ConvParams::builder()
+            .batch(2)
+            .channels(8, 12)
+            .input(6, 6)
+            .filter(3, 3)
+            .build()
+            .unwrap();
+        assert_eq!(p.flops() * 4, dense.flops());
+        // Non-dividing groups rejected.
+        assert!(ConvParams::builder()
+            .channels(8, 12)
+            .input(6, 6)
+            .filter(3, 3)
+            .groups(3)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn depthwise_is_detected() {
+        let p = ConvParams::builder()
+            .channels(16, 16)
+            .input(8, 8)
+            .filter(3, 3)
+            .groups(16)
+            .build()
+            .unwrap();
+        assert!(p.is_depthwise());
+        assert_eq!(p.filter_dims(), Dims::new(16, 1, 3, 3));
+        let dense = ConvParams::builder().channels(1, 1).input(8, 8).filter(3, 3);
+        assert!(!dense.build().unwrap().is_depthwise());
     }
 
     #[test]
     fn with_batch_rescales() {
-        let p = ConvParams::new(32, 3, 8, 8, 4, 3, 3, 1).unwrap();
+        let p = table1(32, 3, 8, 4, 3, 1);
         let q = p.with_batch(512);
         assert_eq!(q.n, 512);
         assert_eq!(q.c_in, p.c_in);
@@ -197,7 +610,24 @@ mod tests {
 
     #[test]
     fn arithmetic_intensity_positive() {
-        let p = ConvParams::new(8, 64, 28, 28, 128, 3, 3, 1).unwrap();
+        let p = table1(8, 64, 28, 128, 3, 1);
         assert!(p.arithmetic_intensity() > 1.0);
+    }
+
+    #[test]
+    fn display_spells_out_generalized_geometry() {
+        let dense = table1(2, 3, 8, 4, 3, 1);
+        assert_eq!(dense.to_string(), "N2 3x8x8 -> 4 f3x3 s1/1");
+        let gen = ConvParams::builder()
+            .batch(2)
+            .channels(4, 4)
+            .input(8, 8)
+            .filter(3, 3)
+            .pad(1)
+            .dilation(2)
+            .groups(2)
+            .build()
+            .unwrap();
+        assert!(gen.to_string().ends_with("p1/1 d2/2 g2"), "{gen}");
     }
 }

@@ -26,7 +26,7 @@ pub struct BenchLayer {
 impl BenchLayer {
     /// Concrete params at batch size `n`.
     pub fn params(&self, n: usize) -> ConvParams {
-        ConvParams::new(n, self.c_in, self.h_in, self.w_in, self.c_out, self.k, self.k, self.s)
+        ConvParams::builder().batch(n).channels(self.c_in, self.c_out).input(self.h_in, self.w_in).filter(self.k, self.k).stride(self.s).build()
             .expect("Table I layer geometry is valid")
     }
 
@@ -40,7 +40,7 @@ impl BenchLayer {
         let floor_w = (self.k + 11 * self.s).min(self.w_in);
         let h = (self.h_in / div).max(floor_h);
         let w = (self.w_in / div).max(floor_w);
-        ConvParams::new(n, self.c_in, h, w, self.c_out, self.k, self.k, self.s)
+        ConvParams::builder().batch(n).channels(self.c_in, self.c_out).input(h, w).filter(self.k, self.k).stride(self.s).build()
             .expect("scaled layer geometry is valid")
     }
 }

@@ -45,9 +45,24 @@ const VERSION: f64 = 1.0;
 
 /// Canonical cache key for one layer decision: geometry at the planning
 /// batch, the incoming activation layout, and the thread count.
+///
+/// Generalized geometry (padding, dilation, groups) appends a
+/// `-p…-d…-g…` suffix **only when non-default**, so default-geometry
+/// keys are byte-identical to pre-generalization cache files — old
+/// entries keep serving the layers they were decided for, and can never
+/// alias a padded/dilated/grouped layer (which always carries the
+/// suffix).
 pub fn layer_key(p: &ConvParams, prev: Layout, threads: usize) -> String {
+    let geometry = if p.has_default_geometry() {
+        String::new()
+    } else {
+        format!(
+            "-p{}x{}-d{}x{}-g{}",
+            p.pad_h, p.pad_w, p.dilation_h, p.dilation_w, p.groups
+        )
+    };
     format!(
-        "n{}c{}x{}x{}-o{}f{}x{}s{}x{}-from_{}-t{}",
+        "n{}c{}x{}x{}-o{}f{}x{}s{}x{}{}-from_{}-t{}",
         p.n,
         p.c_in,
         p.h_in,
@@ -57,6 +72,7 @@ pub fn layer_key(p: &ConvParams, prev: Layout, threads: usize) -> String {
         p.w_f,
         p.stride_h,
         p.stride_w,
+        geometry,
         prev.name(),
         threads
     )
@@ -354,11 +370,36 @@ mod tests {
 
     #[test]
     fn layer_key_is_injective_over_its_fields() {
-        let p = ConvParams::new(8, 3, 32, 32, 16, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(3, 16).input(32, 32).filter(3, 3).stride(1).build().unwrap();
         let a = layer_key(&p, Layout::Nchw, 1);
         assert_ne!(a, layer_key(&p, Layout::Nhwc, 1));
         assert_ne!(a, layer_key(&p, Layout::Nchw, 4));
         assert_ne!(a, layer_key(&p.with_batch(16), Layout::Nchw, 1));
+    }
+
+    #[test]
+    fn layer_key_separates_generalized_geometry() {
+        let dense = ConvParams::builder().batch(8).channels(16, 16).input(14, 14).filter(3, 3).build().unwrap();
+        let base = layer_key(&dense, Layout::Nchw, 2);
+        // Default geometry keeps the pre-generalization key shape: a
+        // pre-existing cache entry still serves the layer it described…
+        assert!(!base.contains("-p"), "default geometry must not grow a suffix: {base}");
+        // …and can never be served for padded/dilated/grouped variants.
+        let padded = ConvParams::builder().batch(8).channels(16, 16).input(14, 14).filter(3, 3).pad(1).build().unwrap();
+        let dilated = ConvParams::builder().batch(8).channels(16, 16).input(14, 14).filter(3, 3).dilation(2).build().unwrap();
+        let grouped = ConvParams::builder().batch(8).channels(16, 16).input(14, 14).filter(3, 3).groups(4).build().unwrap();
+        let depthwise =
+            ConvParams::builder().batch(8).channels(16, 16).input(14, 14).filter(3, 3).pad(1).groups(16).build().unwrap();
+        let keys: Vec<String> = [&padded, &dilated, &grouped, &depthwise]
+            .iter()
+            .map(|p| layer_key(p, Layout::Nchw, 2))
+            .collect();
+        for (i, k) in keys.iter().enumerate() {
+            assert_ne!(*k, base, "variant {i} aliased the dense key");
+            for other in &keys[i + 1..] {
+                assert_ne!(k, other);
+            }
+        }
     }
 
     #[test]

@@ -76,19 +76,25 @@ const VERSION: f64 = 1.0;
 
 /// Coarse problem-shape class used for residual correction buckets.
 ///
-/// Two axes, two classes each: channel count (`C_i`) narrow/wide and
-/// spatial extent (`H_i × W_i`) small/large. The thresholds split the
-/// Table I suite roughly in half on each axis and — more importantly —
-/// separate the regimes the paper shows behave differently: channel-
-/// starved first layers (`C_i = 3` fills 3 of 8 NHWC lanes) vs
-/// channel-rich tails, and large activations (transform-bandwidth
-/// bound) vs small ones (compute/latency bound).
+/// Three axes: channel count (`C_i`) narrow/wide, spatial extent
+/// (`H_i × W_i`) small/large, and dense vs grouped. The first two
+/// thresholds split the Table I suite roughly in half on each axis and —
+/// more importantly — separate the regimes the paper shows behave
+/// differently: channel-starved first layers (`C_i = 3` fills 3 of 8
+/// NHWC lanes) vs channel-rich tails, and large activations (transform-
+/// bandwidth bound) vs small ones (compute/latency bound). The grouped
+/// axis keeps MobileNet-class depthwise layers — which run an entirely
+/// different code path — from sharing buckets (or overall fallbacks)
+/// with dense measurements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShapeClass {
     /// `C_i >= 64`: the NHWC vector dimension is saturated.
     pub wide_channels: bool,
     /// `H_i × W_i >= 56 × 56`: transform traffic dominates the window.
     pub large_spatial: bool,
+    /// `groups > 1`: grouped/depthwise geometry (per-group kernels or the
+    /// depthwise specialist, never the dense hot loops).
+    pub grouped: bool,
 }
 
 impl ShapeClass {
@@ -102,16 +108,23 @@ impl ShapeClass {
         ShapeClass {
             wide_channels: p.c_in >= Self::CHANNEL_THRESHOLD,
             large_spatial: p.h_in * p.w_in >= Self::SPATIAL_THRESHOLD,
+            grouped: p.groups > 1,
         }
     }
 
-    /// Stable bucket key used in the profile JSON.
+    /// Stable bucket key used in the profile JSON. Dense classes keep the
+    /// original two-axis keys, so pre-grouped profiles read back into the
+    /// same buckets.
     pub fn key(&self) -> &'static str {
-        match (self.wide_channels, self.large_spatial) {
-            (false, false) => "narrow_small",
-            (false, true) => "narrow_large",
-            (true, false) => "wide_small",
-            (true, true) => "wide_large",
+        match (self.wide_channels, self.large_spatial, self.grouped) {
+            (false, false, false) => "narrow_small",
+            (false, true, false) => "narrow_large",
+            (true, false, false) => "wide_small",
+            (true, true, false) => "wide_large",
+            (false, false, true) => "narrow_small_grouped",
+            (false, true, true) => "narrow_large_grouped",
+            (true, false, true) => "wide_small_grouped",
+            (true, true, true) => "wide_large_grouped",
         }
     }
 }
@@ -200,7 +213,7 @@ pub fn measured_params(layer: &BenchLayer, r: &Record) -> Option<ConvParams> {
         return None;
     }
     let in_edge = (out_edge as usize - 1) * layer.s + layer.k;
-    ConvParams::new(r.batch, layer.c_in, in_edge, in_edge, layer.c_out, layer.k, layer.k, layer.s)
+    ConvParams::builder().batch(r.batch).channels(layer.c_in, layer.c_out).input(in_edge, in_edge).filter(layer.k, layer.k).stride(layer.s).build()
         .ok()
 }
 
@@ -275,12 +288,20 @@ impl CalibrationProfile {
     /// Measured efficiency for a candidate on a concrete geometry: the
     /// [`ShapeClass`] bucket when it has samples, else the series
     /// overall, else `None` (caller falls back to the analytic model).
+    ///
+    /// Grouped geometry only ever reads `*_grouped` buckets: the overall
+    /// stat is fitted from dense records, and letting a dense measurement
+    /// vouch for a depthwise layer would hide the per-group slicing cost
+    /// from the planner.
     pub fn efficiency(&self, algo: AlgoKind, layout: Layout, p: &ConvParams) -> Option<f64> {
         let fit = self.table.get(&series_key(algo, layout))?;
         if let Some(stat) = fit.buckets.get(ShapeClass::of(p).key()) {
             if stat.samples > 0 {
                 return Some(stat.eff);
             }
+        }
+        if p.groups > 1 {
+            return None;
         }
         (fit.overall.samples > 0).then_some(fit.overall.eff)
     }
@@ -711,11 +732,45 @@ mod tests {
         let e12 = p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &conv12).unwrap();
         assert!((e12 - 0.25).abs() < 1e-9, "bucketed eff {e12}");
         // A geometry outside any sampled bucket falls back to the overall.
-        let narrow = ConvParams::new(8, 3, 16, 16, 8, 3, 3, 1).unwrap();
+        let narrow = ConvParams::builder().batch(8).channels(3, 8).input(16, 16).filter(3, 3).stride(1).build().unwrap();
         let eo = p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &narrow).unwrap();
         assert!((eo - 0.625).abs() < 1e-9, "overall eff {eo}");
         // Unmeasured series report nothing.
         assert!(p.efficiency(AlgoKind::Mec, Layout::Nhwc, &conv9).is_none());
+    }
+
+    #[test]
+    fn grouped_geometry_never_inherits_dense_efficiency() {
+        let dw = ConvParams::builder()
+            .batch(8)
+            .channels(64, 64)
+            .input(14, 14)
+            .filter(3, 3)
+            .pad(1)
+            .groups(64)
+            .build()
+            .unwrap();
+        let class = ShapeClass::of(&dw);
+        assert!(class.grouped);
+        assert_eq!(class.key(), "wide_small_grouped");
+        // A dense-fitted series never vouches for grouped geometry...
+        let mut p = CalibrationProfile::new(40.0, 1);
+        p.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.9, 4);
+        assert!(p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &dw).is_none());
+        // ...but a sampled grouped bucket does.
+        p.set_bucket(AlgoKind::Im2win, Layout::Nhwc, class, 0.3, 2);
+        assert_eq!(p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &dw), Some(0.3));
+        // The dense class of the same channel/spatial shape is untouched.
+        let dense = ConvParams::builder()
+            .batch(8)
+            .channels(64, 64)
+            .input(14, 14)
+            .filter(3, 3)
+            .pad(1)
+            .build()
+            .unwrap();
+        assert_eq!(ShapeClass::of(&dense).key(), "wide_small");
+        assert_eq!(p.efficiency(AlgoKind::Im2win, Layout::Nhwc, &dense), Some(0.9));
     }
 
     #[test]

@@ -436,7 +436,7 @@ mod tests {
     #[test]
     fn convert_cost_is_zero_on_identity_and_positive_otherwise() {
         let planner = Planner::new();
-        let p = ConvParams::new(8, 16, 20, 20, 16, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(16, 16).input(20, 20).filter(3, 3).stride(1).build().unwrap();
         for from in Layout::ALL {
             for to in Layout::ALL {
                 let c = planner.convert_cost(from, to, &p);
@@ -452,7 +452,7 @@ mod tests {
     #[test]
     fn convert_cost_uses_measured_bandwidth_where_sampled() {
         use super::super::calibrate::CalibrationProfile;
-        let p = ConvParams::new(8, 16, 20, 20, 16, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(16, 16).input(20, 20).filter(3, 3).stride(1).build().unwrap();
         let analytic = Planner::new();
         let a = analytic.convert_cost(Layout::Nchw, Layout::Nhwc, &p);
         // A profile that sampled NCHW->NHWC at twice the analytic
@@ -475,7 +475,7 @@ mod tests {
         // convert_cost, or "DP <= greedy" would compare different
         // objectives.
         let planner = Planner::new();
-        let p = ConvParams::new(8, 16, 20, 20, 16, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(16, 16).input(20, 20).filter(3, 3).stride(1).build().unwrap();
         for (algo, layout) in planner.candidates() {
             for prev in Layout::ALL {
                 let with = planner.estimate(algo, layout, &p, prev);

@@ -441,7 +441,7 @@ mod tests {
     #[test]
     fn relu_not_following_a_conv_is_not_fused() {
         use crate::model::Op;
-        let p = ConvParams::new(1, 3, 8, 8, 4, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(3, 4).input(8, 8).filter(3, 3).stride(1).build().unwrap();
         let f = Tensor4::random(p.filter_dims(), Layout::Nchw, 2);
         // conv → pool → relu: the ReLU does not follow the conv directly.
         let model = crate::model::Model::new("gap_relu", Layout::Nchw, 3, 8, 8)

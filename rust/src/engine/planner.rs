@@ -173,6 +173,8 @@ impl Planner {
     /// Candidate (algorithm, layout) pairs for a layer: every implemented
     /// high-performance algorithm on every layout it supports (naive is
     /// excluded — it exists for correctness checks, not serving).
+    /// Geometry-independent; see [`Planner::candidates_for`] for the set
+    /// the planner actually ranks.
     pub fn candidates(&self) -> Vec<(AlgoKind, Layout)> {
         let mut out = Vec::new();
         for algo in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Mec] {
@@ -182,6 +184,19 @@ impl Planner {
                     out.push((algo, layout));
                 }
             }
+        }
+        out
+    }
+
+    /// Candidate pairs for a specific geometry: [`Planner::candidates`]
+    /// plus the depthwise specialist (NHWC, CHWN8) when the layer is
+    /// depthwise. The specialist refuses other geometry, so it never
+    /// appears for dense/grouped-but-not-depthwise layers.
+    pub fn candidates_for(&self, p: &ConvParams) -> Vec<(AlgoKind, Layout)> {
+        let mut out = self.candidates();
+        if p.is_depthwise() {
+            out.push((AlgoKind::Depthwise, Layout::Nhwc));
+            out.push((AlgoKind::Depthwise, Layout::Chwn8));
         }
         out
     }
@@ -222,6 +237,7 @@ impl Planner {
             // paper's Fig. 4, not to absolute GFLOPS).
             let base = match algo {
                 AlgoKind::Im2win => 0.62,
+                AlgoKind::Depthwise => 0.58,
                 AlgoKind::Direct => 0.55,
                 AlgoKind::Im2col => 0.48,
                 AlgoKind::Mec => 0.45,
@@ -237,14 +253,25 @@ impl Planner {
             };
             // Vector-lane utilization of the unit-stride dimension (§III-C):
             // a 3-channel NHWC first layer fills 3 of 8 lanes, CHWN fills
-            // min(N, 8), NCHW streams the output row.
+            // min(N, 8), NCHW streams the output row. Grouped layers feed
+            // the generic algorithms per-group dense sub-problems, so NHWC
+            // only ever sees `C_i / groups` channels — a depthwise layer
+            // starves it to one lane. The depthwise specialist vectorizes
+            // over the full channel extent (its lanes never mix channels).
             let unit_len = match layout {
-                Layout::Nhwc => p.c_in,
+                Layout::Nhwc if algo == AlgoKind::Depthwise => p.c_out,
+                Layout::Nhwc => p.group_c_in(),
                 Layout::Nchw => p.w_out(),
                 Layout::Chwn | Layout::Chwn8 => p.n,
             };
             let lanes = (unit_len.min(8) as f64) / 8.0;
-            let eff = (base * layout_q * (0.25 + 0.75 * lanes)).max(1e-3);
+            // The generic algorithms run grouped geometry through the
+            // per-group slicing driver: `groups` rounds of gather / run /
+            // scatter over tensor slices. Derate them for that traffic;
+            // the depthwise specialist runs in place.
+            let group_pen =
+                if p.groups > 1 && algo != AlgoKind::Depthwise { 0.5 } else { 1.0 };
+            let eff = (base * layout_q * group_pen * (0.25 + 0.75 * lanes)).max(1e-3);
             p.flops() as f64 / (peak * eff)
         };
 
@@ -252,7 +279,7 @@ impl Planner {
         // consuming kernel (≈ 2× the scratch size), plus one input read.
         let input_bytes = layout.storage_len(p.input_dims()) as f64 * F32;
         let scratch_elems = match algo {
-            AlgoKind::Direct | AlgoKind::Naive => 0,
+            AlgoKind::Direct | AlgoKind::Naive | AlgoKind::Depthwise => 0,
             AlgoKind::Im2win => layout.storage_len(im2win_dims(p)),
             AlgoKind::Im2col => im2col_matrix_len(p, layout),
             AlgoKind::Mec => mec_matrix_len(p),
@@ -279,11 +306,11 @@ impl Planner {
         // MEC is the exception: it has no fused prepacked path (its
         // trait-default `run_prepacked` re-packs F̂ on every call), so its
         // pack traffic is charged under both execution models.
-        let fpack_bytes = (p.c_out * p.c_in * p.h_f * p.w_f) as f64 * F32;
+        let fpack_bytes = p.filter_dims().count() as f64 * F32;
         let pack_s = match algo {
             AlgoKind::Mec => 2.0 * fpack_bytes / bw,
             _ if self.prepacked => 0.0,
-            AlgoKind::Im2win => 2.0 * fpack_bytes / bw,
+            AlgoKind::Im2win | AlgoKind::Depthwise => 2.0 * fpack_bytes / bw,
             AlgoKind::Im2col if layout != Layout::Nchw => 2.0 * fpack_bytes / bw,
             _ => 0.0,
         };
@@ -308,7 +335,7 @@ impl Planner {
     /// activation layout. Purely analytic — no kernels run.
     pub fn plan_conv(&self, p: &ConvParams, prev: Layout) -> LayerPlan {
         let mut best: Option<LayerPlan> = None;
-        for (algo, layout) in self.candidates() {
+        for (algo, layout) in self.candidates_for(p) {
             let est_s = self.estimate(algo, layout, p, prev);
             let w_block = match algo {
                 AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
@@ -412,9 +439,44 @@ mod tests {
     }
 
     #[test]
+    fn depthwise_candidates_appear_only_for_depthwise_geometry() {
+        let planner = Planner::new();
+        let dense = ConvParams::builder().batch(8).channels(64, 64).input(14, 14).filter(3, 3).build().unwrap();
+        assert_eq!(planner.candidates_for(&dense), planner.candidates());
+        // Grouped-but-not-depthwise layers get no specialist either.
+        let grouped = ConvParams::builder().batch(8).channels(64, 32).input(14, 14).filter(3, 3).groups(4).build().unwrap();
+        assert_eq!(planner.candidates_for(&grouped), planner.candidates());
+        let dw = ConvParams::builder().batch(8).channels(64, 64).input(14, 14).filter(3, 3).pad(1).groups(64).build().unwrap();
+        let c = planner.candidates_for(&dw);
+        assert_eq!(c.len(), planner.candidates().len() + 2);
+        assert!(c.contains(&(AlgoKind::Depthwise, Layout::Nhwc)));
+        assert!(c.contains(&(AlgoKind::Depthwise, Layout::Chwn8)));
+    }
+
+    #[test]
+    fn planner_selects_depthwise_for_depthwise_layers() {
+        let dw = ConvParams::builder().batch(8).channels(64, 64).input(14, 14).filter(3, 3).pad(1).groups(64).build().unwrap();
+        // Analytic: the specialist's full-width lanes beat the generic
+        // algorithms' one-channel-per-group starvation.
+        let analytic = Planner::new();
+        let plan = analytic.plan_conv(&dw, Layout::Nhwc);
+        assert_eq!(plan.algo, AlgoKind::Depthwise, "analytic plan picked {}", plan.algo);
+        assert_eq!(plan.w_block, 0);
+        // Calibrated: dense-fitted series must not out-vouch the
+        // specialist on a layer shape they never measured.
+        let mut profile = CalibrationProfile::new(50.0, analytic.threads);
+        for (algo, layout) in analytic.candidates() {
+            profile.set_series(algo, layout, 0.9, 4);
+        }
+        let calibrated = Planner { profile: Some(profile), ..Planner::new() };
+        let plan = calibrated.plan_conv(&dw, Layout::Nhwc);
+        assert_eq!(plan.algo, AlgoKind::Depthwise, "calibrated plan picked {}", plan.algo);
+    }
+
+    #[test]
     fn estimates_are_positive_and_conversion_costs_show() {
         let planner = Planner::new();
-        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
         for (algo, layout) in planner.candidates() {
             let same = planner.estimate(algo, layout, &p, layout);
             assert!(same > 0.0 && same.is_finite(), "{algo} {layout}");
@@ -430,7 +492,7 @@ mod tests {
         // amortize, so direct should estimate under im2col on a layout
         // where both are available.
         let planner = Planner::new();
-        let p = ConvParams::new(8, 512, 7, 7, 512, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(512, 512).input(7, 7).filter(3, 3).stride(1).build().unwrap();
         let d = planner.estimate(AlgoKind::Direct, Layout::Nhwc, &p, Layout::Nhwc);
         let c = planner.estimate(AlgoKind::Im2col, Layout::Nhwc, &p, Layout::Nhwc);
         assert!(d < c, "direct {d} should beat im2col {c} on conv12");
@@ -475,7 +537,7 @@ mod tests {
         assert_eq!(planner.for_shards(100).threads, 1);
         // The per-shard thread count flows into the cache key, so sharded
         // plans never collide with whole-machine plans.
-        let p = ConvParams::new(8, 3, 32, 32, 16, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(3, 16).input(32, 32).filter(3, 3).stride(1).build().unwrap();
         assert_ne!(
             layer_key(&p, Layout::Nchw, planner.threads),
             layer_key(&p, Layout::Nchw, shard.threads)
@@ -484,7 +546,7 @@ mod tests {
 
     #[test]
     fn oneshot_planner_charges_filter_packing() {
-        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
         let pre = Planner::new();
         assert!(pre.prepacked, "serving engines prepack by default");
         let one = Planner { prepacked: false, ..Planner::new() };
@@ -555,7 +617,7 @@ mod tests {
 
     #[test]
     fn profile_overrides_the_compute_term_where_measured() {
-        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
         let analytic = Planner::new();
         let mut profile = CalibrationProfile::new(50.0, analytic.threads);
         profile.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.9, 4);
@@ -582,7 +644,7 @@ mod tests {
 
     #[test]
     fn estimate_is_monotone_in_measured_efficiency() {
-        let p = ConvParams::new(8, 64, 28, 28, 64, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
         let mut last = f64::INFINITY;
         for eff in [0.05, 0.1, 0.2, 0.4, 0.8] {
             let mut profile = CalibrationProfile::new(40.0, 1);
@@ -597,7 +659,7 @@ mod tests {
     #[test]
     fn refine_sets_a_sampled_w_block() {
         let planner = Planner::new();
-        let p = ConvParams::new(2, 4, 10, 10, 4, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(2).channels(4, 4).input(10, 10).filter(3, 3).stride(1).build().unwrap();
         let mut plan = LayerPlan {
             algo: AlgoKind::Im2win,
             layout: Layout::Nhwc,

@@ -47,7 +47,7 @@
 //! use im2win::prelude::*;
 //!
 //! // conv9 of the paper's Table I, at a reduced batch size.
-//! let p = ConvParams::new(4, 64, 56, 56, 64, 3, 3, 1).unwrap();
+//! let p = ConvParams::builder().batch(4).channels(64, 64).input(56, 56).filter(3, 3).stride(1).build().unwrap();
 //! let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
 //! let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
 //! let algo = Im2winConv::new();

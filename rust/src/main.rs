@@ -11,9 +11,9 @@
 //! im2win autotune [--layer conv5] [--layout nhwc] [--algo im2win]
 //! im2win calibrate [--from report.csv|--run] [--out profile.json] [--warm-pack]
 //!                  [--assert-shift]         # fit the planner from measurements
-//! im2win plan  [--model tinynet|vgg|mixnet] [--batch N] [--cache plans.json]
+//! im2win plan  [--model tinynet|vgg|mixnet|mobilenet] [--batch N] [--cache plans.json]
 //!              [--refine] [--graph] [--profile profile.json]
-//! im2win serve [--model tinynet|vgg|mixnet] [--requests N] [--shards N]
+//! im2win serve [--model tinynet|vgg|mixnet|mobilenet] [--requests N] [--shards N]
 //!              [--deadline-us D] [--max-batch B] [--pin] [--graph]
 //!              [--cache plans.json] [--profile profile.json]
 //!              [--async] [--queue-depth N] [--shed reject|oldest]
@@ -198,10 +198,12 @@ USAGE:
                   [--out profile.json] [--scale S] [--layers conv5,conv9]
                   [--batch N] [--threads T] [--warm-pack] [--cache plans.json]
                   [--assert-shift]
-  im2win plan     [--model tinynet|vgg|mixnet] [--edge N] [--batch N] [--threads T]
+  im2win plan     [--model tinynet|vgg|mixnet|mobilenet] [--edge N] [--layout L]
+                  [--batch N] [--threads T]
                   [--cache plans.json] [--refine] [--detect] [--graph]
                   [--profile profile.json]
-  im2win serve    [--model tinynet|vgg|mixnet] [--edge N] [--requests N] [--shards N]
+  im2win serve    [--model tinynet|vgg|mixnet|mobilenet] [--edge N] [--layout L]
+                  [--requests N] [--shards N]
                   [--deadline-us D] [--max-batch B] [--pin] [--batch N] [--graph]
                   [--threads T] [--cache plans.json] [--profile profile.json]
                   [--async] [--queue-depth N] [--shed reject|oldest]
@@ -393,13 +395,12 @@ fn autotune(flags: &Flags) -> CliResult<()> {
 /// * `--warm-pack` pre-fills the plan cache (`--cache`, default
 ///   plans.json) with calibrated plans for the whole Table I suite.
 fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
-    flags.apply_threads();
-    let threads = im2win::parallel::configured_threads();
-    let batch = flags.usize_or("batch", 8)?;
     let sources = [flags.get("profile"), flags.get("from"), flags.get("run")];
     if sources.iter().filter(|s| s.is_some()).count() > 1 {
         return Err(err("calibrate: --profile, --from and --run are mutually exclusive"));
     }
+    let common = CommonArgs::parse(flags, 8)?;
+    let (threads, batch) = (common.threads, common.batch);
 
     // 1. Obtain records (and a profile: loaded, or fitted from records).
     let mut records: Vec<Record> = Vec::new();
@@ -407,10 +408,7 @@ fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
     // layout-conversion pair on them (the bandwidths are host-local, so
     // records loaded with `--from` get none).
     let mut convert_geoms: Vec<Dims> = Vec::new();
-    let profile = if let Some(path) = flags.get("profile") {
-        let profile = CalibrationProfile::load(path)
-            .map_err(|e| err(format!("loading calibration profile {path}: {e}")))?;
-        println!("loaded profile {path} (fingerprint {})", profile.fingerprint());
+    let profile = if let Some(profile) = common.profile {
         profile
     } else {
         if let Some(path) = flags.get("from") {
@@ -544,41 +542,75 @@ fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
     Ok(())
 }
 
-/// Shared by `plan`/`serve`: a zoo model with placeholder algorithm and
-/// layout choices (the engine decides the real ones).
-fn build_model(flags: &Flags) -> CliResult<im2win::model::Model> {
-    let name = flags.get("model").unwrap_or("tinynet");
-    let edge = flags.usize_or("edge", 64)?;
-    let model = match name {
-        "tinynet" => zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 42)?,
-        "vgg" | "vgg_stack" => zoo::vgg_stack(Layout::Nchw, AlgoKind::Naive, edge, 42)?,
-        "mixnet" => zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 42)?,
-        other => return Err(err(format!("unknown model '{other}' (tinynet|vgg|mixnet)"))),
-    };
-    Ok(model)
+/// Flags shared by `plan`, `serve` and `calibrate`, parsed once through
+/// a single error path so the three subcommands cannot drift in flag
+/// spelling or error wording: `--model`/`--edge`, `--layout` (the zoo
+/// model's seed layout), `--profile` (loaded and announced here),
+/// `--threads` (applied here) and `--batch`.
+struct CommonArgs {
+    model: String,
+    edge: usize,
+    layout: Layout,
+    profile: Option<CalibrationProfile>,
+    threads: usize,
+    batch: usize,
+}
+
+impl CommonArgs {
+    fn parse(flags: &Flags, default_batch: usize) -> CliResult<CommonArgs> {
+        flags.apply_threads();
+        let profile = match flags.get("profile") {
+            None => None,
+            Some(path) => {
+                let profile = CalibrationProfile::load(path)
+                    .map_err(|e| err(format!("loading calibration profile {path}: {e}")))?;
+                println!(
+                    "calibration profile {path}: {} series, peak {:.1} GFLOPS, fingerprint {}",
+                    profile.len(),
+                    profile.peak_gflops,
+                    profile.fingerprint()
+                );
+                Some(profile)
+            }
+        };
+        Ok(CommonArgs {
+            model: flags.get("model").unwrap_or("tinynet").to_string(),
+            edge: flags.usize_or("edge", 64)?,
+            layout: flags.layout(Layout::Nchw)?,
+            profile,
+            threads: im2win::parallel::configured_threads(),
+            batch: flags.usize_or("batch", default_batch)?,
+        })
+    }
+
+    /// A zoo model with a placeholder algorithm (the engine decides the
+    /// real one); the layout seeds the model's input tensor layout.
+    fn build_model(&self) -> CliResult<im2win::model::Model> {
+        let model = match self.model.as_str() {
+            "tinynet" => zoo::tinynet(self.layout, AlgoKind::Naive, 42)?,
+            "vgg" | "vgg_stack" => zoo::vgg_stack(self.layout, AlgoKind::Naive, self.edge, 42)?,
+            "mixnet" => zoo::mixnet(self.layout, AlgoKind::Naive, 42)?,
+            "mobilenet" | "mobilenet_v1" => zoo::mobilenet_v1(self.layout, AlgoKind::Naive, 42)?,
+            other => {
+                return Err(err(format!(
+                    "unknown model '{other}' (tinynet|vgg|mixnet|mobilenet)"
+                )))
+            }
+        };
+        Ok(model)
+    }
 }
 
 /// Shared by `plan`/`serve`: planner + cache configured from flags.
-fn planner_from_flags(flags: &Flags) -> CliResult<(Planner, PlanCache)> {
-    flags.apply_threads();
+fn planner_from_flags(common: &CommonArgs, flags: &Flags) -> CliResult<(Planner, PlanCache)> {
     let mut planner = Planner::new();
     if flags.get("detect").is_some() {
         planner.spec = MachineSpec::detect();
     }
     planner.refine = flags.get("refine").is_some();
-    planner.batch = flags.usize_or("batch", 8)?;
-    planner.threads = im2win::parallel::configured_threads();
-    if let Some(path) = flags.get("profile") {
-        let profile = CalibrationProfile::load(path)
-            .map_err(|e| err(format!("loading calibration profile {path}: {e}")))?;
-        println!(
-            "calibration profile {path}: {} series, peak {:.1} GFLOPS, fingerprint {}",
-            profile.len(),
-            profile.peak_gflops,
-            profile.fingerprint()
-        );
-        planner.profile = Some(profile);
-    }
+    planner.batch = common.batch;
+    planner.threads = common.threads;
+    planner.profile = common.profile.clone();
     let mut cache = match flags.get("cache") {
         Some(path) => PlanCache::load(path)?,
         None => PlanCache::in_memory(),
@@ -596,8 +628,9 @@ fn planner_from_flags(flags: &Flags) -> CliResult<(Planner, PlanCache)> {
 }
 
 fn plan(flags: &Flags) -> CliResult<()> {
-    let model = build_model(flags)?;
-    let (planner, mut cache) = planner_from_flags(flags)?;
+    let common = CommonArgs::parse(flags, 8)?;
+    let model = common.build_model()?;
+    let (planner, mut cache) = planner_from_flags(&common, flags)?;
     let graph_mode = flags.get("graph").is_some();
     println!(
         "Planning {} ({} conv layers) at batch {}, {} threads{}{}{}",
@@ -665,9 +698,10 @@ fn plan(flags: &Flags) -> CliResult<()> {
 }
 
 fn serve(flags: &Flags) -> CliResult<()> {
-    let (planner, mut cache) = planner_from_flags(flags)?;
+    let common = CommonArgs::parse(flags, 8)?;
+    let (planner, mut cache) = planner_from_flags(&common, flags)?;
     let requests = flags.usize_or("requests", 100)?;
-    let max_batch = flags.usize_or("max-batch", flags.usize_or("batch", 8)?)?;
+    let max_batch = flags.usize_or("max-batch", common.batch)?;
     let shards = flags.usize_or("shards", 1)?.max(1);
     let deadline_us = flags.usize_or("deadline-us", 0)?;
     let pin = flags.get("pin").is_some();
@@ -678,7 +712,7 @@ fn serve(flags: &Flags) -> CliResult<()> {
     let shard_planner = planner.for_shards(shards);
     let mut engines = Vec::with_capacity(shards);
     for _ in 0..shards {
-        let model = build_model(flags)?;
+        let model = common.build_model()?;
         engines.push(if graph_mode {
             Engine::plan_graph(model, &shard_planner, &mut cache)?
         } else {

@@ -295,6 +295,16 @@ impl Model {
                         p.stride_w,
                         u8::from(conv.bias().is_some())
                     ));
+                    // Non-default geometry extends the component; dense
+                    // layers keep their pre-generalization text, so old
+                    // graph-cache entries stay valid for the models they
+                    // described and can never alias a generalized one.
+                    if !p.has_default_geometry() {
+                        text.push_str(&format!(
+                            "p{}x{}d{}x{}g{}",
+                            p.pad_h, p.pad_w, p.dilation_h, p.dilation_w, p.groups
+                        ));
+                    }
                 }
                 Op::Relu => text.push_str("|relu"),
                 Op::MaxPool { k, s } => text.push_str(&format!("|pool:{k}s{s}")),
@@ -335,9 +345,9 @@ mod tests {
     use super::*;
 
     fn build_small(layout: Layout, algo: AlgoKind) -> Model {
-        let p1 = ConvParams::new(1, 3, 12, 12, 4, 3, 3, 1).unwrap();
+        let p1 = ConvParams::builder().batch(1).channels(3, 4).input(12, 12).filter(3, 3).stride(1).build().unwrap();
         let f1 = Tensor4::random(p1.filter_dims(), Layout::Nchw, 1);
-        let p2 = ConvParams::new(1, 4, 5, 5, 6, 3, 3, 1).unwrap();
+        let p2 = ConvParams::builder().batch(1).channels(4, 6).input(5, 5).filter(3, 3).stride(1).build().unwrap();
         let f2 = Tensor4::random(p2.filter_dims(), Layout::Nchw, 2);
         let head: Vec<f32> = (0..6 * 10).map(|i| (i as f32) * 0.01 - 0.3).collect();
         Model::new("small", layout, 3, 12, 12)
@@ -381,7 +391,7 @@ mod tests {
 
     #[test]
     fn conv_bias_shifts_outputs_per_channel() {
-        let p = ConvParams::new(1, 2, 6, 6, 3, 3, 3, 1).unwrap();
+        let p = ConvParams::builder().batch(1).channels(2, 3).input(6, 6).filter(3, 3).stride(1).build().unwrap();
         let f = Tensor4::random(p.filter_dims(), Layout::Nchw, 4);
         let x = Tensor4::random(p.input_dims(), Layout::Nchw, 5);
         let bias = [0.5f32, -1.0, 2.0];
@@ -407,10 +417,10 @@ mod tests {
 
     #[test]
     fn mismatched_conv_chain_rejected() {
-        let p1 = ConvParams::new(1, 3, 12, 12, 4, 3, 3, 1).unwrap();
+        let p1 = ConvParams::builder().batch(1).channels(3, 4).input(12, 12).filter(3, 3).stride(1).build().unwrap();
         let f1 = Tensor4::random(p1.filter_dims(), Layout::Nchw, 1);
         // Second conv expects 8 channels but gets 4.
-        let p2 = ConvParams::new(1, 8, 10, 10, 6, 3, 3, 1).unwrap();
+        let p2 = ConvParams::builder().batch(1).channels(8, 6).input(10, 10).filter(3, 3).stride(1).build().unwrap();
         let f2 = Tensor4::random(p2.filter_dims(), Layout::Nchw, 2);
         let err = Model::new("bad", Layout::Nchw, 3, 12, 12)
             .conv(p1, AlgoKind::Naive, &f1)
@@ -423,8 +433,8 @@ mod tests {
     fn flops_counts_conv_and_linear() {
         let m = build_small(Layout::Nchw, AlgoKind::Naive);
         let f = m.flops(2).unwrap();
-        let p1 = ConvParams::new(2, 3, 12, 12, 4, 3, 3, 1).unwrap();
-        let p2 = ConvParams::new(2, 4, 5, 5, 6, 3, 3, 1).unwrap();
+        let p1 = ConvParams::builder().batch(2).channels(3, 4).input(12, 12).filter(3, 3).stride(1).build().unwrap();
+        let p2 = ConvParams::builder().batch(2).channels(4, 6).input(5, 5).filter(3, 3).stride(1).build().unwrap();
         assert_eq!(f, p1.flops() + p2.flops() + 2 * (2 * 6 * 10) as u64);
     }
 }

@@ -10,6 +10,10 @@
 //! * [`mixnet`] — a layout-diverse stack (narrow-channel stem, wide-
 //!   channel tail) whose optimal layout assignment is mixed: the showcase
 //!   for graph-level planning ([`crate::engine::graph`]).
+//! * [`mobilenet_v1`] — a MobileNet-v1-class depthwise-separable CNN
+//!   (strided padded stem, alternating depthwise 3×3 / pointwise 1×1
+//!   blocks): the generalized-geometry showcase — every block exercises
+//!   padding, groups and the planner's depthwise specialist.
 
 use super::Model;
 use crate::conv::{AlgoKind, ConvParams};
@@ -18,8 +22,10 @@ use crate::tensor::{Layout, Tensor4};
 use crate::testutil::Rng;
 
 /// Deterministic filter with a He-like scale for stable activations.
+/// Fan-in is the *per-group* channel count — a depthwise tap sees one
+/// channel, not `C_i`.
 fn filter(p: &ConvParams, seed: u64) -> Tensor4 {
-    let scale = (2.0 / (p.c_in * p.h_f * p.w_f) as f32).sqrt();
+    let scale = (2.0 / (p.group_c_in() * p.h_f * p.w_f) as f32).sqrt();
     let mut rng = Rng::new(seed);
     Tensor4::from_fn(p.filter_dims(), Layout::Nchw, |_, _, _, _| rng.f32() * scale)
 }
@@ -32,9 +38,9 @@ fn filter(p: &ConvParams, seed: u64) -> Tensor4 {
 ///         → conv3×3(32) → ReLU → GAP → linear(10)
 /// ```
 pub fn tinynet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
-    let p1 = ConvParams::new(1, 3, 32, 32, 16, 3, 3, 1)?;
-    let p2 = ConvParams::new(1, 16, 15, 15, 32, 3, 3, 1)?;
-    let p3 = ConvParams::new(1, 32, 6, 6, 32, 3, 3, 1)?;
+    let p1 = ConvParams::builder().batch(1).channels(3, 16).input(32, 32).filter(3, 3).stride(1).build()?;
+    let p2 = ConvParams::builder().batch(1).channels(16, 32).input(15, 15).filter(3, 3).stride(1).build()?;
+    let p3 = ConvParams::builder().batch(1).channels(32, 32).input(6, 6).filter(3, 3).stride(1).build()?;
     let mut rng = Rng::new(seed ^ 0xF00D);
     let head: Vec<f32> = (0..32 * 10).map(|_| rng.f32() * 0.1).collect();
     Model::new("tinynet", layout, 3, 32, 32)
@@ -54,9 +60,9 @@ pub fn tinynet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
 /// that exercises (and benchmarks) the engine's fused bias+ReLU epilogue
 /// path. Same geometry and filters as `tinynet(layout, algo, seed)`.
 pub fn tinynet_biased(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
-    let p1 = ConvParams::new(1, 3, 32, 32, 16, 3, 3, 1)?;
-    let p2 = ConvParams::new(1, 16, 15, 15, 32, 3, 3, 1)?;
-    let p3 = ConvParams::new(1, 32, 6, 6, 32, 3, 3, 1)?;
+    let p1 = ConvParams::builder().batch(1).channels(3, 16).input(32, 32).filter(3, 3).stride(1).build()?;
+    let p2 = ConvParams::builder().batch(1).channels(16, 32).input(15, 15).filter(3, 3).stride(1).build()?;
+    let p3 = ConvParams::builder().batch(1).channels(32, 32).input(6, 6).filter(3, 3).stride(1).build()?;
     let mut rng = Rng::new(seed ^ 0xF00D);
     let head: Vec<f32> = (0..32 * 10).map(|_| rng.f32() * 0.1).collect();
     let mut brng = Rng::new(seed ^ 0xB1A5);
@@ -79,13 +85,13 @@ pub fn tinynet_biased(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model
 /// `edge×edge` input (use 64 for a quick run, 224 for realism).
 pub fn vgg_stack(layout: Layout, algo: AlgoKind, edge: usize, seed: u64) -> Result<Model> {
     // conv7-like: 3 -> 64
-    let p1 = ConvParams::new(1, 3, edge, edge, 64, 3, 3, 1)?;
+    let p1 = ConvParams::builder().batch(1).channels(3, 64).input(edge, edge).filter(3, 3).stride(1).build()?;
     let e1 = p1.h_out() / 2; // after pool
     // conv8-like: 64 -> 128
-    let p2 = ConvParams::new(1, 64, e1, e1, 128, 3, 3, 1)?;
+    let p2 = ConvParams::builder().batch(1).channels(64, 128).input(e1, e1).filter(3, 3).stride(1).build()?;
     let e2 = p2.h_out() / 2;
     // conv10-like: 128 -> 128
-    let p3 = ConvParams::new(1, 128, e2, e2, 128, 3, 3, 1)?;
+    let p3 = ConvParams::builder().batch(1).channels(128, 128).input(e2, e2).filter(3, 3).stride(1).build()?;
     let mut rng = Rng::new(seed ^ 0xBEEF);
     let head: Vec<f32> = (0..128 * 10).map(|_| rng.f32() * 0.05).collect();
     Model::new("vgg_stack", layout, 3, edge, edge)
@@ -122,9 +128,9 @@ pub fn vgg_stack(layout: Layout, algo: AlgoKind, edge: usize, seed: u64) -> Resu
 /// mixed optimum that strictly beats the greedy chain
 /// ([`crate::engine::graph`]).
 pub fn mixnet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
-    let p1 = ConvParams::new(1, 3, 40, 40, 6, 5, 5, 1)?;
-    let p2 = ConvParams::new(1, 6, 36, 36, 64, 3, 3, 1)?;
-    let p3 = ConvParams::new(1, 64, 17, 17, 128, 3, 3, 1)?;
+    let p1 = ConvParams::builder().batch(1).channels(3, 6).input(40, 40).filter(5, 5).stride(1).build()?;
+    let p2 = ConvParams::builder().batch(1).channels(6, 64).input(36, 36).filter(3, 3).stride(1).build()?;
+    let p3 = ConvParams::builder().batch(1).channels(64, 128).input(17, 17).filter(3, 3).stride(1).build()?;
     let mut rng = Rng::new(seed ^ 0xD1CE);
     let head: Vec<f32> = (0..128 * 10).map(|_| rng.f32() * 0.05).collect();
     Model::new("mixnet", layout, 3, 40, 40)
@@ -137,6 +143,55 @@ pub fn mixnet(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
         .relu()
         .global_avg_pool()
         .linear(head, 10)
+}
+
+/// MobileNet-v1-class depthwise-separable CNN at CIFAR scale (~11 conv
+/// layers): a strided, padded 3×3 stem followed by five depthwise-
+/// separable blocks — depthwise 3×3 (pad 1, `groups == C`) then
+/// pointwise 1×1 — two of them striding the spatial extent down, ending
+/// in GAP + linear(10).
+///
+/// ```text
+/// 3×32×32 → conv3×3 s2 p1 (16)            → ReLU        → 16×16×16
+///         → [dw3×3 p1 → pw1×1] ×5                        (s2 at blocks
+///            16→32, 32→64 (s2), 64→64, 64→128 (s2), 128→128)
+///         → GAP → linear(10)
+/// ```
+///
+/// Every depthwise layer satisfies [`ConvParams::is_depthwise`], so a
+/// planner offered this model can (and does) pick the dedicated
+/// depthwise kernels; the pointwise layers are ordinary dense 1×1 convs.
+pub fn mobilenet_v1(layout: Layout, algo: AlgoKind, seed: u64) -> Result<Model> {
+    // Per block: (channels in, pointwise channels out, depthwise stride).
+    const BLOCKS: [(usize, usize, usize); 5] =
+        [(16, 32, 1), (32, 64, 2), (64, 64, 1), (64, 128, 2), (128, 128, 1)];
+    let stem = ConvParams::builder().channels(3, 16).input(32, 32).filter(3, 3).stride(2).pad(1).build()?;
+    let mut edge = stem.h_out();
+    let mut m = Model::new("mobilenet_v1", layout, 3, 32, 32)
+        .conv(stem, algo, &filter(&stem, seed + 31))?
+        .relu();
+    let mut s = seed + 32;
+    for (c, c_next, stride) in BLOCKS {
+        let dw = ConvParams::builder()
+            .channels(c, c)
+            .input(edge, edge)
+            .filter(3, 3)
+            .stride(stride)
+            .pad(1)
+            .groups(c)
+            .build()?;
+        edge = dw.h_out();
+        let pw = ConvParams::builder().channels(c, c_next).input(edge, edge).filter(1, 1).build()?;
+        m = m
+            .conv(dw, algo, &filter(&dw, s))?
+            .relu()
+            .conv(pw, algo, &filter(&pw, s + 1))?
+            .relu();
+        s += 2;
+    }
+    let mut rng = Rng::new(seed ^ 0x0B11E);
+    let head: Vec<f32> = (0..128 * 10).map(|_| rng.f32() * 0.05).collect();
+    m.global_avg_pool().linear(head, 10)
 }
 
 #[cfg(test)]
@@ -199,6 +254,36 @@ mod tests {
         for algo in AlgoKind::BENCHED {
             for layout in [Layout::Nhwc, Layout::Chwn8] {
                 let y = mixnet(layout, algo, 7).unwrap().forward(&x).unwrap();
+                assert!(
+                    base.allclose(&y, 1e-3, 1e-4),
+                    "{algo} {layout}: diff {}",
+                    base.max_abs_diff(&y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mobilenet_shapes_and_depthwise_structure() {
+        let m = mobilenet_v1(Layout::Nchw, AlgoKind::Naive, 6).unwrap();
+        assert_eq!(m.out_dims().unwrap(), Dims::new(1, 10, 1, 1));
+        let params = m.conv_params();
+        assert_eq!(params.len(), 11); // stem + 5 × (depthwise + pointwise)
+        let dw: Vec<_> = params.iter().filter(|p| p.is_depthwise()).collect();
+        assert_eq!(dw.len(), 5, "every block leads with a depthwise layer");
+        assert!(dw.iter().all(|p| p.pad_h == 1 && p.h_f == 3));
+        // The stem is strided and padded but dense.
+        assert!(params[0].stride_h == 2 && params[0].pad_h == 1 && params[0].groups == 1);
+    }
+
+    #[test]
+    fn mobilenet_agrees_across_algorithms() {
+        let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nchw, 5);
+        let base = mobilenet_v1(Layout::Nchw, AlgoKind::Naive, 6).unwrap().forward(&x).unwrap();
+        assert_eq!(base.dims(), Dims::new(2, 10, 1, 1));
+        for algo in AlgoKind::BENCHED {
+            for layout in [Layout::Nhwc, Layout::Chwn8] {
+                let y = mobilenet_v1(layout, algo, 6).unwrap().forward(&x).unwrap();
                 assert!(
                     base.allclose(&y, 1e-3, 1e-4),
                     "{algo} {layout}: diff {}",

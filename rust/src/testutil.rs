@@ -48,6 +48,11 @@ impl Rng {
 /// Dimensions are kept small enough for the naive oracle but deliberately
 /// cover the edge cases: batch around the CHWN8 block boundary, 1×1 and
 /// rectangular filters, strides 1–3, rectangular inputs, filter == input.
+/// A minority of problems carry generalized geometry — zero padding,
+/// dilation 2, grouped (including depthwise) channels — so every
+/// consumer's parity suite sweeps the generalized paths too; the
+/// majority stays dense/default so the hot dense kernels keep their
+/// coverage density.
 pub fn random_problems(count: usize, seed: u64) -> Vec<ConvParams> {
     let mut rng = Rng::new(seed);
     let mut out = Vec::with_capacity(count);
@@ -61,8 +66,30 @@ pub fn random_problems(count: usize, seed: u64) -> Vec<ConvParams> {
         let s_w = rng.int(1, 3);
         let h_in = h_f + rng.int(0, 8);
         let w_in = w_f + rng.int(0, 8);
-        if let Ok(p) =
-            ConvParams::with_strides(n, c_in, h_in, w_in, c_out, h_f, w_f, s_h, s_w)
+        // ~1 in 4 geometries pad, ~1 in 5 dilate (per axis), ~1 in 4
+        // group. The builder rejects the occasional over-dilated window;
+        // the loop just redraws.
+        let pad_h = if rng.int(0, 3) == 0 { rng.int(1, 2) } else { 0 };
+        let pad_w = if rng.int(0, 3) == 0 { rng.int(1, 2) } else { 0 };
+        let d_h = if rng.int(0, 4) == 0 { 2 } else { 1 };
+        let d_w = if rng.int(0, 4) == 0 { 2 } else { 1 };
+        let groups = if rng.int(0, 3) == 0 {
+            let divisors: Vec<usize> =
+                (1..=c_in.min(c_out)).filter(|g| c_in % g == 0 && c_out % g == 0).collect();
+            *rng.choose(&divisors)
+        } else {
+            1
+        };
+        if let Ok(p) = ConvParams::builder()
+            .batch(n)
+            .channels(c_in, c_out)
+            .input(h_in, w_in)
+            .filter(h_f, w_f)
+            .stride_hw(s_h, s_w)
+            .pad_hw(pad_h, pad_w)
+            .dilation_hw(d_h, d_w)
+            .groups(groups)
+            .build()
         {
             out.push(p);
         }
@@ -106,5 +133,21 @@ mod tests {
         }
         // Different seeds give different suites.
         assert_ne!(a, random_problems(20, 10));
+    }
+
+    #[test]
+    fn problems_cover_generalized_and_default_geometry() {
+        // Over a large draw, the generator must produce dense, padded,
+        // dilated and grouped problems — and keep the dense majority.
+        let suite = random_problems(200, 1234);
+        let dense = suite.iter().filter(|p| p.has_default_geometry()).count();
+        assert!(dense >= 50, "dense majority lost: {dense}/200");
+        assert!(suite.iter().any(|p| p.pad_h > 0 || p.pad_w > 0), "no padded problems");
+        assert!(suite.iter().any(|p| p.dilation_h > 1 || p.dilation_w > 1), "no dilated problems");
+        assert!(suite.iter().any(|p| p.groups > 1), "no grouped problems");
+        for p in &suite {
+            assert_eq!(p.c_in % p.groups, 0, "{p}");
+            assert_eq!(p.c_out % p.groups, 0, "{p}");
+        }
     }
 }

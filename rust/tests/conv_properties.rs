@@ -32,7 +32,7 @@ fn all_algorithms_match_oracle_on_random_geometries() {
 /// Convolution is linear: conv(a·x, f) == a·conv(x, f).
 #[test]
 fn linearity_in_the_input() {
-    let p = ConvParams::new(2, 3, 8, 8, 4, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(2).channels(3, 4).input(8, 8).filter(3, 3).stride(1).build().unwrap();
     let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 1);
     let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 2);
     let mut x2 = x.clone();
@@ -53,7 +53,7 @@ fn linearity_in_the_input() {
 /// Batch elements are independent: conv of a 2-batch == two 1-batch convs.
 #[test]
 fn batch_decomposition() {
-    let p2 = ConvParams::new(2, 3, 7, 9, 4, 3, 2, 2).unwrap();
+    let p2 = ConvParams::builder().batch(2).channels(3, 4).input(7, 9).filter(3, 2).stride(2).build().unwrap();
     let p1 = p2.with_batch(1);
     let full = Tensor4::random(p2.input_dims(), Layout::Nchw, 3);
     let f = Tensor4::random(p2.filter_dims(), Layout::Nchw, 4);
@@ -134,7 +134,7 @@ fn im2win_transform_preserves_windows() {
 /// equals the first 9 images of a batch-16 problem.
 #[test]
 fn chwn8_padding_is_inert() {
-    let p9 = ConvParams::new(9, 4, 6, 6, 3, 3, 3, 1).unwrap();
+    let p9 = ConvParams::builder().batch(9).channels(4, 3).input(6, 6).filter(3, 3).stride(1).build().unwrap();
     let p16 = p9.with_batch(16);
     let big = Tensor4::random(p16.input_dims(), Layout::Chwn8, 21);
     let small = Tensor4::from_fn(p9.input_dims(), Layout::Chwn8, |n, c, h, w| big.get(n, c, h, w));
@@ -153,7 +153,7 @@ fn chwn8_padding_is_inert() {
 /// Identity filter: 1x1 conv with identity channel matrix reproduces input.
 #[test]
 fn identity_convolution() {
-    let p = ConvParams::new(3, 4, 5, 6, 4, 1, 1, 1).unwrap();
+    let p = ConvParams::builder().batch(3).channels(4, 4).input(5, 6).filter(1, 1).stride(1).build().unwrap();
     let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 8);
     let f = Tensor4::from_fn(p.filter_dims(), Layout::Nhwc, |co, ci, _, _| {
         if co == ci { 1.0 } else { 0.0 }
@@ -170,7 +170,7 @@ fn identity_convolution() {
 fn results_do_not_depend_on_parallelism() {
     // The kernels use the global pool; exercise determinism by repeated
     // runs instead (scheduling varies run to run).
-    let p = ConvParams::new(4, 8, 10, 10, 8, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(4).channels(8, 8).input(10, 10).filter(3, 3).stride(1).build().unwrap();
     let x = Tensor4::random(p.input_dims(), Layout::Nhwc, 2);
     let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 3);
     let algo = Im2winConv::new();

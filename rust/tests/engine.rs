@@ -126,7 +126,7 @@ fn engine_matches_reference_conv_across_layouts_and_repeats() {
     // Acceptance: engine output with workspace reuse matches
     // `reference_conv` within 1e-5 on every layout x algorithm, and stays
     // bit-identical across repeated calls (stale-scratch detection).
-    let p = ConvParams::new(3, 4, 10, 10, 5, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(3).channels(4, 5).input(10, 10).filter(3, 3).stride(1).build().unwrap();
     let x = Tensor4::random(p.input_dims(), Layout::Nchw, 31);
     for layout in Layout::ALL {
         for algo in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Mec] {
@@ -167,12 +167,12 @@ fn engine_matches_reference_conv_across_layouts_and_repeats() {
 fn interleaved_batch_sizes_do_not_cross_contaminate() {
     // Alternating batch sizes exercises the per-size slots: a stale buffer
     // from one size must never leak into the other.
-    let (model, _) = single_conv_model(ConvParams::new(1, 3, 9, 9, 4, 2, 2, 1).unwrap(), 55);
+    let (model, _) = single_conv_model(ConvParams::builder().batch(1).channels(3, 4).input(9, 9).filter(2, 2).stride(1).build().unwrap(), 55);
     let plan =
         LayerPlan { algo: AlgoKind::Im2win, layout: Layout::Nhwc, w_block: 2, est_s: 1.0, tuned: false };
     let mut engine = Engine::with_plans(model, vec![plan]).unwrap();
-    let p2 = ConvParams::new(2, 3, 9, 9, 4, 2, 2, 1).unwrap();
-    let p5 = ConvParams::new(5, 3, 9, 9, 4, 2, 2, 1).unwrap();
+    let p2 = ConvParams::builder().batch(2).channels(3, 4).input(9, 9).filter(2, 2).stride(1).build().unwrap();
+    let p5 = ConvParams::builder().batch(5).channels(3, 4).input(9, 9).filter(2, 2).stride(1).build().unwrap();
     let x2 = Tensor4::random(p2.input_dims(), Layout::Nchw, 81);
     let x5 = Tensor4::random(p5.input_dims(), Layout::Nchw, 82);
     let first2 = engine.forward(&x2).unwrap();
@@ -240,7 +240,7 @@ fn server_serves_100_requests_with_no_warm_allocations() {
     // Acceptance: 100 single-image requests through the server produce
     // outputs matching reference_conv within 1e-5, and no new scratch
     // buffers are allocated after warmup.
-    let p = ConvParams::new(1, 3, 12, 12, 4, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(1).channels(3, 4).input(12, 12).filter(3, 3).stride(1).build().unwrap();
     let (model, filter) = single_conv_model(p, 91);
     let mut cache = PlanCache::in_memory();
     let engine = Engine::plan(model, &Planner::new(), &mut cache).unwrap();

@@ -54,8 +54,8 @@ fn fused_matches_unfused_reference_all_layouts() {
     // and every kernel's channel tail; the second exercises vector batch
     // lanes (n=10), strides and a rectangular filter.
     let problems = [
-        ConvParams::new(5, 6, 12, 12, 7, 3, 3, 1).unwrap(),
-        ConvParams::with_strides(10, 8, 11, 9, 4, 3, 2, 2, 1).unwrap(),
+        ConvParams::builder().batch(5).channels(6, 7).input(12, 12).filter(3, 3).stride(1).build().unwrap(),
+        ConvParams::builder().batch(10).channels(8, 4).input(11, 9).filter(3, 2).stride_hw(2, 1).build().unwrap(),
     ];
     for (pi, p) in problems.iter().enumerate() {
         let bias: Vec<f32> = (0..p.c_out).map(|c| (c as f32) * 0.3 - 0.8).collect();
@@ -100,7 +100,7 @@ fn fused_matches_unfused_reference_all_layouts() {
 fn repeated_prepacked_runs_reuse_scratch_and_stay_identical() {
     // Same workspace across calls: stale window tensors / lowered
     // matrices must be fully overwritten, results bit-identical.
-    let p = ConvParams::new(4, 5, 10, 10, 6, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(4).channels(5, 6).input(10, 10).filter(3, 3).stride(1).build().unwrap();
     let bias: Vec<f32> = (0..p.c_out).map(|c| 0.4 - c as f32 * 0.15).collect();
     for algo in FUSED_ALGOS {
         let a = algo.build();
@@ -132,7 +132,7 @@ fn chwn8_padding_lanes_stay_zero_under_fused_bias_relu() {
     // n=5 < 8: one partial batch block whose lanes 5..8 are padding. A
     // strictly positive bias would leave max(bias, 0) > 0 there if the
     // kernels did not mask their epilogued stores.
-    let p = ConvParams::new(5, 4, 8, 8, 6, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(5).channels(4, 6).input(8, 8).filter(3, 3).stride(1).build().unwrap();
     let bias = vec![0.5f32; p.c_out];
     for algo in FUSED_ALGOS {
         let a = algo.build();
@@ -163,7 +163,7 @@ fn chwn8_padding_lanes_stay_zero_under_fused_bias_relu() {
 
 #[test]
 fn mismatched_packs_are_rejected() {
-    let p = ConvParams::new(2, 3, 8, 8, 4, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(2).channels(3, 4).input(8, 8).filter(3, 3).stride(1).build().unwrap();
     let layout = Layout::Nhwc;
     let x = Tensor4::random(p.input_dims(), layout, 71);
     let f = Tensor4::random(p.filter_dims(), layout, 72);
@@ -187,7 +187,7 @@ fn mismatched_packs_are_rejected() {
         .run_prepacked(&x_nchw, &pack, &p, &mut out_nchw, &mut ws, Epilogue::None)
         .is_err());
     // Wrong geometry.
-    let p2 = ConvParams::new(2, 3, 8, 8, 5, 3, 3, 1).unwrap();
+    let p2 = ConvParams::builder().batch(2).channels(3, 5).input(8, 8).filter(3, 3).stride(1).build().unwrap();
     let mut out2 = Tensor4::zeros(p2.output_dims(), layout);
     assert!(im2win
         .run_prepacked(&x, &pack, &p2, &mut out2, &mut ws, Epilogue::None)
@@ -208,7 +208,7 @@ fn default_prepacked_path_covers_naive() {
     // Algorithms without a fused override (now just naive — MEC gained a
     // fused per-row-GEMM path) run through the default
     // prepare/run_prepacked: tensor-pack + unfused epilogue pass.
-    let p = ConvParams::new(3, 4, 9, 9, 5, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(3).channels(4, 5).input(9, 9).filter(3, 3).stride(1).build().unwrap();
     let bias: Vec<f32> = (0..p.c_out).map(|c| c as f32 * 0.2 - 0.3).collect();
     for (algo, layout) in [(AlgoKind::Naive, Layout::Nchw), (AlgoKind::Naive, Layout::Nhwc)] {
         let a = algo.build();

@@ -1,0 +1,232 @@
+//! Generalized-geometry conformance suite: padding, dilation, strides,
+//! grouped channels and depthwise must agree with the generalized naive
+//! oracle across every algorithm × layout pair that supports them, with
+//! every epilogue fused on the prepacked path. Outputs are NaN-poisoned
+//! and transform scratch is recycled through one shared [`Workspace`],
+//! so a kernel that skips an output element or trusts stale scratch
+//! fails loudly instead of passing on leftover zeros.
+
+use im2win::conv::{reference_conv, AlgoKind, ConvParams};
+use im2win::engine::{layer_key, LayerPlan, PlanCache, Workspace};
+use im2win::prelude::*;
+
+/// One named geometry per generalized feature, plus combinations.
+/// Batches straddle the CHWN8 block boundary and channels are chosen so
+/// NHWC kernels hit both full-vector and scalar-tail channel counts.
+fn geometries() -> Vec<(&'static str, ConvParams)> {
+    let g = |b: im2win::conv::ConvParamsBuilder| b.build().unwrap();
+    vec![
+        (
+            "padded",
+            g(ConvParams::builder().batch(2).channels(3, 4).input(6, 7).filter(3, 3).pad(1)),
+        ),
+        (
+            "dilated",
+            g(ConvParams::builder().batch(3).channels(4, 2).input(9, 8).filter(3, 3).dilation(2)),
+        ),
+        (
+            "strided_padded",
+            g(ConvParams::builder()
+                .batch(9)
+                .channels(2, 3)
+                .input(10, 9)
+                .filter(3, 2)
+                .stride(2)
+                .pad_hw(2, 1)),
+        ),
+        (
+            "padded_dilated",
+            g(ConvParams::builder()
+                .batch(2)
+                .channels(3, 3)
+                .input(8, 8)
+                .filter(3, 3)
+                .pad(2)
+                .dilation_hw(2, 1)),
+        ),
+        (
+            "grouped",
+            g(ConvParams::builder().batch(2).channels(4, 6).input(7, 7).filter(3, 3).pad(1).groups(2)),
+        ),
+        (
+            "depthwise",
+            g(ConvParams::builder().batch(2).channels(6, 6).input(7, 6).filter(3, 3).pad(1).groups(6)),
+        ),
+        (
+            "depthwise_wide_strided",
+            g(ConvParams::builder()
+                .batch(9)
+                .channels(11, 11)
+                .input(10, 10)
+                .filter(3, 3)
+                .stride(2)
+                .pad(1)
+                .groups(11)),
+        ),
+    ]
+}
+
+/// NaN-poisoned output tensor: every logical element the kernel fails to
+/// overwrite shows up as a NaN mismatch, never as a lucky zero.
+fn poisoned(p: &ConvParams, layout: Layout) -> Tensor4 {
+    let mut out = Tensor4::zeros(p.output_dims(), layout);
+    for v in out.data_mut() {
+        *v = f32::NAN;
+    }
+    out
+}
+
+/// Every supported algorithm × layout pair vs the generalized oracle,
+/// through `run_with_workspace` with one workspace recycled across the
+/// whole sweep (the second geometry onward runs on reused scratch).
+#[test]
+fn generalized_geometries_match_reference_in_all_layouts() {
+    let mut ws = Workspace::new();
+    for (name, p) in geometries() {
+        for (i, layout) in Layout::ALL.into_iter().enumerate() {
+            let seed = 900 + i as u64;
+            let input = Tensor4::random(p.input_dims(), layout, seed);
+            let filter = Tensor4::random(p.filter_dims(), layout, seed + 1);
+            let expect = reference_conv(&input, &filter, &p, layout);
+            for algo in AlgoKind::ALL {
+                let algorithm = algo.build();
+                if !algorithm.supports(layout) {
+                    continue;
+                }
+                if algo == AlgoKind::Depthwise && !p.is_depthwise() {
+                    continue;
+                }
+                let mut out = poisoned(&p, layout);
+                algorithm
+                    .run_with_workspace(&input, &filter, &p, &mut out, &mut ws)
+                    .unwrap_or_else(|e| panic!("{name} {algo} {layout} {p}: {e}"));
+                assert!(
+                    expect.allclose(&out, 1e-4, 1e-4),
+                    "{name} {algo} {layout} {p}: max diff {}",
+                    expect.max_abs_diff(&out)
+                );
+            }
+        }
+    }
+}
+
+/// The prepacked serving path with every epilogue fused, on generalized
+/// geometry: prepare once, then run on poisoned outputs with recycled
+/// workspace scratch, against `reference_conv` + a separate epilogue
+/// pass.
+#[test]
+fn prepacked_epilogues_match_on_generalized_geometry() {
+    let mut ws = Workspace::new();
+    for (name, p) in geometries() {
+        let bias: Vec<f32> = (0..p.c_out).map(|c| 0.1 * c as f32 - 0.3).collect();
+        let epilogues = [
+            Epilogue::None,
+            Epilogue::Relu,
+            Epilogue::Bias(&bias),
+            Epilogue::BiasRelu(&bias),
+        ];
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 77);
+            let filter = Tensor4::random(p.filter_dims(), layout, 78);
+            for algo in AlgoKind::ALL {
+                let algorithm = algo.build();
+                if !algorithm.supports(layout) {
+                    continue;
+                }
+                if algo == AlgoKind::Depthwise && !p.is_depthwise() {
+                    continue;
+                }
+                let packed = algorithm
+                    .prepare(&filter, &p, layout)
+                    .unwrap_or_else(|e| panic!("{name} {algo} {layout}: prepare: {e}"));
+                for ep in epilogues {
+                    let mut expect = reference_conv(&input, &filter, &p, layout);
+                    ep.apply_to(&mut expect);
+                    let mut out = poisoned(&p, layout);
+                    algorithm
+                        .run_prepacked(&input, &packed, &p, &mut out, &mut ws, ep)
+                        .unwrap_or_else(|e| panic!("{name} {algo} {layout} {ep:?}: {e}"));
+                    assert!(
+                        expect.allclose(&out, 1e-4, 1e-4),
+                        "{name} {algo} {layout} {ep:?} {p}: max diff {}",
+                        expect.max_abs_diff(&out)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A plan cache recorded before geometry generalization (dense keys
+/// only) must never serve a plan for a padded/dilated/grouped layer:
+/// the generalized key always carries the geometry suffix, and the
+/// dense key is byte-identical to the pre-generalization format.
+#[test]
+fn preexisting_cache_never_serves_generalized_geometry() {
+    let dense = ConvParams::builder()
+        .batch(2)
+        .channels(4, 4)
+        .input(8, 8)
+        .filter(3, 3)
+        .build()
+        .unwrap();
+    let key = layer_key(&dense, Layout::Nchw, 4);
+    // The exact pre-generalization key format — a cache file written
+    // before padding/dilation/groups existed holds keys of this shape.
+    assert_eq!(key, "n2c4x8x8-o4f3x3s1x1-from_nchw-t4");
+
+    let mut cache = PlanCache::in_memory();
+    cache.insert(
+        key.clone(),
+        LayerPlan {
+            algo: AlgoKind::Im2win,
+            layout: Layout::Nhwc,
+            w_block: 4,
+            est_s: 1e-4,
+            tuned: false,
+        },
+    );
+    assert!(cache.get(&key).is_some(), "dense key must keep serving");
+
+    // Same core dims with generalized geometry: every variant must miss.
+    let variants = [
+        ConvParams::builder().batch(2).channels(4, 4).input(8, 8).filter(3, 3).pad(1),
+        ConvParams::builder().batch(2).channels(4, 4).input(8, 8).filter(3, 3).dilation(2),
+        ConvParams::builder().batch(2).channels(4, 4).input(8, 8).filter(3, 3).groups(2),
+        ConvParams::builder().batch(2).channels(4, 4).input(8, 8).filter(3, 3).pad(1).groups(4),
+    ];
+    for b in variants {
+        let p = b.build().unwrap();
+        let k = layer_key(&p, Layout::Nchw, 4);
+        assert_ne!(k, key, "{p} aliases the dense key");
+        assert!(cache.get(&k).is_none(), "{p} served a pre-generalization plan");
+    }
+}
+
+/// Depthwise must also hold together end to end under the planner's
+/// chosen algorithm: a depthwise layer planned analytically runs and
+/// matches the oracle (regression net for AlgoKind::Depthwise wiring).
+#[test]
+fn planned_depthwise_layer_executes_and_matches() {
+    use im2win::engine::Planner;
+    let p = ConvParams::builder()
+        .batch(8)
+        .channels(16, 16)
+        .input(12, 12)
+        .filter(3, 3)
+        .pad(1)
+        .groups(16)
+        .build()
+        .unwrap();
+    let planner = Planner { batch: p.n, ..Planner::new() };
+    let plan = planner.plan_conv(&p, Layout::Nhwc);
+    assert_eq!(plan.algo, AlgoKind::Depthwise, "planner skipped the depthwise specialist");
+    let algorithm = plan.algo.build_tuned(plan.w_block);
+    let input = Tensor4::random(p.input_dims(), plan.layout, 5);
+    let filter = Tensor4::random(p.filter_dims(), plan.layout, 6);
+    let expect = reference_conv(&input, &filter, &p, plan.layout);
+    let mut ws = Workspace::new();
+    let mut out = poisoned(&p, plan.layout);
+    algorithm.run_with_workspace(&input, &filter, &p, &mut out, &mut ws).unwrap();
+    assert!(expect.allclose(&out, 1e-4, 1e-4), "max diff {}", expect.max_abs_diff(&out));
+}

@@ -187,7 +187,7 @@ fn sharded_engines_plan_under_per_shard_cache_keys() {
         "sharded planning must not reuse whole-machine cache entries"
     );
 
-    let p = ConvParams::new(8, 3, 32, 32, 16, 3, 3, 1).unwrap();
+    let p = ConvParams::builder().batch(8).channels(3, 16).input(32, 32).filter(3, 3).stride(1).build().unwrap();
     assert_ne!(
         layer_key(&p, Layout::Nchw, planner.threads),
         layer_key(&p, Layout::Nchw, shard_planner.threads)
