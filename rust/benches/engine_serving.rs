@@ -6,11 +6,14 @@
 //! generator (offered load ~1.5× the measured sync throughput, so the
 //! rings visibly backpressure), the graph planner's mixed-layout
 //! mixnet execution against the greedy per-layer plan (the global DP
-//! must not lose to greedy), and the depthwise-separable mobilenet_v1
+//! must not lose to greedy), the depthwise-separable mobilenet_v1
 //! serving path (with the planner-selected depthwise layer count as a
-//! CI invariant). Future PRs touching the engine,
-//! workspace, server or dispatcher compare against these numbers to
-//! catch serving regressions.
+//! CI invariant), and the widened algorithm menu — indirect convolution
+//! and Winograd F(2×2, 3×3) prepacked throughput on a Table I 3×3
+//! layer, with the planner's per-family selection counts over the
+//! Table I 3×3/stride-1 sweep as CI invariants. Future PRs touching the
+//! engine, workspace, server or dispatcher compare against these
+//! numbers to catch serving regressions.
 //!
 //! ```bash
 //! cargo bench --bench engine_serving -- --scale ci
@@ -26,10 +29,13 @@ mod common;
 use im2win::bench_harness::{fmt_time, measure_throughput};
 use im2win::config::json::Json;
 use im2win::config::Scale;
-use im2win::conv::AlgoKind;
+use im2win::conv::indirect::IndirectConv;
+use im2win::conv::winograd::{WinogradConv, WINOGRAD_TOLERANCE};
+use im2win::conv::{AlgoKind, ConvAlgorithm, ConvParams};
+use im2win::coordinator::layers;
 use im2win::engine::{
     AsyncConfig, AsyncServer, Engine, PlanCache, Planner, Server, ShardConfig, ShardedServer,
-    Shed, TrySubmitError,
+    Shed, TrySubmitError, Workspace,
 };
 use im2win::model::zoo;
 use im2win::prelude::*;
@@ -332,6 +338,68 @@ fn main() {
         fmt_time(mob_r.latency_s())
     );
 
+    // Widened algorithm menu: indirect convolution and Winograd
+    // F(2×2, 3×3) on the prepacked serving path, at a conv10-class 3×3
+    // layer. The planner-selection sweep runs the analytic planner
+    // pinned to threads=4 / batch=8 (runner-independent, like the graph
+    // and mobilenet sections) over every Table I 3×3/stride-1 layer:
+    // under the default tolerance budget at least one layer must route
+    // to indirect, and once the budget admits WINOGRAD_TOLERANCE at
+    // least one must route to Winograd. Both counts are CI invariants —
+    // if either family drops out of the planner's menu, its
+    // selected_layers row hits zero and the gate fails.
+    let menu_planner = Planner { threads: 4, batch: 8, ..Planner::new() };
+    let loose_planner = Planner { tolerance: WINOGRAD_TOLERANCE, ..menu_planner.clone() };
+    let mut indirect_layers = 0usize;
+    let mut winograd_layers = 0usize;
+    let mut sweep_names: Vec<&str> = Vec::new();
+    for l in layers::TABLE1.iter().filter(|l| l.k == 3 && l.s == 1) {
+        sweep_names.push(l.name);
+        let p = l.params(8);
+        if menu_planner.plan_conv(&p, Layout::Nhwc).algo == AlgoKind::Indirect {
+            indirect_layers += 1;
+        }
+        if loose_planner.plan_conv(&p, Layout::Nhwc).algo == AlgoKind::Winograd {
+            winograd_layers += 1;
+        }
+    }
+    let bench_p: ConvParams = layers::by_name("conv10")
+        .expect("Table I has conv10")
+        .scaled_params(4, 2);
+    let mlayout = Layout::Nhwc;
+    let minput = Tensor4::random(bench_p.input_dims(), mlayout, 17);
+    let mfilter = Tensor4::random(bench_p.filter_dims(), mlayout, 18);
+    let mut mlout = Tensor4::zeros(bench_p.output_dims(), mlayout);
+    let mut mws = Workspace::new();
+    let ind = IndirectConv::new();
+    let ind_art = ind.prepare(&mfilter, &bench_p, mlayout).expect("indirect prepare");
+    let ind_r = measure_throughput(bench_p.n, iters, || {
+        ind.run_prepacked(&minput, &ind_art, &bench_p, &mut mlout, &mut mws, Epilogue::None)
+            .expect("indirect runs");
+    });
+    let wino = WinogradConv::new();
+    let wino_art = wino.prepare(&mfilter, &bench_p, mlayout).expect("winograd prepare");
+    let wino_r = measure_throughput(bench_p.n, iters, || {
+        wino.run_prepacked(&minput, &wino_art, &bench_p, &mut mlout, &mut mws, Epilogue::None)
+            .expect("winograd runs");
+    });
+    println!(
+        "\nalgorithm menu (conv10/2 prepacked, {mlayout}; sweep over {}):",
+        sweep_names.join(",")
+    );
+    println!(
+        "  indirect: {:>8.1} inf/s   ({} of {} sweep layers planner-selected)",
+        ind_r.inf_per_s(),
+        indirect_layers,
+        sweep_names.len()
+    );
+    println!(
+        "  winograd: {:>8.1} inf/s   ({} of {} sweep layers planner-selected at tol {WINOGRAD_TOLERANCE:.0e})",
+        wino_r.inf_per_s(),
+        winograd_layers,
+        sweep_names.len()
+    );
+
     // Machine-readable artifact for the CI perf trajectory.
     if let Some(path) = common::json_path() {
         let doc = Json::object(vec![
@@ -355,6 +423,20 @@ fn main() {
                 Json::object(vec![
                     ("batch_8", Json::Number(mob_r.inf_per_s())),
                     ("depthwise_layers", Json::Number(dw_layers as f64)),
+                ]),
+            ),
+            (
+                "indirect",
+                Json::object(vec![
+                    ("inf_per_s", Json::Number(ind_r.inf_per_s())),
+                    ("selected_layers", Json::Number(indirect_layers as f64)),
+                ]),
+            ),
+            (
+                "winograd",
+                Json::object(vec![
+                    ("inf_per_s", Json::Number(wino_r.inf_per_s())),
+                    ("selected_layers", Json::Number(winograd_layers as f64)),
                 ]),
             ),
             (

@@ -7,9 +7,12 @@
 //!
 //! Metrics compared (higher is better): every `engine_inf_per_s.*`,
 //! `prepacked.*` (the prepacked-filter + fused bias/ReLU epilogue
-//! path), `graph.*` (greedy vs graph-planned mixed-layout mixnet) and
+//! path), `graph.*` (greedy vs graph-planned mixed-layout mixnet),
 //! `mobilenet.*` row (depthwise-separable serving throughput plus the
-//! planner-selected depthwise layer count) plus
+//! planner-selected depthwise layer count) and `indirect.*` /
+//! `winograd.*` (the widened algorithm menu: prepacked throughput plus
+//! the planner-selected layer count over the Table I 3×3/stride-1
+//! sweep — a zero count means the family fell out of the menu) plus
 //! `server.inf_per_s`, `sharded.inf_per_s` and
 //! `async.inf_per_s` (the non-blocking ring front under open-loop
 //! offered load) — the headline numbers
@@ -113,7 +116,7 @@ fn load(path: &str) -> Result<Json, String> {
 /// The throughput metrics a serving-bench document exposes (name, value).
 fn metrics(doc: &Json) -> Vec<(String, f64)> {
     let mut out = Vec::new();
-    for section in ["engine_inf_per_s", "prepacked", "graph", "mobilenet"] {
+    for section in ["engine_inf_per_s", "prepacked", "graph", "mobilenet", "indirect", "winograd"] {
         if let Some(rows) = doc.get(section).and_then(Json::as_object) {
             for (k, v) in rows {
                 if let Some(n) = v.as_f64() {

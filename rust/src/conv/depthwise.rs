@@ -24,7 +24,7 @@
 
 use super::epilogue::lane_mask;
 use super::{
-    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter,
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact,
     SharedMut,
 };
 use crate::engine::Workspace;
@@ -83,17 +83,6 @@ impl ConvAlgorithm for DepthwiseConv {
         matches!(layout, Layout::Nhwc | Layout::Chwn8)
     }
 
-    fn run_into(
-        &self,
-        input: &Tensor4,
-        filter: &Tensor4,
-        p: &ConvParams,
-        out: &mut Tensor4,
-    ) -> Result<()> {
-        let mut ws = Workspace::new();
-        self.run_with_workspace(input, filter, p, out, &mut ws)
-    }
-
     fn run_with_workspace(
         &self,
         input: &Tensor4,
@@ -127,7 +116,7 @@ impl ConvAlgorithm for DepthwiseConv {
         Ok(())
     }
 
-    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
         if filter.dims() != p.filter_dims() {
             return Err(Error::ShapeMismatch(format!(
                 "filter dims {} != expected {}",
@@ -150,13 +139,13 @@ impl ConvAlgorithm for DepthwiseConv {
         };
         let mut buf = AlignedBuf::zeroed(p.h_f * p.w_f * p.c_out);
         pack_filter_channel_minor(f, p, &mut buf);
-        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+        Ok(PlanArtifact::from_buf(self.name(), layout, p, buf))
     }
 
     fn run_prepacked(
         &self,
         input: &Tensor4,
-        packed: &PackedFilter,
+        packed: &PlanArtifact,
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,

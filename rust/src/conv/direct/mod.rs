@@ -21,7 +21,7 @@ mod chwn8;
 mod nchw;
 mod nhwc;
 
-use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
+use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::tensor::{CHWN8_BLOCK, Layout, Tensor4};
@@ -65,19 +65,6 @@ impl ConvAlgorithm for DirectConv {
         true
     }
 
-    fn run_into(
-        &self,
-        input: &Tensor4,
-        filter: &Tensor4,
-        p: &ConvParams,
-        out: &mut Tensor4,
-    ) -> Result<()> {
-        // Padded problems need a workspace for the materialized border;
-        // a throwaway one keeps the unpadded path allocation-free.
-        let mut ws = Workspace::new();
-        self.run_with_workspace(input, filter, p, out, &mut ws)
-    }
-
     fn run_with_workspace(
         &self,
         input: &Tensor4,
@@ -106,7 +93,7 @@ impl ConvAlgorithm for DirectConv {
     fn run_prepacked(
         &self,
         input: &Tensor4,
-        packed: &PackedFilter,
+        packed: &PlanArtifact,
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,
@@ -116,7 +103,7 @@ impl ConvAlgorithm for DirectConv {
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
         let filter = packed
-            .tensor()
+            .raw_filter()
             .ok_or_else(|| Error::Config("direct pack holds no filter tensor".into()))?;
         if p.groups > 1 {
             return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);

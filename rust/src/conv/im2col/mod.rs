@@ -28,7 +28,7 @@
 //! microkernel stores its final accumulator tile.
 
 use super::{
-    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter,
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact,
 };
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
@@ -91,19 +91,6 @@ impl ConvAlgorithm for Im2colConv {
         true
     }
 
-    fn run_into(
-        &self,
-        input: &Tensor4,
-        filter: &Tensor4,
-        p: &ConvParams,
-        out: &mut Tensor4,
-    ) -> Result<()> {
-        // One-shot path: a throwaway workspace keeps the allocation
-        // profile of the original code (fresh matrices per call).
-        let mut ws = Workspace::new();
-        self.run_with_workspace(input, filter, p, out, &mut ws)
-    }
-
     fn run_with_workspace(
         &self,
         input: &Tensor4,
@@ -156,7 +143,7 @@ impl ConvAlgorithm for Im2colConv {
         Ok(())
     }
 
-    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
         if filter.dims() != p.filter_dims() {
             return Err(Error::ShapeMismatch(format!(
                 "filter dims {} != expected {}",
@@ -174,7 +161,7 @@ impl ConvAlgorithm for Im2colConv {
         if p.groups > 1 {
             // Grouped runs re-slice the filter per group: store the tensor.
             super::note_filter_pack();
-            return Ok(PackedFilter::from_tensor(self.name(), f.clone()));
+            return Ok(PlanArtifact::from_tensor(self.name(), f.clone()));
         }
         let len = p.filter_dims().count();
         let mut buf = AlignedBuf::zeroed(len);
@@ -187,13 +174,13 @@ impl ConvAlgorithm for Im2colConv {
             Layout::Nhwc => pack_filter_nhwc_t(f, p, &mut buf),
             Layout::Chwn | Layout::Chwn8 => pack_filter_chwn(f, p, &mut buf),
         }
-        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+        Ok(PlanArtifact::from_buf(self.name(), layout, p, buf))
     }
 
     fn run_prepacked(
         &self,
         input: &Tensor4,
-        packed: &PackedFilter,
+        packed: &PlanArtifact,
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,
@@ -203,7 +190,7 @@ impl ConvAlgorithm for Im2colConv {
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
         if p.groups > 1 {
-            let filter = packed.tensor().ok_or_else(|| {
+            let filter = packed.raw_filter().ok_or_else(|| {
                 Error::Config("grouped im2col pack does not hold a filter tensor".into())
             })?;
             return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
@@ -245,20 +232,20 @@ impl ConvAlgorithm for Im2colConv {
 
 /// True when the window gathers need no zero border and no dilated taps —
 /// the fast-path condition for every lowering below.
-fn default_window(p: &ConvParams) -> bool {
+pub(crate) fn default_window(p: &ConvParams) -> bool {
     p.pad_h == 0 && p.pad_w == 0 && p.dilation_h == 1 && p.dilation_w == 1
 }
 
 /// The padded input row a filter row `u` of output row `ho` reads, or
 /// `None` when the tap lands in the zero border.
 #[inline]
-fn src_h(p: &ConvParams, ho: usize, u: usize) -> Option<usize> {
+pub(crate) fn src_h(p: &ConvParams, ho: usize, u: usize) -> Option<usize> {
     (ho * p.stride_h + u * p.dilation_h).checked_sub(p.pad_h).filter(|&h| h < p.h_in)
 }
 
 /// Column analogue of [`src_h`].
 #[inline]
-fn src_w(p: &ConvParams, wo: usize, v: usize) -> Option<usize> {
+pub(crate) fn src_w(p: &ConvParams, wo: usize, v: usize) -> Option<usize> {
     (wo * p.stride_w + v * p.dilation_w).checked_sub(p.pad_w).filter(|&w| w < p.w_in)
 }
 
@@ -382,7 +369,7 @@ fn lower_nhwc(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
 
 /// Pack the NHWC filter `[Co][K]` as its transpose `Fᵀ = [K][Co]` so the
 /// GEMM output lands channel-minor.
-fn pack_filter_nhwc_t(filter: &Tensor4, p: &ConvParams, ft: &mut [f32]) {
+pub(crate) fn pack_filter_nhwc_t(filter: &Tensor4, p: &ConvParams, ft: &mut [f32]) {
     let k = p.h_f * p.w_f * p.c_in;
     let f = filter.data();
     debug_assert_eq!(ft.len(), k * p.c_out);

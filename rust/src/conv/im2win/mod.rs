@@ -23,7 +23,7 @@ mod transform;
 
 pub use transform::{im2win_dims, im2win_transform, im2win_transform_into};
 
-use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
+use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::tensor::{AlignedBuf, Layout, Tensor4};
@@ -63,19 +63,6 @@ impl ConvAlgorithm for Im2winConv {
 
     fn supports(&self, _layout: Layout) -> bool {
         true
-    }
-
-    fn run_into(
-        &self,
-        input: &Tensor4,
-        filter: &Tensor4,
-        p: &ConvParams,
-        out: &mut Tensor4,
-    ) -> Result<()> {
-        // One-shot path: a throwaway workspace gives the same allocation
-        // profile as before (one window tensor + one filter pack per call).
-        let mut ws = Workspace::new();
-        self.run_with_workspace(input, filter, p, out, &mut ws)
     }
 
     fn run_with_workspace(
@@ -130,7 +117,7 @@ impl ConvAlgorithm for Im2winConv {
         Ok(())
     }
 
-    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
         if filter.dims() != p.filter_dims() {
             return Err(Error::ShapeMismatch(format!(
                 "filter dims {} != expected {}",
@@ -149,20 +136,20 @@ impl ConvAlgorithm for Im2winConv {
             // Grouped runs re-slice the filter per group, so the pack
             // stores the tensor itself (same fallback shape as direct).
             super::note_filter_pack();
-            return Ok(PackedFilter::from_tensor(self.name(), f.clone()));
+            return Ok(PlanArtifact::from_tensor(self.name(), f.clone()));
         }
         let mut buf = AlignedBuf::zeroed(p.filter_dims().count());
         match layout {
             Layout::Nhwc => pack_filter_window_major_into(f, p, &mut buf),
             _ => pack_filter_channel_major_into(f, p, &mut buf),
         }
-        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+        Ok(PlanArtifact::from_buf(self.name(), layout, p, buf))
     }
 
     fn run_prepacked(
         &self,
         input: &Tensor4,
-        packed: &PackedFilter,
+        packed: &PlanArtifact,
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,
@@ -172,7 +159,7 @@ impl ConvAlgorithm for Im2winConv {
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
         if p.groups > 1 {
-            let filter = packed.tensor().ok_or_else(|| {
+            let filter = packed.raw_filter().ok_or_else(|| {
                 Error::Config("grouped im2win pack does not hold a filter tensor".into())
             })?;
             return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);

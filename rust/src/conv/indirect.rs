@@ -1,0 +1,427 @@
+//! Indirect convolution (Dukhan 2019, "The Indirect Convolution
+//! Algorithm") for NHWC and NCHW.
+//!
+//! im2col's GEMM is fed by *copying* every input window into a
+//! materialized matrix. The indirect algorithm observes that the GEMM
+//! only needs the *addresses* of those windows: a plan-time **indirection
+//! buffer** stores, for every output position and filter tap, the offset
+//! of the input elements that tap reads (`-1` for taps landing in the
+//! zero padding border). The GEMM-shaped inner loop then gathers its
+//! A-operand through the buffer — near-zero transform traffic, no
+//! `H_f·W_f×` memory blow-up, and the same fused [`Epilogue`] store the
+//! other families use.
+//!
+//! The buffer is built once per *(geometry, layout)* inside
+//! [`ConvAlgorithm::prepare`] and rides in the [`PlanArtifact`] next to
+//! the packed filter, so the serving path never rebuilds it. It is
+//! **batch-size agnostic**: offsets address a single image (NHWC: element
+//! offset of a `C_i`-long span; NCHW: offset within one `H_in×W_in`
+//! channel plane) and the kernels add the per-image (and per-channel)
+//! stride at run time — one buffer serves any batch.
+//!
+//! Geometry coverage: padding and dilation are native (they only change
+//! the offsets); grouped problems fall back to the shared per-group
+//! driver, which rebuilds the per-group indirection each call — the
+//! planner's grouped penalty already steers those layers to the
+//! depthwise specialist or the paper's algorithms.
+
+use super::im2col::{pack_filter_nhwc_t, src_h, src_w};
+use super::{
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact,
+    SharedMut,
+};
+use crate::engine::Workspace;
+use crate::error::{Error, Result};
+use crate::parallel;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::{AlignedBuf, Layout, Tensor4};
+
+/// Indirect convolution: plan-time offset indirection + GEMM-shaped
+/// fused kernels (NHWC and NCHW).
+#[derive(Debug, Clone, Default)]
+pub struct IndirectConv;
+
+impl IndirectConv {
+    /// Construct the algorithm.
+    pub fn new() -> Self {
+        IndirectConv
+    }
+}
+
+/// Entries in the indirection buffer for `p`: one offset per
+/// (output position, filter tap). This is the plan-time artifact the
+/// engine's cost model charges indirect convolution with — compare
+/// [`super::im2col::im2col_matrix_len`], which is `C_i×` larger (NHWC)
+/// and paid per call rather than per plan.
+pub fn indirection_len(p: &ConvParams) -> usize {
+    p.h_out() * p.w_out() * p.h_f * p.w_f
+}
+
+/// Build the batch-agnostic indirection buffer: for each output position
+/// `(h_o, w_o)` and tap `(u, v)`, the *spatial* offset `h_i·W_in + w_i`
+/// of the input element the tap reads in one image/plane, or `-1` when
+/// the tap lands in the zero padding border. NHWC kernels scale by `C_i`
+/// (a span of channels starts there); NCHW kernels add `c·H_in·W_in`.
+fn build_offsets(p: &ConvParams) -> Vec<i64> {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let taps = p.h_f * p.w_f;
+    let mut offs = vec![-1i64; h_o * w_o * taps];
+    for ho in 0..h_o {
+        for wo in 0..w_o {
+            let po = &mut offs[(ho * w_o + wo) * taps..][..taps];
+            for u in 0..p.h_f {
+                for v in 0..p.w_f {
+                    if let (Some(hi), Some(wi)) = (src_h(p, ho, u), src_w(p, wo, v)) {
+                        po[u * p.w_f + v] = (hi * p.w_in + wi) as i64;
+                    }
+                }
+            }
+        }
+    }
+    offs
+}
+
+impl ConvAlgorithm for IndirectConv {
+    fn name(&self) -> &'static str {
+        "indirect"
+    }
+
+    fn supports(&self, layout: Layout) -> bool {
+        matches!(layout, Layout::Nhwc | Layout::Nchw)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        if !self.supports(input.layout()) {
+            return Err(Error::UnsupportedLayout(format!(
+                "indirect conv has no {} kernel",
+                input.layout()
+            )));
+        }
+        if filter.layout() != input.layout() {
+            return Err(Error::UnsupportedLayout(format!(
+                "indirect conv expects filter layout {} to match input {}",
+                filter.layout(),
+                input.layout()
+            )));
+        }
+        if p.groups > 1 {
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, Epilogue::None);
+        }
+        // One-shot path: build the plan artifact (filter pack + offsets)
+        // for this call, exactly what `prepare` would cache.
+        let packed = self.prepare(filter, p, input.layout())?;
+        self.run_prepacked(input, &packed, p, out, ws, Epilogue::None)
+    }
+
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        if !self.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!("indirect conv has no {layout} kernel")));
+        }
+        let owned;
+        let f = if filter.layout() == layout {
+            filter
+        } else {
+            owned = filter.to_layout(layout);
+            &owned
+        };
+        if p.groups > 1 {
+            // Grouped runs re-slice the filter (and rebuild per-group
+            // offsets) in the driver: store the tensor.
+            super::note_filter_pack();
+            return Ok(PlanArtifact::from_tensor(self.name(), f.clone()).with_geometry(p));
+        }
+        let len = p.filter_dims().count();
+        let mut buf = AlignedBuf::zeroed(len);
+        match layout {
+            Layout::Nchw => {
+                // Already [Co][K=(c,u,v)] row-major: a straight copy.
+                super::note_filter_pack();
+                buf.copy_from_slice(f.data());
+            }
+            Layout::Nhwc => pack_filter_nhwc_t(f, p, &mut buf),
+            _ => unreachable!("supports() gated"),
+        }
+        Ok(PlanArtifact::from_buf(self.name(), layout, p, buf)
+            .with_geometry(p)
+            .with_offsets(build_offsets(p)))
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PlanArtifact,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        ep.check(p.c_out)?;
+        if p.groups > 1 {
+            let filter = packed.raw_filter().ok_or_else(|| {
+                Error::Config("grouped indirect artifact does not hold a filter tensor".into())
+            })?;
+            return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
+        }
+        let fpack = packed
+            .buf()
+            .ok_or_else(|| Error::Config("indirect artifact holds no packed filter".into()))?;
+        let offs = packed
+            .offsets()
+            .ok_or_else(|| Error::Config("indirect artifact holds no indirection buffer".into()))?;
+        match input.layout() {
+            Layout::Nhwc => run_nhwc(input.data(), fpack, offs, p, out, ep),
+            Layout::Nchw => run_nchw(input.data(), fpack, offs, p, out, ep),
+            other => {
+                return Err(Error::UnsupportedLayout(format!(
+                    "indirect conv has no {other} kernel"
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// NHWC kernel: per output position, gather `H_f·W_f` spans of `C_i`
+/// input channels through the indirection buffer and accumulate against
+/// the transposed filter pack `Fᵀ[K=(u,v,c)][C_o]`, 8 output channels per
+/// vector with the epilogue fused at the store.
+fn run_nhwc(
+    x: &[f32],
+    ft: &[f32],
+    offs: &[i64],
+    p: &ConvParams,
+    out: &mut Tensor4,
+    ep: Epilogue<'_>,
+) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let taps = p.h_f * p.w_f;
+    let img_in = p.h_in * p.w_in * ci;
+    let img_out = h_o * w_o * co;
+    let shared = SharedMut::new(out.data_mut().as_mut_ptr());
+    // (n, h_o) coalesced: each iteration owns one output row — disjoint.
+    parallel::current().parallel_for_coalesced(p.n, h_o, |n, ho| {
+        let xi = &x[n * img_in..][..img_in];
+        for wo in 0..w_o {
+            let pos = ho * w_o + wo;
+            // SAFETY: (n, pos) is unique to this iteration's (n, ho, wo).
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(shared.at(n * img_out + pos * co), co)
+            };
+            let po = &offs[pos * taps..][..taps];
+            let mut c0 = 0;
+            while c0 + LANES <= co {
+                let mut acc = F32x8::zero();
+                for (t, &o) in po.iter().enumerate() {
+                    if o < 0 {
+                        continue; // zero tap: contributes nothing
+                    }
+                    let span = &xi[o as usize * ci..][..ci];
+                    let frows = &ft[t * ci * co..][..ci * co];
+                    for (r, &xv) in span.iter().enumerate() {
+                        // SAFETY: r*co + c0 + 8 <= ci*co by loop bounds.
+                        let fv = unsafe { F32x8::load(frows.as_ptr().add(r * co + c0)) };
+                        acc = F32x8::splat(xv).fma(fv, acc);
+                    }
+                }
+                // SAFETY: c0 + 8 <= co and orow is co long.
+                unsafe { ep.apply_channels(c0, acc).store(orow.as_mut_ptr().add(c0)) };
+                c0 += LANES;
+            }
+            for j in c0..co {
+                let mut acc = 0.0f32;
+                for (t, &o) in po.iter().enumerate() {
+                    if o < 0 {
+                        continue;
+                    }
+                    let span = &xi[o as usize * ci..][..ci];
+                    let frows = &ft[t * ci * co..][..ci * co];
+                    for (r, &xv) in span.iter().enumerate() {
+                        acc += xv * frows[r * co + j];
+                    }
+                }
+                orow[j] = ep.apply(j, acc);
+            }
+        }
+    });
+}
+
+/// NCHW kernel: GEMM-shaped `F[C_o×K] · gather(M)` per image, the
+/// A-operand read straight from the pack and the B-operand gathered
+/// through the (channel-plane-relative) indirection buffer; epilogue at
+/// the final store of each output element.
+fn run_nchw(
+    x: &[f32],
+    fm: &[f32],
+    offs: &[i64],
+    p: &ConvParams,
+    out: &mut Tensor4,
+    ep: Epilogue<'_>,
+) {
+    let (h_o, w_o) = (p.h_out(), p.w_out());
+    let (ci, co) = (p.c_in, p.c_out);
+    let taps = p.h_f * p.w_f;
+    let hw_in = p.h_in * p.w_in;
+    let how = h_o * w_o;
+    let k = ci * taps;
+    let shared = SharedMut::new(out.data_mut().as_mut_ptr());
+    // (n, c_o) coalesced: each iteration owns one output channel plane.
+    parallel::current().parallel_for_coalesced(p.n, co, |n, j| {
+        let xi = &x[n * ci * hw_in..][..ci * hw_in];
+        let frow = &fm[j * k..][..k];
+        // SAFETY: (n, j) is unique to this iteration.
+        let oplane =
+            unsafe { std::slice::from_raw_parts_mut(shared.at((n * co + j) * how), how) };
+        for (pos, o) in oplane.iter_mut().enumerate() {
+            let po = &offs[pos * taps..][..taps];
+            let mut acc = 0.0f32;
+            for c in 0..ci {
+                let plane = &xi[c * hw_in..][..hw_in];
+                let fr = &frow[c * taps..][..taps];
+                for (t, &off) in po.iter().enumerate() {
+                    if off >= 0 {
+                        acc += fr[t] * plane[off as usize];
+                    }
+                }
+            }
+            *o = ep.apply(j, acc);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference_conv;
+    use crate::testutil::random_problems;
+
+    fn check(p: &ConvParams, layout: Layout, seed: u64) {
+        let input = Tensor4::random(p.input_dims(), layout, seed);
+        let filter = Tensor4::random(p.filter_dims(), layout, seed + 1);
+        let want = reference_conv(&input, &filter, p, layout);
+        let got = IndirectConv::new().run(&input, &filter, p).unwrap();
+        assert!(
+            want.allclose(&got, 1e-4, 1e-4),
+            "{layout} {p:?}: diff {}",
+            want.max_abs_diff(&got)
+        );
+    }
+
+    #[test]
+    fn matches_reference_on_random_geometries() {
+        // Padding, dilation and grouping included: the offsets absorb the
+        // first two and the grouped driver the third.
+        for (i, p) in random_problems(24, 0xD0_2019).into_iter().enumerate() {
+            check(&p, Layout::Nhwc, 100 + i as u64);
+            check(&p, Layout::Nchw, 200 + i as u64);
+        }
+    }
+
+    #[test]
+    fn prepacked_fused_epilogue_matches_separate_passes() {
+        let p = ConvParams::builder()
+            .batch(2)
+            .channels(5, 11)
+            .input(9, 7)
+            .filter(3, 3)
+            .stride(1)
+            .pad(1)
+            .build()
+            .unwrap();
+        for layout in [Layout::Nhwc, Layout::Nchw] {
+            let input = Tensor4::random(p.input_dims(), layout, 3);
+            let filter = Tensor4::random(p.filter_dims(), layout, 4);
+            let bias: Vec<f32> = (0..p.c_out).map(|j| j as f32 * 0.25 - 1.0).collect();
+            let algo = IndirectConv::new();
+            let packed = algo.prepare(&filter, &p, layout).unwrap();
+            let mut ws = Workspace::new();
+            let mut fused = Tensor4::zeros(p.output_dims(), layout);
+            algo.run_prepacked(&input, &packed, &p, &mut fused, &mut ws, Epilogue::BiasRelu(&bias))
+                .unwrap();
+            let mut want = algo.run(&input, &filter, &p).unwrap();
+            Epilogue::BiasRelu(&bias).apply_to(&mut want);
+            assert!(want.allclose(&fused, 1e-5, 1e-5), "{layout}");
+        }
+    }
+
+    #[test]
+    fn artifact_is_batch_agnostic() {
+        let p8 = ConvParams::builder()
+            .batch(8)
+            .channels(6, 10)
+            .input(8, 8)
+            .filter(3, 3)
+            .stride(2)
+            .build()
+            .unwrap();
+        let layout = Layout::Nhwc;
+        let filter = Tensor4::random(p8.filter_dims(), layout, 7);
+        let algo = IndirectConv::new();
+        let packed = algo.prepare(&filter, &p8, layout).unwrap();
+        for n in [1, 3, 8] {
+            let p = p8.with_batch(n);
+            let input = Tensor4::random(p.input_dims(), layout, 70 + n as u64);
+            let mut out = Tensor4::zeros(p.output_dims(), layout);
+            let mut ws = Workspace::new();
+            algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::None).unwrap();
+            let want = reference_conv(&input, &filter, &p, layout);
+            assert!(want.allclose(&out, 1e-4, 1e-4), "batch {n}");
+        }
+    }
+
+    #[test]
+    fn artifact_rejects_other_geometry() {
+        let p = ConvParams::builder()
+            .batch(2)
+            .channels(4, 4)
+            .input(8, 8)
+            .filter(3, 3)
+            .stride(1)
+            .build()
+            .unwrap();
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 1);
+        let packed = IndirectConv::new().prepare(&filter, &p, Layout::Nhwc).unwrap();
+        // Same filter, different input extent: the offsets are stale.
+        let p2 = ConvParams::builder()
+            .batch(2)
+            .channels(4, 4)
+            .input(10, 8)
+            .filter(3, 3)
+            .stride(1)
+            .build()
+            .unwrap();
+        assert!(packed.validate("indirect", &p2, Layout::Nhwc).is_err());
+        assert!(packed.validate("indirect", &p, Layout::Nhwc).is_ok());
+    }
+
+    #[test]
+    fn rejects_unsupported_layouts() {
+        let p = ConvParams::builder()
+            .batch(1)
+            .channels(2, 2)
+            .input(4, 4)
+            .filter(3, 3)
+            .stride(1)
+            .build()
+            .unwrap();
+        let filter = Tensor4::random(p.filter_dims(), Layout::Chwn, 1);
+        assert!(IndirectConv::new().prepare(&filter, &p, Layout::Chwn).is_err());
+    }
+}

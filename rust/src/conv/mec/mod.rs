@@ -28,7 +28,7 @@
 
 use super::im2col::gemm_ep;
 use super::{
-    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PackedFilter,
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact,
 };
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
@@ -169,19 +169,6 @@ impl ConvAlgorithm for MecConv {
         layout == Layout::Nhwc
     }
 
-    fn run_into(
-        &self,
-        input: &Tensor4,
-        filter: &Tensor4,
-        p: &ConvParams,
-        out: &mut Tensor4,
-    ) -> Result<()> {
-        // One-shot path: throwaway workspace, same allocation profile as
-        // the original per-call buffers.
-        let mut ws = Workspace::new();
-        self.run_with_workspace(input, filter, p, out, &mut ws)
-    }
-
     fn run_with_workspace(
         &self,
         input: &Tensor4,
@@ -212,7 +199,7 @@ impl ConvAlgorithm for MecConv {
         Ok(())
     }
 
-    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
         if filter.dims() != p.filter_dims() {
             return Err(Error::ShapeMismatch(format!(
                 "filter dims {} != expected {}",
@@ -236,17 +223,17 @@ impl ConvAlgorithm for MecConv {
         if p.groups > 1 {
             // Grouped runs re-slice the filter per group: store the tensor.
             super::note_filter_pack();
-            return Ok(PackedFilter::from_tensor(self.name(), f.clone()));
+            return Ok(PlanArtifact::from_tensor(self.name(), f.clone()));
         }
         let mut buf = AlignedBuf::zeroed(p.h_f * p.w_f * p.c_in * p.c_out);
         pack_filter_t(f, p, &mut buf);
-        Ok(PackedFilter::from_buf(self.name(), layout, p, buf))
+        Ok(PlanArtifact::from_buf(self.name(), layout, p, buf))
     }
 
     fn run_prepacked(
         &self,
         input: &Tensor4,
-        packed: &PackedFilter,
+        packed: &PlanArtifact,
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,
@@ -261,7 +248,7 @@ impl ConvAlgorithm for MecConv {
             ));
         }
         if p.groups > 1 {
-            let filter = packed.tensor().ok_or_else(|| {
+            let filter = packed.raw_filter().ok_or_else(|| {
                 Error::Config("grouped mec pack does not hold a filter tensor".into())
             })?;
             return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);

@@ -14,13 +14,21 @@
 //! loop-reordering rules of paper §III-C. (The fourth baseline, [`mec`],
 //! is NHWC-only by construction.)
 //!
+//! Beyond the paper's matrix, the planner's menu also carries two families
+//! that dominate modern inference stacks: [`indirect`] (Dukhan 2019's
+//! Indirect Convolution: a plan-time offset-indirection buffer replaces the
+//! im2col copy) and [`winograd`] (F(2×2, 3×3) fast convolution for the 3×3
+//! stride-1 layers, with a documented, looser error bound).
+//!
 //! For serving, every algorithm also exposes the weights-stationary pair
 //! [`ConvAlgorithm::prepare`] / [`ConvAlgorithm::run_prepacked`]: the
-//! filter is packed once into the kernel-consumable order
-//! ([`PackedFilter`]) and bias/ReLU are applied at the accumulator
-//! store through [`Epilogue`] — im2win, direct, im2col and MEC all fuse
-//! at the store site; only the naive oracle uses the unfused default.
-//! See `docs/ARCHITECTURE.md` for where this sits on the request path.
+//! filter is packed once into the kernel-consumable order — together with
+//! any geometry-keyed plan-time artifacts such as the indirection buffer —
+//! into a [`PlanArtifact`], and bias/ReLU are applied at the accumulator
+//! store through [`Epilogue`] — im2win, direct, im2col, MEC, indirect and
+//! Winograd all fuse at the store site; only the naive oracle uses the
+//! unfused default. See `docs/ARCHITECTURE.md` for where this sits on the
+//! request path.
 
 pub mod depthwise;
 pub mod direct;
@@ -28,9 +36,11 @@ mod epilogue;
 mod grouped;
 pub mod im2col;
 pub mod im2win;
+pub mod indirect;
 pub mod mec;
 mod naive;
 mod params;
+pub mod winograd;
 
 pub use epilogue::Epilogue;
 pub use naive::reference_conv;
@@ -69,23 +79,15 @@ pub trait ConvAlgorithm: Send + Sync {
     fn supports(&self, layout: Layout) -> bool;
 
     /// Run the convolution, writing into a caller-provided output tensor
-    /// (its dims/layout must equal `p.output_dims()` / `input.layout()`).
+    /// (its dims/layout must equal `p.output_dims()` / `input.layout()`),
+    /// leasing transform scratch (window tensors, lowered matrices, packed
+    /// filters, Winograd tiles) from `ws` instead of allocating it per
+    /// call — this is the single entry point implementors write, and the
+    /// one a serving engine drives so steady state performs zero
+    /// per-request allocation. Algorithms without scratch simply ignore
+    /// the workspace.
     ///
     /// The output is *overwritten* (not accumulated into).
-    fn run_into(
-        &self,
-        input: &Tensor4,
-        filter: &Tensor4,
-        p: &ConvParams,
-        out: &mut Tensor4,
-    ) -> Result<()>;
-
-    /// Like [`ConvAlgorithm::run_into`], leasing transform scratch
-    /// (window tensors, lowered matrices, packed filters) from `ws`
-    /// instead of allocating it per call. Algorithms without scratch
-    /// (direct, naive) use this default, which ignores the workspace; the
-    /// transform-based algorithms override it so a serving engine reaches
-    /// steady state with zero per-request allocation.
     fn run_with_workspace(
         &self,
         input: &Tensor4,
@@ -93,9 +95,20 @@ pub trait ConvAlgorithm: Send + Sync {
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,
+    ) -> Result<()>;
+
+    /// Like [`ConvAlgorithm::run_with_workspace`] but over a throwaway,
+    /// scratch-less [`Workspace`] — the one-shot convenience entry point.
+    /// Provided; implementors only write `run_with_workspace`.
+    fn run_into(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
     ) -> Result<()> {
-        let _ = ws;
-        self.run_into(input, filter, p, out)
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, filter, p, out, &mut ws)
     }
 
     /// Convenience wrapper allocating the output tensor.
@@ -105,18 +118,22 @@ pub trait ConvAlgorithm: Send + Sync {
         Ok(out)
     }
 
-    /// Pack `filter` once into this algorithm's kernel-consumable order
-    /// for repeated [`ConvAlgorithm::run_prepacked`] execution on
-    /// `layout`. A weights-stationary server calls this at plan time and
-    /// never re-packs on the request path.
+    /// Build this algorithm's plan-time artifact for repeated
+    /// [`ConvAlgorithm::run_prepacked`] execution on `layout`: the filter
+    /// packed into the kernel-consumable order, plus any geometry-keyed
+    /// side artifacts (the indirect algorithm's offset-indirection buffer,
+    /// the Winograd-domain filter). A weights-stationary server calls this
+    /// at plan time and never re-packs on the request path.
     ///
-    /// Only the filter geometry of `p` matters (`C_o, C_i, H_f, W_f`);
-    /// the returned pack serves any batch size. The default stores the
-    /// filter tensor itself (converted to `layout`) — right for
-    /// algorithms whose kernels consume the raw filter (direct, naive,
-    /// MEC); transform-based algorithms override it with their real pack
-    /// format.
-    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PackedFilter> {
+    /// The batch size of `p` never matters — every artifact serves any
+    /// batch. For the paper's algorithms only the filter geometry of `p`
+    /// is used (`C_o, C_i, H_f, W_f`); geometry-keyed algorithms
+    /// (indirect, Winograd) additionally pin the input geometry and
+    /// [`PlanArtifact::validate`] enforces the match. The default stores
+    /// the filter tensor itself (converted to `layout`) — right for
+    /// algorithms whose kernels consume the raw filter (direct, naive);
+    /// transform-based algorithms override it with their real pack format.
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
         if filter.dims() != p.filter_dims() {
             return Err(Error::ShapeMismatch(format!(
                 "filter dims {} != expected {}",
@@ -131,10 +148,10 @@ pub trait ConvAlgorithm: Send + Sync {
             )));
         }
         note_filter_pack();
-        Ok(PackedFilter::from_tensor(self.name(), filter.to_layout(layout)))
+        Ok(PlanArtifact::from_tensor(self.name(), filter.to_layout(layout)))
     }
 
-    /// Run the convolution with a filter pre-packed by
+    /// Run the convolution with a plan artifact built by
     /// [`ConvAlgorithm::prepare`], applying `ep` at the point each output
     /// element is stored. No per-call filter packing happens here.
     ///
@@ -144,7 +161,7 @@ pub trait ConvAlgorithm: Send + Sync {
     fn run_prepacked(
         &self,
         input: &Tensor4,
-        packed: &PackedFilter,
+        packed: &PlanArtifact,
         p: &ConvParams,
         out: &mut Tensor4,
         ws: &mut Workspace,
@@ -152,8 +169,8 @@ pub trait ConvAlgorithm: Send + Sync {
     ) -> Result<()> {
         packed.validate(self.name(), p, input.layout())?;
         ep.check(p.c_out)?;
-        let filter = packed.tensor().ok_or_else(|| {
-            Error::Config(format!("{} pack does not hold a filter tensor", self.name()))
+        let filter = packed.raw_filter().ok_or_else(|| {
+            Error::Config(format!("{} artifact does not hold a filter tensor", self.name()))
         })?;
         self.run_with_workspace(input, filter, p, out, ws)?;
         ep.apply_to(out);
@@ -161,24 +178,43 @@ pub trait ConvAlgorithm: Send + Sync {
     }
 }
 
-/// A filter pre-packed by [`ConvAlgorithm::prepare`] for a specific
-/// (algorithm, layout, filter geometry). Opaque to callers; the engine
-/// caches one per convolution layer and hands it back on every request.
-pub struct PackedFilter {
+/// The plan-time artifact built by [`ConvAlgorithm::prepare`] for a
+/// specific (algorithm, layout, geometry): the filter packed into the
+/// kernel-consumable order, plus optional geometry-keyed side artifacts —
+/// the indirect algorithm's offset-indirection buffer, the Winograd-domain
+/// filter. Opaque to callers; the engine caches one per convolution layer
+/// and hands it back on every request.
+///
+/// The paper's algorithms key their artifact on the filter geometry only;
+/// geometry-keyed algorithms additionally pin the full (batch-normalized)
+/// input geometry, and [`PlanArtifact::validate`] rejects any mismatch.
+pub struct PlanArtifact {
     algo: &'static str,
     layout: Layout,
     filter_dims: Dims,
-    data: PackedData,
+    /// Batch-normalized (`n == 1`) geometry for artifacts that depend on
+    /// the input geometry, not just the filter. `None` for plain filter
+    /// packs.
+    geometry: Option<ConvParams>,
+    data: ArtifactData,
+    /// Geometry-keyed element-offset indirection buffer (indirect
+    /// convolution); `-1` marks a zero (padding) tap.
+    offsets: Option<Box<[i64]>>,
 }
 
-enum PackedData {
-    /// Kernel-order packed coefficients (im2win spans, im2col matrices).
+/// Former name of [`PlanArtifact`], kept as a shim for one release.
+#[deprecated(since = "0.1.0", note = "renamed to `PlanArtifact`")]
+pub type PackedFilter = PlanArtifact;
+
+enum ArtifactData {
+    /// Kernel-order packed coefficients (im2win spans, im2col matrices,
+    /// the Winograd-domain filter).
     Buf(AlignedBuf),
     /// The filter tensor itself, in the execution layout (direct, naive).
     Tensor(Tensor4),
 }
 
-impl PackedFilter {
+impl PlanArtifact {
     /// Wrap a kernel-order coefficient buffer.
     pub(crate) fn from_buf(
         algo: &'static str,
@@ -186,81 +222,130 @@ impl PackedFilter {
         p: &ConvParams,
         buf: AlignedBuf,
     ) -> Self {
-        PackedFilter { algo, layout, filter_dims: p.filter_dims(), data: PackedData::Buf(buf) }
+        PlanArtifact {
+            algo,
+            layout,
+            filter_dims: p.filter_dims(),
+            geometry: None,
+            data: ArtifactData::Buf(buf),
+            offsets: None,
+        }
     }
 
     /// Wrap a filter tensor kept in its execution layout.
     pub(crate) fn from_tensor(algo: &'static str, filter: Tensor4) -> Self {
-        PackedFilter {
+        PlanArtifact {
             algo,
             layout: filter.layout(),
             filter_dims: filter.dims(),
-            data: PackedData::Tensor(filter),
+            geometry: None,
+            data: ArtifactData::Tensor(filter),
+            offsets: None,
         }
     }
 
-    /// Name of the algorithm this pack was prepared for.
+    /// Pin the artifact to the full (batch-normalized) geometry of `p`;
+    /// [`PlanArtifact::validate`] then rejects runs on any other geometry.
+    pub(crate) fn with_geometry(mut self, p: &ConvParams) -> Self {
+        self.geometry = Some(p.with_batch(1));
+        self
+    }
+
+    /// Attach an element-offset indirection buffer (`-1` = zero tap).
+    pub(crate) fn with_offsets(mut self, offsets: Vec<i64>) -> Self {
+        self.offsets = Some(offsets.into_boxed_slice());
+        self
+    }
+
+    /// Name of the algorithm this artifact was prepared for.
     pub fn algo(&self) -> &'static str {
         self.algo
     }
 
-    /// Layout this pack executes on.
+    /// Layout this artifact executes on.
     pub fn layout(&self) -> Layout {
         self.layout
     }
 
-    /// Filter dims `(C_o, C_i, H_f, W_f)` the pack was built from.
+    /// Filter dims `(C_o, C_i, H_f, W_f)` the artifact was built from.
     pub fn filter_dims(&self) -> Dims {
         self.filter_dims
     }
 
-    /// Bytes held by the pack (the per-layer cost of weights-stationary
-    /// serving).
+    /// The batch-normalized geometry the artifact is keyed on, when it is
+    /// geometry-keyed (indirect, Winograd); `None` for plain filter packs.
+    pub fn geometry(&self) -> Option<&ConvParams> {
+        self.geometry.as_ref()
+    }
+
+    /// Bytes held by the artifact (the per-layer cost of
+    /// weights-stationary serving), side artifacts included.
     pub fn storage_bytes(&self) -> usize {
         let elems = match &self.data {
-            PackedData::Buf(b) => b.len(),
-            PackedData::Tensor(t) => t.data().len(),
+            ArtifactData::Buf(b) => b.len(),
+            ArtifactData::Tensor(t) => t.data().len(),
         };
         elems * std::mem::size_of::<f32>()
+            + self.offsets.as_ref().map_or(0, |o| std::mem::size_of_val(&o[..]))
     }
 
-    /// The packed coefficient buffer, when this pack holds one.
+    /// The packed coefficient buffer, when this artifact holds one.
     pub(crate) fn buf(&self) -> Option<&AlignedBuf> {
         match &self.data {
-            PackedData::Buf(b) => Some(b),
-            PackedData::Tensor(_) => None,
+            ArtifactData::Buf(b) => Some(b),
+            ArtifactData::Tensor(_) => None,
         }
     }
 
-    /// The stored filter tensor, when this pack holds one.
-    pub(crate) fn tensor(&self) -> Option<&Tensor4> {
+    /// The element-offset indirection buffer, when attached.
+    pub(crate) fn offsets(&self) -> Option<&[i64]> {
+        self.offsets.as_deref()
+    }
+
+    /// The stored *raw* filter tensor, when this artifact holds one.
+    ///
+    /// Escape hatch: only default-path algorithms (those whose kernels
+    /// consume the unpacked filter — direct, naive, and the grouped
+    /// drivers) may call this; transform-based algorithms must read their
+    /// packed [`PlanArtifact::buf`] instead.
+    pub(crate) fn raw_filter(&self) -> Option<&Tensor4> {
         match &self.data {
-            PackedData::Tensor(t) => Some(t),
-            PackedData::Buf(_) => None,
+            ArtifactData::Tensor(t) => Some(t),
+            ArtifactData::Buf(_) => None,
         }
     }
 
-    /// Reject a pack prepared for a different algorithm, layout or filter
-    /// geometry than the run it is handed to.
+    /// Reject an artifact prepared for a different algorithm, layout or
+    /// geometry than the run it is handed to. Filter geometry is always
+    /// checked; geometry-keyed artifacts additionally pin the full input
+    /// geometry (batch excluded — every artifact is batch-agnostic).
     pub fn validate(&self, algo: &str, p: &ConvParams, layout: Layout) -> Result<()> {
         if self.algo != algo {
             return Err(Error::Config(format!(
-                "packed filter was prepared for {}, not {algo}",
+                "plan artifact was prepared for {}, not {algo}",
                 self.algo
             )));
         }
         if self.layout != layout {
             return Err(Error::UnsupportedLayout(format!(
-                "packed filter was prepared for {}, run on {layout}",
+                "plan artifact was prepared for {}, run on {layout}",
                 self.layout
             )));
         }
         if self.filter_dims != p.filter_dims() {
             return Err(Error::ShapeMismatch(format!(
-                "packed filter dims {} != expected {}",
+                "plan artifact filter dims {} != expected {}",
                 self.filter_dims,
                 p.filter_dims()
             )));
+        }
+        if let Some(g) = &self.geometry {
+            if *g != p.with_batch(1) {
+                return Err(Error::ShapeMismatch(format!(
+                    "plan artifact is keyed on geometry {g:?}, run asked for {:?}",
+                    p.with_batch(1)
+                )));
+            }
         }
         Ok(())
     }
@@ -285,7 +370,7 @@ pub(crate) fn check_geometry(
 }
 
 /// Like [`check_geometry`] but without a filter tensor — the prepacked
-/// path validates the filter through [`PackedFilter::validate`] instead.
+/// path validates the filter through [`PlanArtifact::validate`] instead.
 pub(crate) fn check_io_geometry(input: &Tensor4, p: &ConvParams, out: &Tensor4) -> Result<()> {
     if input.dims() != p.input_dims() {
         return Err(Error::ShapeMismatch(format!(
@@ -355,6 +440,13 @@ pub enum AlgoKind {
     /// Dedicated depthwise kernels (`groups == C_in == C_out`); NHWC and
     /// CHWN8 only. The planner offers it only for depthwise geometry.
     Depthwise,
+    /// Indirect convolution (Dukhan 2019): a plan-time offset-indirection
+    /// buffer replaces the im2col copy; NHWC and NCHW.
+    Indirect,
+    /// Winograd F(2×2, 3×3) fast convolution; NHWC and NCHW, dense
+    /// 3×3 stride-1 dilation-1 geometry only, with a documented looser
+    /// error bound ([`winograd::WINOGRAD_TOLERANCE`]).
+    Winograd,
     /// Unoptimized seven-loop reference (tests, ablations).
     Naive,
 }
@@ -366,14 +458,16 @@ impl AlgoKind {
     /// use [`AlgoKind::ALL`] to enumerate every implemented algorithm.
     pub const BENCHED: [AlgoKind; 3] = [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col];
 
-    /// Every implemented algorithm, including the oracle, MEC and the
-    /// depthwise specialist.
-    pub const ALL: [AlgoKind; 6] = [
+    /// Every implemented algorithm, including the oracle, MEC, the
+    /// depthwise specialist and the post-paper indirect/Winograd families.
+    pub const ALL: [AlgoKind; 8] = [
         AlgoKind::Direct,
         AlgoKind::Im2win,
         AlgoKind::Im2col,
         AlgoKind::Mec,
         AlgoKind::Depthwise,
+        AlgoKind::Indirect,
+        AlgoKind::Winograd,
         AlgoKind::Naive,
     ];
 
@@ -385,6 +479,8 @@ impl AlgoKind {
             "im2col" => Some(AlgoKind::Im2col),
             "mec" => Some(AlgoKind::Mec),
             "depthwise" => Some(AlgoKind::Depthwise),
+            "indirect" => Some(AlgoKind::Indirect),
+            "winograd" => Some(AlgoKind::Winograd),
             "naive" => Some(AlgoKind::Naive),
             _ => None,
         }
@@ -398,6 +494,8 @@ impl AlgoKind {
             AlgoKind::Im2col => Box::new(im2col::Im2colConv::new()),
             AlgoKind::Mec => Box::new(mec::MecConv::new()),
             AlgoKind::Depthwise => Box::new(depthwise::DepthwiseConv::new()),
+            AlgoKind::Indirect => Box::new(indirect::IndirectConv::new()),
+            AlgoKind::Winograd => Box::new(winograd::WinogradConv::new()),
             AlgoKind::Naive => Box::new(naive::NaiveConv),
         }
     }
@@ -422,6 +520,8 @@ impl AlgoKind {
             AlgoKind::Im2col => "im2col",
             AlgoKind::Mec => "mec",
             AlgoKind::Depthwise => "depthwise",
+            AlgoKind::Indirect => "indirect",
+            AlgoKind::Winograd => "winograd",
             AlgoKind::Naive => "naive",
         }
     }
@@ -569,9 +669,11 @@ mod tests {
         for k in AlgoKind::ALL {
             assert_eq!(AlgoKind::parse(k.name()), Some(k));
         }
-        assert_eq!(AlgoKind::parse("winograd"), None);
+        assert_eq!(AlgoKind::parse("fft"), None);
         assert!(!AlgoKind::BENCHED.contains(&AlgoKind::Mec));
         assert!(!AlgoKind::BENCHED.contains(&AlgoKind::Naive));
+        assert!(!AlgoKind::BENCHED.contains(&AlgoKind::Indirect));
+        assert!(!AlgoKind::BENCHED.contains(&AlgoKind::Winograd));
     }
 
     #[test]

@@ -68,12 +68,13 @@ impl ConvAlgorithm for NaiveConv {
         true
     }
 
-    fn run_into(
+    fn run_with_workspace(
         &self,
         input: &Tensor4,
         filter: &Tensor4,
         p: &ConvParams,
         out: &mut Tensor4,
+        _ws: &mut crate::engine::Workspace,
     ) -> Result<()> {
         check_geometry(input, filter, p, out)?;
         let r = reference_conv(input, filter, p, input.layout());

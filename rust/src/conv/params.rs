@@ -12,8 +12,9 @@ use crate::tensor::Dims;
 /// depthwise convolution, so MobileNet-class models plan and serve through
 /// the same engine as the Table I suite.
 ///
-/// Construct via [`ConvParams::builder`]; the positional constructors are
-/// deprecated thin wrappers kept for downstream source compatibility.
+/// Construct via [`ConvParams::builder`] — the validated builder is the
+/// only construction path, so every instance is consistent by
+/// construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvParams {
     /// Batch size `N_i`.
@@ -179,50 +180,6 @@ impl ConvParams {
     /// Start a [`ConvParamsBuilder`] (the canonical construction path).
     pub fn builder() -> ConvParamsBuilder {
         ConvParamsBuilder::default()
-    }
-
-    /// Square-filter, equal-stride constructor (all of Table I).
-    #[deprecated(note = "use ConvParams::builder()")]
-    pub fn new(
-        n: usize,
-        c_in: usize,
-        h_in: usize,
-        w_in: usize,
-        c_out: usize,
-        h_f: usize,
-        w_f: usize,
-        stride: usize,
-    ) -> Result<Self> {
-        Self::builder()
-            .batch(n)
-            .channels(c_in, c_out)
-            .input(h_in, w_in)
-            .filter(h_f, w_f)
-            .stride(stride)
-            .build()
-    }
-
-    /// Positional constructor with independent strides.
-    #[deprecated(note = "use ConvParams::builder()")]
-    #[allow(clippy::too_many_arguments)]
-    pub fn with_strides(
-        n: usize,
-        c_in: usize,
-        h_in: usize,
-        w_in: usize,
-        c_out: usize,
-        h_f: usize,
-        w_f: usize,
-        stride_h: usize,
-        stride_w: usize,
-    ) -> Result<Self> {
-        Self::builder()
-            .batch(n)
-            .channels(c_in, c_out)
-            .input(h_in, w_in)
-            .filter(h_f, w_f)
-            .stride_hw(stride_h, stride_w)
-            .build()
     }
 
     fn validate(&self) -> Result<()> {
@@ -488,18 +445,6 @@ mod tests {
         // Unset channels / input / filter fail instead of panicking.
         assert!(ConvParams::builder().build().is_err());
         assert!(ConvParams::builder().channels(3, 4).filter(1, 1).build().is_err());
-    }
-
-    #[test]
-    fn deprecated_constructors_still_build() {
-        #[allow(deprecated)]
-        let a = ConvParams::new(2, 3, 5, 5, 4, 3, 3, 1).unwrap();
-        #[allow(deprecated)]
-        let b = ConvParams::with_strides(2, 3, 5, 5, 4, 3, 3, 1, 1).unwrap();
-        let c = table1(2, 3, 5, 4, 3, 1);
-        assert_eq!(a, c);
-        assert_eq!(b, c);
-        assert!(a.has_default_geometry());
     }
 
     #[test]

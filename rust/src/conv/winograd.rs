@@ -1,0 +1,600 @@
+//! Winograd fast convolution `F(2×2, 3×3)` for NHWC and NCHW.
+//!
+//! The minimal-filtering algorithm (Lavin & Gray 2016) computes each 2×2
+//! output tile of a dense 3×3 stride-1 convolution with 16 multiplies
+//! instead of the direct method's 36 — a 2.25× multiply reduction. Per
+//! input tile `d` (4×4) and filter `g` (3×3):
+//!
+//! ```text
+//! U = G·g·Gᵀ          (filter transform — folded into `prepare`)
+//! V = Bᵀ·d·B          (input transform — leased from the Workspace)
+//! Y = Aᵀ·(U ⊙ V)·A    (channel-summed elementwise product + inverse)
+//! ```
+//!
+//! The channel contraction over `U ⊙ V` is phrased as 16 GEMMs
+//! (`M_t[P×C_o] = V_t[P×C_i] · U_t[C_i×C_o]`, one per frequency position
+//! `t`, `P` = tiles per image) over [`crate::gemm::sgemm_fused`], and the
+//! conv [`Epilogue`] fires as the inverse transform stores each output
+//! element — the same fused-store contract the other families honor.
+//!
+//! **Geometry**: only dense `3×3`, stride 1, dilation 1, no padding, no
+//! groups ([`winograd_ok`]). The planner excludes every other layer.
+//!
+//! **Accuracy**: the transforms trade multiplies for adds, so results
+//! carry more rounding noise than direct/im2win/im2col (which match the
+//! reference to ≤ 1e-4). The documented bound is
+//! [`WINOGRAD_TOLERANCE`]; the planner only offers Winograd when its
+//! tolerance budget admits that bound.
+
+use super::{
+    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact,
+};
+use crate::engine::Workspace;
+use crate::error::{Error, Result};
+use crate::gemm::sgemm_fused;
+use crate::simd::{F32x8, LANES};
+use crate::tensor::{AlignedBuf, Layout, Tensor4};
+
+/// Documented accuracy bound of the `F(2×2, 3×3)` path, as the
+/// relative/absolute tolerance under which Winograd output matches
+/// [`super::reference_conv`]. Planners admit Winograd as a candidate only
+/// when their tolerance budget is at least this loose
+/// (`Planner::tolerance >= WINOGRAD_TOLERANCE`).
+pub const WINOGRAD_TOLERANCE: f32 = 1e-3;
+
+/// Whether `p` is Winograd-eligible: dense 3×3, stride 1, and default
+/// generalized geometry (no padding, dilation 1, ungrouped).
+pub fn winograd_ok(p: &ConvParams) -> bool {
+    p.h_f == 3 && p.w_f == 3 && p.stride_h == 1 && p.stride_w == 1 && p.has_default_geometry()
+}
+
+/// Scratch elements the Winograd path moves per call (the input-domain
+/// `V` and product-domain `M` tile stacks across the whole batch) — the
+/// transform-byte term the engine's cost model charges Winograd with.
+pub fn winograd_scratch_len(p: &ConvParams) -> usize {
+    p.n * tiles_per_image(p) * 16 * (p.c_in + p.c_out)
+}
+
+/// 2×2 output tiles per image (edge tiles clipped at odd extents).
+fn tiles_per_image(p: &ConvParams) -> usize {
+    p.h_out().div_ceil(2) * p.w_out().div_ceil(2)
+}
+
+/// Winograd `F(2×2, 3×3)` convolution (NHWC and NCHW).
+#[derive(Debug, Clone, Default)]
+pub struct WinogradConv;
+
+impl WinogradConv {
+    /// Construct the algorithm.
+    pub fn new() -> Self {
+        WinogradConv
+    }
+}
+
+fn check_winograd_geometry(p: &ConvParams) -> Result<()> {
+    if !winograd_ok(p) {
+        return Err(Error::Config(format!(
+            "winograd F(2x2,3x3) requires dense 3x3 stride-1 dilation-1 ungrouped geometry, \
+             got {}x{} filter, stride {}x{}, pad {}x{}, dilation {}x{}, groups {}",
+            p.h_f, p.w_f, p.stride_h, p.stride_w, p.pad_h, p.pad_w, p.dilation_h, p.dilation_w,
+            p.groups
+        )));
+    }
+    Ok(())
+}
+
+impl ConvAlgorithm for WinogradConv {
+    fn name(&self) -> &'static str {
+        "winograd"
+    }
+
+    fn supports(&self, layout: Layout) -> bool {
+        matches!(layout, Layout::Nhwc | Layout::Nchw)
+    }
+
+    fn run_with_workspace(
+        &self,
+        input: &Tensor4,
+        filter: &Tensor4,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        check_geometry(input, filter, p, out)?;
+        check_winograd_geometry(p)?;
+        if !self.supports(input.layout()) {
+            return Err(Error::UnsupportedLayout(format!(
+                "winograd has no {} kernel",
+                input.layout()
+            )));
+        }
+        if filter.layout() != input.layout() {
+            return Err(Error::UnsupportedLayout(format!(
+                "winograd expects filter layout {} to match input {}",
+                filter.layout(),
+                input.layout()
+            )));
+        }
+        // One-shot path: transform the filter for this call, exactly what
+        // `prepare` would cache.
+        let packed = self.prepare(filter, p, input.layout())?;
+        self.run_prepacked(input, &packed, p, out, ws, Epilogue::None)
+    }
+
+    fn prepare(&self, filter: &Tensor4, p: &ConvParams, layout: Layout) -> Result<PlanArtifact> {
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        if !self.supports(layout) {
+            return Err(Error::UnsupportedLayout(format!("winograd has no {layout} kernel")));
+        }
+        check_winograd_geometry(p)?;
+        super::note_filter_pack();
+        // Winograd-domain filter U[t=16][C_i][C_o]: the 16 GEMMs' B
+        // operands, channel-minor so the product lands channel-minor too.
+        let (ci, co) = (p.c_in, p.c_out);
+        let mut buf = AlignedBuf::zeroed(16 * ci * co);
+        for j in 0..co {
+            for c in 0..ci {
+                let g = [
+                    filter.get(j, c, 0, 0),
+                    filter.get(j, c, 0, 1),
+                    filter.get(j, c, 0, 2),
+                    filter.get(j, c, 1, 0),
+                    filter.get(j, c, 1, 1),
+                    filter.get(j, c, 1, 2),
+                    filter.get(j, c, 2, 0),
+                    filter.get(j, c, 2, 1),
+                    filter.get(j, c, 2, 2),
+                ];
+                // W = G·g (4×3 = 4×3·3×3), rows of G: [1,0,0],
+                // [1/2,1/2,1/2], [1/2,-1/2,1/2], [0,0,1].
+                let mut w = [0.0f32; 12];
+                for col in 0..3 {
+                    let (g0, g1, g2) = (g[col], g[3 + col], g[6 + col]);
+                    w[col] = g0;
+                    w[3 + col] = 0.5 * (g0 + g1 + g2);
+                    w[6 + col] = 0.5 * (g0 - g1 + g2);
+                    w[9 + col] = g2;
+                }
+                // U = W·Gᵀ (4×4), same stencil along rows.
+                for row in 0..4 {
+                    let (w0, w1, w2) = (w[3 * row], w[3 * row + 1], w[3 * row + 2]);
+                    let u = [w0, 0.5 * (w0 + w1 + w2), 0.5 * (w0 - w1 + w2), w2];
+                    for (t, &uv) in u.iter().enumerate() {
+                        buf[(4 * row + t) * ci * co + c * co + j] = uv;
+                    }
+                }
+            }
+        }
+        Ok(PlanArtifact::from_buf(self.name(), layout, p, buf).with_geometry(p))
+    }
+
+    fn run_prepacked(
+        &self,
+        input: &Tensor4,
+        packed: &PlanArtifact,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ws: &mut Workspace,
+        ep: Epilogue<'_>,
+    ) -> Result<()> {
+        check_io_geometry(input, p, out)?;
+        packed.validate(self.name(), p, input.layout())?;
+        check_winograd_geometry(p)?;
+        ep.check(p.c_out)?;
+        let u = packed
+            .buf()
+            .ok_or_else(|| Error::Config("winograd artifact holds no transformed filter".into()))?;
+        let (ci, co) = (p.c_in, p.c_out);
+        let tiles = tiles_per_image(p);
+        let mut v = ws.take("winograd.v", 16 * tiles * ci);
+        let mut m = ws.take("winograd.m", 16 * tiles * co);
+        for n in 0..p.n {
+            match input.layout() {
+                Layout::Nhwc => transform_input_nhwc(input.data(), p, n, &mut v),
+                Layout::Nchw => transform_input_nchw(input.data(), p, n, &mut v),
+                other => {
+                    ws.put("winograd.m", m);
+                    ws.put("winograd.v", v);
+                    return Err(Error::UnsupportedLayout(format!(
+                        "winograd has no {other} kernel"
+                    )));
+                }
+            }
+            // M_t[P×C_o] = V_t[P×C_i] · U_t[C_i×C_o]; the GEMM
+            // accumulates, so the product stack starts from zero.
+            m.fill(0.0);
+            for t in 0..16 {
+                sgemm_fused(
+                    tiles,
+                    co,
+                    ci,
+                    &v[t * tiles * ci..],
+                    ci,
+                    &u[t * ci * co..],
+                    co,
+                    &mut m[t * tiles * co..],
+                    co,
+                    None,
+                );
+            }
+            match input.layout() {
+                Layout::Nhwc => inverse_nhwc(&m, p, n, out, ep),
+                Layout::Nchw => inverse_nchw(&m, p, n, out, ep),
+                _ => unreachable!("checked above"),
+            }
+        }
+        ws.put("winograd.m", m);
+        ws.put("winograd.v", v);
+        Ok(())
+    }
+}
+
+/// `V = Bᵀ·d·B` on a 4×4 tile held as 16 values (any scalar-like type).
+macro_rules! bt_d_b {
+    ($d:expr, $v:expr, $add:ident, $sub:ident) => {{
+        // W = Bᵀ·d, rows of Bᵀ: [1,0,-1,0], [0,1,1,0], [0,-1,1,0], [0,1,0,-1].
+        let mut w = [$d[0]; 16];
+        for j in 0..4 {
+            w[j] = $sub($d[j], $d[8 + j]);
+            w[4 + j] = $add($d[4 + j], $d[8 + j]);
+            w[8 + j] = $sub($d[8 + j], $d[4 + j]);
+            w[12 + j] = $sub($d[4 + j], $d[12 + j]);
+        }
+        // V = W·B, same stencil along rows.
+        for i in 0..4 {
+            let r = 4 * i;
+            $v[r] = $sub(w[r], w[r + 2]);
+            $v[r + 1] = $add(w[r + 1], w[r + 2]);
+            $v[r + 2] = $sub(w[r + 2], w[r + 1]);
+            $v[r + 3] = $sub(w[r + 1], w[r + 3]);
+        }
+    }};
+}
+
+#[inline(always)]
+fn adds(a: f32, b: f32) -> f32 {
+    a + b
+}
+
+#[inline(always)]
+fn subs(a: f32, b: f32) -> f32 {
+    a - b
+}
+
+#[inline(always)]
+fn addv(a: F32x8, b: F32x8) -> F32x8 {
+    a.add(b)
+}
+
+#[inline(always)]
+fn subv(a: F32x8, b: F32x8) -> F32x8 {
+    a.sub(b)
+}
+
+/// NHWC input transform of image `n` into `V[t=16][P][C_i]`,
+/// channel-vectorized 8 wide with a scalar tail. Edge tiles past the
+/// input extent (odd `H_o`/`W_o`) are zero-filled.
+fn transform_input_nhwc(x: &[f32], p: &ConvParams, n: usize, v: &mut [f32]) {
+    let (ci, w_in, h_in) = (p.c_in, p.w_in, p.h_in);
+    let (th_n, tw_n) = (p.h_out().div_ceil(2), p.w_out().div_ceil(2));
+    let tiles = th_n * tw_n;
+    let xi = &x[n * h_in * w_in * ci..][..h_in * w_in * ci];
+    for th in 0..th_n {
+        for tw in 0..tw_n {
+            let pt = th * tw_n + tw;
+            let (h0, w0) = (th * 2, tw * 2);
+            let mut c0 = 0;
+            while c0 + LANES <= ci {
+                let mut d = [F32x8::zero(); 16];
+                for (i, row) in d.chunks_mut(4).enumerate() {
+                    if h0 + i >= h_in {
+                        continue;
+                    }
+                    for (j, dv) in row.iter_mut().enumerate() {
+                        if w0 + j < w_in {
+                            // SAFETY: (h0+i, w0+j) in range, c0+8 <= ci.
+                            *dv = unsafe {
+                                F32x8::load(
+                                    xi.as_ptr().add(((h0 + i) * w_in + w0 + j) * ci + c0),
+                                )
+                            };
+                        }
+                    }
+                }
+                let mut vt = [F32x8::zero(); 16];
+                bt_d_b!(d, vt, addv, subv);
+                for (t, val) in vt.iter().enumerate() {
+                    // SAFETY: index < 16·P·C_i by construction.
+                    unsafe { val.store(v.as_mut_ptr().add((t * tiles + pt) * ci + c0)) };
+                }
+                c0 += LANES;
+            }
+            for c in c0..ci {
+                let mut d = [0.0f32; 16];
+                for i in 0..4 {
+                    for j in 0..4 {
+                        if h0 + i < h_in && w0 + j < w_in {
+                            d[4 * i + j] = xi[((h0 + i) * w_in + w0 + j) * ci + c];
+                        }
+                    }
+                }
+                let mut vt = [0.0f32; 16];
+                bt_d_b!(d, vt, adds, subs);
+                for (t, val) in vt.iter().enumerate() {
+                    v[(t * tiles + pt) * ci + c] = *val;
+                }
+            }
+        }
+    }
+}
+
+/// NCHW input transform of image `n` into `V[t=16][P][C_i]` (scalar: the
+/// channel dimension is outermost in the source, innermost in `V`).
+fn transform_input_nchw(x: &[f32], p: &ConvParams, n: usize, v: &mut [f32]) {
+    let (ci, w_in, h_in) = (p.c_in, p.w_in, p.h_in);
+    let (th_n, tw_n) = (p.h_out().div_ceil(2), p.w_out().div_ceil(2));
+    let tiles = th_n * tw_n;
+    let xi = &x[n * ci * h_in * w_in..][..ci * h_in * w_in];
+    for c in 0..ci {
+        let plane = &xi[c * h_in * w_in..][..h_in * w_in];
+        for th in 0..th_n {
+            for tw in 0..tw_n {
+                let pt = th * tw_n + tw;
+                let (h0, w0) = (th * 2, tw * 2);
+                let mut d = [0.0f32; 16];
+                for i in 0..4 {
+                    for j in 0..4 {
+                        if h0 + i < h_in && w0 + j < w_in {
+                            d[4 * i + j] = plane[(h0 + i) * w_in + w0 + j];
+                        }
+                    }
+                }
+                let mut vt = [0.0f32; 16];
+                bt_d_b!(d, vt, adds, subs);
+                for (t, val) in vt.iter().enumerate() {
+                    v[(t * tiles + pt) * ci + c] = *val;
+                }
+            }
+        }
+    }
+}
+
+/// `Y = Aᵀ·z·A` for a 4×4 tile `z`: the 2×2 output tile.
+macro_rules! at_z_a {
+    ($z:expr, $add:ident, $sub:ident) => {{
+        // t0 = row sums through Aᵀ row [1,1,1,0]; t1 through [0,1,-1,-1].
+        let t0 = [
+            $add($add($z[0], $z[4]), $z[8]),
+            $add($add($z[1], $z[5]), $z[9]),
+            $add($add($z[2], $z[6]), $z[10]),
+            $add($add($z[3], $z[7]), $z[11]),
+        ];
+        let t1 = [
+            $sub($sub($z[4], $z[8]), $z[12]),
+            $sub($sub($z[5], $z[9]), $z[13]),
+            $sub($sub($z[6], $z[10]), $z[14]),
+            $sub($sub($z[7], $z[11]), $z[15]),
+        ];
+        [
+            $add($add(t0[0], t0[1]), t0[2]),
+            $sub($sub(t0[1], t0[2]), t0[3]),
+            $add($add(t1[0], t1[1]), t1[2]),
+            $sub($sub(t1[1], t1[2]), t1[3]),
+        ]
+    }};
+}
+
+/// NHWC inverse transform + fused epilogue store for image `n`:
+/// `M[t=16][P][C_o]` → 2×2 output tiles, 8 channels per vector.
+fn inverse_nhwc(m: &[f32], p: &ConvParams, n: usize, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let (co, h_o, w_o) = (p.c_out, p.h_out(), p.w_out());
+    let (th_n, tw_n) = (h_o.div_ceil(2), w_o.div_ceil(2));
+    let tiles = th_n * tw_n;
+    let o = &mut out.data_mut()[n * h_o * w_o * co..][..h_o * w_o * co];
+    for th in 0..th_n {
+        for tw in 0..tw_n {
+            let pt = th * tw_n + tw;
+            let mut c0 = 0;
+            while c0 + LANES <= co {
+                let mut z = [F32x8::zero(); 16];
+                for (t, zv) in z.iter_mut().enumerate() {
+                    // SAFETY: (t·P + pt)·C_o + c0 + 8 <= 16·P·C_o.
+                    *zv = unsafe { F32x8::load(m.as_ptr().add((t * tiles + pt) * co + c0)) };
+                }
+                let y = at_z_a!(z, addv, subv);
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let (ho, wo) = (th * 2 + dy, tw * 2 + dx);
+                        if ho < h_o && wo < w_o {
+                            let val = ep.apply_channels(c0, y[2 * dy + dx]);
+                            // SAFETY: (ho·W_o + wo)·C_o + c0 + 8 <= len.
+                            unsafe {
+                                val.store(o.as_mut_ptr().add((ho * w_o + wo) * co + c0))
+                            };
+                        }
+                    }
+                }
+                c0 += LANES;
+            }
+            for j in c0..co {
+                let mut z = [0.0f32; 16];
+                for (t, zv) in z.iter_mut().enumerate() {
+                    *zv = m[(t * tiles + pt) * co + j];
+                }
+                let y = at_z_a!(z, adds, subs);
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let (ho, wo) = (th * 2 + dy, tw * 2 + dx);
+                        if ho < h_o && wo < w_o {
+                            o[(ho * w_o + wo) * co + j] = ep.apply(j, y[2 * dy + dx]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// NCHW inverse transform + fused epilogue store for image `n` (scalar).
+fn inverse_nchw(m: &[f32], p: &ConvParams, n: usize, out: &mut Tensor4, ep: Epilogue<'_>) {
+    let (co, h_o, w_o) = (p.c_out, p.h_out(), p.w_out());
+    let (th_n, tw_n) = (h_o.div_ceil(2), w_o.div_ceil(2));
+    let tiles = th_n * tw_n;
+    let o = &mut out.data_mut()[n * co * h_o * w_o..][..co * h_o * w_o];
+    for j in 0..co {
+        let oplane = &mut o[j * h_o * w_o..][..h_o * w_o];
+        for th in 0..th_n {
+            for tw in 0..tw_n {
+                let pt = th * tw_n + tw;
+                let mut z = [0.0f32; 16];
+                for (t, zv) in z.iter_mut().enumerate() {
+                    *zv = m[(t * tiles + pt) * co + j];
+                }
+                let y = at_z_a!(z, adds, subs);
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let (ho, wo) = (th * 2 + dy, tw * 2 + dx);
+                        if ho < h_o && wo < w_o {
+                            oplane[ho * w_o + wo] = ep.apply(j, y[2 * dy + dx]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference_conv;
+    use crate::coordinator::layers;
+
+    fn check(p: &ConvParams, layout: Layout, seed: u64) {
+        let input = Tensor4::random(p.input_dims(), layout, seed);
+        let filter = Tensor4::random(p.filter_dims(), layout, seed + 1);
+        let want = reference_conv(&input, &filter, p, layout);
+        let got = WinogradConv::new().run(&input, &filter, p).unwrap();
+        assert!(
+            want.allclose(&got, WINOGRAD_TOLERANCE, WINOGRAD_TOLERANCE),
+            "{layout} {p:?}: diff {}",
+            want.max_abs_diff(&got)
+        );
+    }
+
+    #[test]
+    fn matches_reference_within_documented_tolerance() {
+        // Odd and even output extents (edge-tile clipping) both ways.
+        for (hw, n, ci, co) in [(6, 2, 3, 5), (9, 1, 4, 4), (13, 3, 2, 9)] {
+            let p = ConvParams::builder()
+                .batch(n)
+                .channels(ci, co)
+                .input(hw, hw)
+                .filter(3, 3)
+                .stride(1)
+                .build()
+                .unwrap();
+            check(&p, Layout::Nhwc, hw as u64);
+            check(&p, Layout::Nchw, hw as u64 + 50);
+        }
+    }
+
+    #[test]
+    fn table1_3x3_layers_parity_within_tolerance() {
+        // Every 3×3 stride-1 Table I layer, at reduced scale so the test
+        // stays fast; the tolerance is the documented WINOGRAD_TOLERANCE.
+        for l in layers::TABLE1.iter().filter(|l| l.k == 3 && l.s == 1) {
+            let p = l.scaled_params(1, 4);
+            if !winograd_ok(&p) {
+                continue;
+            }
+            check(&p, Layout::Nhwc, l.c_in as u64);
+            check(&p, Layout::Nchw, l.c_out as u64);
+        }
+    }
+
+    #[test]
+    fn prepacked_fused_epilogue_matches_separate_passes() {
+        let p = ConvParams::builder()
+            .batch(2)
+            .channels(6, 11)
+            .input(9, 7)
+            .filter(3, 3)
+            .stride(1)
+            .build()
+            .unwrap();
+        for layout in [Layout::Nhwc, Layout::Nchw] {
+            let input = Tensor4::random(p.input_dims(), layout, 3);
+            let filter = Tensor4::random(p.filter_dims(), layout, 4);
+            let bias: Vec<f32> = (0..p.c_out).map(|j| j as f32 * 0.25 - 1.0).collect();
+            let algo = WinogradConv::new();
+            let packed = algo.prepare(&filter, &p, layout).unwrap();
+            let mut ws = Workspace::new();
+            let mut fused = Tensor4::zeros(p.output_dims(), layout);
+            algo.run_prepacked(&input, &packed, &p, &mut fused, &mut ws, Epilogue::BiasRelu(&bias))
+                .unwrap();
+            let mut want = algo.run(&input, &filter, &p).unwrap();
+            Epilogue::BiasRelu(&bias).apply_to(&mut want);
+            assert!(want.allclose(&fused, 1e-5, 1e-5), "{layout}");
+        }
+    }
+
+    #[test]
+    fn rejects_generalized_geometry() {
+        let base = ConvParams::builder().batch(1).channels(4, 4).input(8, 8);
+        let bad = [
+            base.filter(5, 5).stride(1).build().unwrap(),
+            base.filter(3, 3).stride(2).build().unwrap(),
+            base.filter(3, 3).stride(1).pad(1).build().unwrap(),
+            base.filter(3, 3).stride(1).dilation(2).build().unwrap(),
+            base.filter(3, 3).stride(1).groups(2).build().unwrap(),
+        ];
+        let algo = WinogradConv::new();
+        for p in &bad {
+            assert!(!winograd_ok(p), "{p:?}");
+            let filter = Tensor4::random(p.filter_dims(), Layout::Nhwc, 1);
+            assert!(algo.prepare(&filter, p, Layout::Nhwc).is_err(), "{p:?}");
+            let input = Tensor4::random(p.input_dims(), Layout::Nhwc, 2);
+            let mut out = Tensor4::zeros(p.output_dims(), Layout::Nhwc);
+            assert!(algo.run_into(&input, &filter, p, &mut out).is_err(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn artifact_is_batch_agnostic_and_geometry_keyed() {
+        let p4 = ConvParams::builder()
+            .batch(4)
+            .channels(3, 7)
+            .input(10, 10)
+            .filter(3, 3)
+            .stride(1)
+            .build()
+            .unwrap();
+        let filter = Tensor4::random(p4.filter_dims(), Layout::Nchw, 5);
+        let algo = WinogradConv::new();
+        let packed = algo.prepare(&filter, &p4, Layout::Nchw).unwrap();
+        let p1 = p4.with_batch(1);
+        let input = Tensor4::random(p1.input_dims(), Layout::Nchw, 6);
+        let mut out = Tensor4::zeros(p1.output_dims(), Layout::Nchw);
+        let mut ws = Workspace::new();
+        algo.run_prepacked(&input, &packed, &p1, &mut out, &mut ws, Epilogue::None).unwrap();
+        let want = reference_conv(&input, &filter, &p1, Layout::Nchw);
+        assert!(want.allclose(&out, WINOGRAD_TOLERANCE, WINOGRAD_TOLERANCE));
+        // Different input extent: geometry-keyed artifact refuses.
+        let p_other = ConvParams::builder()
+            .batch(1)
+            .channels(3, 7)
+            .input(12, 10)
+            .filter(3, 3)
+            .stride(1)
+            .build()
+            .unwrap();
+        assert!(packed.validate("winograd", &p_other, Layout::Nchw).is_err());
+    }
+}

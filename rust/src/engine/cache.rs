@@ -510,8 +510,9 @@ mod tests {
     fn rejects_malformed_documents() {
         assert!(parse_document("[]").is_err());
         assert!(parse_document(r#"{"version": 99, "entries": {}}"#).is_err());
+        // "winograd" is a real algorithm now — use a genuinely unknown name.
         assert!(
-            parse_document(r#"{"version": 1, "entries": {"k": {"algo": "winograd"}}}"#).is_err()
+            parse_document(r#"{"version": 1, "entries": {"k": {"algo": "fft"}}}"#).is_err()
         );
         assert!(parse_document(r#"{"version": 1}"#).is_err());
     }

@@ -119,20 +119,31 @@ impl GraphPlan {
 /// and thread count — everything the DP's answer depends on besides the
 /// calibration profile (which the cache tracks separately via
 /// [`PlanCache::sync_profile`]). One-shot planners key separately, like
-/// [`Planner::cache_key`].
-pub fn graph_key(model: &Model, batch: usize, threads: usize, prepacked: bool) -> String {
-    let base = format!(
+/// [`Planner::cache_key`], and so do planners with a non-default
+/// numerical-tolerance budget (`tolerance`, see [`Planner::tolerance`]):
+/// the budget changes the candidate set, so its decisions must not trade
+/// entries with the default budget's.
+pub fn graph_key(
+    model: &Model,
+    batch: usize,
+    threads: usize,
+    prepacked: bool,
+    tolerance: f32,
+) -> String {
+    let mut key = format!(
         "g{}-from_{}-b{}-t{}",
         model.fingerprint(),
         model.layout().name(),
         batch,
         threads
     );
-    if prepacked {
-        base
-    } else {
-        format!("{base}-oneshot")
+    if !prepacked {
+        key.push_str("-oneshot");
     }
+    if tolerance != super::planner::DEFAULT_TOLERANCE {
+        key.push_str(&format!("-tol{tolerance:e}"));
+    }
+    key
 }
 
 impl Planner {
@@ -161,10 +172,13 @@ impl Planner {
     }
 
     /// Cheapest algorithm for `p` pinned to `layout` (the DP's node
-    /// cost: no conversion term — edges carry that).
+    /// cost: no conversion term — edges carry that). Ranks the
+    /// geometry-gated candidate set ([`Planner::candidates_for`]), so the
+    /// DP sees the same specialists — depthwise, tolerance-gated Winograd
+    /// — the greedy planner does.
     fn node_plan(&self, p: &ConvParams, layout: Layout) -> LayerPlan {
         let mut best: Option<LayerPlan> = None;
-        for (algo, l) in self.candidates() {
+        for (algo, l) in self.candidates_for(p) {
             if l != layout {
                 continue;
             }
@@ -195,7 +209,7 @@ impl Planner {
     /// layers are analytic-only, mirroring [`Planner::plan_model`].
     pub fn plan_graph(&self, model: &Model, cache: &mut PlanCache) -> Result<GraphPlan> {
         cache.sync_profile(&self.profile_fingerprint());
-        let key = graph_key(model, self.batch, self.threads, self.prepacked);
+        let key = graph_key(model, self.batch, self.threads, self.prepacked, self.tolerance);
         if let Some(hit) = cache.get_graph(&key) {
             let needs_upgrade = self.refine
                 && hit.plans.iter().any(|p| {
@@ -420,17 +434,45 @@ mod tests {
     }
 
     #[test]
-    fn graph_key_separates_models_batches_threads_and_execution() {
+    fn graph_key_separates_models_batches_threads_execution_and_tolerance() {
+        use super::super::planner::DEFAULT_TOLERANCE;
+        use crate::conv::winograd::WINOGRAD_TOLERANCE;
         let a = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
         let b = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
         let c = zoo::tinynet(Layout::Nhwc, AlgoKind::Naive, 1).unwrap();
-        let base = graph_key(&a, 8, 4, true);
-        assert_ne!(base, graph_key(&b, 8, 4, true));
-        assert_ne!(base, graph_key(&c, 8, 4, true));
-        assert_ne!(base, graph_key(&a, 16, 4, true));
-        assert_ne!(base, graph_key(&a, 8, 2, true));
-        assert_ne!(base, graph_key(&a, 8, 4, false));
-        assert!(graph_key(&a, 8, 4, false).ends_with("-oneshot"));
+        let tol = DEFAULT_TOLERANCE;
+        let base = graph_key(&a, 8, 4, true, tol);
+        assert_ne!(base, graph_key(&b, 8, 4, true, tol));
+        assert_ne!(base, graph_key(&c, 8, 4, true, tol));
+        assert_ne!(base, graph_key(&a, 16, 4, true, tol));
+        assert_ne!(base, graph_key(&a, 8, 2, true, tol));
+        assert_ne!(base, graph_key(&a, 8, 4, false, tol));
+        assert!(graph_key(&a, 8, 4, false, tol).ends_with("-oneshot"));
+        // A loosened tolerance budget keys separately; the default leaves
+        // the key unchanged (warm caches stay valid).
+        assert_ne!(base, graph_key(&a, 8, 4, true, WINOGRAD_TOLERANCE));
+        assert!(graph_key(&a, 8, 4, true, WINOGRAD_TOLERANCE).contains("-tol"));
+        assert!(!base.contains("-tol"));
+    }
+
+    #[test]
+    fn dp_assigns_winograd_under_a_loose_tolerance_budget() {
+        // A 3×3 stride-1 dense stack planned with a Winograd-admitting
+        // budget should put Winograd on at least one node; the default
+        // budget must never produce a Winograd node.
+        let loose =
+            Planner { tolerance: crate::conv::winograd::WINOGRAD_TOLERANCE, ..pinned() };
+        let model = zoo::vgg_stack(Layout::Nhwc, AlgoKind::Naive, 64, 1).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let graph = loose.plan_graph(&model, &mut cache).unwrap();
+        assert!(
+            graph.plans.iter().any(|p| p.algo == AlgoKind::Winograd),
+            "loose budget never assigned winograd: {:?}",
+            graph.plans.iter().map(|p| p.algo).collect::<Vec<_>>()
+        );
+        let strict = pinned();
+        let graph = strict.plan_graph(&model, &mut cache).unwrap();
+        assert!(graph.plans.iter().all(|p| p.algo != AlgoKind::Winograd));
     }
 
     #[test]

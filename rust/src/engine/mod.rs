@@ -41,7 +41,7 @@
 //!   so a slow caller never stalls admission for everyone else;
 //! * [`Engine`] — the planned-model executor tying them together: it
 //!   applies a plan to a [`Model`], packs every convolution filter once
-//!   into its kernel-consumable order ([`crate::conv::PackedFilter`]),
+//!   into its kernel-consumable order ([`crate::conv::PlanArtifact`]),
 //!   and runs forwards through the workspace with each layer's bias —
 //!   and a directly following ReLU — fused into the kernel's store
 //!   epilogue ([`crate::conv::Epilogue`]), so steady-state serving
@@ -83,7 +83,7 @@ pub use server::{Inference, Server, ServerReport, ShardConfig};
 pub use sharded::{ShardedReport, ShardedServer};
 pub use workspace::Workspace;
 
-use crate::conv::{Epilogue, PackedFilter};
+use crate::conv::{Epilogue, PlanArtifact};
 use crate::error::{Error, Result};
 use crate::model::{Model, Op};
 use crate::model::{global_avg_pool_into, linear_into, max_pool2d_into, relu_inplace};
@@ -105,7 +105,7 @@ pub struct Engine {
     entry_layout: Layout,
     /// One pre-packed filter per convolution layer, in layer order —
     /// built at plan time, so request-path forwards never re-pack.
-    packed: Vec<PackedFilter>,
+    packed: Vec<PlanArtifact>,
     /// Per-op flag: `true` marks a [`Op::Relu`] that is folded into the
     /// preceding convolution's store epilogue (the executor skips it).
     fused_relu: Vec<bool>,
@@ -205,7 +205,7 @@ impl Engine {
 
     /// The per-layer packed filters, in convolution-layer order (one per
     /// conv; packed once at plan time).
-    pub fn packed_filters(&self) -> &[PackedFilter] {
+    pub fn packed_filters(&self) -> &[PlanArtifact] {
         &self.packed
     }
 

@@ -47,7 +47,9 @@ use super::calibrate::CalibrationProfile;
 use crate::autotune::tune_w_block;
 use crate::conv::im2col::im2col_matrix_len;
 use crate::conv::im2win::{im2win_dims, DEFAULT_W_BLOCK};
+use crate::conv::indirect::indirection_len;
 use crate::conv::mec::mec_matrix_len;
+use crate::conv::winograd::{winograd_ok, winograd_scratch_len, WINOGRAD_TOLERANCE};
 use crate::conv::{AlgoKind, ConvParams};
 use crate::error::{Error, Result};
 use crate::model::{Model, Op};
@@ -98,7 +100,22 @@ pub struct Planner {
     /// every call; the two execution models rank candidates differently,
     /// so they also cache under distinct keys ([`Planner::cache_key`]).
     pub prepacked: bool,
+    /// Numerical-tolerance budget for candidate admission: an algorithm
+    /// whose documented error bound is looser than this budget is not a
+    /// candidate. The default ([`DEFAULT_TOLERANCE`], 1e-4) is the parity
+    /// bar every paper algorithm meets; loosening the budget to at least
+    /// [`WINOGRAD_TOLERANCE`] (1e-3) admits Winograd F(2×2, 3×3) on its
+    /// eligible 3×3 stride-1 dense layers. Planners with different
+    /// budgets rank different candidate sets, so the budget is part of
+    /// [`Planner::cache_key`] whenever it is not the default.
+    pub tolerance: f32,
 }
+
+/// Default [`Planner::tolerance`]: the ≤ 1e-4 reference-parity bar the
+/// paper's algorithm families (and indirect convolution) all meet. Under
+/// this default Winograd is *not* a candidate — its documented bound is
+/// [`WINOGRAD_TOLERANCE`].
+pub const DEFAULT_TOLERANCE: f32 = 1e-4;
 
 impl Default for Planner {
     fn default() -> Self {
@@ -136,6 +153,7 @@ impl Planner {
             refine_repeats: 3,
             profile: None,
             prepacked: true,
+            tolerance: DEFAULT_TOLERANCE,
         }
     }
 
@@ -177,7 +195,13 @@ impl Planner {
     /// the planner actually ranks.
     pub fn candidates(&self) -> Vec<(AlgoKind, Layout)> {
         let mut out = Vec::new();
-        for algo in [AlgoKind::Direct, AlgoKind::Im2win, AlgoKind::Im2col, AlgoKind::Mec] {
+        for algo in [
+            AlgoKind::Direct,
+            AlgoKind::Im2win,
+            AlgoKind::Im2col,
+            AlgoKind::Mec,
+            AlgoKind::Indirect,
+        ] {
             let built = algo.build();
             for layout in Layout::ALL {
                 if built.supports(layout) {
@@ -189,14 +213,23 @@ impl Planner {
     }
 
     /// Candidate pairs for a specific geometry: [`Planner::candidates`]
-    /// plus the depthwise specialist (NHWC, CHWN8) when the layer is
-    /// depthwise. The specialist refuses other geometry, so it never
-    /// appears for dense/grouped-but-not-depthwise layers.
+    /// plus the geometry-gated specialists. The depthwise specialist
+    /// (NHWC, CHWN8) joins when the layer is depthwise; Winograd
+    /// F(2×2, 3×3) (NHWC, NCHW) joins only when the layer passes
+    /// [`winograd_ok`] (3×3, stride 1, dense default geometry) **and**
+    /// this planner's [`Planner::tolerance`] budget admits Winograd's
+    /// documented [`WINOGRAD_TOLERANCE`] error bound. Gated specialists
+    /// refuse other geometry at run time, so the gate keeps the ranked
+    /// set exactly the runnable set.
     pub fn candidates_for(&self, p: &ConvParams) -> Vec<(AlgoKind, Layout)> {
         let mut out = self.candidates();
         if p.is_depthwise() {
             out.push((AlgoKind::Depthwise, Layout::Nhwc));
             out.push((AlgoKind::Depthwise, Layout::Chwn8));
+        }
+        if winograd_ok(p) && self.tolerance >= WINOGRAD_TOLERANCE {
+            out.push((AlgoKind::Winograd, Layout::Nhwc));
+            out.push((AlgoKind::Winograd, Layout::Nchw));
         }
         out
     }
@@ -223,6 +256,17 @@ impl Planner {
             Some(prof) => prof.peak_flops_per_thread() * self.threads as f64,
             None => self.spec.peak_flops_single_core() * self.threads as f64,
         };
+        // Winograd F(2×2, 3×3) computes each output tile with 16 of the
+        // direct method's 36 multiplies (§ the 2.25× arithmetic
+        // reduction), so its arithmetic term is charged at the reduced
+        // count — the efficiency tables stay comparable across
+        // algorithms, and the reduction itself is what lets Winograd win
+        // eligible layers.
+        let flops = if algo == AlgoKind::Winograd {
+            p.flops() as f64 * (16.0 / 36.0)
+        } else {
+            p.flops() as f64
+        };
         let measured = self
             .profile
             .as_ref()
@@ -230,15 +274,23 @@ impl Planner {
         let compute_s = if let Some(eff) = measured {
             // Measured term: empirical peak derated by the fitted
             // efficiency (monotone: better measured eff ⇒ lower estimate).
-            p.flops() as f64 / (peak * eff.max(1e-3))
+            flops / (peak * eff.max(1e-3))
         } else {
             // Base efficiency per algorithm (fraction of peak a well-fed
             // kernel sustains; calibrated to the relative orderings of the
             // paper's Fig. 4, not to absolute GFLOPS).
             let base = match algo {
                 AlgoKind::Im2win => 0.62,
+                // Indirect convolution removes the materialized matrix but
+                // gathers through an offset buffer; it sits between im2win
+                // and direct (Dukhan 2019 reports near-GEMM efficiency).
+                AlgoKind::Indirect => 0.60,
                 AlgoKind::Depthwise => 0.58,
                 AlgoKind::Direct => 0.55,
+                // Winograd's transforms are bandwidth-heavy relative to its
+                // (already discounted) arithmetic; the reduced multiply
+                // count is charged via `flops` above, not here.
+                AlgoKind::Winograd => 0.55,
                 AlgoKind::Im2col => 0.48,
                 AlgoKind::Mec => 0.45,
                 AlgoKind::Naive => 0.02,
@@ -260,6 +312,10 @@ impl Planner {
             // over the full channel extent (its lanes never mix channels).
             let unit_len = match layout {
                 Layout::Nhwc if algo == AlgoKind::Depthwise => p.c_out,
+                // Indirect's NHWC kernel vectorizes over *output* channels
+                // at the accumulator, so a thin-input first layer (C_i = 3)
+                // still fills its lanes.
+                Layout::Nhwc if algo == AlgoKind::Indirect => p.group_c_out(),
                 Layout::Nhwc => p.group_c_in(),
                 Layout::Nchw => p.w_out(),
                 Layout::Chwn | Layout::Chwn8 => p.n,
@@ -272,17 +328,23 @@ impl Planner {
             let group_pen =
                 if p.groups > 1 && algo != AlgoKind::Depthwise { 0.5 } else { 1.0 };
             let eff = (base * layout_q * group_pen * (0.25 + 0.75 * lanes)).max(1e-3);
-            p.flops() as f64 / (peak * eff)
+            flops / (peak * eff)
         };
 
         // Transform traffic: bytes written to scratch plus re-read by the
         // consuming kernel (≈ 2× the scratch size), plus one input read.
         let input_bytes = layout.storage_len(p.input_dims()) as f64 * F32;
         let scratch_elems = match algo {
-            AlgoKind::Direct | AlgoKind::Naive | AlgoKind::Depthwise => 0,
+            // Indirect reads the input through its plan-time offset buffer
+            // with no per-call materialization, so — like direct — it has
+            // no transform traffic; its gather cost lives in the base
+            // efficiency.
+            AlgoKind::Direct | AlgoKind::Naive | AlgoKind::Depthwise | AlgoKind::Indirect => 0,
             AlgoKind::Im2win => layout.storage_len(im2win_dims(p)),
             AlgoKind::Im2col => im2col_matrix_len(p, layout),
             AlgoKind::Mec => mec_matrix_len(p),
+            // V and M tile buffers, written and re-read every call.
+            AlgoKind::Winograd => winograd_scratch_len(p),
         };
         let transform_s = if scratch_elems == 0 {
             0.0
@@ -312,6 +374,14 @@ impl Planner {
             _ if self.prepacked => 0.0,
             AlgoKind::Im2win | AlgoKind::Depthwise => 2.0 * fpack_bytes / bw,
             AlgoKind::Im2col if layout != Layout::Nchw => 2.0 * fpack_bytes / bw,
+            // One-shot indirect rebuilds the filter pack *and* the
+            // per-geometry indirection buffer (i64 offsets) on every call.
+            AlgoKind::Indirect => {
+                (2.0 * fpack_bytes + 2.0 * indirection_len(p) as f64 * 8.0) / bw
+            }
+            // One-shot Winograd re-derives U = G·g·Gᵀ: 16/9 the filter's
+            // footprint, written then re-read by the 16 tile GEMMs.
+            AlgoKind::Winograd => 2.0 * fpack_bytes * (16.0 / 9.0) / bw,
             _ => 0.0,
         };
 
@@ -320,15 +390,21 @@ impl Planner {
 
     /// Cache key for one layer decision under this planner's execution
     /// model: [`layer_key`] plus a `-oneshot` suffix when per-call filter
-    /// packing is costed. Prepacked and one-shot planners rank candidates
-    /// differently and must not trade cache entries.
+    /// packing is costed, plus a `-tol…` suffix when the tolerance budget
+    /// is not [`DEFAULT_TOLERANCE`]. Planners that rank different
+    /// candidate sets must not trade cache entries.
     pub fn cache_key(&self, p: &ConvParams, prev: Layout) -> String {
-        let base = layer_key(p, prev, self.threads);
-        if self.prepacked {
-            base
-        } else {
-            format!("{base}-oneshot")
+        let mut key = layer_key(p, prev, self.threads);
+        if !self.prepacked {
+            key.push_str("-oneshot");
         }
+        // A loosened (or tightened) tolerance budget changes the candidate
+        // set, so those decisions must not trade entries with the default
+        // budget's.
+        if self.tolerance != DEFAULT_TOLERANCE {
+            key.push_str(&format!("-tol{:e}", self.tolerance));
+        }
+        key
     }
 
     /// Pick the cheapest candidate for one layer given the incoming
@@ -431,11 +507,17 @@ mod tests {
     fn candidates_cover_all_supported_pairs() {
         let planner = Planner::new();
         let c = planner.candidates();
-        // direct 4 + im2win 4 + im2col 4 + mec 1 (NHWC only)
-        assert_eq!(c.len(), 13);
+        // direct 4 + im2win 4 + im2col 4 + mec 1 (NHWC only) + indirect 2
+        assert_eq!(c.len(), 15);
         assert!(c.contains(&(AlgoKind::Mec, Layout::Nhwc)));
         assert!(!c.contains(&(AlgoKind::Mec, Layout::Nchw)));
+        assert!(c.contains(&(AlgoKind::Indirect, Layout::Nhwc)));
+        assert!(c.contains(&(AlgoKind::Indirect, Layout::Nchw)));
+        assert!(!c.contains(&(AlgoKind::Indirect, Layout::Chwn)));
         assert!(!c.iter().any(|(a, _)| *a == AlgoKind::Naive));
+        // Winograd is geometry- and tolerance-gated: never in the
+        // geometry-independent set.
+        assert!(!c.iter().any(|(a, _)| *a == AlgoKind::Winograd));
     }
 
     #[test]
@@ -471,6 +553,68 @@ mod tests {
         let calibrated = Planner { profile: Some(profile), ..Planner::new() };
         let plan = calibrated.plan_conv(&dw, Layout::Nhwc);
         assert_eq!(plan.algo, AlgoKind::Depthwise, "calibrated plan picked {}", plan.algo);
+    }
+
+    #[test]
+    fn winograd_candidacy_is_tolerance_and_geometry_gated() {
+        let strict = Planner::new();
+        assert_eq!(strict.tolerance, DEFAULT_TOLERANCE);
+        let loose = Planner { tolerance: WINOGRAD_TOLERANCE, ..Planner::new() };
+        let eligible = ConvParams::builder().batch(8).channels(64, 64).input(14, 14).filter(3, 3).build().unwrap();
+        // Default budget (1e-4) is tighter than Winograd's documented
+        // bound: not a candidate even on eligible geometry.
+        assert!(!strict.candidates_for(&eligible).iter().any(|(a, _)| *a == AlgoKind::Winograd));
+        let c = loose.candidates_for(&eligible);
+        assert!(c.contains(&(AlgoKind::Winograd, Layout::Nhwc)));
+        assert!(c.contains(&(AlgoKind::Winograd, Layout::Nchw)));
+        assert_eq!(c.len(), loose.candidates().len() + 2);
+        // Generalized geometry never qualifies, however loose the budget:
+        // padding, stride, non-3×3, dilation, grouping.
+        let b = ConvParams::builder().batch(8).channels(64, 64).input(14, 14);
+        for p in [
+            b.filter(3, 3).pad(1).build().unwrap(),
+            b.filter(3, 3).stride(2).build().unwrap(),
+            b.filter(5, 5).build().unwrap(),
+            b.filter(3, 3).dilation(2).build().unwrap(),
+            b.filter(3, 3).pad(1).groups(64).build().unwrap(),
+        ] {
+            assert!(
+                !loose.candidates_for(&p).iter().any(|(a, _)| *a == AlgoKind::Winograd),
+                "winograd offered for generalized geometry {p}"
+            );
+        }
+        // The budget is part of the cache key, so strict and loose
+        // planners never trade entries.
+        assert_ne!(
+            strict.cache_key(&eligible, Layout::Nhwc),
+            loose.cache_key(&eligible, Layout::Nhwc)
+        );
+    }
+
+    #[test]
+    fn loose_tolerance_planner_selects_winograd_on_table1_3x3() {
+        // conv9 (64→64 @ 56², 3×3, stride 1): Winograd's 2.25× multiply
+        // reduction beats even generously calibrated dense series, so a
+        // tolerance-admitting planner must select it.
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(56, 56).filter(3, 3).build().unwrap();
+        let mut profile = CalibrationProfile::new(50.0, 1);
+        let base = Planner::new();
+        for (algo, layout) in base.candidates() {
+            profile.set_series(algo, layout, 0.9, 4);
+        }
+        let planner = Planner {
+            profile: Some(profile),
+            threads: 1,
+            tolerance: WINOGRAD_TOLERANCE,
+            ..Planner::new()
+        };
+        let plan = planner.plan_conv(&p, Layout::Nhwc);
+        assert_eq!(plan.algo, AlgoKind::Winograd, "picked {} instead", plan.algo);
+        assert_eq!(plan.w_block, 0);
+        // The same planner under the default budget falls back to a
+        // paper-family algorithm.
+        let strict = Planner { tolerance: DEFAULT_TOLERANCE, ..planner };
+        assert_ne!(strict.plan_conv(&p, Layout::Nhwc).algo, AlgoKind::Winograd);
     }
 
     #[test]

@@ -27,7 +27,8 @@
 //! * an inference [`engine`]: per-layer plan selection over
 //!   (algorithm × layout × blocking) with an analytic cost model, a
 //!   persistent JSON plan cache (shard-aware keys), a reusable scratch
-//!   workspace, per-layer prepacked filters ([`conv::PackedFilter`])
+//!   workspace, per-layer plan artifacts ([`conv::PlanArtifact`]:
+//!   prepacked filters plus geometry-keyed side buffers)
 //!   with bias/ReLU fused into the kernels' store epilogues
 //!   ([`conv::Epilogue`]), a micro-batching server for single-image
 //!   traffic, a sharded deadline-batching front
@@ -73,12 +74,20 @@ pub mod simd;
 pub mod tensor;
 pub mod testutil;
 
+pub use conv::{ConvParams, ConvParamsBuilder};
+
 /// Convenient re-exports of the most common public types.
 pub mod prelude {
     pub use crate::conv::direct::DirectConv;
     pub use crate::conv::im2col::Im2colConv;
     pub use crate::conv::im2win::Im2winConv;
-    pub use crate::conv::{Conv2d, ConvAlgorithm, ConvParams, Epilogue, PackedFilter};
+    pub use crate::conv::indirect::IndirectConv;
+    pub use crate::conv::winograd::WinogradConv;
+    pub use crate::conv::{
+        Conv2d, ConvAlgorithm, ConvParams, ConvParamsBuilder, Epilogue, PlanArtifact,
+    };
+    #[allow(deprecated)]
+    pub use crate::conv::PackedFilter;
     pub use crate::error::{Error, Result};
     pub use crate::tensor::{Dims, Layout, Tensor4};
 }

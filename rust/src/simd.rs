@@ -58,6 +58,12 @@ mod imp {
             unsafe { F32x8(_mm256_add_ps(self.0, rhs.0)) }
         }
 
+        /// Lane-wise subtract (the Winograd transforms' stencil op).
+        #[inline(always)]
+        pub fn sub(self, rhs: Self) -> Self {
+            unsafe { F32x8(_mm256_sub_ps(self.0, rhs.0)) }
+        }
+
         /// Lane-wise multiply.
         #[inline(always)]
         pub fn mul(self, rhs: Self) -> Self {
@@ -149,6 +155,16 @@ mod imp {
             let mut o = self.0;
             for i in 0..8 {
                 o[i] += rhs.0[i];
+            }
+            F32x8(o)
+        }
+
+        /// Lane-wise subtract (the Winograd transforms' stencil op).
+        #[inline(always)]
+        pub fn sub(self, rhs: Self) -> Self {
+            let mut o = self.0;
+            for i in 0..8 {
+                o[i] -= rhs.0[i];
             }
             F32x8(o)
         }

@@ -1,0 +1,191 @@
+//! Cross-use rejection matrix for [`PlanArtifact::validate`]: an artifact
+//! prepared for one (algorithm, layout, geometry) must refuse every other
+//! algorithm, every other layout, and every geometry it was not keyed on —
+//! for **all** [`AlgoKind`] arms, the indirect and Winograd families
+//! included. Batch is explicitly excluded from the key: every artifact is
+//! batch-agnostic by contract.
+
+use im2win::conv::{AlgoKind, ConvParams, PlanArtifact};
+use im2win::engine::Workspace;
+use im2win::prelude::*;
+
+/// A geometry each algorithm can actually prepare for: the depthwise
+/// specialist needs depthwise channels; everything else (Winograd
+/// included) is happy with a dense 3×3 stride-1 layer.
+fn geometry_for(algo: AlgoKind) -> ConvParams {
+    match algo {
+        AlgoKind::Depthwise => ConvParams::builder()
+            .batch(2)
+            .channels(8, 8)
+            .input(9, 9)
+            .filter(3, 3)
+            .pad(1)
+            .groups(8)
+            .build()
+            .unwrap(),
+        _ => ConvParams::builder()
+            .batch(2)
+            .channels(4, 6)
+            .input(9, 9)
+            .filter(3, 3)
+            .build()
+            .unwrap(),
+    }
+}
+
+/// Same geometry with different channel extents — the filter dims change,
+/// which every artifact (geometry-keyed or not) must reject.
+fn different_filter(algo: AlgoKind) -> ConvParams {
+    match algo {
+        AlgoKind::Depthwise => ConvParams::builder()
+            .batch(2)
+            .channels(16, 16)
+            .input(9, 9)
+            .filter(3, 3)
+            .pad(1)
+            .groups(16)
+            .build()
+            .unwrap(),
+        _ => ConvParams::builder()
+            .batch(2)
+            .channels(8, 6)
+            .input(9, 9)
+            .filter(3, 3)
+            .build()
+            .unwrap(),
+    }
+}
+
+/// Same filter, different input spatial extent — only geometry-keyed
+/// artifacts (indirect offsets, Winograd tiles) depend on this.
+fn different_spatial(algo: AlgoKind) -> ConvParams {
+    match algo {
+        AlgoKind::Depthwise => ConvParams::builder()
+            .batch(2)
+            .channels(8, 8)
+            .input(11, 9)
+            .filter(3, 3)
+            .pad(1)
+            .groups(8)
+            .build()
+            .unwrap(),
+        _ => ConvParams::builder()
+            .batch(2)
+            .channels(4, 6)
+            .input(11, 9)
+            .filter(3, 3)
+            .build()
+            .unwrap(),
+    }
+}
+
+#[test]
+fn validate_rejects_every_cross_algo_layout_and_geometry_mismatch() {
+    for algo in AlgoKind::ALL {
+        let algorithm = algo.build();
+        let p = geometry_for(algo);
+        for layout in Layout::ALL {
+            if !algorithm.supports(layout) {
+                continue;
+            }
+            let filter = Tensor4::random(p.filter_dims(), layout, 11);
+            let art: PlanArtifact = algorithm
+                .prepare(&filter, &p, layout)
+                .unwrap_or_else(|e| panic!("{algo} {layout}: prepare failed: {e}"));
+            assert_eq!(art.algo(), algo.name());
+            assert_eq!(art.layout(), layout);
+            assert!(art.storage_bytes() > 0, "{algo} {layout}: empty artifact");
+
+            // The matching triple is accepted, at any batch size.
+            art.validate(algo.name(), &p, layout)
+                .unwrap_or_else(|e| panic!("{algo} {layout}: rejected its own key: {e}"));
+            art.validate(algo.name(), &p.with_batch(7), layout)
+                .unwrap_or_else(|e| panic!("{algo} {layout}: not batch-agnostic: {e}"));
+
+            // Every *other* algorithm name is rejected.
+            for other in AlgoKind::ALL {
+                if other.name() == algo.name() {
+                    continue;
+                }
+                assert!(
+                    art.validate(other.name(), &p, layout).is_err(),
+                    "{algo} {layout}: artifact accepted algorithm {other}"
+                );
+            }
+
+            // Every other layout is rejected.
+            for other in Layout::ALL {
+                if other == layout {
+                    continue;
+                }
+                assert!(
+                    art.validate(algo.name(), &p, other).is_err(),
+                    "{algo} {layout}: artifact accepted layout {other}"
+                );
+            }
+
+            // A geometry with different filter dims is always rejected.
+            assert!(
+                art.validate(algo.name(), &different_filter(algo), layout).is_err(),
+                "{algo} {layout}: artifact accepted a different filter shape"
+            );
+
+            // Input-geometry changes split by keying: the indirect and
+            // Winograd artifacts pin the full geometry; plain filter
+            // packs are geometry-agnostic by design.
+            let keyed = matches!(algo, AlgoKind::Indirect | AlgoKind::Winograd);
+            assert_eq!(
+                art.geometry().is_some(),
+                keyed,
+                "{algo} {layout}: unexpected geometry keying"
+            );
+            let moved = different_spatial(algo);
+            if keyed {
+                assert!(
+                    art.validate(algo.name(), &moved, layout).is_err(),
+                    "{algo} {layout}: geometry-keyed artifact accepted another spatial extent"
+                );
+            } else {
+                art.validate(algo.name(), &moved, layout).unwrap_or_else(|e| {
+                    panic!("{algo} {layout}: filter pack wrongly pinned to spatial extent: {e}")
+                });
+            }
+        }
+    }
+}
+
+/// The rejection must hold end to end, not just in `validate`: handing a
+/// prepared artifact to the wrong algorithm's `run_prepacked` fails
+/// before any kernel touches the output.
+#[test]
+fn run_prepacked_refuses_foreign_artifacts() {
+    let p = geometry_for(AlgoKind::Direct);
+    let mut ws = Workspace::new();
+    let layout = Layout::Nhwc;
+    let filter = Tensor4::random(p.filter_dims(), layout, 3);
+    let input = Tensor4::random(p.input_dims(), layout, 4);
+    let mut out = Tensor4::zeros(p.output_dims(), layout);
+    for owner in AlgoKind::ALL {
+        // The depthwise specialist refuses to prepare for dense geometry —
+        // there is no artifact to cross-use in that case.
+        let art = match owner.build().prepare(&filter, &p, layout) {
+            Ok(art) => art,
+            Err(_) => continue,
+        };
+        for runner in AlgoKind::ALL {
+            if runner.name() == owner.name() {
+                continue;
+            }
+            let algorithm = runner.build();
+            if !algorithm.supports(layout) {
+                continue;
+            }
+            assert!(
+                algorithm
+                    .run_prepacked(&input, &art, &p, &mut out, &mut ws, Epilogue::None)
+                    .is_err(),
+                "{runner} ran on {owner}'s artifact"
+            );
+        }
+    }
+}
