@@ -208,7 +208,7 @@ fn main() {
             threads_per_shard: shard_planner.threads,
             ..ShardConfig::default()
         },
-        AsyncConfig { queue_depth: 64, shed: Shed::Reject },
+        AsyncConfig { queue_depth: 64, shed: Shed::Reject, ..AsyncConfig::default() },
     );
     let client = async_server.client();
     let start = Instant::now();
@@ -226,7 +226,7 @@ fn main() {
                 admitted += 1;
                 pending.push_back(t);
             }
-            Err(TrySubmitError::QueueFull(_)) => rejected += 1,
+            Err(TrySubmitError::QueueFull(_) | TrySubmitError::Overloaded(_)) => rejected += 1,
             Err(TrySubmitError::Closed(_)) => break,
         }
         // Opportunistically consume completed tickets so outstanding

@@ -35,6 +35,22 @@
 //!   drain-on-shutdown and the queue-wait / completion-latency
 //!   percentiles in [`super::ServerReport`] behave identically across
 //!   both fronts.
+//! * **Overload circuit breaker** — an optional [`BreakerConfig`] arms a
+//!   front-level breaker: a run of consecutive full-ring rejections, or
+//!   a queue-wait spike past a configured bound, opens it, after which
+//!   submits fast-fail with [`TrySubmitError::Overloaded`] without
+//!   touching the rings. After a cooldown a single half-open probe is
+//!   admitted and its fate closes or reopens the breaker. The default
+//!   (`breaker: None`) skips the gate entirely, reproducing the
+//!   pre-breaker submit path exactly.
+//! * **Failure isolation** — shard workers run the supervised serve
+//!   loop ([`super::server`]): a panicking batch answers its own
+//!   requests with [`crate::error::Error::WorkerFailed`] and the worker
+//!   respawns on a fresh engine within its restart budget
+//!   ([`ShardConfig::max_restarts`]). A shard that exhausts the budget
+//!   is marked dead: [`AsyncClient::try_submit`] routes around it, and
+//!   its tombstone drain keeps answering anything that still lands in
+//!   its ring, so a [`Ticket`] can never hang on a dead shard.
 //!
 //! ```
 //! use im2win::conv::AlgoKind;
@@ -57,14 +73,16 @@
 //! assert_eq!(report.sharded.served(), 1);
 //! ```
 
-use super::server::{Inference, Request, ServerReport, ShardConfig, Source};
+use super::server::{
+    Inference, QueueWaitWindow, Request, ServerReport, ShardConfig, Source, Supervisor,
+};
 use super::sharded::{resolve_threads_per_shard, spawn_shard_worker, ShardedReport};
 use super::Engine;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor4;
 use std::cell::UnsafeCell;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -493,12 +511,16 @@ impl Drop for Ticket {
 // Admission control: errors and shed policy.
 // ---------------------------------------------------------------------------
 
-/// Why a non-blocking submit was refused. Both variants hand the image
+/// Why a non-blocking submit was refused. Every variant hands the image
 /// back so a retrying caller pays no copy.
 pub enum TrySubmitError {
     /// The target shard's ring is full and the policy is
     /// [`Shed::Reject`]: backpressure, try again later (or elsewhere).
     QueueFull(Tensor4),
+    /// The overload circuit breaker is open ([`BreakerConfig`]): the
+    /// front is fast-failing submits without touching the rings until
+    /// the cooldown elapses and a half-open probe succeeds.
+    Overloaded(Tensor4),
     /// The server is shutting down; no further requests are admitted.
     Closed(Tensor4),
 }
@@ -507,7 +529,9 @@ impl TrySubmitError {
     /// Recover the image for a retry.
     pub fn into_image(self) -> Tensor4 {
         match self {
-            TrySubmitError::QueueFull(t) | TrySubmitError::Closed(t) => t,
+            TrySubmitError::QueueFull(t)
+            | TrySubmitError::Overloaded(t)
+            | TrySubmitError::Closed(t) => t,
         }
     }
 }
@@ -516,6 +540,7 @@ impl fmt::Debug for TrySubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             TrySubmitError::QueueFull(_) => f.write_str("QueueFull(..)"),
+            TrySubmitError::Overloaded(_) => f.write_str("Overloaded(..)"),
             TrySubmitError::Closed(_) => f.write_str("Closed(..)"),
         }
     }
@@ -525,6 +550,7 @@ impl fmt::Display for TrySubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             TrySubmitError::QueueFull(_) => f.write_str("queue full (backpressure)"),
+            TrySubmitError::Overloaded(_) => f.write_str("circuit breaker open (overload)"),
             TrySubmitError::Closed(_) => f.write_str("server closed"),
         }
     }
@@ -570,6 +596,49 @@ impl fmt::Display for Shed {
     }
 }
 
+/// Overload circuit-breaker knobs (see module docs). The breaker trades
+/// a little availability for a lot of tail latency: once the front is
+/// provably saturated, refusing work in nanoseconds beats queueing it
+/// for milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Open after this many *consecutive* full-ring events (rejections
+    /// under [`Shed::Reject`], evictions under [`Shed::OldestFirst`]).
+    /// Any successful admission resets the run. Must be ≥ 1.
+    pub consecutive_full: usize,
+    /// Also open when the worst queue wait over the shards' recent
+    /// windows ([`super::server`]'s 64-sample max, a cheap p99 proxy)
+    /// exceeds this bound. `None` disables the latency trigger.
+    pub queue_wait: Option<Duration>,
+    /// How long the breaker stays open before admitting one half-open
+    /// probe. The probe's fate — admitted or refused — closes or reopens
+    /// the breaker.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            consecutive_full: 8,
+            queue_wait: None,
+            cooldown: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Snapshot of breaker activity, surfaced in [`AsyncReport::breaker`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerStats {
+    /// Closed→open (and half-open→open) transitions.
+    pub opens: usize,
+    /// Open→half-open transitions (cooldown elapsed, probe admitted).
+    pub half_opens: usize,
+    /// Half-open→closed transitions (a probe succeeded).
+    pub closes: usize,
+    /// State at snapshot time: `"closed"`, `"open"` or `"half-open"`.
+    pub state: &'static str,
+}
+
 /// Admission-control knobs for the async front.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AsyncConfig {
@@ -580,11 +649,205 @@ pub struct AsyncConfig {
     pub queue_depth: usize,
     /// Full-ring policy.
     pub shed: Shed,
+    /// Optional overload circuit breaker. `None` (the default) skips
+    /// the breaker gate entirely: the submit path is byte-for-byte the
+    /// pre-breaker one, and no queue-wait windows are allocated.
+    pub breaker: Option<BreakerConfig>,
 }
 
 impl Default for AsyncConfig {
     fn default() -> Self {
-        AsyncConfig { queue_depth: 256, shed: Shed::Reject }
+        AsyncConfig { queue_depth: 256, shed: Shed::Reject, breaker: None }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The circuit breaker state machine.
+// ---------------------------------------------------------------------------
+
+const BREAKER_CLOSED: usize = 0;
+const BREAKER_OPEN: usize = 1;
+const BREAKER_HALF_OPEN: usize = 2;
+
+/// Front-level breaker state: a three-state machine (closed → open →
+/// half-open → closed) driven entirely by atomics on the submit path.
+/// All transitions are CAS-guarded so each is counted exactly once no
+/// matter how many callers race it.
+struct Breaker {
+    cfg: BreakerConfig,
+    /// `BREAKER_CLOSED` | `BREAKER_OPEN` | `BREAKER_HALF_OPEN`.
+    state: AtomicUsize,
+    /// Epoch for `opened_at` (atomics cannot hold an `Instant`).
+    t0: Instant,
+    /// When the breaker last opened, as microseconds since `t0`.
+    opened_at: AtomicU64,
+    /// Current run of consecutive full-ring events.
+    consec_full: AtomicUsize,
+    /// Whether the single half-open probe slot is taken.
+    probing: AtomicBool,
+    opens: AtomicUsize,
+    half_opens: AtomicUsize,
+    closes: AtomicUsize,
+    /// Per-shard queue-wait windows fed by the serve loops (present only
+    /// when the breaker is configured, so the disabled path pays nothing).
+    waits: Vec<Arc<QueueWaitWindow>>,
+}
+
+impl Breaker {
+    fn new(cfg: BreakerConfig, waits: Vec<Arc<QueueWaitWindow>>) -> Breaker {
+        Breaker {
+            cfg,
+            state: AtomicUsize::new(BREAKER_CLOSED),
+            t0: Instant::now(),
+            opened_at: AtomicU64::new(0),
+            consec_full: AtomicUsize::new(0),
+            probing: AtomicBool::new(false),
+            opens: AtomicUsize::new(0),
+            half_opens: AtomicUsize::new(0),
+            closes: AtomicUsize::new(0),
+            waits,
+        }
+    }
+
+    fn now_micros(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Closed→open (counted once even under a racing stampede).
+    fn trip(&self) {
+        if self
+            .state
+            .compare_exchange(BREAKER_CLOSED, BREAKER_OPEN, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            self.opens.fetch_add(1, Ordering::Relaxed);
+            self.opened_at.store(self.now_micros(), Ordering::SeqCst);
+            self.consec_full.store(0, Ordering::SeqCst);
+        }
+    }
+
+    /// Claim the single half-open probe slot.
+    fn claim_probe(&self) -> bool {
+        !self.probing.swap(true, Ordering::SeqCst)
+    }
+
+    /// Admission gate. `Ok(probe)` lets the submit proceed (`probe` is
+    /// true for the half-open probe, which must report its fate via
+    /// [`Breaker::on_admit`] / [`Breaker::on_queue_full`]); `Err(())`
+    /// fast-fails the submit while the breaker is open.
+    fn gate(&self) -> std::result::Result<bool, ()> {
+        match self.state.load(Ordering::SeqCst) {
+            BREAKER_CLOSED => {
+                if let Some(limit) = self.cfg.queue_wait {
+                    let worst = self.waits.iter().map(|w| w.worst()).max().unwrap_or(0);
+                    if worst > limit.as_micros() as u64 {
+                        self.trip();
+                        return Err(());
+                    }
+                }
+                Ok(false)
+            }
+            BREAKER_OPEN => {
+                let opened = self.opened_at.load(Ordering::SeqCst);
+                if self.now_micros().saturating_sub(opened)
+                    < self.cfg.cooldown.as_micros() as u64
+                {
+                    return Err(());
+                }
+                // Cooldown elapsed: move to half-open (counted once) and
+                // let exactly one caller through as the probe.
+                if self
+                    .state
+                    .compare_exchange(
+                        BREAKER_OPEN,
+                        BREAKER_HALF_OPEN,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_ok()
+                {
+                    self.half_opens.fetch_add(1, Ordering::Relaxed);
+                }
+                if self.claim_probe() {
+                    Ok(true)
+                } else {
+                    Err(())
+                }
+            }
+            _ => {
+                // Half-open: only the probe slot goes through.
+                if self.claim_probe() {
+                    Ok(true)
+                } else {
+                    Err(())
+                }
+            }
+        }
+    }
+
+    /// A submit was admitted to a ring. A successful probe closes the
+    /// breaker and clears the queue-wait windows, so a stale worst-case
+    /// from the overload era cannot instantly re-trip it.
+    fn on_admit(&self, probe: bool) {
+        self.consec_full.store(0, Ordering::SeqCst);
+        if probe {
+            if self
+                .state
+                .compare_exchange(
+                    BREAKER_HALF_OPEN,
+                    BREAKER_CLOSED,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                )
+                .is_ok()
+            {
+                self.closes.fetch_add(1, Ordering::Relaxed);
+                for w in &self.waits {
+                    w.reset();
+                }
+            }
+            self.probing.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// A submit found its ring full (a rejection under [`Shed::Reject`],
+    /// an eviction under [`Shed::OldestFirst`]). A failed probe reopens
+    /// the breaker and restarts the cooldown clock.
+    fn on_queue_full(&self, probe: bool) {
+        if probe {
+            if self
+                .state
+                .compare_exchange(
+                    BREAKER_HALF_OPEN,
+                    BREAKER_OPEN,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                )
+                .is_ok()
+            {
+                self.opens.fetch_add(1, Ordering::Relaxed);
+            }
+            self.opened_at.store(self.now_micros(), Ordering::SeqCst);
+            self.probing.store(false, Ordering::SeqCst);
+            return;
+        }
+        let run = self.consec_full.fetch_add(1, Ordering::SeqCst) + 1;
+        if run >= self.cfg.consecutive_full.max(1) {
+            self.trip();
+        }
+    }
+
+    fn stats(&self) -> BreakerStats {
+        BreakerStats {
+            opens: self.opens.load(Ordering::Relaxed),
+            half_opens: self.half_opens.load(Ordering::Relaxed),
+            closes: self.closes.load(Ordering::Relaxed),
+            state: match self.state.load(Ordering::SeqCst) {
+                BREAKER_CLOSED => "closed",
+                BREAKER_OPEN => "open",
+                _ => "half-open",
+            },
+        }
     }
 }
 
@@ -592,10 +855,38 @@ impl Default for AsyncConfig {
 // The front itself.
 // ---------------------------------------------------------------------------
 
-/// One shard as the front sees it: its ring and its load gauge.
+/// One shard as the front sees it: its ring, its load gauge, and the
+/// supervision state ([`Supervisor`]) its worker shares with dispatch.
 struct AsyncShard {
     queue: Arc<ShardQueue>,
     depth: Arc<AtomicUsize>,
+    /// Raised by the supervised serve loop once the shard's restart
+    /// budget is exhausted; dispatch routes around it from then on.
+    dead: Arc<AtomicBool>,
+    /// The dead shard's last panic message, for `WorkerFailed` answers.
+    epitaph: Arc<Mutex<Option<String>>>,
+}
+
+impl AsyncShard {
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// The terminal error for a request this shard can no longer serve.
+    fn unserved_error(&self) -> Error {
+        if self.is_dead() {
+            let msg = self
+                .epitaph
+                .lock()
+                .map(|g| g.clone())
+                .ok()
+                .flatten()
+                .unwrap_or_else(|| "shard worker exited".to_string());
+            Error::WorkerFailed(format!("shard dead: {msg}"))
+        } else {
+            Error::Overloaded("request admitted during shutdown was not served".into())
+        }
+    }
 }
 
 /// State shared by the server handle and every [`AsyncClient`].
@@ -606,6 +897,7 @@ struct FrontState {
     shed: AtomicUsize,
     pool: Arc<SlotPool>,
     closed: AtomicBool,
+    breaker: Option<Breaker>,
 }
 
 /// The async serving front: N shard workers draining bounded lock-free
@@ -636,6 +928,9 @@ pub struct AsyncReport {
     /// Completion slots allocated because the freelist was exhausted —
     /// 0 means the submit path allocated nothing after startup.
     pub slot_allocs: usize,
+    /// Circuit-breaker transition counts and final state; `None` when no
+    /// breaker was configured.
+    pub breaker: Option<BreakerStats>,
 }
 
 impl AsyncServer {
@@ -658,9 +953,20 @@ impl AsyncServer {
         let pool = SlotPool::new((acfg.queue_depth + cfg.max_batch.max(1)) * nshards * 2);
         let mut shards = Vec::with_capacity(nshards);
         let mut workers = Vec::with_capacity(nshards);
+        // Queue-wait windows exist only when a breaker consumes them, so
+        // the breaker-less serve loop records nothing extra.
+        let mut wait_windows = Vec::new();
         for (i, engine) in engines.into_iter().enumerate() {
             let queue = Arc::new(ShardQueue::new(acfg.queue_depth));
             let depth = Arc::new(AtomicUsize::new(0));
+            let mut sup = Supervisor::new(&cfg);
+            if acfg.breaker.is_some() {
+                let w = Arc::new(QueueWaitWindow::new());
+                sup = sup.with_waits(Arc::clone(&w));
+                wait_windows.push(w);
+            }
+            let dead = Arc::clone(&sup.dead);
+            let epitaph = Arc::clone(&sup.epitaph);
             workers.push(spawn_shard_worker(
                 i,
                 engine,
@@ -668,8 +974,9 @@ impl AsyncServer {
                 Arc::clone(&depth),
                 &cfg,
                 tps,
+                sup,
             ));
-            shards.push(AsyncShard { queue, depth });
+            shards.push(AsyncShard { queue, depth, dead, epitaph });
         }
         let front = Arc::new(FrontState {
             shards,
@@ -678,6 +985,7 @@ impl AsyncServer {
             shed: AtomicUsize::new(0),
             pool,
             closed: AtomicBool::new(false),
+            breaker: acfg.breaker.map(|bcfg| Breaker::new(bcfg, wait_windows)),
         });
         AsyncServer { front, workers }
     }
@@ -708,9 +1016,29 @@ impl AsyncServer {
         self.front.pool.misses.load(Ordering::Relaxed)
     }
 
+    /// Whether `shard`'s worker has exhausted its restart budget and
+    /// been marked dead (dispatch routes around it).
+    ///
+    /// # Panics
+    /// Panics when `shard >= self.shards()`.
+    pub fn shard_is_dead(&self, shard: usize) -> bool {
+        self.front.shards[shard].is_dead()
+    }
+
+    /// Current circuit-breaker counters, or `None` when no breaker was
+    /// configured.
+    pub fn breaker_stats(&self) -> Option<BreakerStats> {
+        self.front.breaker.as_ref().map(|b| b.stats())
+    }
+
     /// Stop admitting, drain every ring, join every worker. Every
-    /// admitted ticket is answered before this returns — by its batch or
-    /// (for a request that raced the close) with [`Error::Overloaded`].
+    /// admitted ticket is answered before this returns — by its batch,
+    /// or (for a request that raced the close) with [`Error::Overloaded`]
+    /// / [`Error::WorkerFailed`] from the straggler drain below. A
+    /// worker that somehow died *outside* the supervised loop (the loop
+    /// itself converts panics into respawns or a dead-shard report) is
+    /// folded into a synthetic dead-shard report instead of propagating
+    /// its panic into the caller.
     pub fn shutdown(self) -> AsyncReport {
         self.front.closed.store(true, Ordering::SeqCst);
         for s in &self.front.shards {
@@ -718,7 +1046,10 @@ impl AsyncServer {
         }
         let mut shards = Vec::with_capacity(self.workers.len());
         for w in self.workers {
-            shards.push(w.join().expect("async shard worker panicked"));
+            shards.push(match w.join() {
+                Ok(report) => report,
+                Err(_) => ServerReport { worker_panics: 1, dead: true, ..ServerReport::default() },
+            });
         }
         // A submit that raced the closed flag may have landed after its
         // worker's final drain; answer any such straggler now so no
@@ -726,15 +1057,14 @@ impl AsyncServer {
         for s in &self.front.shards {
             while let Some(r) = s.queue.pop_oldest() {
                 s.depth.fetch_sub(1, Ordering::Relaxed);
-                r.resp.send(Err(Error::Overloaded(
-                    "request admitted during shutdown was not served".into(),
-                )));
+                r.resp.send(Err(s.unserved_error()));
             }
         }
         AsyncReport {
             sharded: ShardedReport { shards },
             shed: self.front.shed.load(Ordering::Relaxed),
             slot_allocs: self.front.pool.misses.load(Ordering::Relaxed),
+            breaker: self.front.breaker.as_ref().map(|b| b.stats()),
         }
     }
 }
@@ -750,19 +1080,36 @@ impl AsyncClient {
         self.front.shards[shard].depth.load(Ordering::Relaxed)
     }
 
-    /// Non-blocking submit to the least-loaded shard (smallest
-    /// queued+in-flight count, ties rotating round-robin, exactly like
+    /// Non-blocking submit to the least-loaded *live* shard (smallest
+    /// queued+in-flight count among shards not marked dead, ties
+    /// rotating round-robin, exactly like
     /// [`super::ShardedServer::submit`]). Never waits: the request is
     /// admitted and a [`Ticket`] returned, or the overload is surfaced
-    /// immediately per the configured [`Shed`] policy.
+    /// immediately per the configured [`Shed`] policy / breaker state.
     pub fn try_submit(&self, image: Tensor4) -> std::result::Result<Ticket, TrySubmitError> {
+        self.try_submit_with_deadline(image, Duration::ZERO)
+    }
+
+    /// [`AsyncClient::try_submit`] with a per-request TTL: if the
+    /// deadline elapses before the request's batch flushes, it is
+    /// answered with [`Error::DeadlineExceeded`] instead of being
+    /// executed. [`Duration::ZERO`] means "no deadline".
+    pub fn try_submit_with_deadline(
+        &self,
+        image: Tensor4,
+        ttl: Duration,
+    ) -> std::result::Result<Ticket, TrySubmitError> {
         let n = self.front.shards.len();
         let start = self.front.rr.fetch_add(1, Ordering::Relaxed) % n;
+        // Dead shards are skipped; if every shard is dead the fallback
+        // still admits (the dead shard's tombstone drain answers with
+        // `WorkerFailed`), so the ticket is answered either way.
         let shard = (0..n)
             .map(|k| (start + k) % n)
+            .filter(|&s| !self.front.shards[s].is_dead())
             .min_by_key(|&s| self.front.shards[s].depth.load(Ordering::Relaxed))
-            .expect("at least one shard");
-        self.try_submit_to(shard, image)
+            .unwrap_or(start);
+        self.try_submit_with_deadline_to(shard, image, ttl)
     }
 
     /// Non-blocking submit pinned to a specific shard.
@@ -774,16 +1121,42 @@ impl AsyncClient {
         shard: usize,
         image: Tensor4,
     ) -> std::result::Result<Ticket, TrySubmitError> {
+        self.try_submit_with_deadline_to(shard, image, Duration::ZERO)
+    }
+
+    /// [`AsyncClient::try_submit_to`] with a per-request TTL
+    /// ([`Duration::ZERO`] = none).
+    ///
+    /// # Panics
+    /// Panics when `shard >= self.shards()`.
+    pub fn try_submit_with_deadline_to(
+        &self,
+        shard: usize,
+        image: Tensor4,
+        ttl: Duration,
+    ) -> std::result::Result<Ticket, TrySubmitError> {
         if self.front.closed.load(Ordering::SeqCst) {
             return Err(TrySubmitError::Closed(image));
         }
+        // The breaker gate runs before any ring or pool work: an open
+        // breaker refuses in a few atomic loads, which is the point.
+        let probe = match &self.front.breaker {
+            Some(b) => match b.gate() {
+                Ok(p) => p,
+                Err(()) => return Err(TrySubmitError::Overloaded(image)),
+            },
+            None => false,
+        };
         let s = &self.front.shards[shard];
         let slot = self.front.pool.take();
-        let mut req = Request::with_slot(image, Arc::clone(&slot));
+        let mut req = Request::with_slot(image, Arc::clone(&slot)).with_ttl(ttl);
         s.depth.fetch_add(1, Ordering::Relaxed);
         loop {
             match s.queue.push(req) {
                 Ok(()) => {
+                    if let Some(b) = &self.front.breaker {
+                        b.on_admit(probe);
+                    }
                     // Recheck after the push: a shutdown that raced this
                     // submit may already have run its straggler drain, and
                     // nobody else would ever answer a request that landed
@@ -792,24 +1165,30 @@ impl AsyncClient {
                     if self.front.closed.load(Ordering::SeqCst) {
                         while let Some(r) = s.queue.pop_oldest() {
                             s.depth.fetch_sub(1, Ordering::Relaxed);
-                            r.resp.send(Err(Error::Overloaded(
-                                "request admitted during shutdown was not served".into(),
-                            )));
+                            r.resp.send(Err(s.unserved_error()));
                         }
                     }
                     return Ok(Ticket::new(slot, Arc::clone(&self.front.pool)));
                 }
                 Err(back) => match self.front.shed_policy {
                     Shed::Reject => {
+                        if let Some(b) = &self.front.breaker {
+                            b.on_queue_full(probe);
+                        }
                         s.depth.fetch_sub(1, Ordering::Relaxed);
-                        // Hand the image back; dropping the request's
-                        // responder releases its slot handle so the slot
-                        // recycles cleanly.
+                        // Hand the image back. The responder is defused
+                        // before the destructure so dropping it cannot
+                        // fire a `WorkerFailed` into the slot we are
+                        // about to recycle.
+                        back.resp.defuse();
                         let Request { image, .. } = back;
                         self.front.pool.put(slot);
                         return Err(TrySubmitError::QueueFull(image));
                     }
                     Shed::OldestFirst => {
+                        if let Some(b) = &self.front.breaker {
+                            b.on_queue_full(probe);
+                        }
                         req = back;
                         // Evict the oldest queued request to make room;
                         // if the drain loop emptied a slot meanwhile the
@@ -943,6 +1322,99 @@ mod tests {
         let held: Vec<_> = (0..pool.free.capacity() + 3).map(|_| pool.take()).collect();
         assert_eq!(pool.misses.load(Ordering::Relaxed), 3);
         drop(held);
+    }
+
+    #[test]
+    fn breaker_opens_on_consecutive_fulls_probes_and_closes() {
+        let cfg = BreakerConfig {
+            consecutive_full: 3,
+            queue_wait: None,
+            cooldown: Duration::from_millis(1),
+        };
+        let b = Breaker::new(cfg, Vec::new());
+        assert_eq!(b.stats().state, "closed");
+        // Two fulls, then an admit: the run resets, nothing opens.
+        b.on_queue_full(false);
+        b.on_queue_full(false);
+        b.on_admit(false);
+        assert_eq!(b.stats().opens, 0);
+        // Three consecutive fulls trip it.
+        for _ in 0..3 {
+            assert!(b.gate().is_ok());
+            b.on_queue_full(false);
+        }
+        let s = b.stats();
+        assert_eq!((s.opens, s.state), (1, "open"));
+        // Open: submits fast-fail until the cooldown elapses.
+        assert!(b.gate().is_err());
+        std::thread::sleep(Duration::from_millis(2));
+        // Cooldown elapsed: exactly one probe gets through.
+        assert_eq!(b.gate(), Ok(true));
+        assert_eq!(b.stats().state, "half-open");
+        assert!(b.gate().is_err(), "second caller must not ride the probe");
+        // Probe succeeds: closed again, counted once.
+        b.on_admit(true);
+        let s = b.stats();
+        assert_eq!((s.half_opens, s.closes, s.state), (1, 1, "closed"));
+        assert!(b.gate().is_ok());
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens() {
+        let cfg = BreakerConfig {
+            consecutive_full: 1,
+            queue_wait: None,
+            cooldown: Duration::from_millis(1),
+        };
+        let b = Breaker::new(cfg, Vec::new());
+        b.on_queue_full(false);
+        assert_eq!(b.stats().state, "open");
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.gate(), Ok(true));
+        b.on_queue_full(true); // the probe itself found the ring full
+        let s = b.stats();
+        assert_eq!((s.opens, s.closes, s.state), (2, 0, "open"));
+        // The cooldown clock restarted; immediately after, still open.
+        assert!(b.gate().is_err());
+    }
+
+    #[test]
+    fn breaker_queue_wait_trigger_trips_and_close_resets_window() {
+        let w = Arc::new(QueueWaitWindow::new());
+        let cfg = BreakerConfig {
+            consecutive_full: 1000,
+            queue_wait: Some(Duration::from_millis(10)),
+            cooldown: Duration::from_millis(1),
+        };
+        let b = Breaker::new(cfg, vec![Arc::clone(&w)]);
+        w.push(500); // 0.5 ms: under the bound
+        assert!(b.gate().is_ok());
+        w.push(50_000); // 50 ms: over the bound
+        assert!(b.gate().is_err());
+        assert_eq!(b.stats().state, "open");
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.gate(), Ok(true));
+        b.on_admit(true);
+        assert_eq!(b.stats().state, "closed");
+        // Closing cleared the window, so the stale 50 ms sample cannot
+        // instantly re-trip the latency trigger.
+        assert_eq!(w.worst(), 0);
+        assert!(b.gate().is_ok());
+    }
+
+    #[test]
+    fn try_submit_error_recovers_image_from_every_variant() {
+        use crate::tensor::{Dims, Layout};
+        let dims = Dims::new(1, 1, 2, 2);
+        for make in [
+            TrySubmitError::QueueFull as fn(Tensor4) -> TrySubmitError,
+            TrySubmitError::Overloaded,
+            TrySubmitError::Closed,
+        ] {
+            let img = Tensor4::random(dims, Layout::Nchw, 3);
+            let back = make(img.clone()).into_image();
+            assert_eq!(back.data(), img.data());
+        }
     }
 
     #[test]

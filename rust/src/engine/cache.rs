@@ -117,6 +117,49 @@ impl PlanCache {
         Ok(cache)
     }
 
+    /// Open the cache at `path` like [`PlanCache::load`], but treat a
+    /// corrupt file as recoverable instead of fatal: the unreadable file
+    /// is quarantined to the first free `<path>.corrupt-<n>` sibling
+    /// (n = 1, 2, …) for post-mortem inspection, and an empty cache
+    /// bound to `path` is returned, so serving proceeds (re-planning,
+    /// re-tuning, eventually re-saving) instead of refusing to start.
+    /// The second element reports where the corrupt file went (`None`
+    /// when the file loaded cleanly or did not exist — a missing file is
+    /// not corruption). If the quarantine rename itself fails the
+    /// corrupt file is left in place and the cache still starts empty.
+    ///
+    /// With the `fault-inject` feature, an armed `cache_corrupt` fault
+    /// forces the corrupt path even for a healthy file — the
+    /// deterministic hook the chaos tests use.
+    pub fn load_or_recover(path: impl AsRef<Path>) -> (Self, Option<PathBuf>) {
+        use super::faultinject::{self, FaultSite};
+        let path = path.as_ref();
+        let forced = faultinject::fire(FaultSite::CacheCorrupt).is_some();
+        if !forced {
+            if let Ok(cache) = Self::load(path) {
+                return (cache, None);
+            }
+        }
+        let empty = PlanCache { path: Some(path.to_path_buf()), ..PlanCache::default() };
+        if !path.exists() {
+            return (empty, None);
+        }
+        let mut n = 1usize;
+        let dest = loop {
+            let mut name = path.as_os_str().to_os_string();
+            name.push(format!(".corrupt-{n}"));
+            let candidate = PathBuf::from(name);
+            if !candidate.exists() {
+                break candidate;
+            }
+            n += 1;
+        };
+        match std::fs::rename(path, &dest) {
+            Ok(()) => (empty, Some(dest)),
+            Err(_) => (empty, None),
+        }
+    }
+
     /// Write the cache to its backing file (error if opened in-memory).
     /// Serialization is canonical — sorted keys, shortest-round-trip
     /// numbers — so repeated saves of equal content are byte-identical.
@@ -503,6 +546,44 @@ mod tests {
         let mut again = PlanCache::load(&path).unwrap();
         assert_eq!(again.get("a"), Some(sample_plan(1)));
         assert!(PlanCache::in_memory().save().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_recover_quarantines_corrupt_files_and_numbers_them() {
+        // With fault injection compiled in, load_or_recover probes the
+        // cache_corrupt site; hold the registry lock so a concurrent
+        // test's armed schedule cannot force-corrupt our healthy file.
+        #[cfg(feature = "fault-inject")]
+        let _guard = crate::engine::faultinject::test_lock();
+        let dir =
+            std::env::temp_dir().join(format!("im2win_plancache_recover_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        // A missing file is not corruption.
+        let (c, q) = PlanCache::load_or_recover(&path);
+        assert!(c.is_empty() && q.is_none());
+        // A healthy file loads with no quarantine.
+        let mut c = PlanCache::load(&path).unwrap();
+        c.insert("a".into(), sample_plan(1));
+        c.save().unwrap();
+        let (mut c, q) = PlanCache::load_or_recover(&path);
+        assert_eq!(c.get("a"), Some(sample_plan(1)));
+        assert!(q.is_none());
+        // Corruption quarantines to .corrupt-1 and starts empty…
+        std::fs::write(&path, "{definitely not json").unwrap();
+        let (c, q) = PlanCache::load_or_recover(&path);
+        assert!(c.is_empty());
+        let q1 = q.expect("corrupt file must be quarantined");
+        assert!(q1.to_string_lossy().ends_with("plans.json.corrupt-1"), "{q1:?}");
+        assert!(q1.exists() && !path.exists());
+        // …and the recovered cache can save to the original path.
+        c.save().unwrap();
+        assert!(path.exists());
+        // A second corruption picks the next free number.
+        std::fs::write(&path, "also not json").unwrap();
+        let (_, q) = PlanCache::load_or_recover(&path);
+        assert!(q.unwrap().to_string_lossy().ends_with("plans.json.corrupt-2"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,318 @@
+//! Deterministic fault injection for the serving spine.
+//!
+//! The serving stack's fault-tolerance machinery (panic-isolated batch
+//! execution, supervised shard respawn, plan-cache quarantine, artifact
+//! rebuild) only earns its keep if failures can be *scripted*: a chaos
+//! test that relies on real SIMD asserts firing is neither portable nor
+//! reproducible. This module provides a tiny global registry of named
+//! injection **sites**, each with a deterministic **trigger schedule**
+//! (once / nth call / every k-th call), that the serve loop and plan
+//! cache probe at well-defined points:
+//!
+//! | site | probe location | effect when firing |
+//! |---|---|---|
+//! | `kernel_panic` | inside the batch-execution closure | `panic!` — exercises `catch_unwind` + respawn |
+//! | `slow_batch` | before the batch forward | sleep `ms` milliseconds — exercises deadlines + breaker |
+//! | `cache_corrupt` | `PlanCache::load_or_recover` | treat the file as corrupt — exercises quarantine |
+//! | `artifact_mismatch` | the `Engine::forward_into` conv arm | treat the artifact as stale — exercises re-`prepare` |
+//!
+//! The registry only exists under the `fault-inject` cargo feature;
+//! without it [`fire`] is an `#[inline(always)]` `None` and [`arm`]
+//! returns a config error telling the caller to rebuild. Spec parsing
+//! ([`FaultSpec::parse`]) is always compiled so the CLI can report bad
+//! syntax uniformly. Schedules are keyed by a per-site call counter —
+//! no clocks, no randomness — so a test that arms `kernel_panic:nth=3`
+//! fails exactly the third probed batch, every run.
+
+use crate::error::{Error, Result};
+
+/// A named injection point probed by the serving spine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Panic inside the batch-execution closure (serve loop).
+    KernelPanic,
+    /// Sleep before the batch forward (serve loop); carries `ms`.
+    SlowBatch,
+    /// Treat the plan-cache file as corrupt in `load_or_recover`.
+    CacheCorrupt,
+    /// Treat the layer's `PlanArtifact` as stale in `forward_into`.
+    ArtifactMismatch,
+}
+
+impl FaultSite {
+    /// The CLI/spec name of this site (`kernel_panic`, `slow_batch`, …).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::KernelPanic => "kernel_panic",
+            FaultSite::SlowBatch => "slow_batch",
+            FaultSite::CacheCorrupt => "cache_corrupt",
+            FaultSite::ArtifactMismatch => "artifact_mismatch",
+        }
+    }
+
+    fn parse(name: &str) -> Option<Self> {
+        match name {
+            "kernel_panic" => Some(FaultSite::KernelPanic),
+            "slow_batch" => Some(FaultSite::SlowBatch),
+            "cache_corrupt" => Some(FaultSite::CacheCorrupt),
+            "artifact_mismatch" => Some(FaultSite::ArtifactMismatch),
+            _ => None,
+        }
+    }
+}
+
+/// When an armed site fires, counted in probe calls (1-indexed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Fire on the first probe only.
+    Once,
+    /// Fire on exactly the n-th probe (1-indexed), never again.
+    Nth(u64),
+    /// Fire on every k-th probe (k, 2k, 3k, …).
+    EveryK(u64),
+}
+
+impl Trigger {
+    fn fires(self, call: u64) -> bool {
+        match self {
+            Trigger::Once => call == 1,
+            Trigger::Nth(n) => call == n,
+            Trigger::EveryK(k) => call % k == 0,
+        }
+    }
+}
+
+/// A parsed fault spec: site, schedule, and the slow-batch stall.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Which probe point this spec arms.
+    pub site: FaultSite,
+    /// When the site fires.
+    pub trigger: Trigger,
+    /// Stall in milliseconds (meaningful for `slow_batch`; 0 otherwise).
+    pub ms: u64,
+}
+
+impl FaultSpec {
+    /// Parse a CLI fault spec: `site[:key=val[,key=val]]`.
+    ///
+    /// Keys: `nth=N` (fire on the N-th probe), `every=K` (every K-th),
+    /// `once` (first probe only), `ms=M` (stall length for
+    /// `slow_batch`). Without a schedule key the default is `every=1`
+    /// for `slow_batch` (stall every batch) and `once` for the rest.
+    ///
+    /// ```
+    /// use im2win::engine::faultinject::{FaultSite, FaultSpec, Trigger};
+    /// let s = FaultSpec::parse("kernel_panic:nth=3").unwrap();
+    /// assert_eq!((s.site, s.trigger), (FaultSite::KernelPanic, Trigger::Nth(3)));
+    /// let s = FaultSpec::parse("slow_batch:ms=50").unwrap();
+    /// assert_eq!((s.trigger, s.ms), (Trigger::EveryK(1), 50));
+    /// assert!(FaultSpec::parse("warp_core_breach").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (spec, None),
+        };
+        let site = FaultSite::parse(name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown fault site '{name}' (expected kernel_panic, slow_batch, \
+                 cache_corrupt or artifact_mismatch)"
+            ))
+        })?;
+        let mut trigger = None;
+        let mut ms = 0u64;
+        if let Some(rest) = rest {
+            for part in rest.split(',').filter(|p| !p.is_empty()) {
+                let (key, val) = match part.split_once('=') {
+                    Some((k, v)) => (k, Some(v)),
+                    None => (part, None),
+                };
+                let num = |what: &str| -> Result<u64> {
+                    val.and_then(|v| v.parse::<u64>().ok()).filter(|&n| n > 0).ok_or_else(|| {
+                        Error::Config(format!("fault '{spec}': {what} expects a positive integer"))
+                    })
+                };
+                match key {
+                    "once" => trigger = Some(Trigger::Once),
+                    "nth" => trigger = Some(Trigger::Nth(num("nth")?)),
+                    "every" => trigger = Some(Trigger::EveryK(num("every")?)),
+                    "ms" => ms = num("ms")?,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "fault '{spec}': unknown key '{other}' (expected nth, every, once or ms)"
+                        )))
+                    }
+                }
+            }
+        }
+        let trigger = trigger.unwrap_or(match site {
+            FaultSite::SlowBatch => Trigger::EveryK(1),
+            _ => Trigger::Once,
+        });
+        Ok(FaultSpec { site, trigger, ms })
+    }
+}
+
+/// Parse and arm a fault spec in the global registry.
+///
+/// Without the `fault-inject` feature this is a config error (the
+/// probes are compiled out, so arming would silently do nothing).
+pub fn arm_spec(spec: &str) -> Result<FaultSpec> {
+    let parsed = FaultSpec::parse(spec)?;
+    arm(parsed)?;
+    Ok(parsed)
+}
+
+#[cfg(feature = "fault-inject")]
+mod registry {
+    use super::{FaultSite, FaultSpec, Trigger};
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    struct Armed {
+        trigger: Trigger,
+        calls: u64,
+        ms: u64,
+    }
+
+    fn table() -> &'static Mutex<HashMap<FaultSite, Armed>> {
+        static TABLE: std::sync::OnceLock<Mutex<HashMap<FaultSite, Armed>>> =
+            std::sync::OnceLock::new();
+        TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    pub fn arm(spec: FaultSpec) {
+        let mut t = table().lock().unwrap();
+        t.insert(spec.site, Armed { trigger: spec.trigger, calls: 0, ms: spec.ms });
+    }
+
+    pub fn fire(site: FaultSite) -> Option<u64> {
+        let mut t = table().lock().unwrap();
+        let armed = t.get_mut(&site)?;
+        armed.calls += 1;
+        armed.trigger.fires(armed.calls).then_some(armed.ms)
+    }
+
+    pub fn clear() {
+        table().lock().unwrap().clear();
+    }
+}
+
+/// Arm a parsed fault spec in the global registry (replacing any
+/// previous schedule for the same site and resetting its call counter).
+#[cfg(feature = "fault-inject")]
+pub fn arm(spec: FaultSpec) -> Result<()> {
+    registry::arm(spec);
+    Ok(())
+}
+
+/// Arming a fault without the `fault-inject` feature is a config error.
+#[cfg(not(feature = "fault-inject"))]
+pub fn arm(spec: FaultSpec) -> Result<()> {
+    Err(Error::Config(format!(
+        "fault '{}' requested but this binary was built without fault \
+         injection; rebuild with --features fault-inject",
+        spec.site.name()
+    )))
+}
+
+/// Probe an injection site: `Some(ms)` when an armed schedule fires on
+/// this call (ms is the `slow_batch` stall, 0 for other sites), `None`
+/// otherwise. Each probe advances the site's call counter.
+#[cfg(feature = "fault-inject")]
+pub fn fire(site: FaultSite) -> Option<u64> {
+    registry::fire(site)
+}
+
+/// Without the `fault-inject` feature every probe is an inlined no-op.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn fire(_site: FaultSite) -> Option<u64> {
+    None
+}
+
+/// Disarm every site and reset all call counters (test isolation).
+#[cfg(feature = "fault-inject")]
+pub fn clear() {
+    registry::clear();
+}
+
+/// Serialize tests that touch the global registry: hold the returned
+/// guard for the duration of any test that [`arm`]s a fault (or whose
+/// probes must not observe another test's schedule), so the default
+/// parallel test runner cannot interleave two chaos scenarios. The lock
+/// recovers from poisoning — panicking while armed is exactly what
+/// fault-injection tests do on purpose.
+#[cfg(feature = "fault-inject")]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Without the `fault-inject` feature there is nothing to clear.
+#[cfg(not(feature = "fault-inject"))]
+pub fn clear() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_site_and_schedule() {
+        let s = FaultSpec::parse("kernel_panic:nth=3").unwrap();
+        assert_eq!(s.site, FaultSite::KernelPanic);
+        assert_eq!(s.trigger, Trigger::Nth(3));
+        let s = FaultSpec::parse("cache_corrupt").unwrap();
+        assert_eq!(s.trigger, Trigger::Once);
+        let s = FaultSpec::parse("artifact_mismatch:every=2").unwrap();
+        assert_eq!(s.trigger, Trigger::EveryK(2));
+        let s = FaultSpec::parse("slow_batch:ms=50").unwrap();
+        assert_eq!((s.trigger, s.ms), (Trigger::EveryK(1), 50));
+        let s = FaultSpec::parse("slow_batch:nth=2,ms=10").unwrap();
+        assert_eq!((s.trigger, s.ms), (Trigger::Nth(2), 10));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FaultSpec::parse("no_such_site").is_err());
+        assert!(FaultSpec::parse("kernel_panic:nth=zero").is_err());
+        assert!(FaultSpec::parse("kernel_panic:nth=0").is_err());
+        assert!(FaultSpec::parse("kernel_panic:frequency=3").is_err());
+        assert!(FaultSpec::parse("slow_batch:ms=").is_err());
+    }
+
+    #[test]
+    fn trigger_schedules_are_deterministic() {
+        assert!(Trigger::Once.fires(1));
+        assert!(!Trigger::Once.fires(2));
+        assert!(!Trigger::Nth(3).fires(2));
+        assert!(Trigger::Nth(3).fires(3));
+        assert!(!Trigger::Nth(3).fires(4));
+        assert!(Trigger::EveryK(2).fires(2));
+        assert!(!Trigger::EveryK(2).fires(3));
+        assert!(Trigger::EveryK(2).fires(4));
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn registry_counts_probes_per_site() {
+        let _guard = test_lock();
+        clear();
+        arm(FaultSpec::parse("cache_corrupt:nth=2").unwrap()).unwrap();
+        assert_eq!(fire(FaultSite::CacheCorrupt), None);
+        assert_eq!(fire(FaultSite::CacheCorrupt), Some(0));
+        assert_eq!(fire(FaultSite::CacheCorrupt), None);
+        // Unarmed sites never fire and don't advance anything.
+        assert_eq!(fire(FaultSite::KernelPanic), None);
+        clear();
+    }
+
+    #[cfg(not(feature = "fault-inject"))]
+    #[test]
+    fn arming_without_feature_is_config_error() {
+        let spec = FaultSpec::parse("kernel_panic").unwrap();
+        assert!(matches!(arm(spec), Err(Error::Config(_))));
+        assert_eq!(fire(FaultSite::KernelPanic), None);
+    }
+}

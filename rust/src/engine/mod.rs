@@ -38,7 +38,13 @@
 //!   bounded lock-free ring (or surfaces overload immediately —
 //!   [`TrySubmitError::QueueFull`] backpressure or oldest-first load
 //!   shedding) and returns a [`Ticket`] the caller polls or blocks on,
-//!   so a slow caller never stalls admission for everyone else;
+//!   so a slow caller never stalls admission for everyone else; an
+//!   optional circuit breaker ([`BreakerConfig`]) fast-fails admission
+//!   while the shards are drowning and probes its way back closed;
+//! * [`faultinject`] — deterministic fault injection (`fault-inject`
+//!   feature): scripted kernel panics, slow batches, cache corruption
+//!   and artifact mismatches with per-site nth/every-k/once schedules,
+//!   so the fault-tolerance machinery above is testable reproducibly;
 //! * [`Engine`] — the planned-model executor tying them together: it
 //!   applies a plan to a [`Model`], packs every convolution filter once
 //!   into its kernel-consumable order ([`crate::conv::PlanArtifact`]),
@@ -66,6 +72,7 @@
 pub mod async_front;
 pub mod cache;
 pub mod calibrate;
+pub mod faultinject;
 pub mod graph;
 pub mod planner;
 pub mod server;
@@ -73,8 +80,10 @@ pub mod sharded;
 pub mod workspace;
 
 pub use async_front::{
-    AsyncClient, AsyncConfig, AsyncReport, AsyncServer, Shed, Ticket, TrySubmitError,
+    AsyncClient, AsyncConfig, AsyncReport, AsyncServer, BreakerConfig, BreakerStats, Shed, Ticket,
+    TrySubmitError,
 };
+pub use faultinject::{FaultSite, FaultSpec};
 pub use cache::{layer_key, PlanCache};
 pub use calibrate::{warm_pack, CalibrationProfile, PlanShift, ShapeClass};
 pub use graph::{graph_key, ConversionPoint, GraphPlan};
@@ -109,6 +118,10 @@ pub struct Engine {
     /// Per-op flag: `true` marks a [`Op::Relu`] that is folded into the
     /// preceding convolution's store epilogue (the executor skips it).
     fused_relu: Vec<bool>,
+    /// Times a serve-time [`PlanArtifact::validate`] failure degraded to
+    /// an in-place re-`prepare` instead of failing the request (see
+    /// [`Engine::artifact_rebuilds`]).
+    artifact_rebuilds: usize,
     ws: Workspace,
 }
 
@@ -178,8 +191,22 @@ impl Engine {
             entry_layout,
             packed,
             fused_relu,
+            artifact_rebuilds: 0,
             ws: Workspace::new(),
         })
+    }
+
+    /// Rebuild this engine from its own model and plans: a fresh
+    /// [`Workspace`], freshly prepared [`PlanArtifact`]s, the same plans
+    /// and graph assignment. The supervised serve loop calls this after
+    /// a caught batch panic — the weights and the decided plans are
+    /// immutable inputs, so the rebuilt engine produces bit-identical
+    /// results to one that never crashed (no re-planning, no re-tuning).
+    pub fn rebuild(self) -> Result<Engine> {
+        let Engine { model, plans, graph, .. } = self;
+        let mut engine = Self::build(model, plans)?;
+        engine.graph = graph;
+        Ok(engine)
     }
 
     /// The planned model (its own `Model::forward` also follows the plan).
@@ -213,6 +240,15 @@ impl Engine {
     /// store epilogue.
     pub fn fused_relu_count(&self) -> usize {
         self.fused_relu.iter().filter(|&&f| f).count()
+    }
+
+    /// Times a serve-time artifact-validation failure was recovered by
+    /// re-preparing the layer's [`PlanArtifact`] in place (a warn
+    /// counter: 0 in a healthy engine; non-zero means a stale or
+    /// corrupted artifact was detected and rebuilt rather than executed
+    /// or allowed to fail the request).
+    pub fn artifact_rebuilds(&self) -> usize {
+        self.artifact_rebuilds
     }
 
     /// Output dims for a batch-`n` input.
@@ -309,6 +345,20 @@ impl Engine {
                         (None, true) => Epilogue::Relu,
                         (None, false) => Epilogue::None,
                     };
+                    // Degraded path: an artifact that no longer matches
+                    // its layer (corruption, or an injected mismatch) is
+                    // re-prepared in place and counted, never executed
+                    // and never a panic — the request still runs.
+                    let stale = faultinject::fire(faultinject::FaultSite::ArtifactMismatch)
+                        .is_some()
+                        || self.packed[conv_idx]
+                            .validate(conv.algorithm().name(), &p, conv.layout())
+                            .is_err();
+                    if stale {
+                        self.packed[conv_idx] =
+                            conv.algorithm().prepare(conv.filter(), &conv.params, conv.layout())?;
+                        self.artifact_rebuilds += 1;
+                    }
                     let pack = &self.packed[conv_idx];
                     conv_idx += 1;
                     let mut y = ws.take_tensor(&next_tag, next_d, conv.layout());

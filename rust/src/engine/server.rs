@@ -21,8 +21,9 @@
 //! (pinned by the engine acceptance test). The final [`ServerReport`]
 //! carries served/batch counts, wall/busy time, flush-cause counters,
 //! queue-depth high-water mark, p50/p99 completion latency (admission →
-//! done) and queue wait (admission → batch flush), and the
-//! workspace-miss count observed after warmup.
+//! done) and queue wait (admission → batch flush), the workspace-miss
+//! count observed after warmup, and the fault-tolerance counters
+//! (panics caught, respawns, expired deadlines, dead-shard answers).
 //!
 //! The loop is front-agnostic: it drains a `Source`, which is either an
 //! unbounded `mpsc` channel (this module's [`Server`] and the sharded
@@ -30,19 +31,44 @@
 //! ([`super::async_front`]) — batching windows, statistics and the
 //! shutdown-drain contract are identical either way.
 //!
+//! # Failure domains
+//!
+//! Each batch executes inside `catch_unwind`: a panicking kernel (an
+//! assert in a SIMD path, a poisoned workspace lease) fails *its batch*,
+//! not the process. The requests of the failing batch are answered
+//! [`Error::WorkerFailed`] — their tickets/channels never hang — and the
+//! supervision wrapper ([`serve_supervised`]) rebuilds the engine from
+//! its plans ([`Engine::rebuild`]) and keeps serving, bounded by an
+//! exponential-backoff restart budget ([`ShardConfig::max_restarts`]).
+//! Once the budget is exhausted the worker marks itself dead, and —
+//! instead of exiting and stranding the queue — keeps draining, answering
+//! every subsequent request `WorkerFailed` until its source closes, so
+//! the ticket-liveness contract ("every admitted request gets exactly one
+//! terminal answer") holds even for a shard that will never compute
+//! again. As a final backstop, a [`Request`] dropped anywhere without an
+//! answer delivers `WorkerFailed` from its destructor.
+//!
+//! Requests may carry a TTL ([`Server::submit_with_deadline`]); the loop
+//! checks it at flush time and answers expired requests
+//! [`Error::DeadlineExceeded`] without spending kernel time on them. A
+//! zero/absent TTL reproduces the original behavior exactly.
+//!
 //! On shutdown the request channel closes and the loop *drains*: every
 //! request already queued is still batched, run, and answered before the
 //! worker exits (pinned by a regression test — queued requests are never
 //! dropped silently).
 
 use super::async_front::{CompletionSlot, ShardQueue};
+use super::faultinject::{self, FaultSite};
 use super::Engine;
 use crate::error::{Error, Result};
 use crate::tensor::{Dims, Tensor4};
+use std::cell::Cell;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvError, RecvTimeoutError, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -83,6 +109,13 @@ pub struct ShardConfig {
     /// (shard `i` gets cores `i·T .. (i+1)·T`). Effective only with the
     /// `pinning` feature on Linux; a portable no-op otherwise.
     pub pin: bool,
+    /// How many times a panicked worker is respawned (engine rebuilt from
+    /// its plans) before the shard is marked dead and dispatch routes
+    /// around it. `0` = never respawn: the first panic kills the shard.
+    pub max_restarts: usize,
+    /// Base pause before the first respawn; doubles on every subsequent
+    /// respawn (exponential backoff, capped). Zero = respawn immediately.
+    pub restart_backoff: Duration,
 }
 
 impl Default for ShardConfig {
@@ -92,13 +125,15 @@ impl Default for ShardConfig {
             deadline: Duration::ZERO,
             threads_per_shard: 0,
             pin: false,
+            max_restarts: 3,
+            restart_backoff: Duration::from_millis(5),
         }
     }
 }
 
 /// Serving statistics for one worker/shard, returned by
 /// [`Server::shutdown`] (and per shard by [`super::ShardedServer`]).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct ServerReport {
     /// Requests answered.
     pub served: usize,
@@ -131,6 +166,20 @@ pub struct ServerReport {
     /// Workspace misses observed on batches whose size had already been
     /// seen once — 0 means steady-state serving allocated no scratch.
     pub warm_misses: usize,
+    /// Requests answered [`Error::DeadlineExceeded`] because their TTL
+    /// expired before their batch flushed (no kernel time spent).
+    pub deadline_expired: usize,
+    /// Batch executions that panicked and were caught; each one answered
+    /// its whole batch [`Error::WorkerFailed`].
+    pub worker_panics: usize,
+    /// Successful supervised respawns (engine rebuilt after a panic).
+    pub respawns: usize,
+    /// Requests answered [`Error::WorkerFailed`] by the dead-shard drain
+    /// (admitted after the restart budget was exhausted).
+    pub failed_answers: usize,
+    /// The worker exhausted its restart budget (or failed to rebuild)
+    /// and stopped computing; dispatch routes around it.
+    pub dead: bool,
 }
 
 impl ServerReport {
@@ -165,7 +214,19 @@ impl ServerReport {
 /// Where a request's answer goes: the synchronous fronts hand each
 /// caller a private `mpsc` channel, the async front a recycled
 /// condvar-backed [`CompletionSlot`] behind its [`super::Ticket`].
-pub(crate) enum Responder {
+///
+/// A responder that is dropped without ever sending delivers
+/// [`Error::WorkerFailed`] from its destructor — the last line of the
+/// ticket-liveness defense: whatever path drops a request (an unwinding
+/// batch, a torn-down queue), its caller still gets a terminal answer
+/// instead of hanging. Paths that intentionally discard a request whose
+/// slot is being recycled must call [`Responder::defuse`] first.
+pub(crate) struct Responder {
+    kind: ResponderKind,
+    sent: Cell<bool>,
+}
+
+enum ResponderKind {
     /// Per-request response channel ([`Server`], [`super::ShardedServer`]).
     Channel(mpsc::Sender<Result<Inference>>),
     /// Pooled completion slot ([`super::AsyncServer`]).
@@ -173,33 +234,69 @@ pub(crate) enum Responder {
 }
 
 impl Responder {
+    fn channel(tx: mpsc::Sender<Result<Inference>>) -> Responder {
+        Responder { kind: ResponderKind::Channel(tx), sent: Cell::new(false) }
+    }
+
+    fn slot(slot: Arc<CompletionSlot>) -> Responder {
+        Responder { kind: ResponderKind::Slot(slot), sent: Cell::new(false) }
+    }
+
     /// Deliver the answer (a dead channel receiver is the caller's
     /// choice; delivery never fails from the server's point of view).
     pub(crate) fn send(&self, result: Result<Inference>) {
-        match self {
-            Responder::Channel(tx) => {
+        self.sent.set(true);
+        match &self.kind {
+            ResponderKind::Channel(tx) => {
                 let _ = tx.send(result);
             }
-            Responder::Slot(slot) => slot.complete(result),
+            ResponderKind::Slot(slot) => slot.complete(result),
+        }
+    }
+
+    /// Mark this responder as answered without sending, so its
+    /// destructor stays silent. For paths that reclaim a request's slot
+    /// through other means (the async Reject shed arm recycles the slot
+    /// and returns the image to the caller).
+    pub(crate) fn defuse(&self) {
+        self.sent.set(true);
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if !self.sent.get() {
+            self.send(Err(Error::WorkerFailed(
+                "request dropped without an answer (worker or queue torn down)".into(),
+            )));
         }
     }
 }
 
-/// A queued request: the image, where to send the answer, and when it was
-/// submitted (for the latency percentiles).
+/// A queued request: the image, where to send the answer, when it was
+/// submitted (for the latency percentiles), and an optional TTL checked
+/// at batch-flush time.
 pub(crate) struct Request {
     pub(crate) image: Tensor4,
     pub(crate) resp: Responder,
     pub(crate) submitted: Instant,
+    pub(crate) ttl: Option<Duration>,
 }
 
 impl Request {
     pub(crate) fn new(image: Tensor4, resp: mpsc::Sender<Result<Inference>>) -> Request {
-        Request { image, resp: Responder::Channel(resp), submitted: Instant::now() }
+        Request { image, resp: Responder::channel(resp), submitted: Instant::now(), ttl: None }
     }
 
     pub(crate) fn with_slot(image: Tensor4, slot: Arc<CompletionSlot>) -> Request {
-        Request { image, resp: Responder::Slot(slot), submitted: Instant::now() }
+        Request { image, resp: Responder::slot(slot), submitted: Instant::now(), ttl: None }
+    }
+
+    /// Attach a TTL; [`Duration::ZERO`] means "no deadline" so the
+    /// default config reproduces pre-deadline behavior exactly.
+    pub(crate) fn with_ttl(mut self, ttl: Duration) -> Request {
+        self.ttl = if ttl.is_zero() { None } else { Some(ttl) };
+        self
     }
 }
 
@@ -243,6 +340,87 @@ impl Source {
     }
 }
 
+/// A small lock-free window of recent queue waits (admission → flush),
+/// in microseconds, shared between a shard worker (producer) and the
+/// async front's circuit breaker (consumer). [`QueueWaitWindow::worst`]
+/// is the max over the last [`QueueWaitWindow::LEN`] batched requests —
+/// a deliberately cheap high-percentile stand-in: over a 64-sample
+/// window the max approximates p99 well enough to trip a breaker, with
+/// two atomic ops per request and no sorting on the hot path.
+pub(crate) struct QueueWaitWindow {
+    slots: [AtomicU64; QueueWaitWindow::LEN],
+    idx: AtomicUsize,
+}
+
+impl QueueWaitWindow {
+    /// Window length (recent batched requests tracked).
+    pub(crate) const LEN: usize = 64;
+
+    pub(crate) fn new() -> QueueWaitWindow {
+        QueueWaitWindow {
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+            idx: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record one request's queue wait in microseconds.
+    pub(crate) fn push(&self, micros: u64) {
+        let i = self.idx.fetch_add(1, Ordering::Relaxed) % Self::LEN;
+        self.slots[i].store(micros, Ordering::Relaxed);
+    }
+
+    /// Worst recorded wait in the window, microseconds.
+    pub(crate) fn worst(&self) -> u64 {
+        self.slots.iter().map(|s| s.load(Ordering::Relaxed)).max().unwrap_or(0)
+    }
+
+    /// Forget the window (the breaker clears it when it closes, so a
+    /// stale worst-case from the overload era cannot re-trip it).
+    pub(crate) fn reset(&self) {
+        for s in &self.slots {
+            s.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Supervision state shared between a worker and its front: the restart
+/// budget, the dead flag dispatch routes around, and the last panic
+/// message (the "epitaph") surfaced in `WorkerFailed` answers.
+pub(crate) struct Supervisor {
+    pub(crate) max_restarts: usize,
+    pub(crate) backoff: Duration,
+    pub(crate) dead: Arc<AtomicBool>,
+    pub(crate) epitaph: Arc<Mutex<Option<String>>>,
+    pub(crate) waits: Option<Arc<QueueWaitWindow>>,
+}
+
+impl Supervisor {
+    pub(crate) fn new(cfg: &ShardConfig) -> Supervisor {
+        Supervisor {
+            max_restarts: cfg.max_restarts,
+            backoff: cfg.restart_backoff,
+            dead: Arc::new(AtomicBool::new(false)),
+            epitaph: Arc::new(Mutex::new(None)),
+            waits: None,
+        }
+    }
+
+    pub(crate) fn with_waits(mut self, w: Arc<QueueWaitWindow>) -> Supervisor {
+        self.waits = Some(w);
+        self
+    }
+
+    /// The recorded panic message, or `fallback` when none was captured.
+    pub(crate) fn epitaph_or(&self, fallback: &str) -> String {
+        self.epitaph
+            .lock()
+            .map(|g| g.clone())
+            .ok()
+            .flatten()
+            .unwrap_or_else(|| fallback.to_string())
+    }
+}
+
 /// Micro-batching front over a single [`Engine`] (see module docs). For
 /// multi-engine dispatch with deadline windows and worker pinning, see
 /// [`super::ShardedServer`] — this type is the one-worker special case and
@@ -250,6 +428,8 @@ impl Source {
 pub struct Server {
     tx: mpsc::Sender<Request>,
     depth: Arc<AtomicUsize>,
+    dead: Arc<AtomicBool>,
+    epitaph: Arc<Mutex<Option<String>>>,
     worker: JoinHandle<ServerReport>,
 }
 
@@ -269,22 +449,54 @@ impl Server {
         let loop_depth = Arc::clone(&depth);
         let max_batch = cfg.max_batch.max(1);
         let deadline = cfg.deadline;
+        let sup = Supervisor::new(cfg);
+        let dead = Arc::clone(&sup.dead);
+        let epitaph = Arc::clone(&sup.epitaph);
         let worker = std::thread::Builder::new()
             .name("im2win-server".into())
-            .spawn(move || serve_loop(engine, Source::Mpsc(rx), max_batch, deadline, &loop_depth))
+            .spawn(move || {
+                serve_supervised(engine, Source::Mpsc(rx), max_batch, deadline, &loop_depth, &sup)
+            })
             .expect("failed to spawn server worker");
-        Server { tx, depth, worker }
+        Server { tx, depth, dead, epitaph, worker }
     }
 
     /// Queue a single-image request (`n` must be 1; any layout). The
-    /// returned channel yields the result once its batch completes.
+    /// returned channel yields the result once its batch completes. If
+    /// the worker has already exited, the channel yields
+    /// [`Error::WorkerFailed`] (with the worker's panic message when one
+    /// was captured) instead of silently disconnecting.
     pub fn submit(&self, image: Tensor4) -> mpsc::Receiver<Result<Inference>> {
+        self.submit_request(image, Duration::ZERO)
+    }
+
+    /// [`Server::submit`] with a TTL: if the request is still queued when
+    /// `ttl` has elapsed, it is answered [`Error::DeadlineExceeded`] at
+    /// flush time without spending kernel time. A zero `ttl` means no
+    /// deadline (identical to `submit`).
+    pub fn submit_with_deadline(
+        &self,
+        image: Tensor4,
+        ttl: Duration,
+    ) -> mpsc::Receiver<Result<Inference>> {
+        self.submit_request(image, ttl)
+    }
+
+    fn submit_request(&self, image: Tensor4, ttl: Duration) -> mpsc::Receiver<Result<Inference>> {
         let (resp, result) = mpsc::channel();
         self.depth.fetch_add(1, Ordering::Relaxed);
-        // A send error means the worker already exited; the caller then
-        // sees a disconnected result channel.
-        if self.tx.send(Request::new(image, resp)).is_err() {
+        if let Err(mpsc::SendError(req)) = self.tx.send(Request::new(image, resp).with_ttl(ttl)) {
+            // The worker already exited (it never exits with requests
+            // queued, so this is a post-mortem submit): answer directly.
             self.depth.fetch_sub(1, Ordering::Relaxed);
+            let msg = self
+                .epitaph
+                .lock()
+                .map(|g| g.clone())
+                .ok()
+                .flatten()
+                .unwrap_or_else(|| "server worker exited".into());
+            req.resp.send(Err(Error::WorkerFailed(msg)));
         }
         result
     }
@@ -294,12 +506,24 @@ impl Server {
         self.depth.load(Ordering::Relaxed)
     }
 
+    /// True once the worker exhausted its restart budget and stopped
+    /// computing (subsequent submits are answered `WorkerFailed`).
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
     /// Stop accepting requests and join the worker. Every request already
     /// queued is still served (or answered with an error) before the
     /// worker exits — shutdown never drops a submitted request silently.
     pub fn shutdown(self) -> ServerReport {
         drop(self.tx);
-        self.worker.join().expect("server worker panicked")
+        match self.worker.join() {
+            Ok(report) => report,
+            // The supervision wrapper itself panicked (a bug, not a
+            // kernel fault): don't propagate the panic into the caller;
+            // surface it as a dead-worker report.
+            Err(_) => ServerReport { worker_panics: 1, dead: true, ..ServerReport::default() },
+        }
     }
 }
 
@@ -313,46 +537,145 @@ fn latency_percentiles(lat: &mut [f64]) -> (f64, f64) {
     (pick(0.50), pick(0.99))
 }
 
-/// The serve loop shared by [`Server`] (one instance, zero deadline by
-/// default), [`super::ShardedServer`] (one instance per shard) and
-/// [`super::AsyncServer`] (one instance per shard, draining a bounded
-/// ring instead of a channel — see [`Source`]).
+/// Render a `catch_unwind` payload as the panic message.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".into()
+    }
+}
+
+/// How one serve pass over the source ended.
+enum LoopExit {
+    /// Source closed and fully drained — clean shutdown.
+    Closed,
+    /// A batch execution panicked (message captured); the batch was
+    /// answered `WorkerFailed` and the engine must be rebuilt before
+    /// serving continues.
+    Panicked(String),
+}
+
+/// Per-pass batching knobs (bundled so [`serve_pass`] stays readable).
+struct PassCtx<'a> {
+    max_batch: usize,
+    deadline: Duration,
+    depth: &'a AtomicUsize,
+    waits: Option<&'a QueueWaitWindow>,
+}
+
+/// Statistics accumulated across passes of one worker (they survive a
+/// respawn: the report describes the shard's whole life, not one engine
+/// incarnation).
+struct PassStats {
+    report: ServerReport,
+    latencies: Vec<f64>,
+    queue_waits: Vec<f64>,
+}
+
+/// The supervised serve loop shared by [`Server`] (one instance, zero
+/// deadline by default), [`super::ShardedServer`] (one instance per
+/// shard) and [`super::AsyncServer`] (one instance per shard, draining a
+/// bounded ring instead of a channel — see [`Source`]).
 ///
-/// Batching policy: block for the first request, then collect until
-/// `max_batch` or until `deadline` elapses (greedy `try_recv` drain when
-/// the deadline is zero). When the source disconnects the loop drains
-/// every remaining queued request before returning — a shutdown never
-/// drops work.
-pub(crate) fn serve_loop(
-    mut engine: Engine,
+/// Runs [`serve_pass`] until the source closes; on a caught batch panic
+/// it rebuilds the engine from its plans and re-enters the pass, with
+/// exponential backoff, at most [`Supervisor::max_restarts`] times.
+/// After the budget is spent (or a rebuild itself fails) the worker is
+/// marked dead and *keeps draining*, answering every remaining and
+/// future request `WorkerFailed` until the source closes — a dead shard
+/// never strands a caller.
+pub(crate) fn serve_supervised(
+    engine: Engine,
     src: Source,
     max_batch: usize,
     deadline: Duration,
     depth: &AtomicUsize,
+    sup: &Supervisor,
 ) -> ServerReport {
     let started = Instant::now();
+    let ctx = PassCtx { max_batch: max_batch.max(1), deadline, depth, waits: sup.waits.as_deref() };
+    let mut stats = PassStats {
+        report: ServerReport::default(),
+        latencies: Vec::new(),
+        queue_waits: Vec::new(),
+    };
+    let mut engine = Some(engine);
+    loop {
+        match serve_pass(engine.as_mut().expect("engine present while serving"), &src, &ctx, &mut stats)
+        {
+            LoopExit::Closed => break,
+            LoopExit::Panicked(msg) => {
+                *sup.epitaph.lock().unwrap() = Some(msg.clone());
+                let budget_left = stats.report.respawns < sup.max_restarts;
+                let rebuilt = if budget_left {
+                    let backoff = sup
+                        .backoff
+                        .saturating_mul(1u32 << stats.report.respawns.min(10) as u32);
+                    if !backoff.is_zero() {
+                        std::thread::sleep(backoff);
+                    }
+                    match engine.take().expect("engine present while serving").rebuild() {
+                        Ok(fresh) => {
+                            engine = Some(fresh);
+                            true
+                        }
+                        Err(e) => {
+                            *sup.epitaph.lock().unwrap() =
+                                Some(format!("respawn failed: {e} (after panic: {msg})"));
+                            false
+                        }
+                    }
+                } else {
+                    false
+                };
+                if rebuilt {
+                    stats.report.respawns += 1;
+                } else {
+                    stats.report.dead = true;
+                    sup.dead.store(true, Ordering::SeqCst);
+                    let last = sup.epitaph_or("worker panicked");
+                    drain_failed(&src, depth, &mut stats.report, &last);
+                    break;
+                }
+            }
+        }
+    }
+    stats.report.wall_s = started.elapsed().as_secs_f64();
+    (stats.report.p50_latency_s, stats.report.p99_latency_s) =
+        latency_percentiles(&mut stats.latencies);
+    (stats.report.p50_queue_s, stats.report.p99_queue_s) =
+        latency_percentiles(&mut stats.queue_waits);
+    stats.report
+}
+
+/// Dead-shard drain: answer every remaining and future request with
+/// `WorkerFailed` until the source closes. Blocks like the serve loop
+/// does, so a dead shard's worker still participates in shutdown.
+fn drain_failed(src: &Source, depth: &AtomicUsize, report: &mut ServerReport, msg: &str) {
+    while let Ok(r) = src.recv() {
+        depth.fetch_sub(1, Ordering::Relaxed);
+        r.resp.send(Err(Error::WorkerFailed(format!("shard dead: {msg}"))));
+        report.failed_answers += 1;
+    }
+}
+
+/// One pass of the batching loop: block for a request, fill the window,
+/// check deadlines, execute the batch under `catch_unwind`, scatter the
+/// results. Returns on source close (drained) or on a caught panic
+/// (batch answered `WorkerFailed`; caller decides whether to respawn).
+fn serve_pass(engine: &mut Engine, src: &Source, ctx: &PassCtx, stats: &mut PassStats) -> LoopExit {
     let base = engine.model().input_dims();
     let layout = engine.model().layout();
     let mut ins: HashMap<usize, Tensor4> = HashMap::new();
     let mut outs: HashMap<usize, Tensor4> = HashMap::new();
     let mut seen_sizes: HashSet<usize> = HashSet::new();
-    let mut latencies: Vec<f64> = Vec::new();
-    let mut queue_waits: Vec<f64> = Vec::new();
-    let mut report = ServerReport {
-        served: 0,
-        batches: 0,
-        max_batch_seen: 0,
-        busy_s: 0.0,
-        wall_s: 0.0,
-        deadline_flushes: 0,
-        full_flushes: 0,
-        max_queue_depth: 0,
-        p50_latency_s: 0.0,
-        p99_latency_s: 0.0,
-        p50_queue_s: 0.0,
-        p99_queue_s: 0.0,
-        warm_misses: 0,
-    };
+    let (max_batch, deadline, depth) = (ctx.max_batch, ctx.deadline, ctx.depth);
+    let report = &mut stats.report;
+    let latencies = &mut stats.latencies;
+    let queue_waits = &mut stats.queue_waits;
 
     // Answer one request and release its slot in the depth gauge. The
     // gauge drops *before* the send: a caller unblocked by the reply must
@@ -411,10 +734,26 @@ pub(crate) fn serve_loop(
                         "server expects single images of {expect}, got {}",
                         r.image.dims()
                     ))),
-                    &mut latencies,
+                    latencies,
                 );
                 false
             }
+        });
+        // Deadline check at flush time: expired requests are answered
+        // without burning kernel time on them.
+        batch.retain(|r| match r.ttl {
+            Some(ttl) if r.submitted.elapsed() >= ttl => {
+                report.deadline_expired += 1;
+                respond(
+                    r,
+                    Err(Error::DeadlineExceeded(format!(
+                        "ttl {ttl:?} elapsed before the batch flushed"
+                    ))),
+                    latencies,
+                );
+                false
+            }
+            _ => true,
         });
         let k = batch.len();
         if k == 0 {
@@ -424,35 +763,75 @@ pub(crate) fn serve_loop(
         // made it into this batched forward (the compute-free slice of
         // the completion latency).
         for r in &batch {
-            queue_waits.push(r.submitted.elapsed().as_secs_f64());
-        }
-
-        // Stack the images into a leased batch tensor (logical copy, so
-        // request layouts may differ from the engine layout).
-        let in_dims = Dims::new(k, base.c, base.h, base.w);
-        let mut input = ins.remove(&k).unwrap_or_else(|| Tensor4::zeros(in_dims, layout));
-        for (j, r) in batch.iter().enumerate() {
-            for (_, c, h, w) in expect.iter() {
-                input.set(j, c, h, w, r.image.get(0, c, h, w));
+            let wait = r.submitted.elapsed();
+            queue_waits.push(wait.as_secs_f64());
+            if let Some(w) = ctx.waits {
+                w.push(wait.as_micros() as u64);
             }
         }
 
+        if let Some(ms) = faultinject::fire(FaultSite::SlowBatch) {
+            // Injected straggler batch: stalls deadlines/breaker paths.
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+
+        // Stack the images into a leased batch tensor and run the
+        // forward, all inside `catch_unwind`: a panicking kernel fails
+        // this batch, not the worker. The batch itself stays outside the
+        // closure so its requests can still be answered on unwind; the
+        // leased buffers move in and are lost on panic (the supervisor
+        // rebuilds the engine and its workspace anyway).
+        let in_dims = Dims::new(k, base.c, base.h, base.w);
         let warm = seen_sizes.contains(&k);
-        let misses_before = engine.workspace().misses();
-        let t0 = Instant::now();
-        let result = match outs.remove(&k) {
-            Some(mut out) => engine.forward_into(&input, &mut out).map(|()| out),
-            None => match engine.output_dims(k) {
-                Ok(d) => {
-                    let mut out = Tensor4::zeros(d, layout);
-                    engine.forward_into(&input, &mut out).map(|()| out)
+        let input_slot = ins.remove(&k);
+        let out_slot = outs.remove(&k);
+        let engine_ref = &mut *engine;
+        let batch_ref = &batch;
+        let exec = std::panic::catch_unwind(AssertUnwindSafe(move || {
+            if faultinject::fire(FaultSite::KernelPanic).is_some() {
+                panic!("fault-injected kernel panic");
+            }
+            let mut input =
+                input_slot.unwrap_or_else(|| Tensor4::zeros(in_dims, layout));
+            for (j, r) in batch_ref.iter().enumerate() {
+                for (_, c, h, w) in expect.iter() {
+                    input.set(j, c, h, w, r.image.get(0, c, h, w));
                 }
-                Err(e) => Err(e),
-            },
+            }
+            let misses_before = engine_ref.workspace().misses();
+            let t0 = Instant::now();
+            let result = match out_slot {
+                Some(mut out) => engine_ref.forward_into(&input, &mut out).map(|()| out),
+                None => match engine_ref.output_dims(k) {
+                    Ok(d) => {
+                        let mut out = Tensor4::zeros(d, layout);
+                        engine_ref.forward_into(&input, &mut out).map(|()| out)
+                    }
+                    Err(e) => Err(e),
+                },
+            };
+            let elapsed = t0.elapsed().as_secs_f64();
+            let misses_after = engine_ref.workspace().misses();
+            (input, result, elapsed, misses_after - misses_before)
+        }));
+
+        let (input, result, elapsed, misses) = match exec {
+            Ok(parts) => parts,
+            Err(payload) => {
+                // The batch's requests survive the unwind (they were only
+                // borrowed): answer every one, then hand control to the
+                // supervisor to rebuild the engine.
+                let msg = panic_message(payload);
+                for r in &batch {
+                    respond(r, Err(Error::WorkerFailed(msg.clone())), latencies);
+                }
+                report.worker_panics += 1;
+                return LoopExit::Panicked(msg);
+            }
         };
-        report.busy_s += t0.elapsed().as_secs_f64();
+        report.busy_s += elapsed;
         if warm {
-            report.warm_misses += engine.workspace().misses() - misses_before;
+            report.warm_misses += misses;
         }
         seen_sizes.insert(k);
 
@@ -465,7 +844,7 @@ pub(crate) fn serve_loop(
                     for (_, c, h, w) in one.iter() {
                         values.push(out.get(j, c, h, w));
                     }
-                    respond(r, Ok(Inference { dims: one, values }), &mut latencies);
+                    respond(r, Ok(Inference { dims: one, values }), latencies);
                 }
                 report.served += k;
                 report.batches += 1;
@@ -479,16 +858,13 @@ pub(crate) fn serve_loop(
             }
             Err(e) => {
                 for r in &batch {
-                    respond(r, Err(e.clone()), &mut latencies);
+                    respond(r, Err(e.clone()), latencies);
                 }
             }
         }
         ins.insert(k, input);
     }
-    report.wall_s = started.elapsed().as_secs_f64();
-    (report.p50_latency_s, report.p99_latency_s) = latency_percentiles(&mut latencies);
-    (report.p50_queue_s, report.p99_queue_s) = latency_percentiles(&mut queue_waits);
-    report
+    LoopExit::Closed
 }
 
 #[cfg(test)]
@@ -538,6 +914,12 @@ mod tests {
         assert!(report.p50_queue_s <= report.p50_latency_s);
         // Greedy drain never waits for a window.
         assert_eq!(report.deadline_flushes, 0);
+        // No faults injected: the fault-tolerance counters stay zero.
+        assert_eq!(report.worker_panics, 0);
+        assert_eq!(report.respawns, 0);
+        assert_eq!(report.deadline_expired, 0);
+        assert_eq!(report.failed_answers, 0);
+        assert!(!report.dead);
     }
 
     #[test]
@@ -581,5 +963,64 @@ mod tests {
         let report = server.shutdown();
         assert!(report.max_queue_depth >= 1);
         assert!(report.occupancy() > 0.0 && report.occupancy() <= 1.0);
+    }
+
+    #[test]
+    fn zero_ttl_means_no_deadline_and_tiny_ttl_expires() {
+        let server = Server::start(tinynet_engine(), 4);
+        // Zero TTL is "no deadline": identical to plain submit.
+        let rx = server.submit_with_deadline(
+            Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, 1),
+            Duration::ZERO,
+        );
+        rx.recv().unwrap().unwrap();
+        // A 1 ns TTL has always expired by flush time.
+        let rx = server.submit_with_deadline(
+            Tensor4::random(Dims::new(1, 3, 32, 32), Layout::Nchw, 2),
+            Duration::from_nanos(1),
+        );
+        match rx.recv().unwrap() {
+            Err(Error::DeadlineExceeded(_)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let report = server.shutdown();
+        assert_eq!(report.served, 1);
+        assert_eq!(report.deadline_expired, 1);
+    }
+
+    #[test]
+    fn dropped_responder_answers_worker_failed() {
+        // The last line of ticket-liveness defense: dropping a request
+        // without answering delivers WorkerFailed instead of hanging.
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(Tensor4::zeros(Dims::new(1, 1, 1, 1), Layout::Nchw), tx);
+        drop(req);
+        match rx.recv().unwrap() {
+            Err(Error::WorkerFailed(_)) => {}
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        // A defused responder stays silent.
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(Tensor4::zeros(Dims::new(1, 1, 1, 1), Layout::Nchw), tx);
+        req.resp.defuse();
+        drop(req);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn queue_wait_window_tracks_worst_and_resets() {
+        let w = QueueWaitWindow::new();
+        assert_eq!(w.worst(), 0);
+        w.push(5);
+        w.push(900);
+        w.push(17);
+        assert_eq!(w.worst(), 900);
+        // Old samples age out once the window wraps.
+        for _ in 0..QueueWaitWindow::LEN {
+            w.push(3);
+        }
+        assert_eq!(w.worst(), 3);
+        w.reset();
+        assert_eq!(w.worst(), 0);
     }
 }

@@ -26,6 +26,14 @@
 //!   block `i·T .. (i+1)·T` via `sched_setaffinity` (the `pinning`
 //!   feature; portable no-op elsewhere), giving NUMA-style placement
 //!   where each shard's working set stays on its socket.
+//! * **Supervision** — every shard worker runs the supervised serve
+//!   loop: a panicking batch is caught and answered
+//!   [`crate::error::Error::WorkerFailed`], the shard's engine is
+//!   rebuilt from its plans (exponential backoff), and a shard that
+//!   exhausts [`super::ShardConfig::max_restarts`] is marked dead —
+//!   [`ShardedServer::submit`] routes around it while the dead worker
+//!   keeps draining so nothing already queued (or mistakenly pinned to
+//!   it) ever hangs.
 //!
 //! Plans are shard-aware: engines handed to [`ShardedServer::start`]
 //! should be planned with [`super::Planner::for_shards`], whose
@@ -40,20 +48,28 @@
 //! bounded lock-free rings with non-blocking admission and load
 //! shedding.
 
-use super::server::{serve_loop, Inference, Request, ServerReport, ShardConfig, Source};
+use super::server::{
+    serve_supervised, Inference, Request, ServerReport, ShardConfig, Source, Supervisor,
+};
 use super::Engine;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::Tensor4;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// One shard: its request channel, load gauge, and worker handle.
+/// One shard: its request channel, load gauge, supervision state and
+/// worker handle.
 struct Shard {
     tx: mpsc::Sender<Request>,
     depth: Arc<AtomicUsize>,
+    /// Set by the worker once its restart budget is exhausted; dispatch
+    /// routes around dead shards.
+    dead: Arc<AtomicBool>,
+    /// Last captured panic message, surfaced in `WorkerFailed` answers.
+    epitaph: Arc<Mutex<Option<String>>>,
     worker: JoinHandle<ServerReport>,
 }
 
@@ -73,9 +89,12 @@ pub(crate) fn resolve_threads_per_shard(cfg: &ShardConfig, nshards: usize) -> us
 /// Spawn shard `i`'s worker thread: build its private thread pool
 /// ([`resolve_threads_per_shard`] threads), optionally pin the worker
 /// group to the shard's disjoint core block, install the pool as the
-/// thread's scoped pool, and run the shared serve loop over `src` —
-/// identical placement and batching whether `src` is a synchronous
-/// channel ([`ShardedServer`]) or an async ring ([`super::AsyncServer`]).
+/// thread's scoped pool, and run the shared supervised serve loop over
+/// `src` — identical placement, batching and panic recovery whether
+/// `src` is a synchronous channel ([`ShardedServer`]) or an async ring
+/// ([`super::AsyncServer`]). `sup` carries the restart budget plus the
+/// dead flag/epitaph the front keeps clones of for routing and error
+/// messages.
 pub(crate) fn spawn_shard_worker(
     i: usize,
     engine: Engine,
@@ -83,6 +102,7 @@ pub(crate) fn spawn_shard_worker(
     depth: Arc<AtomicUsize>,
     cfg: &ShardConfig,
     tps: usize,
+    sup: Supervisor,
 ) -> JoinHandle<ServerReport> {
     let max_batch = cfg.max_batch.max(1);
     let deadline = cfg.deadline;
@@ -99,7 +119,7 @@ pub(crate) fn spawn_shard_worker(
                 parallel::pin_current_thread(&[c0]);
             }
             let _scoped = parallel::install_scoped(pool);
-            serve_loop(engine, src, max_batch, deadline, &depth)
+            serve_supervised(engine, src, max_batch, deadline, &depth, &sup)
         })
         .expect("failed to spawn shard worker")
 }
@@ -134,9 +154,19 @@ impl ShardedServer {
             .map(|(i, engine)| {
                 let (tx, rx) = mpsc::channel::<Request>();
                 let depth = Arc::new(AtomicUsize::new(0));
-                let worker =
-                    spawn_shard_worker(i, engine, Source::Mpsc(rx), Arc::clone(&depth), &cfg, tps);
-                Shard { tx, depth, worker }
+                let sup = Supervisor::new(&cfg);
+                let dead = Arc::clone(&sup.dead);
+                let epitaph = Arc::clone(&sup.epitaph);
+                let worker = spawn_shard_worker(
+                    i,
+                    engine,
+                    Source::Mpsc(rx),
+                    Arc::clone(&depth),
+                    &cfg,
+                    tps,
+                    sup,
+                );
+                Shard { tx, depth, dead, epitaph, worker }
             })
             .collect();
         ShardedServer { shards, rr: AtomicUsize::new(0) }
@@ -152,30 +182,84 @@ impl ShardedServer {
         self.shards[shard].depth.load(Ordering::Relaxed)
     }
 
-    /// Queue a single-image request on the least-loaded shard (smallest
-    /// queued+in-flight count; ties rotate round-robin so equally idle
-    /// shards share the traffic). The returned channel yields the result
-    /// once the owning shard's batch completes.
+    /// True once shard `shard` exhausted its restart budget and stopped
+    /// computing. [`ShardedServer::submit`] routes around dead shards;
+    /// requests pinned to one with [`ShardedServer::submit_to`] are
+    /// answered [`Error::WorkerFailed`].
+    ///
+    /// # Panics
+    /// Panics when `shard >= self.shards()`.
+    pub fn shard_is_dead(&self, shard: usize) -> bool {
+        self.shards[shard].dead.load(Ordering::Relaxed)
+    }
+
+    /// Queue a single-image request on the least-loaded live shard
+    /// (smallest queued+in-flight count; ties rotate round-robin so
+    /// equally idle shards share the traffic). Dead shards — restart
+    /// budget exhausted — are routed around; with every shard dead the
+    /// request is still admitted (and answered `WorkerFailed` by the
+    /// dead shard's drain) so the caller always gets a terminal answer.
+    /// The returned channel yields the result once the owning shard's
+    /// batch completes.
     pub fn submit(&self, image: Tensor4) -> mpsc::Receiver<Result<Inference>> {
+        self.submit_with_deadline(image, std::time::Duration::ZERO)
+    }
+
+    /// [`ShardedServer::submit`] with a per-request TTL: if `ttl`
+    /// elapses before the request's batch flushes it is answered with
+    /// [`Error::DeadlineExceeded`] instead of being executed.
+    /// [`std::time::Duration::ZERO`] means "no deadline".
+    pub fn submit_with_deadline(
+        &self,
+        image: Tensor4,
+        ttl: std::time::Duration,
+    ) -> mpsc::Receiver<Result<Inference>> {
         let n = self.shards.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         let shard = (0..n)
             .map(|k| (start + k) % n)
+            .filter(|&s| !self.shards[s].dead.load(Ordering::Relaxed))
             .min_by_key(|&s| self.shards[s].depth.load(Ordering::Relaxed))
-            .expect("at least one shard");
-        self.submit_to(shard, image)
+            .unwrap_or(start);
+        self.submit_with_deadline_to(shard, image, ttl)
     }
 
     /// Queue a request on a specific shard (tests, admission control).
+    /// A dead shard answers it [`Error::WorkerFailed`] (carrying the
+    /// worker's panic message) instead of computing.
     ///
     /// # Panics
     /// Panics when `shard >= self.shards()`.
     pub fn submit_to(&self, shard: usize, image: Tensor4) -> mpsc::Receiver<Result<Inference>> {
+        self.submit_with_deadline_to(shard, image, std::time::Duration::ZERO)
+    }
+
+    /// [`ShardedServer::submit_to`] with a per-request TTL
+    /// ([`std::time::Duration::ZERO`] = none).
+    ///
+    /// # Panics
+    /// Panics when `shard >= self.shards()`.
+    pub fn submit_with_deadline_to(
+        &self,
+        shard: usize,
+        image: Tensor4,
+        ttl: std::time::Duration,
+    ) -> mpsc::Receiver<Result<Inference>> {
         let s = &self.shards[shard];
         let (resp, result) = mpsc::channel();
         s.depth.fetch_add(1, Ordering::Relaxed);
-        if s.tx.send(Request::new(image, resp)).is_err() {
+        if let Err(mpsc::SendError(req)) = s.tx.send(Request::new(image, resp).with_ttl(ttl)) {
+            // The worker is gone entirely (its drain would otherwise
+            // answer): deliver the terminal answer ourselves.
             s.depth.fetch_sub(1, Ordering::Relaxed);
+            let msg = s
+                .epitaph
+                .lock()
+                .map(|g| g.clone())
+                .ok()
+                .flatten()
+                .unwrap_or_else(|| "shard worker exited".into());
+            req.resp.send(Err(Error::WorkerFailed(msg)));
         }
         result
     }
@@ -183,7 +267,10 @@ impl ShardedServer {
     /// Stop accepting requests and join every shard. All request channels
     /// close *before* any join, so the shards drain their queues
     /// concurrently; like [`super::Server::shutdown`], every queued
-    /// request is answered before its worker exits.
+    /// request is answered before its worker exits. A worker that
+    /// somehow escaped its supervision (a panic outside the guarded
+    /// batch path) is folded into its shard's report as dead rather
+    /// than propagated into the caller.
     pub fn shutdown(self) -> ShardedReport {
         let mut workers = Vec::with_capacity(self.shards.len());
         for s in self.shards {
@@ -192,7 +279,10 @@ impl ShardedServer {
         }
         let mut shards = Vec::with_capacity(workers.len());
         for w in workers {
-            shards.push(w.join().expect("shard worker panicked"));
+            shards.push(match w.join() {
+                Ok(report) => report,
+                Err(_) => ServerReport { worker_panics: 1, dead: true, ..ServerReport::default() },
+            });
         }
         ShardedReport { shards }
     }
@@ -249,6 +339,32 @@ impl ShardedReport {
     /// requests sat unbatched before any compute ran.
     pub fn p99_queue_s(&self) -> f64 {
         self.shards.iter().map(|s| s.p99_queue_s).fold(0.0, f64::max)
+    }
+
+    /// Supervised respawns across all shards (engines rebuilt after a
+    /// caught batch panic).
+    pub fn respawns(&self) -> usize {
+        self.shards.iter().map(|s| s.respawns).sum()
+    }
+
+    /// Batch executions that panicked and were caught, across all shards.
+    pub fn worker_panics(&self) -> usize {
+        self.shards.iter().map(|s| s.worker_panics).sum()
+    }
+
+    /// Shards that exhausted their restart budget and stopped computing.
+    pub fn dead_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.dead).count()
+    }
+
+    /// Requests answered `WorkerFailed` by dead-shard drains.
+    pub fn failed_answers(&self) -> usize {
+        self.shards.iter().map(|s| s.failed_answers).sum()
+    }
+
+    /// Requests answered `DeadlineExceeded` at flush time.
+    pub fn deadline_expired(&self) -> usize {
+        self.shards.iter().map(|s| s.deadline_expired).sum()
     }
 }
 

@@ -25,6 +25,13 @@ pub enum Error {
     /// The serving front refused or shed this request under overload
     /// (admission control — see `engine::async_front`).
     Overloaded(String),
+    /// The worker executing this request panicked or died; the request
+    /// was answered by the supervisor, not the kernel. Carries the
+    /// worker's panic message when one was captured.
+    WorkerFailed(String),
+    /// The request's deadline (TTL) expired before its batch flushed;
+    /// it was answered without burning kernel time.
+    DeadlineExceeded(String),
 }
 
 impl fmt::Display for Error {
@@ -38,6 +45,8 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::WorkerFailed(m) => write!(f, "worker failed: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }

@@ -17,6 +17,7 @@
 //!              [--deadline-us D] [--max-batch B] [--pin] [--graph]
 //!              [--cache plans.json] [--profile profile.json]
 //!              [--async] [--queue-depth N] [--shed reject|oldest]
+//!              [--ttl-us T] [--breaker N] [--fault site:key=val]...
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
 //! ```
@@ -33,8 +34,8 @@ use im2win::coordinator::{
     Record,
 };
 use im2win::engine::{
-    calibrate, AsyncConfig, AsyncServer, CalibrationProfile, Engine, PlanCache, Planner,
-    ShardConfig, ShardedServer, Shed, TrySubmitError,
+    calibrate, faultinject, AsyncConfig, AsyncServer, BreakerConfig, CalibrationProfile, Engine,
+    PlanCache, Planner, ShardConfig, ShardedServer, Shed, TrySubmitError,
 };
 use im2win::model::zoo;
 use im2win::prelude::*;
@@ -84,6 +85,12 @@ impl Flags {
 
     fn get(&self, key: &str) -> Option<&str> {
         self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Every value given for a repeatable flag (e.g. `--fault`), in
+    /// order of appearance.
+    fn all(&self, key: &str) -> Vec<&str> {
+        self.pairs.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 
     fn usize_or(&self, key: &str, default: usize) -> CliResult<usize> {
@@ -207,6 +214,13 @@ USAGE:
                   [--deadline-us D] [--max-batch B] [--pin] [--batch N] [--graph]
                   [--threads T] [--cache plans.json] [--profile profile.json]
                   [--async] [--queue-depth N] [--shed reject|oldest]
+                  [--ttl-us T]       per-request deadline (0 = none)
+                  [--breaker N]      open circuit after N consecutive full rings (0 = off; --async only)
+                  [--fault site:key=val]...   deterministic fault injection (repeatable;
+                                     needs a build with --features fault-inject).
+                                     sites: kernel_panic | slow_batch | cache_corrupt | artifact_mismatch
+                                     keys:  nth=N | every=K | once | ms=M
+                                     e.g. --fault kernel_panic:nth=3 --fault slow_batch:ms=50
   im2win roofline [--paper]
   im2win oracle   [--layer conv9]      (requires a build with --features pjrt-sys)
 ";
@@ -523,7 +537,7 @@ fn calibrate_cmd(flags: &Flags) -> CliResult<()> {
     // 4. Warm-pack: pre-fill the plan cache for the Table I suite.
     if flags.get("warm-pack").is_some() {
         let cache_path = flags.get("cache").unwrap_or("plans.json");
-        let mut cache = PlanCache::load(cache_path)?;
+        let mut cache = open_cache(cache_path);
         let planner =
             Planner { profile: Some(profile.clone()), threads, batch, ..Planner::new() };
         let dropped = cache.sync_profile(&planner.profile_fingerprint());
@@ -601,6 +615,21 @@ impl CommonArgs {
     }
 }
 
+/// Open a plan cache file, quarantining a corrupt one instead of
+/// refusing to start (see [`PlanCache::load_or_recover`]): the cache is
+/// a performance artifact, and losing it costs a re-plan, not the run.
+fn open_cache(path: &str) -> PlanCache {
+    let (cache, quarantined) = PlanCache::load_or_recover(path);
+    if let Some(q) = quarantined {
+        eprintln!(
+            "warning: plan cache {path} was unreadable; quarantined it to {} and starting \
+             empty (plans will be re-decided and re-saved)",
+            q.display()
+        );
+    }
+    cache
+}
+
 /// Shared by `plan`/`serve`: planner + cache configured from flags.
 fn planner_from_flags(common: &CommonArgs, flags: &Flags) -> CliResult<(Planner, PlanCache)> {
     let mut planner = Planner::new();
@@ -612,7 +641,7 @@ fn planner_from_flags(common: &CommonArgs, flags: &Flags) -> CliResult<(Planner,
     planner.threads = common.threads;
     planner.profile = common.profile.clone();
     let mut cache = match flags.get("cache") {
-        Some(path) => PlanCache::load(path)?,
+        Some(path) => open_cache(path),
         None => PlanCache::in_memory(),
     };
     // Entries decided under a different cost model are stale; drop them
@@ -698,12 +727,20 @@ fn plan(flags: &Flags) -> CliResult<()> {
 }
 
 fn serve(flags: &Flags) -> CliResult<()> {
+    // Arm fault injection first so a `cache_corrupt` fault can fire on
+    // the plan-cache load below (deterministic chaos testing; see
+    // `--features fault-inject`).
+    for spec in flags.all("fault") {
+        let armed = faultinject::arm_spec(spec).map_err(|e| err(format!("--fault {spec}: {e}")))?;
+        println!("fault armed: {} ({:?}, ms={})", armed.site.name(), armed.trigger, armed.ms);
+    }
     let common = CommonArgs::parse(flags, 8)?;
     let (planner, mut cache) = planner_from_flags(&common, flags)?;
     let requests = flags.usize_or("requests", 100)?;
     let max_batch = flags.usize_or("max-batch", common.batch)?;
     let shards = flags.usize_or("shards", 1)?.max(1);
     let deadline_us = flags.usize_or("deadline-us", 0)?;
+    let ttl = std::time::Duration::from_micros(flags.usize_or("ttl-us", 0)? as u64);
     let pin = flags.get("pin").is_some();
 
     // Plan every shard with the per-shard thread count so plan-cache keys
@@ -751,27 +788,59 @@ fn serve(flags: &Flags) -> CliResult<()> {
         deadline: std::time::Duration::from_micros(deadline_us as u64),
         threads_per_shard: shard_planner.threads,
         pin,
+        ..ShardConfig::default()
     };
     let dims = Dims::new(1, base.c, base.h, base.w);
     if flags.get("async").is_some() {
-        return serve_async(flags, engines, cfg, requests, dims);
+        return serve_async(flags, engines, cfg, requests, dims, ttl);
     }
     let server = ShardedServer::start(engines, cfg);
     let receivers: Vec<_> = (0..requests)
-        .map(|i| server.submit(Tensor4::random(dims, Layout::Nchw, i as u64)))
+        .map(|i| server.submit_with_deadline(Tensor4::random(dims, Layout::Nchw, i as u64), ttl))
         .collect();
+    // A fault-tolerant front answers every request terminally; individual
+    // failures (an injected panic, an expired TTL) are counted, not
+    // fatal — the exit code reflects whether the *server* survived.
+    let (mut ok, mut failed, mut expired) = (0usize, 0usize, 0usize);
     for rx in &receivers {
-        rx.recv()
-            .map_err(|_| err("server dropped a request"))?
-            .map_err(|e| err(format!("inference failed: {e}")))?;
+        match rx.recv().map_err(|_| err("server dropped a request"))? {
+            Ok(_) => ok += 1,
+            Err(im2win::error::Error::WorkerFailed(_)) => failed += 1,
+            Err(im2win::error::Error::DeadlineExceeded(_)) => expired += 1,
+            Err(e) => return Err(err(format!("inference failed: {e}"))),
+        }
     }
     let report = server.shutdown();
-    println!("\nserved {} requests in {} batches", report.served(), report.batches());
+    println!(
+        "\nserved {} requests in {} batches ({ok} OK, {failed} worker-failed, {expired} expired)",
+        report.served(),
+        report.batches()
+    );
     println!("  throughput     : {:.1} inf/s (longest shard wall)", report.throughput());
     println!("  deadline flush : {} batches", report.deadline_flushes());
     println!("  worst p99      : {}", fmt_time(report.p99_latency_s()));
+    print_fault_lines(&report);
     print_shard_lines(&report.shards);
     Ok(())
+}
+
+/// Supervision counters shared by the sync and async serve reports;
+/// printed only when something actually happened, so a healthy run's
+/// output is unchanged.
+fn print_fault_lines(report: &im2win::engine::ShardedReport) {
+    if report.worker_panics() > 0 || report.respawns() > 0 || report.dead_shards() > 0 {
+        println!(
+            "  supervision    : {} panic(s), {} respawn(s), {} dead shard(s), \
+             {} failed answer(s)",
+            report.worker_panics(),
+            report.respawns(),
+            report.dead_shards(),
+            report.failed_answers(),
+        );
+    }
+    if report.deadline_expired() > 0 {
+        println!("  ttl expired    : {} request(s)", report.deadline_expired());
+    }
 }
 
 /// Per-shard stat lines shared by the sync and async serve reports.
@@ -799,8 +868,9 @@ fn print_shard_lines(shards: &[im2win::engine::ServerReport]) {
 
 /// `im2win serve --async`: non-blocking submission through the bounded
 /// per-shard rings. The submit loop retries on
-/// [`TrySubmitError::QueueFull`] (counting each backpressure event) so
-/// every request is eventually admitted; with `--shed oldest` admission
+/// [`TrySubmitError::QueueFull`] / [`TrySubmitError::Overloaded`]
+/// (counting backpressure and breaker fast-fails separately) so every
+/// request is eventually admitted; with `--shed oldest` admission
 /// always succeeds and overload surfaces as shed (evicted) requests
 /// instead.
 fn serve_async(
@@ -809,21 +879,33 @@ fn serve_async(
     cfg: ShardConfig,
     requests: usize,
     dims: Dims,
+    ttl: std::time::Duration,
 ) -> CliResult<()> {
     let queue_depth = flags.usize_or("queue-depth", 256)?;
     let shed = match flags.get("shed") {
         None => Shed::Reject,
         Some(s) => Shed::parse(s).ok_or_else(|| err(format!("unknown shed policy '{s}'")))?,
     };
-    println!("async front: queue depth {queue_depth}/shard, shed policy '{shed}'");
-    let server = AsyncServer::start(engines, cfg, AsyncConfig { queue_depth, shed });
+    let breaker = match flags.usize_or("breaker", 0)? {
+        0 => None,
+        n => Some(BreakerConfig { consecutive_full: n, ..BreakerConfig::default() }),
+    };
+    println!(
+        "async front: queue depth {queue_depth}/shard, shed policy '{shed}'{}",
+        match &breaker {
+            Some(b) => format!(", breaker after {} consecutive full rings", b.consecutive_full),
+            None => String::new(),
+        }
+    );
+    let server = AsyncServer::start(engines, cfg, AsyncConfig { queue_depth, shed, breaker });
     let client = server.client();
     let mut tickets = Vec::with_capacity(requests);
     let mut queue_full = 0usize;
+    let mut breaker_fastfail = 0usize;
     for i in 0..requests {
         let mut image = Tensor4::random(dims, Layout::Nchw, i as u64);
         loop {
-            match client.try_submit(image) {
+            match client.try_submit_with_deadline(image, ttl) {
                 Ok(t) => {
                     tickets.push(t);
                     break;
@@ -833,39 +915,54 @@ fn serve_async(
                     image = back;
                     std::thread::yield_now();
                 }
+                Err(TrySubmitError::Overloaded(back)) => {
+                    breaker_fastfail += 1;
+                    image = back;
+                    // An open breaker refuses without touching the rings;
+                    // give the drain loops a moment before re-probing.
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
                 Err(TrySubmitError::Closed(_)) => {
                     return Err(err("server closed during submission"));
                 }
             }
         }
     }
-    let mut ok = 0usize;
-    let mut shed_seen = 0usize;
+    let (mut ok, mut shed_seen, mut failed, mut expired) = (0usize, 0usize, 0usize, 0usize);
     for t in tickets {
         match t.wait() {
             Ok(_) => ok += 1,
             Err(im2win::error::Error::Overloaded(_)) => shed_seen += 1,
+            Err(im2win::error::Error::WorkerFailed(_)) => failed += 1,
+            Err(im2win::error::Error::DeadlineExceeded(_)) => expired += 1,
             Err(e) => return Err(err(format!("inference failed: {e}"))),
         }
     }
     let report = server.shutdown();
     println!(
-        "\nserved {} requests in {} batches ({} answered OK, {} shed)",
+        "\nserved {} requests in {} batches ({ok} OK, {shed_seen} shed, {failed} worker-failed, \
+         {expired} expired)",
         report.sharded.served(),
         report.sharded.batches(),
-        ok,
-        shed_seen,
     );
     println!("  throughput     : {:.1} inf/s (longest shard wall)", report.sharded.throughput());
     println!("  backpressure   : {queue_full} QueueFull retries at the submit loop");
     println!("  shed           : {} requests (policy '{shed}')", report.shed);
     println!("  slot allocs    : {} (0 = allocation-free submit path)", report.slot_allocs);
     println!("  deadline flush : {} batches", report.sharded.deadline_flushes());
+    if let Some(b) = &report.breaker {
+        println!(
+            "  breaker        : {} open(s), {} half-open probe(s), {} close(s), \
+             final state {} ({breaker_fastfail} fast-fails at the submit loop)",
+            b.opens, b.half_opens, b.closes, b.state,
+        );
+    }
     println!(
         "  worst queue p99: {}  worst done p99: {}",
         fmt_time(report.sharded.p99_queue_s()),
         fmt_time(report.sharded.p99_latency_s()),
     );
+    print_fault_lines(&report.sharded);
     print_shard_lines(&report.sharded.shards);
     Ok(())
 }

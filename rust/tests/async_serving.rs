@@ -66,7 +66,7 @@ fn full_ring_backpressures_with_queue_full_not_deadlock() {
     let server = AsyncServer::start(
         vec![tinynet_engine(1)],
         cfg,
-        AsyncConfig { queue_depth: 2, shed: Shed::Reject },
+        AsyncConfig { queue_depth: 2, shed: Shed::Reject, ..AsyncConfig::default() },
     );
     let client = server.client();
     let mut tickets = Vec::new();
@@ -86,6 +86,7 @@ fn full_ring_backpressures_with_queue_full_not_deadlock() {
                 img = back; // retry without a copy
                 std::thread::sleep(Duration::from_micros(50));
             }
+            Err(TrySubmitError::Overloaded(_)) => panic!("no breaker configured"),
             Err(TrySubmitError::Closed(_)) => panic!("server closed mid-test"),
         }
     }
@@ -108,7 +109,7 @@ fn oldest_first_shed_evicts_queued_work_instead_of_refusing() {
     let server = AsyncServer::start(
         vec![tinynet_engine(1)],
         cfg,
-        AsyncConfig { queue_depth: 2, shed: Shed::OldestFirst },
+        AsyncConfig { queue_depth: 2, shed: Shed::OldestFirst, ..AsyncConfig::default() },
     );
     let client = server.client();
     // Under OldestFirst every submit is admitted — overload lands on the
@@ -139,7 +140,7 @@ fn wait_timeout_expires_then_the_result_still_arrives() {
     let server = AsyncServer::start(
         vec![tinynet_engine(1)],
         cfg,
-        AsyncConfig { queue_depth: 256, shed: Shed::Reject },
+        AsyncConfig { queue_depth: 256, shed: Shed::Reject, ..AsyncConfig::default() },
     );
     let client = server.client();
     let mut tickets: Vec<_> =
@@ -231,7 +232,7 @@ fn shutdown_drains_every_admitted_ticket() {
     let server = AsyncServer::start(
         vec![tinynet_engine(1), tinynet_engine(1)],
         small_cfg(),
-        AsyncConfig { queue_depth: 64, shed: Shed::Reject },
+        AsyncConfig { queue_depth: 64, shed: Shed::Reject, ..AsyncConfig::default() },
     );
     let client = server.client();
     let mut tickets: Vec<_> =
@@ -256,6 +257,7 @@ fn submits_after_shutdown_are_refused_cleanly() {
     match client.try_submit(image(2)) {
         Err(TrySubmitError::Closed(img)) => assert_eq!(img.dims(), Dims::new(1, 3, 32, 32)),
         Err(TrySubmitError::QueueFull(_)) => panic!("closed front reported QueueFull"),
+        Err(TrySubmitError::Overloaded(_)) => panic!("closed front reported Overloaded"),
         Ok(_) => panic!("closed front admitted a request"),
     }
 }
@@ -265,7 +267,7 @@ fn steady_state_submit_path_allocates_no_completion_slots() {
     let server = AsyncServer::start(
         vec![tinynet_engine(1)],
         small_cfg(),
-        AsyncConfig { queue_depth: 16, shed: Shed::Reject },
+        AsyncConfig { queue_depth: 16, shed: Shed::Reject, ..AsyncConfig::default() },
     );
     let client = server.client();
     // Sequential submit → wait keeps outstanding tickets at 1: the
@@ -280,6 +282,7 @@ fn steady_state_submit_path_allocates_no_completion_slots() {
                     img = back;
                     std::thread::yield_now();
                 }
+                Err(TrySubmitError::Overloaded(_)) => panic!("no breaker configured"),
                 Err(TrySubmitError::Closed(_)) => panic!("server closed mid-test"),
             }
         };
