@@ -11,7 +11,10 @@
 //! CI invariant), and the widened algorithm menu — indirect convolution
 //! and Winograd F(2×2, 3×3) prepacked throughput on a Table I 3×3
 //! layer, with the planner's per-family selection counts over the
-//! Table I 3×3/stride-1 sweep as CI invariants. Future PRs touching the
+//! Table I 3×3/stride-1 sweep as CI invariants, and the
+//! reduced-precision serving path — the biased tinynet forced to the
+//! f16 and int8 tiers, with the loosened-budget planner's sub-f32
+//! selection counts over the full Table I as CI invariants. Future PRs touching the
 //! engine, workspace, server or dispatcher compare against these
 //! numbers to catch serving regressions.
 //!
@@ -30,8 +33,9 @@ use im2win::bench_harness::{fmt_time, measure_throughput};
 use im2win::config::json::Json;
 use im2win::config::Scale;
 use im2win::conv::indirect::IndirectConv;
+use im2win::conv::precision::{F16_TOLERANCE, INT8_TOLERANCE};
 use im2win::conv::winograd::{WinogradConv, WINOGRAD_TOLERANCE};
-use im2win::conv::{AlgoKind, ConvAlgorithm, ConvParams};
+use im2win::conv::{AlgoKind, ConvAlgorithm, ConvParams, Precision};
 use im2win::coordinator::layers;
 use im2win::engine::{
     AsyncConfig, AsyncServer, Engine, PlanCache, Planner, Server, ShardConfig, ShardedServer,
@@ -400,6 +404,58 @@ fn main() {
         sweep_names.len()
     );
 
+    // Reduced-precision serving: the biased tinynet forced to each
+    // sub-f32 tier (filters packed once through the tier's grid at plan
+    // time, activations converted in the lowering step, f32
+    // accumulation; int8 folds its dequant scales into the fused
+    // epilogue). The selection sweep runs the analytic planner pinned
+    // to threads=4 / batch=8 over the full Table I at each tier's
+    // admission budget: the selected_layers rows are CI invariants —
+    // if a loosened tolerance ever stops buying a sub-f32 plan on any
+    // Table I layer, the row hits zero and the gate fails.
+    let f16_budget = Planner { threads: 4, batch: 8, tolerance: F16_TOLERANCE, ..Planner::new() };
+    let int8_budget = Planner { tolerance: INT8_TOLERANCE, ..f16_budget.clone() };
+    let mut f16_selected = 0usize;
+    let mut int8_selected = 0usize;
+    for l in layers::TABLE1.iter() {
+        let p = l.params(8);
+        if f16_budget.plan_conv(&p, Layout::Nhwc).precision.is_reduced() {
+            f16_selected += 1;
+        }
+        if int8_budget.plan_conv(&p, Layout::Nhwc).precision == Precision::Int8 {
+            int8_selected += 1;
+        }
+    }
+    println!("\nreduced-precision serving (biased tinynet forced per tier, batch 8):");
+    let mut precision_rows: Vec<(&'static str, f64, usize)> = Vec::new();
+    for (prec, selected) in
+        [(Precision::F16AccF32, f16_selected), (Precision::Int8, int8_selected)]
+    {
+        let planner =
+            Planner { precision: Some(prec), tolerance: prec.min_tolerance(), ..Planner::new() };
+        let model =
+            zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 7).expect("biased tinynet");
+        let mut cache = PlanCache::in_memory();
+        let mut eng =
+            Engine::plan(model, &planner, &mut cache).expect("reduced-tier planning succeeds");
+        let batch = 8;
+        let x = Tensor4::random(Dims::new(batch, 3, 32, 32), Layout::Nchw, batch as u64);
+        let mut out =
+            Tensor4::zeros(eng.output_dims(batch).expect("output dims"), Layout::Nchw);
+        let r = measure_throughput(batch, iters, || {
+            eng.forward_into(&x, &mut out).expect("reduced-tier forward succeeds");
+        });
+        println!(
+            "  {:<4}: {:>8.1} inf/s   ({} of {} Table I layers planner-selected at tol {:.0e})",
+            prec.name(),
+            r.inf_per_s(),
+            selected,
+            layers::TABLE1.len(),
+            prec.min_tolerance(),
+        );
+        precision_rows.push((prec.name(), r.inf_per_s(), selected));
+    }
+
     // Machine-readable artifact for the CI perf trajectory.
     if let Some(path) = common::json_path() {
         let doc = Json::object(vec![
@@ -437,6 +493,20 @@ fn main() {
                 Json::object(vec![
                     ("inf_per_s", Json::Number(wino_r.inf_per_s())),
                     ("selected_layers", Json::Number(winograd_layers as f64)),
+                ]),
+            ),
+            (
+                "f16",
+                Json::object(vec![
+                    ("inf_per_s", Json::Number(precision_rows[0].1)),
+                    ("selected_layers", Json::Number(precision_rows[0].2 as f64)),
+                ]),
+            ),
+            (
+                "int8",
+                Json::object(vec![
+                    ("inf_per_s", Json::Number(precision_rows[1].1)),
+                    ("selected_layers", Json::Number(precision_rows[1].2 as f64)),
                 ]),
             ),
             (

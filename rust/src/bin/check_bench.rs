@@ -12,7 +12,11 @@
 //! planner-selected depthwise layer count) and `indirect.*` /
 //! `winograd.*` (the widened algorithm menu: prepacked throughput plus
 //! the planner-selected layer count over the Table I 3×3/stride-1
-//! sweep — a zero count means the family fell out of the menu) plus
+//! sweep — a zero count means the family fell out of the menu),
+//! `f16.*` / `int8.*` (the reduced-precision serving path: forced-tier
+//! throughput plus the loosened-budget planner's sub-f32 selection
+//! count over the full Table I — a zero count means the precision axis
+//! fell out of the candidate menu) plus
 //! `server.inf_per_s`, `sharded.inf_per_s` and
 //! `async.inf_per_s` (the non-blocking ring front under open-loop
 //! offered load) — the headline numbers
@@ -116,7 +120,16 @@ fn load(path: &str) -> Result<Json, String> {
 /// The throughput metrics a serving-bench document exposes (name, value).
 fn metrics(doc: &Json) -> Vec<(String, f64)> {
     let mut out = Vec::new();
-    for section in ["engine_inf_per_s", "prepacked", "graph", "mobilenet", "indirect", "winograd"] {
+    for section in [
+        "engine_inf_per_s",
+        "prepacked",
+        "graph",
+        "mobilenet",
+        "indirect",
+        "winograd",
+        "f16",
+        "int8",
+    ] {
         if let Some(rows) = doc.get(section).and_then(Json::as_object) {
             for (k, v) in rows {
                 if let Some(n) = v.as_f64() {

@@ -22,8 +22,16 @@ use crate::simd::{F32x8, LANES};
 use crate::tensor::Tensor4;
 
 /// What to fold into the kernel's accumulator store for each output
-/// element of channel `c_o`. Bias slices are indexed by output channel
-/// and must hold exactly `C_o` values ([`Epilogue::check`]).
+/// element of channel `c_o`. Bias and dequant-scale slices are indexed by
+/// output channel and must hold exactly `C_o` values
+/// ([`Epilogue::check`]).
+///
+/// The `Dequant*` arms serve the int8 precision tier: the kernel's
+/// accumulator holds an exact integer sum, and the per-channel scale
+/// `s_a·s_w[c_o]` converts it back to real units at the store — the same
+/// single-touch spot the bias/ReLU fusion uses. Order is
+/// `v·scale → +bias → ReLU`, so the bias stays in output (dequantized)
+/// units.
 #[derive(Clone, Copy, Debug, Default)]
 pub enum Epilogue<'a> {
     /// Store the raw convolution result (the historical behavior).
@@ -35,6 +43,30 @@ pub enum Epilogue<'a> {
     Bias(&'a [f32]),
     /// Add `bias[c_o]`, then clamp to `max(v, 0)`.
     BiasRelu(&'a [f32]),
+    /// Multiply by `scales[c_o]` (int8 dequantization).
+    Dequant {
+        /// Per-output-channel dequant scale `s_a·s_w[c_o]`.
+        scales: &'a [f32],
+    },
+    /// Multiply by `scales[c_o]`, then clamp to `max(v, 0)`.
+    DequantRelu {
+        /// Per-output-channel dequant scale.
+        scales: &'a [f32],
+    },
+    /// Multiply by `scales[c_o]`, then add `bias[c_o]`.
+    DequantBias {
+        /// Per-output-channel dequant scale.
+        scales: &'a [f32],
+        /// Bias in dequantized (output) units.
+        bias: &'a [f32],
+    },
+    /// Multiply by `scales[c_o]`, add `bias[c_o]`, clamp to `max(v, 0)`.
+    DequantBiasRelu {
+        /// Per-output-channel dequant scale.
+        scales: &'a [f32],
+        /// Bias in dequantized (output) units.
+        bias: &'a [f32],
+    },
 }
 
 impl<'a> Epilogue<'a> {
@@ -48,7 +80,22 @@ impl<'a> Epilogue<'a> {
     #[inline(always)]
     pub fn bias(&self) -> Option<&'a [f32]> {
         match *self {
-            Epilogue::Bias(b) | Epilogue::BiasRelu(b) => Some(b),
+            Epilogue::Bias(b)
+            | Epilogue::BiasRelu(b)
+            | Epilogue::DequantBias { bias: b, .. }
+            | Epilogue::DequantBiasRelu { bias: b, .. } => Some(b),
+            _ => None,
+        }
+    }
+
+    /// The dequant-scale slice, if this epilogue carries one.
+    #[inline(always)]
+    pub fn scales(&self) -> Option<&'a [f32]> {
+        match *self {
+            Epilogue::Dequant { scales }
+            | Epilogue::DequantRelu { scales }
+            | Epilogue::DequantBias { scales, .. }
+            | Epilogue::DequantBiasRelu { scales, .. } => Some(scales),
             _ => None,
         }
     }
@@ -56,18 +103,51 @@ impl<'a> Epilogue<'a> {
     /// True when the epilogue ends in a ReLU clamp.
     #[inline(always)]
     pub fn relu(&self) -> bool {
-        matches!(self, Epilogue::Relu | Epilogue::BiasRelu(_))
+        matches!(
+            self,
+            Epilogue::Relu
+                | Epilogue::BiasRelu(_)
+                | Epilogue::DequantRelu { .. }
+                | Epilogue::DequantBiasRelu { .. }
+        )
     }
 
-    /// Validate the bias length against the layer's output channel count.
-    pub fn check(&self, c_out: usize) -> Result<()> {
-        match self.bias() {
-            Some(b) if b.len() != c_out => Err(Error::ShapeMismatch(format!(
-                "epilogue bias has {} entries, layer has {c_out} output channels",
-                b.len()
-            ))),
-            _ => Ok(()),
+    /// Fold a per-channel dequant scale in front of this epilogue —
+    /// how the int8 kernels convert a caller's bias/ReLU request into
+    /// the matching `Dequant*` arm at the accumulator store. Must not
+    /// already carry a scale.
+    #[inline]
+    pub fn with_dequant(self, scales: &'a [f32]) -> Epilogue<'a> {
+        debug_assert!(self.scales().is_none(), "epilogue already dequantizes");
+        match self {
+            Epilogue::None => Epilogue::Dequant { scales },
+            Epilogue::Relu => Epilogue::DequantRelu { scales },
+            Epilogue::Bias(bias) => Epilogue::DequantBias { scales, bias },
+            Epilogue::BiasRelu(bias) => Epilogue::DequantBiasRelu { scales, bias },
+            other => other,
         }
+    }
+
+    /// Validate bias/scale lengths against the layer's output channel
+    /// count.
+    pub fn check(&self, c_out: usize) -> Result<()> {
+        if let Some(b) = self.bias() {
+            if b.len() != c_out {
+                return Err(Error::ShapeMismatch(format!(
+                    "epilogue bias has {} entries, layer has {c_out} output channels",
+                    b.len()
+                )));
+            }
+        }
+        if let Some(s) = self.scales() {
+            if s.len() != c_out {
+                return Err(Error::ShapeMismatch(format!(
+                    "epilogue dequant scales have {} entries, layer has {c_out} output channels",
+                    s.len()
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Apply to one scalar output of channel `co`.
@@ -78,6 +158,10 @@ impl<'a> Epilogue<'a> {
             Epilogue::Relu => v.max(0.0),
             Epilogue::Bias(b) => v + b[co],
             Epilogue::BiasRelu(b) => (v + b[co]).max(0.0),
+            Epilogue::Dequant { scales } => v * scales[co],
+            Epilogue::DequantRelu { scales } => (v * scales[co]).max(0.0),
+            Epilogue::DequantBias { scales, bias } => v * scales[co] + bias[co],
+            Epilogue::DequantBiasRelu { scales, bias } => (v * scales[co] + bias[co]).max(0.0),
         }
     }
 
@@ -90,21 +174,33 @@ impl<'a> Epilogue<'a> {
             Epilogue::Relu => v.max(F32x8::zero()),
             Epilogue::Bias(b) => v.add(F32x8::splat(b[co])),
             Epilogue::BiasRelu(b) => v.add(F32x8::splat(b[co])).max(F32x8::zero()),
+            Epilogue::Dequant { scales } => v.mul(F32x8::splat(scales[co])),
+            Epilogue::DequantRelu { scales } => {
+                v.mul(F32x8::splat(scales[co])).max(F32x8::zero())
+            }
+            Epilogue::DequantBias { scales, bias } => {
+                v.mul(F32x8::splat(scales[co])).add(F32x8::splat(bias[co]))
+            }
+            Epilogue::DequantBiasRelu { scales, bias } => v
+                .mul(F32x8::splat(scales[co]))
+                .add(F32x8::splat(bias[co]))
+                .max(F32x8::zero()),
         }
     }
 
     /// Apply to an 8-lane vector of outputs belonging to *consecutive
     /// channels* `co0..co0+8` (the NHWC depthwise store shape: lanes are
-    /// channels, so a bias epilogue loads eight bias entries instead of
-    /// splatting one). The bias slice must reach `co0 + 8`; callers with
-    /// a channel tail use the scalar [`Epilogue::apply`] instead.
+    /// channels, so bias/scale epilogues load eight entries instead of
+    /// splatting one). The bias/scale slices must reach `co0 + 8`;
+    /// callers with a channel tail use the scalar [`Epilogue::apply`]
+    /// instead.
     #[inline(always)]
     pub fn apply_channels(&self, co0: usize, v: F32x8) -> F32x8 {
         match *self {
             Epilogue::None => v,
             Epilogue::Relu => v.max(F32x8::zero()),
-            // SAFETY: callers guarantee bias[co0..co0+8] is in bounds
-            // (checked here in debug builds).
+            // SAFETY: callers guarantee bias/scale[co0..co0+8] is in
+            // bounds (checked here in debug builds).
             Epilogue::Bias(b) => {
                 debug_assert!(co0 + LANES <= b.len());
                 v.add(unsafe { F32x8::load(b.as_ptr().add(co0)) })
@@ -112,6 +208,29 @@ impl<'a> Epilogue<'a> {
             Epilogue::BiasRelu(b) => {
                 debug_assert!(co0 + LANES <= b.len());
                 v.add(unsafe { F32x8::load(b.as_ptr().add(co0)) }).max(F32x8::zero())
+            }
+            Epilogue::Dequant { scales } => {
+                debug_assert!(co0 + LANES <= scales.len());
+                v.mul(unsafe { F32x8::load(scales.as_ptr().add(co0)) })
+            }
+            Epilogue::DequantRelu { scales } => {
+                debug_assert!(co0 + LANES <= scales.len());
+                v.mul(unsafe { F32x8::load(scales.as_ptr().add(co0)) }).max(F32x8::zero())
+            }
+            Epilogue::DequantBias { scales, bias } => {
+                debug_assert!(co0 + LANES <= scales.len() && co0 + LANES <= bias.len());
+                unsafe {
+                    v.mul(F32x8::load(scales.as_ptr().add(co0)))
+                        .add(F32x8::load(bias.as_ptr().add(co0)))
+                }
+            }
+            Epilogue::DequantBiasRelu { scales, bias } => {
+                debug_assert!(co0 + LANES <= scales.len() && co0 + LANES <= bias.len());
+                unsafe {
+                    v.mul(F32x8::load(scales.as_ptr().add(co0)))
+                        .add(F32x8::load(bias.as_ptr().add(co0)))
+                        .max(F32x8::zero())
+                }
             }
         }
     }
@@ -225,6 +344,74 @@ mod tests {
         for chunk in blocked.data().chunks_exact(8) {
             assert!(chunk[5..].iter().all(|&v| v == 0.0), "padding lane disturbed");
         }
+    }
+
+    #[test]
+    fn dequant_arms_scale_then_bias_then_clamp() {
+        let scales = [0.5f32, 2.0];
+        let bias = [1.0f32, -7.0];
+        assert_eq!(Epilogue::Dequant { scales: &scales }.apply(1, 3.0), 6.0);
+        assert_eq!(Epilogue::DequantRelu { scales: &scales }.apply(0, -4.0), 0.0);
+        assert_eq!(Epilogue::DequantBias { scales: &scales, bias: &bias }.apply(1, 3.0), -1.0);
+        // scale → bias → relu: (3·2 − 7) clamps at 0.
+        assert_eq!(
+            Epilogue::DequantBiasRelu { scales: &scales, bias: &bias }.apply(1, 3.0),
+            0.0
+        );
+        assert_eq!(
+            Epilogue::DequantBiasRelu { scales: &scales, bias: &bias }.apply(0, 4.0),
+            3.0
+        );
+    }
+
+    #[test]
+    fn with_dequant_wraps_each_base_arm() {
+        let scales = [0.5f32; 3];
+        let bias = [1.0f32; 3];
+        assert!(matches!(Epilogue::None.with_dequant(&scales), Epilogue::Dequant { .. }));
+        assert!(matches!(Epilogue::Relu.with_dequant(&scales), Epilogue::DequantRelu { .. }));
+        assert!(matches!(
+            Epilogue::Bias(&bias).with_dequant(&scales),
+            Epilogue::DequantBias { .. }
+        ));
+        let full = Epilogue::BiasRelu(&bias).with_dequant(&scales);
+        assert!(matches!(full, Epilogue::DequantBiasRelu { .. }));
+        assert_eq!(full.bias(), Some(&bias[..]));
+        assert_eq!(full.scales(), Some(&scales[..]));
+        assert!(full.relu());
+        assert!(!full.is_none());
+    }
+
+    #[test]
+    fn dequant_vector_paths_match_scalar() {
+        let scales: Vec<f32> = (0..16).map(|i| 0.1 + i as f32 * 0.05).collect();
+        let bias: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let v = unsafe { F32x8::load(x.as_ptr()) };
+        let eps = [
+            Epilogue::Dequant { scales: &scales },
+            Epilogue::DequantRelu { scales: &scales },
+            Epilogue::DequantBias { scales: &scales, bias: &bias },
+            Epilogue::DequantBiasRelu { scales: &scales, bias: &bias },
+        ];
+        for ep in eps {
+            let same_channel = ep.apply_vec(3, v).to_array();
+            let per_channel = ep.apply_channels(4, v).to_array();
+            for (lane, &xv) in x.iter().enumerate() {
+                assert_eq!(same_channel[lane], ep.apply(3, xv), "{ep:?} vec lane {lane}");
+                assert_eq!(per_channel[lane], ep.apply(4 + lane, xv), "{ep:?} chan lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn check_validates_scale_length() {
+        let scales = [1.0f32; 4];
+        let bias = [0.0f32; 5];
+        assert!(Epilogue::Dequant { scales: &scales }.check(4).is_ok());
+        assert!(Epilogue::DequantRelu { scales: &scales }.check(5).is_err());
+        assert!(Epilogue::DequantBias { scales: &scales, bias: &bias }.check(4).is_err());
+        assert!(Epilogue::DequantBias { scales: &scales, bias: &bias }.check(5).is_err());
     }
 
     #[test]

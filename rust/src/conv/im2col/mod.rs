@@ -28,11 +28,13 @@
 //! microkernel stores its final accumulator tile.
 
 use super::{
-    check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact,
+    check_geometry, check_io_geometry, precision, ConvAlgorithm, ConvParams, Epilogue,
+    PlanArtifact, Precision,
 };
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
 use crate::gemm::{sgemm_fused, GemmEpilogue};
+use crate::simd;
 use crate::tensor::{AlignedBuf, CHWN8_BLOCK, Layout, Tensor4};
 
 /// im2col-based convolution backed by the blocked SGEMM.
@@ -76,9 +78,21 @@ fn filter_pack_len(p: &ConvParams, layout: Layout) -> usize {
 pub(crate) fn gemm_ep(ep: Epilogue<'_>, per_row: bool) -> Option<GemmEpilogue<'_>> {
     match ep {
         Epilogue::None => None,
-        Epilogue::Relu => Some(GemmEpilogue { bias: None, relu: true, per_row }),
-        Epilogue::Bias(b) => Some(GemmEpilogue { bias: Some(b), relu: false, per_row }),
-        Epilogue::BiasRelu(b) => Some(GemmEpilogue { bias: Some(b), relu: true, per_row }),
+        Epilogue::Relu => Some(GemmEpilogue { bias: None, relu: true, scale: None, per_row }),
+        Epilogue::Bias(b) => Some(GemmEpilogue { bias: Some(b), relu: false, scale: None, per_row }),
+        Epilogue::BiasRelu(b) => Some(GemmEpilogue { bias: Some(b), relu: true, scale: None, per_row }),
+        Epilogue::Dequant { scales } => {
+            Some(GemmEpilogue { bias: None, relu: false, scale: Some(scales), per_row })
+        }
+        Epilogue::DequantRelu { scales } => {
+            Some(GemmEpilogue { bias: None, relu: true, scale: Some(scales), per_row })
+        }
+        Epilogue::DequantBias { scales, bias } => {
+            Some(GemmEpilogue { bias: Some(bias), relu: false, scale: Some(scales), per_row })
+        }
+        Epilogue::DequantBiasRelu { scales, bias } => {
+            Some(GemmEpilogue { bias: Some(bias), relu: true, scale: Some(scales), per_row })
+        }
     }
 }
 
@@ -177,6 +191,68 @@ impl ConvAlgorithm for Im2colConv {
         Ok(PlanArtifact::from_buf(self.name(), layout, p, buf))
     }
 
+    fn prepare_with_precision(
+        &self,
+        filter: &Tensor4,
+        p: &ConvParams,
+        layout: Layout,
+        prec: Precision,
+    ) -> Result<PlanArtifact> {
+        if prec == Precision::F32 {
+            return self.prepare(filter, p, layout);
+        }
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        if p.groups > 1 {
+            return Err(Error::UnsupportedPrecision(format!(
+                "im2col reduced-precision packs do not cover grouped convolutions (groups={})",
+                p.groups
+            )));
+        }
+        let owned;
+        let f = if filter.layout() == layout {
+            filter
+        } else {
+            owned = filter.to_layout(layout);
+            &owned
+        };
+        // Round/quantize the filter logically, then reuse the f32 pack
+        // routines — the packed values are already on the target grid, so
+        // the final narrowing is exact.
+        let len = p.filter_dims().count();
+        let mut buf = AlignedBuf::zeroed(len);
+        let pack_into = |rf: &Tensor4, buf: &mut [f32]| match layout {
+            Layout::Nchw => {
+                // Already [Co][K] row-major: a straight copy is the pack.
+                super::note_filter_pack();
+                buf.copy_from_slice(rf.data());
+            }
+            Layout::Nhwc => pack_filter_nhwc_t(rf, p, buf),
+            Layout::Chwn | Layout::Chwn8 => pack_filter_chwn(rf, p, buf),
+        };
+        if prec == Precision::Int8 {
+            let scales = precision::filter_scales(f, p);
+            let qf = precision::quantized_filter(f, p, &scales);
+            pack_into(&qf, &mut buf);
+            let data: Vec<i8> = buf.iter().map(|&x| x as i8).collect();
+            Ok(PlanArtifact::from_quant(self.name(), layout, p, data, scales))
+        } else {
+            let rf = precision::rounded_tensor(f, prec);
+            pack_into(&rf, &mut buf);
+            let bits: Vec<u16> = if prec == Precision::F16AccF32 {
+                buf.iter().map(|&x| simd::f32_to_f16_bits(x)).collect()
+            } else {
+                buf.iter().map(|&x| simd::f32_to_bf16_bits(x)).collect()
+            };
+            Ok(PlanArtifact::from_half_bits(self.name(), layout, p, bits, prec))
+        }
+    }
+
     fn run_prepacked(
         &self,
         input: &Tensor4,
@@ -195,38 +271,81 @@ impl ConvAlgorithm for Im2colConv {
             })?;
             return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
         }
-        let fmat = packed
-            .buf()
-            .ok_or_else(|| Error::Config("im2col pack holds no filter matrix".into()))?;
         let layout = input.layout();
         let mut mat = ws.take("im2col.mat", im2col_matrix_len(p, layout));
         out.data_mut().fill(0.0);
-        match layout {
-            Layout::Nchw => {
-                lower_nchw(input, p, &mut mat);
-                gemm_nchw(&mat, fmat, p, out, ep);
+        match packed.precision() {
+            Precision::F32 => {
+                let fmat = packed
+                    .buf()
+                    .ok_or_else(|| Error::Config("im2col pack holds no filter matrix".into()))?;
+                lower_into(input, p, &mut mat);
+                gemm_into(&mat, fmat, p, out, ep);
             }
-            Layout::Nhwc => {
-                lower_nhwc(input, p, &mut mat);
-                gemm_nhwc(&mat, fmat, p, out, ep);
-            }
-            Layout::Chwn => {
-                lower_chwn(input, p, &mut mat);
-                gemm_chwn(&mat, fmat, p, out, ep);
-            }
-            Layout::Chwn8 => {
-                lower_chwn8(input, p, &mut mat);
-                gemm_chwn8(&mat, fmat, p, out, ep);
-                // The per-row epilogue covers every column of the blocked
-                // GEMM output, including batch-padding lanes of the final
-                // block; restore their zero invariant.
-                if ep.bias().is_some() {
-                    zero_chwn8_batch_padding(out, p);
+            prec @ (Precision::F16AccF32 | Precision::Bf16AccF32) => {
+                let bits = packed.half_bits().ok_or_else(|| {
+                    Error::Config("im2col half-precision pack holds no bit buffer".into())
+                })?;
+                let mut fmat = ws.take("im2col.fmat", bits.len());
+                if prec == Precision::F16AccF32 {
+                    simd::f16_bits_to_f32_slice(bits, &mut fmat);
+                } else {
+                    simd::bf16_bits_to_f32_slice(bits, &mut fmat);
                 }
+                lower_into(input, p, &mut mat);
+                // The unrolled matrix rides the same grid as the pack; the
+                // GEMM then accumulates the rounded products in f32.
+                precision::round_activations(&mut mat, prec);
+                gemm_into(&mat, &fmat, p, out, ep);
+                ws.put("im2col.fmat", fmat);
+            }
+            Precision::Int8 => {
+                let (qdata, wscales) = packed.quant().ok_or_else(|| {
+                    Error::Config("im2col int8 pack holds no quantized buffer".into())
+                })?;
+                let mut fmat = ws.take("im2col.fmat", qdata.len());
+                simd::i8_to_f32_slice(qdata, &mut fmat);
+                // Per-tensor activation scale from the input (padding
+                // zeros in the unrolled matrix quantize to zero anyway).
+                let s_a = precision::activation_scale(input.data());
+                lower_into(input, p, &mut mat);
+                precision::quantize_slice(&mut mat, s_a);
+                let combined: Vec<f32> =
+                    wscales.iter().map(|&s_w| s_w * s_a).collect();
+                gemm_into(&mat, &fmat, p, out, ep.with_dequant(&combined));
+                ws.put("im2col.fmat", fmat);
             }
         }
         ws.put("im2col.mat", mat);
         Ok(())
+    }
+}
+
+/// Layout dispatch for the lowering step of the prepacked path.
+fn lower_into(input: &Tensor4, p: &ConvParams, mat: &mut [f32]) {
+    match input.layout() {
+        Layout::Nchw => lower_nchw(input, p, mat),
+        Layout::Nhwc => lower_nhwc(input, p, mat),
+        Layout::Chwn => lower_chwn(input, p, mat),
+        Layout::Chwn8 => lower_chwn8(input, p, mat),
+    }
+}
+
+/// Layout dispatch for the GEMM step of the prepacked path, including the
+/// CHWN8 batch-padding restore: a biased epilogue writes `epilogue(0)`
+/// into the padding lanes of the final block and the layout invariant is
+/// zeros there.
+fn gemm_into(mat: &[f32], fmat: &[f32], p: &ConvParams, out: &mut Tensor4, ep: Epilogue<'_>) {
+    match out.layout() {
+        Layout::Nchw => gemm_nchw(mat, fmat, p, out, ep),
+        Layout::Nhwc => gemm_nhwc(mat, fmat, p, out, ep),
+        Layout::Chwn => gemm_chwn(mat, fmat, p, out, ep),
+        Layout::Chwn8 => {
+            gemm_chwn8(mat, fmat, p, out, ep);
+            if ep.bias().is_some() {
+                zero_chwn8_batch_padding(out, p);
+            }
+        }
     }
 }
 
@@ -610,6 +729,60 @@ mod tests {
         let p = ConvParams::builder().batch(3).channels(2, 4).input(10, 9).filter(2, 3).stride(2).build().unwrap();
         for layout in Layout::ALL {
             check_layout(layout, &p, 31);
+        }
+    }
+
+    #[test]
+    fn reduced_precision_prepacked_matches_fake_rounded_reference() {
+        let p = ConvParams::builder().batch(2).channels(4, 5).input(8, 8).filter(3, 3).stride(1).build().unwrap();
+        let algo = Im2colConv::new();
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 41);
+            let filter = Tensor4::random(p.filter_dims(), layout, 42);
+            let mut ws = Workspace::new();
+            for prec in [Precision::F16AccF32, Precision::Bf16AccF32] {
+                let ri = precision::rounded_tensor(&input, prec);
+                let rf = precision::rounded_tensor(&filter, prec);
+                let expect = reference_conv(&ri, &rf, &p, layout);
+                let packed = algo.prepare_with_precision(&filter, &p, layout, prec).unwrap();
+                let mut out = Tensor4::zeros(p.output_dims(), layout);
+                algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::None)
+                    .unwrap();
+                assert!(
+                    expect.allclose(&out, 1e-3, 1e-3),
+                    "{layout} {prec}: max diff {}",
+                    expect.max_abs_diff(&out)
+                );
+            }
+            // int8 under a fused bias: dequant fires before the bias, and
+            // on CHWN8 the batch-padding restore must still kick in.
+            let s_a = precision::activation_scale(input.data());
+            let scales = precision::filter_scales(&filter, &p);
+            let mut qi = input.clone();
+            precision::quantize_slice(qi.data_mut(), s_a);
+            let qf = precision::quantized_filter(&filter, &p, &scales);
+            let mut expect = reference_conv(&qi, &qf, &p, layout);
+            let bias: Vec<f32> = (0..p.c_out).map(|c| c as f32 * 0.25 - 0.5).collect();
+            let d = expect.dims();
+            for n in 0..d.n {
+                for c in 0..d.c {
+                    for h in 0..d.h {
+                        for w in 0..d.w {
+                            let v = expect.get(n, c, h, w) * s_a * scales[c] + bias[c];
+                            expect.set(n, c, h, w, v);
+                        }
+                    }
+                }
+            }
+            let packed = algo.prepare_with_precision(&filter, &p, layout, Precision::Int8).unwrap();
+            let mut out = Tensor4::zeros(p.output_dims(), layout);
+            algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::Bias(&bias))
+                .unwrap();
+            assert!(
+                expect.allclose(&out, 1e-3, 1e-3),
+                "{layout} int8: max diff {}",
+                expect.max_abs_diff(&out)
+            );
         }
     }
 

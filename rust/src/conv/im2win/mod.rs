@@ -23,9 +23,13 @@ mod transform;
 
 pub use transform::{im2win_dims, im2win_transform, im2win_transform_into};
 
-use super::{check_geometry, check_io_geometry, ConvAlgorithm, ConvParams, Epilogue, PlanArtifact};
+use super::{
+    check_geometry, check_io_geometry, precision, ConvAlgorithm, ConvParams, Epilogue,
+    PlanArtifact, Precision,
+};
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
+use crate::simd;
 use crate::tensor::{AlignedBuf, Layout, Tensor4};
 
 /// Default `W_{o,b}` register-blocking factor for im2win kernels.
@@ -53,6 +57,26 @@ impl Im2winConv {
 impl Default for Im2winConv {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl Im2winConv {
+    /// Layout-specialized kernel dispatch shared by the f32 and
+    /// reduced-precision prepacked paths.
+    fn dispatch(
+        &self,
+        win: &Tensor4,
+        fpack: &AlignedBuf,
+        p: &ConvParams,
+        out: &mut Tensor4,
+        ep: Epilogue<'_>,
+    ) {
+        match win.layout() {
+            Layout::Nhwc => nhwc::run(win, fpack, p, out, self.w_block, ep),
+            Layout::Nchw => nchw::run(win, fpack, p, out, self.w_block, ep),
+            Layout::Chwn => chwn::run(win, fpack, p, out, self.w_block, ep),
+            Layout::Chwn8 => chwn8::run(win, fpack, p, out, self.w_block, ep),
+        }
     }
 }
 
@@ -146,6 +170,58 @@ impl ConvAlgorithm for Im2winConv {
         Ok(PlanArtifact::from_buf(self.name(), layout, p, buf))
     }
 
+    fn prepare_with_precision(
+        &self,
+        filter: &Tensor4,
+        p: &ConvParams,
+        layout: Layout,
+        prec: Precision,
+    ) -> Result<PlanArtifact> {
+        if prec == Precision::F32 {
+            return self.prepare(filter, p, layout);
+        }
+        if filter.dims() != p.filter_dims() {
+            return Err(Error::ShapeMismatch(format!(
+                "filter dims {} != expected {}",
+                filter.dims(),
+                p.filter_dims()
+            )));
+        }
+        if p.groups > 1 {
+            return Err(Error::UnsupportedPrecision(format!(
+                "im2win reduced-precision packs do not cover grouped convolutions (groups={})",
+                p.groups
+            )));
+        }
+        // Round/quantize the filter *logically* first, then reuse the f32
+        // pack routines: the packed values are already on the target grid,
+        // so the final narrowing is exact and no per-layout index
+        // bookkeeping is duplicated here.
+        let mut buf = AlignedBuf::zeroed(p.filter_dims().count());
+        if prec == Precision::Int8 {
+            let scales = precision::filter_scales(filter, p);
+            let qf = precision::quantized_filter(filter, p, &scales);
+            match layout {
+                Layout::Nhwc => pack_filter_window_major_into(&qf, p, &mut buf),
+                _ => pack_filter_channel_major_into(&qf, p, &mut buf),
+            }
+            let data: Vec<i8> = buf.iter().map(|&x| x as i8).collect();
+            Ok(PlanArtifact::from_quant(self.name(), layout, p, data, scales))
+        } else {
+            let rf = precision::rounded_tensor(filter, prec);
+            match layout {
+                Layout::Nhwc => pack_filter_window_major_into(&rf, p, &mut buf),
+                _ => pack_filter_channel_major_into(&rf, p, &mut buf),
+            }
+            let bits: Vec<u16> = if prec == Precision::F16AccF32 {
+                buf.iter().map(|&x| simd::f32_to_f16_bits(x)).collect()
+            } else {
+                buf.iter().map(|&x| simd::f32_to_bf16_bits(x)).collect()
+            };
+            Ok(PlanArtifact::from_half_bits(self.name(), layout, p, bits, prec))
+        }
+    }
+
     fn run_prepacked(
         &self,
         input: &Tensor4,
@@ -164,16 +240,47 @@ impl ConvAlgorithm for Im2winConv {
             })?;
             return super::grouped::run_grouped(self, input, filter, p, out, ws, ep);
         }
-        let fpack = packed
-            .buf()
-            .ok_or_else(|| Error::Config("im2win pack holds no coefficient buffer".into()))?;
         let mut win = ws.take_tensor("im2win.win", im2win_dims(p), input.layout());
         im2win_transform_into(input, p, &mut win);
-        match input.layout() {
-            Layout::Nhwc => nhwc::run(&win, fpack, p, out, self.w_block, ep),
-            Layout::Nchw => nchw::run(&win, fpack, p, out, self.w_block, ep),
-            Layout::Chwn => chwn::run(&win, fpack, p, out, self.w_block, ep),
-            Layout::Chwn8 => chwn8::run(&win, fpack, p, out, self.w_block, ep),
+        match packed.precision() {
+            Precision::F32 => {
+                let fpack = packed.buf().ok_or_else(|| {
+                    Error::Config("im2win pack holds no coefficient buffer".into())
+                })?;
+                self.dispatch(&win, fpack, p, out, ep);
+            }
+            prec @ (Precision::F16AccF32 | Precision::Bf16AccF32) => {
+                let bits = packed.half_bits().ok_or_else(|| {
+                    Error::Config("im2win half-precision pack holds no bit buffer".into())
+                })?;
+                let mut fpack = ws.take("im2win.fpack", bits.len());
+                if prec == Precision::F16AccF32 {
+                    simd::f16_bits_to_f32_slice(bits, &mut fpack);
+                } else {
+                    simd::bf16_bits_to_f32_slice(bits, &mut fpack);
+                }
+                // Activations ride the same grid as the pack; the kernel
+                // then accumulates the rounded products in f32.
+                precision::round_activations(win.data_mut(), prec);
+                self.dispatch(&win, &fpack, p, out, ep);
+                ws.put("im2win.fpack", fpack);
+            }
+            Precision::Int8 => {
+                let (qdata, wscales) = packed.quant().ok_or_else(|| {
+                    Error::Config("im2win int8 pack holds no quantized buffer".into())
+                })?;
+                let mut fpack = ws.take("im2win.fpack", qdata.len());
+                simd::i8_to_f32_slice(qdata, &mut fpack);
+                // Per-tensor activation scale comes from the *input*, not
+                // the window tensor — padding zeros quantize to zero either
+                // way and the input is the smaller scan.
+                let s_a = precision::activation_scale(input.data());
+                precision::quantize_slice(win.data_mut(), s_a);
+                let combined: Vec<f32> =
+                    wscales.iter().map(|&s_w| s_w * s_a).collect();
+                self.dispatch(&win, &fpack, p, out, ep.with_dequant(&combined));
+                ws.put("im2win.fpack", fpack);
+            }
         }
         ws.put_tensor("im2win.win", win);
         Ok(())
@@ -311,6 +418,65 @@ mod tests {
             assert!(
                 expect.allclose(&out, 1e-4, 1e-4),
                 "{layout}: max diff {}",
+                expect.max_abs_diff(&out)
+            );
+        }
+    }
+
+    #[test]
+    fn reduced_precision_packs_match_fake_quantized_reference() {
+        // Differential check mirroring tests/parity_fuzz.rs at unit scope:
+        // the f16/bf16 path must equal the conv of grid-rounded operands,
+        // the int8 path the dequantized conv of quantized operands.
+        let p = ConvParams::builder().batch(2).channels(4, 5).input(8, 8).filter(3, 3).stride(1).build().unwrap();
+        for layout in Layout::ALL {
+            let input = Tensor4::random(p.input_dims(), layout, 31);
+            let filter = Tensor4::random(p.filter_dims(), layout, 32);
+            let algo = Im2winConv::new();
+            let mut ws = crate::engine::Workspace::new();
+
+            for prec in [Precision::F16AccF32, Precision::Bf16AccF32] {
+                let ri = precision::rounded_tensor(&input, prec);
+                let rf = precision::rounded_tensor(&filter, prec);
+                let expect = reference_conv(&ri, &rf, &p, layout);
+                let packed = algo.prepare_with_precision(&filter, &p, layout, prec).unwrap();
+                assert_eq!(packed.precision(), prec);
+                let mut out = Tensor4::zeros(p.output_dims(), layout);
+                out.data_mut().fill(f32::NAN);
+                algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::None)
+                    .unwrap();
+                assert!(
+                    expect.allclose(&out, 1e-3, 1e-3),
+                    "{layout} {prec}: max diff {}",
+                    expect.max_abs_diff(&out)
+                );
+            }
+
+            let s_a = precision::activation_scale(input.data());
+            let scales = precision::filter_scales(&filter, &p);
+            let mut qi = input.clone();
+            precision::quantize_slice(qi.data_mut(), s_a);
+            let qf = precision::quantized_filter(&filter, &p, &scales);
+            let mut expect = reference_conv(&qi, &qf, &p, layout);
+            let d = expect.dims();
+            for n in 0..d.n {
+                for c in 0..d.c {
+                    for h in 0..d.h {
+                        for w in 0..d.w {
+                            let v = expect.get(n, c, h, w) * s_a * scales[c];
+                            expect.set(n, c, h, w, v);
+                        }
+                    }
+                }
+            }
+            let packed = algo.prepare_with_precision(&filter, &p, layout, Precision::Int8).unwrap();
+            assert_eq!(packed.precision(), Precision::Int8);
+            let mut out = Tensor4::zeros(p.output_dims(), layout);
+            out.data_mut().fill(f32::NAN);
+            algo.run_prepacked(&input, &packed, &p, &mut out, &mut ws, Epilogue::None).unwrap();
+            assert!(
+                expect.allclose(&out, 1e-3, 1e-3),
+                "{layout} int8: max diff {}",
                 expect.max_abs_diff(&out)
             );
         }

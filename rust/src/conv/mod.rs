@@ -40,11 +40,13 @@ pub mod indirect;
 pub mod mec;
 mod naive;
 mod params;
+pub mod precision;
 pub mod winograd;
 
 pub use epilogue::Epilogue;
 pub use naive::reference_conv;
 pub use params::{ConvParams, ConvParamsBuilder};
+pub use precision::Precision;
 
 use crate::engine::Workspace;
 use crate::error::{Error, Result};
@@ -151,6 +153,34 @@ pub trait ConvAlgorithm: Send + Sync {
         Ok(PlanArtifact::from_tensor(self.name(), filter.to_layout(layout)))
     }
 
+    /// Like [`ConvAlgorithm::prepare`] but emitting a reduced-precision
+    /// pack: the filter is rounded through the f16/bf16 grid (stored as
+    /// half-width bits) or symmetrically quantized to int8 with
+    /// per-output-channel scales — **once, at plan time**. Activations
+    /// convert in the algorithm's existing lowering/transform step and the
+    /// inner loops accumulate in f32, so the artifact is the only place
+    /// filter precision lives.
+    ///
+    /// The default delegates to [`ConvAlgorithm::prepare`] for
+    /// [`Precision::F32`] and rejects every reduced tier with
+    /// [`Error::UnsupportedPrecision`]; only the planner-gated hot-path
+    /// algorithms (im2win, im2col) override it.
+    fn prepare_with_precision(
+        &self,
+        filter: &Tensor4,
+        p: &ConvParams,
+        layout: Layout,
+        prec: Precision,
+    ) -> Result<PlanArtifact> {
+        match prec {
+            Precision::F32 => self.prepare(filter, p, layout),
+            _ => Err(Error::UnsupportedPrecision(format!(
+                "{} has no {prec} kernels (planner offers reduced precision only on im2win/im2col)",
+                self.name()
+            ))),
+        }
+    }
+
     /// Run the convolution with a plan artifact built by
     /// [`ConvAlgorithm::prepare`], applying `ep` at the point each output
     /// element is stored. No per-call filter packing happens here.
@@ -200,6 +230,8 @@ pub struct PlanArtifact {
     /// Geometry-keyed element-offset indirection buffer (indirect
     /// convolution); `-1` marks a zero (padding) tap.
     offsets: Option<Box<[i64]>>,
+    /// Numeric tier the pack was built for; runs must match it.
+    precision: Precision,
 }
 
 /// Former name of [`PlanArtifact`], kept as a shim for one release.
@@ -212,6 +244,17 @@ enum ArtifactData {
     Buf(AlignedBuf),
     /// The filter tensor itself, in the execution layout (direct, naive).
     Tensor(Tensor4),
+    /// Kernel-order coefficients stored as IEEE f16 or bf16 bit patterns
+    /// (which one is recorded by [`PlanArtifact::precision`]); expanded to
+    /// an f32 workspace buffer at run time, halving resident filter bytes.
+    Half(Vec<u16>),
+    /// Kernel-order coefficients symmetrically quantized to int8 with
+    /// per-output-channel scales (`scales.len() == C_o`); the matching
+    /// dequant fires in the store epilogue.
+    Quant {
+        data: Vec<i8>,
+        scales: Vec<f32>,
+    },
 }
 
 impl PlanArtifact {
@@ -229,6 +272,7 @@ impl PlanArtifact {
             geometry: None,
             data: ArtifactData::Buf(buf),
             offsets: None,
+            precision: Precision::F32,
         }
     }
 
@@ -241,6 +285,50 @@ impl PlanArtifact {
             geometry: None,
             data: ArtifactData::Tensor(filter),
             offsets: None,
+            precision: Precision::F32,
+        }
+    }
+
+    /// Wrap a kernel-order pack stored as f16/bf16 bit patterns. `prec`
+    /// must be one of the half tiers — it records which grid the bits are
+    /// on so the run-time expansion picks the right widening.
+    pub(crate) fn from_half_bits(
+        algo: &'static str,
+        layout: Layout,
+        p: &ConvParams,
+        bits: Vec<u16>,
+        prec: Precision,
+    ) -> Self {
+        debug_assert!(matches!(prec, Precision::F16AccF32 | Precision::Bf16AccF32));
+        PlanArtifact {
+            algo,
+            layout,
+            filter_dims: p.filter_dims(),
+            geometry: None,
+            data: ArtifactData::Half(bits),
+            offsets: None,
+            precision: prec,
+        }
+    }
+
+    /// Wrap a kernel-order int8 pack with per-output-channel dequant
+    /// scales (`scales.len() == C_o`).
+    pub(crate) fn from_quant(
+        algo: &'static str,
+        layout: Layout,
+        p: &ConvParams,
+        data: Vec<i8>,
+        scales: Vec<f32>,
+    ) -> Self {
+        debug_assert_eq!(scales.len(), p.c_out);
+        PlanArtifact {
+            algo,
+            layout,
+            filter_dims: p.filter_dims(),
+            geometry: None,
+            data: ArtifactData::Quant { data, scales },
+            offsets: None,
+            precision: Precision::Int8,
         }
     }
 
@@ -281,19 +369,44 @@ impl PlanArtifact {
     /// Bytes held by the artifact (the per-layer cost of
     /// weights-stationary serving), side artifacts included.
     pub fn storage_bytes(&self) -> usize {
-        let elems = match &self.data {
-            ArtifactData::Buf(b) => b.len(),
-            ArtifactData::Tensor(t) => t.data().len(),
+        let pack_bytes = match &self.data {
+            ArtifactData::Buf(b) => b.len() * std::mem::size_of::<f32>(),
+            ArtifactData::Tensor(t) => t.data().len() * std::mem::size_of::<f32>(),
+            ArtifactData::Half(bits) => bits.len() * std::mem::size_of::<u16>(),
+            ArtifactData::Quant { data, scales } => {
+                data.len() + scales.len() * std::mem::size_of::<f32>()
+            }
         };
-        elems * std::mem::size_of::<f32>()
-            + self.offsets.as_ref().map_or(0, |o| std::mem::size_of_val(&o[..]))
+        pack_bytes + self.offsets.as_ref().map_or(0, |o| std::mem::size_of_val(&o[..]))
+    }
+
+    /// The numeric tier this artifact was prepared at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// The packed coefficient buffer, when this artifact holds one.
     pub(crate) fn buf(&self) -> Option<&AlignedBuf> {
         match &self.data {
             ArtifactData::Buf(b) => Some(b),
-            ArtifactData::Tensor(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The half-width (f16/bf16) bit pack, when this artifact holds one.
+    pub(crate) fn half_bits(&self) -> Option<&[u16]> {
+        match &self.data {
+            ArtifactData::Half(bits) => Some(bits),
+            _ => None,
+        }
+    }
+
+    /// The int8 pack and its per-output-channel dequant scales, when this
+    /// artifact holds them.
+    pub(crate) fn quant(&self) -> Option<(&[i8], &[f32])> {
+        match &self.data {
+            ArtifactData::Quant { data, scales } => Some((data, scales)),
+            _ => None,
         }
     }
 
@@ -311,7 +424,7 @@ impl PlanArtifact {
     pub(crate) fn raw_filter(&self) -> Option<&Tensor4> {
         match &self.data {
             ArtifactData::Tensor(t) => Some(t),
-            ArtifactData::Buf(_) => None,
+            _ => None,
         }
     }
 
@@ -704,6 +817,25 @@ mod tests {
         assert!(layer.reconfigure(AlgoKind::Mec, Layout::Chwn, 0).is_err());
         assert_eq!(layer.kind(), AlgoKind::Mec);
         assert_eq!(layer.layout(), Layout::Nhwc);
+    }
+
+    #[test]
+    fn prepare_with_precision_default_gates_reduced_tiers() {
+        let p = ConvParams::builder().batch(1).channels(2, 3).input(4, 4).filter(3, 3).stride(1).build().unwrap();
+        let filter = Tensor4::random(p.filter_dims(), Layout::Nchw, 7);
+        let algo = AlgoKind::Direct.build();
+        let a = algo
+            .prepare_with_precision(&filter, &p, Layout::Nchw, Precision::F32)
+            .unwrap();
+        assert_eq!(a.precision(), Precision::F32);
+        // Algorithms without reduced-precision kernels refuse every
+        // sub-f32 tier instead of silently running f32.
+        for prec in [Precision::F16AccF32, Precision::Bf16AccF32, Precision::Int8] {
+            assert!(matches!(
+                algo.prepare_with_precision(&filter, &p, Layout::Nchw, prec),
+                Err(Error::UnsupportedPrecision(_))
+            ));
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Reduced-precision execution tiers for the serving hot path.
+//!
+//! The paper's numbers are all f32, but SIMD width doubles the moment the
+//! element shrinks. This module defines the [`Precision`] axis the planner
+//! selects over and the numeric helpers the kernels use to honor it:
+//!
+//! * **`F16AccF32` / `Bf16AccF32`** — filters are rounded to the half-width
+//!   grid once at plan time and stored as 16-bit patterns in the
+//!   [`super::PlanArtifact`]; activations are rounded in the existing
+//!   lowering/transform step. The inner loops then run unchanged,
+//!   accumulating in f32 — exactly the accumulate-wide policy of mixed
+//!   precision hardware, emulated bit-faithfully on the storage grid.
+//! * **`Int8`** — filters are quantized symmetrically per output channel
+//!   (`s_w[co] = maxabs(W[co,·]) / 127`) at plan time; activations pick a
+//!   per-tensor scale per call. Products accumulate as exact integers in
+//!   f32 (exact while `K·127² < 2²⁴`, far above every geometry here), and
+//!   the dequant multiply `s_a·s_w[co]` folds into the
+//!   [`super::Epilogue`]'s `Dequant*` arms at the accumulator store.
+//!
+//! Lossy tiers are gated by the planner's tolerance budget: `F16AccF32` /
+//! `Bf16AccF32` enter the candidate set at [`F16_TOLERANCE`], `Int8` only
+//! at the explicit opt-in budget [`INT8_TOLERANCE`] (or a forced
+//! `--precision int8`). The default `1e-4` budget can never select a
+//! sub-f32 tier.
+
+use crate::conv::ConvParams;
+use crate::simd;
+use crate::tensor::Tensor4;
+
+/// Tolerance budget at which the planner admits the half-width tiers
+/// (`F16AccF32`, `Bf16AccF32`) as candidates. f16 has ~3 decimal digits;
+/// a `1e-2` relative budget is the tightest bound the tier can honor on
+/// deep reductions.
+pub const F16_TOLERANCE: f32 = 1e-2;
+
+/// Tolerance budget at which the planner admits `Int8` as a candidate —
+/// deliberately loose so int8 is an *explicit opt-in* (`--tolerance 0.1`
+/// or `--precision int8`), never an accidental consequence of a merely
+/// relaxed budget.
+pub const INT8_TOLERANCE: f32 = 1e-1;
+
+/// Numeric tier a layer plan executes under.
+///
+/// Storage precision of the filter pack and the transformed activations;
+/// every tier accumulates in f32 (the `AccF32` suffix is policy, not an
+/// option). `F32` is the default and the only tier with zero rounding
+/// error; the others trade accuracy, under the planner's tolerance
+/// budget, for halved or quartered element bytes in every bandwidth term.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full single precision — the paper's tier, bit-identical to the
+    /// pre-precision code path.
+    #[default]
+    F32,
+    /// IEEE binary16 storage, f32 accumulation.
+    F16AccF32,
+    /// bfloat16 storage (f32's exponent range, 8-bit mantissa), f32
+    /// accumulation.
+    Bf16AccF32,
+    /// Symmetric per-output-channel int8 filters and per-tensor int8
+    /// activations; exact integer accumulation in f32 with the dequant
+    /// scale folded into the epilogue.
+    Int8,
+}
+
+impl Precision {
+    /// Every tier, f32 first.
+    pub const ALL: [Precision; 4] =
+        [Precision::F32, Precision::F16AccF32, Precision::Bf16AccF32, Precision::Int8];
+
+    /// Canonical short name (CLI value, cache-key suffix, bench row).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16AccF32 => "f16",
+            Precision::Bf16AccF32 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI/cache name (accepts the accumulate-suffixed spellings
+    /// too).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "fp32" => Some(Precision::F32),
+            "f16" | "fp16" | "f16accf32" => Some(Precision::F16AccF32),
+            "bf16" | "bf16accf32" => Some(Precision::Bf16AccF32),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Bytes per transformed-activation element — the factor the planner's
+    /// transform-bandwidth term scales by.
+    pub fn act_bytes(&self) -> f64 {
+        match self {
+            Precision::F32 => 4.0,
+            Precision::F16AccF32 | Precision::Bf16AccF32 => 2.0,
+            Precision::Int8 => 1.0,
+        }
+    }
+
+    /// Bytes per packed-filter element (the plan-time pack the artifact
+    /// stores).
+    pub fn filter_bytes(&self) -> f64 {
+        self.act_bytes()
+    }
+
+    /// True for every tier below f32.
+    pub fn is_reduced(&self) -> bool {
+        !matches!(self, Precision::F32)
+    }
+
+    /// The tolerance budget a planner must hold for this tier to enter
+    /// its candidate set (`0.0` for f32: always admissible).
+    pub fn min_tolerance(&self) -> f32 {
+        match self {
+            Precision::F32 => 0.0,
+            Precision::F16AccF32 | Precision::Bf16AccF32 => F16_TOLERANCE,
+            Precision::Int8 => INT8_TOLERANCE,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Round every element of `data` onto the storage grid of `prec`
+/// (`F32` is the identity). `Int8` is *not* a grid — it needs a scale —
+/// and must go through [`activation_scale`] + [`quantize_slice`] instead.
+pub fn round_activations(data: &mut [f32], prec: Precision) {
+    match prec {
+        Precision::F32 => {}
+        Precision::F16AccF32 => simd::round_f16_slice(data),
+        Precision::Bf16AccF32 => simd::round_bf16_slice(data),
+        Precision::Int8 => unreachable!("int8 activations quantize with a scale"),
+    }
+}
+
+/// Copy of `t` with every storage element rounded onto `prec`'s grid —
+/// the "fake-quantized operand" the differential fuzz harness feeds
+/// `reference_conv` so kernel and reference see identical inputs.
+pub fn rounded_tensor(t: &Tensor4, prec: Precision) -> Tensor4 {
+    let mut out = t.clone();
+    round_activations(out.data_mut(), prec);
+    out
+}
+
+/// Symmetric per-tensor activation scale: `maxabs / 127`, guarded to
+/// `1.0` for an all-zero tensor so the quantize divide stays finite.
+pub fn activation_scale(data: &[f32]) -> f32 {
+    let maxabs = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if maxabs == 0.0 {
+        1.0
+    } else {
+        maxabs / 127.0
+    }
+}
+
+/// Symmetric per-output-channel filter scales `s_w[co] =
+/// maxabs(W[co,·,·,·]) / 127`, computed over the *logical* filter values
+/// (layout-independent), each zero-guarded to `1.0`.
+pub fn filter_scales(filter: &Tensor4, p: &ConvParams) -> Vec<f32> {
+    let depth = p.group_c_in();
+    (0..p.c_out)
+        .map(|co| {
+            let mut maxabs = 0.0f32;
+            for c in 0..depth {
+                for u in 0..p.h_f {
+                    for v in 0..p.w_f {
+                        maxabs = maxabs.max(filter.get(co, c, u, v).abs());
+                    }
+                }
+            }
+            if maxabs == 0.0 {
+                1.0
+            } else {
+                maxabs / 127.0
+            }
+        })
+        .collect()
+}
+
+/// Quantize one value onto the signed-int8 lattice at `scale`:
+/// `clamp(round(x/scale), -127, 127)`, returned as the integer-valued
+/// f32 the kernels consume.
+#[inline]
+pub fn quantize(x: f32, scale: f32) -> f32 {
+    (x / scale).round().clamp(-127.0, 127.0)
+}
+
+/// Quantize a slice in place (see [`quantize`]).
+pub fn quantize_slice(data: &mut [f32], scale: f32) {
+    simd::quantize_i8_slice(data, scale);
+}
+
+/// Copy of `filter` with every logical value quantized per output
+/// channel by `scales` (from [`filter_scales`]) — integer-valued f32,
+/// ready for the existing pack routines, after which the pack converts
+/// to `i8` exactly.
+pub fn quantized_filter(filter: &Tensor4, p: &ConvParams, scales: &[f32]) -> Tensor4 {
+    let mut q = filter.clone();
+    let depth = p.group_c_in();
+    for co in 0..p.c_out {
+        for c in 0..depth {
+            for u in 0..p.h_f {
+                for v in 0..p.w_f {
+                    q.set(co, c, u, v, quantize(filter.get(co, c, u, v), scales[co]));
+                }
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Dims, Layout};
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for prec in Precision::ALL {
+            assert_eq!(Precision::parse(prec.name()), Some(prec));
+        }
+        assert_eq!(Precision::parse("fp16"), Some(Precision::F16AccF32));
+        assert!(Precision::parse("f8").is_none());
+    }
+
+    #[test]
+    fn element_bytes_shrink_with_the_tier() {
+        assert_eq!(Precision::F32.act_bytes(), 4.0);
+        assert_eq!(Precision::F16AccF32.act_bytes(), 2.0);
+        assert_eq!(Precision::Bf16AccF32.filter_bytes(), 2.0);
+        assert_eq!(Precision::Int8.act_bytes(), 1.0);
+        assert!(!Precision::F32.is_reduced());
+        assert!(Precision::Int8.is_reduced());
+    }
+
+    #[test]
+    fn tolerance_gates_are_ordered() {
+        // f32 always admissible; int8 strictly behind the f16 budget.
+        assert_eq!(Precision::F32.min_tolerance(), 0.0);
+        assert!(Precision::F16AccF32.min_tolerance() > 1e-4);
+        assert!(Precision::Int8.min_tolerance() > Precision::F16AccF32.min_tolerance());
+    }
+
+    #[test]
+    fn activation_scale_guards_zero_and_tracks_maxabs() {
+        assert_eq!(activation_scale(&[0.0, 0.0]), 1.0);
+        let s = activation_scale(&[0.5, -2.54, 1.0]);
+        assert!((s - 2.54 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantize_rounds_and_clamps() {
+        assert_eq!(quantize(0.0, 0.5), 0.0);
+        assert_eq!(quantize(1.26, 0.5), 3.0); // 2.52 rounds to 3
+        assert_eq!(quantize(1e6, 0.5), 127.0);
+        assert_eq!(quantize(-1e6, 0.5), -127.0);
+    }
+
+    #[test]
+    fn filter_scales_are_per_output_channel() {
+        let p = ConvParams::builder().channels(2, 3).input(4, 4).filter(2, 2).build().unwrap();
+        let mut f = Tensor4::zeros(p.filter_dims(), Layout::Nchw);
+        f.set(0, 1, 0, 1, -5.08);
+        f.set(2, 0, 1, 1, 2.54);
+        let s = filter_scales(&f, &p);
+        assert_eq!(s.len(), 3);
+        assert!((s[0] - 5.08 / 127.0).abs() < 1e-7);
+        assert_eq!(s[1], 1.0, "all-zero channel is guarded");
+        assert!((s[2] - 2.54 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantized_filter_is_integer_valued_and_maxes_at_127() {
+        let p = ConvParams::builder().channels(3, 4).input(5, 5).filter(3, 3).build().unwrap();
+        let f = Tensor4::random(p.filter_dims(), Layout::Nhwc, 7);
+        let scales = filter_scales(&f, &p);
+        let q = quantized_filter(&f, &p, &scales);
+        let mut saw_127 = false;
+        for co in 0..p.c_out {
+            for c in 0..p.c_in {
+                for u in 0..p.h_f {
+                    for v in 0..p.w_f {
+                        let x = q.get(co, c, u, v);
+                        assert_eq!(x, x.round(), "quantized values sit on the int lattice");
+                        assert!(x.abs() <= 127.0);
+                        saw_127 |= x.abs() == 127.0;
+                    }
+                }
+            }
+        }
+        assert!(saw_127, "each channel's maxabs maps to ±127");
+    }
+
+    #[test]
+    fn rounded_tensor_is_idempotent() {
+        let dims = Dims::new(2, 3, 4, 5);
+        let t = Tensor4::random(dims, Layout::Nchw, 3);
+        for prec in [Precision::F16AccF32, Precision::Bf16AccF32] {
+            let once = rounded_tensor(&t, prec);
+            let twice = rounded_tensor(&once, prec);
+            assert_eq!(once.data(), twice.data(), "{prec}: grid rounding must be idempotent");
+            assert_ne!(once.data(), t.data(), "{prec}: rounding must actually change values");
+        }
+        let same = rounded_tensor(&t, Precision::F32);
+        assert_eq!(same.data(), t.data());
+    }
+}

@@ -34,7 +34,7 @@
 use super::graph::{ConversionPoint, GraphPlan};
 use super::planner::LayerPlan;
 use crate::config::json::{self, Json};
-use crate::conv::{AlgoKind, ConvParams};
+use crate::conv::{AlgoKind, ConvParams, Precision};
 use crate::error::{Error, Result};
 use crate::tensor::Layout;
 use std::collections::BTreeMap;
@@ -292,25 +292,40 @@ impl PlanCache {
 }
 
 fn plan_json(p: &LayerPlan) -> Json {
-    Json::object(vec![
+    let mut fields = vec![
         ("algo", Json::from(p.algo.name())),
         ("layout", Json::from(p.layout.name())),
         ("w_block", Json::Number(p.w_block as f64)),
         ("est_s", Json::Number(p.est_s)),
         ("tuned", Json::Bool(p.tuned)),
-    ])
+    ];
+    // Written only for reduced tiers: f32 entries stay byte-identical to
+    // pre-precision cache files (pinned by a test), and old files load
+    // as the f32 they were decided at.
+    if p.precision.is_reduced() {
+        fields.push(("precision", Json::from(p.precision.name())));
+    }
+    Json::object(fields)
 }
 
 fn parse_plan(v: &Json) -> Result<LayerPlan> {
     let bad = |what: &str| Error::Config(format!("plan cache entry: bad or missing '{what}'"));
     let algo_name = v.get("algo").and_then(Json::as_str).ok_or_else(|| bad("algo"))?;
     let layout_name = v.get("layout").and_then(Json::as_str).ok_or_else(|| bad("layout"))?;
+    let precision = match v.get("precision") {
+        None => Precision::F32,
+        Some(j) => {
+            let name = j.as_str().ok_or_else(|| bad("precision"))?;
+            Precision::parse(name).ok_or_else(|| bad("precision"))?
+        }
+    };
     Ok(LayerPlan {
         algo: AlgoKind::parse(algo_name).ok_or_else(|| bad("algo"))?,
         layout: Layout::parse(layout_name).ok_or_else(|| bad("layout"))?,
         w_block: v.get("w_block").and_then(Json::as_f64).ok_or_else(|| bad("w_block"))? as usize,
         est_s: v.get("est_s").and_then(Json::as_f64).ok_or_else(|| bad("est_s"))?,
         tuned: v.get("tuned").and_then(Json::as_bool).ok_or_else(|| bad("tuned"))?,
+        precision,
     })
 }
 
@@ -408,6 +423,7 @@ mod tests {
             w_block: [4, 6, 0][i % 3],
             est_s: 1.5e-3 * (i + 1) as f64,
             tuned: i % 2 == 0,
+            precision: Precision::ALL[i % 4],
         }
     }
 
@@ -585,6 +601,57 @@ mod tests {
         let (_, q) = PlanCache::load_or_recover(&path);
         assert!(q.unwrap().to_string_lossy().ends_with("plans.json.corrupt-2"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f32_entry_bytes_are_pinned_to_the_pre_precision_format() {
+        // An f32 plan serializes with no 'precision' field at all — the
+        // exact bytes the format wrote before the precision axis existed,
+        // so old cache files and new f32 caches are interchangeable.
+        let plan = LayerPlan {
+            algo: AlgoKind::Im2win,
+            layout: Layout::Nhwc,
+            w_block: 4,
+            est_s: 1.5e-3,
+            tuned: true,
+            precision: Precision::F32,
+        };
+        let mut c = PlanCache::in_memory();
+        c.insert("k".into(), plan);
+        let text = c.to_json_text();
+        assert!(!text.contains("precision"), "f32 entry leaked a precision field: {text}");
+        // A reduced-tier entry carries the field and round-trips it.
+        let f16 = LayerPlan { precision: Precision::F16AccF32, ..plan };
+        c.insert("k".into(), f16);
+        let text = c.to_json_text();
+        assert!(text.contains(r#""precision""#) && text.contains(r#""f16""#), "{text}");
+        let (_, entries, _) = parse_document(&text).unwrap();
+        assert_eq!(entries["k"], f16);
+        // Files that predate the field load as the f32 they were.
+        let old = r#"{"version": 1, "entries": {"k": {"algo": "im2win", "est_s": 0.0015, "layout": "nhwc", "tuned": true, "w_block": 4}}}"#;
+        let (_, entries, _) = parse_document(old).unwrap();
+        assert_eq!(entries["k"], plan);
+        // An unknown tier name is corruption, not a silent f32.
+        let bad = r#"{"version": 1, "entries": {"k": {"algo": "im2win", "est_s": 0.0015, "layout": "nhwc", "precision": "f8", "tuned": true, "w_block": 4}}}"#;
+        assert!(parse_document(bad).is_err());
+    }
+
+    #[test]
+    fn forced_f16_plans_never_serve_f32_requests() {
+        use super::super::planner::Planner;
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
+        let auto = Planner::new();
+        let forced = Planner { precision: Some(Precision::F16AccF32), ..Planner::new() };
+        let mut c = PlanCache::in_memory();
+        let f16_plan = forced.plan_conv(&p, Layout::Nhwc);
+        assert_eq!(f16_plan.precision, Precision::F16AccF32);
+        c.insert(forced.cache_key(&p, Layout::Nhwc), f16_plan);
+        // The default planner's lookup must miss — a halved-precision
+        // decision can never be handed to a caller at the 1e-4 bar.
+        assert_eq!(c.get(&auto.cache_key(&p, Layout::Nhwc)), None);
+        assert_eq!((c.hits(), c.misses()), (0, 1));
+        // The forced planner round-trips its own entry.
+        assert_eq!(c.get(&forced.cache_key(&p, Layout::Nhwc)), Some(f16_plan));
     }
 
     #[test]

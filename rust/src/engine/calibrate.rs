@@ -63,7 +63,7 @@ use super::cache::{layer_key, PlanCache};
 use super::planner::Planner;
 use crate::bench_harness::measure;
 use crate::config::json::{self, Json};
-use crate::conv::{AlgoKind, ConvParams};
+use crate::conv::{AlgoKind, ConvParams, Precision};
 use crate::coordinator::layers::{self, BenchLayer};
 use crate::coordinator::report::Record;
 use crate::error::{Error, Result};
@@ -174,6 +174,12 @@ pub struct CalibrationProfile {
     convert: BTreeMap<String, ConvertStat>,
     /// Series key (`algo_LAYOUT`, e.g. `im2win_NHWC`) → fitted stats.
     table: BTreeMap<String, SeriesFit>,
+    /// Numeric-tier name ([`Precision::name`], reduced tiers only) →
+    /// measured compute-speedup multiplier over the f32 series (`eff`
+    /// holds the multiplier, ≥ 1 on healthy hardware). Consulted by the
+    /// planner's [`super::Planner::estimate_with_precision`] in place of
+    /// its analytic per-tier constants.
+    precision: BTreeMap<String, EffStat>,
 }
 
 /// The profile key for an ordered layout-conversion pair: `FROM->TO`
@@ -226,6 +232,7 @@ impl CalibrationProfile {
             threads: threads.max(1),
             convert: BTreeMap::new(),
             table: BTreeMap::new(),
+            precision: BTreeMap::new(),
         }
     }
 
@@ -326,6 +333,25 @@ impl CalibrationProfile {
         self.convert.insert(convert_key(from, to), ConvertStat { gbps, samples });
     }
 
+    /// Insert (or replace) a reduced tier's measured compute-speedup
+    /// multiplier over f32 (tooling hook; f32's multiplier is identically
+    /// 1 and is never stored).
+    pub fn set_precision_eff(&mut self, prec: Precision, multiplier: f64, samples: usize) {
+        if !prec.is_reduced() {
+            return;
+        }
+        self.precision
+            .insert(prec.name().to_string(), EffStat { eff: multiplier, samples });
+    }
+
+    /// Measured compute-speedup multiplier for a reduced tier, or `None`
+    /// when the tier was never measured — the planner then falls back to
+    /// its analytic per-tier constants.
+    pub fn precision_eff(&self, prec: Precision) -> Option<f64> {
+        let stat = self.precision.get(prec.name())?;
+        (stat.samples > 0 && stat.eff > 0.0).then_some(stat.eff)
+    }
+
     /// Measured conversion bandwidth for an ordered layout pair, in
     /// **bytes/s** (ready for the planner's byte-counting cost terms), or
     /// `None` when the pair was never sampled — the planner then falls
@@ -406,14 +432,24 @@ impl CalibrationProfile {
                 )
             })
             .collect();
-        Json::Object(vec![
+        let mut fields = vec![
             ("version".into(), Json::Number(VERSION)),
             ("peak_gflops".into(), Json::Number(self.peak_gflops)),
             ("threads".into(), Json::Number(self.threads as f64)),
             ("convert".into(), Json::Object(convert)),
-            ("series".into(), Json::Object(series)),
-        ])
-        .to_string()
+        ];
+        // Written only when measured: profiles without a precision axis
+        // keep their pre-precision canonical bytes (and fingerprints).
+        if !self.precision.is_empty() {
+            let precision: Vec<(String, Json)> = self
+                .precision
+                .iter()
+                .map(|(k, stat)| (k.clone(), stat_json(stat)))
+                .collect();
+            fields.push(("precision".into(), Json::Object(precision)));
+        }
+        fields.push(("series".into(), Json::Object(series)));
+        Json::Object(fields).to_string()
     }
 
     /// Parse a profile from [`CalibrationProfile::to_json_text`] output.
@@ -460,7 +496,15 @@ impl CalibrationProfile {
                 );
             }
         }
-        Ok(CalibrationProfile { peak_gflops, threads: threads.max(1), convert, table })
+        // Optional on read, like `convert`: pre-precision profiles load
+        // with every tier unmeasured.
+        let mut precision = BTreeMap::new();
+        if let Some(pobj) = doc.get("precision").and_then(Json::as_object) {
+            for (k, v) in pobj {
+                precision.insert(k.clone(), parse_stat(v)?);
+            }
+        }
+        Ok(CalibrationProfile { peak_gflops, threads: threads.max(1), convert, table, precision })
     }
 
     /// Load a profile from a file.
@@ -833,6 +877,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn precision_axis_is_optional_and_fingerprint_preserving() {
+        let mut p = CalibrationProfile::new(40.0, 2);
+        p.set_series(AlgoKind::Im2win, Layout::Nhwc, 0.5, 3);
+        let before = p.fingerprint();
+        // An unmeasured axis adds nothing to the canonical text: old
+        // profiles and new no-precision profiles fingerprint identically.
+        assert!(!p.to_json_text().contains("precision"));
+        assert!(p.precision_eff(Precision::F16AccF32).is_none());
+        // f32 is never stored (its multiplier is identically 1).
+        p.set_precision_eff(Precision::F32, 1.0, 5);
+        assert_eq!(p.fingerprint(), before);
+        // A measured tier round-trips and changes the fingerprint.
+        p.set_precision_eff(Precision::F16AccF32, 1.7, 5);
+        p.set_precision_eff(Precision::Int8, 2.9, 5);
+        assert_ne!(p.fingerprint(), before);
+        assert_eq!(p.precision_eff(Precision::F16AccF32), Some(1.7));
+        assert_eq!(p.precision_eff(Precision::Int8), Some(2.9));
+        assert!(p.precision_eff(Precision::Bf16AccF32).is_none());
+        let back = CalibrationProfile::parse(&p.to_json_text()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json_text(), p.to_json_text());
+        // Zero-sample cells never feed the planner.
+        p.set_precision_eff(Precision::Bf16AccF32, 1.5, 0);
+        assert!(p.precision_eff(Precision::Bf16AccF32).is_none());
     }
 
     #[test]

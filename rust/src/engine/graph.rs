@@ -58,7 +58,7 @@
 
 use super::cache::PlanCache;
 use super::planner::{LayerPlan, Planner};
-use crate::conv::{AlgoKind, ConvParams};
+use crate::conv::{AlgoKind, ConvParams, Precision};
 use crate::conv::im2win::DEFAULT_W_BLOCK;
 use crate::error::Result;
 use crate::model::{Model, Op};
@@ -122,13 +122,17 @@ impl GraphPlan {
 /// [`Planner::cache_key`], and so do planners with a non-default
 /// numerical-tolerance budget (`tolerance`, see [`Planner::tolerance`]):
 /// the budget changes the candidate set, so its decisions must not trade
-/// entries with the default budget's.
+/// entries with the default budget's. A forced reduced numeric tier
+/// (`precision`, see [`Planner::precision`]) appends a `-prec…` suffix
+/// under the same rule as [`Planner::cache_key`]; auto mode and forced
+/// f32 leave the key unchanged.
 pub fn graph_key(
     model: &Model,
     batch: usize,
     threads: usize,
     prepacked: bool,
     tolerance: f32,
+    precision: Option<Precision>,
 ) -> String {
     let mut key = format!(
         "g{}-from_{}-b{}-t{}",
@@ -142,6 +146,11 @@ pub fn graph_key(
     }
     if tolerance != super::planner::DEFAULT_TOLERANCE {
         key.push_str(&format!("-tol{tolerance:e}"));
+    }
+    if let Some(prec) = precision {
+        if prec.is_reduced() {
+            key.push_str(&format!("-prec{}", prec.name()));
+        }
     }
     key
 }
@@ -177,22 +186,35 @@ impl Planner {
     /// DP sees the same specialists — depthwise, tolerance-gated Winograd
     /// — the greedy planner does.
     fn node_plan(&self, p: &ConvParams, layout: Layout) -> LayerPlan {
+        let precisions = self.allowed_precisions();
         let mut best: Option<LayerPlan> = None;
         for (algo, l) in self.candidates_for(p) {
             if l != layout {
                 continue;
             }
-            let est_s = self.estimate(algo, layout, p, layout);
-            let w_block = match algo {
-                AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
-                _ => 0,
-            };
-            let plan = LayerPlan { algo, layout, w_block, est_s, tuned: false };
-            if best.map_or(true, |b| est_s < b.est_s) {
-                best = Some(plan);
+            for &prec in &precisions {
+                if !self.precision_candidate_ok(algo, p, prec) {
+                    continue;
+                }
+                let est_s = self.estimate_with_precision(algo, layout, p, layout, prec);
+                let w_block = match algo {
+                    AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
+                    _ => 0,
+                };
+                let plan =
+                    LayerPlan { algo, layout, w_block, est_s, tuned: false, precision: prec };
+                if best.map_or(true, |b| est_s < b.est_s) {
+                    best = Some(plan);
+                }
             }
         }
-        best.expect("every layout has at least one supporting algorithm")
+        best.unwrap_or_else(|| {
+            // A forced reduced tier the geometry cannot run on any
+            // algorithm of this layout: fall back to f32, mirroring
+            // Planner::plan_conv.
+            let f32_only = Planner { precision: Some(Precision::F32), ..self.clone() };
+            f32_only.node_plan(p, layout)
+        })
     }
 
     /// Solve global layout assignment for `model` exactly, consulting
@@ -209,7 +231,14 @@ impl Planner {
     /// layers are analytic-only, mirroring [`Planner::plan_model`].
     pub fn plan_graph(&self, model: &Model, cache: &mut PlanCache) -> Result<GraphPlan> {
         cache.sync_profile(&self.profile_fingerprint());
-        let key = graph_key(model, self.batch, self.threads, self.prepacked, self.tolerance);
+        let key = graph_key(
+            model,
+            self.batch,
+            self.threads,
+            self.prepacked,
+            self.tolerance,
+            self.precision,
+        );
         if let Some(hit) = cache.get_graph(&key) {
             let needs_upgrade = self.refine
                 && hit.plans.iter().any(|p| {
@@ -441,18 +470,24 @@ mod tests {
         let b = zoo::mixnet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
         let c = zoo::tinynet(Layout::Nhwc, AlgoKind::Naive, 1).unwrap();
         let tol = DEFAULT_TOLERANCE;
-        let base = graph_key(&a, 8, 4, true, tol);
-        assert_ne!(base, graph_key(&b, 8, 4, true, tol));
-        assert_ne!(base, graph_key(&c, 8, 4, true, tol));
-        assert_ne!(base, graph_key(&a, 16, 4, true, tol));
-        assert_ne!(base, graph_key(&a, 8, 2, true, tol));
-        assert_ne!(base, graph_key(&a, 8, 4, false, tol));
-        assert!(graph_key(&a, 8, 4, false, tol).ends_with("-oneshot"));
+        let base = graph_key(&a, 8, 4, true, tol, None);
+        assert_ne!(base, graph_key(&b, 8, 4, true, tol, None));
+        assert_ne!(base, graph_key(&c, 8, 4, true, tol, None));
+        assert_ne!(base, graph_key(&a, 16, 4, true, tol, None));
+        assert_ne!(base, graph_key(&a, 8, 2, true, tol, None));
+        assert_ne!(base, graph_key(&a, 8, 4, false, tol, None));
+        assert!(graph_key(&a, 8, 4, false, tol, None).ends_with("-oneshot"));
         // A loosened tolerance budget keys separately; the default leaves
         // the key unchanged (warm caches stay valid).
-        assert_ne!(base, graph_key(&a, 8, 4, true, WINOGRAD_TOLERANCE));
-        assert!(graph_key(&a, 8, 4, true, WINOGRAD_TOLERANCE).contains("-tol"));
+        assert_ne!(base, graph_key(&a, 8, 4, true, WINOGRAD_TOLERANCE, None));
+        assert!(graph_key(&a, 8, 4, true, WINOGRAD_TOLERANCE, None).contains("-tol"));
         assert!(!base.contains("-tol"));
+        // A forced reduced tier keys separately; forced f32 and auto
+        // share the unchanged key.
+        let f16 = graph_key(&a, 8, 4, true, tol, Some(Precision::F16AccF32));
+        assert_ne!(base, f16);
+        assert!(f16.ends_with("-precf16"));
+        assert_eq!(base, graph_key(&a, 8, 4, true, tol, Some(Precision::F32)));
     }
 
     #[test]
@@ -473,6 +508,25 @@ mod tests {
         let strict = pinned();
         let graph = strict.plan_graph(&model, &mut cache).unwrap();
         assert!(graph.plans.iter().all(|p| p.algo != AlgoKind::Winograd));
+    }
+
+    #[test]
+    fn forced_precision_threads_through_graph_nodes() {
+        let forced = Planner { precision: Some(Precision::F16AccF32), ..pinned() };
+        let model = zoo::tinynet(Layout::Nchw, AlgoKind::Naive, 1).unwrap();
+        let mut cache = PlanCache::in_memory();
+        let graph = forced.plan_graph(&model, &mut cache).unwrap();
+        assert!(graph.plans.iter().all(|p| p.precision == Precision::F16AccF32));
+        assert!(graph
+            .plans
+            .iter()
+            .all(|p| matches!(p.algo, AlgoKind::Im2win | AlgoKind::Im2col)));
+        // Auto mode at the default budget plans f32 everywhere — and
+        // under a distinct graph key, so the forced entry is never served.
+        let auto = pinned();
+        let graph = auto.plan_graph(&model, &mut cache).unwrap();
+        assert!(graph.plans.iter().all(|p| p.precision == Precision::F32));
+        assert_eq!(cache.graph_len(), 2);
     }
 
     #[test]

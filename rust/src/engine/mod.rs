@@ -177,9 +177,18 @@ impl Engine {
     fn build(mut model: Model, plans: Vec<LayerPlan>) -> Result<Engine> {
         Planner::apply(&mut model, &plans)?;
         let mut packed = Vec::new();
+        let mut conv_idx = 0usize;
         for op in model.ops() {
             if let Op::Conv(conv) = op {
-                packed.push(conv.algorithm().prepare(conv.filter(), &conv.params, conv.layout())?);
+                // Pack at the plan's numeric tier: reduced tiers
+                // round/quantize the filter exactly once, here.
+                packed.push(conv.algorithm().prepare_with_precision(
+                    conv.filter(),
+                    &conv.params,
+                    conv.layout(),
+                    plans[conv_idx].precision,
+                )?);
+                conv_idx += 1;
             }
         }
         let fused_relu = fused_relu_map(model.ops());
@@ -351,12 +360,17 @@ impl Engine {
                     // and never a panic — the request still runs.
                     let stale = faultinject::fire(faultinject::FaultSite::ArtifactMismatch)
                         .is_some()
+                        || self.packed[conv_idx].precision() != self.plans[conv_idx].precision
                         || self.packed[conv_idx]
                             .validate(conv.algorithm().name(), &p, conv.layout())
                             .is_err();
                     if stale {
-                        self.packed[conv_idx] =
-                            conv.algorithm().prepare(conv.filter(), &conv.params, conv.layout())?;
+                        self.packed[conv_idx] = conv.algorithm().prepare_with_precision(
+                            conv.filter(),
+                            &conv.params,
+                            conv.layout(),
+                            self.plans[conv_idx].precision,
+                        )?;
                         self.artifact_rebuilds += 1;
                     }
                     let pack = &self.packed[conv_idx];
@@ -540,6 +554,36 @@ mod tests {
         let again = engine.forward(&x).unwrap();
         assert_eq!(y.data(), again.data());
         assert_eq!(engine.workspace().misses(), misses);
+    }
+
+    #[test]
+    fn reduced_precision_engine_stays_within_its_tolerance_budget() {
+        use crate::conv::Precision;
+        // End-to-end at a forced half tier: every layer plans, packs and
+        // serves at that tier, and the full-network output stays inside
+        // the tier's accuracy budget against the f32 reference.
+        let x = Tensor4::random(Dims::new(2, 3, 32, 32), Layout::Nchw, 31);
+        let expect =
+            zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 6).unwrap().forward(&x).unwrap();
+        for prec in [Precision::F16AccF32, Precision::Bf16AccF32] {
+            let model = zoo::tinynet_biased(Layout::Nchw, AlgoKind::Naive, 6).unwrap();
+            let planner = Planner { precision: Some(prec), ..Planner::new() };
+            let mut cache = PlanCache::in_memory();
+            let mut engine = Engine::plan(model, &planner, &mut cache).unwrap();
+            assert!(engine.plans().iter().all(|pl| pl.precision == prec));
+            assert!(engine.packed_filters().iter().all(|pk| pk.precision() == prec));
+            let y = engine.forward(&x).unwrap();
+            assert!(
+                expect.allclose(&y, 1e-1, 1e-2),
+                "{prec}: reduced engine diverges by {}",
+                expect.max_abs_diff(&y)
+            );
+            // Steady state: no rebuilds (pack tier matches plan tier) and
+            // bit-identical repeats.
+            let again = engine.forward(&x).unwrap();
+            assert_eq!(y.data(), again.data());
+            assert_eq!(engine.artifact_rebuilds(), 0);
+        }
     }
 
     #[test]

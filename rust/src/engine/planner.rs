@@ -18,6 +18,13 @@
 //! * **layout conversion** — if the layer's chosen layout differs from the
 //!   incoming activation layout, one read + one write of the input tensor.
 //!
+//! Orthogonally to (algorithm × layout), the planner ranks a **numeric
+//! tier** per layer ([`crate::conv::Precision`]): the tolerance budget
+//! admits f16/bf16 at 1e-2 and int8 at the opt-in 1e-1, reduced tiers
+//! price their halved/quartered element bytes in every bandwidth term and
+//! a widened-SIMD compute multiplier, and the chosen tier rides in
+//! [`LayerPlan::precision`] so the engine packs filters once at that tier.
+//!
 //! The analytic choice can optionally be *refined* empirically: the
 //! existing [`tune_w_block`] sweep measures the register-blocking factor
 //! for the chosen algorithm on the real geometry, replacing the default
@@ -49,8 +56,9 @@ use crate::conv::im2col::im2col_matrix_len;
 use crate::conv::im2win::{im2win_dims, DEFAULT_W_BLOCK};
 use crate::conv::indirect::indirection_len;
 use crate::conv::mec::mec_matrix_len;
+use crate::conv::precision::{F16_TOLERANCE, INT8_TOLERANCE};
 use crate::conv::winograd::{winograd_ok, winograd_scratch_len, WINOGRAD_TOLERANCE};
-use crate::conv::{AlgoKind, ConvParams};
+use crate::conv::{AlgoKind, ConvParams, Precision};
 use crate::error::{Error, Result};
 use crate::model::{Model, Op};
 use crate::roofline::MachineSpec;
@@ -70,6 +78,9 @@ pub struct LayerPlan {
     pub est_s: f64,
     /// True when `w_block` came from an empirical [`tune_w_block`] sweep.
     pub tuned: bool,
+    /// Numeric tier the layer runs at (filters packed once at this tier,
+    /// activations converted in the lowering step, accumulation in f32).
+    pub precision: Precision,
 }
 
 /// Plan selector over (algorithm × layout × blocking) — see module docs.
@@ -108,7 +119,20 @@ pub struct Planner {
     /// eligible 3×3 stride-1 dense layers. Planners with different
     /// budgets rank different candidate sets, so the budget is part of
     /// [`Planner::cache_key`] whenever it is not the default.
+    ///
+    /// The budget also gates the *precision* axis: a budget of at least
+    /// [`F16_TOLERANCE`] (1e-2) admits the f16/bf16 tiers as candidates,
+    /// and at least [`INT8_TOLERANCE`] (1e-1) additionally admits int8 —
+    /// the explicit opt-in bar for quantization.
     pub tolerance: f32,
+    /// Force one numeric tier instead of letting the tolerance budget
+    /// pick. `None` (the default) plans over every admitted tier;
+    /// `Some(p)` ranks only tier `p`, bypassing the budget gate — the CLI
+    /// `--precision` knob. Layers a forced reduced tier cannot run
+    /// (grouped geometry, algorithms without reduced kernels) silently
+    /// fall back to f32. Forced reduced tiers key their cache entries
+    /// with a `-prec…` suffix ([`Planner::cache_key`]).
+    pub precision: Option<Precision>,
 }
 
 /// Default [`Planner::tolerance`]: the ≤ 1e-4 reference-parity bar the
@@ -154,6 +178,7 @@ impl Planner {
             profile: None,
             prepacked: true,
             tolerance: DEFAULT_TOLERANCE,
+            precision: None,
         }
     }
 
@@ -234,6 +259,64 @@ impl Planner {
         out
     }
 
+    /// Numeric tiers this planner ranks, f32 first. A forced
+    /// [`Planner::precision`] is the whole menu; otherwise the tolerance
+    /// budget admits tiers whose documented error bound it covers:
+    /// f16/bf16 at [`F16_TOLERANCE`], int8 — the explicit opt-in — at
+    /// [`INT8_TOLERANCE`]. The default 1e-4 budget admits only f32.
+    pub fn allowed_precisions(&self) -> Vec<Precision> {
+        if let Some(prec) = self.precision {
+            return vec![prec];
+        }
+        let mut out = vec![Precision::F32];
+        if self.tolerance >= F16_TOLERANCE {
+            out.push(Precision::F16AccF32);
+            out.push(Precision::Bf16AccF32);
+        }
+        if self.tolerance >= INT8_TOLERANCE {
+            out.push(Precision::Int8);
+        }
+        out
+    }
+
+    /// Whether `(algo, prec)` is a runnable pairing for geometry `p`.
+    /// Reduced tiers exist only on the prepacked im2win/im2col paths
+    /// (their `prepare_with_precision` overrides), and those paths route
+    /// grouped geometry through the f32 slicing driver — so reduced
+    /// candidates require prepacked planning and dense (groups = 1)
+    /// layers. f32 is runnable everywhere.
+    pub(super) fn precision_candidate_ok(
+        &self,
+        algo: AlgoKind,
+        p: &ConvParams,
+        prec: Precision,
+    ) -> bool {
+        if prec == Precision::F32 {
+            return true;
+        }
+        self.prepacked
+            && p.groups == 1
+            && matches!(algo, AlgoKind::Im2win | AlgoKind::Im2col)
+    }
+
+    /// Compute-term speedup of a reduced tier over f32 (≥ 1): narrower
+    /// elements double (halve for int8: quadruple) the useful SIMD width,
+    /// minus conversion overhead. A calibrated profile's per-precision
+    /// efficiency axis overrides the analytic constants where measured.
+    fn precision_multiplier(&self, prec: Precision) -> f64 {
+        if prec == Precision::F32 {
+            return 1.0;
+        }
+        if let Some(m) = self.profile.as_ref().and_then(|prof| prof.precision_eff(prec)) {
+            return m.max(1e-3);
+        }
+        match prec {
+            Precision::F32 => 1.0,
+            Precision::F16AccF32 | Precision::Bf16AccF32 => 1.6,
+            Precision::Int8 => 2.4,
+        }
+    }
+
     /// Cost estimate (seconds) of running `algo` on `layout` for geometry
     /// `p`, with activations arriving in `prev` layout. With a
     /// [`CalibrationProfile`], the compute term uses the fitted
@@ -244,7 +327,26 @@ impl Planner {
     /// transform and conversion traffic are always analytic over the
     /// spec's memory bandwidth.
     pub fn estimate(&self, algo: AlgoKind, layout: Layout, p: &ConvParams, prev: Layout) -> f64 {
-        const F32: f64 = 4.0;
+        self.estimate_with_precision(algo, layout, p, prev, Precision::F32)
+    }
+
+    /// [`Planner::estimate`] at an explicit numeric tier. Reduced tiers
+    /// price what narrower elements buy: the transform/input bandwidth
+    /// terms scale by [`Precision::act_bytes`], the filter-pack term by
+    /// [`Precision::filter_bytes`], and the compute term divides by the
+    /// tier's SIMD-width multiplier ([`Planner::precision_multiplier`]).
+    /// At [`Precision::F32`] every factor is exactly 1, so this is
+    /// bit-identical to the f32 estimate.
+    pub fn estimate_with_precision(
+        &self,
+        algo: AlgoKind,
+        layout: Layout,
+        p: &ConvParams,
+        prev: Layout,
+        prec: Precision,
+    ) -> f64 {
+        let act_bytes = prec.act_bytes();
+        let filt_bytes = prec.filter_bytes();
         let bw = self.spec.mem_bw_bytes;
 
         // Every candidate is scored against the same peak: the profile's
@@ -330,10 +432,14 @@ impl Planner {
             let eff = (base * layout_q * group_pen * (0.25 + 0.75 * lanes)).max(1e-3);
             flops / (peak * eff)
         };
+        // Narrower elements widen the effective SIMD register: the same
+        // efficiency tables apply, scaled by the tier's multiplier (1 for
+        // f32, so the division is exact there).
+        let compute_s = compute_s / self.precision_multiplier(prec);
 
         // Transform traffic: bytes written to scratch plus re-read by the
         // consuming kernel (≈ 2× the scratch size), plus one input read.
-        let input_bytes = layout.storage_len(p.input_dims()) as f64 * F32;
+        let input_bytes = layout.storage_len(p.input_dims()) as f64 * act_bytes;
         let scratch_elems = match algo {
             // Indirect reads the input through its plan-time offset buffer
             // with no per-call materialization, so — like direct — it has
@@ -349,7 +455,7 @@ impl Planner {
         let transform_s = if scratch_elems == 0 {
             0.0
         } else {
-            (2.0 * scratch_elems as f64 * F32 + input_bytes) / bw
+            (2.0 * scratch_elems as f64 * act_bytes + input_bytes) / bw
         };
 
         // Layout conversion of the incoming activations (read + write;
@@ -368,7 +474,7 @@ impl Planner {
         // MEC is the exception: it has no fused prepacked path (its
         // trait-default `run_prepacked` re-packs F̂ on every call), so its
         // pack traffic is charged under both execution models.
-        let fpack_bytes = p.filter_dims().count() as f64 * F32;
+        let fpack_bytes = p.filter_dims().count() as f64 * filt_bytes;
         let pack_s = match algo {
             AlgoKind::Mec => 2.0 * fpack_bytes / bw,
             _ if self.prepacked => 0.0,
@@ -404,25 +510,57 @@ impl Planner {
         if self.tolerance != DEFAULT_TOLERANCE {
             key.push_str(&format!("-tol{:e}", self.tolerance));
         }
+        // A forced reduced tier bypasses the budget gate, so those
+        // decisions get their own entries. Auto mode needs no suffix: its
+        // admitted tiers are a pure function of the (already keyed)
+        // tolerance budget, and forcing f32 ranks the same set as the
+        // default budget's auto mode.
+        if let Some(prec) = self.precision {
+            if prec.is_reduced() {
+                key.push_str(&format!("-prec{}", prec.name()));
+            }
+        }
         key
     }
 
     /// Pick the cheapest candidate for one layer given the incoming
-    /// activation layout. Purely analytic — no kernels run.
+    /// activation layout, ranking every admitted numeric tier on every
+    /// (algorithm × layout) pair that can run it. Purely analytic — no
+    /// kernels run. A forced reduced tier the geometry cannot run
+    /// (grouped layers, one-shot planning) falls back to f32 instead of
+    /// failing — the layer still gets a runnable plan.
     pub fn plan_conv(&self, p: &ConvParams, prev: Layout) -> LayerPlan {
+        self.plan_conv_admitted(p, prev).unwrap_or_else(|| {
+            let f32_only = Planner { precision: Some(Precision::F32), ..self.clone() };
+            f32_only
+                .plan_conv_admitted(p, prev)
+                .expect("candidate set is never empty at f32")
+        })
+    }
+
+    /// The cheapest plan over this planner's admitted tiers, or `None`
+    /// when no candidate supports any admitted tier (only possible for a
+    /// forced reduced [`Planner::precision`]).
+    fn plan_conv_admitted(&self, p: &ConvParams, prev: Layout) -> Option<LayerPlan> {
+        let precisions = self.allowed_precisions();
         let mut best: Option<LayerPlan> = None;
         for (algo, layout) in self.candidates_for(p) {
-            let est_s = self.estimate(algo, layout, p, prev);
-            let w_block = match algo {
-                AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
-                _ => 0,
-            };
-            let plan = LayerPlan { algo, layout, w_block, est_s, tuned: false };
-            if best.map_or(true, |b| est_s < b.est_s) {
-                best = Some(plan);
+            for &prec in &precisions {
+                if !self.precision_candidate_ok(algo, p, prec) {
+                    continue;
+                }
+                let est_s = self.estimate_with_precision(algo, layout, p, prev, prec);
+                let w_block = match algo {
+                    AlgoKind::Direct | AlgoKind::Im2win => DEFAULT_W_BLOCK,
+                    _ => 0,
+                };
+                let plan = LayerPlan { algo, layout, w_block, est_s, tuned: false, precision: prec };
+                if best.map_or(true, |b| est_s < b.est_s) {
+                    best = Some(plan);
+                }
             }
         }
-        best.expect("candidate set is never empty")
+        best
     }
 
     /// Empirically refine a plan's `W_{o,b}` with [`tune_w_block`] (only
@@ -618,6 +756,108 @@ mod tests {
     }
 
     #[test]
+    fn loose_tolerance_planner_selects_reduced_precision_on_table1_conv5() {
+        // conv5 (96→256 @ 24², 5×5, stride 1) is not Winograd-eligible,
+        // so under a budget of F16_TOLERANCE the precision axis is the
+        // only new candidate dimension — and a half tier's doubled SIMD
+        // width plus halved transform bytes must beat every f32 plan,
+        // even with every dense series generously calibrated.
+        let p = crate::coordinator::layers::by_name("conv5").unwrap().params(8);
+        assert!(!winograd_ok(&p), "conv5 must isolate the precision axis from winograd");
+        let mut profile = CalibrationProfile::new(50.0, 1);
+        for (algo, layout) in Planner::new().candidates() {
+            profile.set_series(algo, layout, 0.9, 4);
+        }
+        let planner = Planner {
+            profile: Some(profile),
+            threads: 1,
+            tolerance: F16_TOLERANCE,
+            ..Planner::new()
+        };
+        let plan = planner.plan_conv(&p, Layout::Nhwc);
+        assert!(
+            plan.precision.is_reduced(),
+            "picked {} at {} instead of a reduced tier",
+            plan.algo,
+            plan.precision
+        );
+        assert!(
+            matches!(plan.algo, AlgoKind::Im2win | AlgoKind::Im2col),
+            "reduced tiers only exist on im2win/im2col, picked {}",
+            plan.algo
+        );
+        // Int8 stays out until its own (explicitly looser) budget admits it.
+        assert_ne!(plan.precision, Precision::Int8);
+        let quant = Planner { tolerance: INT8_TOLERANCE, ..planner.clone() };
+        assert_eq!(quant.plan_conv(&p, Layout::Nhwc).precision, Precision::Int8);
+    }
+
+    #[test]
+    fn default_tolerance_never_selects_reduced_precision() {
+        // The 1e-4 parity bar admits only f32, on every Table I layer.
+        let planner = Planner::new();
+        assert_eq!(planner.allowed_precisions(), vec![Precision::F32]);
+        for layer in &crate::coordinator::layers::TABLE1 {
+            let plan = planner.plan_conv(&layer.params(8), Layout::Nhwc);
+            assert_eq!(
+                plan.precision,
+                Precision::F32,
+                "{}: default budget leaked a reduced tier",
+                layer.name
+            );
+        }
+    }
+
+    #[test]
+    fn forced_precision_overrides_budget_and_falls_back_when_unrunnable() {
+        let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
+        let forced = Planner { precision: Some(Precision::Bf16AccF32), ..Planner::new() };
+        let plan = forced.plan_conv(&p, Layout::Nhwc);
+        assert_eq!(plan.precision, Precision::Bf16AccF32);
+        assert!(matches!(plan.algo, AlgoKind::Im2win | AlgoKind::Im2col));
+        // Grouped geometry has no reduced path: silent f32 fallback, not
+        // a panic.
+        let grouped = ConvParams::builder().batch(8).channels(64, 32).input(14, 14).filter(3, 3).groups(4).build().unwrap();
+        let plan = forced.plan_conv(&grouped, Layout::Nhwc);
+        assert_eq!(plan.precision, Precision::F32);
+        // One-shot planning models per-call packing; the reduced tiers
+        // exist only prepacked, so they fall back too.
+        let oneshot = Planner { prepacked: false, ..forced.clone() };
+        assert_eq!(oneshot.plan_conv(&p, Layout::Nhwc).precision, Precision::F32);
+        // Forced reduced tiers key separately; forced f32 matches auto.
+        let auto = Planner::new();
+        assert_ne!(forced.cache_key(&p, Layout::Nhwc), auto.cache_key(&p, Layout::Nhwc));
+        let forced_f32 = Planner { precision: Some(Precision::F32), ..Planner::new() };
+        assert_eq!(forced_f32.cache_key(&p, Layout::Nhwc), auto.cache_key(&p, Layout::Nhwc));
+    }
+
+    #[test]
+    fn reduced_estimates_undercut_f32_on_the_same_candidate() {
+        let planner = Planner::new();
+        let p = ConvParams::builder().batch(8).channels(96, 256).input(24, 24).filter(5, 5).stride(1).build().unwrap();
+        for layout in Layout::ALL {
+            for algo in [AlgoKind::Im2win, AlgoKind::Im2col] {
+                if !algo.build().supports(layout) {
+                    continue;
+                }
+                let full = planner.estimate(algo, layout, &p, layout);
+                assert_eq!(
+                    full,
+                    planner.estimate_with_precision(algo, layout, &p, layout, Precision::F32),
+                    "f32 delegation must be bit-identical"
+                );
+                for prec in [Precision::F16AccF32, Precision::Bf16AccF32, Precision::Int8] {
+                    let thin = planner.estimate_with_precision(algo, layout, &p, layout, prec);
+                    assert!(
+                        thin < full,
+                        "{algo} {layout} {prec}: {thin} not under f32's {full}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn estimates_are_positive_and_conversion_costs_show() {
         let planner = Planner::new();
         let p = ConvParams::builder().batch(8).channels(64, 64).input(28, 28).filter(3, 3).stride(1).build().unwrap();
@@ -810,6 +1050,7 @@ mod tests {
             w_block: DEFAULT_W_BLOCK,
             est_s: 1.0,
             tuned: false,
+            precision: Precision::F32,
         };
         planner.refine_plan(&p, &mut plan).unwrap();
         assert!(plan.tuned);

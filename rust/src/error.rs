@@ -14,6 +14,9 @@ pub enum Error {
     InvalidConv(String),
     /// A layout is unsupported by the requested algorithm variant.
     UnsupportedLayout(String),
+    /// A reduced-precision tier is unsupported by the requested algorithm
+    /// (only the planner-gated hot-path algorithms carry sub-f32 packs).
+    UnsupportedPrecision(String),
     /// Configuration file / CLI parse error.
     Config(String),
     /// JSON parse error (config substrate).
@@ -40,6 +43,7 @@ impl fmt::Display for Error {
             Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
             Error::InvalidConv(m) => write!(f, "invalid convolution: {m}"),
             Error::UnsupportedLayout(m) => write!(f, "unsupported layout: {m}"),
+            Error::UnsupportedPrecision(m) => write!(f, "unsupported precision: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),

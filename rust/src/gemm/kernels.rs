@@ -26,23 +26,27 @@ pub const NR: usize = 16;
 pub(crate) enum TileEpilogue<'a> {
     /// Plain accumulate-and-store (no epilogue).
     None,
-    /// Bias indexed by the C row (GEMMs whose rows are output channels);
-    /// optional ReLU clamp after the add.
+    /// Scale/bias indexed by the C row (GEMMs whose rows are output
+    /// channels); applied `v·scale → + bias → ReLU`.
     PerRow {
         /// Bias by global row index, if any.
         bias: Option<&'a [f32]>,
         /// Clamp to `max(v, 0)` after the bias.
         relu: bool,
+        /// Dequant scale by global row index, applied before the bias.
+        scale: Option<&'a [f32]>,
         /// Global row index of the tile's first row.
         row0: usize,
     },
-    /// Bias indexed by the C column (GEMMs whose columns are output
-    /// channels); optional ReLU clamp after the add.
+    /// Scale/bias indexed by the C column (GEMMs whose columns are output
+    /// channels); applied `v·scale → + bias → ReLU`.
     PerCol {
         /// Bias by global column index, if any.
         bias: Option<&'a [f32]>,
         /// Clamp to `max(v, 0)` after the bias.
         relu: bool,
+        /// Dequant scale by global column index, applied before the bias.
+        scale: Option<&'a [f32]>,
         /// Global column index of the tile's first column.
         col0: usize,
     },
@@ -54,7 +58,8 @@ impl TileEpilogue<'_> {
     fn apply(&self, r: usize, j: usize, v: f32) -> f32 {
         match *self {
             TileEpilogue::None => v,
-            TileEpilogue::PerRow { bias, relu, row0 } => {
+            TileEpilogue::PerRow { bias, relu, scale, row0 } => {
+                let v = v * scale.map_or(1.0, |s| s[row0 + r]);
                 let v = v + bias.map_or(0.0, |b| b[row0 + r]);
                 if relu {
                     v.max(0.0)
@@ -62,7 +67,8 @@ impl TileEpilogue<'_> {
                     v
                 }
             }
-            TileEpilogue::PerCol { bias, relu, col0 } => {
+            TileEpilogue::PerCol { bias, relu, scale, col0 } => {
+                let v = v * scale.map_or(1.0, |s| s[col0 + j]);
                 let v = v + bias.map_or(0.0, |b| b[col0 + j]);
                 if relu {
                     v.max(0.0)
@@ -77,27 +83,33 @@ impl TileEpilogue<'_> {
     /// tile-relative (`r`, `j`).
     ///
     /// # Safety
-    /// For `PerCol` with a bias, `col0 + j + 8` must be within the bias
-    /// slice (guaranteed when the 8 columns are real C columns).
+    /// For `PerCol` with a bias or scale, `col0 + j + 8` must be within
+    /// that slice (guaranteed when the 8 columns are real C columns).
     #[inline(always)]
     unsafe fn apply_vec(&self, r: usize, j: usize, v: F32x8) -> F32x8 {
         match *self {
             TileEpilogue::None => v,
-            TileEpilogue::PerRow { bias, relu, row0 } => {
-                let mut v = match bias {
-                    Some(b) => v.add(F32x8::splat(b[row0 + r])),
+            TileEpilogue::PerRow { bias, relu, scale, row0 } => {
+                let mut v = match scale {
+                    Some(s) => v.mul(F32x8::splat(s[row0 + r])),
                     None => v,
                 };
+                if let Some(b) = bias {
+                    v = v.add(F32x8::splat(b[row0 + r]));
+                }
                 if relu {
                     v = v.max(F32x8::zero());
                 }
                 v
             }
-            TileEpilogue::PerCol { bias, relu, col0 } => {
-                let mut v = match bias {
-                    Some(b) => v.add(F32x8::load(b.as_ptr().add(col0 + j))),
+            TileEpilogue::PerCol { bias, relu, scale, col0 } => {
+                let mut v = match scale {
+                    Some(s) => v.mul(F32x8::load(s.as_ptr().add(col0 + j))),
                     None => v,
                 };
+                if let Some(b) = bias {
+                    v = v.add(F32x8::load(b.as_ptr().add(col0 + j)));
+                }
                 if relu {
                     v = v.max(F32x8::zero());
                 }
@@ -305,7 +317,7 @@ mod tests {
         };
         // Per-row with offset row0=2 + ReLU.
         let mut fused = vec![0.25f32; MR * NR];
-        let ep = TileEpilogue::PerRow { bias: Some(&row_bias), relu: true, row0: 2 };
+        let ep = TileEpilogue::PerRow { bias: Some(&row_bias), relu: true, scale: None, row0: 2 };
         unsafe { microkernel(kc, ap.as_ptr(), bp.as_ptr(), fused.as_mut_ptr(), NR, ep) };
         for r in 0..MR {
             for j in 0..NR {
@@ -317,13 +329,56 @@ mod tests {
         // the vector chunk and the scalar tail apply the epilogue).
         let (mr, nr) = (4, 11);
         let mut fused = vec![0.25f32; MR * NR];
-        let ep = TileEpilogue::PerCol { bias: Some(&col_bias), relu: false, col0: 3 };
+        let ep = TileEpilogue::PerCol { bias: Some(&col_bias), relu: false, scale: None, col0: 3 };
         unsafe {
             microkernel_partial(kc, ap.as_ptr(), bp.as_ptr(), fused.as_mut_ptr(), NR, mr, nr, ep)
         };
         for r in 0..mr {
             for j in 0..nr {
                 let expect = plain[r * NR + j] + col_bias[3 + j];
+                assert!((fused[r * NR + j] - expect).abs() < 1e-5, "per-col r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_scale_applies_before_bias() {
+        let kc = 5;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i % 5) as f32 - 2.0).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i % 7) as f32 * 0.3 - 0.9).collect();
+        let row_scale: Vec<f32> = (0..MR + 1).map(|i| 0.5 + i as f32 * 0.25).collect();
+        let row_bias: Vec<f32> = (0..MR + 1).map(|i| i as f32 * 0.4 - 1.0).collect();
+        let col_scale: Vec<f32> = (0..NR + 2).map(|i| 0.25 + (i % 3) as f32 * 0.5).collect();
+        let mut plain = vec![0.0f32; MR * NR];
+        unsafe {
+            microkernel(kc, ap.as_ptr(), bp.as_ptr(), plain.as_mut_ptr(), NR, TileEpilogue::None)
+        };
+        // Per-row scale+bias+ReLU with an offset (row0=1).
+        let mut fused = vec![0.0f32; MR * NR];
+        let ep = TileEpilogue::PerRow {
+            bias: Some(&row_bias),
+            relu: true,
+            scale: Some(&row_scale),
+            row0: 1,
+        };
+        unsafe { microkernel(kc, ap.as_ptr(), bp.as_ptr(), fused.as_mut_ptr(), NR, ep) };
+        for r in 0..MR {
+            for j in 0..NR {
+                let expect = (plain[r * NR + j] * row_scale[1 + r] + row_bias[1 + r]).max(0.0);
+                assert!((fused[r * NR + j] - expect).abs() < 1e-5, "per-row r={r} j={j}");
+            }
+        }
+        // Per-col scale only through the partial kernel (vector chunk +
+        // scalar tail both hit the scale load).
+        let (mr, nr) = (4, 11);
+        let mut fused = vec![0.0f32; MR * NR];
+        let ep = TileEpilogue::PerCol { bias: None, relu: false, scale: Some(&col_scale), col0: 2 };
+        unsafe {
+            microkernel_partial(kc, ap.as_ptr(), bp.as_ptr(), fused.as_mut_ptr(), NR, mr, nr, ep)
+        };
+        for r in 0..mr {
+            for j in 0..nr {
+                let expect = plain[r * NR + j] * col_scale[2 + j];
                 assert!((fused[r * NR + j] - expect).abs() < 1e-5, "per-col r={r} j={j}");
             }
         }

@@ -25,12 +25,14 @@ use crate::parallel;
 use crate::tensor::AlignedBuf;
 use kernels::{microkernel, microkernel_partial, TileEpilogue, MR, NR};
 
-/// Bias/ReLU epilogue fused into [`sgemm_fused`]'s final accumulator
-/// stores (the im2col convolution's fused path).
+/// Bias/ReLU/dequant epilogue fused into [`sgemm_fused`]'s final
+/// accumulator stores (the im2col convolution's fused path).
 ///
 /// The epilogue fires exactly once per C element, on the GEMM's last
 /// k-block — earlier k-blocks store partial sums and must stay raw. It
-/// therefore describes the *finished* value `C + A·B`.
+/// therefore describes the *finished* value `C + A·B`, transformed as
+/// `v·scale → + bias → ReLU` (the int8 tier's dequant multiplies first,
+/// so the bias stays in dequantized units).
 #[derive(Clone, Copy, Debug)]
 pub struct GemmEpilogue<'a> {
     /// Per-row or per-column bias (length ≥ `m` resp. `n`); `None` adds
@@ -38,9 +40,12 @@ pub struct GemmEpilogue<'a> {
     pub bias: Option<&'a [f32]>,
     /// Clamp each finished element to `max(v, 0)` after the bias.
     pub relu: bool,
-    /// Index the bias (and identity of the epilogue) by C's row (`true`)
-    /// or column (`false`) — whichever dimension carries the output
-    /// channels in the caller's GEMM shape.
+    /// Per-row or per-column dequantization scale (same indexing as
+    /// `bias`), applied before the bias; `None` leaves values unscaled.
+    pub scale: Option<&'a [f32]>,
+    /// Index the bias/scale (and identity of the epilogue) by C's row
+    /// (`true`) or column (`false`) — whichever dimension carries the
+    /// output channels in the caller's GEMM shape.
     pub per_row: bool,
 }
 
@@ -99,9 +104,12 @@ pub fn sgemm_fused(
     assert!(b.len() >= (k - 1) * ldb + n, "B slice too small");
     assert!(c.len() >= (m - 1) * ldc + n, "C slice too small");
     if let Some(e) = &ep {
+        let need = if e.per_row { m } else { n };
         if let Some(bias) = e.bias {
-            let need = if e.per_row { m } else { n };
             assert!(bias.len() >= need, "epilogue bias shorter than its C dimension");
+        }
+        if let Some(scale) = e.scale {
+            assert!(scale.len() >= need, "epilogue scale shorter than its C dimension");
         }
     }
 
@@ -174,10 +182,18 @@ fn macro_tile(
             let coff = ir * ldc + jr;
             let tile_ep = match &ep {
                 None => TileEpilogue::None,
-                Some(e) if e.per_row => {
-                    TileEpilogue::PerRow { bias: e.bias, relu: e.relu, row0: row0 + ir }
-                }
-                Some(e) => TileEpilogue::PerCol { bias: e.bias, relu: e.relu, col0: col0 + jr },
+                Some(e) if e.per_row => TileEpilogue::PerRow {
+                    bias: e.bias,
+                    relu: e.relu,
+                    scale: e.scale,
+                    row0: row0 + ir,
+                },
+                Some(e) => TileEpilogue::PerCol {
+                    bias: e.bias,
+                    relu: e.relu,
+                    scale: e.scale,
+                    col0: col0 + jr,
+                },
             };
             if mr == MR && nr == NR {
                 // SAFETY: full tile fits in C by loop bounds.
@@ -379,7 +395,7 @@ mod tests {
                         n,
                         &mut fused,
                         n,
-                        Some(GemmEpilogue { bias: Some(bias), relu, per_row }),
+                        Some(GemmEpilogue { bias: Some(bias), relu, scale: None, per_row }),
                     );
                     let mut expect = c0.clone();
                     sgemm_naive(m, n, k, &a, k, &b, n, &mut expect, n);
@@ -392,6 +408,61 @@ mod tests {
                         assert!(
                             (fused[i] - e).abs() <= 1e-3 * (1.0 + e.abs()),
                             "({m},{n},{k}) per_row={per_row} relu={relu} idx {i}: {} vs {e}",
+                            fused[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_scale_fires_before_bias_and_relu() {
+        // Dequant semantics: v·scale → + bias → ReLU, once, on the final
+        // k-block. k > KC forces multiple blocks; odd m/n partial tiles.
+        for (m, n, k) in [(7, 17, 9), (MR * 2 + 1, NR * 2 + 5, KC + 13)] {
+            let a = fill(m * k, 12);
+            let b = fill(k * n, 13);
+            let row_scale: Vec<f32> = (0..m).map(|i| 0.5 + (i % 4) as f32 * 0.25).collect();
+            let col_scale: Vec<f32> = (0..n).map(|j| 0.25 + (j % 3) as f32 * 0.5).collect();
+            let row_bias = fill(m, 14);
+            let col_bias = fill(n, 15);
+            for per_row in [true, false] {
+                for (bias_on, relu) in [(false, false), (true, true)] {
+                    let scale: &[f32] = if per_row { &row_scale } else { &col_scale };
+                    let bias: &[f32] = if per_row { &row_bias } else { &col_bias };
+                    let mut fused = vec![0.0; m * n];
+                    sgemm_fused(
+                        m,
+                        n,
+                        k,
+                        &a,
+                        k,
+                        &b,
+                        n,
+                        &mut fused,
+                        n,
+                        Some(GemmEpilogue {
+                            bias: bias_on.then_some(bias),
+                            relu,
+                            scale: Some(scale),
+                            per_row,
+                        }),
+                    );
+                    let mut expect = vec![0.0; m * n];
+                    sgemm_naive(m, n, k, &a, k, &b, n, &mut expect, n);
+                    for i in 0..m * n {
+                        let ci = if per_row { i / n } else { i % n };
+                        let mut e = expect[i] * scale[ci];
+                        if bias_on {
+                            e += bias[ci];
+                        }
+                        if relu {
+                            e = e.max(0.0);
+                        }
+                        assert!(
+                            (fused[i] - e).abs() <= 1e-3 * (1.0 + e.abs()),
+                            "({m},{n},{k}) per_row={per_row} bias={bias_on} relu={relu} idx {i}: {} vs {e}",
                             fused[i]
                         );
                     }

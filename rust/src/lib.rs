@@ -84,7 +84,7 @@ pub mod prelude {
     pub use crate::conv::indirect::IndirectConv;
     pub use crate::conv::winograd::WinogradConv;
     pub use crate::conv::{
-        Conv2d, ConvAlgorithm, ConvParams, ConvParamsBuilder, Epilogue, PlanArtifact,
+        Conv2d, ConvAlgorithm, ConvParams, ConvParamsBuilder, Epilogue, PlanArtifact, Precision,
     };
     #[allow(deprecated)]
     pub use crate::conv::PackedFilter;

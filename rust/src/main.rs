@@ -13,11 +13,13 @@
 //!                  [--assert-shift]         # fit the planner from measurements
 //! im2win plan  [--model tinynet|vgg|mixnet|mobilenet] [--batch N] [--cache plans.json]
 //!              [--refine] [--graph] [--profile profile.json]
+//!              [--tolerance T] [--precision f32|f16|bf16|int8]
 //! im2win serve [--model tinynet|vgg|mixnet|mobilenet] [--requests N] [--shards N]
 //!              [--deadline-us D] [--max-batch B] [--pin] [--graph]
 //!              [--cache plans.json] [--profile profile.json]
 //!              [--async] [--queue-depth N] [--shed reject|oldest]
 //!              [--ttl-us T] [--breaker N] [--fault site:key=val]...
+//!              [--tolerance T] [--precision f32|f16|bf16|int8]
 //! im2win roofline [--paper]           # roofline for this host or the paper server
 //! im2win oracle [--layer conv9]       # cross-check Rust kernels vs the PJRT artifact
 //! ```
@@ -28,7 +30,7 @@
 use im2win::autotune::tune_w_block;
 use im2win::bench_harness::fmt_time;
 use im2win::config::{ExperimentConfig, Scale};
-use im2win::conv::AlgoKind;
+use im2win::conv::{AlgoKind, Precision};
 use im2win::coordinator::{
     experiments, format_table, layers, read_csv, read_json, summary, write_csv, write_json,
     Record,
@@ -209,10 +211,15 @@ USAGE:
                   [--batch N] [--threads T]
                   [--cache plans.json] [--refine] [--detect] [--graph]
                   [--profile profile.json]
+                  [--tolerance T]    accuracy budget (default 1e-4; >=1e-2 admits f16/bf16,
+                                     >=1e-1 admits int8 as planner candidates)
+                  [--precision f32|f16|bf16|int8]   force one numeric tier instead of
+                                     letting the tolerance budget choose
   im2win serve    [--model tinynet|vgg|mixnet|mobilenet] [--edge N] [--layout L]
                   [--requests N] [--shards N]
                   [--deadline-us D] [--max-batch B] [--pin] [--batch N] [--graph]
                   [--threads T] [--cache plans.json] [--profile profile.json]
+                  [--tolerance T] [--precision f32|f16|bf16|int8]
                   [--async] [--queue-depth N] [--shed reject|oldest]
                   [--ttl-us T]       per-request deadline (0 = none)
                   [--breaker N]      open circuit after N consecutive full rings (0 = off; --async only)
@@ -640,6 +647,24 @@ fn planner_from_flags(common: &CommonArgs, flags: &Flags) -> CliResult<(Planner,
     planner.batch = common.batch;
     planner.threads = common.threads;
     planner.profile = common.profile.clone();
+    if let Some(t) = flags.get("tolerance") {
+        planner.tolerance = t
+            .parse()
+            .map_err(|_| err(format!("--tolerance expects a number, got '{t}'")))?;
+    }
+    if let Some(p) = flags.get("precision") {
+        let prec = Precision::parse(p)
+            .ok_or_else(|| err(format!("unknown precision '{p}' (f32|f16|bf16|int8)")))?;
+        if prec == Precision::Int8 && planner.tolerance < im2win::conv::precision::INT8_TOLERANCE {
+            eprintln!(
+                "warning: --precision int8 forced below its tolerance floor {:.0e} \
+                 (current --tolerance {:.0e}); output error may exceed the budget",
+                im2win::conv::precision::INT8_TOLERANCE,
+                planner.tolerance,
+            );
+        }
+        planner.precision = Some(prec);
+    }
     let mut cache = match flags.get("cache") {
         Some(path) => open_cache(path),
         None => PlanCache::in_memory(),
@@ -678,8 +703,8 @@ fn plan(flags: &Flags) -> CliResult<()> {
         (planner.plan_model(&model, &mut cache)?, None)
     };
     println!(
-        "\n{:<4} {:<26} {:<8} {:<7} {:>6} {:>10} {:>6}",
-        "#", "geometry", "algo", "layout", "W_o,b", "est", "tuned"
+        "\n{:<4} {:<26} {:<8} {:<7} {:<5} {:>6} {:>10} {:>6}",
+        "#", "geometry", "algo", "layout", "prec", "W_o,b", "est", "tuned"
     );
     let mut conversions = graph.as_ref().map(|g| g.conversions.iter().peekable());
     for (i, (p, plan)) in model.conv_params().iter().zip(&plans).enumerate() {
@@ -696,11 +721,12 @@ fn plan(flags: &Flags) -> CliResult<()> {
         }
         let q = p.with_batch(planner.batch);
         println!(
-            "{:<4} {:<26} {:<8} {:<7} {:>6} {:>10} {:>6}",
+            "{:<4} {:<26} {:<8} {:<7} {:<5} {:>6} {:>10} {:>6}",
             i,
             q.to_string(),
             plan.algo.name(),
             plan.layout.to_string(),
+            plan.precision.name(),
             plan.w_block,
             fmt_time(plan.est_s),
             if plan.tuned { "yes" } else { "no" },
@@ -770,7 +796,13 @@ fn serve(flags: &Flags) -> CliResult<()> {
         if pin { ", pinned worker groups" } else { "" },
     );
     for (i, plan) in engines[0].plans().iter().enumerate() {
-        println!("  layer {i}: {} {} W_o,b={}", plan.algo.name(), plan.layout, plan.w_block);
+        println!(
+            "  layer {i}: {} {} {} W_o,b={}",
+            plan.algo.name(),
+            plan.layout,
+            plan.precision.name(),
+            plan.w_block
+        );
     }
     if let Some(g) = engines[0].graph_plan() {
         println!(

@@ -281,6 +281,140 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     sum
 }
 
+/// Narrow one f32 to an IEEE binary16 bit pattern with round-to-nearest-
+/// even — the storage conversion of the `F16AccF32` precision tier.
+/// Overflow saturates to ±inf, NaN stays NaN (quieted), and values below
+/// the smallest subnormal round to ±0 like hardware `vcvtps2ph`.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mut man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: keep NaN-ness with a quiet payload.
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e16 <= 0 {
+        // Subnormal (or underflow-to-zero) target: shift the 24-bit
+        // significand down and round to nearest even.
+        if e16 < -10 {
+            return sign;
+        }
+        man |= 0x0080_0000;
+        let shift = (14 - e16) as u32;
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && (half & 1) != 0) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    // Normal target: round the 23-bit mantissa to 10 bits; a mantissa
+    // carry correctly increments the exponent (and may reach inf).
+    let half = man >> 13;
+    let rem = man & 0x1fff;
+    let mut out = ((e16 as u32) << 10) | half;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) != 0) {
+        out += 1;
+    }
+    sign | out as u16
+}
+
+/// Widen an IEEE binary16 bit pattern to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize into f32's wider exponent range.
+            let mut e = 113u32; // biased f32 exponent of 2^-14
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Narrow one f32 to a bfloat16 bit pattern with round-to-nearest-even —
+/// the storage conversion of the `Bf16AccF32` tier (f32's exponent
+/// range, 8-bit mantissa: a truncation of the top 16 bits plus rounding).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet, preserve NaN
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen a bfloat16 bit pattern to f32 (exact: low mantissa bits zero).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round every element onto the binary16 grid in place (narrow + widen).
+/// Autovectorizable element-wise loop: the activation-side conversion of
+/// the `F16AccF32` tier, run over the transformed scratch buffer.
+pub fn round_f16_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+    }
+}
+
+/// Round every element onto the bfloat16 grid in place.
+pub fn round_bf16_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+    }
+}
+
+/// Expand a binary16 bit-pattern pack to f32 (the per-call filter-pack
+/// widening of the `F16AccF32` tier). Panics if `out` is shorter.
+pub fn f16_bits_to_f32_slice(bits: &[u16], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = f16_bits_to_f32(b);
+    }
+}
+
+/// Expand a bfloat16 bit-pattern pack to f32.
+pub fn bf16_bits_to_f32_slice(bits: &[u16], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = bf16_bits_to_f32(b);
+    }
+}
+
+/// Expand an int8 pack to the integer-valued f32 the kernels consume.
+pub fn i8_to_f32_slice(q: &[i8], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = v as f32;
+    }
+}
+
+/// Quantize every element onto the signed-int8 lattice at `scale` in
+/// place: `x ← clamp(round(x/scale), −127, 127)` as integer-valued f32.
+/// A true divide (not a reciprocal multiply) so this stays bit-identical
+/// to the scalar `conv::precision::quantize` the fuzz reference uses.
+pub fn quantize_i8_slice(xs: &mut [f32], scale: f32) {
+    for x in xs {
+        *x = (*x / scale).round().clamp(-127.0, 127.0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +473,85 @@ mod tests {
             let expect: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
             let got = dot(&x, &y);
             assert!((got - expect).abs() < 1e-3 * (1.0 + expect.abs()), "len={len}: {got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_representable_values() {
+        // Exactly-representable binary16 values survive narrow → widen.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 2.0, 65504.0, -65504.0, 6.1035156e-5] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "{v}");
+        }
+        // Subnormal binary16: 2^-24 is the smallest positive value.
+        let tiny = 5.9604645e-8f32;
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+        // Every bit pattern round-trips through widen → narrow (widening
+        // is exact, so narrowing must land back on the same pattern).
+        for h in (0..=u16::MAX).step_by(17) {
+            let wide = f16_bits_to_f32(h);
+            if wide.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(wide)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(wide), h, "pattern {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_saturates() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // nearest-even rounds down to 1.0.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 4.8828125e-4)), 1.0);
+        // Just above halfway rounds up.
+        let up = f16_bits_to_f32(f32_to_f16_bits(1.0 + 4.9e-4));
+        assert!(up > 1.0);
+        // Overflow saturates to inf; huge negatives to -inf.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e-10), 0, "deep underflow → +0");
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_keeps_f32_range_and_rounds_mantissa() {
+        for v in [0.0f32, 1.0, -2.5, 1e20, -1e-20, 3.0e38] {
+            let r = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            assert!((r - v).abs() <= v.abs() * (1.0 / 128.0), "{v} → {r}");
+        }
+        // 8-bit mantissa values are exact.
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0078125)), 1.0078125);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn slice_helpers_match_scalar_paths() {
+        let src: Vec<f32> = (0..33).map(|i| (i as f32) * 0.37 - 5.1).collect();
+        let mut a = src.clone();
+        round_f16_slice(&mut a);
+        for (got, &x) in a.iter().zip(&src) {
+            assert_eq!(*got, f16_bits_to_f32(f32_to_f16_bits(x)));
+        }
+        let mut b = src.clone();
+        round_bf16_slice(&mut b);
+        for (got, &x) in b.iter().zip(&src) {
+            assert_eq!(*got, bf16_bits_to_f32(f32_to_bf16_bits(x)));
+        }
+        let bits: Vec<u16> = src.iter().map(|&x| f32_to_f16_bits(x)).collect();
+        let mut wide = vec![0.0f32; bits.len()];
+        f16_bits_to_f32_slice(&bits, &mut wide);
+        assert_eq!(wide, a);
+        let bbits: Vec<u16> = src.iter().map(|&x| f32_to_bf16_bits(x)).collect();
+        bf16_bits_to_f32_slice(&bbits, &mut wide);
+        assert_eq!(wide, b);
+        let q: Vec<i8> = (-16..17).collect();
+        let mut qf = vec![0.0f32; q.len()];
+        i8_to_f32_slice(&q, &mut qf);
+        assert_eq!(qf[0], -16.0);
+        assert_eq!(qf[32], 16.0);
+        let mut c = src.clone();
+        quantize_i8_slice(&mut c, 0.1);
+        for (got, &x) in c.iter().zip(&src) {
+            assert_eq!(*got, (x / 0.1).round().clamp(-127.0, 127.0));
         }
     }
 

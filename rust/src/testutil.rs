@@ -43,6 +43,13 @@ impl Rng {
     }
 }
 
+/// Seed for a fuzz suite: the `PARITY_FUZZ_SEED` environment variable if
+/// set (CI pins it so every matrix leg runs the identical suite and a
+/// failure reproduces locally with the same export), else `default`.
+pub fn fuzz_seed(default: u64) -> u64 {
+    std::env::var("PARITY_FUZZ_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 /// Generate `count` random valid convolution geometries.
 ///
 /// Dimensions are kept small enough for the naive oracle but deliberately
@@ -120,6 +127,18 @@ mod tests {
             assert!((3..=9).contains(&v));
         }
         assert_eq!(r.int(5, 5), 5);
+    }
+
+    #[test]
+    fn fuzz_seed_prefers_the_env_override() {
+        // Serial-safe: the variable is namespaced to this one test binary
+        // run and restored before the assert on the default path.
+        std::env::set_var("PARITY_FUZZ_SEED", "777");
+        assert_eq!(fuzz_seed(1), 777);
+        std::env::set_var("PARITY_FUZZ_SEED", "not a number");
+        assert_eq!(fuzz_seed(42), 42);
+        std::env::remove_var("PARITY_FUZZ_SEED");
+        assert_eq!(fuzz_seed(42), 42);
     }
 
     #[test]

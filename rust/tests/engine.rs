@@ -140,7 +140,14 @@ fn engine_matches_reference_conv_across_layouts_and_repeats() {
                 &p,
                 layout,
             );
-            let plan = LayerPlan { algo, layout, w_block: 3, est_s: 1.0, tuned: false };
+            let plan = LayerPlan {
+                algo,
+                layout,
+                w_block: 3,
+                est_s: 1.0,
+                tuned: false,
+                precision: Precision::F32,
+            };
             let mut engine = Engine::with_plans(model, vec![plan]).unwrap();
             let mut outputs = Vec::new();
             for _ in 0..3 {
@@ -168,8 +175,14 @@ fn interleaved_batch_sizes_do_not_cross_contaminate() {
     // Alternating batch sizes exercises the per-size slots: a stale buffer
     // from one size must never leak into the other.
     let (model, _) = single_conv_model(ConvParams::builder().batch(1).channels(3, 4).input(9, 9).filter(2, 2).stride(1).build().unwrap(), 55);
-    let plan =
-        LayerPlan { algo: AlgoKind::Im2win, layout: Layout::Nhwc, w_block: 2, est_s: 1.0, tuned: false };
+    let plan = LayerPlan {
+        algo: AlgoKind::Im2win,
+        layout: Layout::Nhwc,
+        w_block: 2,
+        est_s: 1.0,
+        tuned: false,
+        precision: Precision::F32,
+    };
     let mut engine = Engine::with_plans(model, vec![plan]).unwrap();
     let p2 = ConvParams::builder().batch(2).channels(3, 4).input(9, 9).filter(2, 2).stride(1).build().unwrap();
     let p5 = ConvParams::builder().batch(5).channels(3, 4).input(9, 9).filter(2, 2).stride(1).build().unwrap();

@@ -193,6 +193,7 @@ fn preexisting_cache_never_serves_generalized_geometry() {
             w_block: 4,
             est_s: 1e-4,
             tuned: false,
+            precision: Precision::F32,
         },
     );
     assert!(cache.get(&key).is_some(), "dense key must keep serving");

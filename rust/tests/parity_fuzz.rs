@@ -1,0 +1,233 @@
+//! Differential parity-fuzz harness.
+//!
+//! A seeded geometry sampler ([`im2win::testutil::random_problems`])
+//! drives every algorithm × layout × epilogue cell of the prepacked
+//! serving path against the naive oracle — at f32 exactly, and at each
+//! reduced tier (f16/bf16/int8) against an *emulated* reference that
+//! performs the tier's rounding/quantization in plain scalar code. The
+//! emulated reference pins the implementation (same grid, same scales,
+//! same dequant epilogue); a separate budget assertion pins the tier's
+//! accuracy contract against the true f32 oracle.
+//!
+//! The suite is deterministic: `PARITY_FUZZ_SEED` (pinned in CI) selects
+//! the geometry stream, and every panic message leads with the exact
+//! environment line that reproduces the failing cell locally.
+//!
+//! Tolerance ladder:
+//!   f32        1e-4 vs the oracle (accumulation order only)
+//!   f16/bf16   1e-3 vs the emulated rounded reference,
+//!              `F16_TOLERANCE`-scaled budget vs the true oracle
+//!   int8       1e-3 vs the emulated quantized reference,
+//!              `INT8_TOLERANCE`-scaled budget vs the true oracle
+
+use im2win::conv::precision::{self, Precision};
+use im2win::conv::winograd::winograd_ok;
+use im2win::conv::{reference_conv, AlgoKind, ConvParams, Epilogue};
+use im2win::engine::Workspace;
+use im2win::prelude::*;
+use im2win::testutil::{fuzz_seed, random_problems};
+
+/// Default geometry-stream seed; CI exports `PARITY_FUZZ_SEED` with this
+/// value so the matrix legs and a local repro run the identical suite.
+const DEFAULT_SEED: u64 = 278;
+
+/// The hot-path algorithms with reduced-precision kernels (the only ones
+/// the planner offers sub-f32 tiers on).
+const REDUCED_ALGOS: [AlgoKind; 2] = [AlgoKind::Im2win, AlgoKind::Im2col];
+
+/// One repro prefix for every assertion in this file.
+fn repro(seed: u64, i: usize, p: &ConvParams) -> String {
+    format!(
+        "repro: PARITY_FUZZ_SEED={seed} cargo test --test parity_fuzz  [problem #{i}: {p}]"
+    )
+}
+
+/// NaN-poisoned output: an element the kernel fails to store is a loud
+/// mismatch, never a lucky zero.
+fn poisoned(p: &ConvParams, layout: Layout) -> Tensor4 {
+    let mut out = Tensor4::zeros(p.output_dims(), layout);
+    out.data_mut().fill(f32::NAN);
+    out
+}
+
+fn max_abs(t: &Tensor4) -> f32 {
+    t.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Every fuseable epilogue over one bias vector.
+fn epilogues(bias: &[f32]) -> [Epilogue<'_>; 4] {
+    [Epilogue::None, Epilogue::Relu, Epilogue::Bias(bias), Epilogue::BiasRelu(bias)]
+}
+
+/// Whether `algo` can run `p` at all (mirrors the planner's gates).
+fn runnable(algo: AlgoKind, p: &ConvParams, layout: Layout) -> bool {
+    algo.build().supports(layout)
+        && (algo != AlgoKind::Depthwise || p.is_depthwise())
+        && (algo != AlgoKind::Winograd || winograd_ok(p))
+}
+
+/// The f32 sweep: every sampled geometry × layout × algorithm × epilogue
+/// through prepare + run_prepacked, on poisoned outputs with one recycled
+/// workspace, vs the naive oracle at 1e-4.
+#[test]
+fn fuzz_f32_prepacked_parity_across_all_algorithms() {
+    let seed = fuzz_seed(DEFAULT_SEED);
+    let problems = random_problems(200, seed);
+    let mut ws = Workspace::new();
+    let mut cells = 0usize;
+    for (i, p) in problems.iter().enumerate() {
+        let bias: Vec<f32> = (0..p.c_out).map(|c| 0.2 * c as f32 - 0.4).collect();
+        for layout in Layout::ALL {
+            let x = Tensor4::random(p.input_dims(), layout, seed ^ (2 * i as u64));
+            let f = Tensor4::random(p.filter_dims(), layout, seed ^ (2 * i as u64 + 1));
+            let oracle = reference_conv(&x, &f, p, layout);
+            for algo in AlgoKind::ALL {
+                if !runnable(algo, p, layout) {
+                    continue;
+                }
+                let a = algo.build();
+                let packed = a
+                    .prepare(&f, p, layout)
+                    .unwrap_or_else(|e| panic!("{} {algo} {layout}: prepare: {e}", repro(seed, i, p)));
+                for ep in epilogues(&bias) {
+                    let mut expect = oracle.clone();
+                    ep.apply_to(&mut expect);
+                    let mut out = poisoned(p, layout);
+                    a.run_prepacked(&x, &packed, p, &mut out, &mut ws, ep)
+                        .unwrap_or_else(|e| {
+                            panic!("{} {algo} {layout} {ep:?}: {e}", repro(seed, i, p))
+                        });
+                    // Winograd's own documented bound is looser than the
+                    // exact-rearrangement algorithms'.
+                    let tol = if algo == AlgoKind::Winograd { 1e-3 } else { 1e-4 };
+                    assert!(
+                        expect.allclose(&out, tol, tol),
+                        "{} {algo} {layout} {ep:?}: max diff {}",
+                        repro(seed, i, p),
+                        expect.max_abs_diff(&out)
+                    );
+                    cells += 1;
+                }
+            }
+        }
+    }
+    // The skip predicates must never silently hollow out the sweep.
+    assert!(cells > 4000, "suite degenerated: only {cells} cells ran");
+}
+
+/// The reduced-tier sweep: dense geometries × 4 layouts × im2win/im2col
+/// × f16/bf16/int8 × every epilogue, vs the emulated reference (tight)
+/// and the true f32 oracle (tier budget).
+#[test]
+fn fuzz_reduced_tiers_match_emulated_reference_and_hold_budget() {
+    let seed = fuzz_seed(DEFAULT_SEED);
+    let problems: Vec<ConvParams> =
+        random_problems(200, seed).into_iter().filter(|p| p.groups == 1).take(50).collect();
+    assert_eq!(problems.len(), 50, "sampler stopped producing dense geometries");
+    let mut ws = Workspace::new();
+    for (i, p) in problems.iter().enumerate() {
+        let bias: Vec<f32> = (0..p.c_out).map(|c| 0.15 * c as f32 - 0.3).collect();
+        for layout in Layout::ALL {
+            let x = Tensor4::random(p.input_dims(), layout, seed ^ (4 * i as u64));
+            let f = Tensor4::random(p.filter_dims(), layout, seed ^ (4 * i as u64 + 1));
+            let oracle = reference_conv(&x, &f, p, layout);
+            for prec in [Precision::F16AccF32, Precision::Bf16AccF32, Precision::Int8] {
+                // Emulated reference: the tier's exact conversion applied
+                // in scalar code to the raw operands. Transforms are
+                // copies, so converting before the lowering equals the
+                // kernel's convert-after-lowering.
+                let (base, combined) = if prec == Precision::Int8 {
+                    let s_w = precision::filter_scales(&f, p);
+                    let f_q = precision::quantized_filter(&f, p, &s_w);
+                    let s_a = precision::activation_scale(x.data());
+                    let mut x_q = x.clone();
+                    precision::quantize_slice(x_q.data_mut(), s_a);
+                    let combined: Vec<f32> = s_w.iter().map(|&w| w * s_a).collect();
+                    (reference_conv(&x_q, &f_q, p, layout), Some(combined))
+                } else {
+                    let f_r = precision::rounded_tensor(&f, prec);
+                    let mut x_r = x.clone();
+                    precision::round_activations(x_r.data_mut(), prec);
+                    (reference_conv(&x_r, &f_r, p, layout), None)
+                };
+                for algo in REDUCED_ALGOS {
+                    let a = algo.build();
+                    if !a.supports(layout) {
+                        continue;
+                    }
+                    let packed =
+                        a.prepare_with_precision(&f, p, layout, prec).unwrap_or_else(|e| {
+                            panic!("{} {algo} {layout} {prec}: prepare: {e}", repro(seed, i, p))
+                        });
+                    for ep in epilogues(&bias) {
+                        let mut expect = base.clone();
+                        match &combined {
+                            Some(scales) => ep.with_dequant(scales).apply_to(&mut expect),
+                            None => ep.apply_to(&mut expect),
+                        }
+                        let mut out = poisoned(p, layout);
+                        a.run_prepacked(&x, &packed, p, &mut out, &mut ws, ep)
+                            .unwrap_or_else(|e| {
+                                panic!("{} {algo} {layout} {prec} {ep:?}: {e}", repro(seed, i, p))
+                            });
+                        assert!(
+                            expect.allclose(&out, 1e-3, 1e-3),
+                            "{} {algo} {layout} {prec} {ep:?}: emulated-reference diff {}",
+                            repro(seed, i, p),
+                            expect.max_abs_diff(&out)
+                        );
+                        // Tier budget vs the true oracle, scaled by output
+                        // magnitude (quantization error is relative to the
+                        // tensor's dynamic range, not absolute).
+                        if matches!(ep, Epilogue::None) {
+                            let budget = prec.min_tolerance() * (1.0 + max_abs(&oracle));
+                            let diff = oracle.max_abs_diff(&out);
+                            assert!(
+                                diff <= budget,
+                                "{} {algo} {layout} {prec}: budget blown: {diff} > {budget}",
+                                repro(seed, i, p)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Geometry and algorithms outside the reduced hot path must reject
+/// sub-f32 packs with a typed error — never a wrong-answer fallback.
+#[test]
+fn fuzz_reduced_tiers_are_rejected_off_the_hot_path() {
+    let seed = fuzz_seed(DEFAULT_SEED);
+    let problems = random_problems(200, seed);
+    let grouped = problems.iter().find(|p| p.groups > 1).expect("sampler lost grouped coverage");
+    let dense = problems.iter().find(|p| p.groups == 1).unwrap();
+    for prec in [Precision::F16AccF32, Precision::Bf16AccF32, Precision::Int8] {
+        // Hot-path algorithms refuse grouped geometry at reduced tiers.
+        for algo in REDUCED_ALGOS {
+            let a = algo.build();
+            let f = Tensor4::random(grouped.filter_dims(), Layout::Nchw, 3);
+            let e = a.prepare_with_precision(&f, grouped, Layout::Nchw, prec).unwrap_err();
+            assert!(
+                matches!(e, Error::UnsupportedPrecision(_)),
+                "{algo} {prec} grouped: wrong error {e}"
+            );
+        }
+        // Algorithms without reduced kernels refuse even dense geometry.
+        for algo in [AlgoKind::Direct, AlgoKind::Mec, AlgoKind::Indirect, AlgoKind::Naive] {
+            let a = algo.build();
+            let f = Tensor4::random(dense.filter_dims(), Layout::Nhwc, 4);
+            let e = a.prepare_with_precision(&f, dense, Layout::Nhwc, prec).unwrap_err();
+            assert!(
+                matches!(e, Error::UnsupportedPrecision(_)),
+                "{algo} {prec}: wrong error {e}"
+            );
+        }
+    }
+    // F32 through the same entry point stays the plain prepare.
+    let a = AlgoKind::Im2win.build();
+    let f = Tensor4::random(dense.filter_dims(), Layout::Nchw, 5);
+    let pack = a.prepare_with_precision(&f, dense, Layout::Nchw, Precision::F32).unwrap();
+    assert_eq!(pack.precision(), Precision::F32);
+}
